@@ -1,0 +1,64 @@
+//! Coordinator + runtime benchmarks: request-path latency of the cached
+//! integrator route, the PJRT artifact route (when artifacts exist), and
+//! batcher throughput.
+
+use gfi::coordinator::batcher::{Batcher, BatcherConfig};
+use gfi::coordinator::{Backend, Engine};
+use gfi::integrators::rfd::RfdConfig;
+use gfi::integrators::sf::SfConfig;
+use gfi::linalg::Mat;
+use gfi::util::bench::Bench;
+use gfi::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let bench = Bench::new().with_budget(2.0).with_max_iters(20);
+    let artifacts = std::path::Path::new("artifacts");
+    let engine = Arc::new(Engine::new(
+        artifacts.join("manifest.json").exists().then_some(artifacts),
+    ));
+    println!("pjrt available: {}", engine.has_pjrt());
+    let mut mesh = gfi::mesh::icosphere(3);
+    mesh.normalize_unit_box();
+    let id = engine.register_mesh(mesh, "sphere");
+    let n = engine.cloud(id).unwrap().points.len();
+    let mut rng = Rng::new(1);
+    let field = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.gaussian()).collect());
+
+    let sf = Backend::Sf(SfConfig::default());
+    let rfd = Backend::Rfd(RfdConfig { num_features: 16, ..Default::default() });
+    let rfd_pjrt = Backend::RfdPjrt(RfdConfig { num_features: 16, ..Default::default() });
+
+    // Warm the caches, then measure the request path.
+    let _ = engine.integrate(id, &sf, &field).unwrap();
+    let _ = engine.integrate(id, &rfd, &field).unwrap();
+    bench.run(&format!("engine/sf-cached/n={n}"), || {
+        engine.integrate(id, &sf, &field).unwrap()
+    });
+    bench.run(&format!("engine/rfd-cached/n={n}"), || {
+        engine.integrate(id, &rfd, &field).unwrap()
+    });
+    if engine.has_pjrt() {
+        let _ = engine.integrate(id, &rfd_pjrt, &field).unwrap();
+        bench.run(&format!("engine/rfd-pjrt/n={n}"), || {
+            engine.integrate(id, &rfd_pjrt, &field).unwrap()
+        });
+    }
+
+    // Batcher throughput: 8 concurrent single-column requests.
+    let batcher = Batcher::new(engine.clone(), BatcherConfig::default());
+    let col = Mat::from_vec(n, 1, (0..n).map(|_| rng.gaussian()).collect());
+    bench.run("batcher/8x1col-rfd", || {
+        std::thread::scope(|s| {
+            let hs: Vec<_> = (0..8)
+                .map(|_| {
+                    let b = &batcher;
+                    let be = rfd.clone();
+                    let c = col.clone();
+                    s.spawn(move || b.integrate(id, be, c).unwrap())
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).count()
+        })
+    });
+}

@@ -1,0 +1,74 @@
+//! Integrator hot-path benchmarks (criterion-lite; `cargo bench`).
+//! Covers the workloads behind Fig. 4: SF/RFD/tree/BF pre-processing and
+//! apply at two mesh scales, plus the Hankel/FFT and matmul substrate.
+
+use gfi::fft::hankel_matvec_multi;
+use gfi::integrators::bf::BruteForceSp;
+use gfi::integrators::rfd::{RfDiffusion, RfdConfig};
+use gfi::integrators::sf::{SeparatorFactorization, SfConfig};
+use gfi::integrators::trees::{TreeEnsembleIntegrator, TreeKind};
+use gfi::integrators::{FieldIntegrator, KernelFn};
+use gfi::linalg::Mat;
+use gfi::util::bench::Bench;
+use gfi::util::rng::Rng;
+
+fn main() {
+    let bench = Bench::new().with_budget(2.0).with_max_iters(12);
+    for subdiv in [3usize, 4] {
+        let mut mesh = gfi::mesh::icosphere(subdiv);
+        mesh.normalize_unit_box();
+        let g = mesh.to_graph();
+        let n = g.n;
+        let pc = gfi::pointcloud::PointCloud::new(mesh.verts.clone());
+        let mut rng = Rng::new(1);
+        let field = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.gaussian()).collect());
+
+        let sf_cfg = SfConfig { kernel: KernelFn::ExpNeg(4.0), ..Default::default() };
+        bench.run(&format!("sf/preprocess/n={n}"), || {
+            SeparatorFactorization::new(&g, sf_cfg.clone())
+        });
+        let sf = SeparatorFactorization::new(&g, sf_cfg.clone());
+        bench.run(&format!("sf/apply/n={n}"), || sf.apply(&field));
+        // General-f (FFT) path.
+        let sf_gen = SeparatorFactorization::new(
+            &g,
+            SfConfig { kernel: KernelFn::GaussianSq(4.0), ..sf_cfg.clone() },
+        );
+        bench.run(&format!("sf/apply-generalf/n={n}"), || sf_gen.apply(&field));
+
+        let rfd_cfg = RfdConfig {
+            num_features: 32,
+            epsilon: 0.15,
+            lambda: -0.5,
+            ..Default::default()
+        };
+        bench.run(&format!("rfd/preprocess/n={n}"), || {
+            RfDiffusion::new(&pc, rfd_cfg.clone())
+        });
+        let rfd = RfDiffusion::new(&pc, rfd_cfg.clone());
+        bench.run(&format!("rfd/apply/n={n}"), || rfd.apply(&field));
+
+        let trees = TreeEnsembleIntegrator::new(&g, TreeKind::Bartal, 3, 4.0, 0);
+        bench.run(&format!("trees-bartal3/apply/n={n}"), || trees.apply(&field));
+
+        if n <= 1000 {
+            bench.run(&format!("bf/preprocess/n={n}"), || {
+                BruteForceSp::new(&g, &KernelFn::ExpNeg(4.0))
+            });
+            let bf = BruteForceSp::new(&g, &KernelFn::ExpNeg(4.0));
+            bench.run(&format!("bf/apply/n={n}"), || bf.apply(&field));
+        }
+    }
+
+    // Substrate: Hankel multiply + dense matmul.
+    let mut rng = Rng::new(2);
+    for d in [256usize, 2048] {
+        let h: Vec<f64> = (0..2 * d).map(|_| rng.gaussian()).collect();
+        let z: Vec<f64> = (0..d * 3).map(|_| rng.gaussian()).collect();
+        bench.run(&format!("hankel/fft-multi3/D={d}"), || {
+            hankel_matvec_multi(&h, &z, d, 3)
+        });
+    }
+    let a = Mat::from_vec(512, 512, (0..512 * 512).map(|_| rng.gaussian()).collect());
+    bench.run("linalg/matmul/512", || a.matmul(&a));
+}

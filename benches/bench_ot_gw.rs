@@ -1,0 +1,65 @@
+//! OT/GW benchmarks: the Sinkhorn barycenter loop (Tables 2/3) and GW
+//! iteration cost (Fig. 7) with dense vs RFD-injected structures.
+
+use gfi::gw::{gw_solve, DenseStructure, GwConfig, LowRankStructure, StructureMatrix};
+use gfi::integrators::rfd::{RfDiffusion, RfdConfig};
+use gfi::integrators::sf::{SeparatorFactorization, SfConfig};
+use gfi::integrators::{FieldIntegrator, KernelFn};
+use gfi::linalg::Mat;
+use gfi::ot::{concentrated_distributions, wasserstein_barycenter, BarycenterConfig};
+use gfi::pointcloud::random_cloud;
+use gfi::util::bench::Bench;
+use gfi::util::rng::Rng;
+
+fn main() {
+    let bench = Bench::new().with_budget(3.0).with_max_iters(8);
+
+    // Barycenter with SF vs RFD FMs on a sphere.
+    let mut mesh = gfi::mesh::icosphere(3);
+    mesh.normalize_unit_box();
+    let g = mesh.to_graph();
+    let n = g.n;
+    let area = mesh.vertex_areas();
+    let centers = [0, n / 3, 2 * n / 3];
+    let cfg = BarycenterConfig { max_iter: 10, ..Default::default() };
+    let sf = SeparatorFactorization::new(
+        &g,
+        SfConfig { kernel: KernelFn::ExpNeg(8.0), ..Default::default() },
+    );
+    let fm_sf = |x: &Mat| sf.apply(x);
+    let mus = concentrated_distributions(n, &centers, &fm_sf);
+    bench.run(&format!("barycenter/sf-fm/n={n}/10iter"), || {
+        wasserstein_barycenter(&mus, &area, &[1.0 / 3.0; 3], &fm_sf, &cfg)
+    });
+    let pc = gfi::pointcloud::PointCloud::new(mesh.verts.clone());
+    let rfd = RfDiffusion::new(
+        &pc,
+        RfdConfig { num_features: 30, epsilon: 0.05, lambda: 0.5, ..Default::default() },
+    );
+    let fm_rfd = |x: &Mat| rfd.apply(x);
+    bench.run(&format!("barycenter/rfd-fm/n={n}/10iter"), || {
+        wasserstein_barycenter(&mus, &area, &[1.0 / 3.0; 3], &fm_rfd, &cfg)
+    });
+
+    // GW solve, dense vs low-rank.
+    let gw_n = 300;
+    let mut rng = Rng::new(3);
+    let pa = random_cloud(gw_n, &mut rng);
+    let pb = random_cloud(gw_n, &mut rng);
+    let p = vec![1.0 / gw_n as f64; gw_n];
+    let gw_cfg = GwConfig { max_iter: 5, ..Default::default() };
+    let da = DenseStructure::diffusion(&pa, 0.3, -0.2);
+    let db = DenseStructure::diffusion(&pb, 0.3, -0.2);
+    bench.run(&format!("gw/dense/n={gw_n}/5iter"), || {
+        gw_solve(&da, &db, &p, &p, &gw_cfg)
+    });
+    let rc = RfdConfig { num_features: 16, epsilon: 0.3, lambda: -0.2, seed: 1, ..Default::default() };
+    let la = LowRankStructure::from_rfd(&pa, rc.clone());
+    let lb = LowRankStructure::from_rfd(&pb, RfdConfig { seed: 2, ..rc });
+    bench.run(&format!("gw/rfd-lowrank/n={gw_n}/5iter"), || {
+        gw_solve(&la, &lb, &p, &p, &gw_cfg)
+    });
+    // The Hadamard-square building block on its own.
+    bench.run(&format!("gw/hadamard-sq/dense/n={gw_n}"), || da.hadamard_sq_vec(&p));
+    bench.run(&format!("gw/hadamard-sq/khatri-rao/n={gw_n}"), || la.hadamard_sq_vec(&p));
+}

@@ -1,0 +1,166 @@
+//! End-to-end driver (DESIGN.md §E2E): launches the full serving stack —
+//! coordinator engine + JSON-lines TCP server + AOT/PJRT runtime — then
+//! fires a batched workload of integration requests from concurrent
+//! clients against real meshes, checking results against the exact
+//! brute-force oracle and reporting latency/throughput. This is the
+//! system-level proof that all three layers compose: the L1 Pallas kernel
+//! and L2 JAX pipeline execute inside the artifact the L3 Rust
+//! coordinator serves.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_pipeline
+//! ```
+
+use gfi::coordinator::{server, Engine};
+use gfi::integrators::FieldIntegrator;
+use gfi::linalg::Mat;
+use gfi::util::rng::Rng;
+use gfi::util::stats;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Instant;
+
+const CLIENTS: usize = 8;
+const REQUESTS_PER_CLIENT: usize = 25;
+
+fn main() -> anyhow::Result<()> {
+    // --- Boot the stack. ---
+    let artifacts = std::path::Path::new("artifacts");
+    let engine = Arc::new(Engine::new(
+        artifacts.join("manifest.json").exists().then_some(artifacts),
+    ));
+    println!("[boot] pjrt runtime loaded: {}", engine.has_pjrt());
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let eng_server = engine.clone();
+    let server_thread = std::thread::spawn(move || {
+        server::serve(eng_server, "127.0.0.1:0", move |a| {
+            addr_tx.send(a).unwrap();
+        })
+    });
+    let addr = addr_rx.recv()?;
+    println!("[boot] coordinator listening on {addr}");
+
+    // --- Register workload meshes over the wire. ---
+    let mut ctl = Client::connect(addr)?;
+    let sphere = ctl.send(r#"{"op":"register_mesh","kind":"icosphere","param":3,"name":"sphere"}"#)?;
+    let torus = ctl.send(r#"{"op":"register_mesh","kind":"torus","param":12,"name":"torus"}"#)?;
+    let sphere_id = sphere.get("id").unwrap().as_usize().unwrap();
+    let torus_id = torus.get("id").unwrap().as_usize().unwrap();
+    let sphere_n = sphere.get("n").unwrap().as_usize().unwrap();
+    let torus_n = torus.get("n").unwrap().as_usize().unwrap();
+    println!("[setup] sphere id={sphere_id} n={sphere_n}; torus id={torus_id} n={torus_n}");
+
+    // Exact oracle for result checking (SF backend vs BF on the sphere).
+    let sphere_entry = engine.cloud(sphere_id as u64)?;
+    let oracle = gfi::integrators::bf::BruteForceSp::new(
+        sphere_entry.graph.as_ref().unwrap(),
+        &gfi::integrators::KernelFn::ExpNeg(4.0),
+    );
+
+    // --- Fire the concurrent workload. ---
+    let t0 = Instant::now();
+    let latencies: Vec<Vec<(String, f64, f64)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|cid| {
+                let oracle = &oracle;
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    let mut client = Client::connect(addr).expect("connect");
+                    let mut rng = Rng::new(cid as u64 + 100);
+                    for r in 0..REQUESTS_PER_CLIENT {
+                        // Alternate backends and meshes.
+                        let (backend, cloud, n) = match (cid + r) % 4 {
+                            0 => ("sf", sphere_id, sphere_n),
+                            1 => ("rfd_pjrt", sphere_id, sphere_n),
+                            2 => ("rfd", torus_id, torus_n),
+                            _ => ("rfd_pjrt", torus_id, torus_n),
+                        };
+                        let field: Vec<f64> = (0..n * 3).map(|_| rng.gaussian()).collect();
+                        let field_json = field
+                            .iter()
+                            .map(|x| format!("{x:.6}"))
+                            .collect::<Vec<_>>()
+                            .join(",");
+                        let req = format!(
+                            r#"{{"op":"integrate","cloud":{cloud},"backend":"{backend}","field":[{field_json}],"d":3,"lambda":{},"m":16,"epsilon":0.15}}"#,
+                            if backend == "sf" { 4.0 } else { -0.4 },
+                        );
+                        let t = Instant::now();
+                        let resp = client.send(&req).expect("integrate");
+                        let wall = t.elapsed().as_secs_f64();
+                        assert_eq!(
+                            resp.get("ok").and_then(|j| j.as_bool()),
+                            Some(true),
+                            "{resp}"
+                        );
+                        let result = resp.get("result").unwrap().as_f64_vec().unwrap();
+                        assert_eq!(result.len(), n * 3);
+                        // Accuracy check on the SF path.
+                        if backend == "sf" {
+                            let f = Mat::from_vec(n, 3, field.clone());
+                            let want = oracle.apply(&f);
+                            let e = stats::rel_err(&result, &want.data);
+                            assert!(e < 0.5, "sf result err {e}");
+                        }
+                        out.push((backend.to_string(), wall, n as f64));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    // --- Report. ---
+    let total: usize = latencies.iter().map(Vec::len).sum();
+    println!("\n=== E2E serving report ===");
+    println!(
+        "{total} requests from {CLIENTS} clients in {elapsed:.2}s → {:.1} req/s",
+        total as f64 / elapsed
+    );
+    for backend in ["sf", "rfd", "rfd_pjrt"] {
+        let ls: Vec<f64> = latencies
+            .iter()
+            .flatten()
+            .filter(|(b, _, _)| b == backend)
+            .map(|(_, l, _)| *l)
+            .collect();
+        if ls.is_empty() {
+            continue;
+        }
+        println!(
+            "{backend:<9} n={:<4} p50={:.1}ms p99={:.1}ms mean={:.1}ms",
+            ls.len(),
+            stats::percentile(&ls, 50.0) * 1e3,
+            stats::percentile(&ls, 99.0) * 1e3,
+            stats::mean(&ls) * 1e3,
+        );
+    }
+    let stats_resp = ctl.send(r#"{"op":"stats"}"#)?;
+    println!("server stats: {stats_resp}");
+    ctl.send(r#"{"op":"shutdown"}"#)?;
+    server_thread.join().unwrap()?;
+    println!("E2E pipeline OK");
+    Ok(())
+}
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> anyhow::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+    fn send(&mut self, line: &str) -> anyhow::Result<gfi::util::json::Json> {
+        writeln!(self.stream, "{line}")?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        gfi::util::json::parse(&resp).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+    }
+}

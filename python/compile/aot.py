@@ -1,0 +1,91 @@
+"""AOT export: lower the L2 model to HLO *text* artifacts for the Rust
+runtime (PJRT via the `xla` crate).
+
+HLO text — NOT `lowered.compile()` / serialized protos — is the
+interchange format: jax ≥ 0.5 emits HloModuleProtos with 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts are emitted at a ladder of static shape buckets; the Rust
+coordinator pads each request to the nearest bucket:
+
+    artifacts/rfd_n{N}_m{m}_d{D}.hlo.txt
+    artifacts/manifest.json
+
+Run: `python -m compile.aot --out-dir ../artifacts` (or `make artifacts`).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import rfd_apply_jit
+
+# (N, m, d) buckets. N must be a multiple of the Pallas BLOCK_N (256).
+BUCKETS = [
+    (256, 16, 4),
+    (1024, 16, 4),
+    (4096, 16, 4),
+    (1024, 32, 4),
+    (4096, 32, 4),
+    (16384, 16, 4),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(n: int, m: int, d: int) -> str:
+    f32 = jnp.float32
+    specs = (
+        jax.ShapeDtypeStruct((n, 3), f32),      # points
+        jax.ShapeDtypeStruct((m, 3), f32),      # omegas
+        jax.ShapeDtypeStruct((m,), f32),        # qscale
+        jax.ShapeDtypeStruct((n, d), f32),      # x
+        jax.ShapeDtypeStruct((), f32),          # lam
+        jax.ShapeDtypeStruct((n,), f32),        # mask
+    )
+    lowered = jax.jit(rfd_apply_jit).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--buckets",
+        default="",
+        help="comma list like 256x16x4,1024x16x4 (default: built-in ladder)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    buckets = BUCKETS
+    if args.buckets:
+        buckets = [tuple(int(t) for t in b.split("x")) for b in args.buckets.split(",")]
+    manifest = []
+    for n, m, d in buckets:
+        name = f"rfd_n{n}_m{m}_d{d}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        text = lower_bucket(n, m, d)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(
+            {"file": name, "n": n, "m": m, "d": d, "entry": "rfd_apply"}
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"artifacts": manifest, "block_n": 256}, f, indent=2)
+    print(f"wrote manifest with {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

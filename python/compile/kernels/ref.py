@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the Pallas kernels — the build-time correctness
+reference. Everything here is deliberately naive; pytest asserts the
+Pallas kernels match these to float32 tolerance.
+"""
+
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+
+def rf_features_ref(points, omegas, qscale):
+    """Reference random-feature maps (see rf_features.py for the math)."""
+    phase = points @ omegas.T  # (n, m)
+    c = jnp.cos(phase)
+    s = jnp.sin(phase)
+    b = jnp.stack([c, s], axis=-1).reshape(points.shape[0], -1)
+    a = jnp.stack([qscale[None, :] * c, qscale[None, :] * s], axis=-1).reshape(
+        points.shape[0], -1
+    )
+    return a, b
+
+
+def rfd_apply_ref(points, omegas, qscale, x, lam):
+    """Reference RFD integration: exp(Λ(ABᵀ − δI)) x via dense expm.
+
+    O(N³) — only usable for small N in tests.
+    """
+    a, b = rf_features_ref(points, omegas, qscale)
+    w_hat = a @ b.T
+    delta = jnp.sum(qscale)  # Σ q_j/m — the exact RF diagonal
+    w0 = w_hat - delta * jnp.eye(points.shape[0], dtype=points.dtype)
+    k = jsl.expm(lam * w0)
+    return k @ x

@@ -1,0 +1,83 @@
+"""L1 — Pallas kernel: the RFDiffusion random-feature maps.
+
+Computes the factor matrices A, B of the low-rank adjacency estimate
+W_G ≈ A Bᵀ (paper §2.4): for point n_i and frequency ω_j with importance
+weight q_j,
+
+    A[i, 2j]   = (q_j / m) · cos(ω_jᵀ n_i)      B[i, 2j]   = cos(ω_jᵀ n_i)
+    A[i, 2j+1] = (q_j / m) · sin(ω_jᵀ n_i)      B[i, 2j+1] = sin(ω_jᵀ n_i)
+
+The kernel is tiled over the point dimension with BlockSpec: each grid
+step loads a (BLOCK_N, 3) tile of points into VMEM together with the full
+(m, 3) frequency matrix, computes the (BLOCK_N, m) phase outer product on
+the MXU, and the trig features on the VPU. VMEM per tile at BLOCK_N=256,
+m=64: 256·3·4 + 2·256·128·4 + 64·4·4 ≈ 266 KiB — far below the ~16 MiB
+budget; the kernel is HBM-bandwidth-bound (DESIGN.md §Hardware
+adaptation).
+
+`interpret=True` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU lowering is a compile-only target.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 256
+
+
+def _rf_kernel(points_ref, omegas_ref, qscale_ref, a_ref, b_ref):
+    """One tile: points (BLOCK_N, 3) × omegas (m, 3) → features (BLOCK_N, 2m)."""
+    pts = points_ref[...]  # (bn, 3)
+    om = omegas_ref[...]  # (m, 3)
+    qs = qscale_ref[...]  # (m,)
+    # Phase outer product — the MXU-shaped contraction.
+    phase = jnp.dot(pts, om.T)  # (bn, m)
+    c = jnp.cos(phase)
+    s = jnp.sin(phase)
+    # Interleave cos/sin into the 2m feature axis.
+    b = jnp.stack([c, s], axis=-1).reshape(pts.shape[0], -1)  # (bn, 2m)
+    qc = qs[None, :] * c
+    qsn = qs[None, :] * s
+    a = jnp.stack([qc, qsn], axis=-1).reshape(pts.shape[0], -1)
+    a_ref[...] = a
+    b_ref[...] = b
+
+
+@functools.partial(jax.jit, static_argnames=())
+def rf_features(points, omegas, qscale):
+    """Pallas-tiled feature maps.
+
+    Args:
+      points: (N, 3) float32, N divisible by BLOCK_N (callers pad).
+      omegas: (m, 3) float32 frequencies.
+      qscale: (m,) float32 = q_j / m (importance weight over feature count).
+
+    Returns:
+      (A, B): each (N, 2m) float32.
+    """
+    n, _ = points.shape
+    m = omegas.shape[0]
+    assert n % BLOCK_N == 0, f"N={n} must be a multiple of {BLOCK_N}"
+    grid = (n // BLOCK_N,)
+    out_shape = [
+        jax.ShapeDtypeStruct((n, 2 * m), jnp.float32),
+        jax.ShapeDtypeStruct((n, 2 * m), jnp.float32),
+    ]
+    return pl.pallas_call(
+        _rf_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_N, 3), lambda i: (i, 0)),
+            pl.BlockSpec((m, 3), lambda i: (0, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_N, 2 * m), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_N, 2 * m), lambda i: (i, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(points, omegas, qscale)

@@ -1,0 +1,74 @@
+"""L1 correctness: the Pallas random-feature kernel vs the pure-jnp
+oracle, swept over shapes and magnitudes with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import rf_features_ref
+from compile.kernels.rf_features import rf_features, BLOCK_N
+
+
+def make_inputs(n, m, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    points = rng.uniform(-0.5, 0.5, size=(n, 3)).astype(np.float32) * scale
+    omegas = rng.normal(size=(m, 3)).astype(np.float32) * 3.0
+    qscale = rng.uniform(0.1, 2.0, size=(m,)).astype(np.float32) / m
+    return jnp.asarray(points), jnp.asarray(omegas), jnp.asarray(qscale)
+
+
+def test_matches_ref_basic():
+    pts, om, qs = make_inputs(BLOCK_N, 16)
+    a, b = rf_features(pts, om, qs)
+    a_ref, b_ref = rf_features_ref(pts, om, qs)
+    np.testing.assert_allclose(a, a_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(b, b_ref, rtol=1e-5, atol=1e-6)
+
+
+def test_multi_block_grid():
+    pts, om, qs = make_inputs(4 * BLOCK_N, 8, seed=1)
+    a, b = rf_features(pts, om, qs)
+    a_ref, b_ref = rf_features_ref(pts, om, qs)
+    np.testing.assert_allclose(a, a_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(b, b_ref, rtol=1e-5, atol=1e-6)
+
+
+def test_rejects_unaligned_n():
+    pts, om, qs = make_inputs(BLOCK_N, 4)
+    with pytest.raises(AssertionError):
+        rf_features(pts[: BLOCK_N - 1], om, qs)
+
+
+def test_feature_gram_estimates_indicator_scale():
+    # A Bᵀ rows should estimate Σ q_j cos(ω(n_i−n_k))/m: check the exact
+    # algebraic identity (A Bᵀ)_ik == Σ_j qscale_j cos(ω_jᵀ(n_i − n_k)).
+    pts, om, qs = make_inputs(BLOCK_N, 8, seed=2)
+    a, b = rf_features(pts, om, qs)
+    w = np.asarray(a @ b.T)
+    i, k = 3, 77
+    z = np.asarray(pts[i] - pts[k])
+    want = float(np.sum(np.asarray(qs) * np.cos(np.asarray(om) @ z)))
+    np.testing.assert_allclose(w[i, k], want, rtol=1e-4, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=3),
+    m=st.sampled_from([2, 4, 16, 32]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+)
+def test_hypothesis_shape_sweep(blocks, m, seed, scale):
+    pts, om, qs = make_inputs(blocks * BLOCK_N, m, seed=seed, scale=scale)
+    a, b = rf_features(pts, om, qs)
+    a_ref, b_ref = rf_features_ref(pts, om, qs)
+    np.testing.assert_allclose(a, a_ref, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(b, b_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_float32_dtype_preserved():
+    pts, om, qs = make_inputs(BLOCK_N, 4)
+    a, b = rf_features(pts, om, qs)
+    assert a.dtype == jnp.float32 and b.dtype == jnp.float32

@@ -1,0 +1,215 @@
+//! Topologically-masked performer attention (paper §3.3, "Topological
+//! Transformers"): the Point Cloud Transformer attention matrix is
+//! Hadamard-masked by a distance kernel over the 3-D points; with the
+//! mask given as RFD's low-rank `M ≈ A Bᵀ`, masked attention runs in
+//! sub-quadratic time without materializing either matrix
+//! (Choromanski et al. 2022, §3.4):
+//!
+//! `(M ⊙ Q′K′ᵀ) V = Σ_j diag(A_{:,j}) · Q′ · (K′ᵀ · diag(B_{:,j}) · V)`
+//!
+//! Cost: `O(N · r · d_v)` per mask feature — linear in N.
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// FAVOR+ positive random features for the softmax kernel:
+/// `φ(x) = exp(ωᵀx − ‖x‖²/2) / √r`, giving
+/// `E[φ(q)ᵀφ(k)] = exp(qᵀk)`.
+pub fn performer_features(x: &Mat, proj: &Mat) -> Mat {
+    let (n, _dq) = (x.rows, x.cols);
+    let r = proj.rows;
+    let mut out = Mat::zeros(n, r);
+    for i in 0..n {
+        let xi = x.row(i);
+        let sq: f64 = xi.iter().map(|v| v * v).sum::<f64>() / 2.0;
+        for j in 0..r {
+            let dot: f64 = proj.row(j).iter().zip(xi).map(|(a, b)| a * b).sum();
+            out[(i, j)] = (dot - sq).exp() / (r as f64).sqrt();
+        }
+    }
+    out
+}
+
+/// Gaussian projection matrix for FAVOR+.
+pub fn gaussian_projection(r: usize, d: usize, rng: &mut Rng) -> Mat {
+    Mat::from_vec(r, d, (0..r * d).map(|_| rng.gaussian()).collect())
+}
+
+/// Masked performer attention:
+/// `out = D⁻¹ (M ⊙ Q′K′ᵀ) V` with `M = mask_a · mask_bᵀ` (N×2m factors
+/// from RFDiffusion) and `Q′, K′` the positive feature maps. `D` is the
+/// row-normalizer computed with the same masked product against **1**.
+pub fn masked_performer_attention(
+    qp: &Mat,
+    kp: &Mat,
+    v: &Mat,
+    mask_a: &Mat,
+    mask_b: &Mat,
+) -> Mat {
+    let n = qp.rows;
+    let dv = v.cols;
+    assert_eq!(kp.rows, n);
+    assert_eq!(mask_a.rows, n);
+    assert_eq!(mask_b.rows, n);
+    let mfeat = mask_a.cols;
+    let mut num = Mat::zeros(n, dv);
+    let mut den = vec![0.0; n];
+    // Augment V with a ones column to share the two passes.
+    for j in 0..mfeat {
+        // Vj = diag(B[:,j]) [V | 1]
+        let mut vj = Mat::zeros(n, dv + 1);
+        for i in 0..n {
+            let b = mask_b[(i, j)];
+            if b == 0.0 {
+                continue;
+            }
+            let row = &mut vj.row_mut(i);
+            for (dst, &src) in row[..dv].iter_mut().zip(v.row(i)) {
+                *dst = b * src;
+            }
+            row[dv] = b;
+        }
+        // Sj = K′ᵀ Vj  (r × (dv+1)),  Yj = Q′ Sj  (n × (dv+1))
+        let sj = kp.t_matmul(&vj);
+        let yj = qp.matmul(&sj);
+        for i in 0..n {
+            let a = mask_a[(i, j)];
+            if a == 0.0 {
+                continue;
+            }
+            let yrow = yj.row(i);
+            let nrow = num.row_mut(i);
+            for (dst, &src) in nrow.iter_mut().zip(&yrow[..dv]) {
+                *dst += a * src;
+            }
+            den[i] += a * yrow[dv];
+        }
+    }
+    for i in 0..n {
+        let d = den[i];
+        let scale = if d.abs() > 1e-12 { 1.0 / d } else { 0.0 };
+        for x in num.row_mut(i) {
+            *x *= scale;
+        }
+    }
+    num
+}
+
+/// Exact masked softmax-kernel attention (O(N²) oracle for tests/benches):
+/// `out_i = Σ_j M_ij exp(q_iᵀk_j) v_j / Σ_j M_ij exp(q_iᵀk_j)`.
+pub fn exact_masked_attention(q: &Mat, k: &Mat, v: &Mat, mask: &Mat) -> Mat {
+    let n = q.rows;
+    let dv = v.cols;
+    let mut out = Mat::zeros(n, dv);
+    for i in 0..n {
+        let qi = q.row(i);
+        let mut den = 0.0;
+        let mut acc = vec![0.0; dv];
+        for j in 0..n {
+            let dot: f64 = qi.iter().zip(k.row(j)).map(|(a, b)| a * b).sum();
+            let w = mask[(i, j)] * dot.exp();
+            den += w;
+            for (a, &x) in acc.iter_mut().zip(v.row(j)) {
+                *a += w * x;
+            }
+        }
+        let scale = if den.abs() > 1e-12 { 1.0 / den } else { 0.0 };
+        for (o, a) in out.row_mut(i).iter_mut().zip(acc) {
+            *o = a * scale;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_inputs(n: usize, dq: usize, dv: usize, seed: u64) -> (Mat, Mat, Mat, Rng) {
+        let mut rng = Rng::new(seed);
+        let scale = 0.4; // keep exp() well-conditioned for the RF estimate
+        let q = Mat::from_vec(n, dq, (0..n * dq).map(|_| scale * rng.gaussian()).collect());
+        let k = Mat::from_vec(n, dq, (0..n * dq).map(|_| scale * rng.gaussian()).collect());
+        let v = Mat::from_vec(n, dv, (0..n * dv).map(|_| rng.gaussian()).collect());
+        (q, k, v, rng)
+    }
+
+    #[test]
+    fn favor_features_approximate_softmax_kernel() {
+        let (q, k, _, mut rng) = small_inputs(20, 4, 2, 1);
+        let proj = gaussian_projection(4096, 4, &mut rng);
+        let qp = performer_features(&q, &proj);
+        let kp = performer_features(&k, &proj);
+        for i in 0..5 {
+            for j in 0..5 {
+                let approx: f64 =
+                    qp.row(i).iter().zip(kp.row(j)).map(|(a, b)| a * b).sum();
+                let exact: f64 = q
+                    .row(i)
+                    .iter()
+                    .zip(k.row(j))
+                    .map(|(a, b)| a * b)
+                    .sum::<f64>()
+                    .exp();
+                assert!(
+                    (approx - exact).abs() / exact < 0.2,
+                    "RF softmax estimate off: {approx} vs {exact}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn masked_attention_matches_exact_with_rank1_mask() {
+        // With an all-ones mask (rank 1: a = b = 1) the masked performer
+        // must equal unmasked performer attention = exact attention with
+        // exp kernel replaced by the RF estimate. Use exact features by
+        // comparing performer-vs-performer: build the dense mask from the
+        // same factors, and the dense attention from the same φ maps.
+        let n = 16;
+        let (q, k, v, mut rng) = small_inputs(n, 3, 2, 2);
+        let proj = gaussian_projection(64, 3, &mut rng);
+        let qp = performer_features(&q, &proj);
+        let kp = performer_features(&k, &proj);
+        // Random positive rank-3 mask.
+        let a = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.uniform() + 0.1).collect());
+        let b = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.uniform() + 0.1).collect());
+        let mask = a.matmul(&b.transpose());
+        let fast = masked_performer_attention(&qp, &kp, &v, &a, &b);
+        // Dense oracle using the φ-kernel (not exp): K̂_ij = φqᵢᵀφkⱼ.
+        let khat = qp.matmul(&kp.transpose());
+        let mut out = Mat::zeros(n, v.cols);
+        for i in 0..n {
+            let mut den = 0.0;
+            let mut acc = vec![0.0; v.cols];
+            for j in 0..n {
+                let w = mask[(i, j)] * khat[(i, j)];
+                den += w;
+                for (x, &vv) in acc.iter_mut().zip(v.row(j)) {
+                    *x += w * vv;
+                }
+            }
+            for (o, x) in out.row_mut(i).iter_mut().zip(acc) {
+                *o = x / den;
+            }
+        }
+        let e = crate::util::stats::rel_err(&fast.data, &out.data);
+        assert!(e < 1e-10, "factored vs dense masked attention: {e}");
+    }
+
+    #[test]
+    fn approximates_exact_masked_attention_end_to_end() {
+        let n = 24;
+        let (q, k, v, mut rng) = small_inputs(n, 3, 2, 3);
+        let proj = gaussian_projection(2048, 3, &mut rng);
+        let qp = performer_features(&q, &proj);
+        let kp = performer_features(&k, &proj);
+        let a = Mat::from_vec(n, 2, (0..n * 2).map(|_| rng.uniform() + 0.2).collect());
+        let b = Mat::from_vec(n, 2, (0..n * 2).map(|_| rng.uniform() + 0.2).collect());
+        let mask = a.matmul(&b.transpose());
+        let fast = masked_performer_attention(&qp, &kp, &v, &a, &b);
+        let exact = exact_masked_attention(&q, &k, &v, &mask);
+        let e = crate::util::stats::rel_err(&fast.data, &exact.data);
+        assert!(e < 0.15, "performer masked attention error {e}");
+    }
+}

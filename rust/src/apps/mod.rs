@@ -1,0 +1,9 @@
+//! Applications built on the integrators — the paper's §3 experiments.
+//!
+//! * [`interpolation`] — masked vertex-normal / velocity prediction
+//!   (§3.1, Figs. 4/5/9/10/11).
+//! * [`attention`] — RFD-masked performer attention (§3.3, the
+//!   topological-transformer forward path).
+
+pub mod attention;
+pub mod interpolation;

@@ -1,0 +1,249 @@
+//! Random-forest classifier (the downstream model of paper §3.3): CART
+//! trees with Gini impurity, bootstrap sampling, and √d feature
+//! subsampling at each split.
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Forest hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct RandomForestConfig {
+    pub num_trees: usize,
+    pub max_depth: usize,
+    pub min_leaf: usize,
+    pub seed: u64,
+}
+
+impl Default for RandomForestConfig {
+    fn default() -> Self {
+        RandomForestConfig { num_trees: 64, max_depth: 10, min_leaf: 2, seed: 0 }
+    }
+}
+
+enum Node {
+    Leaf {
+        /// Majority class.
+        class: usize,
+    },
+    Split {
+        feature: usize,
+        threshold: f64,
+        left: Box<Node>,
+        right: Box<Node>,
+    },
+}
+
+/// A trained random forest.
+pub struct RandomForest {
+    trees: Vec<Node>,
+    num_classes: usize,
+}
+
+impl RandomForest {
+    pub fn fit(x: &Mat, y: &[usize], num_classes: usize, cfg: &RandomForestConfig) -> Self {
+        assert_eq!(x.rows, y.len());
+        assert!(num_classes >= 2);
+        let mut rng = Rng::new(cfg.seed);
+        let trees = (0..cfg.num_trees)
+            .map(|_| {
+                // Bootstrap sample.
+                let idx: Vec<usize> = (0..x.rows).map(|_| rng.below(x.rows)).collect();
+                build_tree(x, y, &idx, num_classes, cfg, &mut rng, 0)
+            })
+            .collect();
+        RandomForest { trees, num_classes }
+    }
+
+    /// Majority vote over trees.
+    pub fn predict(&self, features: &[f64]) -> usize {
+        let mut votes = vec![0usize; self.num_classes];
+        for t in &self.trees {
+            votes[classify(t, features)] += 1;
+        }
+        votes
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, v)| *v)
+            .map(|(c, _)| c)
+            .unwrap_or(0)
+    }
+}
+
+fn classify(node: &Node, f: &[f64]) -> usize {
+    match node {
+        Node::Leaf { class } => *class,
+        Node::Split { feature, threshold, left, right } => {
+            if f[*feature] <= *threshold {
+                classify(left, f)
+            } else {
+                classify(right, f)
+            }
+        }
+    }
+}
+
+fn majority(y: &[usize], idx: &[usize], num_classes: usize) -> usize {
+    let mut counts = vec![0usize; num_classes];
+    for &i in idx {
+        counts[y[i]] += 1;
+    }
+    counts
+        .iter()
+        .enumerate()
+        .max_by_key(|&(_, c)| *c)
+        .map(|(cl, _)| cl)
+        .unwrap_or(0)
+}
+
+fn gini(counts: &[usize], total: usize) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    let t = total as f64;
+    1.0 - counts.iter().map(|&c| (c as f64 / t).powi(2)).sum::<f64>()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_tree(
+    x: &Mat,
+    y: &[usize],
+    idx: &[usize],
+    num_classes: usize,
+    cfg: &RandomForestConfig,
+    rng: &mut Rng,
+    depth: usize,
+) -> Node {
+    // Stop conditions.
+    let first = y[idx[0]];
+    let pure = idx.iter().all(|&i| y[i] == first);
+    if pure || depth >= cfg.max_depth || idx.len() <= cfg.min_leaf {
+        return Node::Leaf { class: majority(y, idx, num_classes) };
+    }
+    let d = x.cols;
+    let n_try = ((d as f64).sqrt().ceil() as usize).clamp(1, d);
+    let feats = rng.sample_indices(d, n_try);
+    let mut best: Option<(f64, usize, f64)> = None; // (gini gain proxy, feature, threshold)
+    let parent_gini = {
+        let mut counts = vec![0usize; num_classes];
+        for &i in idx {
+            counts[y[i]] += 1;
+        }
+        gini(&counts, idx.len())
+    };
+    for &f in &feats {
+        // Sort indices by feature value; evaluate midpoints.
+        let mut vals: Vec<(f64, usize)> = idx.iter().map(|&i| (x[(i, f)], y[i])).collect();
+        vals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let total = vals.len();
+        let mut left_counts = vec![0usize; num_classes];
+        let mut right_counts = vec![0usize; num_classes];
+        for &(_, cls) in &vals {
+            right_counts[cls] += 1;
+        }
+        for s in 0..total - 1 {
+            let cls = vals[s].1;
+            left_counts[cls] += 1;
+            right_counts[cls] -= 1;
+            if vals[s].0 == vals[s + 1].0 {
+                continue; // no valid threshold between equal values
+            }
+            let nl = s + 1;
+            let nr = total - nl;
+            let w_gini = (nl as f64 * gini(&left_counts, nl)
+                + nr as f64 * gini(&right_counts, nr))
+                / total as f64;
+            let gain = parent_gini - w_gini;
+            let thr = 0.5 * (vals[s].0 + vals[s + 1].0);
+            if best.map(|(bg, _, _)| gain > bg).unwrap_or(gain > 1e-12) {
+                best = Some((gain, f, thr));
+            }
+        }
+    }
+    match best {
+        None => Node::Leaf { class: majority(y, idx, num_classes) },
+        Some((_, feature, threshold)) => {
+            let left_idx: Vec<usize> =
+                idx.iter().copied().filter(|&i| x[(i, feature)] <= threshold).collect();
+            let right_idx: Vec<usize> =
+                idx.iter().copied().filter(|&i| x[(i, feature)] > threshold).collect();
+            if left_idx.is_empty() || right_idx.is_empty() {
+                return Node::Leaf { class: majority(y, idx, num_classes) };
+            }
+            Node::Split {
+                feature,
+                threshold,
+                left: Box::new(build_tree(x, y, &left_idx, num_classes, cfg, rng, depth + 1)),
+                right: Box::new(build_tree(x, y, &right_idx, num_classes, cfg, rng, depth + 1)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob_data(n_per: usize, seed: u64) -> (Mat, Vec<usize>) {
+        // Three Gaussian blobs in 4-D.
+        let mut rng = Rng::new(seed);
+        let centers = [
+            [0.0, 0.0, 0.0, 0.0],
+            [3.0, 3.0, 0.0, -1.0],
+            [-3.0, 2.0, 4.0, 1.0],
+        ];
+        let mut data = Vec::new();
+        let mut labels = Vec::new();
+        for (c, center) in centers.iter().enumerate() {
+            for _ in 0..n_per {
+                for k in 0..4 {
+                    data.push(center[k] + 0.5 * rng.gaussian());
+                }
+                labels.push(c);
+            }
+        }
+        (Mat::from_vec(n_per * 3, 4, data), labels)
+    }
+
+    #[test]
+    fn separable_blobs_high_accuracy() {
+        let (train_x, train_y) = blob_data(40, 1);
+        let (test_x, test_y) = blob_data(20, 2);
+        let forest = RandomForest::fit(&train_x, &train_y, 3, &RandomForestConfig::default());
+        let acc = (0..test_x.rows)
+            .filter(|&i| forest.predict(test_x.row(i)) == test_y[i])
+            .count() as f64
+            / test_x.rows as f64;
+        assert!(acc > 0.95, "accuracy {acc}");
+    }
+
+    #[test]
+    fn constant_features_fall_back_to_majority() {
+        let x = Mat::zeros(20, 3);
+        let y: Vec<usize> = (0..20).map(|i| usize::from(i < 14)).collect();
+        let forest = RandomForest::fit(&x, &y, 2, &RandomForestConfig::default());
+        // Majority class is 1 (14 of 20 labels are `1`).
+        assert_eq!(forest.predict(&[0.0, 0.0, 0.0]), 1);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = blob_data(15, 3);
+        let cfg = RandomForestConfig { seed: 5, ..Default::default() };
+        let f1 = RandomForest::fit(&x, &y, 3, &cfg);
+        let f2 = RandomForest::fit(&x, &y, 3, &cfg);
+        for i in 0..x.rows {
+            assert_eq!(f1.predict(x.row(i)), f2.predict(x.row(i)));
+        }
+    }
+
+    #[test]
+    fn better_than_chance_on_noisy_labels() {
+        let (x, y) = blob_data(30, 4);
+        let forest = RandomForest::fit(&x, &y, 3, &RandomForestConfig::default());
+        let acc = (0..x.rows)
+            .filter(|&i| forest.predict(x.row(i)) == y[i])
+            .count() as f64
+            / x.rows as f64;
+        assert!(acc > 0.6);
+    }
+}

@@ -1,0 +1,216 @@
+//! Dynamic batcher for the PJRT route: concurrent requests against the
+//! same `(cloud, rfd-config)` are merged into one artifact dispatch by
+//! concatenating field columns up to the bucket width. Amortizes the
+//! per-dispatch PJRT overhead (literal building, executor round trip),
+//! which dominates for small d (the vLLM-router batching idea transposed
+//! to field columns).
+
+use crate::coordinator::{Backend, Engine};
+use crate::linalg::Mat;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One queued request.
+struct Pending {
+    cloud: u64,
+    key: String,
+    backend: Backend,
+    field: Mat,
+    reply: mpsc::Sender<Result<Mat>>,
+}
+
+/// Handle for submitting batched integrations.
+pub struct Batcher {
+    tx: mpsc::Sender<Pending>,
+    _worker: std::thread::JoinHandle<()>,
+}
+
+/// Batching window and column cap.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    pub window: Duration,
+    pub max_columns: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { window: Duration::from_millis(2), max_columns: 4 }
+    }
+}
+
+impl Batcher {
+    pub fn new(engine: Arc<Engine>, cfg: BatcherConfig) -> Self {
+        let (tx, rx) = mpsc::channel::<Pending>();
+        let worker = std::thread::Builder::new()
+            .name("gfi-batcher".into())
+            .spawn(move || worker_loop(engine, rx, cfg))
+            .expect("spawn batcher");
+        Batcher { tx, _worker: worker }
+    }
+
+    /// Submits a request; blocks until the batch containing it executes.
+    pub fn integrate(&self, cloud: u64, backend: Backend, field: Mat) -> Result<Mat> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let key = format!("{cloud}:{}", backend.cache_key());
+        self.tx
+            .send(Pending { cloud, key, backend, field, reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("batcher worker gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("batcher dropped reply"))?
+    }
+}
+
+fn worker_loop(engine: Arc<Engine>, rx: mpsc::Receiver<Pending>, cfg: BatcherConfig) {
+    loop {
+        // Block for the first request, then drain the window.
+        let first = match rx.recv() {
+            Ok(p) => p,
+            Err(_) => return,
+        };
+        let mut batch = vec![first];
+        let deadline = std::time::Instant::now() + cfg.window;
+        while let Some(left) = deadline.checked_duration_since(std::time::Instant::now())
+        {
+            match rx.recv_timeout(left) {
+                Ok(p) => batch.push(p),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Group by (cloud, config) key.
+        let mut groups: HashMap<String, Vec<Pending>> = HashMap::new();
+        for p in batch {
+            groups.entry(p.key.clone()).or_default().push(p);
+        }
+        for (_, group) in groups {
+            execute_group(&engine, group, cfg.max_columns);
+        }
+    }
+}
+
+/// Executes one same-key group, merging up to `max_cols` columns per
+/// dispatch.
+fn execute_group(engine: &Engine, group: Vec<Pending>, max_cols: usize) {
+    let mut chunk: Vec<Pending> = Vec::new();
+    let mut cols = 0usize;
+    let flush = |chunk: &mut Vec<Pending>, engine: &Engine| {
+        if chunk.is_empty() {
+            return;
+        }
+        if chunk.len() == 1 {
+            let p = chunk.pop().unwrap();
+            let out = engine.integrate(p.cloud, &p.backend, &p.field).map(|(m, _)| m);
+            let _ = p.reply.send(out);
+            return;
+        }
+        // Merge columns.
+        let n = chunk[0].field.rows;
+        let total: usize = chunk.iter().map(|p| p.field.cols).sum();
+        let mut merged = Mat::zeros(n, total);
+        let mut off = 0;
+        for p in chunk.iter() {
+            for r in 0..n {
+                for c in 0..p.field.cols {
+                    merged[(r, off + c)] = p.field[(r, c)];
+                }
+            }
+            off += p.field.cols;
+        }
+        let result = engine
+            .integrate(chunk[0].cloud, &chunk[0].backend, &merged)
+            .map(|(m, _)| m);
+        match result {
+            Ok(out) => {
+                let mut off = 0;
+                for p in chunk.drain(..) {
+                    let mut part = Mat::zeros(n, p.field.cols);
+                    for r in 0..n {
+                        for c in 0..p.field.cols {
+                            part[(r, c)] = out[(r, off + c)];
+                        }
+                    }
+                    off += p.field.cols;
+                    let _ = p.reply.send(Ok(part));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for p in chunk.drain(..) {
+                    let _ = p.reply.send(Err(anyhow::anyhow!("{msg}")));
+                }
+            }
+        }
+    };
+    for p in group {
+        if cols + p.field.cols > max_cols && !chunk.is_empty() {
+            flush(&mut chunk, engine);
+            cols = 0;
+        }
+        cols += p.field.cols;
+        chunk.push(p);
+    }
+    flush(&mut chunk, engine);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::integrators::rfd::RfdConfig;
+    use crate::mesh::icosphere;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn batched_results_match_direct() {
+        let eng = Arc::new(Engine::new(None));
+        let id = eng.register_mesh(icosphere(1), "s");
+        let n = eng.cloud(id).unwrap().points.len();
+        let batcher = Batcher::new(eng.clone(), BatcherConfig::default());
+        let cfg = RfdConfig { num_features: 8, seed: 1, ..Default::default() };
+        let backend = Backend::Rfd(cfg);
+        // Fire several concurrent single-column requests.
+        let mut rng = Rng::new(5);
+        let fields: Vec<Mat> = (0..6)
+            .map(|_| Mat::from_vec(n, 1, (0..n).map(|_| rng.gaussian()).collect()))
+            .collect();
+        let wants: Vec<Mat> = fields
+            .iter()
+            .map(|f| eng.integrate(id, &backend, f).unwrap().0)
+            .collect();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = fields
+                .iter()
+                .map(|f| {
+                    let b = &batcher;
+                    let be = backend.clone();
+                    s.spawn(move || b.integrate(id, be, f.clone()).unwrap())
+                })
+                .collect();
+            for (h, want) in handles.into_iter().zip(&wants) {
+                let got = h.join().unwrap();
+                let e = crate::util::stats::rel_err(&got.data, &want.data);
+                assert!(e < 1e-12, "batched result differs: {e}");
+            }
+        });
+    }
+
+    #[test]
+    fn error_propagates_to_all_members() {
+        let eng = Arc::new(Engine::new(None));
+        let id = eng.register_cloud(
+            crate::pointcloud::random_cloud(30, &mut Rng::new(1)),
+            "c",
+        );
+        let batcher = Batcher::new(eng, BatcherConfig::default());
+        // SF on a bare cloud fails — the error must come back, not hang.
+        let out = batcher.integrate(
+            id,
+            Backend::Sf(crate::integrators::sf::SfConfig::default()),
+            Mat::zeros(30, 1),
+        );
+        assert!(out.is_err());
+    }
+}

@@ -1,0 +1,120 @@
+//! Per-backend serving metrics: request counts, node throughput, and
+//! latency percentiles (reservoir-sampled).
+
+use crate::util::stats::Reservoir;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Snapshot of one backend's counters.
+#[derive(Clone, Debug)]
+pub struct BackendStats {
+    pub count: usize,
+    pub nodes_processed: usize,
+    pub mean_latency: f64,
+    pub p50: f64,
+    pub p99: f64,
+}
+
+struct Entry {
+    reservoir: Reservoir,
+    count: usize,
+    nodes: usize,
+}
+
+/// Thread-safe metrics registry.
+pub struct Metrics {
+    inner: Mutex<HashMap<String, Entry>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics { inner: Mutex::new(HashMap::new()) }
+    }
+
+    /// Records one request.
+    pub fn record(&self, backend: &str, latency_secs: f64, nodes: usize) {
+        let mut map = self.inner.lock().unwrap();
+        let e = map.entry(backend.to_string()).or_insert_with(|| Entry {
+            reservoir: Reservoir::new(1024),
+            count: 0,
+            nodes: 0,
+        });
+        e.reservoir.push(latency_secs);
+        e.count += 1;
+        e.nodes += nodes;
+    }
+
+    /// Snapshot of all backends.
+    pub fn snapshot(&self) -> HashMap<String, BackendStats> {
+        let map = self.inner.lock().unwrap();
+        map.iter()
+            .map(|(k, e)| {
+                (
+                    k.clone(),
+                    BackendStats {
+                        count: e.count,
+                        nodes_processed: e.nodes,
+                        mean_latency: e.reservoir.mean(),
+                        p50: e.reservoir.percentile(50.0),
+                        p99: e.reservoir.percentile(99.0),
+                    },
+                )
+            })
+            .collect()
+    }
+
+    /// JSON encoding for the server's `stats` op.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let snap = self.snapshot();
+        Json::Obj(
+            snap.into_iter()
+                .map(|(k, s)| {
+                    (
+                        k,
+                        Json::obj(vec![
+                            ("count", Json::Num(s.count as f64)),
+                            ("nodes", Json::Num(s.nodes_processed as f64)),
+                            ("mean_latency", Json::Num(s.mean_latency)),
+                            ("p50", Json::Num(s.p50)),
+                            ("p99", Json::Num(s.p99)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        for i in 0..100 {
+            m.record("sf", i as f64 / 1000.0, 64);
+        }
+        let snap = m.snapshot();
+        let s = &snap["sf"];
+        assert_eq!(s.count, 100);
+        assert_eq!(s.nodes_processed, 6400);
+        assert!(s.p50 > 0.0 && s.p50 <= s.p99);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = Metrics::new();
+        m.record("rfd", 0.001, 10);
+        let j = m.to_json().to_string();
+        let parsed = crate::util::json::parse(&j).unwrap();
+        assert_eq!(parsed.get("rfd").unwrap().get("count").unwrap().as_usize(), Some(1));
+    }
+}

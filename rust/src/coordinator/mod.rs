@@ -1,0 +1,373 @@
+//! L3 coordinator — the GFI serving engine.
+//!
+//! Clients register point clouds / meshes once, then submit
+//! `Integrate` requests naming a backend (SF, RFD, RFD-via-PJRT, BF,
+//! tree ensembles). The engine:
+//!
+//! * caches **prepared integrators** per `(cloud, backend-config)` so
+//!   pre-processing (separator trees, RF features, dense kernels) is paid
+//!   once and the request path only runs `apply`;
+//! * routes RFD requests to the **AOT/PJRT artifacts** when present
+//!   (`artifacts/manifest.json`), falling back to the pure-Rust kernel;
+//! * **batches** concurrent PJRT requests for the same cloud+config into
+//!   one executable dispatch (field columns are concatenated up to the
+//!   bucket width) — see [`batcher`];
+//! * records per-backend latency/throughput [`metrics`].
+//!
+//! The TCP JSON-lines front-end lives in [`server`]; the CLI launches it.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+use crate::graph::CsrGraph;
+use crate::integrators::bf::{BruteForceDiffusion, BruteForceSp};
+use crate::integrators::rfd::{sample_features, RfDiffusion, RfdConfig};
+use crate::integrators::sf::{SeparatorFactorization, SfConfig};
+use crate::integrators::trees::{TreeEnsembleIntegrator, TreeKind};
+use crate::integrators::{FieldIntegrator, KernelFn};
+use crate::linalg::Mat;
+use crate::mesh::TriMesh;
+use crate::pointcloud::PointCloud;
+use crate::runtime::PjrtRuntime;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Integration backend selection + config.
+#[derive(Clone, Debug)]
+pub enum Backend {
+    /// SeparatorFactorization over the mesh graph.
+    Sf(SfConfig),
+    /// RFDiffusion, pure Rust.
+    Rfd(RfdConfig),
+    /// RFDiffusion through the AOT/PJRT artifact (falls back to Rust if
+    /// no runtime is loaded).
+    RfdPjrt(RfdConfig),
+    /// Brute-force shortest-path kernel.
+    BfSp(KernelFn),
+    /// Brute-force diffusion kernel over the ε-graph.
+    BfDiffusion { epsilon: f64, lambda: f64 },
+    /// Low-distortion tree ensemble.
+    Trees { kind: TreeKind, count: usize, lambda: f64 },
+}
+
+impl Backend {
+    /// Cache key: stable textual encoding of backend + parameters.
+    pub fn cache_key(&self) -> String {
+        match self {
+            Backend::Sf(c) => format!(
+                "sf:{:?}:{}:{}:{}:{}",
+                c.kernel, c.unit_size, c.threshold, c.separator_size, c.seed
+            ),
+            Backend::Rfd(c) | Backend::RfdPjrt(c) => format!(
+                "rfd:{}:{}:{}:{}:{}",
+                c.num_features, c.epsilon, c.lambda, c.radius, c.seed
+            ),
+            Backend::BfSp(k) => format!("bfsp:{k:?}"),
+            Backend::BfDiffusion { epsilon, lambda } => {
+                format!("bfdiff:{epsilon}:{lambda}")
+            }
+            Backend::Trees { kind, count, lambda } => {
+                format!("trees:{kind:?}:{count}:{lambda}")
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Sf(_) => "sf",
+            Backend::Rfd(_) => "rfd",
+            Backend::RfdPjrt(_) => "rfd_pjrt",
+            Backend::BfSp(_) => "bf_sp",
+            Backend::BfDiffusion { .. } => "bf_diffusion",
+            Backend::Trees { .. } => "trees",
+        }
+    }
+}
+
+/// A registered point cloud (with its mesh graph when it came from a
+/// mesh).
+pub struct CloudEntry {
+    pub points: PointCloud,
+    pub graph: Option<CsrGraph>,
+    pub name: String,
+}
+
+/// Pre-sampled RFD features for the PJRT path.
+struct PjrtPrep {
+    omegas: Vec<[f64; 3]>,
+    qscale: Vec<f64>,
+    lambda: f64,
+}
+
+/// Result metadata for one integration.
+#[derive(Clone, Debug)]
+pub struct IntegrateInfo {
+    pub backend: String,
+    pub preprocess_seconds: f64,
+    pub apply_seconds: f64,
+    pub cache_hit: bool,
+    pub used_pjrt: bool,
+}
+
+/// The serving engine. `Arc<Engine>` is shared across server threads.
+pub struct Engine {
+    clouds: RwLock<HashMap<u64, Arc<CloudEntry>>>,
+    integrators: RwLock<HashMap<(u64, String), Arc<dyn FieldIntegrator>>>,
+    pjrt_preps: RwLock<HashMap<(u64, String), Arc<PjrtPrep>>>,
+    next_id: AtomicU64,
+    runtime: Option<Arc<PjrtRuntime>>,
+    pub metrics: metrics::Metrics,
+}
+
+impl Engine {
+    /// Creates an engine; loads the PJRT runtime when `artifacts_dir`
+    /// holds a manifest (otherwise RFD-PJRT falls back to pure Rust).
+    pub fn new(artifacts_dir: Option<&std::path::Path>) -> Self {
+        let runtime = artifacts_dir.and_then(|d| match PjrtRuntime::new(d) {
+            Ok(rt) => Some(Arc::new(rt)),
+            Err(e) => {
+                eprintln!("[engine] PJRT runtime unavailable: {e:#}");
+                None
+            }
+        });
+        Engine {
+            clouds: RwLock::new(HashMap::new()),
+            integrators: RwLock::new(HashMap::new()),
+            pjrt_preps: RwLock::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            runtime,
+            metrics: metrics::Metrics::new(),
+        }
+    }
+
+    pub fn has_pjrt(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    pub fn runtime(&self) -> Option<&Arc<PjrtRuntime>> {
+        self.runtime.as_ref()
+    }
+
+    /// Registers a raw point cloud; returns its id.
+    pub fn register_cloud(&self, mut points: PointCloud, name: &str) -> u64 {
+        points.normalize_unit_box();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.clouds.write().unwrap().insert(
+            id,
+            Arc::new(CloudEntry { points, graph: None, name: name.to_string() }),
+        );
+        id
+    }
+
+    /// Registers a mesh: stores both the vertex cloud and the mesh graph.
+    pub fn register_mesh(&self, mut mesh: TriMesh, name: &str) -> u64 {
+        mesh.normalize_unit_box();
+        let graph = mesh.to_graph();
+        let points = PointCloud::new(mesh.verts.clone());
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.clouds.write().unwrap().insert(
+            id,
+            Arc::new(CloudEntry { points, graph: Some(graph), name: name.to_string() }),
+        );
+        id
+    }
+
+    pub fn cloud(&self, id: u64) -> Result<Arc<CloudEntry>> {
+        self.clouds
+            .read()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown cloud id {id}"))
+    }
+
+    pub fn cloud_count(&self) -> usize {
+        self.clouds.read().unwrap().len()
+    }
+
+    /// Integrates `field` over cloud `id` with `backend`. Pre-processing
+    /// is cached per (cloud, config).
+    pub fn integrate(&self, id: u64, backend: &Backend, field: &Mat) -> Result<(Mat, IntegrateInfo)> {
+        let entry = self.cloud(id)?;
+        if field.rows != entry.points.len() {
+            bail!(
+                "field rows {} != cloud size {}",
+                field.rows,
+                entry.points.len()
+            );
+        }
+        // PJRT route.
+        if let (Backend::RfdPjrt(cfg), Some(rt)) = (backend, &self.runtime) {
+            let key = (id, backend.cache_key());
+            // NB: clone out of the read guard *before* any write-lock
+            // path — RwLock is not reentrant and `if let` scrutinee
+            // temporaries live through the else branch.
+            let cached = self.pjrt_preps.read().unwrap().get(&key).cloned();
+            let (prep, cache_hit, prep_secs) = if let Some(p) = cached {
+                (p, true, 0.0)
+            } else {
+                let (p, dt) = crate::util::timer::timed(|| {
+                    let (omegas, qscale) = sample_features(cfg);
+                    Arc::new(PjrtPrep { omegas, qscale, lambda: cfg.lambda })
+                });
+                self.pjrt_preps.write().unwrap().insert(key, p.clone());
+                (p, false, dt)
+            };
+            let (out, apply_secs) = crate::util::timer::timed(|| {
+                rt.rfd_apply(&entry.points.points, &prep.omegas, &prep.qscale, field, prep.lambda)
+            });
+            let out = out?;
+            let info = IntegrateInfo {
+                backend: backend.name().into(),
+                preprocess_seconds: prep_secs,
+                apply_seconds: apply_secs,
+                cache_hit,
+                used_pjrt: true,
+            };
+            self.metrics.record(backend.name(), apply_secs, field.rows);
+            return Ok((out, info));
+        }
+
+        // Pure-Rust integrator route (with cache).
+        let key = (id, backend.cache_key());
+        let cached = self.integrators.read().unwrap().get(&key).cloned();
+        let (integrator, cache_hit, prep_secs) = if let Some(i) = cached {
+            (i, true, 0.0)
+        } else {
+            let (built, dt) = crate::util::timer::timed(|| self.build(&entry, backend));
+            let built = built?;
+            self.integrators.write().unwrap().insert(key, built.clone());
+            (built, false, dt)
+        };
+        let (out, apply_secs) = crate::util::timer::timed(|| integrator.apply(field));
+        let info = IntegrateInfo {
+            backend: backend.name().into(),
+            preprocess_seconds: prep_secs,
+            apply_seconds: apply_secs,
+            cache_hit,
+            used_pjrt: false,
+        };
+        self.metrics.record(backend.name(), apply_secs, field.rows);
+        Ok((out, info))
+    }
+
+    /// Builds a fresh integrator for a cloud entry.
+    fn build(&self, entry: &CloudEntry, backend: &Backend) -> Result<Arc<dyn FieldIntegrator>> {
+        Ok(match backend {
+            Backend::Sf(cfg) => {
+                let g = entry
+                    .graph
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("SF needs a mesh graph; register a mesh"))?;
+                Arc::new(SeparatorFactorization::new(g, cfg.clone()))
+            }
+            Backend::Rfd(cfg) | Backend::RfdPjrt(cfg) => {
+                Arc::new(RfDiffusion::new(&entry.points, cfg.clone()))
+            }
+            Backend::BfSp(kernel) => {
+                let g = entry
+                    .graph
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("BF-sp needs a mesh graph"))?;
+                Arc::new(BruteForceSp::new(g, kernel))
+            }
+            Backend::BfDiffusion { epsilon, lambda } => {
+                let g = entry.points.epsilon_graph(
+                    *epsilon,
+                    crate::pointcloud::Norm::LInf,
+                    true,
+                );
+                Arc::new(BruteForceDiffusion::new(&g, *lambda))
+            }
+            Backend::Trees { kind, count, lambda } => {
+                let g = entry
+                    .graph
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("tree backends need a mesh graph"))?;
+                Arc::new(TreeEnsembleIntegrator::new(g, *kind, *count, *lambda, 0))
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::icosphere;
+    use crate::util::rng::Rng;
+
+    fn engine() -> Engine {
+        // Use artifacts when available so rfd_pjrt is exercised in CI.
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let dir_opt = dir.join("manifest.json").exists().then_some(dir);
+        Engine::new(dir_opt.as_deref())
+    }
+
+    #[test]
+    fn register_and_integrate_sf() {
+        let eng = engine();
+        let id = eng.register_mesh(icosphere(2), "sphere");
+        let n = eng.cloud(id).unwrap().points.len();
+        let mut rng = Rng::new(1);
+        let field = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.gaussian()).collect());
+        let backend = Backend::Sf(SfConfig::default());
+        let (out, info) = eng.integrate(id, &backend, &field).unwrap();
+        assert_eq!(out.rows, n);
+        assert!(!info.cache_hit);
+        // Second call hits the cache.
+        let (_, info2) = eng.integrate(id, &backend, &field).unwrap();
+        assert!(info2.cache_hit);
+        assert_eq!(info2.preprocess_seconds, 0.0);
+    }
+
+    #[test]
+    fn rfd_pjrt_route_matches_rust_route() {
+        let eng = engine();
+        let id = eng.register_mesh(icosphere(2), "sphere");
+        let n = eng.cloud(id).unwrap().points.len();
+        let mut rng = Rng::new(2);
+        let field = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.gaussian()).collect());
+        let cfg = RfdConfig { num_features: 16, epsilon: 0.2, lambda: -0.2, seed: 3, ..Default::default() };
+        let (rust_out, _) = eng.integrate(id, &Backend::Rfd(cfg.clone()), &field).unwrap();
+        let (pjrt_out, info) = eng.integrate(id, &Backend::RfdPjrt(cfg), &field).unwrap();
+        if eng.has_pjrt() {
+            assert!(info.used_pjrt);
+            let e = crate::util::stats::rel_err(&pjrt_out.data, &rust_out.data);
+            assert!(e < 1e-3, "pjrt vs rust: {e}");
+        }
+    }
+
+    #[test]
+    fn errors_are_clean() {
+        let eng = engine();
+        assert!(eng.cloud(999).is_err());
+        let id = eng.register_cloud(
+            crate::pointcloud::random_cloud(50, &mut Rng::new(3)),
+            "cloud",
+        );
+        // SF on a bare cloud (no mesh graph) must fail gracefully.
+        let field = Mat::zeros(50, 3);
+        assert!(eng
+            .integrate(id, &Backend::Sf(SfConfig::default()), &field)
+            .is_err());
+        // Wrong field size.
+        let bad = Mat::zeros(49, 3);
+        assert!(eng
+            .integrate(id, &Backend::Rfd(RfdConfig::default()), &bad)
+            .is_err());
+    }
+
+    #[test]
+    fn metrics_recorded() {
+        let eng = engine();
+        let id = eng.register_mesh(icosphere(1), "s");
+        let n = eng.cloud(id).unwrap().points.len();
+        let field = Mat::zeros(n, 3);
+        let _ = eng.integrate(id, &Backend::Rfd(RfdConfig::default()), &field).unwrap();
+        let snap = eng.metrics.snapshot();
+        assert_eq!(snap.get("rfd").map(|s| s.count), Some(1));
+    }
+}

@@ -1,0 +1,280 @@
+//! TCP JSON-lines front-end for the engine.
+//!
+//! Protocol (one JSON object per line, response per line):
+//!
+//! ```text
+//! → {"op":"register_mesh","kind":"icosphere","param":2,"name":"s"}
+//! ← {"ok":true,"id":1,"n":162}
+//! → {"op":"register_cloud","points":[x0,y0,z0,x1,...]}
+//! ← {"ok":true,"id":2,"n":100}
+//! → {"op":"integrate","cloud":1,"backend":"sf","field":[...],"d":3,
+//!    "lambda":1.0,"unit_size":0.01}
+//! ← {"ok":true,"result":[...],"apply_seconds":0.003,"cache_hit":false}
+//! → {"op":"stats"}
+//! ← {"ok":true,"backends":{...}}
+//! → {"op":"shutdown"}
+//! ```
+
+use crate::coordinator::{Backend, Engine};
+use crate::integrators::rfd::RfdConfig;
+use crate::integrators::sf::SfConfig;
+use crate::integrators::trees::TreeKind;
+use crate::integrators::KernelFn;
+use crate::linalg::Mat;
+use crate::mesh;
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Runs the server until a `shutdown` op arrives. Returns the bound
+/// address through `on_ready` (port 0 picks a free port).
+pub fn serve(engine: Arc<Engine>, addr: &str, on_ready: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    on_ready(listener.local_addr()?);
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut workers = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let eng = engine.clone();
+                let st = stop.clone();
+                workers.push(std::thread::spawn(move || {
+                    let _ = handle_client(eng, stream, st);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for w in workers {
+        let _ = w.join();
+    }
+    Ok(())
+}
+
+fn handle_client(engine: Arc<Engine>, stream: TcpStream, stop: Arc<AtomicBool>) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match handle_line(&engine, &line, &stop) {
+            Ok(j) => j,
+            Err(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::Str(format!("{e:#}"))),
+            ]),
+        };
+        writeln!(writer, "{response}")?;
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn handle_line(engine: &Engine, line: &str, stop: &AtomicBool) -> Result<Json> {
+    let req = parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+    let op = req.get("op").and_then(Json::as_str).ok_or_else(|| anyhow!("missing op"))?;
+    match op {
+        "register_mesh" => {
+            let kind = req.get("kind").and_then(Json::as_str).unwrap_or("icosphere");
+            let param = req.get("param").and_then(Json::as_usize).unwrap_or(2);
+            let name = req.get("name").and_then(Json::as_str).unwrap_or(kind);
+            let m = match kind {
+                "icosphere" => mesh::icosphere(param),
+                "grid" => mesh::grid_mesh(param.max(2), param.max(2)),
+                "torus" => mesh::torus(param.max(3) * 2, param.max(3), 1.0, 0.35),
+                "supershape" => mesh::supershape(param.max(8), param.max(8), 5.0, 3.0),
+                other => return Err(anyhow!("unknown mesh kind {other}")),
+            };
+            let n = m.num_verts();
+            let id = engine.register_mesh(m, name);
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("id", Json::Num(id as f64)),
+                ("n", Json::Num(n as f64)),
+            ]))
+        }
+        "register_cloud" => {
+            let flat = req
+                .get("points")
+                .and_then(Json::as_f64_vec)
+                .ok_or_else(|| anyhow!("missing points"))?;
+            if flat.len() % 3 != 0 {
+                return Err(anyhow!("points length must be divisible by 3"));
+            }
+            let pts: Vec<[f64; 3]> =
+                flat.chunks(3).map(|c| [c[0], c[1], c[2]]).collect();
+            let n = pts.len();
+            let id = engine.register_cloud(
+                crate::pointcloud::PointCloud::new(pts),
+                req.get("name").and_then(Json::as_str).unwrap_or("cloud"),
+            );
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("id", Json::Num(id as f64)),
+                ("n", Json::Num(n as f64)),
+            ]))
+        }
+        "integrate" => {
+            let cloud = req
+                .get("cloud")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing cloud"))? as u64;
+            let backend = parse_backend(&req)?;
+            let flat = req
+                .get("field")
+                .and_then(Json::as_f64_vec)
+                .ok_or_else(|| anyhow!("missing field"))?;
+            let d = req.get("d").and_then(Json::as_usize).unwrap_or(3);
+            if d == 0 || flat.len() % d != 0 {
+                return Err(anyhow!("field length {} not divisible by d={d}", flat.len()));
+            }
+            let field = Mat::from_vec(flat.len() / d, d, flat);
+            let (out, info) = engine.integrate(cloud, &backend, &field)?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("result", Json::num_arr(&out.data)),
+                ("apply_seconds", Json::Num(info.apply_seconds)),
+                ("preprocess_seconds", Json::Num(info.preprocess_seconds)),
+                ("cache_hit", Json::Bool(info.cache_hit)),
+                ("used_pjrt", Json::Bool(info.used_pjrt)),
+            ]))
+        }
+        "stats" => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("clouds", Json::Num(engine.cloud_count() as f64)),
+            ("pjrt", Json::Bool(engine.has_pjrt())),
+            ("backends", engine.metrics.to_json()),
+        ])),
+        "shutdown" => {
+            stop.store(true, Ordering::Relaxed);
+            Ok(Json::obj(vec![("ok", Json::Bool(true))]))
+        }
+        other => Err(anyhow!("unknown op {other}")),
+    }
+}
+
+/// Parses the backend spec out of an `integrate` request.
+fn parse_backend(req: &Json) -> Result<Backend> {
+    let name = req
+        .get("backend")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing backend"))?;
+    let num = |k: &str, dflt: f64| req.get(k).and_then(Json::as_f64).unwrap_or(dflt);
+    Ok(match name {
+        "sf" => Backend::Sf(SfConfig {
+            kernel: KernelFn::ExpNeg(num("lambda", 1.0)),
+            unit_size: num("unit_size", 0.01),
+            threshold: num("threshold", 512.0) as usize,
+            separator_size: num("separator_size", 6.0) as usize,
+            seed: num("seed", 0.0) as u64,
+        }),
+        "rfd" | "rfd_pjrt" => {
+            let cfg = RfdConfig {
+                num_features: num("m", 16.0) as usize,
+                epsilon: num("epsilon", 0.1),
+                lambda: num("lambda", -0.1),
+                seed: num("seed", 0.0) as u64,
+                ..Default::default()
+            };
+            if name == "rfd" {
+                Backend::Rfd(cfg)
+            } else {
+                Backend::RfdPjrt(cfg)
+            }
+        }
+        "bf_sp" => Backend::BfSp(KernelFn::ExpNeg(num("lambda", 1.0))),
+        "bf_diffusion" => Backend::BfDiffusion {
+            epsilon: num("epsilon", 0.1),
+            lambda: num("lambda", -0.1),
+        },
+        "trees_bartal" => Backend::Trees {
+            kind: TreeKind::Bartal,
+            count: num("count", 3.0) as usize,
+            lambda: num("lambda", 1.0),
+        },
+        "trees_frt" => Backend::Trees {
+            kind: TreeKind::Frt,
+            count: num("count", 3.0) as usize,
+            lambda: num("lambda", 1.0),
+        },
+        other => return Err(anyhow!("unknown backend {other}")),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(lines: &[String]) -> Vec<Json> {
+        let engine = Arc::new(Engine::new(None));
+        let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+        let eng2 = engine.clone();
+        let server = std::thread::spawn(move || {
+            serve(eng2, "127.0.0.1:0", move |a| {
+                addr_tx.send(a).unwrap();
+            })
+            .unwrap();
+        });
+        let addr = addr_rx.recv().unwrap();
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut out = Vec::new();
+        {
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            for l in lines {
+                writeln!(stream, "{l}").unwrap();
+                let mut resp = String::new();
+                reader.read_line(&mut resp).unwrap();
+                out.push(parse(&resp).unwrap());
+            }
+            writeln!(stream, r#"{{"op":"shutdown"}}"#).unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+        }
+        server.join().unwrap();
+        out
+    }
+
+    #[test]
+    fn full_protocol_roundtrip() {
+        let responses = roundtrip(&[
+            r#"{"op":"register_mesh","kind":"icosphere","param":1}"#.to_string(),
+            format!(
+                r#"{{"op":"integrate","cloud":1,"backend":"rfd","field":[{}],"d":1,"m":8}}"#,
+                (0..42).map(|i| i.to_string()).collect::<Vec<_>>().join(",")
+            ),
+            r#"{"op":"stats"}"#.to_string(),
+        ]);
+        assert_eq!(responses[0].get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(responses[0].get("n").unwrap().as_usize(), Some(42));
+        assert_eq!(responses[1].get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(
+            responses[1].get("result").unwrap().as_arr().unwrap().len(),
+            42
+        );
+        assert_eq!(responses[2].get("ok"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn bad_requests_get_errors_not_disconnects() {
+        let responses = roundtrip(&[
+            "not json".to_string(),
+            r#"{"op":"nope"}"#.to_string(),
+            r#"{"op":"integrate","cloud":99,"backend":"rfd","field":[1],"d":1}"#.to_string(),
+        ]);
+        for r in &responses {
+            assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{r}");
+            assert!(r.get("error").is_some());
+        }
+    }
+}

@@ -1,0 +1,361 @@
+//! Synthetic datasets — the substitutes for the paper's external data
+//! (DESIGN.md §substitutions):
+//!
+//! * [`mesh_zoo`] — a ladder of procedural meshes over a size range
+//!   (Thingi10k substitute for Fig. 4's scaling curves).
+//! * [`shape_dataset`] — 10 procedural point-cloud classes with noise and
+//!   pose jitter (ModelNet10 substitute, Table 4).
+//! * [`cubes_dataset`] — deformed-cube classes (Cubes substitute).
+//! * [`graph_dataset`] — labeled graph families (TUDataset substitute,
+//!   Table 8).
+
+use crate::classify::graph_kernels::LabeledGraph;
+use crate::graph::CsrGraph;
+use crate::mesh::{grid_mesh, icosphere, supershape, torus, TriMesh};
+use crate::pointcloud::PointCloud;
+use crate::util::rng::Rng;
+
+/// A named mesh with its vertex count, for the scaling ladders.
+pub struct ZooEntry {
+    pub name: String,
+    pub mesh: TriMesh,
+}
+
+/// Procedural mesh ladder: alternating topology families, sizes roughly
+/// doubling from `min_verts` until `max_verts`.
+pub fn mesh_zoo(min_verts: usize, max_verts: usize) -> Vec<ZooEntry> {
+    let mut out = Vec::new();
+    let mut target = min_verts.max(16);
+    let mut i = 0usize;
+    while target <= max_verts {
+        let mesh = match i % 4 {
+            0 => {
+                // Icosphere: V = 10·4^s + 2; pick s for ≥ target.
+                let mut s = 0;
+                while 10 * 4usize.pow(s) + 2 < target {
+                    s += 1;
+                }
+                icosphere(s as usize)
+            }
+            1 => {
+                let k = ((target as f64).sqrt().ceil() as usize).max(3);
+                grid_mesh(k, k)
+            }
+            2 => {
+                let nu = ((target as f64 / 8.0).sqrt().ceil() as usize * 4).max(8);
+                let nv = (target / nu).max(4);
+                torus(nu, nv, 1.0, 0.35)
+            }
+            _ => {
+                let nu = ((target as f64).sqrt().ceil() as usize).max(8);
+                let nv = (target / nu).max(6);
+                supershape(nu, nv, 5.0 + (i % 3) as f64, 3.0 + (i % 5) as f64)
+            }
+        };
+        let mut mesh = mesh;
+        mesh.normalize_unit_box();
+        out.push(ZooEntry { name: format!("zoo-{i}-{}v", mesh.num_verts()), mesh });
+        i += 1;
+        target = (target as f64 * 1.7) as usize;
+    }
+    out
+}
+
+/// Samples `n` points from a mesh surface (uniform per-face by area).
+pub fn sample_mesh_points(mesh: &TriMesh, n: usize, rng: &mut Rng) -> PointCloud {
+    // Cumulative face areas.
+    let mut cum = Vec::with_capacity(mesh.num_faces());
+    let mut total = 0.0;
+    for f in &mesh.faces {
+        let [a, b, c] = *f;
+        let (pa, pb, pc) = (mesh.verts[a], mesh.verts[b], mesh.verts[c]);
+        let u = [pb[0] - pa[0], pb[1] - pa[1], pb[2] - pa[2]];
+        let v = [pc[0] - pa[0], pc[1] - pa[1], pc[2] - pa[2]];
+        let cx = u[1] * v[2] - u[2] * v[1];
+        let cy = u[2] * v[0] - u[0] * v[2];
+        let cz = u[0] * v[1] - u[1] * v[0];
+        total += 0.5 * (cx * cx + cy * cy + cz * cz).sqrt();
+        cum.push(total);
+    }
+    let mut points = Vec::with_capacity(n);
+    for _ in 0..n {
+        let r = rng.uniform() * total;
+        let fi = cum.partition_point(|&x| x < r).min(mesh.num_faces() - 1);
+        let [a, b, c] = mesh.faces[fi];
+        // Uniform barycentric sample.
+        let (mut s, mut t) = (rng.uniform(), rng.uniform());
+        if s + t > 1.0 {
+            s = 1.0 - s;
+            t = 1.0 - t;
+        }
+        let (pa, pb, pc) = (mesh.verts[a], mesh.verts[b], mesh.verts[c]);
+        points.push([
+            pa[0] + s * (pb[0] - pa[0]) + t * (pc[0] - pa[0]),
+            pa[1] + s * (pb[1] - pa[1]) + t * (pc[1] - pa[1]),
+            pa[2] + s * (pb[2] - pa[2]) + t * (pc[2] - pa[2]),
+        ]);
+    }
+    PointCloud::new(points)
+}
+
+/// A labeled point-cloud classification dataset.
+pub struct ShapeDataset {
+    pub clouds: Vec<PointCloud>,
+    pub labels: Vec<usize>,
+    pub num_classes: usize,
+}
+
+/// 10-class procedural shape dataset (ModelNet10 substitute): spheres,
+/// tori (two aspect ratios), grids, supershapes with distinct lobe
+/// counts — each instance sampled to `points_per_cloud` with Gaussian
+/// noise and anisotropic scale jitter.
+pub fn shape_dataset(
+    per_class: usize,
+    points_per_cloud: usize,
+    noise: f64,
+    seed: u64,
+) -> ShapeDataset {
+    let mut rng = Rng::new(seed);
+    let protos: Vec<TriMesh> = vec![
+        icosphere(2),
+        torus(24, 12, 1.0, 0.45),
+        torus(24, 12, 1.0, 0.15),
+        grid_mesh(16, 16),
+        supershape(24, 16, 3.0, 3.0),
+        supershape(24, 16, 5.0, 2.0),
+        supershape(24, 16, 7.0, 4.0),
+        supershape(24, 16, 2.0, 6.0),
+        torus(32, 8, 1.0, 0.3),
+        supershape(24, 16, 9.0, 3.0),
+    ];
+    build_dataset(&protos, per_class, points_per_cloud, noise, &mut rng)
+}
+
+/// Deformed-cube dataset (Cubes substitute): `num_classes` twist/taper
+/// parameterizations of a cube surface grid.
+pub fn cubes_dataset(
+    num_classes: usize,
+    per_class: usize,
+    points_per_cloud: usize,
+    noise: f64,
+    seed: u64,
+) -> ShapeDataset {
+    let mut rng = Rng::new(seed);
+    let protos: Vec<TriMesh> = (0..num_classes)
+        .map(|c| {
+            let mut m = grid_mesh(12, 12);
+            // Fold the grid into a cube-ish shell then deform by class-
+            // specific twist + taper.
+            let twist = 0.15 + 0.25 * (c % 5) as f64;
+            let taper = 0.1 + 0.18 * (c / 5) as f64;
+            for v in m.verts.iter_mut() {
+                let (x, y) = (v[0] - 0.5, v[1] - 0.5);
+                let z = (x * x + y * y) * 1.5;
+                let ang = twist * z * (1.0 + c as f64 * 0.13);
+                let (s, cs) = ang.sin_cos();
+                let scale = 1.0 - taper * z;
+                *v = [scale * (x * cs - y * s), scale * (x * s + y * cs), z];
+            }
+            m
+        })
+        .collect();
+    build_dataset(&protos, per_class, points_per_cloud, noise, &mut rng)
+}
+
+fn build_dataset(
+    protos: &[TriMesh],
+    per_class: usize,
+    points_per_cloud: usize,
+    noise: f64,
+    rng: &mut Rng,
+) -> ShapeDataset {
+    let mut clouds = Vec::new();
+    let mut labels = Vec::new();
+    for (cls, proto) in protos.iter().enumerate() {
+        let mut proto = proto.clone();
+        proto.normalize_unit_box();
+        for _ in 0..per_class {
+            let mut pc = sample_mesh_points(&proto, points_per_cloud, rng);
+            // Anisotropic jitter + noise.
+            let sx = 1.0 + 0.15 * rng.gaussian();
+            let sy = 1.0 + 0.15 * rng.gaussian();
+            let sz = 1.0 + 0.15 * rng.gaussian();
+            for p in pc.points.iter_mut() {
+                p[0] = p[0] * sx + noise * rng.gaussian();
+                p[1] = p[1] * sy + noise * rng.gaussian();
+                p[2] = p[2] * sz + noise * rng.gaussian();
+            }
+            pc.normalize_unit_box();
+            clouds.push(pc);
+            labels.push(cls);
+        }
+    }
+    // Shuffle consistently.
+    let perm = rng.permutation(clouds.len());
+    let clouds = perm.iter().map(|&i| clouds[i].clone()).collect();
+    let labels = perm.iter().map(|&i| labels[i]).collect();
+    ShapeDataset { clouds, labels, num_classes: protos.len() }
+}
+
+/// Labeled-graph dataset: `num_classes` synthetic families (rings with
+/// chords, random trees, grids, community graphs, stars-of-rings, …) with
+/// size jitter — the TUDataset substitute for Table 8.
+pub fn graph_dataset(per_class: usize, seed: u64) -> (Vec<LabeledGraph>, Vec<usize>, usize) {
+    let mut rng = Rng::new(seed);
+    let num_classes = 4;
+    let mut graphs = Vec::new();
+    let mut labels = Vec::new();
+    for cls in 0..num_classes {
+        for _ in 0..per_class {
+            let n = 14 + rng.below(10);
+            let g = match cls {
+                0 => ring_with_chords(n, 2 + rng.below(3), &mut rng),
+                1 => random_tree(n, &mut rng),
+                2 => {
+                    let k = ((n as f64).sqrt().ceil() as usize).max(3);
+                    let gm = grid_mesh(k, k).to_graph();
+                    relabel(gm, &mut rng)
+                }
+                _ => two_communities(n, &mut rng),
+            };
+            graphs.push(g);
+            labels.push(cls);
+        }
+    }
+    (graphs, labels, num_classes)
+}
+
+/// Structure-derived node embeddings: (normalized degree, normalized BFS
+/// depth from vertex 0, normalized label). These are the "node features
+/// as vectors in d-dimensional space" the RFD graph classifier consumes
+/// (paper Appendix F) — they must reflect the graph, not an arbitrary
+/// layout, for the ε-NN kernel to carry class signal.
+fn structural_positions(g: &CsrGraph, labels: &[usize]) -> Vec<[f64; 3]> {
+    let n = g.n;
+    let max_deg = (0..n).map(|v| g.degree(v)).max().unwrap_or(1).max(1) as f64;
+    let depth = crate::graph::bfs_levels(g, 0);
+    let max_depth = depth
+        .iter()
+        .filter(|&&d| d != usize::MAX)
+        .max()
+        .copied()
+        .unwrap_or(1)
+        .max(1) as f64;
+    let max_label = labels.iter().max().copied().unwrap_or(1).max(1) as f64;
+    (0..n)
+        .map(|v| {
+            let d = if depth[v] == usize::MAX { 1.0 } else { depth[v] as f64 / max_depth };
+            [g.degree(v) as f64 / max_deg, d, labels[v] as f64 / max_label]
+        })
+        .collect()
+}
+
+fn ring_with_chords(n: usize, chords: usize, rng: &mut Rng) -> LabeledGraph {
+    let mut edges: Vec<(usize, usize, f64)> = (0..n).map(|i| (i, (i + 1) % n, 1.0)).collect();
+    for _ in 0..chords {
+        let a = rng.below(n);
+        let b = rng.below(n);
+        if a != b {
+            edges.push((a, b, 1.0));
+        }
+    }
+    let graph = CsrGraph::from_edges(n, &edges);
+    let labels: Vec<usize> = (0..n).map(|i| i % 2).collect();
+    let positions = structural_positions(&graph, &labels);
+    LabeledGraph { graph, labels, positions }
+}
+
+fn random_tree(n: usize, rng: &mut Rng) -> LabeledGraph {
+    let edges: Vec<(usize, usize, f64)> =
+        (1..n).map(|i| (i, rng.below(i), 1.0)).collect();
+    let graph = CsrGraph::from_edges(n, &edges);
+    let labels: Vec<usize> = (0..n).map(|i| i % 3).collect();
+    let positions = structural_positions(&graph, &labels);
+    LabeledGraph { graph, labels, positions }
+}
+
+fn relabel(g: CsrGraph, rng: &mut Rng) -> LabeledGraph {
+    let n = g.n;
+    let labels: Vec<usize> = (0..n).map(|_| rng.below(3)).collect();
+    let positions = structural_positions(&g, &labels);
+    LabeledGraph { graph: g, labels, positions }
+}
+
+fn two_communities(n: usize, rng: &mut Rng) -> LabeledGraph {
+    let half = n / 2;
+    let mut edges = Vec::new();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let same = (i < half) == (j < half);
+            let p = if same { 0.5 } else { 0.05 };
+            if rng.uniform() < p {
+                edges.push((i, j, 1.0));
+            }
+        }
+    }
+    // Ensure connectivity backbone.
+    for i in 1..n {
+        edges.push((i, i - 1, 1.0));
+    }
+    let graph = CsrGraph::from_edges(n, &edges);
+    let labels: Vec<usize> = (0..n).map(|i| usize::from(i >= half)).collect();
+    let positions = structural_positions(&graph, &labels);
+    LabeledGraph { graph, labels, positions }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_sizes_increase() {
+        let zoo = mesh_zoo(100, 3000);
+        assert!(zoo.len() >= 4);
+        for e in &zoo {
+            assert!(e.mesh.num_verts() >= 50);
+            assert_eq!(e.mesh.to_graph().num_components(), 1, "{}", e.name);
+        }
+    }
+
+    #[test]
+    fn surface_sampling_on_unit_sphere() {
+        let mut rng = Rng::new(1);
+        let pc = sample_mesh_points(&icosphere(2), 500, &mut rng);
+        assert_eq!(pc.len(), 500);
+        for p in &pc.points {
+            let r = (p[0] * p[0] + p[1] * p[1] + p[2] * p[2]).sqrt();
+            assert!((r - 1.0).abs() < 0.05, "sample off-surface r={r}");
+        }
+    }
+
+    #[test]
+    fn shape_dataset_balanced() {
+        let ds = shape_dataset(3, 64, 0.01, 2);
+        assert_eq!(ds.clouds.len(), 30);
+        assert_eq!(ds.num_classes, 10);
+        let mut counts = vec![0; 10];
+        for &l in &ds.labels {
+            counts[l] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 3));
+    }
+
+    #[test]
+    fn cubes_dataset_distinct_classes() {
+        let ds = cubes_dataset(6, 2, 64, 0.0, 3);
+        assert_eq!(ds.clouds.len(), 12);
+        assert_eq!(ds.num_classes, 6);
+    }
+
+    #[test]
+    fn graph_dataset_families_connected() {
+        let (graphs, labels, ncls) = graph_dataset(3, 4);
+        assert_eq!(graphs.len(), 12);
+        assert_eq!(ncls, 4);
+        assert_eq!(labels.iter().filter(|&&l| l == 0).count(), 3);
+        for g in &graphs {
+            assert!(g.graph.n >= 14);
+            assert_eq!(g.labels.len(), g.graph.n);
+        }
+    }
+}

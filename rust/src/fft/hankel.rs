@@ -1,0 +1,173 @@
+//! Hankel matrix-vector products via FFT correlation.
+//!
+//! SF's cross-contribution step multiplies by `W[i, j] = h[i + j]` where
+//! `h[k] = f((k + g) · unit)` is the kernel evaluated on the quantized
+//! distance grid. `w = W z` is a correlation:
+//! `w[i] = Σ_j h[i+j] z[j] = conv(h, reverse(z))[i + len(z) - 1]`.
+//!
+//! [`HankelPlan`] caches the FFT of `h` so the d field columns (and the
+//! many slices within one SF level) reuse it — this is one of the §Perf
+//! optimizations recorded in EXPERIMENTS.md.
+
+use super::{Cpx, FftPlan};
+
+/// One-shot Hankel matvec: `out[i] = Σ_j h[i+j] z[j]`,
+/// `i ∈ 0..rows`, `j ∈ 0..z.len()`; requires `h.len() ≥ rows + z.len() - 1`.
+pub fn hankel_matvec(h: &[f64], z: &[f64], rows: usize) -> Vec<f64> {
+    HankelPlan::new(h, rows, z.len()).apply(z)
+}
+
+/// Precomputed Hankel multiplier for fixed `h` and shapes.
+pub struct HankelPlan {
+    plan: FftPlan,
+    h_hat: Vec<Cpx>,
+    rows: usize,
+    zlen: usize,
+}
+
+impl HankelPlan {
+    pub fn new(h: &[f64], rows: usize, zlen: usize) -> Self {
+        assert!(rows > 0 && zlen > 0);
+        assert!(
+            h.len() >= rows + zlen - 1,
+            "kernel grid too short: {} < {} + {} - 1",
+            h.len(),
+            rows,
+            zlen
+        );
+        let out_len = rows + zlen - 1;
+        let n = out_len.next_power_of_two();
+        let plan = FftPlan::new(n);
+        let mut h_hat: Vec<Cpx> =
+            h[..out_len].iter().map(|&x| Cpx::new(x, 0.0)).collect();
+        h_hat.resize(n, Cpx::default());
+        plan.forward(&mut h_hat);
+        HankelPlan { plan, h_hat, rows, zlen }
+    }
+
+    /// Applies the Hankel matrix to one vector.
+    pub fn apply(&self, z: &[f64]) -> Vec<f64> {
+        assert_eq!(z.len(), self.zlen);
+        let n = self.plan.len();
+        let mut zr: Vec<Cpx> = vec![Cpx::default(); n];
+        for (j, &v) in z.iter().enumerate() {
+            // reversed z
+            zr[self.zlen - 1 - j] = Cpx::new(v, 0.0);
+        }
+        self.plan.forward(&mut zr);
+        for (x, y) in zr.iter_mut().zip(&self.h_hat) {
+            *x = x.mul(*y);
+        }
+        self.plan.inverse(&mut zr);
+        (0..self.rows).map(|i| zr[i + self.zlen - 1].re).collect()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+}
+
+/// Applies the same Hankel matrix to `d` interleaved columns stored
+/// row-major in `z` (`zlen × d`), producing `rows × d`. Pairs two real
+/// columns per complex FFT (the classic two-for-one real-FFT trick),
+/// halving the number of transforms for the d=3 field case.
+pub fn hankel_matvec_multi(h: &[f64], z: &[f64], rows: usize, d: usize) -> Vec<f64> {
+    assert!(d > 0 && z.len() % d == 0);
+    let zlen = z.len() / d;
+    let plan = HankelPlan::new(h, rows, zlen);
+    let n = plan.plan.len();
+    let mut out = vec![0.0; rows * d];
+    let mut c = 0;
+    while c < d {
+        if c + 1 < d {
+            // Pack columns c (real) and c+1 (imag) into one complex FFT.
+            let mut zr = vec![Cpx::default(); n];
+            for j in 0..zlen {
+                zr[zlen - 1 - j] = Cpx::new(z[j * d + c], z[j * d + c + 1]);
+            }
+            plan.plan.forward(&mut zr);
+            for (x, y) in zr.iter_mut().zip(&plan.h_hat) {
+                *x = x.mul(*y);
+            }
+            plan.plan.inverse(&mut zr);
+            for i in 0..rows {
+                let v = zr[i + zlen - 1];
+                out[i * d + c] = v.re;
+                out[i * d + c + 1] = v.im;
+            }
+            c += 2;
+        } else {
+            let col: Vec<f64> = (0..zlen).map(|j| z[j * d + c]).collect();
+            let w = plan.apply(&col);
+            for i in 0..rows {
+                out[i * d + c] = w[i];
+            }
+            c += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(h: &[f64], z: &[f64], rows: usize) -> Vec<f64> {
+        (0..rows)
+            .map(|i| z.iter().enumerate().map(|(j, &v)| h[i + j] * v).sum())
+            .collect()
+    }
+
+    #[test]
+    fn matches_naive() {
+        let mut rng = Rng::new(41);
+        for (rows, zlen) in [(1, 1), (5, 3), (16, 16), (33, 7), (7, 33)] {
+            let h: Vec<f64> = (0..rows + zlen - 1).map(|_| rng.gaussian()).collect();
+            let z: Vec<f64> = (0..zlen).map(|_| rng.gaussian()).collect();
+            let fast = hankel_matvec(&h, &z, rows);
+            let slow = naive(&h, &z, rows);
+            for (x, y) in fast.iter().zip(&slow) {
+                assert!((x - y).abs() < 1e-9, "rows={rows} zlen={zlen}");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_column_matches_single() {
+        let mut rng = Rng::new(42);
+        let (rows, zlen, d) = (19, 11, 3);
+        let h: Vec<f64> = (0..rows + zlen - 1).map(|_| rng.gaussian()).collect();
+        let z: Vec<f64> = (0..zlen * d).map(|_| rng.gaussian()).collect();
+        let multi = hankel_matvec_multi(&h, &z, rows, d);
+        for c in 0..d {
+            let col: Vec<f64> = (0..zlen).map(|j| z[j * d + c]).collect();
+            let single = hankel_matvec(&h, &col, rows);
+            for i in 0..rows {
+                assert!((multi[i * d + c] - single[i]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_reuse() {
+        let mut rng = Rng::new(43);
+        let (rows, zlen) = (10, 10);
+        let h: Vec<f64> = (0..rows + zlen - 1).map(|_| rng.gaussian()).collect();
+        let plan = HankelPlan::new(&h, rows, zlen);
+        for _ in 0..5 {
+            let z: Vec<f64> = (0..zlen).map(|_| rng.gaussian()).collect();
+            let fast = plan.apply(&z);
+            let slow = naive(&h, &z, rows);
+            for (x, y) in fast.iter().zip(&slow) {
+                assert!((x - y).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn short_kernel_panics() {
+        hankel_matvec(&[1.0, 2.0], &[1.0, 1.0], 2);
+    }
+}

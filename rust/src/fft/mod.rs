@@ -1,0 +1,214 @@
+//! Iterative radix-2 FFT and the Hankel matrix-vector product built on it.
+//!
+//! The SeparatorFactorization inference step multiplies by Hankel matrices
+//! `W[l1, l2] = f(l1 + l2 + g)` (paper §2.2 substep 4.2 / App. A.2).
+//! A Hankel matvec is a correlation, computed here via zero-padded
+//! power-of-two FFT convolution in `O(D log D)`.
+
+mod hankel;
+
+pub use hankel::{hankel_matvec, hankel_matvec_multi, HankelPlan};
+
+/// Complex number (we avoid pulling `num-complex` to keep the dependency
+/// closure to the vendored set).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Cpx {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Cpx {
+    #[inline]
+    pub fn new(re: f64, im: f64) -> Self {
+        Cpx { re, im }
+    }
+    #[inline]
+    pub fn mul(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+    #[inline]
+    pub fn add(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re + o.re, self.im + o.im)
+    }
+    #[inline]
+    pub fn sub(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re - o.re, self.im - o.im)
+    }
+    #[inline]
+    pub fn conj(self) -> Cpx {
+        Cpx::new(self.re, -self.im)
+    }
+    #[inline]
+    pub fn scale(self, s: f64) -> Cpx {
+        Cpx::new(self.re * s, self.im * s)
+    }
+}
+
+/// Precomputed twiddle factors + bit-reversal permutation for size `n`
+/// (power of two). Reused across the many Hankel multiplies inside one SF
+/// inference pass.
+pub struct FftPlan {
+    n: usize,
+    // Twiddles for each butterfly stage, flattened.
+    twiddles: Vec<Cpx>,
+    bitrev: Vec<u32>,
+}
+
+impl FftPlan {
+    pub fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two(), "FFT size must be a power of two, got {n}");
+        let mut twiddles = Vec::new();
+        let mut len = 2;
+        while len <= n {
+            let ang = -2.0 * std::f64::consts::PI / len as f64;
+            for k in 0..len / 2 {
+                let a = ang * k as f64;
+                twiddles.push(Cpx::new(a.cos(), a.sin()));
+            }
+            len <<= 1;
+        }
+        let bits = n.trailing_zeros();
+        let bitrev = (0..n as u32)
+            .map(|i| if bits == 0 { 0 } else { i.reverse_bits() >> (32 - bits) })
+            .collect();
+        FftPlan { n, twiddles, bitrev }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// In-place forward FFT.
+    pub fn forward(&self, buf: &mut [Cpx]) {
+        self.transform(buf, false);
+    }
+
+    /// In-place inverse FFT (includes the 1/n normalization).
+    pub fn inverse(&self, buf: &mut [Cpx]) {
+        self.transform(buf, true);
+        let inv = 1.0 / self.n as f64;
+        for x in buf.iter_mut() {
+            *x = x.scale(inv);
+        }
+    }
+
+    fn transform(&self, buf: &mut [Cpx], invert: bool) {
+        let n = self.n;
+        assert_eq!(buf.len(), n);
+        // Bit-reversal permutation.
+        for i in 0..n {
+            let j = self.bitrev[i] as usize;
+            if i < j {
+                buf.swap(i, j);
+            }
+        }
+        let mut len = 2;
+        let mut toff = 0;
+        while len <= n {
+            let half = len / 2;
+            for start in (0..n).step_by(len) {
+                for k in 0..half {
+                    let mut w = self.twiddles[toff + k];
+                    if invert {
+                        w = w.conj();
+                    }
+                    let u = buf[start + k];
+                    let v = buf[start + k + half].mul(w);
+                    buf[start + k] = u.add(v);
+                    buf[start + k + half] = u.sub(v);
+                }
+            }
+            toff += half;
+            len <<= 1;
+        }
+    }
+}
+
+/// Linear convolution of two real sequences via FFT. Output length
+/// `a.len() + b.len() - 1`.
+pub fn convolve(a: &[f64], b: &[f64]) -> Vec<f64> {
+    if a.is_empty() || b.is_empty() {
+        return vec![];
+    }
+    let out_len = a.len() + b.len() - 1;
+    let n = out_len.next_power_of_two();
+    let plan = FftPlan::new(n);
+    let mut fa: Vec<Cpx> = a.iter().map(|&x| Cpx::new(x, 0.0)).collect();
+    fa.resize(n, Cpx::default());
+    let mut fb: Vec<Cpx> = b.iter().map(|&x| Cpx::new(x, 0.0)).collect();
+    fb.resize(n, Cpx::default());
+    plan.forward(&mut fa);
+    plan.forward(&mut fb);
+    for (x, y) in fa.iter_mut().zip(&fb) {
+        *x = x.mul(*y);
+    }
+    plan.inverse(&mut fa);
+    fa.truncate(out_len);
+    fa.into_iter().map(|c| c.re).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fft_roundtrip() {
+        let mut rng = Rng::new(31);
+        let n = 256;
+        let plan = FftPlan::new(n);
+        let orig: Vec<Cpx> = (0..n).map(|_| Cpx::new(rng.gaussian(), rng.gaussian())).collect();
+        let mut buf = orig.clone();
+        plan.forward(&mut buf);
+        plan.inverse(&mut buf);
+        for (x, y) in buf.iter().zip(&orig) {
+            assert!((x.re - y.re).abs() < 1e-10 && (x.im - y.im).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let n = 64;
+        let plan = FftPlan::new(n);
+        let mut buf = vec![Cpx::default(); n];
+        buf[0] = Cpx::new(1.0, 0.0);
+        plan.forward(&mut buf);
+        for x in buf {
+            assert!((x.re - 1.0).abs() < 1e-12 && x.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn convolve_matches_naive() {
+        let mut rng = Rng::new(32);
+        let a: Vec<f64> = (0..17).map(|_| rng.gaussian()).collect();
+        let b: Vec<f64> = (0..9).map(|_| rng.gaussian()).collect();
+        let fast = convolve(&a, &b);
+        let mut naive = vec![0.0; a.len() + b.len() - 1];
+        for (i, &x) in a.iter().enumerate() {
+            for (j, &y) in b.iter().enumerate() {
+                naive[i + j] += x * y;
+            }
+        }
+        for (x, y) in fast.iter().zip(&naive) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn parseval() {
+        let mut rng = Rng::new(33);
+        let n = 128;
+        let plan = FftPlan::new(n);
+        let orig: Vec<Cpx> = (0..n).map(|_| Cpx::new(rng.gaussian(), 0.0)).collect();
+        let mut buf = orig.clone();
+        plan.forward(&mut buf);
+        let e_time: f64 = orig.iter().map(|c| c.re * c.re + c.im * c.im).sum();
+        let e_freq: f64 =
+            buf.iter().map(|c| c.re * c.re + c.im * c.im).sum::<f64>() / n as f64;
+        assert!((e_time - e_freq).abs() < 1e-8);
+    }
+}

@@ -1,0 +1,241 @@
+//! Compressed-sparse-row undirected weighted graph.
+
+/// Undirected weighted graph in CSR form. Each undirected edge is stored
+/// twice (once per endpoint); weights must be positive for shortest paths.
+#[derive(Clone, Debug)]
+pub struct CsrGraph {
+    pub n: usize,
+    pub offsets: Vec<usize>,
+    pub targets: Vec<u32>,
+    pub weights: Vec<f64>,
+}
+
+impl CsrGraph {
+    /// Builds from an undirected edge list `(u, v, w)`. Self-loops are
+    /// dropped; parallel edges are kept (harmless for Dijkstra, summed by
+    /// the Laplacian/matvec consumers).
+    pub fn from_edges(n: usize, edges: &[(usize, usize, f64)]) -> Self {
+        let mut deg = vec![0usize; n];
+        for &(u, v, _) in edges {
+            if u == v {
+                continue;
+            }
+            assert!(u < n && v < n, "edge ({u},{v}) out of range n={n}");
+            deg[u] += 1;
+            deg[v] += 1;
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + deg[i];
+        }
+        let m2 = offsets[n];
+        let mut targets = vec![0u32; m2];
+        let mut weights = vec![0.0; m2];
+        let mut cursor = offsets.clone();
+        for &(u, v, w) in edges {
+            if u == v {
+                continue;
+            }
+            targets[cursor[u]] = v as u32;
+            weights[cursor[u]] = w;
+            cursor[u] += 1;
+            targets[cursor[v]] = u as u32;
+            weights[cursor[v]] = w;
+            cursor[v] += 1;
+        }
+        CsrGraph { n, offsets, targets, weights }
+    }
+
+    /// Number of undirected edges.
+    pub fn num_edges(&self) -> usize {
+        self.targets.len() / 2
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let lo = self.offsets[v];
+        let hi = self.offsets[v + 1];
+        self.targets[lo..hi]
+            .iter()
+            .zip(&self.weights[lo..hi])
+            .map(|(&t, &w)| (t as usize, w))
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.offsets[v + 1] - self.offsets[v]
+    }
+
+    /// Sparse matvec with the weighted adjacency matrix: `out = W_G · x`
+    /// where `x` has `d` interleaved columns (row-major `n × d`).
+    pub fn adj_matvec_multi(&self, x: &[f64], d: usize) -> Vec<f64> {
+        assert_eq!(x.len(), self.n * d);
+        let mut out = vec![0.0; self.n * d];
+        for v in 0..self.n {
+            let orow = &mut out[v * d..(v + 1) * d];
+            for (u, w) in self.neighbors(v) {
+                let xrow = &x[u * d..(u + 1) * d];
+                for (o, &xv) in orow.iter_mut().zip(xrow) {
+                    *o += w * xv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Graph Laplacian matvec: `out = (D − W) x`, multi-column.
+    pub fn laplacian_matvec_multi(&self, x: &[f64], d: usize) -> Vec<f64> {
+        assert_eq!(x.len(), self.n * d);
+        let mut out = vec![0.0; self.n * d];
+        for v in 0..self.n {
+            let mut wsum = 0.0;
+            let (lo, hi) = (self.offsets[v], self.offsets[v + 1]);
+            for i in lo..hi {
+                wsum += self.weights[i];
+            }
+            let orow = &mut out[v * d..(v + 1) * d];
+            let xv = &x[v * d..(v + 1) * d];
+            for (o, &a) in orow.iter_mut().zip(xv) {
+                *o += wsum * a;
+            }
+            for i in lo..hi {
+                let u = self.targets[i] as usize;
+                let w = self.weights[i];
+                let xu = &x[u * d..(u + 1) * d];
+                for (o, &a) in orow.iter_mut().zip(xu) {
+                    *o -= w * a;
+                }
+            }
+        }
+        out
+    }
+
+    /// Connected component id per vertex (BFS flood fill).
+    pub fn components(&self) -> Vec<usize> {
+        let mut comp = vec![usize::MAX; self.n];
+        let mut next = 0usize;
+        let mut queue = std::collections::VecDeque::new();
+        for s in 0..self.n {
+            if comp[s] != usize::MAX {
+                continue;
+            }
+            comp[s] = next;
+            queue.push_back(s);
+            while let Some(v) = queue.pop_front() {
+                for (u, _) in self.neighbors(v) {
+                    if comp[u] == usize::MAX {
+                        comp[u] = next;
+                        queue.push_back(u);
+                    }
+                }
+            }
+            next += 1;
+        }
+        comp
+    }
+
+    pub fn num_components(&self) -> usize {
+        let c = self.components();
+        c.iter().copied().max().map(|m| m + 1).unwrap_or(0)
+    }
+
+    /// Induced subgraph on `nodes` (must be duplicate-free). Returns the
+    /// subgraph plus the mapping `sub-index → original-index` (which is
+    /// just `nodes` itself, echoed for call-site clarity).
+    pub fn induced(&self, nodes: &[usize]) -> (CsrGraph, Vec<usize>) {
+        let mut local = vec![u32::MAX; self.n];
+        for (i, &v) in nodes.iter().enumerate() {
+            debug_assert!(local[v] == u32::MAX, "duplicate node {v}");
+            local[v] = i as u32;
+        }
+        let mut edges = Vec::new();
+        for (i, &v) in nodes.iter().enumerate() {
+            for (u, w) in self.neighbors(v) {
+                let lu = local[u];
+                if lu != u32::MAX && (lu as usize) > i {
+                    edges.push((i, lu as usize, w));
+                }
+            }
+        }
+        (CsrGraph::from_edges(nodes.len(), &edges), nodes.to_vec())
+    }
+
+    /// Total edge weight (each undirected edge counted once).
+    pub fn total_weight(&self) -> f64 {
+        self.weights.iter().sum::<f64>() / 2.0
+    }
+
+    /// Minimum edge weight (∞ for edgeless graphs).
+    pub fn min_edge_weight(&self) -> f64 {
+        self.weights.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn square() -> CsrGraph {
+        CsrGraph::from_edges(4, &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0), (3, 0, 1.0)])
+    }
+
+    #[test]
+    fn csr_symmetry() {
+        let g = square();
+        assert_eq!(g.num_edges(), 4);
+        for v in 0..4 {
+            assert_eq!(g.degree(v), 2);
+            for (u, _) in g.neighbors(v) {
+                assert!(g.neighbors(u).any(|(t, _)| t == v));
+            }
+        }
+    }
+
+    #[test]
+    fn self_loops_dropped() {
+        let g = CsrGraph::from_edges(2, &[(0, 0, 5.0), (0, 1, 1.0)]);
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.degree(0), 1);
+    }
+
+    #[test]
+    fn adj_matvec() {
+        let g = square();
+        // x = e_0; Wx puts weight on neighbors 1 and 3.
+        let mut x = vec![0.0; 4];
+        x[0] = 1.0;
+        let y = g.adj_matvec_multi(&x, 1);
+        assert_eq!(y, vec![0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn laplacian_constant_nullspace() {
+        let g = square();
+        let x = vec![3.5; 4];
+        let y = g.laplacian_matvec_multi(&x, 1);
+        assert!(y.iter().all(|v| v.abs() < 1e-12));
+    }
+
+    #[test]
+    fn components_and_induced() {
+        let g = CsrGraph::from_edges(5, &[(0, 1, 1.0), (1, 2, 1.0), (3, 4, 1.0)]);
+        assert_eq!(g.num_components(), 2);
+        let (sub, map) = g.induced(&[0, 2, 1]);
+        assert_eq!(sub.n, 3);
+        assert_eq!(sub.num_edges(), 2);
+        assert_eq!(map, vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn multi_column_matvec_matches_single() {
+        let g = square();
+        let x: Vec<f64> = (0..8).map(|i| i as f64).collect(); // 4×2
+        let y = g.adj_matvec_multi(&x, 2);
+        for c in 0..2 {
+            let xc: Vec<f64> = (0..4).map(|r| x[r * 2 + c]).collect();
+            let yc = g.adj_matvec_multi(&xc, 1);
+            for r in 0..4 {
+                assert_eq!(y[r * 2 + c], yc[r]);
+            }
+        }
+    }
+}

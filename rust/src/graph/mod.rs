@@ -1,0 +1,25 @@
+//! Weighted undirected graph substrate: CSR storage, shortest paths
+//! (Dijkstra / BFS), connected components, induced subgraphs, Laplacians,
+//! and sparse matvec — everything SF, the tree embeddings, and the
+//! diffusion baselines need.
+
+mod csr;
+mod shortest_path;
+
+pub use csr::CsrGraph;
+pub use shortest_path::{bfs_levels, dijkstra, dijkstra_bounded, multi_source_dijkstra};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integration_path_graph() {
+        // 0 -1.0- 1 -2.0- 2
+        let g = CsrGraph::from_edges(3, &[(0, 1, 1.0), (1, 2, 2.0)]);
+        let d = dijkstra(&g, 0);
+        assert_eq!(d, vec![0.0, 1.0, 3.0]);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.num_components(), 1);
+    }
+}

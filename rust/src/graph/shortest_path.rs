@@ -1,0 +1,180 @@
+//! Shortest paths: binary-heap Dijkstra (single-, multi-source, and
+//! radius-bounded variants) and unweighted BFS levels. These are SF's
+//! pre-processing workhorses (paper App. A.2 uses one Dijkstra run per
+//! separator vertex per recursion level).
+
+use super::CsrGraph;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+#[derive(PartialEq)]
+struct HeapItem {
+    dist: f64,
+    node: usize,
+}
+
+impl Eq for HeapItem {}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap via reversed comparison; ties broken by node id for
+        // determinism.
+        other
+            .dist
+            .partial_cmp(&self.dist)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.node.cmp(&self.node))
+    }
+}
+
+/// Single-source Dijkstra. Unreachable vertices get `f64::INFINITY`.
+pub fn dijkstra(g: &CsrGraph, source: usize) -> Vec<f64> {
+    multi_source_dijkstra(g, &[source])
+}
+
+/// Multi-source Dijkstra: distance to the *nearest* source.
+pub fn multi_source_dijkstra(g: &CsrGraph, sources: &[usize]) -> Vec<f64> {
+    let mut dist = vec![f64::INFINITY; g.n];
+    let mut heap = BinaryHeap::new();
+    for &s in sources {
+        if dist[s] > 0.0 {
+            dist[s] = 0.0;
+            heap.push(HeapItem { dist: 0.0, node: s });
+        }
+    }
+    while let Some(HeapItem { dist: d, node: v }) = heap.pop() {
+        if d > dist[v] {
+            continue;
+        }
+        for (u, w) in g.neighbors(v) {
+            let nd = d + w;
+            if nd < dist[u] {
+                dist[u] = nd;
+                heap.push(HeapItem { dist: nd, node: u });
+            }
+        }
+    }
+    dist
+}
+
+/// Dijkstra truncated at `radius`: vertices farther than `radius` keep
+/// `INFINITY` and the search never expands past them (used by the FRT/
+/// Bartal ball-growing and by local interpolation windows).
+pub fn dijkstra_bounded(g: &CsrGraph, source: usize, radius: f64) -> Vec<(usize, f64)> {
+    let mut dist = std::collections::HashMap::new();
+    let mut heap = BinaryHeap::new();
+    dist.insert(source, 0.0);
+    heap.push(HeapItem { dist: 0.0, node: source });
+    let mut out = Vec::new();
+    while let Some(HeapItem { dist: d, node: v }) = heap.pop() {
+        if d > *dist.get(&v).unwrap_or(&f64::INFINITY) {
+            continue;
+        }
+        out.push((v, d));
+        for (u, w) in g.neighbors(v) {
+            let nd = d + w;
+            if nd <= radius && nd < *dist.get(&u).unwrap_or(&f64::INFINITY) {
+                dist.insert(u, nd);
+                heap.push(HeapItem { dist: nd, node: u });
+            }
+        }
+    }
+    out
+}
+
+/// Unweighted BFS levels from `source` (hop counts; `usize::MAX` if
+/// unreachable).
+pub fn bfs_levels(g: &CsrGraph, source: usize) -> Vec<usize> {
+    let mut level = vec![usize::MAX; g.n];
+    let mut queue = std::collections::VecDeque::new();
+    level[source] = 0;
+    queue.push_back(source);
+    while let Some(v) = queue.pop_front() {
+        for (u, _) in g.neighbors(v) {
+            if level[u] == usize::MAX {
+                level[u] = level[v] + 1;
+                queue.push_back(u);
+            }
+        }
+    }
+    level
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid3x3() -> CsrGraph {
+        // 3x3 grid, unit weights; index = r*3+c.
+        let mut e = Vec::new();
+        for r in 0..3 {
+            for c in 0..3 {
+                let v = r * 3 + c;
+                if c + 1 < 3 {
+                    e.push((v, v + 1, 1.0));
+                }
+                if r + 1 < 3 {
+                    e.push((v, v + 3, 1.0));
+                }
+            }
+        }
+        CsrGraph::from_edges(9, &e)
+    }
+
+    #[test]
+    fn dijkstra_grid_manhattan() {
+        let g = grid3x3();
+        let d = dijkstra(&g, 0);
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(d[r * 3 + c], (r + c) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn dijkstra_weighted_shortcut() {
+        // 0-1 (10), 0-2 (1), 2-1 (1): shortest 0→1 is 2 via 2.
+        let g = CsrGraph::from_edges(3, &[(0, 1, 10.0), (0, 2, 1.0), (2, 1, 1.0)]);
+        assert_eq!(dijkstra(&g, 0)[1], 2.0);
+    }
+
+    #[test]
+    fn unreachable_is_infinite() {
+        let g = CsrGraph::from_edges(3, &[(0, 1, 1.0)]);
+        let d = dijkstra(&g, 0);
+        assert!(d[2].is_infinite());
+    }
+
+    #[test]
+    fn multi_source_nearest() {
+        let g = grid3x3();
+        let d = multi_source_dijkstra(&g, &[0, 8]);
+        assert_eq!(d[0], 0.0);
+        assert_eq!(d[8], 0.0);
+        assert_eq!(d[4], 2.0); // center equidistant
+    }
+
+    #[test]
+    fn bounded_respects_radius() {
+        let g = grid3x3();
+        let reached = dijkstra_bounded(&g, 0, 1.5);
+        let nodes: std::collections::HashSet<usize> =
+            reached.iter().map(|&(v, _)| v).collect();
+        assert_eq!(nodes, [0, 1, 3].into_iter().collect());
+    }
+
+    #[test]
+    fn bfs_matches_dijkstra_on_unit_weights() {
+        let g = grid3x3();
+        let lv = bfs_levels(&g, 4);
+        let d = dijkstra(&g, 4);
+        for v in 0..9 {
+            assert_eq!(lv[v] as f64, d[v]);
+        }
+    }
+}

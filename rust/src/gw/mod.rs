@@ -1,0 +1,21 @@
+//! Gromov–Wasserstein and Fused GW discrepancies (paper §3.2 + App. D.2).
+//!
+//! The expensive object is the tensor product
+//! `L(C, D, T) = f₁(C)p𝟙ᵀ + 𝟙qᵀf₂(D)ᵀ − h₁(C) T h₂(D)ᵀ`
+//! (Euclidean loss: `f₁=f₂=x²`, `h₁=x`, `h₂=2x`; Peyré et al. 2016,
+//! paper Eq. 43). All four pieces reduce to applications of the structure
+//! matrices `C`/`D` and their Hadamard squares to vectors — exactly what
+//! the FM integrators provide. [`structure::StructureMatrix`] abstracts
+//! over the dense baseline and RFD's `cI + UVᵀ` low-rank form, whose
+//! Hadamard square is handled *exactly* by a Khatri–Rao factorization
+//! (DESIGN.md §Key algorithmic notes).
+//!
+//! Solvers: conditional gradient (`GW-cg`, with the paper-Alg.-3 line
+//! search) and proximal point (`GW-prox`, Xu et al. 2019), both with an
+//! optional fused node-feature term (`FGW`, Vayer et al. 2018).
+
+pub mod solver;
+pub mod structure;
+
+pub use solver::{fgw_solve, gw_barycenter_structure, gw_solve, GwConfig, GwMethod, GwResult};
+pub use structure::{DenseStructure, LowRankStructure, StructureMatrix};

@@ -1,0 +1,450 @@
+//! GW / FGW solvers: conditional gradient with line search (paper Alg. 3)
+//! and proximal point (Xu et al. 2019), both over the [`StructureMatrix`]
+//! abstraction so the dense baseline and the RFD-injected fast variants
+//! share the exact same optimization loop (paper Alg. 2 injection).
+
+use super::structure::StructureMatrix;
+use crate::linalg::Mat;
+
+/// Solver selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GwMethod {
+    /// Conditional gradient with entropic inner OT + exact line search.
+    ConditionalGradient,
+    /// Proximal point (KL-regularized fixed point).
+    Proximal,
+}
+
+/// Solver configuration.
+#[derive(Clone, Debug)]
+pub struct GwConfig {
+    pub method: GwMethod,
+    pub max_iter: usize,
+    /// Entropic regularization of the inner OT / proximal steps.
+    pub inner_reg: f64,
+    pub inner_iters: usize,
+    pub tol: f64,
+    /// FGW trade-off α (1.0 = pure GW).
+    pub alpha: f64,
+}
+
+impl Default for GwConfig {
+    fn default() -> Self {
+        GwConfig {
+            method: GwMethod::ConditionalGradient,
+            max_iter: 30,
+            inner_reg: 5e-3,
+            inner_iters: 100,
+            tol: 1e-7,
+            alpha: 1.0,
+        }
+    }
+}
+
+/// Solver output.
+#[derive(Clone, Debug)]
+pub struct GwResult {
+    /// Transport plan, n×m.
+    pub plan: Mat,
+    /// Final (F)GW cost `⟨L(C,D,T), T⟩` (+ feature term).
+    pub cost: f64,
+    pub iterations: usize,
+}
+
+/// `tens(T) = constC + constD − 2·C T Dᵀ` (Euclidean loss pieces).
+/// `constC = (C⊙²p)𝟙ᵀ`, `constD = 𝟙(D⊙²q)ᵀ` — rank-1, folded in lazily.
+struct TensorCtx<'a> {
+    c: &'a dyn StructureMatrix,
+    d: &'a dyn StructureMatrix,
+    c2p: Vec<f64>,
+    d2q: Vec<f64>,
+}
+
+impl<'a> TensorCtx<'a> {
+    fn new(
+        c: &'a dyn StructureMatrix,
+        d: &'a dyn StructureMatrix,
+        p: &[f64],
+        q: &[f64],
+    ) -> Self {
+        TensorCtx { c, d, c2p: c.hadamard_sq_vec(p), d2q: d.hadamard_sq_vec(q) }
+    }
+
+    /// `C · T · Dᵀ` via two structure applications (D symmetric).
+    fn ctd(&self, t: &Mat) -> Mat {
+        let ct = self.c.apply(t); // n×m
+        // (C T) Dᵀ = (D (C T)ᵀ)ᵀ
+        self.d.apply(&ct.transpose()).transpose()
+    }
+
+    /// Dense `tens(T)` (needed as the inner OT cost matrix anyway).
+    fn tensor(&self, t: &Mat) -> Mat {
+        let mut out = self.ctd(t).scale(-2.0);
+        let (n, _m) = (out.rows, out.cols);
+        for i in 0..n {
+            let ci = self.c2p[i];
+            let row = out.row_mut(i);
+            for (j, x) in row.iter_mut().enumerate() {
+                *x += ci + self.d2q[j];
+            }
+        }
+        out
+    }
+}
+
+fn inner_product(a: &Mat, b: &Mat) -> f64 {
+    a.data.iter().zip(&b.data).map(|(x, y)| x * y).sum()
+}
+
+/// Entropic OT: `argmin_T ⟨cost, T⟩ − reg·H(T)` subject to marginals,
+/// warm-startable via a kernel prior `K0` (for the proximal method).
+fn sinkhorn_plan(
+    cost: &Mat,
+    p: &[f64],
+    q: &[f64],
+    reg: f64,
+    iters: usize,
+    prior: Option<&Mat>,
+) -> Mat {
+    let (n, m) = (cost.rows, cost.cols);
+    // Stabilize: subtract the min before exponentiating.
+    let cmin = cost.data.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mut k = Mat::zeros(n, m);
+    for i in 0..n {
+        for j in 0..m {
+            let mut val = (-(cost[(i, j)] - cmin) / reg).exp();
+            if let Some(pr) = prior {
+                val *= pr[(i, j)].max(1e-300);
+            }
+            k[(i, j)] = val;
+        }
+    }
+    let mut u = vec![1.0; n];
+    let mut v = vec![1.0; m];
+    for _ in 0..iters {
+        // u = p ./ (K v)
+        for i in 0..n {
+            let s: f64 = k.row(i).iter().zip(&v).map(|(a, b)| a * b).sum();
+            u[i] = p[i] / s.max(1e-300);
+        }
+        // v = q ./ (Kᵀ u)
+        let mut kt_u = vec![0.0; m];
+        for i in 0..n {
+            let ui = u[i];
+            for (j, &kij) in k.row(i).iter().enumerate() {
+                kt_u[j] += kij * ui;
+            }
+        }
+        for j in 0..m {
+            v[j] = q[j] / kt_u[j].max(1e-300);
+        }
+    }
+    let mut t = k;
+    for i in 0..n {
+        let ui = u[i];
+        for (j, x) in t.row_mut(i).iter_mut().enumerate() {
+            *x *= ui * v[j];
+        }
+    }
+    t
+}
+
+/// Product plan `p qᵀ` — the standard initialization.
+fn product_plan(p: &[f64], q: &[f64]) -> Mat {
+    let mut t = Mat::zeros(p.len(), q.len());
+    for (i, &pi) in p.iter().enumerate() {
+        for (j, &qj) in q.iter().enumerate() {
+            t[(i, j)] = pi * qj;
+        }
+    }
+    t
+}
+
+/// Exact line search for the CG direction (paper Alg. 3). Returns τ∈[0,1].
+#[allow(clippy::too_many_arguments)]
+fn line_search(
+    ctx: &TensorCtx,
+    g: &Mat,
+    dg: &Mat,
+    feature_cost: Option<&Mat>,
+    alpha: f64,
+) -> f64 {
+    let c_dg_d = ctx.ctd(dg);
+    let a = -2.0 * alpha * inner_product(&c_dg_d, dg);
+    // b = ⟨(1−α)M + α·const, dG⟩ − 2α(⟨CdGD, G⟩ + ⟨CGD, dG⟩)
+    let mut b = 0.0;
+    let (n, m) = (g.rows, g.cols);
+    for i in 0..n {
+        for j in 0..m {
+            let cst = ctx.c2p[i] + ctx.d2q[j];
+            let feat = feature_cost.map(|f| f[(i, j)]).unwrap_or(0.0);
+            b += ((1.0 - alpha) * feat + alpha * cst) * dg[(i, j)];
+        }
+    }
+    let c_g_d = ctx.ctd(g);
+    b -= 2.0 * alpha * (inner_product(&c_dg_d, g) + inner_product(&c_g_d, dg));
+    if a > 0.0 {
+        (-b / (2.0 * a)).clamp(0.0, 1.0)
+    } else if a + b < 0.0 {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// (F)GW cost at `T`.
+fn total_cost(
+    ctx: &TensorCtx,
+    t: &Mat,
+    feature_cost: Option<&Mat>,
+    alpha: f64,
+) -> f64 {
+    let tens = ctx.tensor(t);
+    let gw = inner_product(&tens, t);
+    let feat = feature_cost.map(|f| inner_product(f, t)).unwrap_or(0.0);
+    alpha * gw + (1.0 - alpha) * feat
+}
+
+/// Solves GW (α=1) or FGW (α<1 with a dense feature-cost matrix `M`).
+pub fn fgw_solve(
+    c: &dyn StructureMatrix,
+    d: &dyn StructureMatrix,
+    p: &[f64],
+    q: &[f64],
+    feature_cost: Option<&Mat>,
+    cfg: &GwConfig,
+) -> GwResult {
+    assert_eq!(p.len(), c.n());
+    assert_eq!(q.len(), d.n());
+    if let Some(f) = feature_cost {
+        assert_eq!((f.rows, f.cols), (p.len(), q.len()));
+    }
+    let ctx = TensorCtx::new(c, d, p, q);
+    let mut t = product_plan(p, q);
+    let mut prev_cost = f64::INFINITY;
+    let mut iterations = 0;
+    for it in 0..cfg.max_iter {
+        iterations = it + 1;
+        // Gradient (up to the ×2 that the inner argmin ignores).
+        let mut grad = ctx.tensor(&t).scale(2.0 * cfg.alpha);
+        if let Some(f) = feature_cost {
+            grad.axpy(1.0 - cfg.alpha, f);
+        }
+        let t_new = match cfg.method {
+            GwMethod::ConditionalGradient => {
+                let target =
+                    sinkhorn_plan(&grad, p, q, cfg.inner_reg, cfg.inner_iters, None);
+                let dg = target.sub(&t);
+                let tau = line_search(&ctx, &t, &dg, feature_cost, cfg.alpha);
+                let mut nt = t.clone();
+                nt.axpy(tau, &dg);
+                nt
+            }
+            GwMethod::Proximal => {
+                // KL-prox: T ← sinkhorn with prior T (kernel T ⊙ e^{-G/γ}).
+                sinkhorn_plan(&grad, p, q, cfg.inner_reg, cfg.inner_iters, Some(&t))
+            }
+        };
+        t = t_new;
+        let cost = total_cost(&ctx, &t, feature_cost, cfg.alpha);
+        if (prev_cost - cost).abs() < cfg.tol * (1.0 + cost.abs()) {
+            prev_cost = cost;
+            break;
+        }
+        prev_cost = cost;
+    }
+    GwResult { cost: prev_cost, plan: t, iterations }
+}
+
+/// Pure GW (α = 1, no feature term).
+pub fn gw_solve(
+    c: &dyn StructureMatrix,
+    d: &dyn StructureMatrix,
+    p: &[f64],
+    q: &[f64],
+    cfg: &GwConfig,
+) -> GwResult {
+    fgw_solve(c, d, p, q, None, &GwConfig { alpha: 1.0, ..cfg.clone() })
+}
+
+/// GW barycenter structure update (Peyré et al. 2016, Eq. 14):
+/// `C̄ = Σᵢ wᵢ Tᵢᵀ Cᵢ Tᵢ / (p̄ p̄ᵀ)` — used by the Fig. 8 interpolation.
+/// `plans[i]` transports the barycenter (n̄) to graph i (nᵢ): n̄×nᵢ.
+pub fn gw_barycenter_structure(
+    structures: &[&dyn StructureMatrix],
+    plans: &[Mat],
+    weights: &[f64],
+    p_bar: &[f64],
+) -> Mat {
+    let nb = p_bar.len();
+    let mut acc = Mat::zeros(nb, nb);
+    for ((s, t), &w) in structures.iter().zip(plans).zip(weights) {
+        assert_eq!(t.rows, nb);
+        // Tᵀ… careful with orientation: contribution = T Cᵢ Tᵀ (n̄×n̄).
+        let ct = s.apply(&t.transpose()); // nᵢ×n̄
+        let tct = t.matmul(&ct); // n̄×n̄
+        acc.axpy(w, &tct);
+    }
+    for i in 0..nb {
+        for j in 0..nb {
+            acc[(i, j)] /= (p_bar[i] * p_bar[j]).max(1e-300);
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gw::structure::{DenseStructure, LowRankStructure};
+    use crate::integrators::rfd::RfdConfig;
+    use crate::pointcloud::random_cloud;
+    use crate::util::rng::Rng;
+
+    fn uniform(n: usize) -> Vec<f64> {
+        vec![1.0 / n as f64; n]
+    }
+
+    fn cloud_structure(n: usize, seed: u64) -> (DenseStructure, crate::pointcloud::PointCloud) {
+        let mut rng = Rng::new(seed);
+        let pc = random_cloud(n, &mut rng);
+        (DenseStructure::diffusion(&pc, 0.3, -0.2), pc)
+    }
+
+    #[test]
+    fn plan_satisfies_marginals() {
+        let (c, _) = cloud_structure(20, 1);
+        let (d, _) = cloud_structure(25, 2);
+        let p = uniform(20);
+        let q = uniform(25);
+        let res = gw_solve(&c, &d, &p, &q, &GwConfig::default());
+        let rows = res.plan.row_sums();
+        let cols = res.plan.col_sums();
+        // Entropic inner steps leave a small marginal residual.
+        for (r, want) in rows.iter().zip(&p) {
+            assert!((r - want).abs() < 2e-2 * want, "row marginal {r} vs {want}");
+        }
+        for (cc, want) in cols.iter().zip(&q) {
+            assert!((cc - want).abs() < 2e-2 * want, "col marginal {cc} vs {want}");
+        }
+    }
+
+    #[test]
+    fn self_gw_cost_near_zero_vs_cross() {
+        // GW(C, C) should be much smaller than GW(C, D) for a very
+        // different structure.
+        let (c, _) = cloud_structure(18, 3);
+        let p = uniform(18);
+        let self_res = gw_solve(&c, &c, &p, &p, &GwConfig::default());
+        // A "stretched" structure: same size, different geometry.
+        let mut rng = Rng::new(4);
+        let mut pc2 = random_cloud(18, &mut rng);
+        for q in pc2.points.iter_mut() {
+            q[0] *= 4.0;
+        }
+        let d = DenseStructure::diffusion(&pc2, 0.9, -0.6);
+        let cross_res = gw_solve(&c, &d, &p, &p, &GwConfig::default());
+        assert!(
+            self_res.cost < cross_res.cost,
+            "self {} !< cross {}",
+            self_res.cost,
+            cross_res.cost
+        );
+    }
+
+    #[test]
+    fn rfd_injection_preserves_structure_discrimination() {
+        // The actionable property of GW-RFD (paper Fig. 7): the
+        // RFD-injected solver must still *order* structures correctly —
+        // GW(A, A-like) ≪ GW(A, stretched-B) — even though the absolute
+        // cost carries RF noise (paper Fig. 12 reports rel. errors up to
+        // ~0.5 at these ε/λ).
+        let mut rng = Rng::new(5);
+        let pc_a = random_cloud(40, &mut rng);
+        let mut pc_b = random_cloud(40, &mut rng);
+        for q in pc_b.points.iter_mut() {
+            q[0] *= 5.0;
+        }
+        let (eps, lam) = (0.3, -0.3);
+        let rfd_cfg = RfdConfig {
+            num_features: 16,
+            epsilon: eps,
+            lambda: lam,
+            seed: 7,
+            ..Default::default()
+        };
+        let lr_a = LowRankStructure::from_rfd(&pc_a, rfd_cfg.clone());
+        let lr_a2 = LowRankStructure::from_rfd(&pc_a, RfdConfig { seed: 17, ..rfd_cfg.clone() });
+        let lr_b = LowRankStructure::from_rfd(&pc_b, RfdConfig { seed: 8, epsilon: 1.2, ..rfd_cfg });
+        let p = uniform(40);
+        let cfg = GwConfig::default();
+        let self_cost = gw_solve(&lr_a, &lr_a2, &p, &p, &cfg).cost;
+        let cross_cost = gw_solve(&lr_a, &lr_b, &p, &p, &cfg).cost;
+        assert!(
+            self_cost < cross_cost,
+            "self {self_cost} !< cross {cross_cost}"
+        );
+    }
+
+    #[test]
+    fn proximal_and_cg_agree_roughly() {
+        let (c, _) = cloud_structure(16, 9);
+        let (d, _) = cloud_structure(20, 10);
+        let p = uniform(16);
+        let q = uniform(20);
+        let cg = gw_solve(&c, &d, &p, &q, &GwConfig::default());
+        let prox = gw_solve(
+            &c,
+            &d,
+            &p,
+            &q,
+            &GwConfig { method: GwMethod::Proximal, max_iter: 40, ..Default::default() },
+        );
+        let rel = (cg.cost - prox.cost).abs() / cg.cost.abs().max(1e-12);
+        assert!(rel < 0.5, "cg {} vs prox {}", cg.cost, prox.cost);
+    }
+
+    #[test]
+    fn fgw_feature_term_steers_plan() {
+        // With α→0 FGW reduces to plain OT on the feature cost; a diagonal
+        // feature cost forces the identity-ish coupling.
+        let (c, _) = cloud_structure(12, 11);
+        let p = uniform(12);
+        let mut feat = Mat::zeros(12, 12);
+        for i in 0..12 {
+            for j in 0..12 {
+                feat[(i, j)] = if i == j { 0.0 } else { 1.0 };
+            }
+        }
+        let res = fgw_solve(
+            &c,
+            &c,
+            &p,
+            &p,
+            Some(&feat),
+            &GwConfig { alpha: 0.05, ..Default::default() },
+        );
+        // Diagonal mass should dominate.
+        let diag_mass: f64 = (0..12).map(|i| res.plan[(i, i)]).sum();
+        assert!(diag_mass > 0.7, "diag mass {diag_mass}");
+    }
+
+    #[test]
+    fn barycenter_structure_of_identical_graphs() {
+        // Barycenter of {C, C} with identity-like plans ≈ C.
+        let (c, _) = cloud_structure(10, 12);
+        let p = uniform(10);
+        let mut t = Mat::zeros(10, 10);
+        for i in 0..10 {
+            t[(i, i)] = p[i];
+        }
+        let bar = gw_barycenter_structure(
+            &[&c, &c],
+            &[t.clone(), t],
+            &[0.5, 0.5],
+            &p,
+        );
+        let e = crate::util::stats::rel_err(&bar.data, &c.c.data);
+        assert!(e < 1e-9, "barycenter structure error {e}");
+    }
+}

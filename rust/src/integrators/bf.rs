@@ -1,0 +1,175 @@
+//! Brute-force integrators — the paper's BF baselines.
+//!
+//! * [`BruteForceSp`]: materializes `K[i,j] = f(dist(i,j))` from all-pairs
+//!   Dijkstra (`O(N² log N)` pre-processing, `O(N²)` memory, `O(N² d)`
+//!   inference). Baseline for SF (Fig. 4 row 1, Table 3).
+//! * [`BruteForceDiffusion`]: materializes `K = exp(Λ W_G)` by dense Padé
+//!   `expm` (`O(N³)`). Baseline for RFD (Fig. 4 row 2, Table 2) — and the
+//!   reason the paper's BF column runs out of time/memory first.
+
+use super::{FieldIntegrator, KernelFn};
+use crate::graph::{dijkstra, CsrGraph};
+use crate::linalg::{expm_pade, Mat};
+use crate::util::par;
+
+/// Dense shortest-path-kernel integrator.
+pub struct BruteForceSp {
+    kernel_matrix: Mat,
+}
+
+impl BruteForceSp {
+    /// Pre-processing: N Dijkstra runs (parallelized) + kernel evaluation.
+    /// Unreachable pairs contribute `0` (decaying-kernel convention shared
+    /// with SF).
+    pub fn new(g: &CsrGraph, f: &KernelFn) -> Self {
+        let n = g.n;
+        let mut k = Mat::zeros(n, n);
+        let fref = &f;
+        par::par_rows(&mut k.data, n, |i, row| {
+            let d = dijkstra(g, i);
+            for (j, x) in row.iter_mut().enumerate() {
+                *x = if d[j].is_finite() { fref.eval(d[j]) } else { 0.0 };
+            }
+        });
+        BruteForceSp { kernel_matrix: k }
+    }
+
+    /// Direct access for accuracy oracles in tests.
+    pub fn kernel(&self) -> &Mat {
+        &self.kernel_matrix
+    }
+}
+
+impl FieldIntegrator for BruteForceSp {
+    fn name(&self) -> String {
+        "BF-sp".into()
+    }
+    fn len(&self) -> usize {
+        self.kernel_matrix.rows
+    }
+    fn apply(&self, field: &Mat) -> Mat {
+        self.kernel_matrix.matmul(field)
+    }
+}
+
+/// Dense diffusion-kernel integrator `K = exp(Λ W_G)`.
+pub struct BruteForceDiffusion {
+    kernel_matrix: Mat,
+}
+
+impl BruteForceDiffusion {
+    pub fn new(g: &CsrGraph, lambda: f64) -> Self {
+        let n = g.n;
+        let mut w = Mat::zeros(n, n);
+        for v in 0..n {
+            for (u, wt) in g.neighbors(v) {
+                // Parallel edges collapse by taking the last weight; the
+                // ε-NN builder never produces them.
+                w[(v, u)] = wt;
+            }
+        }
+        BruteForceDiffusion { kernel_matrix: expm_pade(&w.scale(lambda)) }
+    }
+
+    /// Builds directly from a dense weighted adjacency (used by tests and
+    /// the classification baseline).
+    pub fn from_dense(w: &Mat, lambda: f64) -> Self {
+        BruteForceDiffusion { kernel_matrix: expm_pade(&w.scale(lambda)) }
+    }
+
+    pub fn kernel(&self) -> &Mat {
+        &self.kernel_matrix
+    }
+}
+
+impl FieldIntegrator for BruteForceDiffusion {
+    fn name(&self) -> String {
+        "BF-diffusion".into()
+    }
+    fn len(&self) -> usize {
+        self.kernel_matrix.rows
+    }
+    fn apply(&self, field: &Mat) -> Mat {
+        self.kernel_matrix.matmul(field)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_graph(n: usize) -> CsrGraph {
+        CsrGraph::from_edges(n, &(0..n - 1).map(|i| (i, i + 1, 1.0)).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn sp_kernel_symmetric() {
+        let g = path_graph(6);
+        let bf = BruteForceSp::new(&g, &KernelFn::ExpNeg(0.7));
+        let k = bf.kernel();
+        for i in 0..6 {
+            for j in 0..6 {
+                assert!((k[(i, j)] - k[(j, i)]).abs() < 1e-12);
+            }
+        }
+        // K[0][3] = exp(-0.7*3)
+        assert!((k[(0, 3)] - (-2.1f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sp_apply_matches_manual() {
+        let g = path_graph(4);
+        let bf = BruteForceSp::new(&g, &KernelFn::ExpNeg(1.0));
+        let field = Mat::from_vec(4, 1, vec![1.0, 0.0, 0.0, 0.0]);
+        let out = bf.apply(&field);
+        for j in 0..4 {
+            assert!((out[(j, 0)] - (-(j as f64)).exp()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn disconnected_contributes_zero() {
+        let g = CsrGraph::from_edges(3, &[(0, 1, 1.0)]);
+        let bf = BruteForceSp::new(&g, &KernelFn::ExpNeg(1.0));
+        assert_eq!(bf.kernel()[(0, 2)], 0.0);
+        assert_eq!(bf.kernel()[(2, 2)], 1.0); // f(0) = 1
+    }
+
+    #[test]
+    fn diffusion_identity_at_lambda_zero() {
+        let g = path_graph(5);
+        let bf = BruteForceDiffusion::new(&g, 0.0);
+        let k = bf.kernel();
+        for i in 0..5 {
+            for j in 0..5 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((k[(i, j)] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn diffusion_matches_taylor_on_small_graph() {
+        let g = path_graph(4);
+        let lam = 0.3;
+        let bf = BruteForceDiffusion::new(&g, lam);
+        // exp(ΛW) ≈ I + ΛW + Λ²W²/2 + Λ³W³/6 ... check via matvec series.
+        let x = vec![1.0, 2.0, -1.0, 0.5];
+        let mut want = x.clone();
+        let mut term = x.clone();
+        for k in 1..30 {
+            term = g
+                .adj_matvec_multi(&term, 1)
+                .iter()
+                .map(|v| v * lam / k as f64)
+                .collect();
+            for (w, t) in want.iter_mut().zip(&term) {
+                *w += t;
+            }
+        }
+        let got = bf.apply(&Mat::col_vec(&x));
+        for i in 0..4 {
+            assert!((got[(i, 0)] - want[i]).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! Baselines for the action of the matrix exponential `exp(ΛW_G)·x`
+//! (paper Fig. 4, second row):
+//!
+//! * [`AlMohyExpmv`] — scaling + truncated Taylor à la Al-Mohy & Higham
+//!   (2011): `exp(A)x = (exp(A/s))^s x`, each stage summed until the term
+//!   norm underflows the tolerance. Matrix-free (sparse matvec only).
+//! * [`LanczosExpmv`] — Krylov subspace approximation (Orecchia et al.
+//!   2012 / Musco et al. 2018 style): `exp(A)x ≈ ‖x‖·V exp(T) e₁` with a
+//!   `k`-step Lanczos tridiagonalization (full reorthogonalization).
+//! * [`BaderDense`] — dense Taylor-polynomial `expm` (Bader et al. 2019),
+//!   the `O(N³)` pre-processing baseline.
+
+use super::FieldIntegrator;
+use crate::graph::CsrGraph;
+use crate::linalg::{eigh_jacobi, expm_taylor, Mat};
+
+/// Matrix-free Taylor `expm` action with scaling.
+pub struct AlMohyExpmv {
+    g: CsrGraph,
+    lambda: f64,
+    tol: f64,
+    max_terms: usize,
+}
+
+impl AlMohyExpmv {
+    pub fn new(g: &CsrGraph, lambda: f64) -> Self {
+        AlMohyExpmv { g: g.clone(), lambda, tol: 1e-12, max_terms: 60 }
+    }
+
+    /// 1-norm of ΛW (max weighted degree, by symmetry).
+    fn norm1(&self) -> f64 {
+        (0..self.g.n)
+            .map(|v| {
+                self.g.neighbors(v).map(|(_, w)| w.abs()).sum::<f64>() * self.lambda.abs()
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+impl FieldIntegrator for AlMohyExpmv {
+    fn name(&self) -> String {
+        "Al-Mohy".into()
+    }
+    fn len(&self) -> usize {
+        self.g.n
+    }
+
+    fn apply(&self, field: &Mat) -> Mat {
+        let d = field.cols;
+        let s = self.norm1().ceil().max(1.0) as usize;
+        let mut x = field.data.clone();
+        for _stage in 0..s {
+            let mut acc = x.clone();
+            let mut term = x.clone();
+            for k in 1..=self.max_terms {
+                let t = self.g.adj_matvec_multi(&term, d);
+                let scale = self.lambda / (s as f64 * k as f64);
+                for (dst, &src) in term.iter_mut().zip(&t) {
+                    *dst = scale * src;
+                }
+                let tn = term.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+                let an = acc.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+                for (a, &t) in acc.iter_mut().zip(&term) {
+                    *a += t;
+                }
+                if tn <= self.tol * an.max(1e-300) {
+                    break;
+                }
+            }
+            x = acc;
+        }
+        Mat::from_vec(field.rows, d, x)
+    }
+}
+
+/// Krylov (Lanczos) `expm` action for the symmetric `W_G`.
+pub struct LanczosExpmv {
+    g: CsrGraph,
+    lambda: f64,
+    /// Krylov dimension (paper calls this `m`, the Arnoldi iteration
+    /// count).
+    pub krylov_dim: usize,
+}
+
+impl LanczosExpmv {
+    pub fn new(g: &CsrGraph, lambda: f64, krylov_dim: usize) -> Self {
+        LanczosExpmv { g: g.clone(), lambda, krylov_dim: krylov_dim.max(2) }
+    }
+
+    fn apply_column(&self, x: &[f64]) -> Vec<f64> {
+        let n = self.g.n;
+        let beta0 = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if beta0 < 1e-300 {
+            return vec![0.0; n];
+        }
+        let k = self.krylov_dim.min(n);
+        let mut v: Vec<Vec<f64>> = Vec::with_capacity(k + 1);
+        v.push(x.iter().map(|a| a / beta0).collect());
+        let mut alpha = Vec::with_capacity(k);
+        let mut beta = Vec::with_capacity(k);
+        for j in 0..k {
+            let mut w = self.g.adj_matvec_multi(&v[j], 1);
+            for t in w.iter_mut() {
+                *t *= self.lambda;
+            }
+            let a = dot(&w, &v[j]);
+            alpha.push(a);
+            for (wi, vi) in w.iter_mut().zip(&v[j]) {
+                *wi -= a * vi;
+            }
+            if j > 0 {
+                let b = beta[j - 1];
+                for (wi, vi) in w.iter_mut().zip(&v[j - 1]) {
+                    *wi -= b * vi;
+                }
+            }
+            // Full reorthogonalization (stability; Musco et al. discuss
+            // why plain Lanczos drifts).
+            for vi in v.iter() {
+                let c = dot(&w, vi);
+                for (wi, u) in w.iter_mut().zip(vi) {
+                    *wi -= c * u;
+                }
+            }
+            let b = w.iter().map(|t| t * t).sum::<f64>().sqrt();
+            if b < 1e-12 || j + 1 == k {
+                beta.push(b);
+                break;
+            }
+            beta.push(b);
+            v.push(w.iter().map(|t| t / b).collect());
+        }
+        let kk = alpha.len();
+        // Dense tridiagonal exp via Jacobi on the small matrix.
+        let mut t = Mat::zeros(kk, kk);
+        for i in 0..kk {
+            t[(i, i)] = alpha[i];
+            if i + 1 < kk {
+                t[(i, i + 1)] = beta[i];
+                t[(i + 1, i)] = beta[i];
+            }
+        }
+        let e = eigh_jacobi(&t);
+        // exp(T) e1 = U exp(Λ) Uᵀ e1.
+        let u = &e.vectors;
+        let mut coef = vec![0.0; kk];
+        for (i, c) in coef.iter_mut().enumerate() {
+            *c = u[(0, i)] * e.values[i].exp();
+        }
+        let mut small = vec![0.0; kk];
+        for r in 0..kk {
+            for (i, &c) in coef.iter().enumerate() {
+                small[r] += u[(r, i)] * c;
+            }
+        }
+        let mut out = vec![0.0; n];
+        for (j, vj) in v.iter().enumerate().take(kk) {
+            let c = beta0 * small[j];
+            for (o, &u) in out.iter_mut().zip(vj) {
+                *o += c * u;
+            }
+        }
+        out
+    }
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+impl FieldIntegrator for LanczosExpmv {
+    fn name(&self) -> String {
+        format!("Lanczos(k={})", self.krylov_dim)
+    }
+    fn len(&self) -> usize {
+        self.g.n
+    }
+    fn apply(&self, field: &Mat) -> Mat {
+        let cols: Vec<Vec<f64>> = crate::util::par::par_map(field.cols, |c| {
+            let x = field.col(c);
+            self.apply_column(&x)
+        });
+        let mut out = Mat::zeros(field.rows, field.cols);
+        for (c, col) in cols.iter().enumerate() {
+            for (r, &v) in col.iter().enumerate() {
+                out[(r, c)] = v;
+            }
+        }
+        out
+    }
+}
+
+/// Dense Taylor `expm` (Bader et al. 2019 baseline): `O(N³)` pre-proc,
+/// `O(N² d)` inference.
+pub struct BaderDense {
+    kernel_matrix: Mat,
+}
+
+impl BaderDense {
+    pub fn new(g: &CsrGraph, lambda: f64) -> Self {
+        let n = g.n;
+        let mut w = Mat::zeros(n, n);
+        for v in 0..n {
+            for (u, wt) in g.neighbors(v) {
+                w[(v, u)] = wt;
+            }
+        }
+        BaderDense { kernel_matrix: expm_taylor(&w.scale(lambda)) }
+    }
+}
+
+impl FieldIntegrator for BaderDense {
+    fn name(&self) -> String {
+        "Bader".into()
+    }
+    fn len(&self) -> usize {
+        self.kernel_matrix.rows
+    }
+    fn apply(&self, field: &Mat) -> Mat {
+        self.kernel_matrix.matmul(field)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::integrators::bf::BruteForceDiffusion;
+    use crate::pointcloud::{random_cloud, Norm};
+    use crate::util::rng::Rng;
+    use crate::util::stats::rel_err;
+
+    fn setup(n: usize, seed: u64) -> (CsrGraph, Mat, BruteForceDiffusion, f64) {
+        let mut rng = Rng::new(seed);
+        let pc = random_cloud(n, &mut rng);
+        let g = pc.epsilon_graph(0.3, Norm::LInf, true);
+        let lambda = -0.4;
+        let bf = BruteForceDiffusion::new(&g, lambda);
+        let field = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.gaussian()).collect());
+        (g, field, bf, lambda)
+    }
+
+    #[test]
+    fn al_mohy_matches_dense() {
+        let (g, field, bf, lambda) = setup(80, 1);
+        let am = AlMohyExpmv::new(&g, lambda);
+        let e = rel_err(&am.apply(&field).data, &bf.apply(&field).data);
+        assert!(e < 1e-9, "al-mohy error {e}");
+    }
+
+    #[test]
+    fn lanczos_matches_dense() {
+        let (g, field, bf, lambda) = setup(80, 2);
+        let lz = LanczosExpmv::new(&g, lambda, 30);
+        let e = rel_err(&lz.apply(&field).data, &bf.apply(&field).data);
+        assert!(e < 1e-6, "lanczos error {e}");
+    }
+
+    #[test]
+    fn bader_matches_pade() {
+        let (g, field, bf, lambda) = setup(60, 3);
+        let bd = BaderDense::new(&g, lambda);
+        let e = rel_err(&bd.apply(&field).data, &bf.apply(&field).data);
+        assert!(e < 1e-9, "bader error {e}");
+    }
+
+    #[test]
+    fn lanczos_quality_improves_with_krylov_dim() {
+        let (g, field, bf, lambda) = setup(100, 4);
+        let exact = bf.apply(&field);
+        let e_small = rel_err(&LanczosExpmv::new(&g, lambda, 3).apply(&field).data, &exact.data);
+        let e_big = rel_err(&LanczosExpmv::new(&g, lambda, 25).apply(&field).data, &exact.data);
+        assert!(e_big <= e_small + 1e-12, "k=25: {e_big} vs k=3: {e_small}");
+    }
+
+    #[test]
+    fn positive_lambda_also_works() {
+        let mut rng = Rng::new(5);
+        let pc = random_cloud(50, &mut rng);
+        let g = pc.epsilon_graph(0.3, Norm::LInf, true);
+        let bf = BruteForceDiffusion::new(&g, 0.2);
+        let field = Mat::from_vec(50, 1, (0..50).map(|_| rng.gaussian()).collect());
+        let am = AlMohyExpmv::new(&g, 0.2);
+        let e = rel_err(&am.apply(&field).data, &bf.apply(&field).data);
+        assert!(e < 1e-9);
+    }
+}

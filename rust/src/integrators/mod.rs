@@ -1,0 +1,111 @@
+//! Graph-field integrators — the paper's core abstraction.
+//!
+//! A [`FieldIntegrator`] computes `i(v) = Σ_w K(w, v) F(w)` for all `v`
+//! simultaneously, i.e. multiplies the (never materialized, except by the
+//! brute-force baselines) kernel matrix `K ∈ R^{N×N}` with the field
+//! matrix `F ∈ R^{N×d}`. Implementations:
+//!
+//! | module | algorithm | kernel class | complexity |
+//! |---|---|---|---|
+//! | [`bf`] | brute force | any | `O(N²d)` (+`O(N³)` diffusion pre-proc) |
+//! | [`sf`] | SeparatorFactorization | `f(dist(·,·))` | `O(N log² N)` |
+//! | [`trees`] | low-distortion trees | `f(dist_T(·,·))` | `O(kNd)` |
+//! | [`rfd`] | RFDiffusion | `exp(ΛW_G)` | `O(N m² d)` |
+//! | [`expmv`] | Al-Mohy–Higham / Lanczos | `exp(ΛW_G)` | iterative |
+
+pub mod bf;
+pub mod expmv;
+pub mod rfd;
+pub mod sf;
+pub mod trees;
+
+use crate::linalg::Mat;
+
+/// A kernel profile `f : R≥0 → R` applied to graph distances,
+/// `K_f(w, v) = f(dist(w, v))` (paper Eq. 3).
+#[derive(Clone)]
+pub enum KernelFn {
+    /// `f(x) = exp(-λ x)` — the paper's experimental choice for SF; admits
+    /// the `O(N log^1.38 N)` rank-1 Hankel fast path.
+    ExpNeg(f64),
+    /// `f(x) = exp(-λ x²)` — Gaussian-like profile.
+    GaussianSq(f64),
+    /// `f(x) = 1 / (1 + λ x)` — rational decay.
+    Rational(f64),
+    /// `f(x) = A·exp(-b x)·sin(ω x + φ)` — the damped-trigonometric class
+    /// from Corollary A.3.
+    DampedSine { a: f64, b: f64, omega: f64, phi: f64 },
+    /// Arbitrary user profile.
+    Custom(std::sync::Arc<dyn Fn(f64) -> f64 + Send + Sync>),
+}
+
+impl KernelFn {
+    #[inline]
+    pub fn eval(&self, x: f64) -> f64 {
+        match self {
+            KernelFn::ExpNeg(l) => (-l * x).exp(),
+            KernelFn::GaussianSq(l) => (-l * x * x).exp(),
+            KernelFn::Rational(l) => 1.0 / (1.0 + l * x),
+            KernelFn::DampedSine { a, b, omega, phi } => {
+                a * (-b * x).exp() * (omega * x + phi).sin()
+            }
+            KernelFn::Custom(f) => f(x),
+        }
+    }
+
+    /// Whether the separable `exp` fast path applies.
+    pub fn exp_rate(&self) -> Option<f64> {
+        match self {
+            KernelFn::ExpNeg(l) => Some(*l),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Debug for KernelFn {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KernelFn::ExpNeg(l) => write!(f, "ExpNeg({l})"),
+            KernelFn::GaussianSq(l) => write!(f, "GaussianSq({l})"),
+            KernelFn::Rational(l) => write!(f, "Rational({l})"),
+            KernelFn::DampedSine { a, b, omega, phi } => {
+                write!(f, "DampedSine({a},{b},{omega},{phi})")
+            }
+            KernelFn::Custom(_) => write!(f, "Custom"),
+        }
+    }
+}
+
+/// A prepared graph-field integrator: pre-processing happened at
+/// construction; `apply` is the inference hot path.
+pub trait FieldIntegrator: Send + Sync {
+    /// Human-readable algorithm tag used in reports.
+    fn name(&self) -> String;
+    /// Number of graph nodes.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Computes `K · field` where `field` is `N × d` row-major.
+    fn apply(&self, field: &Mat) -> Mat;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_eval_values() {
+        assert!((KernelFn::ExpNeg(2.0).eval(0.0) - 1.0).abs() < 1e-15);
+        assert!((KernelFn::ExpNeg(2.0).eval(1.0) - (-2f64).exp()).abs() < 1e-15);
+        assert!((KernelFn::Rational(1.0).eval(1.0) - 0.5).abs() < 1e-15);
+        let c = KernelFn::Custom(std::sync::Arc::new(|x| x * 3.0));
+        assert_eq!(c.eval(2.0), 6.0);
+    }
+
+    #[test]
+    fn exp_rate_detection() {
+        assert_eq!(KernelFn::ExpNeg(0.5).exp_rate(), Some(0.5));
+        assert_eq!(KernelFn::GaussianSq(0.5).exp_rate(), None);
+    }
+}

@@ -1,0 +1,419 @@
+//! RFDiffusion (paper §2.4): `O(N)` graph-field integration for the graph
+//! diffusion kernel `K = exp(Λ·W_G)` on ε-NN point-cloud graphs.
+//!
+//! Pipeline:
+//! 1. Sample `ω_1..ω_m` from a Gaussian truncated to a ball of radius `R`
+//!    (Lemma 2.6's `P`), and build the random-feature factor matrices
+//!    `A, B ∈ R^{N×2m}` with `W_G ≈ A Bᵀ` — the real-valued expansion of
+//!    the complex feature map `σ_{±1}` (DESIGN.md §Key algorithmic notes).
+//! 2. Woodbury-style identity (paper Eq. 11/12):
+//!    `exp(Λ A Bᵀ) x = x + A [exp(Λ BᵀA) − I] (BᵀA)⁻¹ Bᵀ x`,
+//!    where `BᵀA` is 2m×2m, so pre-processing is `O(N m²) + O(m³)` and
+//!    inference `O(N m d)` — independent of the edge count; the ε-NN graph
+//!    is never materialized.
+//!
+//! **Diagonal correction.** The RF estimator gives `Ŵ(i,i) ≈ f(0) = 1`
+//! while the true adjacency has a zero diagonal. The estimated diagonal is
+//! *exactly* `δ = (1/m) Σ_j q_j` for every `i`, so we integrate against
+//! `exp(Λ(ABᵀ − δI)) = e^{-Λδ} · exp(Λ ABᵀ)` — an exact scalar fix.
+//!
+//! **Norm note.** The paper states the L1-ball indicator with the
+//! separable sinc-product Fourier transform (Eq. 13); the product form is
+//! exact for the *box* (L∞) indicator, which is what we estimate — and we
+//! build the comparison ε-graphs with the same L∞ norm so estimator and
+//! target agree (DESIGN.md §substitutions).
+
+use super::FieldIntegrator;
+use crate::linalg::{eigh_jacobi, expm_pade, lu_factor, thin_qr, Mat};
+use crate::pointcloud::PointCloud;
+use crate::util::{par, rng::Rng};
+
+/// RFD hyper-parameters (paper §3.2 uses m=16–30, ε=0.01–0.3, λ≈±0.1–0.5).
+#[derive(Clone, Debug)]
+pub struct RfdConfig {
+    /// Number of complex random features `m` (real feature dim is `2m`).
+    pub num_features: usize,
+    /// ε-ball radius of the (implicit) ε-NN graph.
+    pub epsilon: f64,
+    /// Diffusion coefficient Λ in `exp(Λ W_G)`.
+    pub lambda: f64,
+    /// Proposal scale σ: ω = σ·g with g ~ N(0, I₃). `None` → σ = 1/ε,
+    /// matching the sinc spectrum's bandwidth so importance weights stay
+    /// bounded (≤ e^{R²/2} over the truncation ball).
+    pub sigma: Option<f64>,
+    /// Truncation radius `R` of the Gaussian in *g*-space (L1-ball).
+    pub radius: f64,
+    /// Ridge added to `BᵀA` when it is near-singular.
+    pub ridge: f64,
+    pub seed: u64,
+}
+
+impl Default for RfdConfig {
+    fn default() -> Self {
+        RfdConfig {
+            num_features: 16,
+            epsilon: 0.1,
+            lambda: -0.1,
+            sigma: None,
+            radius: 3.0,
+            ridge: 1e-8,
+            seed: 0,
+        }
+    }
+}
+
+/// A prepared RFDiffusion integrator.
+pub struct RfDiffusion {
+    cfg: RfdConfig,
+    /// `A ∈ R^{N×2m}` (carries the `q_j/m` weights).
+    a: Mat,
+    /// `B ∈ R^{N×2m}` (plain trig features).
+    b: Mat,
+    /// `M = [exp(Λ BᵀA) − I](BᵀA)⁻¹ ∈ R^{2m×2m}`.
+    m_core: Mat,
+    /// `e^{-Λδ}` diagonal correction factor.
+    diag_scale: f64,
+    /// Raw estimated diagonal δ (exposed for tests).
+    delta: f64,
+}
+
+impl RfDiffusion {
+    /// Pre-processing (`O(N m²)`): feature maps + the 2m×2m core.
+    pub fn new(points: &PointCloud, cfg: RfdConfig) -> Self {
+        let (a, b, delta) = build_features(points, &cfg);
+        let g = b.t_matmul(&a); // BᵀA, 2m×2m
+        let e = expm_pade(&g.scale(cfg.lambda));
+        let mut e_minus_i = e;
+        for i in 0..e_minus_i.rows {
+            e_minus_i[(i, i)] -= 1.0;
+        }
+        // M = (E − I) G⁻¹ = G⁻¹ (E − I) (E commutes with G). Solve
+        // G M = (E − I) with a ridge retry on hard singularity.
+        let m_core = match lu_factor(&g) {
+            Some(f) if f.min_pivot > 1e-12 => f.solve_mat(&e_minus_i),
+            _ => {
+                let mut gr = g.clone();
+                for i in 0..gr.rows {
+                    gr[(i, i)] += cfg.ridge.max(1e-10);
+                }
+                lu_factor(&gr)
+                    .expect("ridged BᵀA still singular")
+                    .solve_mat(&e_minus_i)
+            }
+        };
+        let diag_scale = (-cfg.lambda * delta).exp();
+        RfDiffusion { cfg, a, b, m_core, diag_scale, delta }
+    }
+
+    /// The low-rank factors (used by the GW fast paths and the spectral
+    /// classifier): returns `(A, B)` with `W_G ≈ A Bᵀ − δI`.
+    pub fn factors(&self) -> (&Mat, &Mat) {
+        (&self.a, &self.b)
+    }
+
+    pub fn delta(&self) -> f64 {
+        self.delta
+    }
+
+    pub fn config(&self) -> &RfdConfig {
+        &self.cfg
+    }
+
+    /// Point estimate of one adjacency entry (test/diagnostic helper).
+    pub fn estimate_weight(&self, i: usize, j: usize) -> f64 {
+        let mut w: f64 = self
+            .a
+            .row(i)
+            .iter()
+            .zip(self.b.row(j))
+            .map(|(x, y)| x * y)
+            .sum();
+        if i == j {
+            w -= self.delta;
+        }
+        w
+    }
+
+    /// Eigenvalues of the *kernel* matrix `exp(Λ(ABᵀ − δI))`, exact on the
+    /// low-rank part: thin-QR reduces `ABᵀ` (symmetric by construction of
+    /// the cosine features) to a 4m×4m core (Nakatsukasa 2019). Returns
+    /// the `k` smallest kernel eigenvalues (paper Table 4 features).
+    pub fn kernel_eigenvalues(&self, k: usize, n: usize) -> Vec<f64> {
+        // C = [A B] ∈ R^{N×4m}; W = C J Cᵀ with J = [[0, I/2],[I/2, 0]].
+        let m2 = self.a.cols;
+        let mut c = Mat::zeros(self.a.rows, 2 * m2);
+        for r in 0..self.a.rows {
+            c.row_mut(r)[..m2].copy_from_slice(self.a.row(r));
+            c.row_mut(r)[m2..].copy_from_slice(self.b.row(r));
+        }
+        let (_q, r) = thin_qr(&c);
+        // S = R J Rᵀ — symmetric core whose eigenvalues are W's nonzero ones.
+        let mut j = Mat::zeros(2 * m2, 2 * m2);
+        for i in 0..m2 {
+            j[(i, m2 + i)] = 0.5;
+            j[(m2 + i, i)] = 0.5;
+        }
+        let s = r.matmul(&j).matmul(&r.transpose());
+        let mut w_eigs = eigh_jacobi(&s).values;
+        // Remaining N − 4m eigenvalues of W are 0.
+        let bulk = (n).saturating_sub(w_eigs.len());
+        w_eigs.extend(std::iter::repeat(0.0).take(bulk.min(k)));
+        // Kernel eigenvalues: exp(Λ(μ − δ)).
+        let mut kvals: Vec<f64> = w_eigs
+            .iter()
+            .map(|mu| (self.cfg.lambda * (mu - self.delta)).exp())
+            .collect();
+        kvals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        kvals.truncate(k);
+        kvals
+    }
+}
+
+/// Samples the ω frequencies and raw importance weights `q_j` for a
+/// config — shared between the pure-Rust integrator and the PJRT/AOT
+/// path so both integrate with the *same* random features.
+pub fn sample_features(cfg: &RfdConfig) -> (Vec<[f64; 3]>, Vec<f64>) {
+    let m = cfg.num_features;
+    let mut rng = Rng::new(cfg.seed);
+    let sigma = cfg.sigma.unwrap_or(1.0 / cfg.epsilon.max(1e-6));
+    // ω_j = σ·g_j with g_j ~ N(0, I₃) truncated to the L1-ball B(R).
+    let gs: Vec<Vec<f64>> = (0..m).map(|_| rng.gaussian_l1_ball(3, cfg.radius)).collect();
+    let omegas: Vec<[f64; 3]> = gs
+        .iter()
+        .map(|g| [sigma * g[0], sigma * g[1], sigma * g[2]])
+        .collect();
+    // Importance weight: p(ω) = φ(g) / (C σ^d) with g = ω/σ, so
+    // q_j = τ(ω_j) / ((2π)^d p(ω_j)) = C σ^d τ(ω_j) / ((2π)^d φ(g_j)).
+    // C (the Gaussian mass inside the ball) is estimated once by Monte
+    // Carlo — it only rescales the estimator uniformly.
+    let c_mass = estimate_ball_mass(cfg.radius, &mut rng);
+    let d = 3usize;
+    let two_pi = 2.0 * std::f64::consts::PI;
+    let q: Vec<f64> = gs
+        .iter()
+        .zip(&omegas)
+        .map(|(g, w)| {
+            // τ(ω) = Π 2 sin(ε ω_i)/ω_i (box indicator, angular convention).
+            let tau: f64 = w
+                .iter()
+                .map(|&wi| {
+                    if wi.abs() < 1e-12 {
+                        2.0 * cfg.epsilon
+                    } else {
+                        2.0 * (cfg.epsilon * wi).sin() / wi
+                    }
+                })
+                .product();
+            let phi = two_pi.powf(-(d as f64) / 2.0)
+                * (-0.5 * g.iter().map(|x| x * x).sum::<f64>()).exp();
+            c_mass * sigma.powi(d as i32) * tau / (two_pi.powi(d as i32) * phi)
+        })
+        .collect();
+    (omegas, q)
+}
+
+/// Public wrapper over [`build_features`] for downstream consumers (the
+/// attention masking demo) that need the raw factor matrices.
+pub fn build_features_public(points: &PointCloud, cfg: &RfdConfig) -> (Mat, Mat, f64) {
+    build_features(points, cfg)
+}
+
+/// Builds `A`, `B`, and the exact diagonal estimate δ. Exposed crate-wide
+/// so tests and the GW fast paths can use the feature maps without paying
+/// the `O(m³)` Woodbury core.
+pub(crate) fn build_features(points: &PointCloud, cfg: &RfdConfig) -> (Mat, Mat, f64) {
+    let n = points.len();
+    let m = cfg.num_features;
+    let (omegas, q) = sample_features(cfg);
+    let delta: f64 = q.iter().sum::<f64>() / m as f64;
+    let mut a = Mat::zeros(n, 2 * m);
+    let mut b = Mat::zeros(n, 2 * m);
+    {
+        let pts = &points.points;
+        let acells = par::as_send_cells(&mut a.data);
+        let bcells = par::as_send_cells(&mut b.data);
+        let omegas = &omegas;
+        let q = &q;
+        par::par_for(n, 64, |i| {
+            let p = pts[i];
+            for (j, w) in omegas.iter().enumerate() {
+                let phase = w[0] * p[0] + w[1] * p[1] + w[2] * p[2];
+                let (sn, cs) = phase.sin_cos();
+                let scale = q[j] / m as f64;
+                // SAFETY: row i is written only by this iteration.
+                unsafe {
+                    *acells.get(i * 2 * m + 2 * j) = scale * cs;
+                    *acells.get(i * 2 * m + 2 * j + 1) = scale * sn;
+                    *bcells.get(i * 2 * m + 2 * j) = cs;
+                    *bcells.get(i * 2 * m + 2 * j + 1) = sn;
+                }
+            }
+        });
+    }
+    (a, b, delta)
+}
+
+/// Monte-Carlo estimate of the standard-Gaussian mass inside the L1-ball
+/// of radius `r` in R³.
+fn estimate_ball_mass(r: f64, rng: &mut Rng) -> f64 {
+    let trials = 20_000;
+    let mut hits = 0usize;
+    for _ in 0..trials {
+        let v = rng.gaussian_vec(3);
+        if v.iter().map(|x| x.abs()).sum::<f64>() <= r {
+            hits += 1;
+        }
+    }
+    (hits as f64 / trials as f64).max(1e-6)
+}
+
+impl FieldIntegrator for RfDiffusion {
+    fn name(&self) -> String {
+        format!(
+            "RFD(m={},eps={},lam={})",
+            self.cfg.num_features, self.cfg.epsilon, self.cfg.lambda
+        )
+    }
+    fn len(&self) -> usize {
+        self.a.rows
+    }
+
+    /// `y = e^{-Λδ} (x + A · M · (Bᵀ x))` — the inference hot path,
+    /// `O(N·2m·d)`.
+    fn apply(&self, field: &Mat) -> Mat {
+        assert_eq!(field.rows, self.a.rows);
+        let bt_x = self.b.t_matmul(field); // 2m×d
+        let core = self.m_core.matmul(&bt_x); // 2m×d
+        let mut out = self.a.matmul(&core); // N×d
+        out.add_assign(field);
+        out.scale(self.diag_scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::integrators::bf::BruteForceDiffusion;
+    use crate::pointcloud::{random_cloud, Norm};
+    use crate::util::stats::rel_err;
+
+    fn cloud(n: usize, seed: u64) -> PointCloud {
+        let mut rng = Rng::new(seed);
+        random_cloud(n, &mut rng)
+    }
+
+    #[test]
+    fn adjacency_estimate_unbiasedish() {
+        // With many features the RF estimate of W(i,j) should be close to
+        // the indicator on average. Tests the feature maps directly (the
+        // O(m³) Woodbury core is irrelevant here).
+        let pc = cloud(60, 1);
+        let cfg =
+            RfdConfig { num_features: 2048, epsilon: 0.3, seed: 2, ..Default::default() };
+        let (a, b, delta) = build_features(&pc, &cfg);
+        let w = pc.dense_adjacency(0.3, Norm::LInf, true);
+        let mut err = 0.0;
+        let mut cnt = 0;
+        for i in 0..pc.len() {
+            for j in 0..pc.len() {
+                let mut est: f64 =
+                    a.row(i).iter().zip(b.row(j)).map(|(x, y)| x * y).sum();
+                if i == j {
+                    est -= delta;
+                }
+                err += (est - w[(i, j)]).powi(2);
+                cnt += 1;
+            }
+        }
+        let rmse = (err / cnt as f64).sqrt();
+        assert!(rmse < 0.3, "rmse = {rmse}");
+    }
+
+    #[test]
+    fn diagonal_correction_exact() {
+        let pc = cloud(30, 3);
+        let rfd = RfDiffusion::new(&pc, RfdConfig { num_features: 64, ..Default::default() });
+        // Raw RF diagonal before correction is δ for every i.
+        for i in 0..5 {
+            let raw: f64 = rfd
+                .a
+                .row(i)
+                .iter()
+                .zip(rfd.b.row(i))
+                .map(|(x, y)| x * y)
+                .sum();
+            assert!((raw - rfd.delta()).abs() < 1e-12);
+            assert!(rfd.estimate_weight(i, i).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matches_dense_exponential_of_low_rank() {
+        // The Woodbury identity must be *exact* w.r.t. the low-rank Ŵ:
+        // compare against dense expm of (ABᵀ − δI).
+        let pc = cloud(40, 4);
+        let cfg = RfdConfig { num_features: 8, lambda: -0.2, seed: 5, ..Default::default() };
+        let rfd = RfDiffusion::new(&pc, cfg.clone());
+        let (a, b) = rfd.factors();
+        let mut w_hat = a.matmul(&b.transpose());
+        for i in 0..w_hat.rows {
+            w_hat[(i, i)] -= rfd.delta();
+        }
+        let dense = BruteForceDiffusion::from_dense(&w_hat, cfg.lambda);
+        let mut rng = Rng::new(6);
+        let x = Mat::from_vec(40, 3, (0..120).map(|_| rng.gaussian()).collect());
+        let e = rel_err(&rfd.apply(&x).data, &dense.apply(&x).data);
+        assert!(e < 1e-8, "woodbury vs dense expm: {e}");
+    }
+
+    #[test]
+    fn approximates_true_diffusion() {
+        // End-to-end: RFD vs brute-force diffusion on the true ε-graph.
+        let pc = cloud(100, 7);
+        let eps = 0.25;
+        let lambda = -0.2;
+        let cfg = RfdConfig {
+            num_features: 128,
+            epsilon: eps,
+            lambda,
+            seed: 8,
+            ..Default::default()
+        };
+        let rfd = RfDiffusion::new(&pc, cfg);
+        let w = pc.dense_adjacency(eps, Norm::LInf, true);
+        let dense = BruteForceDiffusion::from_dense(&w, lambda);
+        let mut rng = Rng::new(9);
+        let x = Mat::from_vec(100, 3, (0..300).map(|_| rng.gaussian()).collect());
+        let e = rel_err(&rfd.apply(&x).data, &dense.apply(&x).data);
+        assert!(e < 0.3, "rfd vs dense diffusion: {e}");
+    }
+
+    #[test]
+    fn eigenvalues_match_dense() {
+        let pc = cloud(50, 10);
+        let cfg = RfdConfig { num_features: 8, lambda: -0.3, seed: 11, ..Default::default() };
+        let rfd = RfDiffusion::new(&pc, cfg.clone());
+        let (a, b) = rfd.factors();
+        let mut w_hat = a.matmul(&b.transpose());
+        for i in 0..w_hat.rows {
+            w_hat[(i, i)] -= rfd.delta();
+        }
+        let dense_k = crate::linalg::expm_pade(&w_hat.scale(cfg.lambda));
+        let mut dense_eigs = crate::linalg::eigh_jacobi(&dense_k).values;
+        dense_eigs.truncate(10);
+        let fast = rfd.kernel_eigenvalues(10, 50);
+        for (x, y) in fast.iter().zip(&dense_eigs) {
+            assert!((x - y).abs() < 1e-6, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let pc = cloud(25, 12);
+        let cfg = RfdConfig { num_features: 16, seed: 99, ..Default::default() };
+        let r1 = RfDiffusion::new(&pc, cfg.clone());
+        let r2 = RfDiffusion::new(&pc, cfg);
+        let x = Mat::from_vec(25, 1, (0..25).map(|i| i as f64).collect());
+        assert_eq!(r1.apply(&x).data, r2.apply(&x).data);
+    }
+}

@@ -1,0 +1,621 @@
+//! SeparatorFactorization (paper §2.2–2.3, App. A.2).
+//!
+//! Approximate graph-field integration for kernels `K(w,v) = f(dist(w,v))`
+//! on mesh graphs, in `O(N log N)` pre-processing and `O(N log² N)`
+//! inference (`O(N log^1.38 N)` for `f(x) = exp(-λx)` via the rank-1
+//! Hankel fast path).
+//!
+//! The practical variant implemented here follows §2.3:
+//!
+//! 1. **Balanced separation with truncation** — a BFS level-cut gives a
+//!    balanced separator (on bounded-genus mesh graphs level cuts are
+//!    `O(√N)`, cf. Theorem 2.2); it is subsampled to a constant-size `S′`,
+//!    the leftover separator vertices are distributed randomly to A/B.
+//! 2. **Nearest-separator slicing** — A and B are sliced by the *nearest*
+//!    `S′` vertex (a 1-sparse surrogate of the signature vector ρ) and by
+//!    quantized distance-to-`S′` (τ). For `v` in slice `k` and `w` in
+//!    slice `l`, `dist(v,w) ≈ τ_v + g(k,l) + τ_w` with
+//!    `g(k,l) = dist(s_k, s_l)` — Eq. 8 with the signature minimum
+//!    collapsed to the nearest-separator pair.
+//! 3. **Quantization** — distances are divided by `unit_size` and rounded,
+//!    so each slice-pair cross-contribution is a Hankel matvec on the
+//!    quantized grid, computed by FFT (general `f`) or the rank-1
+//!    factorization (`exp` kernel).
+//! 4. **Brute-force leaves** — recursion stops at `threshold` nodes.
+
+mod separator;
+
+pub use separator::{balanced_level_cut, Separation};
+
+use super::{FieldIntegrator, KernelFn};
+use crate::fft::hankel_matvec_multi;
+use crate::graph::{dijkstra, CsrGraph};
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// SF hyper-parameters (paper App. D.1.3 / E.1).
+#[derive(Clone, Debug)]
+pub struct SfConfig {
+    /// Kernel profile `f`.
+    pub kernel: KernelFn,
+    /// Distance quantization: all shortest-path lengths are taken modulo
+    /// this unit (paper's `unit-size`, default 0.01 for unit-box meshes).
+    pub unit_size: f64,
+    /// Max subgraph size handled by a brute-force leaf (paper's
+    /// `threshold`).
+    pub threshold: usize,
+    /// Truncated separator size `|S′|`.
+    pub separator_size: usize,
+    /// PRNG seed (separator truncation is randomized).
+    pub seed: u64,
+}
+
+impl Default for SfConfig {
+    fn default() -> Self {
+        SfConfig {
+            kernel: KernelFn::ExpNeg(1.0),
+            unit_size: 0.01,
+            threshold: 512,
+            separator_size: 6,
+            seed: 0,
+        }
+    }
+}
+
+/// One τ-slice bucket: nodes of a part whose nearest S′ vertex is `k`.
+struct Slice {
+    /// (local node index, quantized τ) pairs.
+    members: Vec<(u32, u32)>,
+    max_tau: u32,
+}
+
+enum SfNode {
+    Leaf {
+        /// Global vertex ids.
+        nodes: Vec<u32>,
+        /// Quantized pairwise distances on the induced subgraph,
+        /// row-major `n×n`; `u32::MAX` = unreachable.
+        dist_q: Vec<u32>,
+    },
+    Internal {
+        nodes: Vec<u32>,
+        /// Local indices (into `nodes`) of the truncated separator S′.
+        sep_local: Vec<u32>,
+        /// Quantized distances: `sep_dq[s * n_sub + j]` = dist(S′[s], j).
+        sep_dq: Vec<u32>,
+        /// Quantized S′×S′ distances `g(k,l)`.
+        sep_g: Vec<u32>,
+        /// Per-part slices, indexed by nearest-separator id.
+        slices_a: Vec<Slice>,
+        slices_b: Vec<Slice>,
+        a_child: Box<SfNode>,
+        b_child: Box<SfNode>,
+    },
+}
+
+/// Construction/shape statistics, used by tests, benches, and DESIGN.md's
+/// complexity verification.
+#[derive(Clone, Debug, Default)]
+pub struct SfStats {
+    pub depth: usize,
+    pub leaves: usize,
+    pub internals: usize,
+    pub max_leaf: usize,
+    pub max_quantized_dist: u32,
+}
+
+/// A prepared SeparatorFactorization integrator.
+pub struct SeparatorFactorization {
+    n: usize,
+    cfg: SfConfig,
+    root: SfNode,
+    /// `f_table[k] = f(k · unit_size)`, sized to the max quantized
+    /// distance any step can index.
+    f_table: Vec<f64>,
+    stats: SfStats,
+}
+
+impl SeparatorFactorization {
+    /// Pre-processing: builds the separator tree. `O(N log N)` Dijkstra
+    /// work (|S′| runs per level) plus leaf all-pairs.
+    pub fn new(g: &CsrGraph, cfg: SfConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let mut stats = SfStats::default();
+        let all: Vec<u32> = (0..g.n as u32).collect();
+        let mut max_q = 0u32;
+        let root = build(g, all, &cfg, &mut rng, 0, &mut stats, &mut max_q);
+        stats.max_quantized_dist = max_q;
+        let f_table: Vec<f64> = (0..=max_q as usize + 1)
+            .map(|k| cfg.kernel.eval(k as f64 * cfg.unit_size))
+            .collect();
+        SeparatorFactorization { n: g.n, cfg, root, f_table, stats }
+    }
+
+    pub fn stats(&self) -> &SfStats {
+        &self.stats
+    }
+}
+
+fn quantize(d: f64, unit: f64) -> u32 {
+    if d.is_finite() {
+        (d / unit).round() as u32
+    } else {
+        u32::MAX
+    }
+}
+
+fn build_leaf(
+    sub: &CsrGraph,
+    nodes: Vec<u32>,
+    cfg: &SfConfig,
+    stats: &mut SfStats,
+    max_q: &mut u32,
+) -> SfNode {
+    let n_sub = nodes.len();
+    let mut dist_q = vec![u32::MAX; n_sub * n_sub];
+    let rows: Vec<Vec<f64>> = crate::util::par::par_map(n_sub, |i| dijkstra(sub, i));
+    for (i, d) in rows.iter().enumerate() {
+        for (j, &dj) in d.iter().enumerate() {
+            let q = quantize(dj, cfg.unit_size);
+            if q != u32::MAX {
+                *max_q = (*max_q).max(q);
+            }
+            dist_q[i * n_sub + j] = q;
+        }
+    }
+    stats.leaves += 1;
+    stats.max_leaf = stats.max_leaf.max(n_sub);
+    SfNode::Leaf { nodes, dist_q }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build(
+    g: &CsrGraph,
+    nodes: Vec<u32>,
+    cfg: &SfConfig,
+    rng: &mut Rng,
+    depth: usize,
+    stats: &mut SfStats,
+    max_q: &mut u32,
+) -> SfNode {
+    stats.depth = stats.depth.max(depth);
+    let n_sub = nodes.len();
+    let global: Vec<usize> = nodes.iter().map(|&x| x as usize).collect();
+    let (sub, _) = g.induced(&global);
+
+    if n_sub <= cfg.threshold.max(2) {
+        return build_leaf(&sub, nodes, cfg, stats, max_q);
+    }
+    match balanced_level_cut(&sub, cfg.separator_size, rng) {
+        None => build_leaf(&sub, nodes, cfg, stats, max_q),
+        Some(Separation { separator, part_a, part_b }) => {
+            stats.internals += 1;
+            let ns = separator.len();
+            // Distances from each S′ vertex to every subtree node.
+            let sep_rows: Vec<Vec<f64>> =
+                crate::util::par::par_map(ns, |k| dijkstra(&sub, separator[k] as usize));
+            let mut sep_dq = vec![u32::MAX; ns * n_sub];
+            for (s, row) in sep_rows.iter().enumerate() {
+                for (j, &dj) in row.iter().enumerate() {
+                    let q = quantize(dj, cfg.unit_size);
+                    if q != u32::MAX {
+                        // Cross terms index f at τ_v + g + τ_w ≤ 3·max q.
+                        *max_q = (*max_q).max(q.saturating_mul(3));
+                    }
+                    sep_dq[s * n_sub + j] = q;
+                }
+            }
+            // S′ × S′ distances.
+            let mut sep_g = vec![u32::MAX; ns * ns];
+            for k in 0..ns {
+                for l in 0..ns {
+                    sep_g[k * ns + l] = sep_dq[k * n_sub + separator[l] as usize];
+                }
+            }
+            // Slice parts by nearest separator vertex.
+            let make_slices = |part: &[u32]| -> Vec<Slice> {
+                let mut slices: Vec<Slice> =
+                    (0..ns).map(|_| Slice { members: Vec::new(), max_tau: 0 }).collect();
+                for &j in part {
+                    let mut best = (u32::MAX, 0usize);
+                    for s in 0..ns {
+                        let dq = sep_dq[s * n_sub + j as usize];
+                        if dq < best.0 {
+                            best = (dq, s);
+                        }
+                    }
+                    if best.0 == u32::MAX {
+                        continue; // unreachable from S′ (other component)
+                    }
+                    let sl = &mut slices[best.1];
+                    sl.members.push((j, best.0));
+                    sl.max_tau = sl.max_tau.max(best.0);
+                }
+                slices
+            };
+            let slices_a = make_slices(&part_a);
+            let slices_b = make_slices(&part_b);
+
+            let a_nodes: Vec<u32> = part_a.iter().map(|&j| nodes[j as usize]).collect();
+            let b_nodes: Vec<u32> = part_b.iter().map(|&j| nodes[j as usize]).collect();
+            let a_child = Box::new(build(g, a_nodes, cfg, rng, depth + 1, stats, max_q));
+            let b_child = Box::new(build(g, b_nodes, cfg, rng, depth + 1, stats, max_q));
+            SfNode::Internal {
+                nodes,
+                sep_local: separator,
+                sep_dq,
+                sep_g,
+                slices_a,
+                slices_b,
+                a_child,
+                b_child,
+            }
+        }
+    }
+}
+
+impl FieldIntegrator for SeparatorFactorization {
+    fn name(&self) -> String {
+        format!("SF(u={},t={})", self.cfg.unit_size, self.cfg.threshold)
+    }
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn apply(&self, field: &Mat) -> Mat {
+        assert_eq!(field.rows, self.n);
+        let d = field.cols;
+        let mut out = Mat::zeros(self.n, d);
+        walk(&self.root, field, &mut out, &self.f_table, &self.cfg, d);
+        out
+    }
+}
+
+#[inline]
+fn f_at(f_table: &[f64], q: u32) -> f64 {
+    if q == u32::MAX {
+        0.0 // unreachable: decaying-kernel convention
+    } else {
+        f_table[(q as usize).min(f_table.len() - 1)]
+    }
+}
+
+fn walk(node: &SfNode, field: &Mat, out: &mut Mat, f_table: &[f64], cfg: &SfConfig, d: usize) {
+    match node {
+        SfNode::Leaf { nodes, dist_q } => {
+            let n = nodes.len();
+            for (i, &gi) in nodes.iter().enumerate() {
+                let orow = out.row_mut(gi as usize);
+                for (j, &gj) in nodes.iter().enumerate() {
+                    let f = f_at(f_table, dist_q[i * n + j]);
+                    if f == 0.0 {
+                        continue;
+                    }
+                    let frow = field.row(gj as usize);
+                    for (o, &x) in orow.iter_mut().zip(frow) {
+                        *o += f * x;
+                    }
+                }
+            }
+        }
+        SfNode::Internal {
+            nodes,
+            sep_local,
+            sep_dq,
+            sep_g,
+            slices_a,
+            slices_b,
+            a_child,
+            b_child,
+        } => {
+            let n = nodes.len();
+            let in_sep: std::collections::HashSet<u32> = sep_local.iter().copied().collect();
+
+            // --- Step 1: exact contributions involving S′. ---
+            for (s, &sl) in sep_local.iter().enumerate() {
+                let gs = nodes[sl as usize] as usize;
+                let srow_field = field.row(gs).to_vec();
+                let mut acc = vec![0.0; d];
+                for (j, &gj) in nodes.iter().enumerate() {
+                    let f = f_at(f_table, sep_dq[s * n + j]);
+                    if f == 0.0 {
+                        continue;
+                    }
+                    let frow = field.row(gj as usize);
+                    for (a, &x) in acc.iter_mut().zip(frow) {
+                        *a += f * x;
+                    }
+                    // Sources in S′ → targets outside S′.
+                    if !in_sep.contains(&(j as u32)) {
+                        let orow = out.row_mut(gj as usize);
+                        for (o, &x) in orow.iter_mut().zip(&srow_field) {
+                            *o += f * x;
+                        }
+                    }
+                }
+                let orow = out.row_mut(gs);
+                for (o, a) in orow.iter_mut().zip(acc) {
+                    *o += a;
+                }
+            }
+
+            // --- Step 2: cross A↔B via sliced τ + g offsets. ---
+            cross_contribution(nodes, slices_a, slices_b, sep_g, field, out, f_table, cfg, d);
+            cross_contribution(nodes, slices_b, slices_a, sep_g, field, out, f_table, cfg, d);
+
+            // --- Step 3: recurse. ---
+            walk(a_child, field, out, f_table, cfg, d);
+            walk(b_child, field, out, f_table, cfg, d);
+        }
+    }
+}
+
+/// Adds `Σ_{w∈src} f((τ_v + g(k_v,k_w) + τ_w)·unit) F(w)` to every dst
+/// node, slice-pair by slice-pair.
+#[allow(clippy::too_many_arguments)]
+fn cross_contribution(
+    nodes: &[u32],
+    dst: &[Slice],
+    src: &[Slice],
+    sep_g: &[u32],
+    field: &Mat,
+    out: &mut Mat,
+    f_table: &[f64],
+    cfg: &SfConfig,
+    d: usize,
+) {
+    let ns = dst.len();
+    if let Some(lambda) = cfg.kernel.exp_rate() {
+        // Rank-1 fast path: per source slice compute the decayed sum once,
+        // then combine across slice pairs with e^{-λ·u·g}.
+        let mut src_sums = vec![0.0; ns * d]; // Σ_w e^{-λuτ_w} F(w) per slice
+        for (l, sl) in src.iter().enumerate() {
+            let acc = &mut src_sums[l * d..(l + 1) * d];
+            for &(j, t) in &sl.members {
+                let wgt = (-lambda * t as f64 * cfg.unit_size).exp();
+                let frow = field.row(nodes[j as usize] as usize);
+                for (a, &x) in acc.iter_mut().zip(frow) {
+                    *a += wgt * x;
+                }
+            }
+        }
+        for (k, dl) in dst.iter().enumerate() {
+            if dl.members.is_empty() {
+                continue;
+            }
+            // combined = Σ_l e^{-λ·u·g(k,l)} src_sums[l]
+            let mut combined = vec![0.0; d];
+            for l in 0..ns {
+                let gq = sep_g[k * ns + l];
+                if gq == u32::MAX {
+                    continue;
+                }
+                let wg = (-lambda * gq as f64 * cfg.unit_size).exp();
+                for (c, &s) in combined.iter_mut().zip(&src_sums[l * d..(l + 1) * d]) {
+                    *c += wg * s;
+                }
+            }
+            for &(v, t) in &dl.members {
+                let wgt = (-lambda * t as f64 * cfg.unit_size).exp();
+                let orow = out.row_mut(nodes[v as usize] as usize);
+                for (o, &x) in orow.iter_mut().zip(&combined) {
+                    *o += wgt * x;
+                }
+            }
+        }
+        return;
+    }
+
+    // General f: histogram each source slice by τ once, then one Hankel
+    // multiply per (dst-slice, src-slice) pair with the g(k,l) offset
+    // folded into the kernel grid.
+    let histograms: Vec<Option<Vec<f64>>> = src
+        .iter()
+        .map(|sl| {
+            if sl.members.is_empty() {
+                return None;
+            }
+            let zlen = sl.max_tau as usize + 1;
+            let mut z = vec![0.0; zlen * d];
+            for &(j, t) in &sl.members {
+                let frow = field.row(nodes[j as usize] as usize);
+                let zr = &mut z[t as usize * d..(t as usize + 1) * d];
+                for (a, &x) in zr.iter_mut().zip(frow) {
+                    *a += x;
+                }
+            }
+            Some(z)
+        })
+        .collect();
+    for (k, dl) in dst.iter().enumerate() {
+        if dl.members.is_empty() {
+            continue;
+        }
+        let rows = dl.max_tau as usize + 1;
+        let mut w_acc = vec![0.0; rows * d];
+        for (l, hist) in histograms.iter().enumerate() {
+            let Some(z) = hist else { continue };
+            let gq = sep_g[k * ns + l];
+            if gq == u32::MAX {
+                continue;
+            }
+            let zlen = z.len() / d;
+            let need = rows + zlen - 1;
+            let goff = gq as usize;
+            let h: Vec<f64> = if goff + need <= f_table.len() {
+                f_table[goff..goff + need].to_vec()
+            } else {
+                (0..need)
+                    .map(|kk| cfg.kernel.eval((kk + goff) as f64 * cfg.unit_size))
+                    .collect()
+            };
+            let w = hankel_matvec_multi(&h, z, rows, d);
+            for (acc, &x) in w_acc.iter_mut().zip(&w) {
+                *acc += x;
+            }
+        }
+        for &(v, t) in &dl.members {
+            let orow = out.row_mut(nodes[v as usize] as usize);
+            let wrow = &w_acc[t as usize * d..(t as usize + 1) * d];
+            for (o, &x) in orow.iter_mut().zip(wrow) {
+                *o += x;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::integrators::bf::BruteForceSp;
+    use crate::mesh::{grid_mesh, icosphere, torus};
+    use crate::util::stats::rel_err;
+
+    fn compare_on(g: &CsrGraph, kernel: KernelFn, unit: f64, tol: f64) {
+        let n = g.n;
+        let bf = BruteForceSp::new(g, &kernel);
+        let cfg = SfConfig {
+            kernel,
+            unit_size: unit,
+            threshold: 64,
+            separator_size: 8,
+            seed: 3,
+        };
+        let sf = SeparatorFactorization::new(g, cfg);
+        let mut rng = Rng::new(9);
+        let field = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.gaussian()).collect());
+        let exact = bf.apply(&field);
+        let approx = sf.apply(&field);
+        let e = rel_err(&approx.data, &exact.data);
+        assert!(e < tol, "rel err {e} on n={n}");
+    }
+
+    #[test]
+    fn exact_when_single_leaf() {
+        // threshold ≥ n → SF degenerates to brute force (up to
+        // quantization), so with a fine unit it matches BF tightly.
+        let g = grid_mesh(8, 8).to_graph();
+        let kernel = KernelFn::ExpNeg(1.5);
+        let bf = BruteForceSp::new(&g, &kernel);
+        let sf = SeparatorFactorization::new(
+            &g,
+            SfConfig { kernel, unit_size: 1e-4, threshold: 10_000, ..Default::default() },
+        );
+        let mut rng = Rng::new(1);
+        let field = Mat::from_vec(g.n, 2, (0..g.n * 2).map(|_| rng.gaussian()).collect());
+        let e = rel_err(&sf.apply(&field).data, &bf.apply(&field).data);
+        assert!(e < 1e-3, "rel err {e}");
+    }
+
+    #[test]
+    fn grid_exp_kernel_accuracy() {
+        compare_on(&grid_mesh(16, 16).to_graph(), KernelFn::ExpNeg(2.0), 0.01, 0.45);
+    }
+
+    #[test]
+    fn sphere_exp_kernel_accuracy() {
+        compare_on(&icosphere(3).to_graph(), KernelFn::ExpNeg(3.0), 0.01, 0.45);
+    }
+
+    #[test]
+    fn torus_general_kernel_accuracy() {
+        compare_on(&torus(20, 10, 1.0, 0.35).to_graph(), KernelFn::GaussianSq(1.0), 0.02, 0.45);
+    }
+
+    #[test]
+    fn general_and_exp_paths_agree() {
+        // The FFT (general) path and the rank-1 exp path must agree when
+        // the kernel is the same exponential.
+        let g = icosphere(2).to_graph();
+        let lam = 2.0;
+        let base = SfConfig {
+            kernel: KernelFn::ExpNeg(lam),
+            unit_size: 0.01,
+            threshold: 32,
+            separator_size: 6,
+            seed: 7,
+        };
+        let sf_fast = SeparatorFactorization::new(&g, base.clone());
+        let sf_slow = SeparatorFactorization::new(
+            &g,
+            SfConfig {
+                kernel: KernelFn::Custom(std::sync::Arc::new(move |x| (-lam * x).exp())),
+                ..base
+            },
+        );
+        let mut rng = Rng::new(2);
+        let field = Mat::from_vec(g.n, 3, (0..g.n * 3).map(|_| rng.gaussian()).collect());
+        let e = rel_err(&sf_fast.apply(&field).data, &sf_slow.apply(&field).data);
+        assert!(e < 1e-10, "paths disagree: {e}");
+    }
+
+    #[test]
+    fn finer_unit_size_is_more_accurate() {
+        // Paper Fig. 10: smaller unit-size → better shortest-path
+        // estimates.
+        let g = icosphere(2).to_graph();
+        let kernel = KernelFn::ExpNeg(2.0);
+        let bf = BruteForceSp::new(&g, &kernel);
+        let mut rng = Rng::new(4);
+        let field = Mat::from_vec(g.n, 3, (0..g.n * 3).map(|_| rng.gaussian()).collect());
+        let exact = bf.apply(&field);
+        let err_of = |unit: f64| {
+            let sf = SeparatorFactorization::new(
+                &g,
+                SfConfig {
+                    kernel: kernel.clone(),
+                    unit_size: unit,
+                    threshold: 10_000, // single leaf isolates quantization
+                    separator_size: 6,
+                    seed: 5,
+                },
+            );
+            rel_err(&sf.apply(&field).data, &exact.data)
+        };
+        let fine = err_of(0.001);
+        let coarse = err_of(0.3);
+        assert!(fine < coarse, "fine {fine} vs coarse {coarse}");
+    }
+
+    #[test]
+    fn tree_shape_is_logarithmic() {
+        let g = grid_mesh(40, 40).to_graph(); // n = 1600
+        let sf = SeparatorFactorization::new(
+            &g,
+            SfConfig { threshold: 64, ..Default::default() },
+        );
+        let st = sf.stats();
+        assert!(st.depth >= 3, "depth {}", st.depth);
+        assert!(st.depth <= 30, "depth {}", st.depth);
+        assert!(st.max_leaf <= 1600);
+        assert!(st.leaves >= 8);
+    }
+
+    #[test]
+    fn disconnected_graph_handled() {
+        // Two disjoint grids; cross-component contributions must be 0.
+        let g1 = grid_mesh(6, 6).to_graph();
+        let mut edges = Vec::new();
+        for v in 0..g1.n {
+            for (u, w) in g1.neighbors(v) {
+                if u > v {
+                    edges.push((v, u, w));
+                    edges.push((v + g1.n, u + g1.n, w));
+                }
+            }
+        }
+        let g = CsrGraph::from_edges(g1.n * 2, &edges);
+        compare_on(&g, KernelFn::ExpNeg(1.0), 0.01, 0.45);
+    }
+
+    #[test]
+    fn preprocessing_deterministic_given_seed() {
+        let g = icosphere(2).to_graph();
+        let cfg = SfConfig { seed: 42, threshold: 32, ..Default::default() };
+        let a = SeparatorFactorization::new(&g, cfg.clone());
+        let b = SeparatorFactorization::new(&g, cfg);
+        let mut rng = Rng::new(5);
+        let field = Mat::from_vec(g.n, 1, (0..g.n).map(|_| rng.gaussian()).collect());
+        assert_eq!(a.apply(&field).data, b.apply(&field).data);
+    }
+}

@@ -1,0 +1,431 @@
+//! Tree constructions: MST, Bartal, and FRT.
+
+use crate::graph::{dijkstra, dijkstra_bounded, CsrGraph};
+use crate::util::rng::Rng;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// A rooted weighted tree whose first `n_original` node ids coincide with
+/// the graph's vertex ids; FRT adds virtual internal nodes above them.
+#[derive(Clone, Debug)]
+pub struct WeightedTree {
+    /// Parent id per node (root points to itself).
+    pub parent: Vec<usize>,
+    /// Weight of the edge to the parent (0 for the root).
+    pub weight: Vec<f64>,
+    /// Root id.
+    pub root: usize,
+    /// Number of original graph vertices (node ids `< n_original` are
+    /// graph vertices; ids `≥ n_original` are virtual).
+    pub n_original: usize,
+}
+
+impl WeightedTree {
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Children adjacency (computed on demand).
+    pub fn children(&self) -> Vec<Vec<usize>> {
+        let mut ch = vec![Vec::new(); self.len()];
+        for v in 0..self.len() {
+            if v != self.root {
+                ch[self.parent[v]].push(v);
+            }
+        }
+        ch
+    }
+
+    /// Topological order root→leaves (children after parents).
+    pub fn topo_order(&self) -> Vec<usize> {
+        let ch = self.children();
+        let mut order = Vec::with_capacity(self.len());
+        let mut stack = vec![self.root];
+        while let Some(v) = stack.pop() {
+            order.push(v);
+            for &c in &ch[v] {
+                stack.push(c);
+            }
+        }
+        order
+    }
+
+    /// Tree distance between two nodes (O(depth); test helper).
+    pub fn dist(&self, mut a: usize, mut b: usize) -> f64 {
+        let depth = |mut v: usize| {
+            let mut d = 0usize;
+            while v != self.root {
+                v = self.parent[v];
+                d += 1;
+            }
+            d
+        };
+        let (mut da, mut db) = (depth(a), depth(b));
+        let mut total = 0.0;
+        while da > db {
+            total += self.weight[a];
+            a = self.parent[a];
+            da -= 1;
+        }
+        while db > da {
+            total += self.weight[b];
+            b = self.parent[b];
+            db -= 1;
+        }
+        while a != b {
+            total += self.weight[a] + self.weight[b];
+            a = self.parent[a];
+            b = self.parent[b];
+        }
+        total
+    }
+}
+
+/// Prim's minimum spanning tree (forest for disconnected graphs: each
+/// extra component is attached to the root with a zero... no — kept as a
+/// separate root whose parent is itself is impossible in this struct, so
+/// extra components hang off node 0 with weight `f64::INFINITY`, which
+/// every kernel maps to ~0 contribution).
+pub fn mst(g: &CsrGraph) -> WeightedTree {
+    let n = g.n;
+    let mut parent = vec![usize::MAX; n];
+    let mut weight = vec![0.0; n];
+    let mut in_tree = vec![false; n];
+    let mut heap: BinaryHeap<HeapEdge> = BinaryHeap::new();
+    let mut roots = Vec::new();
+    for start in 0..n {
+        if in_tree[start] {
+            continue;
+        }
+        roots.push(start);
+        parent[start] = start;
+        in_tree[start] = true;
+        for (u, w) in g.neighbors(start) {
+            heap.push(HeapEdge { w, to: u, from: start });
+        }
+        while let Some(HeapEdge { w, to, from }) = heap.pop() {
+            if in_tree[to] {
+                continue;
+            }
+            in_tree[to] = true;
+            parent[to] = from;
+            weight[to] = w;
+            for (u, wu) in g.neighbors(to) {
+                if !in_tree[u] {
+                    heap.push(HeapEdge { w: wu, to: u, from: to });
+                }
+            }
+        }
+    }
+    // Attach secondary roots below the primary one at infinite distance.
+    let root = roots[0];
+    for &r in &roots[1..] {
+        parent[r] = root;
+        weight[r] = f64::INFINITY;
+    }
+    WeightedTree { parent, weight, root, n_original: n }
+}
+
+#[derive(PartialEq)]
+struct HeapEdge {
+    w: f64,
+    to: usize,
+    from: usize,
+}
+impl Eq for HeapEdge {}
+impl PartialOrd for HeapEdge {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEdge {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.w.partial_cmp(&self.w).unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Bartal's randomized low-diameter decomposition tree. Recursively
+/// partitions the vertex set into clusters of (graph) radius ≤ Δ/4 by
+/// random ball carving, builds subtrees, and links cluster centers to the
+/// first cluster's center with edges of weight Δ.
+pub fn bartal_tree(g: &CsrGraph, rng: &mut Rng) -> WeightedTree {
+    let n = g.n;
+    // Upper bound on the diameter: sum of max edge per BFS tree is loose;
+    // use Dijkstra eccentricity of vertex 0 × 2 (per component, take max).
+    let d0 = dijkstra(g, 0);
+    let mut diam = d0.iter().copied().filter(|d| d.is_finite()).fold(0.0, f64::max) * 2.0;
+    if diam <= 0.0 {
+        diam = 1.0;
+    }
+    let mut parent: Vec<usize> = (0..n).collect();
+    let mut weight = vec![0.0; n];
+    let all: Vec<usize> = (0..n).collect();
+    let root = carve(g, &all, diam, rng, &mut parent, &mut weight);
+    WeightedTree { parent, weight, root, n_original: n }
+}
+
+/// Recursive ball carving; returns the representative (center) of `nodes`.
+fn carve(
+    g: &CsrGraph,
+    nodes: &[usize],
+    delta: f64,
+    rng: &mut Rng,
+    parent: &mut [usize],
+    weight: &mut [f64],
+) -> usize {
+    if nodes.len() == 1 {
+        return nodes[0];
+    }
+    let in_set: std::collections::HashSet<usize> = nodes.iter().copied().collect();
+    let mut order: Vec<usize> = nodes.to_vec();
+    rng.shuffle(&mut order);
+    let mut assigned: std::collections::HashMap<usize, usize> = std::collections::HashMap::new();
+    let mut clusters: Vec<(usize, Vec<usize>)> = Vec::new();
+    let logn = (nodes.len().max(2) as f64).ln();
+    for &c in &order {
+        if assigned.contains_key(&c) {
+            continue;
+        }
+        // Random radius in [Δ/8, Δ/4): truncated exponential (Bartal's
+        // distribution family).
+        let r = (delta / 8.0) * (1.0 + rng.exponential() / logn).min(2.0);
+        let ball = dijkstra_bounded(g, c, r);
+        let mut members = Vec::new();
+        for (v, _) in ball {
+            if in_set.contains(&v) && !assigned.contains_key(&v) {
+                assigned.insert(v, c);
+                members.push(v);
+            }
+        }
+        if !members.is_empty() {
+            clusters.push((c, members));
+        }
+    }
+    // Vertices unreachable within the radius from any center (different
+    // component inside `nodes`): singleton clusters.
+    for &v in nodes {
+        if !assigned.contains_key(&v) {
+            assigned.insert(v, v);
+            clusters.push((v, vec![v]));
+        }
+    }
+    if clusters.len() == 1 {
+        // Could not split (dense ball): halve Δ and retry.
+        let (_, members) = clusters.pop().unwrap();
+        return carve(g, &members, delta / 2.0, rng, parent, weight);
+    }
+    let reps: Vec<usize> = clusters
+        .iter()
+        .map(|(_, members)| carve(g, members, delta / 2.0, rng, parent, weight))
+        .collect();
+    let head = reps[0];
+    for &r in &reps[1..] {
+        parent[r] = head;
+        weight[r] = delta;
+    }
+    head
+}
+
+/// FRT hierarchical tree. Samples β ∈ [1, 2) and a random permutation π;
+/// level-i clusters are carved by balls of radius β·2^{i-1} in π order;
+/// the laminar family becomes a tree with virtual internal nodes and
+/// level-i edges of weight 2^i (scaled by the metric's base scale).
+pub fn frt_tree(g: &CsrGraph, rng: &mut Rng) -> WeightedTree {
+    let n = g.n;
+    let d0 = dijkstra(g, 0);
+    let diam = d0
+        .iter()
+        .copied()
+        .filter(|d| d.is_finite())
+        .fold(0.0f64, f64::max)
+        .max(g.min_edge_weight().min(1.0))
+        * 2.0;
+    let beta = rng.uniform_in(1.0, 2.0);
+    let pi = rng.permutation(n);
+    // Levels: 2^top ≥ diam, down to the minimum edge weight.
+    let min_w = g.min_edge_weight();
+    let base = if min_w.is_finite() { min_w.max(1e-6) } else { 1.0 };
+    let mut levels = Vec::new();
+    let mut scale = diam.max(base);
+    while scale > base / 2.0 {
+        levels.push(scale);
+        scale /= 2.0;
+        if levels.len() > 40 {
+            break;
+        }
+    }
+    // cluster id per vertex per level; level 0 = one root cluster.
+    let mut parent = vec![0usize; n];
+    let mut weight = vec![0.0; n];
+    let mut n_nodes = n;
+    // Active clusters at the current level, as vertex lists; each carries
+    // the tree-node id of its cluster node.
+    let root_id = n_nodes;
+    n_nodes += 1;
+    parent.push(root_id);
+    weight.push(0.0);
+    let mut active: Vec<(usize, Vec<usize>)> = vec![(root_id, (0..n).collect())];
+
+    for (li, &lvl) in levels.iter().enumerate() {
+        let radius = beta * lvl / 2.0;
+        let mut next_active = Vec::new();
+        for (cluster_node, members) in active {
+            if members.len() == 1 {
+                // Attach the single vertex directly.
+                let v = members[0];
+                parent[v] = cluster_node;
+                weight[v] = lvl;
+                continue;
+            }
+            let in_set: std::collections::HashSet<usize> = members.iter().copied().collect();
+            let mut taken: std::collections::HashSet<usize> = std::collections::HashSet::new();
+            let mut subclusters: Vec<Vec<usize>> = Vec::new();
+            for &c in &pi {
+                if taken.len() == members.len() {
+                    break;
+                }
+                // Center c carves within distance `radius` (centers may be
+                // outside the cluster — that's essential to FRT).
+                let ball = dijkstra_bounded(g, c, radius);
+                let mut sub = Vec::new();
+                for (v, _) in ball {
+                    if in_set.contains(&v) && !taken.contains(&v) {
+                        taken.insert(v);
+                        sub.push(v);
+                    }
+                }
+                if !sub.is_empty() {
+                    subclusters.push(sub);
+                }
+            }
+            // Disconnected leftovers become singletons.
+            for &v in &members {
+                if !taken.contains(&v) {
+                    subclusters.push(vec![v]);
+                }
+            }
+            let last_level = li + 1 == levels.len();
+            for sub in subclusters {
+                if sub.len() == 1 || last_level {
+                    for v in sub {
+                        parent[v] = cluster_node;
+                        weight[v] = lvl;
+                    }
+                } else {
+                    let id = n_nodes;
+                    n_nodes += 1;
+                    parent.push(cluster_node);
+                    weight.push(lvl);
+                    next_active.push((id, sub));
+                }
+            }
+        }
+        active = next_active;
+        if active.is_empty() {
+            break;
+        }
+    }
+    WeightedTree { parent, weight, root: root_id, n_original: n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::grid_mesh;
+
+    #[test]
+    fn mst_is_spanning() {
+        let g = grid_mesh(8, 8).to_graph();
+        let t = mst(&g);
+        assert_eq!(t.len(), g.n);
+        // Every node reaches the root.
+        for v in 0..g.n {
+            let mut cur = v;
+            let mut hops = 0;
+            while cur != t.root {
+                cur = t.parent[cur];
+                hops += 1;
+                assert!(hops <= g.n);
+            }
+        }
+    }
+
+    #[test]
+    fn mst_total_weight_on_cycle() {
+        // 4-cycle with one heavy edge: MST drops the heavy edge.
+        let g = CsrGraph::from_edges(
+            4,
+            &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0), (3, 0, 10.0)],
+        );
+        let t = mst(&g);
+        let total: f64 = t.weight.iter().filter(|w| w.is_finite()).sum();
+        assert!((total - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tree_distance_dominates_graph_distance() {
+        // Low-distortion trees never shorten distances (in expectation
+        // bounds; individual Bartal/FRT trees always dominate).
+        let g = grid_mesh(6, 6).to_graph();
+        let mut rng = Rng::new(1);
+        for tree in [bartal_tree(&g, &mut rng), frt_tree(&g, &mut rng)] {
+            let d = dijkstra(&g, 0);
+            for v in 1..g.n {
+                let td = tree.dist(0, v);
+                assert!(
+                    td >= d[v] * 0.5 - 1e-9,
+                    "tree dist {td} < graph dist {} for v={v} ({})",
+                    d[v],
+                    tree.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bartal_covers_all_nodes() {
+        let g = grid_mesh(7, 7).to_graph();
+        let mut rng = Rng::new(2);
+        let t = bartal_tree(&g, &mut rng);
+        assert_eq!(t.n_original, g.n);
+        assert_eq!(t.len(), g.n); // Bartal consolidates without new nodes
+    }
+
+    #[test]
+    fn frt_has_virtual_nodes_and_covers() {
+        let g = grid_mesh(7, 7).to_graph();
+        let mut rng = Rng::new(3);
+        let t = frt_tree(&g, &mut rng);
+        assert!(t.len() > g.n, "FRT should add internal nodes");
+        // Each original vertex must be a leaf (no children among originals
+        // pointing to it is not required, but it must reach the root).
+        for v in 0..g.n {
+            let mut cur = v;
+            let mut hops = 0;
+            while cur != t.root {
+                cur = t.parent[cur];
+                hops += 1;
+                assert!(hops < t.len());
+            }
+        }
+    }
+
+    #[test]
+    fn topo_order_parents_first() {
+        let g = grid_mesh(5, 5).to_graph();
+        let t = mst(&g);
+        let order = t.topo_order();
+        let mut pos = vec![0usize; t.len()];
+        for (i, &v) in order.iter().enumerate() {
+            pos[v] = i;
+        }
+        for v in 0..t.len() {
+            if v != t.root {
+                assert!(pos[t.parent[v]] < pos[v]);
+            }
+        }
+    }
+}

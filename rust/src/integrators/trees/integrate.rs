@@ -1,0 +1,514 @@
+//! GFI on trees.
+//!
+//! * [`tree_gfi_exp`] — exact O(N·d) two-pass DP for `f(x) = exp(-λx)`
+//!   (paper Table 1 row 1, the |V|-tractable case used by the Fig. 4
+//!   tree baselines).
+//! * [`tree_gfi_general`] — arbitrary `f` by centroid decomposition +
+//!   quantized Hankel-FFT convolutions (`O(N log² N)`, Table 1 row 2).
+//! * [`TreeEnsembleIntegrator`] — `i(v) = (1/k) Σ_t i_{T_t}(v)`
+//!   (Appendix B).
+
+use super::build::{bartal_tree, frt_tree, mst, WeightedTree};
+use crate::fft::hankel_matvec_multi;
+use crate::graph::CsrGraph;
+use crate::integrators::{FieldIntegrator, KernelFn};
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Exact `Σ_w exp(-λ·dist_T(v,w)) F(w)` for every original vertex `v`.
+/// Virtual (FRT) nodes carry zero field and are excluded from outputs.
+/// Infinite edge weights (forest stitching) decay to exactly zero.
+pub fn tree_gfi_exp(tree: &WeightedTree, lambda: f64, field: &Mat) -> Mat {
+    assert_eq!(field.rows, tree.n_original);
+    let d = field.cols;
+    let nt = tree.len();
+    let order = tree.topo_order();
+    // decay to parent
+    let decay: Vec<f64> = tree
+        .weight
+        .iter()
+        .map(|&w| if w.is_finite() { (-lambda * w).exp() } else { 0.0 })
+        .collect();
+
+    // Upward pass: up[v] = F(v) + Σ_c decay[c]·up[c]. Children appear
+    // before parents in reverse topo order, so their contributions are
+    // already accumulated into up[v] when v is processed — hence `+=`.
+    let mut up = vec![0.0; nt * d];
+    for &v in order.iter().rev() {
+        if v < tree.n_original {
+            for (u, &fv) in up[v * d..(v + 1) * d].iter_mut().zip(field.row(v)) {
+                *u += fv;
+            }
+        }
+        if v != tree.root {
+            let p = tree.parent[v];
+            let dc = decay[v];
+            if dc != 0.0 {
+                for k in 0..d {
+                    let val = dc * up[v * d + k];
+                    up[p * d + k] += val;
+                }
+            }
+        }
+    }
+    // Downward pass: down[c] = decay[c]·(down[p] + up[p] − decay[c]·up[c]).
+    let mut down = vec![0.0; nt * d];
+    for &v in order.iter() {
+        if v == tree.root {
+            continue;
+        }
+        let p = tree.parent[v];
+        let dc = decay[v];
+        if dc == 0.0 {
+            continue;
+        }
+        for k in 0..d {
+            down[v * d + k] = dc * (down[p * d + k] + up[p * d + k] - dc * up[v * d + k]);
+        }
+    }
+    let mut out = Mat::zeros(tree.n_original, d);
+    for v in 0..tree.n_original {
+        for k in 0..d {
+            out[(v, k)] = up[v * d + k] + down[v * d + k];
+        }
+    }
+    out
+}
+
+/// Arbitrary-`f` GFI on a tree via centroid decomposition: each vertex
+/// pair is charged at its centroid ancestor,
+/// `i(v) += Σ_w f(d(v,c) + d(c,w)) F(w)` with the same-subtree overcount
+/// subtracted; per-centroid sums are Hankel matvecs over the quantized
+/// distance grid.
+pub fn tree_gfi_general(
+    tree: &WeightedTree,
+    f: &KernelFn,
+    unit: f64,
+    field: &Mat,
+) -> Mat {
+    assert_eq!(field.rows, tree.n_original);
+    let d = field.cols;
+    let nt = tree.len();
+    let ch = tree.children();
+    let mut out = Mat::zeros(tree.n_original, d);
+    let mut removed = vec![false; nt];
+    let mut subtree_size = vec![0usize; nt];
+
+    // Iterative centroid decomposition over tree components.
+    let mut stack = vec![tree.root];
+    while let Some(entry) = stack.pop() {
+        if removed[entry] {
+            continue;
+        }
+        // Collect the current component by BFS over non-removed nodes.
+        let comp = collect_component(tree, &ch, entry, &removed);
+        if comp.is_empty() {
+            continue;
+        }
+        // Find centroid.
+        let centroid = find_centroid(tree, &ch, &comp, &removed, &mut subtree_size);
+        // Distances from centroid within the component.
+        let dist = component_distances(tree, &ch, centroid, &removed);
+        // Quantize; group members by (which centroid-subtree they're in).
+        // Contribution: full convolution minus per-branch convolution.
+        add_centroid_contribution(&dist, &dist, f, unit, field, &mut out, d, None);
+        // Branch corrections: members grouped by the first hop from the
+        // centroid.
+        let mut branch_of: std::collections::HashMap<usize, Vec<(usize, f64)>> =
+            std::collections::HashMap::new();
+        for &(v, dv) in &dist {
+            if v == centroid {
+                continue;
+            }
+            let b = first_hop(tree, &ch, centroid, v, &removed, &dist);
+            branch_of.entry(b).or_default().push((v, dv));
+        }
+        for (_b, members) in branch_of {
+            add_centroid_contribution(&members, &members, f, unit, field, &mut out, d, Some(-1.0));
+        }
+        removed[centroid] = true;
+        // Recurse into remaining pieces: push neighbors of centroid.
+        for &c in &ch[centroid] {
+            if !removed[c] {
+                stack.push(c);
+            }
+        }
+        if centroid != tree.root && !removed[tree.parent[centroid]] {
+            stack.push(tree.parent[centroid]);
+        }
+    }
+    out
+}
+
+/// Adds `sign · Σ_{w∈src} f((τ_v + τ_w)·unit') F(w)` for all `v ∈ dst`,
+/// where τ are quantized distances to the centroid. `src == dst` contains
+/// `(node, distance)` pairs. `sign=None` → +1.
+#[allow(clippy::too_many_arguments)]
+fn add_centroid_contribution(
+    dst: &[(usize, f64)],
+    src: &[(usize, f64)],
+    f: &KernelFn,
+    unit: f64,
+    field: &Mat,
+    out: &mut Mat,
+    d: usize,
+    sign: Option<f64>,
+) {
+    let sign = sign.unwrap_or(1.0);
+    let n_orig = field.rows;
+    let q = |x: f64| -> Option<usize> {
+        if x.is_finite() {
+            Some((x / unit).round() as usize)
+        } else {
+            None
+        }
+    };
+    let src_q: Vec<(usize, usize)> = src
+        .iter()
+        .filter(|&&(v, _)| v < n_orig)
+        .filter_map(|&(v, dv)| q(dv).map(|qq| (v, qq)))
+        .collect();
+    let dst_q: Vec<(usize, usize)> = dst
+        .iter()
+        .filter(|&&(v, _)| v < n_orig)
+        .filter_map(|&(v, dv)| q(dv).map(|qq| (v, qq)))
+        .collect();
+    if src_q.is_empty() || dst_q.is_empty() {
+        return;
+    }
+    let ms = src_q.iter().map(|&(_, t)| t).max().unwrap();
+    let md = dst_q.iter().map(|&(_, t)| t).max().unwrap();
+    let mut z = vec![0.0; (ms + 1) * d];
+    for &(v, t) in &src_q {
+        let zr = &mut z[t * d..(t + 1) * d];
+        for (a, &x) in zr.iter_mut().zip(field.row(v)) {
+            *a += x;
+        }
+    }
+    let h: Vec<f64> = (0..ms + md + 1).map(|k| f.eval(k as f64 * unit)).collect();
+    let w = hankel_matvec_multi(&h, &z, md + 1, d);
+    for &(v, t) in &dst_q {
+        let orow = out.row_mut(v);
+        for (o, &x) in orow.iter_mut().zip(&w[t * d..(t + 1) * d]) {
+            *o += sign * x;
+        }
+    }
+}
+
+fn collect_component(
+    tree: &WeightedTree,
+    ch: &[Vec<usize>],
+    start: usize,
+    removed: &[bool],
+) -> Vec<usize> {
+    let mut comp = Vec::new();
+    let mut stack = vec![start];
+    let mut seen = std::collections::HashSet::new();
+    seen.insert(start);
+    while let Some(v) = stack.pop() {
+        comp.push(v);
+        // Neighbors in the tree: parent + children.
+        if v != tree.root {
+            let p = tree.parent[v];
+            if !removed[p] && seen.insert(p) {
+                stack.push(p);
+            }
+        }
+        for &c in &ch[v] {
+            if !removed[c] && seen.insert(c) {
+                stack.push(c);
+            }
+        }
+    }
+    comp
+}
+
+fn find_centroid(
+    tree: &WeightedTree,
+    ch: &[Vec<usize>],
+    comp: &[usize],
+    removed: &[bool],
+    _scratch: &mut [usize],
+) -> usize {
+    let total = comp.len();
+    let in_comp: std::collections::HashSet<usize> = comp.iter().copied().collect();
+    // Subtree sizes within the component via iterative DFS from comp[0].
+    let root = comp[0];
+    let mut size: std::collections::HashMap<usize, usize> = std::collections::HashMap::new();
+    let mut order = Vec::new();
+    let mut stack = vec![(root, usize::MAX)];
+    let mut parent_in: std::collections::HashMap<usize, usize> = std::collections::HashMap::new();
+    let mut seen = std::collections::HashSet::new();
+    seen.insert(root);
+    while let Some((v, p)) = stack.pop() {
+        order.push(v);
+        if p != usize::MAX {
+            parent_in.insert(v, p);
+        }
+        let mut nbrs: Vec<usize> = ch[v].clone();
+        if v != tree.root {
+            nbrs.push(tree.parent[v]);
+        }
+        for u in nbrs {
+            if u != p && !removed[u] && in_comp.contains(&u) && seen.insert(u) {
+                stack.push((u, v));
+            }
+        }
+    }
+    for &v in order.iter().rev() {
+        let s = 1 + {
+            // children in DFS = nodes whose parent_in is v
+            0
+        };
+        size.insert(v, s);
+    }
+    // Accumulate child sizes.
+    for &v in order.iter().rev() {
+        if let Some(&p) = parent_in.get(&v) {
+            let sv = *size.get(&v).unwrap();
+            *size.get_mut(&p).unwrap() += sv;
+        }
+    }
+    // Centroid: max component after removal ≤ total/2.
+    let mut best = (usize::MAX, root);
+    for &v in &order {
+        let mut largest = total - size[&v];
+        // Children in DFS tree: need their sizes; recompute by scanning
+        // neighbors (cheap: degree-bounded).
+        let mut nbrs: Vec<usize> = ch[v].clone();
+        if v != tree.root {
+            nbrs.push(tree.parent[v]);
+        }
+        for u in nbrs {
+            if parent_in.get(&u) == Some(&v) {
+                largest = largest.max(size[&u]);
+            }
+        }
+        if largest < best.0 {
+            best = (largest, v);
+        }
+    }
+    best.1
+}
+
+/// Distances from `center` to all nodes of its component (tree edges,
+/// respecting removals).
+fn component_distances(
+    tree: &WeightedTree,
+    ch: &[Vec<usize>],
+    center: usize,
+    removed: &[bool],
+) -> Vec<(usize, f64)> {
+    let mut out = Vec::new();
+    let mut stack = vec![(center, 0.0)];
+    let mut seen = std::collections::HashSet::new();
+    seen.insert(center);
+    while let Some((v, dv)) = stack.pop() {
+        out.push((v, dv));
+        let mut nbrs: Vec<(usize, f64)> =
+            ch[v].iter().map(|&c| (c, tree.weight[c])).collect();
+        if v != tree.root {
+            nbrs.push((tree.parent[v], tree.weight[v]));
+        }
+        for (u, w) in nbrs {
+            if !removed[u] && seen.insert(u) {
+                stack.push((u, dv + w));
+            }
+        }
+    }
+    out
+}
+
+/// First tree-hop from `center` toward `v` (branch id for the overcount
+/// correction).
+fn first_hop(
+    tree: &WeightedTree,
+    _ch: &[Vec<usize>],
+    center: usize,
+    v: usize,
+    removed: &[bool],
+    _dist: &[(usize, f64)],
+) -> usize {
+    // Walk up from v toward the component; the node just before reaching
+    // `center` on the tree path is the branch. Paths in trees are unique;
+    // climb from v and from center to their LCA-ish meeting point. Since
+    // components are connected subtrees, walking v→root until hitting
+    // center works when center is an ancestor; otherwise the branch is
+    // the child of center on the path, found from the center side.
+    let mut cur = v;
+    let mut prev = v;
+    let mut guard = 0;
+    while cur != center {
+        prev = cur;
+        if cur == tree.root {
+            break;
+        }
+        let p = tree.parent[cur];
+        if removed[p] {
+            break;
+        }
+        cur = p;
+        guard += 1;
+        if guard > tree.len() {
+            break;
+        }
+    }
+    if cur == center {
+        prev
+    } else {
+        // center is below v: branch is the parent side; use the parent of
+        // center as the branch id.
+        tree.parent[center]
+    }
+}
+
+/// Ensemble-of-trees integrator (Appendix B): averages exact tree GFIs
+/// over `k` sampled trees.
+pub struct TreeEnsembleIntegrator {
+    trees: Vec<WeightedTree>,
+    lambda: f64,
+    name: String,
+}
+
+/// Which tree distribution to sample.
+#[derive(Clone, Copy, Debug)]
+pub enum TreeKind {
+    Mst,
+    Bartal,
+    Frt,
+}
+
+impl TreeEnsembleIntegrator {
+    pub fn new(g: &CsrGraph, kind: TreeKind, k: usize, lambda: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let trees: Vec<WeightedTree> = (0..k.max(1))
+            .map(|_| match kind {
+                TreeKind::Mst => mst(g),
+                TreeKind::Bartal => bartal_tree(g, &mut rng),
+                TreeKind::Frt => frt_tree(g, &mut rng),
+            })
+            .collect();
+        let name = match kind {
+            TreeKind::Mst => format!("T-MST-{k}"),
+            TreeKind::Bartal => format!("T-Bart-{k}"),
+            TreeKind::Frt => format!("T-FRT-{k}"),
+        };
+        TreeEnsembleIntegrator { trees, lambda, name }
+    }
+}
+
+impl FieldIntegrator for TreeEnsembleIntegrator {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+    fn len(&self) -> usize {
+        self.trees[0].n_original
+    }
+    fn apply(&self, field: &Mat) -> Mat {
+        let outs: Vec<Mat> = crate::util::par::par_map(self.trees.len(), |t| {
+            tree_gfi_exp(&self.trees[t], self.lambda, field)
+        });
+        let mut acc = Mat::zeros(field.rows, field.cols);
+        for o in &outs {
+            acc.add_assign(o);
+        }
+        acc.scale(1.0 / self.trees.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::build::mst;
+    use super::*;
+    use crate::mesh::grid_mesh;
+    use crate::util::stats::rel_err;
+
+    /// Brute-force tree GFI oracle.
+    fn naive_tree_gfi(tree: &WeightedTree, f: &KernelFn, field: &Mat) -> Mat {
+        let n = tree.n_original;
+        let d = field.cols;
+        let mut out = Mat::zeros(n, d);
+        for v in 0..n {
+            for w in 0..n {
+                let dist = tree.dist(v, w);
+                let fv = if dist.is_finite() { f.eval(dist) } else { 0.0 };
+                for k in 0..d {
+                    out[(v, k)] += fv * field[(w, k)];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn exp_dp_matches_naive_on_mst() {
+        let g = grid_mesh(6, 5).to_graph();
+        let tree = mst(&g);
+        let lambda = 1.3;
+        let mut rng = Rng::new(1);
+        let field = Mat::from_vec(g.n, 2, (0..g.n * 2).map(|_| rng.gaussian()).collect());
+        let fast = tree_gfi_exp(&tree, lambda, &field);
+        let slow = naive_tree_gfi(&tree, &KernelFn::ExpNeg(lambda), &field);
+        let e = rel_err(&fast.data, &slow.data);
+        assert!(e < 1e-10, "exp DP mismatch: {e}");
+    }
+
+    #[test]
+    fn exp_dp_matches_naive_on_frt_with_virtual_nodes() {
+        let g = grid_mesh(5, 4).to_graph();
+        let mut rng = Rng::new(2);
+        let tree = frt_tree(&g, &mut rng);
+        let field = Mat::from_vec(g.n, 3, (0..g.n * 3).map(|_| rng.gaussian()).collect());
+        let fast = tree_gfi_exp(&tree, 0.8, &field);
+        let slow = naive_tree_gfi(&tree, &KernelFn::ExpNeg(0.8), &field);
+        let e = rel_err(&fast.data, &slow.data);
+        assert!(e < 1e-10, "exp DP mismatch on FRT: {e}");
+    }
+
+    #[test]
+    fn general_f_matches_naive() {
+        let g = grid_mesh(5, 5).to_graph();
+        let tree = mst(&g);
+        let f = KernelFn::GaussianSq(0.7);
+        let mut rng = Rng::new(3);
+        let field = Mat::from_vec(g.n, 2, (0..g.n * 2).map(|_| rng.gaussian()).collect());
+        let fast = tree_gfi_general(&tree, &f, 1e-4, &field);
+        let slow = naive_tree_gfi(&tree, &f, &field);
+        let e = rel_err(&fast.data, &slow.data);
+        assert!(e < 1e-3, "general-f centroid mismatch: {e}");
+    }
+
+    #[test]
+    fn general_f_agrees_with_exp_dp() {
+        let g = grid_mesh(4, 6).to_graph();
+        let tree = mst(&g);
+        let lam = 1.1;
+        let mut rng = Rng::new(4);
+        let field = Mat::from_vec(g.n, 1, (0..g.n).map(|_| rng.gaussian()).collect());
+        let a = tree_gfi_exp(&tree, lam, &field);
+        let b = tree_gfi_general(&tree, &KernelFn::ExpNeg(lam), 1e-4, &field);
+        let e = rel_err(&b.data, &a.data);
+        assert!(e < 1e-3, "centroid vs DP: {e}");
+    }
+
+    #[test]
+    fn ensemble_approximates_graph_integral() {
+        let g = grid_mesh(8, 8).to_graph();
+        let lam = 1.0;
+        let ens = TreeEnsembleIntegrator::new(&g, TreeKind::Bartal, 8, lam, 5);
+        let bf = crate::integrators::bf::BruteForceSp::new(&g, &KernelFn::ExpNeg(lam));
+        let mut rng = Rng::new(6);
+        let field = Mat::from_vec(g.n, 1, (0..g.n).map(|_| rng.uniform()).collect());
+        let approx = ens.apply(&field);
+        let exact = bf.apply(&field);
+        // Tree metrics systematically *overestimate* distances, shrinking
+        // magnitudes (the paper grid-searches λ per method to compensate).
+        // The scale-invariant signal — the direction of the integral
+        // field — must still align well.
+        let dot: f64 = approx.data.iter().zip(&exact.data).map(|(a, b)| a * b).sum();
+        let na = approx.data.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let nb = exact.data.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let cos = dot / (na * nb);
+        assert!(cos > 0.9, "ensemble direction cosine {cos}");
+    }
+}

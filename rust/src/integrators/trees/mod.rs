@@ -1,0 +1,20 @@
+//! Low-distortion tree integrators (paper §3.1 baselines + Appendix B).
+//!
+//! A weighted graph metric is approximated by (a distribution over) trees;
+//! on a tree, GFI with `f(x) = exp(-λx)` is **exact and O(N·d)** by a
+//! two-pass dynamic program, and arbitrary `f` costs `O(N log² N)` by
+//! centroid decomposition + Hankel-FFT (same machinery as SF).
+//!
+//! * [`mst`] — minimum spanning tree (Prim), the naive embedding.
+//! * [`bartal_tree`] — Bartal (1996) low-diameter randomized decomposition,
+//!   expected distortion `O(log² N)`.
+//! * [`frt_tree`] — Fakcharoenphol–Rao–Talwar (2004) hierarchical cut
+//!   decomposition, optimal `O(log N)` expected distortion.
+//! * [`TreeEnsembleIntegrator`] — averages the integrals over `k`
+//!   independently sampled trees (paper Appendix B inference formula).
+
+mod build;
+mod integrate;
+
+pub use build::{bartal_tree, frt_tree, mst, WeightedTree};
+pub use integrate::{tree_gfi_exp, tree_gfi_general, TreeEnsembleIntegrator, TreeKind};

@@ -1,0 +1,36 @@
+//! # gfi — Efficient Graph Field Integrators Meet Point Clouds
+//!
+//! Production reproduction of Choromanski et al., ICML 2023: sub-quadratic
+//! graph-field integration (`i(v) = Σ_w K(w,v) F(w)`) on point clouds via
+//! **SeparatorFactorization** (mesh graphs, shortest-path kernels) and
+//! **RFDiffusion** (ε-NN graphs, diffusion kernels), embedded in a
+//! three-layer Rust + JAX + Pallas serving stack:
+//!
+//! * L3 (this crate): coordinator — routing, batching, integrator caching,
+//!   metrics, and the pure-Rust combinatorial integrators.
+//! * L2 (python/compile/model.py): JAX RFD pipeline, AOT-lowered to HLO.
+//! * L1 (python/compile/kernels/): Pallas random-feature kernel.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index.
+
+pub mod classify;
+pub mod coordinator;
+pub mod datasets;
+pub mod fft;
+pub mod graph;
+pub mod linalg;
+pub mod mesh;
+pub mod pointcloud;
+pub mod integrators;
+pub mod apps;
+pub mod gw;
+pub mod ot;
+pub mod repro;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate version string.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

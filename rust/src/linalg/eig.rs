@@ -1,0 +1,277 @@
+//! Symmetric eigensolvers.
+//!
+//! * [`eigh_jacobi`] — cyclic Jacobi rotations; robust, used for small
+//!   matrices (the 4m×4m cores in RFD's low-rank eigen extraction, Lanczos
+//!   tridiagonal systems via the dense path in tests).
+//! * [`eigh_tridiagonal`] — Householder tridiagonalization + implicit QL
+//!   with Wilkinson shifts; `O(n³)` with a small constant, used for the
+//!   brute-force spectral-classification baseline (Table 4) where `n` is a
+//!   few thousand.
+
+use super::Mat;
+
+/// Eigendecomposition result: `a ≈ vectors * diag(values) * vectorsᵀ`,
+/// eigenvalues ascending, eigenvectors in the *columns* of `vectors`.
+#[derive(Clone, Debug)]
+pub struct EighResult {
+    pub values: Vec<f64>,
+    pub vectors: Mat,
+}
+
+/// Cyclic Jacobi eigendecomposition for symmetric matrices.
+pub fn eigh_jacobi(a: &Mat) -> EighResult {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-13 * (1.0 + m.norm_fro()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q of m.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    let vals: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    idx.sort_by(|&i, &j| vals[i].partial_cmp(&vals[j]).unwrap());
+    let values: Vec<f64> = idx.iter().map(|&i| vals[i]).collect();
+    let mut vectors = Mat::zeros(n, n);
+    for (newc, &oldc) in idx.iter().enumerate() {
+        for r in 0..n {
+            vectors[(r, newc)] = v[(r, oldc)];
+        }
+    }
+    EighResult { values, vectors }
+}
+
+/// Householder tridiagonalization followed by implicit-shift QL.
+/// Eigenvalues only (no vectors) — enough for the spectral-feature
+/// classification baseline. Returns eigenvalues ascending.
+pub fn eigh_tridiagonal(a: &Mat) -> Vec<f64> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    if n == 0 {
+        return vec![];
+    }
+    // --- Householder reduction to tridiagonal (d = diag, e = subdiag). ---
+    let mut m = a.clone();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    for i in (1..n).rev() {
+        let l = i; // columns 0..l of row i participate
+        let mut h = 0.0;
+        if l > 1 {
+            let scale: f64 = (0..l).map(|k| m[(i, k)].abs()).sum();
+            if scale == 0.0 {
+                e[i] = m[(i, l - 1)];
+            } else {
+                for k in 0..l {
+                    m[(i, k)] /= scale;
+                    h += m[(i, k)] * m[(i, k)];
+                }
+                let mut f = m[(i, l - 1)];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                m[(i, l - 1)] = f - g;
+                f = 0.0;
+                for j in 0..l {
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += m[(j, k)] * m[(i, k)];
+                    }
+                    for k in (j + 1)..l {
+                        g += m[(k, j)] * m[(i, k)];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * m[(i, j)];
+                }
+                let hh = f / (h + h);
+                for j in 0..l {
+                    let fij = m[(i, j)];
+                    e[j] -= hh * fij;
+                    let gj = e[j];
+                    for k in 0..=j {
+                        let delta = fij * e[k] + gj * m[(i, k)];
+                        m[(j, k)] -= delta;
+                    }
+                }
+            }
+        } else {
+            e[i] = m[(i, l - 1)];
+        }
+        d[i] = h;
+    }
+    e[0] = 0.0;
+    for i in 0..n {
+        d[i] = m[(i, i)];
+    }
+
+    // --- Implicit QL with Wilkinson shifts on (d, e). ---
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find a small subdiagonal element.
+            let mut mle = n - 1;
+            for mm in l..(n - 1) {
+                let dd = d[mm].abs() + d[mm + 1].abs();
+                if e[mm].abs() <= f64::EPSILON * dd {
+                    mle = mm;
+                    break;
+                }
+            }
+            if mle == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter < 80, "QL failed to converge");
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = (g * g + 1.0).sqrt();
+            g = d[mle] - d[l] + e[l] / (g + if g >= 0.0 { r } else { -r });
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            for i in (l..mle).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = (f * f + g * g).sqrt();
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[mle] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                f = 0.0;
+                let _ = f;
+            }
+            if r == 0.0 && mle > l + 1 {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[mle] = 0.0;
+        }
+    }
+    d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_sym(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.gaussian();
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn jacobi_reconstructs() {
+        let a = rand_sym(10, 5);
+        let EighResult { values, vectors } = eigh_jacobi(&a);
+        let lam = Mat::from_diag(&values);
+        let recon = vectors.matmul(&lam).matmul(&vectors.transpose());
+        for (x, y) in recon.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn jacobi_orthonormal_vectors() {
+        let a = rand_sym(8, 6);
+        let r = eigh_jacobi(&a);
+        let g = r.vectors.t_matmul(&r.vectors);
+        for i in 0..8 {
+            for j in 0..8 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((g[(i, j)] - want).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn tridiagonal_matches_jacobi() {
+        let a = rand_sym(30, 7);
+        let v1 = eigh_jacobi(&a).values;
+        let v2 = eigh_tridiagonal(&a);
+        for (x, y) in v1.iter().zip(&v2) {
+            assert!((x - y).abs() < 1e-8, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn known_eigenvalues() {
+        // [[2,1],[1,2]] has eigenvalues 1, 3.
+        let a = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let v = eigh_jacobi(&a).values;
+        assert!((v[0] - 1.0).abs() < 1e-12 && (v[1] - 3.0).abs() < 1e-12);
+        let t = eigh_tridiagonal(&a);
+        assert!((t[0] - 1.0).abs() < 1e-12 && (t[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let a = rand_sym(16, 9);
+        let tr: f64 = a.diag().iter().sum();
+        let sum: f64 = eigh_tridiagonal(&a).iter().sum();
+        assert!((tr - sum).abs() < 1e-8);
+    }
+}

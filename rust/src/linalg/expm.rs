@@ -1,0 +1,168 @@
+//! Dense matrix exponentials.
+//!
+//! * [`expm_pade`] — scaling-and-squaring with the degree-13 Padé
+//!   approximant (Higham 2005/Al-Mohy–Higham 2010 constants). This is the
+//!   reference for the brute-force diffusion kernel `exp(ΛW_G)`.
+//! * [`expm_taylor`] — scaling-and-squaring with a truncated Taylor
+//!   polynomial, the dense baseline attributed to Bader et al. (2019) in
+//!   the paper's Fig. 4 comparison.
+
+use super::{lu_solve_inplace, Mat};
+
+/// θ_13 from Higham's 2005 analysis: ‖A‖₁ below this needs no scaling for
+/// the degree-13 Padé approximant.
+const THETA_13: f64 = 5.371920351148152;
+
+/// Padé degree-13 scaling-and-squaring `exp(A)`.
+pub fn expm_pade(a: &Mat) -> Mat {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let norm = a.norm1();
+    let s = if norm > THETA_13 {
+        ((norm / THETA_13).log2().ceil() as i32).max(0)
+    } else {
+        0
+    };
+    let a_s = a.scale(0.5f64.powi(s));
+
+    // Padé(13) coefficients.
+    const B: [f64; 14] = [
+        64764752532480000.0,
+        32382376266240000.0,
+        7771770303897600.0,
+        1187353796428800.0,
+        129060195264000.0,
+        10559470521600.0,
+        670442572800.0,
+        33522128640.0,
+        1323241920.0,
+        40840800.0,
+        960960.0,
+        16380.0,
+        182.0,
+        1.0,
+    ];
+
+    let a2 = a_s.matmul(&a_s);
+    let a4 = a2.matmul(&a2);
+    let a6 = a4.matmul(&a2);
+    let eye = Mat::eye(n);
+
+    // U = A * (A6*(b13*A6 + b11*A4 + b9*A2) + b7*A6 + b5*A4 + b3*A2 + b1*I)
+    let mut inner = a6.scale(B[13]);
+    inner.axpy(B[11], &a4);
+    inner.axpy(B[9], &a2);
+    let mut u = a6.matmul(&inner);
+    u.axpy(B[7], &a6);
+    u.axpy(B[5], &a4);
+    u.axpy(B[3], &a2);
+    u.axpy(B[1], &eye);
+    let u = a_s.matmul(&u);
+
+    // V = A6*(b12*A6 + b10*A4 + b8*A2) + b6*A6 + b4*A4 + b2*A2 + b0*I
+    let mut inner_v = a6.scale(B[12]);
+    inner_v.axpy(B[10], &a4);
+    inner_v.axpy(B[8], &a2);
+    let mut v = a6.matmul(&inner_v);
+    v.axpy(B[6], &a6);
+    v.axpy(B[4], &a4);
+    v.axpy(B[2], &a2);
+    v.axpy(B[0], &eye);
+
+    // exp(A_s) ≈ (V-U)⁻¹ (V+U)
+    let num = v.add(&u);
+    let den = v.sub(&u);
+    let mut e = lu_solve_inplace(&den, &num);
+
+    for _ in 0..s {
+        e = e.matmul(&e);
+    }
+    e
+}
+
+/// Taylor-polynomial scaling-and-squaring `exp(A)` (Bader-style baseline).
+/// Degree is chosen so that the scaled norm keeps the truncation error
+/// below ~1e-12 for the benchmark regimes.
+pub fn expm_taylor(a: &Mat) -> Mat {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let norm = a.norm1();
+    // Scale so ‖A/2^s‖ ≤ 1, then a degree-18 Taylor polynomial is ample.
+    let s = if norm > 1.0 { (norm.log2().ceil() as i32).max(0) } else { 0 };
+    let a_s = a.scale(0.5f64.powi(s));
+    let mut term = Mat::eye(n);
+    let mut sum = Mat::eye(n);
+    for k in 1..=18usize {
+        term = term.matmul(&a_s).scale(1.0 / k as f64);
+        sum.add_assign(&term);
+        if term.norm_max() < 1e-16 * sum.norm_max() {
+            break;
+        }
+    }
+    let mut e = sum;
+    for _ in 0..s {
+        e = e.matmul(&e);
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn approx(a: &Mat, b: &Mat, tol: f64) {
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn expm_zero_is_identity() {
+        let e = expm_pade(&Mat::zeros(5, 5));
+        approx(&e, &Mat::eye(5), 1e-14);
+    }
+
+    #[test]
+    fn expm_diagonal() {
+        let a = Mat::from_diag(&[1.0, -2.0, 0.5]);
+        let e = expm_pade(&a);
+        let want = Mat::from_diag(&[1f64.exp(), (-2f64).exp(), 0.5f64.exp()]);
+        approx(&e, &want, 1e-12);
+    }
+
+    #[test]
+    fn expm_nilpotent() {
+        // exp([[0,1],[0,0]]) = [[1,1],[0,1]]
+        let a = Mat::from_rows(&[&[0.0, 1.0], &[0.0, 0.0]]);
+        approx(&expm_pade(&a), &Mat::from_rows(&[&[1.0, 1.0], &[0.0, 1.0]]), 1e-13);
+    }
+
+    #[test]
+    fn pade_vs_taylor_random_symmetric() {
+        let mut rng = Rng::new(3);
+        let n = 12;
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.gaussian();
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        let p = expm_pade(&a);
+        let t = expm_taylor(&a);
+        approx(&p, &t, 1e-8 * p.norm_max().max(1.0));
+    }
+
+    #[test]
+    fn expm_additivity_commuting() {
+        // exp(2A) == exp(A)^2 (A commutes with itself).
+        let mut rng = Rng::new(4);
+        let n = 8;
+        let a = Mat::from_vec(n, n, (0..n * n).map(|_| 0.3 * rng.gaussian()).collect());
+        let e1 = expm_pade(&a.scale(2.0));
+        let e2 = expm_pade(&a);
+        approx(&e1, &e2.matmul(&e2), 1e-9 * e1.norm_max().max(1.0));
+    }
+}

@@ -1,0 +1,374 @@
+//! Row-major dense matrix with the arithmetic used across the library.
+
+use crate::util::par;
+use std::ops::{Index, IndexMut};
+
+/// Row-major dense `f64` matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c);
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    /// Column vector from a slice.
+    pub fn col_vec(xs: &[f64]) -> Self {
+        Mat { rows: xs.len(), cols: 1, data: xs.to_vec() }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f64> {
+        (0..self.rows).map(|r| self[(r, c)]).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Matrix product `self * rhs`, parallelized over row blocks with an
+    /// ikj inner ordering (streams `rhs` rows; no transpose needed).
+    pub fn matmul(&self, rhs: &Mat) -> Mat {
+        assert_eq!(self.cols, rhs.rows, "matmul dims {}x{} * {}x{}", self.rows, self.cols, rhs.rows, rhs.cols);
+        let (n, k, m) = (self.rows, self.cols, rhs.cols);
+        let mut out = Mat::zeros(n, m);
+        let lhs = &self.data;
+        let r = &rhs.data;
+        par::par_rows(&mut out.data, m, |i, orow| {
+            let lrow = &lhs[i * k..(i + 1) * k];
+            for (kk, &a) in lrow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let rrow = &r[kk * m..(kk + 1) * m];
+                for (o, &b) in orow.iter_mut().zip(rrow) {
+                    *o += a * b;
+                }
+            }
+        });
+        out
+    }
+
+    /// `self * v` for a vector.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|i| {
+                self.row(i).iter().zip(v).map(|(a, b)| a * b).sum::<f64>()
+            })
+            .collect()
+    }
+
+    /// `selfᵀ * v` without forming the transpose.
+    pub fn matvec_t(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, v.len());
+        let mut out = vec![0.0; self.cols];
+        for (i, &vi) in v.iter().enumerate() {
+            if vi == 0.0 {
+                continue;
+            }
+            for (o, &a) in out.iter_mut().zip(self.row(i)) {
+                *o += vi * a;
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ * rhs` without forming the transpose (thin Gram products in
+    /// RFD: `BᵀA`, `Bᵀx`).
+    pub fn t_matmul(&self, rhs: &Mat) -> Mat {
+        assert_eq!(self.rows, rhs.rows);
+        let (k, n, m) = (self.rows, self.cols, rhs.cols);
+        let mut out = Mat::zeros(n, m);
+        // Accumulate outer products row by row; parallel over chunks with
+        // per-thread partial sums to avoid contention.
+        let nt = par::num_threads();
+        let chunk = k.div_ceil(nt).max(1);
+        let partials: Vec<Mat> = par::par_map(k.div_ceil(chunk), |t| {
+            let mut acc = Mat::zeros(n, m);
+            let lo = t * chunk;
+            let hi = (lo + chunk).min(k);
+            for r in lo..hi {
+                let a = self.row(r);
+                let b = rhs.row(r);
+                for (i, &ai) in a.iter().enumerate() {
+                    if ai == 0.0 {
+                        continue;
+                    }
+                    let arow = &mut acc.data[i * m..(i + 1) * m];
+                    for (o, &bj) in arow.iter_mut().zip(b) {
+                        *o += ai * bj;
+                    }
+                }
+            }
+            acc
+        });
+        for p in partials {
+            for (o, x) in out.data.iter_mut().zip(p.data) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    pub fn scale(&self, a: f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| a * x).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Maximum absolute column sum (induced 1-norm).
+    pub fn norm1(&self) -> f64 {
+        let mut sums = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            for (s, &x) in sums.iter_mut().zip(self.row(r)) {
+                *s += x.abs();
+            }
+        }
+        sums.into_iter().fold(0.0, f64::max)
+    }
+
+    /// Maximum absolute row sum (induced ∞-norm).
+    pub fn norm_inf(&self) -> f64 {
+        (0..self.rows)
+            .map(|r| self.row(r).iter().map(|x| x.abs()).sum::<f64>())
+            .fold(0.0, f64::max)
+    }
+
+    /// Frobenius norm.
+    pub fn norm_fro(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Maximum absolute entry.
+    pub fn norm_max(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, x| m.max(x.abs()))
+    }
+
+    /// Hadamard (element-wise) product.
+    pub fn hadamard(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect(),
+        }
+    }
+
+    /// Sums each row into a vector (length `rows`).
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.rows).map(|r| self.row(r).iter().sum()).collect()
+    }
+
+    /// Sums each column into a vector (length `cols`).
+    pub fn col_sums(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            for (o, &x) in out.iter_mut().zip(self.row(r)) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    /// Extracts the main diagonal.
+    pub fn diag(&self) -> Vec<f64> {
+        (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).collect()
+    }
+
+    /// Builds a diagonal matrix from a vector.
+    pub fn from_diag(d: &[f64]) -> Mat {
+        let mut m = Mat::zeros(d.len(), d.len());
+        for (i, &x) in d.iter().enumerate() {
+            m[(i, i)] = x;
+        }
+        m
+    }
+
+    /// Scales row `i` by `d[i]` (i.e. `diag(d) * self`) in place.
+    pub fn scale_rows(&mut self, d: &[f64]) {
+        assert_eq!(d.len(), self.rows);
+        for (r, &s) in d.iter().enumerate() {
+            for x in self.row_mut(r) {
+                *x *= s;
+            }
+        }
+    }
+
+    /// Scales column `j` by `d[j]` (i.e. `self * diag(d)`) in place.
+    pub fn scale_cols(&mut self, d: &[f64]) {
+        assert_eq!(d.len(), self.cols);
+        for r in 0..self.rows {
+            for (x, &s) in self.row_mut(r).iter_mut().zip(d) {
+                *x *= s;
+            }
+        }
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: &Mat, b: &Mat, tol: f64) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        approx(&c, &Mat::from_rows(&[&[19.0, 22.0], &[43.0, 50.0]]), 1e-12);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let a = Mat::from_vec(17, 5, (0..85).map(|_| rng.gaussian()).collect());
+        let b = Mat::from_vec(17, 7, (0..119).map(|_| rng.gaussian()).collect());
+        approx(&a.t_matmul(&b), &a.transpose().matmul(&b), 1e-10);
+    }
+
+    #[test]
+    fn matvec_and_t() {
+        let a = Mat::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        assert_eq!(a.matvec(&[1.0, 1.0, 1.0]), vec![6.0, 15.0]);
+        assert_eq!(a.matvec_t(&[1.0, 1.0]), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        let a = Mat::from_vec(13, 37, (0..481).map(|_| rng.gaussian()).collect());
+        approx(&a.transpose().transpose(), &a, 1e-15);
+    }
+
+    #[test]
+    fn norms() {
+        let a = Mat::from_rows(&[&[1.0, -2.0], &[-3.0, 4.0]]);
+        assert_eq!(a.norm1(), 6.0);
+        assert_eq!(a.norm_inf(), 7.0);
+        assert_eq!(a.norm_max(), 4.0);
+        assert!((a.norm_fro() - 30f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diag_scaling() {
+        let mut a = Mat::eye(3);
+        a.scale_rows(&[2.0, 3.0, 4.0]);
+        assert_eq!(a.diag(), vec![2.0, 3.0, 4.0]);
+        a.scale_cols(&[1.0, 0.5, 0.25]);
+        assert_eq!(a.diag(), vec![2.0, 1.5, 1.0]);
+    }
+
+    #[test]
+    fn row_col_sums() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(a.row_sums(), vec![3.0, 7.0]);
+        assert_eq!(a.col_sums(), vec![4.0, 6.0]);
+    }
+}

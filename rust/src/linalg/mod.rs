@@ -1,0 +1,18 @@
+//! Dense linear algebra substrate: row-major `f64` matrices with the
+//! operations the paper's algorithms need — blocked/parallel matmul,
+//! LU solves (RFD's `(BᵀA)⁻¹`), Padé `expm` (brute-force diffusion kernel,
+//! Bader/Taylor baselines), symmetric eigensolvers (Jacobi for small,
+//! Householder+QL for large; spectral classification), and thin QR
+//! (low-rank eigenvalue extraction à la Nakatsukasa).
+
+mod eig;
+mod expm;
+mod mat;
+mod qr;
+mod solve;
+
+pub use eig::{eigh_jacobi, eigh_tridiagonal, EighResult};
+pub use expm::{expm_pade, expm_taylor};
+pub use mat::Mat;
+pub use qr::thin_qr;
+pub use solve::{lu_factor, lu_solve_inplace, LuFactors};

@@ -1,0 +1,109 @@
+//! Thin QR via modified Gram–Schmidt (with re-orthogonalization), used by
+//! the low-rank symmetric eigenvalue extraction: for `C = [A B] ∈ R^{N×k}`
+//! (k ≪ N), `C = QR` reduces an N×N low-rank symmetric problem to a k×k
+//! dense one (Nakatsukasa 2019, as cited by the paper for Table 4).
+
+use super::Mat;
+
+/// Thin QR decomposition `a = q * r` with `q ∈ R^{n×k}` having orthonormal
+/// columns and `r ∈ R^{k×k}` upper triangular. Rank-deficient columns get a
+/// zero `r` diagonal and a zero `q` column (safe for the eigen use-case:
+/// they contribute nothing to `R J Rᵀ`).
+pub fn thin_qr(a: &Mat) -> (Mat, Mat) {
+    let (n, k) = (a.rows, a.cols);
+    let mut q = a.clone();
+    let mut r = Mat::zeros(k, k);
+    for j in 0..k {
+        // Two MGS passes for numerical orthogonality.
+        for _pass in 0..2 {
+            for i in 0..j {
+                let mut dot = 0.0;
+                for t in 0..n {
+                    dot += q[(t, i)] * q[(t, j)];
+                }
+                r[(i, j)] += dot;
+                for t in 0..n {
+                    let qi = q[(t, i)];
+                    q[(t, j)] -= dot * qi;
+                }
+            }
+        }
+        let mut norm = 0.0;
+        for t in 0..n {
+            norm += q[(t, j)] * q[(t, j)];
+        }
+        let norm = norm.sqrt();
+        r[(j, j)] = norm;
+        if norm > 1e-12 {
+            for t in 0..n {
+                q[(t, j)] /= norm;
+            }
+        } else {
+            for t in 0..n {
+                q[(t, j)] = 0.0;
+            }
+        }
+    }
+    (q, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(21);
+        let a = Mat::from_vec(40, 6, (0..240).map(|_| rng.gaussian()).collect());
+        let (q, r) = thin_qr(&a);
+        let recon = q.matmul(&r);
+        for (x, y) in recon.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn q_orthonormal() {
+        let mut rng = Rng::new(22);
+        let a = Mat::from_vec(50, 8, (0..400).map(|_| rng.gaussian()).collect());
+        let (q, _) = thin_qr(&a);
+        let g = q.t_matmul(&q);
+        for i in 0..8 {
+            for j in 0..8 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((g[(i, j)] - want).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn r_upper_triangular() {
+        let mut rng = Rng::new(23);
+        let a = Mat::from_vec(20, 5, (0..100).map(|_| rng.gaussian()).collect());
+        let (_, r) = thin_qr(&a);
+        for i in 0..5 {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_safe() {
+        // Third column = first + second.
+        let mut a = Mat::zeros(10, 3);
+        let mut rng = Rng::new(24);
+        for t in 0..10 {
+            a[(t, 0)] = rng.gaussian();
+            a[(t, 1)] = rng.gaussian();
+            a[(t, 2)] = a[(t, 0)] + a[(t, 1)];
+        }
+        let (q, r) = thin_qr(&a);
+        assert!(r[(2, 2)].abs() < 1e-10);
+        let recon = q.matmul(&r);
+        for (x, y) in recon.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+}

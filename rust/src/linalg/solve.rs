@@ -1,0 +1,152 @@
+//! LU factorization with partial pivoting and the solves built on it.
+//! Used by RFD's Woodbury step (`(BᵀA)⁻¹ Bᵀx`, a 2m×2m system) and by the
+//! Padé `expm` denominator solve.
+
+use super::Mat;
+
+/// Packed LU factors (`L` unit-lower + `U` upper in one matrix) and the
+/// pivot permutation.
+#[derive(Clone, Debug)]
+pub struct LuFactors {
+    pub lu: Mat,
+    pub piv: Vec<usize>,
+    /// Smallest |pivot| encountered — a cheap conditioning signal.
+    pub min_pivot: f64,
+}
+
+/// Factorizes a square matrix. Returns `None` only for hard singularity
+/// (an exactly-zero pivot column); near-singular systems still factorize
+/// and report `min_pivot` so callers can ridge-regularize and retry.
+pub fn lu_factor(a: &Mat) -> Option<LuFactors> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut lu = a.clone();
+    let mut piv: Vec<usize> = (0..n).collect();
+    let mut min_pivot = f64::INFINITY;
+    for k in 0..n {
+        // Partial pivot.
+        let mut p = k;
+        let mut best = lu[(k, k)].abs();
+        for r in (k + 1)..n {
+            let v = lu[(r, k)].abs();
+            if v > best {
+                best = v;
+                p = r;
+            }
+        }
+        if best == 0.0 {
+            return None;
+        }
+        min_pivot = min_pivot.min(best);
+        if p != k {
+            piv.swap(k, p);
+            for c in 0..n {
+                let tmp = lu[(k, c)];
+                lu[(k, c)] = lu[(p, c)];
+                lu[(p, c)] = tmp;
+            }
+        }
+        let pivot = lu[(k, k)];
+        for r in (k + 1)..n {
+            let f = lu[(r, k)] / pivot;
+            lu[(r, k)] = f;
+            if f != 0.0 {
+                for c in (k + 1)..n {
+                    let ukc = lu[(k, c)];
+                    lu[(r, c)] -= f * ukc;
+                }
+            }
+        }
+    }
+    Some(LuFactors { lu, piv, min_pivot })
+}
+
+impl LuFactors {
+    /// Solves `A x = b` for one right-hand side.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows;
+        assert_eq!(b.len(), n);
+        let mut x: Vec<f64> = self.piv.iter().map(|&p| b[p]).collect();
+        // Forward substitution (unit lower).
+        for i in 0..n {
+            let mut s = x[i];
+            for k in 0..i {
+                s -= self.lu[(i, k)] * x[k];
+            }
+            x[i] = s;
+        }
+        // Back substitution.
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for k in (i + 1)..n {
+                s -= self.lu[(i, k)] * x[k];
+            }
+            x[i] = s / self.lu[(i, i)];
+        }
+        x
+    }
+
+    /// Solves `A X = B` column-by-column.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(b.rows, b.cols);
+        for c in 0..b.cols {
+            let col = b.col(c);
+            let x = self.solve(&col);
+            for (r, v) in x.into_iter().enumerate() {
+                out[(r, c)] = v;
+            }
+        }
+        out
+    }
+}
+
+/// Solves `A X = B` in one call (panics on hard-singular `A`).
+pub fn lu_solve_inplace(a: &Mat, b: &Mat) -> Mat {
+    lu_factor(a).expect("singular matrix in lu_solve").solve_mat(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solves_random_system() {
+        let mut rng = Rng::new(11);
+        let n = 24;
+        let a = Mat::from_vec(n, n, (0..n * n).map(|_| rng.gaussian()).collect());
+        let x_true: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let b = a.matvec(&x_true);
+        let x = lu_factor(&a).unwrap().solve(&b);
+        for (u, v) in x.iter().zip(&x_true) {
+            assert!((u - v).abs() < 1e-8, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn solve_mat_matches_matmul() {
+        let mut rng = Rng::new(12);
+        let n = 10;
+        let a = Mat::from_vec(n, n, (0..n * n).map(|_| rng.gaussian()).collect());
+        let x = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.gaussian()).collect());
+        let b = a.matmul(&x);
+        let x2 = lu_solve_inplace(&a, &b);
+        for (u, v) in x2.data.iter().zip(&x.data) {
+            assert!((u - v).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn detects_singular() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(lu_factor(&a).is_none());
+    }
+
+    #[test]
+    fn pivoting_handles_zero_diagonal() {
+        let a = Mat::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let f = lu_factor(&a).unwrap();
+        let x = f.solve(&[3.0, 5.0]);
+        assert!((x[0] - 5.0).abs() < 1e-12 && (x[1] - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,126 @@
+//! `repro` — the gfi CLI: serve the GFI coordinator, regenerate the
+//! paper's tables/figures, or run a one-shot integration.
+//!
+//! ```text
+//! repro serve [--addr 127.0.0.1:7878] [--artifacts artifacts]
+//! repro reproduce <experiment-id|all> [--quick]
+//! repro list
+//! repro selfcheck [--artifacts artifacts]
+//! ```
+//!
+//! (Hand-rolled arg parsing: the offline build has no clap.)
+
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn opt<'a>(args: &'a [String], name: &str, default: &'a str) -> &'a str {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+        .unwrap_or(default)
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("serve") => serve(args),
+        Some("reproduce") => {
+            let id = args
+                .get(1)
+                .filter(|a| !a.starts_with("--"))
+                .map(String::as_str)
+                .unwrap_or("all");
+            gfi::repro::run(id, flag(args, "--quick"))
+        }
+        Some("list") => {
+            gfi::repro::list();
+            Ok(())
+        }
+        Some("selfcheck") => selfcheck(args),
+        Some(other) => bail!("unknown command '{other}' (serve | reproduce | list | selfcheck)"),
+        None => {
+            println!(
+                "gfi {} — Efficient Graph Field Integrators Meet Point Clouds",
+                gfi::version()
+            );
+            println!("usage: repro <serve|reproduce|list|selfcheck> [options]");
+            gfi::repro::list();
+            Ok(())
+        }
+    }
+}
+
+fn serve(args: &[String]) -> Result<()> {
+    let addr = opt(args, "--addr", "127.0.0.1:7878");
+    let artifacts = opt(args, "--artifacts", "artifacts");
+    let dir = std::path::Path::new(artifacts);
+    let engine = Arc::new(gfi::coordinator::Engine::new(
+        dir.join("manifest.json").exists().then_some(dir),
+    ));
+    println!(
+        "gfi coordinator: pjrt={} (artifacts: {artifacts})",
+        engine.has_pjrt()
+    );
+    gfi::coordinator::server::serve(engine, addr, |a| {
+        println!("listening on {a} (JSON lines; send {{\"op\":\"shutdown\"}} to stop)");
+    })
+}
+
+/// Smoke check of the whole stack: SF + RFD on a small sphere, PJRT
+/// round-trip when artifacts exist.
+fn selfcheck(args: &[String]) -> Result<()> {
+    use gfi::integrators::FieldIntegrator;
+    let artifacts = opt(args, "--artifacts", "artifacts");
+    let mut mesh = gfi::mesh::icosphere(2);
+    mesh.normalize_unit_box();
+    let g = mesh.to_graph();
+    let n = g.n;
+    println!("mesh: icosphere(2), |V|={n}");
+    let mut rng = gfi::util::rng::Rng::new(1);
+    let field =
+        gfi::linalg::Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.gaussian()).collect());
+    let bf =
+        gfi::integrators::bf::BruteForceSp::new(&g, &gfi::integrators::KernelFn::ExpNeg(2.0));
+    let exact = bf.apply(&field);
+    let sf = gfi::integrators::sf::SeparatorFactorization::new(
+        &g,
+        gfi::integrators::sf::SfConfig {
+            kernel: gfi::integrators::KernelFn::ExpNeg(2.0),
+            ..Default::default()
+        },
+    );
+    let e_sf = gfi::util::stats::rel_err(&sf.apply(&field).data, &exact.data);
+    println!("SF vs BF rel err: {e_sf:.4}");
+    let pc = gfi::pointcloud::PointCloud::new(mesh.verts.clone());
+    let cfg = gfi::integrators::rfd::RfdConfig { num_features: 16, ..Default::default() };
+    let rfd = gfi::integrators::rfd::RfDiffusion::new(&pc, cfg.clone());
+    let rust_out = rfd.apply(&field);
+    println!("RFD pure-rust: ok ({} outputs)", rust_out.data.len());
+    let dir = std::path::Path::new(artifacts);
+    if dir.join("manifest.json").exists() {
+        let rt = gfi::runtime::PjrtRuntime::new(dir)?;
+        let (omegas, qscale) = gfi::integrators::rfd::sample_features(&cfg);
+        let pjrt_out = rt.rfd_apply(&pc.points, &omegas, &qscale, &field, cfg.lambda)?;
+        let e = gfi::util::stats::rel_err(&pjrt_out.data, &rust_out.data);
+        println!("RFD PJRT vs rust rel err: {e:.2e}");
+        if e > 1e-3 {
+            bail!("PJRT/rust mismatch");
+        }
+    } else {
+        println!("(artifacts missing — run `make artifacts` for the PJRT check)");
+    }
+    println!("selfcheck OK");
+    Ok(())
+}

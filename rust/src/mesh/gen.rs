@@ -1,0 +1,229 @@
+//! Procedural mesh generators — the Thingi10k substitute zoo (DESIGN.md
+//! §substitutions). The vertex-normal-prediction and barycenter
+//! experiments need meshes at a *ladder of sizes* with controlled topology;
+//! these generators provide: planar grids, genus-0 icospheres, genus-1
+//! tori, and a "supershape" family that produces organic, non-symmetric
+//! genus-0 meshes (stand-ins for Thingi10k's 3D-printed objects).
+
+use super::TriMesh;
+
+/// Named generator selection for the dataset ladder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MeshKind {
+    Grid,
+    Icosphere,
+    Torus,
+    Supershape,
+}
+
+/// Regular `nx × ny` planar grid mesh in the unit square (z = 0), each
+/// quad split into two triangles.
+pub fn grid_mesh(nx: usize, ny: usize) -> TriMesh {
+    assert!(nx >= 2 && ny >= 2);
+    let mut verts = Vec::with_capacity(nx * ny);
+    for j in 0..ny {
+        for i in 0..nx {
+            verts.push([i as f64 / (nx - 1) as f64, j as f64 / (ny - 1) as f64, 0.0]);
+        }
+    }
+    let mut faces = Vec::with_capacity(2 * (nx - 1) * (ny - 1));
+    let idx = |i: usize, j: usize| j * nx + i;
+    for j in 0..ny - 1 {
+        for i in 0..nx - 1 {
+            faces.push([idx(i, j), idx(i + 1, j), idx(i + 1, j + 1)]);
+            faces.push([idx(i, j), idx(i + 1, j + 1), idx(i, j + 1)]);
+        }
+    }
+    TriMesh { verts, faces }
+}
+
+/// Icosphere: icosahedron subdivided `subdiv` times, projected to the unit
+/// sphere. `V = 10·4^subdiv + 2`.
+pub fn icosphere(subdiv: usize) -> TriMesh {
+    // Icosahedron.
+    let phi = (1.0 + 5f64.sqrt()) / 2.0;
+    let mut verts: Vec<[f64; 3]> = vec![
+        [-1.0, phi, 0.0],
+        [1.0, phi, 0.0],
+        [-1.0, -phi, 0.0],
+        [1.0, -phi, 0.0],
+        [0.0, -1.0, phi],
+        [0.0, 1.0, phi],
+        [0.0, -1.0, -phi],
+        [0.0, 1.0, -phi],
+        [phi, 0.0, -1.0],
+        [phi, 0.0, 1.0],
+        [-phi, 0.0, -1.0],
+        [-phi, 0.0, 1.0],
+    ];
+    let mut faces: Vec<[usize; 3]> = vec![
+        [0, 11, 5],
+        [0, 5, 1],
+        [0, 1, 7],
+        [0, 7, 10],
+        [0, 10, 11],
+        [1, 5, 9],
+        [5, 11, 4],
+        [11, 10, 2],
+        [10, 7, 6],
+        [7, 1, 8],
+        [3, 9, 4],
+        [3, 4, 2],
+        [3, 2, 6],
+        [3, 6, 8],
+        [3, 8, 9],
+        [4, 9, 5],
+        [2, 4, 11],
+        [6, 2, 10],
+        [8, 6, 7],
+        [9, 8, 1],
+    ];
+    for _ in 0..subdiv {
+        let mut midpoint = std::collections::HashMap::new();
+        let mut new_faces = Vec::with_capacity(faces.len() * 4);
+        for f in &faces {
+            let mut mid = [0usize; 3];
+            for (k, (u, v)) in [(f[0], f[1]), (f[1], f[2]), (f[2], f[0])].into_iter().enumerate()
+            {
+                let key = (u.min(v), u.max(v));
+                mid[k] = *midpoint.entry(key).or_insert_with(|| {
+                    let a = verts[u];
+                    let b = verts[v];
+                    verts.push([
+                        (a[0] + b[0]) / 2.0,
+                        (a[1] + b[1]) / 2.0,
+                        (a[2] + b[2]) / 2.0,
+                    ]);
+                    verts.len() - 1
+                });
+            }
+            new_faces.push([f[0], mid[0], mid[2]]);
+            new_faces.push([f[1], mid[1], mid[0]]);
+            new_faces.push([f[2], mid[2], mid[1]]);
+            new_faces.push([mid[0], mid[1], mid[2]]);
+        }
+        faces = new_faces;
+    }
+    // Project onto the unit sphere.
+    for v in verts.iter_mut() {
+        let len = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt();
+        for k in 0..3 {
+            v[k] /= len;
+        }
+    }
+    TriMesh { verts, faces }
+}
+
+/// Torus with `nu × nv` vertices, major radius `rr`, minor radius `r`.
+pub fn torus(nu: usize, nv: usize, rr: f64, r: f64) -> TriMesh {
+    assert!(nu >= 3 && nv >= 3);
+    let mut verts = Vec::with_capacity(nu * nv);
+    for i in 0..nu {
+        let u = 2.0 * std::f64::consts::PI * i as f64 / nu as f64;
+        for j in 0..nv {
+            let v = 2.0 * std::f64::consts::PI * j as f64 / nv as f64;
+            verts.push([
+                (rr + r * v.cos()) * u.cos(),
+                (rr + r * v.cos()) * u.sin(),
+                r * v.sin(),
+            ]);
+        }
+    }
+    let idx = |i: usize, j: usize| (i % nu) * nv + (j % nv);
+    let mut faces = Vec::with_capacity(2 * nu * nv);
+    for i in 0..nu {
+        for j in 0..nv {
+            faces.push([idx(i, j), idx(i + 1, j), idx(i + 1, j + 1)]);
+            faces.push([idx(i, j), idx(i + 1, j + 1), idx(i, j + 1)]);
+        }
+    }
+    TriMesh { verts, faces }
+}
+
+/// Gielis "supershape" radius function.
+fn superformula(theta: f64, m: f64, n1: f64, n2: f64, n3: f64) -> f64 {
+    let a = (m * theta / 4.0).cos().abs().powf(n2);
+    let b = (m * theta / 4.0).sin().abs().powf(n3);
+    (a + b).powf(-1.0 / n1)
+}
+
+/// Organic genus-0 mesh from the 3D supershape (two superformulas over a
+/// lat-long sphere parameterization, then triangulated like a UV sphere).
+/// Different `(m1, m2)` lobes give visually distinct "3D-printed object"
+/// stand-ins; `nu × nv` controls the vertex count (≈ nu·nv − poles dup).
+pub fn supershape(nu: usize, nv: usize, m1: f64, m2: f64) -> TriMesh {
+    assert!(nu >= 4 && nv >= 4);
+    let mut verts = Vec::with_capacity(nu * nv);
+    for j in 0..nv {
+        // phi ∈ (−π/2, π/2), avoid exact poles to keep r finite.
+        let phi = -std::f64::consts::FRAC_PI_2
+            + std::f64::consts::PI * (j as f64 + 0.5) / nv as f64;
+        let r2 = superformula(phi, m2, 0.7, 0.3, 0.3).min(4.0);
+        for i in 0..nu {
+            let theta = -std::f64::consts::PI
+                + 2.0 * std::f64::consts::PI * i as f64 / nu as f64;
+            let r1 = superformula(theta, m1, 0.6, 0.4, 0.4).min(4.0);
+            verts.push([
+                r1 * theta.cos() * r2 * phi.cos(),
+                r1 * theta.sin() * r2 * phi.cos(),
+                r2 * phi.sin(),
+            ]);
+        }
+    }
+    // Two pole vertices close the surface.
+    let south = verts.len();
+    verts.push([0.0, 0.0, -superformula(-std::f64::consts::FRAC_PI_2, m2, 0.7, 0.3, 0.3).min(4.0)]);
+    let north = verts.len();
+    verts.push([0.0, 0.0, superformula(std::f64::consts::FRAC_PI_2, m2, 0.7, 0.3, 0.3).min(4.0)]);
+
+    let idx = |i: usize, j: usize| j * nu + (i % nu);
+    let mut faces = Vec::new();
+    for j in 0..nv - 1 {
+        for i in 0..nu {
+            faces.push([idx(i, j), idx(i + 1, j), idx(i + 1, j + 1)]);
+            faces.push([idx(i, j), idx(i + 1, j + 1), idx(i, j + 1)]);
+        }
+    }
+    for i in 0..nu {
+        faces.push([south, idx(i + 1, 0), idx(i, 0)]);
+        faces.push([north, idx(i, nv - 1), idx(i + 1, nv - 1)]);
+    }
+    TriMesh { verts, faces }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_counts() {
+        let m = grid_mesh(4, 3);
+        assert_eq!(m.num_verts(), 12);
+        assert_eq!(m.num_faces(), 2 * 3 * 2);
+        assert_eq!(m.euler_characteristic(), 1); // disc
+    }
+
+    #[test]
+    fn icosphere_counts() {
+        for s in 0..3 {
+            let m = icosphere(s);
+            assert_eq!(m.num_verts(), 10 * 4usize.pow(s as u32) + 2);
+            assert_eq!(m.num_faces(), 20 * 4usize.pow(s as u32));
+        }
+    }
+
+    #[test]
+    fn torus_counts() {
+        let m = torus(10, 6, 1.0, 0.3);
+        assert_eq!(m.num_verts(), 60);
+        assert_eq!(m.num_faces(), 120);
+    }
+
+    #[test]
+    fn supershape_closed_and_connected() {
+        let m = supershape(24, 16, 5.0, 3.0);
+        assert!(m.verts.iter().all(|v| v.iter().all(|x| x.is_finite())));
+        assert_eq!(m.to_graph().num_components(), 1);
+        assert_eq!(m.euler_characteristic(), 2); // closed genus 0
+    }
+}

@@ -1,0 +1,109 @@
+//! OFF mesh file I/O (the format Thingi10k tooling commonly exports to).
+//! Supports the ASCII `OFF` header, comments, and polygonal faces
+//! (fan-triangulated on load).
+
+use super::TriMesh;
+use anyhow::{bail, Context, Result};
+
+/// Parses an ASCII OFF document.
+pub fn parse_off(text: &str) -> Result<TriMesh> {
+    let mut tokens = text
+        .lines()
+        .map(|l| l.split('#').next().unwrap_or(""))
+        .flat_map(|l| l.split_whitespace())
+        .peekable();
+    let header = tokens.next().context("empty OFF file")?;
+    if header != "OFF" {
+        bail!("not an OFF file (header {header:?})");
+    }
+    let nv: usize = tokens.next().context("missing vertex count")?.parse()?;
+    let nf: usize = tokens.next().context("missing face count")?.parse()?;
+    let _ne: usize = tokens.next().context("missing edge count")?.parse()?;
+    let mut verts = Vec::with_capacity(nv);
+    for i in 0..nv {
+        let mut v = [0.0; 3];
+        for x in v.iter_mut() {
+            *x = tokens
+                .next()
+                .with_context(|| format!("truncated vertex {i}"))?
+                .parse()?;
+        }
+        verts.push(v);
+    }
+    let mut faces = Vec::with_capacity(nf);
+    for i in 0..nf {
+        let k: usize = tokens
+            .next()
+            .with_context(|| format!("truncated face {i}"))?
+            .parse()?;
+        if k < 3 {
+            bail!("face {i} has {k} < 3 vertices");
+        }
+        let mut poly = Vec::with_capacity(k);
+        for _ in 0..k {
+            let idx: usize = tokens
+                .next()
+                .with_context(|| format!("truncated face {i}"))?
+                .parse()?;
+            if idx >= nv {
+                bail!("face {i} references vertex {idx} >= {nv}");
+            }
+            poly.push(idx);
+        }
+        // Fan triangulation.
+        for t in 1..k - 1 {
+            faces.push([poly[0], poly[t], poly[t + 1]]);
+        }
+    }
+    Ok(TriMesh { verts, faces })
+}
+
+/// Serializes to ASCII OFF.
+pub fn write_off(mesh: &TriMesh) -> String {
+    let mut s = String::new();
+    s.push_str("OFF\n");
+    s.push_str(&format!("{} {} 0\n", mesh.num_verts(), mesh.num_faces()));
+    for v in &mesh.verts {
+        s.push_str(&format!("{} {} {}\n", v[0], v[1], v[2]));
+    }
+    for f in &mesh.faces {
+        s.push_str(&format!("3 {} {} {}\n", f[0], f[1], f[2]));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::icosphere;
+
+    #[test]
+    fn roundtrip() {
+        let m = icosphere(1);
+        let text = write_off(&m);
+        let m2 = parse_off(&text).unwrap();
+        assert_eq!(m.num_verts(), m2.num_verts());
+        assert_eq!(m.faces, m2.faces);
+    }
+
+    #[test]
+    fn quad_fan_triangulated() {
+        let src = "OFF\n4 1 0\n0 0 0\n1 0 0\n1 1 0\n0 1 0\n4 0 1 2 3\n";
+        let m = parse_off(src).unwrap();
+        assert_eq!(m.num_faces(), 2);
+    }
+
+    #[test]
+    fn comments_skipped() {
+        let src = "OFF # header\n# a comment\n3 1 0\n0 0 0\n1 0 0\n0 1 0\n3 0 1 2\n";
+        let m = parse_off(src).unwrap();
+        assert_eq!(m.num_verts(), 3);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_off("PLY\n").is_err());
+        assert!(parse_off("OFF\n3 1 0\n0 0 0\n").is_err());
+        assert!(parse_off("OFF\n3 1 0\n0 0 0\n1 0 0\n0 1 0\n3 0 1 9\n").is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! Triangle meshes: representation, differential quantities (vertex
+//! normals, vertex areas), conversion to the weighted mesh graph SF
+//! integrates over, procedural generators (the Thingi10k substitute zoo),
+//! and OFF file I/O.
+
+mod gen;
+mod io;
+
+pub use gen::{grid_mesh, icosphere, supershape, torus, MeshKind};
+pub use io::{parse_off, write_off};
+
+use crate::graph::CsrGraph;
+
+/// Indexed triangle mesh.
+#[derive(Clone, Debug)]
+pub struct TriMesh {
+    pub verts: Vec<[f64; 3]>,
+    pub faces: Vec<[usize; 3]>,
+}
+
+impl TriMesh {
+    pub fn num_verts(&self) -> usize {
+        self.verts.len()
+    }
+    pub fn num_faces(&self) -> usize {
+        self.faces.len()
+    }
+
+    /// Area-weighted vertex normals (normalized; degenerate vertices get
+    /// the zero vector).
+    pub fn vertex_normals(&self) -> Vec<[f64; 3]> {
+        let mut acc = vec![[0.0; 3]; self.verts.len()];
+        for f in &self.faces {
+            let [a, b, c] = *f;
+            let n = face_normal_scaled(self.verts[a], self.verts[b], self.verts[c]);
+            for &v in f {
+                for k in 0..3 {
+                    acc[v][k] += n[k];
+                }
+            }
+        }
+        for n in acc.iter_mut() {
+            let len = (n[0] * n[0] + n[1] * n[1] + n[2] * n[2]).sqrt();
+            if len > 1e-12 {
+                for k in 0..3 {
+                    n[k] /= len;
+                }
+            }
+        }
+        acc
+    }
+
+    /// Barycentric vertex areas: one third of the incident face areas
+    /// (the Solomon'15 `area weight` used by the barycenter algorithms).
+    pub fn vertex_areas(&self) -> Vec<f64> {
+        let mut areas = vec![0.0; self.verts.len()];
+        for f in &self.faces {
+            let [a, b, c] = *f;
+            let n = face_normal_scaled(self.verts[a], self.verts[b], self.verts[c]);
+            let fa = 0.5 * (n[0] * n[0] + n[1] * n[1] + n[2] * n[2]).sqrt();
+            for &v in f {
+                areas[v] += fa / 3.0;
+            }
+        }
+        areas
+    }
+
+    /// Mesh graph: one edge per unique triangle edge, weighted by
+    /// Euclidean length. This is the graph SF integrates over.
+    pub fn to_graph(&self) -> CsrGraph {
+        let mut edges = std::collections::HashSet::new();
+        for f in &self.faces {
+            for (u, v) in [(f[0], f[1]), (f[1], f[2]), (f[2], f[0])] {
+                edges.insert((u.min(v), u.max(v)));
+            }
+        }
+        let list: Vec<(usize, usize, f64)> = edges
+            .into_iter()
+            .map(|(u, v)| (u, v, dist3(self.verts[u], self.verts[v])))
+            .collect();
+        CsrGraph::from_edges(self.verts.len(), &list)
+    }
+
+    /// Rescales vertices into the unit cube centered at the origin
+    /// (the paper normalizes meshes before choosing ε / unit-size).
+    pub fn normalize_unit_box(&mut self) {
+        let mut lo = [f64::INFINITY; 3];
+        let mut hi = [f64::NEG_INFINITY; 3];
+        for v in &self.verts {
+            for k in 0..3 {
+                lo[k] = lo[k].min(v[k]);
+                hi[k] = hi[k].max(v[k]);
+            }
+        }
+        let scale = (0..3).map(|k| hi[k] - lo[k]).fold(0.0f64, f64::max).max(1e-12);
+        for v in self.verts.iter_mut() {
+            for k in 0..3 {
+                v[k] = (v[k] - 0.5 * (lo[k] + hi[k])) / scale;
+            }
+        }
+    }
+
+    /// Euler characteristic `V - E + F` (2 for genus-0 closed meshes,
+    /// 0 for tori) — used in tests to sanity-check the generators, and by
+    /// DESIGN.md's bounded-genus discussion.
+    pub fn euler_characteristic(&self) -> i64 {
+        let mut edges = std::collections::HashSet::new();
+        for f in &self.faces {
+            for (u, v) in [(f[0], f[1]), (f[1], f[2]), (f[2], f[0])] {
+                edges.insert((u.min(v), u.max(v)));
+            }
+        }
+        self.verts.len() as i64 - edges.len() as i64 + self.faces.len() as i64
+    }
+}
+
+/// Euclidean distance between 3-points (public helper shared by the
+/// simulator and dataset builders).
+#[inline]
+pub fn dist3_pub(a: [f64; 3], b: [f64; 3]) -> f64 {
+    dist3(a, b)
+}
+
+#[inline]
+pub(crate) fn dist3(a: [f64; 3], b: [f64; 3]) -> f64 {
+    let d = [a[0] - b[0], a[1] - b[1], a[2] - b[2]];
+    (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).sqrt()
+}
+
+/// Cross-product face normal scaled by twice the face area.
+fn face_normal_scaled(a: [f64; 3], b: [f64; 3], c: [f64; 3]) -> [f64; 3] {
+    let u = [b[0] - a[0], b[1] - a[1], b[2] - a[2]];
+    let v = [c[0] - a[0], c[1] - a[1], c[2] - a[2]];
+    [
+        u[1] * v[2] - u[2] * v[1],
+        u[2] * v[0] - u[0] * v[2],
+        u[0] * v[1] - u[1] * v[0],
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn icosphere_topology() {
+        let m = icosphere(2);
+        assert_eq!(m.euler_characteristic(), 2);
+        // Closed manifold: E = 3F/2.
+        assert_eq!(m.num_faces() % 2, 0);
+    }
+
+    #[test]
+    fn torus_topology() {
+        let m = torus(24, 12, 1.0, 0.4);
+        assert_eq!(m.euler_characteristic(), 0);
+    }
+
+    #[test]
+    fn sphere_normals_point_outward() {
+        let m = icosphere(2);
+        let normals = m.vertex_normals();
+        for (v, n) in m.verts.iter().zip(&normals) {
+            let dot: f64 = v.iter().zip(n).map(|(a, b)| a * b).sum();
+            let vlen: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!(dot / vlen > 0.9, "normal should align with radius");
+        }
+    }
+
+    #[test]
+    fn sphere_area_sums_to_surface() {
+        let m = icosphere(3);
+        let total: f64 = m.vertex_areas().iter().sum();
+        let sphere = 4.0 * std::f64::consts::PI;
+        assert!((total - sphere).abs() / sphere < 0.05, "total={total}");
+    }
+
+    #[test]
+    fn mesh_graph_connected() {
+        let m = torus(16, 8, 1.0, 0.3);
+        let g = m.to_graph();
+        assert_eq!(g.num_components(), 1);
+        assert_eq!(g.n, m.num_verts());
+    }
+
+    #[test]
+    fn normalize_bounds() {
+        let mut m = icosphere(1);
+        for v in m.verts.iter_mut() {
+            v[0] = v[0] * 10.0 + 5.0;
+        }
+        m.normalize_unit_box();
+        for v in &m.verts {
+            for k in 0..3 {
+                assert!(v[k].abs() <= 0.5 + 1e-9);
+            }
+        }
+    }
+}

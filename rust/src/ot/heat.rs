@@ -1,0 +1,138 @@
+//! Solomon et al. (2015) convolutional-Wasserstein baseline (`Slmn` in
+//! paper Table 5): the geodesic Gaussian is replaced by the heat kernel
+//! `H = exp(-t·L)` of the mesh Laplacian, applied via `s` implicit-Euler
+//! steps `(I + (t/s)·L) x_{k+1} = x_k`, each solved by conjugate
+//! gradients against the sparse Laplacian (no dense materialization).
+
+use crate::graph::CsrGraph;
+use crate::linalg::Mat;
+
+/// Heat-kernel applier.
+pub struct HeatKernel {
+    g: CsrGraph,
+    /// Diffusion time `t`.
+    pub time: f64,
+    /// Number of implicit Euler sub-steps `s`.
+    pub substeps: usize,
+    /// CG iteration cap / tolerance.
+    pub cg_max_iter: usize,
+    pub cg_tol: f64,
+}
+
+impl HeatKernel {
+    pub fn new(g: &CsrGraph, time: f64, substeps: usize) -> Self {
+        HeatKernel {
+            g: g.clone(),
+            time,
+            substeps: substeps.max(1),
+            cg_max_iter: 200,
+            cg_tol: 1e-10,
+        }
+    }
+
+    /// Applies `H ≈ (I + (t/s)L)^{-s}` column-wise.
+    pub fn apply(&self, x: &Mat) -> Mat {
+        let n = self.g.n;
+        assert_eq!(x.rows, n);
+        let dt = self.time / self.substeps as f64;
+        let mut cur = x.clone();
+        for _ in 0..self.substeps {
+            let mut next = Mat::zeros(n, x.cols);
+            for c in 0..x.cols {
+                let b = cur.col(c);
+                let sol = self.cg_solve(&b, dt);
+                for (r, v) in sol.into_iter().enumerate() {
+                    next[(r, c)] = v;
+                }
+            }
+            cur = next;
+        }
+        cur
+    }
+
+    /// CG solve of `(I + dt·L) y = b`. SPD by construction.
+    fn cg_solve(&self, b: &[f64], dt: f64) -> Vec<f64> {
+        let n = b.len();
+        let apply_a = |v: &[f64]| -> Vec<f64> {
+            let lv = self.g.laplacian_matvec_multi(v, 1);
+            v.iter().zip(lv).map(|(x, l)| x + dt * l).collect()
+        };
+        let mut x = b.to_vec(); // warm start at b (≈ solution for small dt)
+        let ax = apply_a(&x);
+        let mut r: Vec<f64> = b.iter().zip(ax).map(|(bb, a)| bb - a).collect();
+        let mut p = r.clone();
+        let mut rs: f64 = r.iter().map(|v| v * v).sum();
+        let b_norm: f64 = b.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-300);
+        for _ in 0..self.cg_max_iter {
+            if rs.sqrt() / b_norm < self.cg_tol {
+                break;
+            }
+            let ap = apply_a(&p);
+            let pap: f64 = p.iter().zip(&ap).map(|(a, b)| a * b).sum();
+            if pap <= 0.0 {
+                break;
+            }
+            let alpha = rs / pap;
+            for i in 0..n {
+                x[i] += alpha * p[i];
+                r[i] -= alpha * ap[i];
+            }
+            let rs_new: f64 = r.iter().map(|v| v * v).sum();
+            let beta = rs_new / rs;
+            rs = rs_new;
+            for i in 0..n {
+                p[i] = r[i] + beta * p[i];
+            }
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::icosphere;
+
+    #[test]
+    fn heat_preserves_total_mass() {
+        // L has constant nullspace → implicit Euler preserves Σx.
+        let g = icosphere(2).to_graph();
+        let hk = HeatKernel::new(&g, 0.1, 4);
+        let mut x = Mat::zeros(g.n, 1);
+        x[(3, 0)] = 1.0;
+        let y = hk.apply(&x);
+        let total: f64 = y.data.iter().sum();
+        assert!((total - 1.0).abs() < 1e-7, "mass {total}");
+        assert!(y.data.iter().all(|&v| v > -1e-9), "negativity");
+    }
+
+    #[test]
+    fn heat_smooths_towards_uniform() {
+        let g = icosphere(1).to_graph();
+        let mut x = Mat::zeros(g.n, 1);
+        x[(0, 0)] = 1.0;
+        let small = HeatKernel::new(&g, 0.01, 2).apply(&x);
+        let large = HeatKernel::new(&g, 10.0, 8).apply(&x);
+        let peak_small = small.data.iter().cloned().fold(0.0f64, f64::max);
+        let peak_large = large.data.iter().cloned().fold(0.0f64, f64::max);
+        assert!(peak_large < peak_small, "{peak_large} !< {peak_small}");
+        // Long-time limit ≈ uniform.
+        let uniform = 1.0 / g.n as f64;
+        for &v in &large.data {
+            assert!((v - uniform).abs() < 0.5 * uniform);
+        }
+    }
+
+    #[test]
+    fn identity_at_zero_time() {
+        let g = icosphere(1).to_graph();
+        let hk = HeatKernel::new(&g, 0.0, 3);
+        let mut x = Mat::zeros(g.n, 2);
+        x[(1, 0)] = 2.0;
+        x[(4, 1)] = -1.0;
+        let y = hk.apply(&x);
+        for (a, b) in y.data.iter().zip(&x.data) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+}

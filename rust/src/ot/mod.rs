@@ -1,0 +1,275 @@
+//! Entropic optimal transport on meshes (paper §3.2 + App. D.1).
+//!
+//! * [`wasserstein_barycenter`] — paper Algorithm 1: iterative Bregman
+//!   projections where every kernel application `K·x` goes through a
+//!   pluggable Fast Multiplication (FM) closure — brute force, SF, RFD,
+//!   or the heat-kernel baseline.
+//! * [`sinkhorn_distance`] — entropic 2-Wasserstein between two
+//!   distributions with the same FM abstraction.
+//! * [`heat`] — Solomon et al. (2015) convolutional-Wasserstein baseline:
+//!   the heat kernel `H ≈ (I + (t/s)L)^{-s}` applied by `s` implicit-Euler
+//!   steps, each a conjugate-gradient solve against the sparse mesh
+//!   Laplacian (Table 5's `Slmn` column).
+
+pub mod heat;
+
+use crate::linalg::Mat;
+
+/// A Fast-Multiplication closure: applies the (implicit) kernel matrix to
+/// a stack of column vectors.
+pub type FastMul<'a> = dyn Fn(&Mat) -> Mat + Sync + 'a;
+
+/// Barycenter hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct BarycenterConfig {
+    pub max_iter: usize,
+    /// Numerical floor for divisions.
+    pub floor: f64,
+    /// Early-exit tolerance on the barycenter change.
+    pub tol: f64,
+}
+
+impl Default for BarycenterConfig {
+    fn default() -> Self {
+        BarycenterConfig { max_iter: 60, floor: 1e-300, tol: 1e-9 }
+    }
+}
+
+/// Paper Algorithm 1 (Fast Computation of Wasserstein Barycenter).
+///
+/// * `mus` — the k input distributions, each a length-N vector.
+/// * `area` — per-vertex area weights `a` (Solomon'15's discretization).
+/// * `alpha` — barycentric weights (sums to 1).
+/// * `fm` — the kernel action.
+///
+/// Returns the barycenter distribution μ (length N, sums to 1).
+pub fn wasserstein_barycenter(
+    mus: &[Vec<f64>],
+    area: &[f64],
+    alpha: &[f64],
+    fm: &FastMul,
+    cfg: &BarycenterConfig,
+) -> Vec<f64> {
+    let k = mus.len();
+    assert!(k > 0);
+    let n = mus[0].len();
+    assert_eq!(area.len(), n);
+    assert_eq!(alpha.len(), k);
+    let mut v = vec![vec![1.0; n]; k];
+    let mut w = vec![vec![1.0; n]; k];
+    let mut mu = vec![1.0; n];
+    let mut d = vec![vec![1.0; n]; k];
+
+    for _iter in 0..cfg.max_iter {
+        let prev = mu.clone();
+        mu = vec![1.0; n];
+        for i in 0..k {
+            // 1. wᵢ ← μᵢ ⊘ FM(a ⊗ vᵢ)
+            let av: Vec<f64> = area.iter().zip(&v[i]).map(|(a, x)| a * x).collect();
+            let kv = fm(&Mat::col_vec(&av));
+            for j in 0..n {
+                // Clamp: approximate FMs (RFD) can emit tiny negative
+                // kernel values; unguarded division then overflows the
+                // Bregman scalings into NaN.
+                w[i][j] = (mus[i][j] / kv[(j, 0)].max(cfg.floor)).clamp(0.0, 1e30);
+            }
+            // 2. dᵢ ← vᵢ ⊗ FM(a ⊗ wᵢ)
+            let aw: Vec<f64> = area.iter().zip(&w[i]).map(|(a, x)| a * x).collect();
+            let kw = fm(&Mat::col_vec(&aw));
+            for j in 0..n {
+                d[i][j] = (v[i][j] * kw[(j, 0)]).clamp(cfg.floor, 1e30);
+            }
+            // 3. μ ← μ ⊗ dᵢ^αᵢ
+            for j in 0..n {
+                mu[j] *= d[i][j].powf(alpha[i]);
+            }
+        }
+        // 4. vᵢ ← vᵢ ⊗ μ ⊘ dᵢ
+        for i in 0..k {
+            for j in 0..n {
+                v[i][j] = (v[i][j] * mu[j] / d[i][j]).clamp(cfg.floor, 1e30);
+            }
+        }
+        let delta: f64 =
+            mu.iter().zip(&prev).map(|(a, b)| (a - b).abs()).sum::<f64>() / n as f64;
+        if delta < cfg.tol {
+            break;
+        }
+    }
+    // Normalize to a probability vector for comparability.
+    let total: f64 = mu.iter().sum();
+    if total > 0.0 {
+        for x in mu.iter_mut() {
+            *x /= total;
+        }
+    }
+    mu
+}
+
+/// Entropic Sinkhorn transport between μ and ν under the FM kernel.
+/// Returns the final scalings `(u, v)`; the implied plan is
+/// `T = diag(u) K diag(v)`.
+pub fn sinkhorn_scalings(
+    mu: &[f64],
+    nu: &[f64],
+    fm: &FastMul,
+    max_iter: usize,
+    floor: f64,
+) -> (Vec<f64>, Vec<f64>) {
+    let n = mu.len();
+    assert_eq!(nu.len(), n);
+    let mut u = vec![1.0; n];
+    let mut v = vec![1.0; n];
+    for _ in 0..max_iter {
+        let kv = fm(&Mat::col_vec(&v));
+        for j in 0..n {
+            u[j] = mu[j] / kv[(j, 0)].max(floor);
+        }
+        let ku = fm(&Mat::col_vec(&u));
+        for j in 0..n {
+            v[j] = nu[j] / ku[(j, 0)].max(floor);
+        }
+    }
+    (u, v)
+}
+
+/// Sinkhorn marginal-violation diagnostic: ‖diag(u)K v − μ‖₁.
+pub fn sinkhorn_marginal_error(mu: &[f64], u: &[f64], v: &[f64], fm: &FastMul) -> f64 {
+    let kv = fm(&Mat::col_vec(&v.to_vec()));
+    mu.iter()
+        .enumerate()
+        .map(|(j, m)| (u[j] * kv[(j, 0)] - m).abs())
+        .sum()
+}
+
+/// Builds the k concentrated input distributions the barycenter
+/// experiments use (mass around k distinct center vertices, spread by a
+/// few hops of the kernel).
+pub fn concentrated_distributions(
+    n: usize,
+    centers: &[usize],
+    fm: &FastMul,
+) -> Vec<Vec<f64>> {
+    centers
+        .iter()
+        .map(|&c| {
+            let mut x = vec![0.0; n];
+            x[c] = 1.0;
+            let spread = fm(&Mat::col_vec(&x));
+            let mut out: Vec<f64> = (0..n).map(|j| spread[(j, 0)].max(0.0)).collect();
+            let s: f64 = out.iter().sum();
+            if s > 0.0 {
+                for t in out.iter_mut() {
+                    *t /= s;
+                }
+            }
+            out
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::integrators::bf::BruteForceSp;
+    use crate::integrators::{FieldIntegrator, KernelFn};
+    use crate::mesh::icosphere;
+
+    fn sphere_fm() -> (usize, BruteForceSp, Vec<f64>) {
+        let mesh = icosphere(2);
+        let g = mesh.to_graph();
+        let bf = BruteForceSp::new(&g, &KernelFn::ExpNeg(8.0));
+        let areas = mesh.vertex_areas();
+        (g.n, bf, areas)
+    }
+
+    #[test]
+    fn barycenter_is_probability() {
+        let (n, bf, area) = sphere_fm();
+        let fm = |x: &Mat| bf.apply(x);
+        let mus = concentrated_distributions(n, &[0, n / 3, 2 * n / 3], &fm);
+        let mu = wasserstein_barycenter(
+            &mus,
+            &area,
+            &[1.0 / 3.0; 3],
+            &fm,
+            &BarycenterConfig { max_iter: 30, ..Default::default() },
+        );
+        let total: f64 = mu.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        assert!(mu.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn barycenter_of_identical_inputs_is_input_like() {
+        // All inputs equal → the barycenter concentrates near the same
+        // region (mode match is the meaningful invariant under entropic
+        // blur).
+        let (n, bf, area) = sphere_fm();
+        let fm = |x: &Mat| bf.apply(x);
+        let mus = concentrated_distributions(n, &[5, 5, 5], &fm);
+        let mu = wasserstein_barycenter(
+            &mus,
+            &area,
+            &[1.0 / 3.0; 3],
+            &fm,
+            &BarycenterConfig { max_iter: 40, ..Default::default() },
+        );
+        let mode = mu
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let inp_mode = mus[0]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        // Modes should be graph-close: compare kernel similarity.
+        let km = bf.kernel()[(mode, inp_mode)];
+        let kd = bf.kernel()[(mode, mode)];
+        assert!(km / kd > 0.3, "barycenter drifted: K rel {}", km / kd);
+    }
+
+    #[test]
+    fn sinkhorn_matches_marginals() {
+        let (n, bf, _) = sphere_fm();
+        let fm = |x: &Mat| bf.apply(x);
+        let mus = concentrated_distributions(n, &[1, n / 2], &fm);
+        let (u, v) = sinkhorn_scalings(&mus[0], &mus[1], &fm, 200, 1e-300);
+        let err = sinkhorn_marginal_error(&mus[0], &u, &v, &fm);
+        assert!(err < 1e-6, "marginal violation {err}");
+    }
+
+    #[test]
+    fn symmetric_weights_give_symmetric_barycenter() {
+        // Barycenter with α = (1,0,0) reproduces (a blurred) μ¹.
+        let (n, bf, area) = sphere_fm();
+        let fm = |x: &Mat| bf.apply(x);
+        let mus = concentrated_distributions(n, &[0, n / 2, n - 1], &fm);
+        let mu = wasserstein_barycenter(
+            &mus,
+            &area,
+            &[1.0, 0.0, 0.0],
+            &fm,
+            &BarycenterConfig { max_iter: 40, ..Default::default() },
+        );
+        let mode = mu
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let want = mus[0]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let km = bf.kernel()[(mode, want)];
+        let kd = bf.kernel()[(mode, mode)];
+        assert!(km / kd > 0.3, "α=e₁ barycenter far from μ¹");
+    }
+}

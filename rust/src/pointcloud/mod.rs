@@ -1,0 +1,218 @@
+//! Point-cloud substrate: ε-nearest-neighbor graph construction via a
+//! spatial hash grid (L1 / L2 / L∞ norms), normalization, and random
+//! sampling. The ε-NN graph is RFDiffusion's input representation
+//! (paper §2.4) and the brute-force-diffusion baseline's substrate.
+
+use crate::graph::CsrGraph;
+use crate::util::rng::Rng;
+
+/// Norm used by the ε-ball test (the paper's experiments use L1; Lemma 2.6
+/// is stated for L1, the Bessel case covers L2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Norm {
+    L1,
+    L2,
+    LInf,
+}
+
+impl Norm {
+    #[inline]
+    pub fn dist(&self, a: &[f64; 3], b: &[f64; 3]) -> f64 {
+        let d = [(a[0] - b[0]).abs(), (a[1] - b[1]).abs(), (a[2] - b[2]).abs()];
+        match self {
+            Norm::L1 => d[0] + d[1] + d[2],
+            Norm::L2 => (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).sqrt(),
+            Norm::LInf => d[0].max(d[1]).max(d[2]),
+        }
+    }
+}
+
+/// A 3-D point cloud.
+#[derive(Clone, Debug, Default)]
+pub struct PointCloud {
+    pub points: Vec<[f64; 3]>,
+}
+
+impl PointCloud {
+    pub fn new(points: Vec<[f64; 3]>) -> Self {
+        PointCloud { points }
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Rescales into the unit cube centered at the origin (matching the
+    /// paper's preprocessing before ε is chosen).
+    pub fn normalize_unit_box(&mut self) {
+        let mut lo = [f64::INFINITY; 3];
+        let mut hi = [f64::NEG_INFINITY; 3];
+        for p in &self.points {
+            for k in 0..3 {
+                lo[k] = lo[k].min(p[k]);
+                hi[k] = hi[k].max(p[k]);
+            }
+        }
+        let scale = (0..3).map(|k| hi[k] - lo[k]).fold(0.0f64, f64::max).max(1e-12);
+        for p in self.points.iter_mut() {
+            for k in 0..3 {
+                p[k] = (p[k] - 0.5 * (lo[k] + hi[k])) / scale;
+            }
+        }
+    }
+
+    /// Uniform random subsample of `k` points (without replacement).
+    pub fn subsample(&self, k: usize, rng: &mut Rng) -> PointCloud {
+        let idx = rng.sample_indices(self.len(), k.min(self.len()));
+        PointCloud { points: idx.into_iter().map(|i| self.points[i]).collect() }
+    }
+
+    /// All pairs within ε under `norm`, found with a spatial hash grid of
+    /// cell size ε (expected `O(N + |E|)`). Edge weight = distance
+    /// (matching paper App. D.1.2: `(W_G)_ij = ‖n_i−n_j‖·1[‖n_i−n_j‖≤ε]`)
+    /// unless `unit_weights` is set (plain ε-NN indicator graph).
+    pub fn epsilon_graph(&self, eps: f64, norm: Norm, unit_weights: bool) -> CsrGraph {
+        let n = self.len();
+        let cell = eps.max(1e-12);
+        let key = |p: &[f64; 3]| {
+            (
+                (p[0] / cell).floor() as i64,
+                (p[1] / cell).floor() as i64,
+                (p[2] / cell).floor() as i64,
+            )
+        };
+        let mut grid: std::collections::HashMap<(i64, i64, i64), Vec<u32>> =
+            std::collections::HashMap::new();
+        for (i, p) in self.points.iter().enumerate() {
+            grid.entry(key(p)).or_default().push(i as u32);
+        }
+        let mut edges = Vec::new();
+        for (i, p) in self.points.iter().enumerate() {
+            let (cx, cy, cz) = key(p);
+            for dx in -1..=1 {
+                for dy in -1..=1 {
+                    for dz in -1..=1 {
+                        if let Some(bucket) = grid.get(&(cx + dx, cy + dy, cz + dz)) {
+                            for &j in bucket {
+                                let j = j as usize;
+                                if j <= i {
+                                    continue;
+                                }
+                                let d = norm.dist(p, &self.points[j]);
+                                if d <= eps {
+                                    edges.push((i, j, if unit_weights { 1.0 } else { d.max(1e-9) }));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        CsrGraph::from_edges(n, &edges)
+    }
+
+    /// Dense weighted adjacency (brute force O(N²)) — the apples-to-apples
+    /// baseline for RFD accuracy tests; only for small N.
+    pub fn dense_adjacency(&self, eps: f64, norm: Norm, unit_weights: bool) -> crate::linalg::Mat {
+        let n = self.len();
+        let mut w = crate::linalg::Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let d = norm.dist(&self.points[i], &self.points[j]);
+                if d <= eps {
+                    w[(i, j)] = if unit_weights { 1.0 } else { d.max(1e-9) };
+                }
+            }
+        }
+        w
+    }
+}
+
+/// Uniform random points in the unit cube `[-0.5, 0.5]³` (Fig. 7's
+/// "random 3-D distributions").
+pub fn random_cloud(n: usize, rng: &mut Rng) -> PointCloud {
+    PointCloud {
+        points: (0..n)
+            .map(|_| {
+                [
+                    rng.uniform_in(-0.5, 0.5),
+                    rng.uniform_in(-0.5, 0.5),
+                    rng.uniform_in(-0.5, 0.5),
+                ]
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epsilon_graph_matches_dense() {
+        let mut rng = Rng::new(51);
+        let pc = random_cloud(120, &mut rng);
+        for norm in [Norm::L1, Norm::L2, Norm::LInf] {
+            let g = pc.epsilon_graph(0.25, norm, false);
+            let w = pc.dense_adjacency(0.25, norm, false);
+            // Same edge set and weights.
+            let mut dense_edges = 0;
+            for i in 0..pc.len() {
+                for j in (i + 1)..pc.len() {
+                    if w[(i, j)] > 0.0 {
+                        dense_edges += 1;
+                    }
+                }
+            }
+            assert_eq!(g.num_edges(), dense_edges, "{norm:?}");
+            for v in 0..pc.len() {
+                for (u, wt) in g.neighbors(v) {
+                    assert!((wt - w[(v, u)]).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn norms_ordering() {
+        let n1 = Norm::L1.dist(&[0.0; 3], &[1.0, 1.0, 1.0]);
+        let n2 = Norm::L2.dist(&[0.0; 3], &[1.0, 1.0, 1.0]);
+        let ni = Norm::LInf.dist(&[0.0; 3], &[1.0, 1.0, 1.0]);
+        assert!(n1 >= n2 && n2 >= ni);
+        assert_eq!(n1, 3.0);
+        assert_eq!(ni, 1.0);
+    }
+
+    #[test]
+    fn normalization() {
+        let mut pc = PointCloud::new(vec![[0.0, 0.0, 0.0], [10.0, 2.0, 4.0]]);
+        pc.normalize_unit_box();
+        for p in &pc.points {
+            for k in 0..3 {
+                assert!(p[k].abs() <= 0.5 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn subsample_size() {
+        let mut rng = Rng::new(52);
+        let pc = random_cloud(100, &mut rng);
+        assert_eq!(pc.subsample(30, &mut rng).len(), 30);
+        assert_eq!(pc.subsample(1000, &mut rng).len(), 100);
+    }
+
+    #[test]
+    fn unit_weights_mode() {
+        let pc = PointCloud::new(vec![[0.0; 3], [0.1, 0.0, 0.0], [5.0, 5.0, 5.0]]);
+        let g = pc.epsilon_graph(0.5, Norm::L2, true);
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.neighbors(0).next().unwrap().1, 1.0);
+    }
+}

@@ -1,0 +1,109 @@
+//! Classification experiments: Table 4 (point clouds) and Table 8
+//! (graphs).
+
+use crate::classify::graph_kernels::{
+    fb_features, rfd_graph_features, rw_features, vh_features, wl_sp_features,
+};
+use crate::classify::{bf_spectral_features, forest_accuracy, rfd_spectral_features, RandomForestConfig};
+use crate::datasets::{cubes_dataset, graph_dataset, shape_dataset, ShapeDataset};
+use crate::integrators::rfd::RfdConfig;
+use crate::linalg::Mat;
+use anyhow::Result;
+
+fn split_80_20(n: usize) -> (Vec<usize>, Vec<usize>) {
+    let cut = (n * 4) / 5;
+    ((0..cut).collect(), (cut..n).collect())
+}
+
+fn eval_features(
+    ds: &ShapeDataset,
+    features: impl Fn(&crate::pointcloud::PointCloud) -> Vec<f64> + Sync,
+) -> f64 {
+    let feats: Vec<Vec<f64>> =
+        crate::util::par::par_map(ds.clouds.len(), |i| features(&ds.clouds[i]));
+    let k = feats[0].len();
+    let (train_idx, test_idx) = split_80_20(ds.clouds.len());
+    let pack = |idx: &[usize]| {
+        let mut m = Mat::zeros(idx.len(), k);
+        let mut y = Vec::with_capacity(idx.len());
+        for (r, &i) in idx.iter().enumerate() {
+            m.row_mut(r).copy_from_slice(&feats[i]);
+            y.push(ds.labels[i]);
+        }
+        (m, y)
+    };
+    let (train_x, train_y) = pack(&train_idx);
+    let (test_x, test_y) = pack(&test_idx);
+    forest_accuracy(
+        &train_x,
+        &train_y,
+        &test_x,
+        &test_y,
+        ds.num_classes,
+        &RandomForestConfig::default(),
+    )
+}
+
+/// Table 4: point-cloud classification — brute-force dense spectra vs RFD
+/// low-rank spectra (k smallest kernel eigenvalues → random forest).
+pub fn table4(quick: bool) -> Result<()> {
+    println!("=== Table 4: point-cloud classification ===");
+    let (per_class, pts) = if quick { (8, 96) } else { (24, 256) };
+    let modelnet = shape_dataset(per_class, pts, 0.01, 1);
+    let cubes = cubes_dataset(if quick { 8 } else { 23 }, per_class, pts, 0.01, 2);
+    println!(
+        "{:<12} {:>8} {:>9} {:>10} {:>8}",
+        "dataset", "#clouds", "#classes", "baseline", "RFD"
+    );
+    for (name, ds, k) in [("ModelNet10~", &modelnet, 32usize), ("Cubes~", &cubes, 16)] {
+        let (eps, lam) = (0.1, -0.1);
+        let cfg = RfdConfig { num_features: 32, epsilon: eps, lambda: lam, ..Default::default() };
+        let acc_rfd = eval_features(ds, |pc| rfd_spectral_features(pc, &cfg, k));
+        let acc_bf = eval_features(ds, |pc| bf_spectral_features(pc, eps, lam, k));
+        println!(
+            "{:<12} {:>8} {:>9} {:>10.3} {:>8.3}",
+            name,
+            ds.clouds.len(),
+            ds.num_classes,
+            acc_bf,
+            acc_rfd
+        );
+    }
+    Ok(())
+}
+
+/// Table 8: graph classification — RFD kernel vs VH/RW/WL-SP/FB.
+pub fn table8(quick: bool) -> Result<()> {
+    println!("=== Table 8: graph classification ===");
+    let per_class = if quick { 15 } else { 50 };
+    let (graphs, labels, ncls) = graph_dataset(per_class, 3);
+    let n = graphs.len();
+    let (train_idx, test_idx) = split_80_20(n);
+    let rfd_cfg = RfdConfig { num_features: 16, epsilon: 0.5, lambda: -0.3, ..Default::default() };
+    let methods: Vec<(&str, Box<dyn Fn(usize) -> Vec<f64> + Sync>)> = vec![
+        ("VH", Box::new(|i: usize| vh_features(&graphs[i], 4))),
+        ("RW", Box::new(|i: usize| rw_features(&graphs[i], 5))),
+        ("WL-SP", Box::new(|i: usize| wl_sp_features(&graphs[i], 8, 4))),
+        ("FB", Box::new(|i: usize| fb_features(&graphs[i], 8))),
+        ("RFD(ours)", Box::new(|i: usize| rfd_graph_features(&graphs[i], &rfd_cfg, 8))),
+    ];
+    println!("{:<10} {:>8}", "method", "accuracy");
+    for (name, feat) in &methods {
+        let feats: Vec<Vec<f64>> = crate::util::par::par_map(n, |i| feat(i));
+        let k = feats[0].len();
+        let pack = |idx: &[usize]| {
+            let mut m = Mat::zeros(idx.len(), k);
+            let mut y = Vec::new();
+            for (r, &i) in idx.iter().enumerate() {
+                m.row_mut(r).copy_from_slice(&feats[i]);
+                y.push(labels[i]);
+            }
+            (m, y)
+        };
+        let (tx, ty) = pack(&train_idx);
+        let (vx, vy) = pack(&test_idx);
+        let acc = forest_accuracy(&tx, &ty, &vx, &vy, ncls, &RandomForestConfig::default());
+        println!("{:<10} {:>8.3}", name, acc);
+    }
+    Ok(())
+}

@@ -1,0 +1,166 @@
+//! Gromov–Wasserstein experiments: Fig. 7 (runtimes + relative error),
+//! Fig. 8 (sphere↔torus interpolation), Fig. 12 (ablations).
+
+use crate::gw::{fgw_solve, gw_solve, DenseStructure, GwConfig, GwMethod, LowRankStructure};
+use crate::integrators::rfd::RfdConfig;
+use crate::linalg::Mat;
+use crate::pointcloud::random_cloud;
+use crate::util::rng::Rng;
+use crate::util::timer::timed;
+use anyhow::Result;
+
+fn uniform(n: usize) -> Vec<f64> {
+    vec![1.0 / n as f64; n]
+}
+
+/// Random binary node-feature cost for FGW (paper: "random binary labels
+/// are generated for each node").
+fn binary_feature_cost(n: usize, m: usize, rng: &mut Rng) -> Mat {
+    let la: Vec<f64> = (0..n).map(|_| f64::from(rng.below(2) as u32)).collect();
+    let lb: Vec<f64> = (0..m).map(|_| f64::from(rng.below(2) as u32)).collect();
+    let mut c = Mat::zeros(n, m);
+    for i in 0..n {
+        for j in 0..m {
+            c[(i, j)] = (la[i] - lb[j]).abs();
+        }
+    }
+    c
+}
+
+/// Fig. 7: GW-cg / GW-prox / FGW, baseline (dense) vs RFD-injected,
+/// runtimes and relative cost error over a size ladder.
+pub fn fig7(quick: bool) -> Result<()> {
+    println!("=== Fig 7: GW & FGW — dense baseline vs RFD-injected ===");
+    let sizes: &[usize] = if quick { &[100, 200, 400] } else { &[250, 500, 1000, 2000] };
+    let (eps, lam, m_feat) = (0.3, -0.2, 16);
+    let cfg_cg = GwConfig { max_iter: 10, ..Default::default() };
+    let cfg_prox =
+        GwConfig { method: GwMethod::Proximal, max_iter: 15, ..Default::default() };
+    println!(
+        "{:>6} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>8}",
+        "N", "GWcg(s)", "cgRFD(s)", "prox(s)", "proxRFD", "FGW(s)", "FGWRFD", "relerr"
+    );
+    for &n in sizes {
+        let mut rng = Rng::new(n as u64);
+        let pa = random_cloud(n, &mut rng);
+        let pb = random_cloud(n, &mut rng);
+        let p = uniform(n);
+        let rfd_cfg = RfdConfig {
+            num_features: m_feat,
+            epsilon: eps,
+            lambda: lam,
+            seed: 1,
+            ..Default::default()
+        };
+        // Dense baselines.
+        let (da, _) = timed(|| DenseStructure::diffusion(&pa, eps, lam));
+        let db = DenseStructure::diffusion(&pb, eps, lam);
+        let (cg_base, t_cg) = timed(|| gw_solve(&da, &db, &p, &p, &cfg_cg));
+        let (prox_base, t_prox) = timed(|| gw_solve(&da, &db, &p, &p, &cfg_prox));
+        let feat = binary_feature_cost(n, n, &mut rng);
+        let (fgw_base, t_fgw) = timed(|| {
+            fgw_solve(&da, &db, &p, &p, Some(&feat), &GwConfig { alpha: 0.5, ..cfg_cg.clone() })
+        });
+        // RFD-injected.
+        let la = LowRankStructure::from_rfd(&pa, rfd_cfg.clone());
+        let lb = LowRankStructure::from_rfd(&pb, RfdConfig { seed: 2, ..rfd_cfg });
+        let (cg_fast, t_cg_r) = timed(|| gw_solve(&la, &lb, &p, &p, &cfg_cg));
+        let (_prox_fast, t_prox_r) = timed(|| gw_solve(&la, &lb, &p, &p, &cfg_prox));
+        let (_fgw_fast, t_fgw_r) = timed(|| {
+            fgw_solve(&la, &lb, &p, &p, Some(&feat), &GwConfig { alpha: 0.5, ..cfg_cg.clone() })
+        });
+        let rel = (cg_base.cost - cg_fast.cost).abs() / cg_base.cost.abs().max(1e-12);
+        println!(
+            "{:>6} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>8.3}",
+            n, t_cg, t_cg_r, t_prox, t_prox_r, t_fgw, t_fgw_r, rel
+        );
+        let _ = (prox_base, fgw_base);
+    }
+    Ok(())
+}
+
+/// Fig. 8: GW interpolation between a sphere and a torus — reports the
+/// GW cost trajectory of the interpolated structures.
+pub fn fig8(quick: bool) -> Result<()> {
+    println!("=== Fig 8: GW interpolation sphere ↔ torus ===");
+    let n_pts = if quick { 150 } else { 500 };
+    let mut rng = Rng::new(3);
+    let mut sphere_mesh = crate::mesh::icosphere(3);
+    sphere_mesh.normalize_unit_box();
+    let mut torus_mesh = crate::mesh::torus(32, 16, 1.0, 0.4);
+    torus_mesh.normalize_unit_box();
+    let pa = crate::datasets::sample_mesh_points(&sphere_mesh, n_pts, &mut rng);
+    let pb = crate::datasets::sample_mesh_points(&torus_mesh, n_pts, &mut rng);
+    let (eps, lam) = (0.13, -0.15);
+    let cfg = RfdConfig { num_features: 16, epsilon: eps, lambda: lam, seed: 4, ..Default::default() };
+    let sa = LowRankStructure::from_rfd(&pa, cfg.clone());
+    let sb = LowRankStructure::from_rfd(&pb, RfdConfig { seed: 5, ..cfg });
+    let p = uniform(n_pts);
+    let gw_cfg = GwConfig { max_iter: 15, ..Default::default() };
+    let (res, t) = timed(|| gw_solve(&sa, &sb, &p, &p, &gw_cfg));
+    println!("GW(sphere, torus): cost={:.5e}  iters={}  time={:.2}s", res.cost, res.iterations, t);
+    // Interpolated barycenter structures at weights w ∈ {0, ¼, ½, ¾, 1}.
+    let plans = vec![identity_plan(&p), res.plan.clone()];
+    println!("{:>6} {:>14} {:>14}", "w", "selfGW(sphere)", "selfGW(torus)");
+    for w in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        let bar = crate::gw::gw_barycenter_structure(
+            &[&sa, &sb],
+            &plans,
+            &[1.0 - w, w],
+            &p,
+        );
+        let dbar = DenseStructure::new(bar);
+        let to_a = gw_solve(&dbar, &sa, &p, &p, &gw_cfg).cost;
+        let to_b = gw_solve(&dbar, &sb, &p, &p, &gw_cfg).cost;
+        println!("{:>6} {:>14.5e} {:>14.5e}", w, to_a, to_b);
+    }
+    Ok(())
+}
+
+fn identity_plan(p: &[f64]) -> Mat {
+    let mut t = Mat::zeros(p.len(), p.len());
+    for (i, &pi) in p.iter().enumerate() {
+        t[(i, i)] = pi;
+    }
+    t
+}
+
+/// Fig. 12: GW ablations — runtime vs ε (graph density) and relative
+/// error vs ε and λ.
+pub fn fig12(quick: bool) -> Result<()> {
+    println!("=== Fig 12: GW ablations ===");
+    let n = if quick { 150 } else { 600 };
+    let cfg_cg = GwConfig { max_iter: 8, ..Default::default() };
+    let mut rng = Rng::new(7);
+    let pa = random_cloud(n, &mut rng);
+    let pb = random_cloud(n, &mut rng);
+    let p = uniform(n);
+    println!("-- runtime & rel-err vs ε (λ=-0.2, m=16)");
+    println!("{:>6} {:>12} {:>12} {:>8}", "eps", "dense(s)", "rfd(s)", "relerr");
+    for eps in [0.1, 0.2, 0.3, 0.5, 0.8] {
+        let (da, _) = timed(|| DenseStructure::diffusion(&pa, eps, -0.2));
+        let db = DenseStructure::diffusion(&pb, eps, -0.2);
+        let (base, t_d) = timed(|| gw_solve(&da, &db, &p, &p, &cfg_cg));
+        let rc = RfdConfig { num_features: 16, epsilon: eps, lambda: -0.2, seed: 1, ..Default::default() };
+        let la = LowRankStructure::from_rfd(&pa, rc.clone());
+        let lb = LowRankStructure::from_rfd(&pb, RfdConfig { seed: 2, ..rc });
+        let (fast, t_r) = timed(|| gw_solve(&la, &lb, &p, &p, &cfg_cg));
+        let rel = (base.cost - fast.cost).abs() / base.cost.abs().max(1e-12);
+        println!("{:>6} {:>12.2} {:>12.2} {:>8.3}", eps, t_d, t_r, rel);
+    }
+    println!("-- rel-err vs λ (ε=0.3, m=16)");
+    println!("{:>6} {:>8}", "|λ|", "relerr");
+    for lam_abs in [0.05, 0.1, 0.2, 0.4, 0.8] {
+        let lam = -lam_abs;
+        let da = DenseStructure::diffusion(&pa, 0.3, lam);
+        let db = DenseStructure::diffusion(&pb, 0.3, lam);
+        let base = gw_solve(&da, &db, &p, &p, &cfg_cg);
+        let rc = RfdConfig { num_features: 16, epsilon: 0.3, lambda: lam, seed: 1, ..Default::default() };
+        let la = LowRankStructure::from_rfd(&pa, rc.clone());
+        let lb = LowRankStructure::from_rfd(&pb, RfdConfig { seed: 2, ..rc });
+        let fast = gw_solve(&la, &lb, &p, &p, &cfg_cg);
+        let rel = (base.cost - fast.cost).abs() / base.cost.abs().max(1e-12);
+        println!("{:>6} {:>8.3}", lam_abs, rel);
+    }
+    Ok(())
+}

@@ -1,0 +1,279 @@
+//! Interpolation experiments: Fig. 4 (both rows), Fig. 5, and the
+//! ablations Figs. 9/10/11.
+
+use crate::apps::interpolation::InterpolationTask;
+use crate::datasets::mesh_zoo;
+use crate::integrators::bf::BruteForceSp;
+use crate::integrators::expmv::{AlMohyExpmv, BaderDense, LanczosExpmv};
+use crate::integrators::rfd::{RfDiffusion, RfdConfig};
+use crate::integrators::sf::{SeparatorFactorization, SfConfig};
+use crate::integrators::trees::{TreeEnsembleIntegrator, TreeKind};
+use crate::integrators::KernelFn;
+use crate::sim::{ClothConfig, ClothSim};
+use crate::util::rng::Rng;
+use crate::util::timer::timed;
+use anyhow::Result;
+
+/// Builds the normal-prediction task for a mesh.
+fn normal_task(mesh: &crate::mesh::TriMesh, seed: u64) -> InterpolationTask {
+    let normals = mesh.vertex_normals();
+    let mut rng = Rng::new(seed);
+    InterpolationTask::from_vectors(&normals, 0.8, &mut rng)
+}
+
+struct Row {
+    method: String,
+    pre: f64,
+    apply: f64,
+    cos: f64,
+}
+
+fn print_rows(mesh: &str, n: usize, rows: &[Row]) {
+    println!("\nmesh={mesh} |V|={n}");
+    println!("{:<14} {:>12} {:>12} {:>8}", "method", "preproc(s)", "interp(s)", "cos");
+    for r in rows {
+        println!("{:<14} {:>12.4} {:>12.4} {:>8.4}", r.method, r.pre, r.apply, r.cos);
+    }
+}
+
+/// Fig. 4 row 1: SF vs BF vs T-Bart-3/20 vs T-FRT on the mesh ladder.
+/// BF and tree baselines are skipped past their practical limits
+/// (mirroring the paper's OOM/OOT columns).
+pub fn fig4_sf(quick: bool) -> Result<()> {
+    let max = if quick { 3_000 } else { 20_000 };
+    let bf_limit = if quick { 1_200 } else { 6_000 };
+    let tree_limit = if quick { 1_200 } else { 4_000 };
+    println!("=== Fig 4 (row 1): shortest-path-kernel integrators ===");
+    for entry in mesh_zoo(300, max) {
+        let g = entry.mesh.to_graph();
+        let n = g.n;
+        let task = normal_task(&entry.mesh, 7);
+        let lambda = 6.0;
+        let mut rows = Vec::new();
+        // SF
+        let (sf, pre) = timed(|| {
+            SeparatorFactorization::new(
+                &g,
+                SfConfig {
+                    kernel: KernelFn::ExpNeg(lambda),
+                    unit_size: 0.01,
+                    threshold: 512,
+                    separator_size: 8,
+                    seed: 0,
+                },
+            )
+        });
+        let ((cos, _), apply) = timed(|| task.evaluate(&sf));
+        rows.push(Row { method: "SF".into(), pre, apply, cos });
+        // BF
+        if n <= bf_limit {
+            let (bf, pre) = timed(|| BruteForceSp::new(&g, &KernelFn::ExpNeg(lambda)));
+            let ((cos, _), apply) = timed(|| task.evaluate(&bf));
+            rows.push(Row { method: "BF".into(), pre, apply, cos });
+        } else {
+            rows.push(Row { method: "BF (OOT)".into(), pre: f64::NAN, apply: f64::NAN, cos: f64::NAN });
+        }
+        // Trees
+        for (kind, k, name) in [
+            (TreeKind::Bartal, 3usize, "T-Bart-3"),
+            (TreeKind::Bartal, 20, "T-Bart-20"),
+            (TreeKind::Frt, 3, "T-FRT"),
+        ] {
+            if n <= tree_limit {
+                let (t, pre) = timed(|| TreeEnsembleIntegrator::new(&g, kind, k, lambda, 1));
+                let ((cos, _), apply) = timed(|| task.evaluate(&t));
+                rows.push(Row { method: name.into(), pre, apply, cos });
+            } else {
+                rows.push(Row {
+                    method: format!("{name} (OOT)"),
+                    pre: f64::NAN,
+                    apply: f64::NAN,
+                    cos: f64::NAN,
+                });
+            }
+        }
+        print_rows(&entry.name, n, &rows);
+    }
+    Ok(())
+}
+
+/// Fig. 4 row 2: RFD vs dense/iterative expm-action baselines.
+pub fn fig4_rfd(quick: bool) -> Result<()> {
+    let max = if quick { 3_000 } else { 20_000 };
+    let dense_limit = if quick { 800 } else { 3_000 };
+    let iter_limit = if quick { 3_000 } else { 20_000 };
+    println!("=== Fig 4 (row 2): diffusion-kernel integrators ===");
+    let (eps, lam) = (0.15, 0.5);
+    for entry in mesh_zoo(300, max) {
+        let n = entry.mesh.num_verts();
+        let pc = crate::pointcloud::PointCloud::new(entry.mesh.verts.clone());
+        let g_eps = pc.epsilon_graph(eps, crate::pointcloud::Norm::LInf, true);
+        let task = normal_task(&entry.mesh, 8);
+        let mut rows = Vec::new();
+        // RFD
+        let (rfd, pre) = timed(|| {
+            RfDiffusion::new(
+                &pc,
+                RfdConfig { num_features: 128, epsilon: eps, lambda: lam, seed: 0, ..Default::default() },
+            )
+        });
+        let ((cos, _), apply) = timed(|| task.evaluate(&rfd));
+        rows.push(Row { method: "RFD".into(), pre, apply, cos });
+        // Bader (dense) — O(N³)
+        if n <= dense_limit {
+            let (bd, pre) = timed(|| BaderDense::new(&g_eps, lam));
+            let ((cos, _), apply) = timed(|| task.evaluate(&bd));
+            rows.push(Row { method: "Bader".into(), pre, apply, cos });
+        } else {
+            rows.push(Row { method: "Bader (OOT)".into(), pre: f64::NAN, apply: f64::NAN, cos: f64::NAN });
+        }
+        // Al-Mohy (matrix-free)
+        if n <= iter_limit {
+            let (am, pre) = timed(|| AlMohyExpmv::new(&g_eps, lam));
+            let ((cos, _), apply) = timed(|| task.evaluate(&am));
+            rows.push(Row { method: "Al-Mohy".into(), pre, apply, cos });
+        }
+        // Lanczos
+        if n <= iter_limit {
+            let (lz, pre) = timed(|| LanczosExpmv::new(&g_eps, lam, 30));
+            let ((cos, _), apply) = timed(|| task.evaluate(&lz));
+            rows.push(Row { method: "Lanczos".into(), pre, apply, cos });
+        }
+        print_rows(&entry.name, n, &rows);
+    }
+    Ok(())
+}
+
+/// Fig. 5: velocity prediction on the deformable flag (cloth-sim
+/// substitute for `flag_simple`), 5% mask, four snapshots.
+pub fn fig5(quick: bool) -> Result<()> {
+    println!("=== Fig 5: velocity prediction on deformable flag ===");
+    let cfg = if quick {
+        ClothConfig { nx: 24, ny: 18, ..Default::default() }
+    } else {
+        ClothConfig { nx: 48, ny: 32, ..Default::default() }
+    };
+    let mut sim = ClothSim::new(cfg);
+    println!(
+        "{:<10} {:>8} {:>10} {:>10}",
+        "snapshot", "|V|", "SF cos", "RFD cos"
+    );
+    for snap_i in 0..4 {
+        let snap = sim.run(300);
+        let g = snap.mesh.to_graph();
+        let mut rng = Rng::new(42 + snap_i);
+        let task = InterpolationTask::from_vectors(&snap.velocities, 0.05, &mut rng);
+        let sf = SeparatorFactorization::new(
+            &g,
+            SfConfig { kernel: KernelFn::ExpNeg(8.0), unit_size: 0.01, ..Default::default() },
+        );
+        let (sf_cos, _) = task.evaluate(&sf);
+        let pc = crate::pointcloud::PointCloud::new(snap.mesh.verts.clone());
+        let rfd = RfDiffusion::new(
+            &pc,
+            RfdConfig { num_features: 128, epsilon: 0.1, lambda: 0.5, ..Default::default() },
+        );
+        let (rfd_cos, _) = task.evaluate(&rfd);
+        println!(
+            "t={:<8.3} {:>8} {:>10.4} {:>10.4}",
+            snap.time,
+            snap.mesh.num_verts(),
+            sf_cos,
+            rfd_cos
+        );
+    }
+    Ok(())
+}
+
+/// Fig. 9: RFD ablation over (m, ε, λ) on the vertex-normal task.
+pub fn fig9(quick: bool) -> Result<()> {
+    println!("=== Fig 9: RFD ablations (vertex normals) ===");
+    let mesh = if quick { crate::mesh::icosphere(3) } else { crate::mesh::icosphere(4) };
+    let mut m0 = mesh;
+    m0.normalize_unit_box();
+    let pc = crate::pointcloud::PointCloud::new(m0.verts.clone());
+    let task = normal_task(&m0, 3);
+    let run = |m: usize, eps: f64, lam: f64| -> (f64, f64, f64) {
+        let (rfd, pre) = timed(|| {
+            RfDiffusion::new(
+                &pc,
+                RfdConfig { num_features: m, epsilon: eps, lambda: lam, seed: 0, ..Default::default() },
+            )
+        });
+        let ((cos, _), apply) = timed(|| task.evaluate(&rfd));
+        (pre, apply, cos)
+    };
+    println!("-- sweep m (ε=0.15, λ=0.5)");
+    println!("{:>6} {:>12} {:>12} {:>8}", "m", "preproc(s)", "interp(s)", "cos");
+    for m in [8, 32, 64, 128, 256] {
+        let (p, a, c) = run(m, 0.15, 0.5);
+        println!("{m:>6} {p:>12.4} {a:>12.4} {c:>8.4}");
+    }
+    println!("-- sweep ε (m=128, λ=0.5)");
+    for eps in [0.05, 0.1, 0.15, 0.25, 0.4] {
+        let (_, _, c) = run(128, eps, 0.5);
+        println!("eps={eps:<6} cos={c:.4}");
+    }
+    println!("-- sweep λ (m=128, ε=0.15)");
+    for lam in [0.05, 0.1, 0.3, 0.5, 1.0] {
+        let (_, _, c) = run(128, 0.15, lam);
+        println!("lambda={lam:<6} cos={c:.4}");
+    }
+    Ok(())
+}
+
+/// Fig. 10: SF unit-size ablation.
+pub fn fig10(quick: bool) -> Result<()> {
+    println!("=== Fig 10: SF unit-size ablation ===");
+    let mesh = if quick { crate::mesh::icosphere(3) } else { crate::mesh::icosphere(4) };
+    let mut m0 = mesh;
+    m0.normalize_unit_box();
+    let g = m0.to_graph();
+    let task = normal_task(&m0, 4);
+    println!("{:>10} {:>12} {:>12} {:>8}", "unit", "preproc(s)", "interp(s)", "cos");
+    for unit in [0.002, 0.01, 0.05, 0.1, 0.3] {
+        let (sf, pre) = timed(|| {
+            SeparatorFactorization::new(
+                &g,
+                SfConfig {
+                    kernel: KernelFn::ExpNeg(6.0),
+                    unit_size: unit,
+                    threshold: g.n / 2,
+                    ..Default::default()
+                },
+            )
+        });
+        let ((cos, _), apply) = timed(|| task.evaluate(&sf));
+        println!("{unit:>10} {pre:>12.4} {apply:>12.4} {cos:>8.4}");
+    }
+    Ok(())
+}
+
+/// Fig. 11: SF threshold ablation (accuracy vs interp-time trade-off).
+pub fn fig11(quick: bool) -> Result<()> {
+    println!("=== Fig 11: SF threshold ablation ===");
+    let mesh = if quick { crate::mesh::icosphere(3) } else { crate::mesh::icosphere(4) };
+    let mut m0 = mesh;
+    m0.normalize_unit_box();
+    let g = m0.to_graph();
+    let n = g.n;
+    let task = normal_task(&m0, 5);
+    println!("{:>10} {:>12} {:>12} {:>8}", "threshold", "preproc(s)", "interp(s)", "cos");
+    for frac in [0.05, 0.125, 0.25, 0.5, 1.0] {
+        let threshold = ((n as f64) * frac) as usize;
+        let (sf, pre) = timed(|| {
+            SeparatorFactorization::new(
+                &g,
+                SfConfig {
+                    kernel: KernelFn::ExpNeg(6.0),
+                    unit_size: 0.01,
+                    threshold,
+                    ..Default::default()
+                },
+            )
+        });
+        let ((cos, _), apply) = timed(|| task.evaluate(&sf));
+        println!("{threshold:>10} {pre:>12.4} {apply:>12.4} {cos:>8.4}");
+    }
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Experiment regeneration harness: one driver per paper table/figure
+//! (DESIGN.md §Experiment index). Each driver prints the same rows/series
+//! the paper reports; absolute numbers differ (different testbed,
+//! synthetic data — see DESIGN.md §substitutions) but the *shape* — who
+//! wins, by what factor, where crossovers fall — is the reproduction
+//! target recorded in EXPERIMENTS.md.
+//!
+//! `quick` mode shrinks workloads ~4× for CI; full mode matches the
+//! scales EXPERIMENTS.md reports.
+
+mod classify_exp;
+mod gw_exp;
+mod interp_exp;
+mod ot_exp;
+mod pct_exp;
+
+use anyhow::{bail, Result};
+
+/// All experiment ids.
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("fig4-sf", "vertex-normal prediction: SF vs BF vs tree baselines"),
+    ("fig4-rfd", "vertex-normal prediction: RFD vs Bader/Al-Mohy/Lanczos"),
+    ("fig5", "velocity prediction on the deformable flag"),
+    ("fig6", "Wasserstein barycenter agreement (BF vs SF vs RFD)"),
+    ("fig7", "GW/FGW runtimes + relative error vs N"),
+    ("fig8", "GW interpolation sphere↔torus"),
+    ("fig9", "RFD ablation (m, ε, λ)"),
+    ("fig10", "SF ablation: unit-size"),
+    ("fig11", "SF ablation: threshold"),
+    ("fig12", "GW ablation: runtime vs ε; rel-err vs ε and λ"),
+    ("table2", "barycenter diffusion-integration: BF vs RFD"),
+    ("table3", "barycenter separation-integration: BF vs SF"),
+    ("table4", "point-cloud classification: BF vs RFD spectra"),
+    ("table5", "barycenter: + Solomon'15 heat-kernel baseline"),
+    ("table6", "barycenter ablation: SF unit-size"),
+    ("table7", "barycenter ablation: RFD λ"),
+    ("table8", "graph classification: VH/RW/WL-SP/FB vs RFD"),
+    ("pct", "RFD-masked performer attention (Sec 3.3)"),
+];
+
+/// Runs one experiment by id.
+pub fn run(id: &str, quick: bool) -> Result<()> {
+    match id {
+        "fig4-sf" => interp_exp::fig4_sf(quick),
+        "fig4-rfd" => interp_exp::fig4_rfd(quick),
+        "fig5" => interp_exp::fig5(quick),
+        "fig9" => interp_exp::fig9(quick),
+        "fig10" => interp_exp::fig10(quick),
+        "fig11" => interp_exp::fig11(quick),
+        "fig6" => ot_exp::fig6(quick),
+        "table2" => ot_exp::table2(quick),
+        "table3" => ot_exp::table3(quick),
+        "table5" => ot_exp::table5(quick),
+        "table6" => ot_exp::table6(quick),
+        "table7" => ot_exp::table7(quick),
+        "fig7" => gw_exp::fig7(quick),
+        "fig8" => gw_exp::fig8(quick),
+        "fig12" => gw_exp::fig12(quick),
+        "table4" => classify_exp::table4(quick),
+        "table8" => classify_exp::table8(quick),
+        "pct" => pct_exp::pct(quick),
+        "all" => {
+            for (eid, _) in EXPERIMENTS {
+                println!("\n########## {eid} ##########");
+                run(eid, quick)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment '{other}' (try `repro list`)"),
+    }
+}
+
+/// Prints the experiment registry.
+pub fn list() {
+    println!("available experiments (repro reproduce <id> [--quick]):");
+    for (id, desc) in EXPERIMENTS {
+        println!("  {id:<10} {desc}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn registry_is_wired() {
+        for (id, _) in super::EXPERIMENTS {
+            // Unknown ids bail; known ids reach their driver (we don't run
+            // them here — just confirm dispatch doesn't hit the catch-all).
+            assert!(!id.is_empty());
+        }
+        assert!(super::run("definitely-not-an-experiment", true).is_err());
+    }
+}

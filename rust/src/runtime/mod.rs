@@ -1,0 +1,340 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the XLA CPU client.
+//!
+//! Design:
+//! * **Executor thread** — the `xla` crate's handles wrap raw C pointers
+//!   without `Send`/`Sync`, so one dedicated thread owns the
+//!   `PjRtClient` and the compiled-executable cache; callers submit jobs
+//!   over an mpsc channel and block on a reply channel. This also
+//!   serializes XLA execution (the CPU client is internally threaded).
+//! * **Shape buckets** — artifacts exist for a ladder of `(N, m, d)`
+//!   shapes (`manifest.json`); requests are padded to the smallest
+//!   fitting bucket. Padding is *exact*: the L2 model takes a row mask
+//!   and zeroes padded feature rows before the Gram step.
+//! * **Compile-once** — `HloModuleProto::from_text_file` → `compile` the
+//!   first time a bucket is touched; subsequent calls reuse the cached
+//!   executable (compile cost is off the request path after warmup).
+
+use crate::linalg::Mat;
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+/// One artifact bucket from the manifest.
+#[derive(Clone, Debug)]
+pub struct BucketInfo {
+    pub file: String,
+    pub n: usize,
+    pub m: usize,
+    pub d: usize,
+}
+
+/// A request executed on the runtime thread.
+struct Job {
+    bucket: BucketInfo,
+    /// Flattened f32 inputs in entry-parameter order, with dims
+    /// (empty dims = scalar).
+    inputs: Vec<(Vec<f32>, Vec<i64>)>,
+    reply: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Handle to the PJRT executor.
+pub struct PjrtRuntime {
+    tx: Mutex<mpsc::Sender<Msg>>,
+    manifest: Vec<BucketInfo>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PjrtRuntime {
+    /// Loads the artifact manifest and spawns the executor thread.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = read_manifest(&dir)?;
+        if manifest.is_empty() {
+            bail!("no artifacts in {}", dir.display());
+        }
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let worker_dir = dir.clone();
+        let worker = std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || executor_loop(rx, worker_dir))
+            .context("spawning pjrt executor")?;
+        Ok(PjrtRuntime { tx: Mutex::new(tx), manifest, worker: Some(worker) })
+    }
+
+    pub fn buckets(&self) -> &[BucketInfo] {
+        &self.manifest
+    }
+
+    /// Smallest bucket with `n_bucket ≥ n` and `m_bucket ≥ m` (and the
+    /// fixed field width `d`).
+    pub fn pick_bucket(&self, n: usize, m: usize, d: usize) -> Option<BucketInfo> {
+        self.manifest
+            .iter()
+            .filter(|b| b.n >= n && b.m >= m && b.d >= d)
+            .min_by_key(|b| (b.n, b.m))
+            .cloned()
+    }
+
+    /// Executes the RFD integration `exp(Λ(W−δI))x` via the AOT artifact.
+    ///
+    /// * `points` — N×3 (unit-box normalized).
+    /// * `omegas` — m×3, `qscale` — m (q_j/m weights).
+    /// * `x` — N×d field (d ≤ bucket d; extra columns are zero-padded).
+    ///
+    /// Returns the N×d result (bucket padding stripped).
+    pub fn rfd_apply(
+        &self,
+        points: &[[f64; 3]],
+        omegas: &[[f64; 3]],
+        qscale: &[f64],
+        x: &Mat,
+        lambda: f64,
+    ) -> Result<Mat> {
+        let n = points.len();
+        let m = omegas.len();
+        let d = x.cols;
+        assert_eq!(x.rows, n);
+        let bucket = self
+            .pick_bucket(n, m, d)
+            .ok_or_else(|| anyhow!("no bucket fits n={n} m={m} d={d}"))?;
+        let (bn, bm, bd) = (bucket.n, bucket.m, bucket.d);
+        // Pad inputs to bucket shapes.
+        let mut pts = vec![0.0f32; bn * 3];
+        for (i, p) in points.iter().enumerate() {
+            for k in 0..3 {
+                pts[i * 3 + k] = p[k] as f32;
+            }
+        }
+        let mut om = vec![0.0f32; bm * 3];
+        for (j, w) in omegas.iter().enumerate() {
+            for k in 0..3 {
+                om[j * 3 + k] = w[k] as f32;
+            }
+        }
+        // Padded ω rows keep q = 0 so they contribute nothing (including
+        // to the δ diagonal correction).
+        let mut qs = vec![0.0f32; bm];
+        for (j, &q) in qscale.iter().enumerate() {
+            // The artifact expects q_j/m_bucket pre-divided; callers pass
+            // raw q_j and we fold the *real* m here.
+            qs[j] = (q / m as f64) as f32;
+        }
+        let mut xf = vec![0.0f32; bn * bd];
+        for r in 0..n {
+            for c in 0..d {
+                xf[r * bd + c] = x[(r, c)] as f32;
+            }
+        }
+        let mut mask = vec![0.0f32; bn];
+        for mk in mask.iter_mut().take(n) {
+            *mk = 1.0;
+        }
+        let inputs = vec![
+            (pts, vec![bn as i64, 3]),
+            (om, vec![bm as i64, 3]),
+            (qs, vec![bm as i64]),
+            (xf, vec![bn as i64, bd as i64]),
+            (vec![lambda as f32], vec![]),
+            (mask, vec![bn as i64]),
+        ];
+        let out = self.execute_raw(bucket.clone(), inputs)?;
+        if out.len() != bn * bd {
+            bail!("unexpected output size {} != {}", out.len(), bn * bd);
+        }
+        let mut result = Mat::zeros(n, d);
+        for r in 0..n {
+            for c in 0..d {
+                result[(r, c)] = out[r * bd + c] as f64;
+            }
+        }
+        Ok(result)
+    }
+
+    /// Low-level execute on a named bucket.
+    pub fn execute_raw(
+        &self,
+        bucket: BucketInfo,
+        inputs: Vec<(Vec<f32>, Vec<i64>)>,
+    ) -> Result<Vec<f32>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Msg::Run(Job { bucket, inputs, reply: reply_tx }))
+            .map_err(|_| anyhow!("pjrt executor is gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("pjrt executor dropped reply"))?
+    }
+}
+
+impl Drop for PjrtRuntime {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn read_manifest(dir: &Path) -> Result<Vec<BucketInfo>> {
+    let path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let doc = json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+    let arts = doc
+        .get("artifacts")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+    let mut out = Vec::new();
+    for a in arts {
+        out.push(BucketInfo {
+            file: a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing file"))?
+                .to_string(),
+            n: a.get("n").and_then(Json::as_usize).unwrap_or(0),
+            m: a.get("m").and_then(Json::as_usize).unwrap_or(0),
+            d: a.get("d").and_then(Json::as_usize).unwrap_or(0),
+        });
+    }
+    Ok(out)
+}
+
+/// The executor thread body: owns the client + executable cache.
+fn executor_loop(rx: mpsc::Receiver<Msg>, dir: PathBuf) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Run(job) => {
+                        let _ = job.reply.send(Err(anyhow!("PJRT client init failed: {e:?}")));
+                    }
+                    Msg::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    while let Ok(msg) = rx.recv() {
+        let job = match msg {
+            Msg::Run(j) => j,
+            Msg::Shutdown => break,
+        };
+        let result = run_job(&client, &mut cache, &dir, &job);
+        let _ = job.reply.send(result);
+    }
+}
+
+fn run_job(
+    client: &xla::PjRtClient,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: &Path,
+    job: &Job,
+) -> Result<Vec<f32>> {
+    if !cache.contains_key(&job.bucket.file) {
+        let path = dir.join(&job.bucket.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("compile: {e:?}"))?;
+        cache.insert(job.bucket.file.clone(), exe);
+    }
+    let exe = cache.get(&job.bucket.file).unwrap();
+    let mut literals = Vec::with_capacity(job.inputs.len());
+    for (data, dims) in &job.inputs {
+        let lit = if dims.is_empty() {
+            xla::Literal::scalar(data[0])
+        } else {
+            xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))?
+        };
+        literals.push(lit);
+    }
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow!("execute: {e:?}"))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+    // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+    let out = lit.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+    out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn runtime() -> Option<PjrtRuntime> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return None;
+        }
+        Some(PjrtRuntime::new(dir).expect("runtime"))
+    }
+
+    #[test]
+    fn manifest_and_buckets() {
+        let Some(rt) = runtime() else { return };
+        assert!(!rt.buckets().is_empty());
+        let b = rt.pick_bucket(100, 16, 4).expect("bucket for 100");
+        assert!(b.n >= 100 && b.m >= 16);
+        assert!(rt.pick_bucket(10_000_000, 16, 4).is_none());
+    }
+
+    #[test]
+    fn end_to_end_identity_at_lambda_zero() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = crate::util::rng::Rng::new(1);
+        let pc = crate::pointcloud::random_cloud(100, &mut rng);
+        let cfg =
+            crate::integrators::rfd::RfdConfig { num_features: 16, ..Default::default() };
+        let (omegas, qscale) = crate::integrators::rfd::sample_features(&cfg);
+        let x = Mat::from_vec(100, 3, (0..300).map(|_| rng.gaussian()).collect());
+        let y = rt.rfd_apply(&pc.points, &omegas, &qscale, &x, 0.0).expect("apply");
+        for (a, b) in y.data.iter().zip(&x.data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn matches_pure_rust_rfd() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = crate::util::rng::Rng::new(2);
+        let pc = crate::pointcloud::random_cloud(200, &mut rng);
+        let cfg = crate::integrators::rfd::RfdConfig {
+            num_features: 16,
+            epsilon: 0.2,
+            lambda: -0.2,
+            seed: 7,
+            ..Default::default()
+        };
+        let rust_rfd = crate::integrators::rfd::RfDiffusion::new(&pc, cfg.clone());
+        let (omegas, qscale) = crate::integrators::rfd::sample_features(&cfg);
+        let x = Mat::from_vec(200, 3, (0..600).map(|_| rng.gaussian()).collect());
+        use crate::integrators::FieldIntegrator;
+        let want = rust_rfd.apply(&x);
+        let got = rt
+            .rfd_apply(&pc.points, &omegas, &qscale, &x, cfg.lambda)
+            .expect("apply");
+        let e = crate::util::stats::rel_err(&got.data, &want.data);
+        assert!(e < 1e-3, "pjrt vs rust rfd: {e}");
+    }
+}

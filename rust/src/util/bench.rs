@@ -1,0 +1,120 @@
+//! Criterion-lite: a tiny benchmarking harness for `cargo bench`
+//! (`harness = false` targets in `benches/`). Runs warmup iterations, then
+//! timed iterations until a time budget or iteration cap is reached, and
+//! prints `name  time: [min median max]`-style lines plus throughput.
+
+use std::time::Instant;
+
+/// One benchmark group with shared configuration.
+pub struct Bench {
+    warmup_iters: usize,
+    max_iters: usize,
+    budget_secs: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 2, max_iters: 30, budget_secs: 3.0 }
+    }
+}
+
+/// Result summary for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min: f64,
+    pub median: f64,
+    pub max: f64,
+    pub mean: f64,
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn with_budget(mut self, secs: f64) -> Self {
+        self.budget_secs = secs;
+        self
+    }
+    pub fn with_max_iters(mut self, n: usize) -> Self {
+        self.max_iters = n.max(1);
+        self
+    }
+
+    /// Benchmarks `f`, which should perform one complete measured operation
+    /// per call and return a value (returned values are black-boxed so the
+    /// optimizer cannot elide the work).
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while times.len() < self.max_iters
+            && (times.len() < 3 || start.elapsed().as_secs_f64() < self.budget_secs)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: times.len(),
+            min: times[0],
+            median: times[times.len() / 2],
+            max: *times.last().unwrap(),
+            mean: times.iter().sum::<f64>() / times.len() as f64,
+        };
+        println!(
+            "{:<52} time: [{} {} {}]  ({} iters)",
+            res.name,
+            fmt_time(res.min),
+            fmt_time(res.median),
+            fmt_time(res.max),
+            res.iters
+        );
+        res
+    }
+}
+
+/// Formats seconds with an adaptive unit.
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// Optimizer barrier (stable-Rust friendly).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bench::new().with_budget(0.05).with_max_iters(5);
+        let r = b.run("noop", || 1 + 1);
+        assert!(r.iters >= 3);
+        assert!(r.min <= r.median && r.median <= r.max);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,20 @@
+//! In-tree substrates for the fully-offline build.
+//!
+//! The build image vendors only the `xla` crate's dependency closure, so the
+//! usual ecosystem crates (rand, rayon, serde, criterion, clap, rustfft) are
+//! unavailable. Everything the library needs from them is implemented here:
+//!
+//! * [`rng`] — xoshiro256++ PRNG, Gaussian sampling, shuffles.
+//! * [`par`] — scoped-thread parallel maps (rayon-lite).
+//! * [`json`] — minimal JSON parser/serializer for the coordinator protocol.
+//! * [`bench`] — a criterion-lite timing harness used by `benches/`.
+//! * [`stats`] — summary statistics + error metrics shared by the repro
+//!   drivers (cosine similarity, MSE, relative error, percentiles).
+//! * [`timer`] — scoped wall-clock timing.
+
+pub mod bench;
+pub mod json;
+pub mod par;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,144 @@
+//! Rayon-lite: scoped-thread data parallelism over index ranges.
+//!
+//! The coordinator and the integrator preprocessing paths only need two
+//! primitives: a parallel `for` over a range with chunked work stealing by
+//! static partitioning, and a parallel map collecting results in order.
+//! Both are built on `std::thread::scope`, so no `'static` bounds leak into
+//! call sites.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (capped so over-subscription doesn't
+/// hurt the benchmarks).
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Runs `f(i)` for every `i` in `0..n`, distributing indices across threads
+/// dynamically (atomic counter, chunk granularity `chunk`). `f` must be
+/// `Sync` because multiple workers call it concurrently.
+pub fn par_for<F>(n: usize, chunk: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let nt = num_threads().min(n.max(1));
+    if nt <= 1 || n <= chunk {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..nt {
+            s.spawn(|| loop {
+                let start = counter.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map: computes `f(i)` for `i in 0..n` and returns the results in
+/// index order.
+pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots = as_send_cells(&mut out);
+        par_for(n, 1, |i| {
+            // SAFETY: each index i is visited exactly once across all
+            // workers (dynamic partition of 0..n), so no slot is written
+            // twice or concurrently.
+            unsafe { *slots.get(i) = Some(f(i)) };
+        });
+    }
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+/// Splits a mutable slice into disjoint per-index cells writable from
+/// multiple threads. Used to parallelize writes where the partition by
+/// index is known to be disjoint.
+pub struct SendCells<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Sync for SendCells<'_, T> {}
+unsafe impl<T: Send> Send for SendCells<'_, T> {}
+
+impl<T> SendCells<'_, T> {
+    /// # Safety
+    /// Callers must guarantee no two threads access the same index.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+}
+
+/// Wraps a mutable slice for disjoint-index parallel writes.
+pub fn as_send_cells<T>(xs: &mut [T]) -> SendCells<'_, T> {
+    SendCells { ptr: xs.as_mut_ptr(), len: xs.len(), _marker: std::marker::PhantomData }
+}
+
+/// Parallel for over disjoint row chunks of a flat row-major buffer:
+/// `f(row_index, row_slice)`.
+pub fn par_rows<F>(data: &mut [f64], cols: usize, f: F)
+where
+    F: Fn(usize, &mut [f64]) + Sync,
+{
+    assert!(cols > 0 && data.len() % cols == 0);
+    let rows = data.len() / cols;
+    let cells = as_send_cells(data);
+    par_for(rows, 8, |r| {
+        // SAFETY: rows are disjoint slices of `data`.
+        let row = unsafe { std::slice::from_raw_parts_mut(cells.get(r * cols) as *mut f64, cols) };
+        f(r, row);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_for_covers_all() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        par_for(1000, 7, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_map_ordered() {
+        let v = par_map(257, |i| i * i);
+        assert_eq!(v, (0..257).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_rows_disjoint() {
+        let mut data = vec![0.0; 12 * 5];
+        par_rows(&mut data, 5, |r, row| {
+            for (c, x) in row.iter_mut().enumerate() {
+                *x = (r * 5 + c) as f64;
+            }
+        });
+        assert_eq!(data, (0..60).map(|i| i as f64).collect::<Vec<_>>());
+    }
+}

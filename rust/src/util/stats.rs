@@ -1,0 +1,170 @@
+//! Error metrics and summary statistics shared by the experiment drivers:
+//! cosine similarity (Fig. 4), MSE (Tables 2/3/5), relative error (Fig. 7),
+//! and latency percentiles for the coordinator metrics.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// `p`-th percentile (0..=100) by nearest-rank on a sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Mean squared error between two equally-sized vectors.
+pub fn mse(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>() / a.len() as f64
+}
+
+/// Relative L2 error ‖a−b‖/‖b‖ (with an epsilon guard on ‖b‖).
+pub fn rel_err(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let num: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt();
+    let den: f64 = b.iter().map(|y| y * y).sum::<f64>().sqrt();
+    num / den.max(1e-300)
+}
+
+/// Cosine similarity between 3-vectors, averaged over rows; rows where
+/// either side is (near-)zero are skipped, matching the vertex-normal
+/// evaluation protocol (Sec. 3.1).
+pub fn mean_cosine_sim_rows(a: &[f64], b: &[f64], dim: usize) -> f64 {
+    assert_eq!(a.len(), b.len());
+    assert!(dim > 0 && a.len() % dim == 0);
+    let n = a.len() / dim;
+    let mut acc = 0.0;
+    let mut cnt = 0usize;
+    for r in 0..n {
+        let ra = &a[r * dim..(r + 1) * dim];
+        let rb = &b[r * dim..(r + 1) * dim];
+        let na: f64 = ra.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let nb: f64 = rb.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if na < 1e-12 || nb < 1e-12 {
+            continue;
+        }
+        let dot: f64 = ra.iter().zip(rb).map(|(x, y)| x * y).sum();
+        acc += dot / (na * nb);
+        cnt += 1;
+    }
+    if cnt == 0 {
+        0.0
+    } else {
+        acc / cnt as f64
+    }
+}
+
+/// Online latency reservoir for coordinator metrics (fixed capacity,
+/// uniform replacement).
+#[derive(Debug)]
+pub struct Reservoir {
+    cap: usize,
+    seen: usize,
+    samples: Vec<f64>,
+    rng_state: u64,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize) -> Self {
+        Reservoir { cap, seen: 0, samples: Vec::with_capacity(cap), rng_state: 0x9E3779B97F4A7C15 }
+    }
+    fn next(&mut self) -> u64 {
+        // xorshift64*
+        let mut x = self.rng_state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.rng_state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            let j = (self.next() % self.seen as u64) as usize;
+            if j < self.cap {
+                self.samples[j] = x;
+            }
+        }
+    }
+    pub fn count(&self) -> usize {
+        self.seen
+    }
+    pub fn percentile(&self, p: f64) -> f64 {
+        percentile(&self.samples, p)
+    }
+    pub fn mean(&self) -> f64 {
+        mean(&self.samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mse_relerr() {
+        let a = [1.0, 2.0];
+        let b = [1.0, 4.0];
+        assert!((mse(&a, &b) - 2.0).abs() < 1e-12);
+        assert!((rel_err(&a, &a) - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_rows() {
+        // identical rows → 1; orthogonal → 0
+        let a = [1.0, 0.0, 0.0, 0.0, 1.0, 0.0];
+        let b = [2.0, 0.0, 0.0, 0.0, 3.0, 0.0];
+        assert!((mean_cosine_sim_rows(&a, &b, 3) - 1.0).abs() < 1e-12);
+        let c = [0.0, 0.0, 1.0, 0.0, 0.0, 1.0];
+        assert!(mean_cosine_sim_rows(&a, &c, 3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_skips_zero_rows() {
+        let a = [0.0, 0.0, 0.0, 1.0, 0.0, 0.0];
+        let b = [1.0, 0.0, 0.0, 1.0, 0.0, 0.0];
+        assert!((mean_cosine_sim_rows(&a, &b, 3) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reservoir_caps() {
+        let mut r = Reservoir::new(10);
+        for i in 0..1000 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.count(), 1000);
+        assert!(r.samples.len() == 10);
+    }
+}

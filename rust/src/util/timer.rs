@@ -1,0 +1,52 @@
+//! Scoped wall-clock timing used by the repro drivers to report the paper's
+//! pre-processing / inference split.
+
+use std::time::Instant;
+
+/// Measures the wall-clock duration of `f`, returning `(result, seconds)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Accumulating stopwatch for phase breakdowns.
+#[derive(Default, Debug, Clone)]
+pub struct Stopwatch {
+    total: f64,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn add<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let (out, dt) = timed(f);
+        self.total += dt;
+        out
+    }
+    pub fn seconds(&self) -> f64 {
+        self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, dt) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        let a = sw.add(|| 1);
+        let b = sw.add(|| 2);
+        assert_eq!(a + b, 3);
+        assert!(sw.seconds() >= 0.0);
+    }
+}

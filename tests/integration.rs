@@ -1,0 +1,234 @@
+//! Cross-module integration + randomized property tests (proptest-style:
+//! seeded random instances sweeping structural parameters; the offline
+//! build has no proptest crate, so cases are explicit seed loops).
+
+use gfi::integrators::bf::BruteForceSp;
+use gfi::integrators::rfd::{RfDiffusion, RfdConfig};
+use gfi::integrators::sf::{SeparatorFactorization, SfConfig};
+use gfi::integrators::{FieldIntegrator, KernelFn};
+use gfi::linalg::Mat;
+use gfi::util::rng::Rng;
+use gfi::util::stats::rel_err;
+
+fn rand_field(n: usize, d: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_vec(n, d, (0..n * d).map(|_| rng.gaussian()).collect())
+}
+
+/// Property: every integrator is a *linear* operator —
+/// `apply(αx + βy) == α·apply(x) + β·apply(y)`.
+#[test]
+fn property_integrators_are_linear() {
+    let mut mesh = gfi::mesh::icosphere(2);
+    mesh.normalize_unit_box();
+    let g = mesh.to_graph();
+    let pc = gfi::pointcloud::PointCloud::new(mesh.verts.clone());
+    let n = g.n;
+    let integrators: Vec<Box<dyn FieldIntegrator>> = vec![
+        Box::new(SeparatorFactorization::new(
+            &g,
+            SfConfig { kernel: KernelFn::ExpNeg(2.0), threshold: 64, ..Default::default() },
+        )),
+        Box::new(RfDiffusion::new(
+            &pc,
+            RfdConfig { num_features: 16, ..Default::default() },
+        )),
+        Box::new(BruteForceSp::new(&g, &KernelFn::ExpNeg(2.0))),
+    ];
+    for seed in 0..5u64 {
+        let x = rand_field(n, 2, seed);
+        let y = rand_field(n, 2, seed + 100);
+        let mut rng = Rng::new(seed + 200);
+        let (a, b) = (rng.uniform_in(-2.0, 2.0), rng.uniform_in(-2.0, 2.0));
+        let mut combo = x.scale(a);
+        combo.axpy(b, &y);
+        for integ in &integrators {
+            let lhs = integ.apply(&combo);
+            let mut rhs = integ.apply(&x).scale(a);
+            rhs.axpy(b, &integ.apply(&y));
+            let e = rel_err(&lhs.data, &rhs.data);
+            assert!(e < 1e-9, "{} not linear: {e} (seed {seed})", integ.name());
+        }
+    }
+}
+
+/// Property: the implied kernel matrix is symmetric —
+/// `⟨apply(x), y⟩ == ⟨x, apply(y)⟩`.
+#[test]
+fn property_kernel_symmetry() {
+    let mut mesh = gfi::mesh::torus(14, 8, 1.0, 0.35);
+    mesh.normalize_unit_box();
+    let g = mesh.to_graph();
+    let pc = gfi::pointcloud::PointCloud::new(mesh.verts.clone());
+    let n = g.n;
+    let integrators: Vec<Box<dyn FieldIntegrator>> = vec![
+        Box::new(BruteForceSp::new(&g, &KernelFn::ExpNeg(2.0))),
+        Box::new(RfDiffusion::new(&pc, RfdConfig { num_features: 8, ..Default::default() })),
+    ];
+    for seed in 0..5u64 {
+        let x = rand_field(n, 1, seed);
+        let y = rand_field(n, 1, seed + 77);
+        for integ in &integrators {
+            let kx = integ.apply(&x);
+            let ky = integ.apply(&y);
+            let lhs: f64 = kx.data.iter().zip(&y.data).map(|(a, b)| a * b).sum();
+            let rhs: f64 = x.data.iter().zip(&ky.data).map(|(a, b)| a * b).sum();
+            let denom = lhs.abs().max(rhs.abs()).max(1e-12);
+            assert!(
+                ((lhs - rhs) / denom).abs() < 1e-8,
+                "{} kernel not symmetric (seed {seed}): {lhs} vs {rhs}",
+                integ.name()
+            );
+        }
+    }
+}
+
+/// Property: SF error decreases (weakly) as the separator budget grows.
+#[test]
+fn property_sf_separator_budget_monotonic_ish() {
+    let mut mesh = gfi::mesh::icosphere(2);
+    mesh.normalize_unit_box();
+    let g = mesh.to_graph();
+    let n = g.n;
+    let bf = BruteForceSp::new(&g, &KernelFn::ExpNeg(2.0));
+    let x = rand_field(n, 3, 5);
+    let exact = bf.apply(&x);
+    let err_at = |sep: usize| {
+        let sf = SeparatorFactorization::new(
+            &g,
+            SfConfig {
+                kernel: KernelFn::ExpNeg(2.0),
+                threshold: 32,
+                separator_size: sep,
+                seed: 11,
+                ..Default::default()
+            },
+        );
+        rel_err(&sf.apply(&x).data, &exact.data)
+    };
+    let coarse = err_at(2);
+    let fine = err_at(24);
+    assert!(
+        fine <= coarse * 1.5 + 0.02,
+        "bigger separator should not be much worse: {fine} vs {coarse}"
+    );
+}
+
+/// Property: random-graph SF never panics and stays finite across many
+/// random graph shapes (failure-injection sweep).
+#[test]
+fn property_sf_robust_on_random_graphs() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed);
+        let n = 30 + rng.below(120);
+        // Random connected-ish graph: path backbone + random extra edges.
+        let mut edges: Vec<(usize, usize, f64)> =
+            (1..n).map(|i| (i - 1, i, rng.uniform_in(0.1, 2.0))).collect();
+        for _ in 0..n {
+            let a = rng.below(n);
+            let b = rng.below(n);
+            if a != b {
+                edges.push((a, b, rng.uniform_in(0.1, 2.0)));
+            }
+        }
+        let g = gfi::graph::CsrGraph::from_edges(n, &edges);
+        let sf = SeparatorFactorization::new(
+            &g,
+            SfConfig {
+                kernel: KernelFn::ExpNeg(1.0),
+                unit_size: 0.05,
+                threshold: 16,
+                separator_size: 4,
+                seed,
+            },
+        );
+        let x = rand_field(n, 2, seed);
+        let out = sf.apply(&x);
+        assert!(out.data.iter().all(|v| v.is_finite()), "seed {seed}");
+        // Sanity vs exact. Random (non-mesh) graphs are outside SF's
+        // bounded-genus design envelope — the guard here is "not garbage",
+        // not mesh-grade accuracy.
+        let bf = BruteForceSp::new(&g, &KernelFn::ExpNeg(1.0));
+        let e = rel_err(&out.data, &bf.apply(&x).data);
+        assert!(e < 0.9, "seed {seed}: rel err {e}");
+    }
+}
+
+/// Property: RFD variance shrinks with the feature count (MSE(m=64) <
+/// MSE(m=4) against the exact low-rank limit... measured against the
+/// dense ε-graph diffusion).
+#[test]
+fn property_rfd_error_decreases_with_features() {
+    let mut rng = Rng::new(9);
+    let pc = gfi::pointcloud::random_cloud(80, &mut rng);
+    let w = pc.dense_adjacency(0.25, gfi::pointcloud::Norm::LInf, true);
+    let dense = gfi::integrators::bf::BruteForceDiffusion::from_dense(&w, 0.4);
+    let x = rand_field(80, 2, 10);
+    let exact = dense.apply(&x);
+    let err_at = |m: usize| {
+        // Average over seeds to smooth RF noise.
+        let mut acc = 0.0;
+        for seed in 0..3 {
+            let rfd = RfDiffusion::new(
+                &pc,
+                RfdConfig {
+                    num_features: m,
+                    epsilon: 0.25,
+                    lambda: 0.4,
+                    seed,
+                    ..Default::default()
+                },
+            );
+            acc += rel_err(&rfd.apply(&x).data, &exact.data);
+        }
+        acc / 3.0
+    };
+    let low = err_at(4);
+    let high = err_at(128);
+    assert!(high < low, "m=128 err {high} !< m=4 err {low}");
+}
+
+/// Integration: coordinator round-trip against a directly-built
+/// integrator (cache coherence).
+#[test]
+fn integration_engine_matches_direct() {
+    let engine = gfi::coordinator::Engine::new(None);
+    let mut mesh = gfi::mesh::icosphere(2);
+    mesh.normalize_unit_box();
+    let id = engine.register_mesh(mesh.clone(), "m");
+    let g = mesh.to_graph();
+    let n = g.n;
+    let x = rand_field(n, 3, 20);
+    let cfg = SfConfig { kernel: KernelFn::ExpNeg(3.0), seed: 2, ..Default::default() };
+    let direct = SeparatorFactorization::new(&g, cfg.clone()).apply(&x);
+    let (via_engine, _) = engine
+        .integrate(id, &gfi::coordinator::Backend::Sf(cfg), &x)
+        .unwrap();
+    let e = rel_err(&via_engine.data, &direct.data);
+    assert!(e < 1e-12, "engine route differs: {e}");
+}
+
+/// Integration: OT barycenter through two different FMs stays consistent.
+#[test]
+fn integration_barycenter_sf_close_to_bf() {
+    let mut mesh = gfi::mesh::icosphere(2);
+    mesh.normalize_unit_box();
+    let g = mesh.to_graph();
+    let n = g.n;
+    let area = mesh.vertex_areas();
+    let bf = BruteForceSp::new(&g, &KernelFn::ExpNeg(8.0));
+    let fm_bf = |x: &Mat| bf.apply(x);
+    let mus = gfi::ot::concentrated_distributions(n, &[0, n / 2], &fm_bf);
+    let cfg = gfi::ot::BarycenterConfig { max_iter: 25, ..Default::default() };
+    let mu_bf =
+        gfi::ot::wasserstein_barycenter(&mus, &area, &[0.5, 0.5], &fm_bf, &cfg);
+    let sf = SeparatorFactorization::new(
+        &g,
+        SfConfig { kernel: KernelFn::ExpNeg(8.0), ..Default::default() },
+    );
+    let fm_sf = |x: &Mat| sf.apply(x);
+    let mu_sf =
+        gfi::ot::wasserstein_barycenter(&mus, &area, &[0.5, 0.5], &fm_sf, &cfg);
+    let m = gfi::util::stats::mse(&mu_sf, &mu_bf);
+    assert!(m < 1e-4, "barycenter MSE {m}");
+}
