@@ -1,6 +1,9 @@
 //! Integrator hot-path benchmarks (criterion-lite; `cargo bench`).
 //! Covers the workloads behind Fig. 4: SF/RFD/tree/BF pre-processing and
-//! apply at two mesh scales, plus the Hankel/FFT and matmul substrate.
+//! apply at two mesh scales, the n=2048 acceptance workloads for the
+//! blocked-GEMM + batched-distance kernel layers, plus the Hankel/FFT and
+//! matmul substrate. Writes `BENCH_integrators.json` (median ns per case)
+//! so the perf trajectory is tracked from PR 1 onward.
 
 use gfi::fft::hankel_matvec_multi;
 use gfi::integrators::bf::BruteForceSp;
@@ -9,11 +12,12 @@ use gfi::integrators::sf::{SeparatorFactorization, SfConfig};
 use gfi::integrators::trees::{TreeEnsembleIntegrator, TreeKind};
 use gfi::integrators::{FieldIntegrator, KernelFn};
 use gfi::linalg::Mat;
-use gfi::util::bench::Bench;
+use gfi::util::bench::{write_json, Bench, BenchResult};
 use gfi::util::rng::Rng;
 
 fn main() {
-    let bench = Bench::new().with_budget(2.0).with_max_iters(12);
+    let bench = Bench::new().with_budget(2.0).with_max_iters(12).with_env_overrides();
+    let mut results: Vec<BenchResult> = Vec::new();
     for subdiv in [3usize, 4] {
         let mut mesh = gfi::mesh::icosphere(subdiv);
         mesh.normalize_unit_box();
@@ -24,17 +28,17 @@ fn main() {
         let field = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.gaussian()).collect());
 
         let sf_cfg = SfConfig { kernel: KernelFn::ExpNeg(4.0), ..Default::default() };
-        bench.run(&format!("sf/preprocess/n={n}"), || {
+        results.push(bench.run(&format!("sf/preprocess/n={n}"), || {
             SeparatorFactorization::new(&g, sf_cfg.clone())
-        });
+        }));
         let sf = SeparatorFactorization::new(&g, sf_cfg.clone());
-        bench.run(&format!("sf/apply/n={n}"), || sf.apply(&field));
+        results.push(bench.run(&format!("sf/apply/n={n}"), || sf.apply(&field)));
         // General-f (FFT) path.
         let sf_gen = SeparatorFactorization::new(
             &g,
             SfConfig { kernel: KernelFn::GaussianSq(4.0), ..sf_cfg.clone() },
         );
-        bench.run(&format!("sf/apply-generalf/n={n}"), || sf_gen.apply(&field));
+        results.push(bench.run(&format!("sf/apply-generalf/n={n}"), || sf_gen.apply(&field)));
 
         let rfd_cfg = RfdConfig {
             num_features: 32,
@@ -42,22 +46,46 @@ fn main() {
             lambda: -0.5,
             ..Default::default()
         };
-        bench.run(&format!("rfd/preprocess/n={n}"), || {
+        results.push(bench.run(&format!("rfd/preprocess/n={n}"), || {
             RfDiffusion::new(&pc, rfd_cfg.clone())
-        });
+        }));
         let rfd = RfDiffusion::new(&pc, rfd_cfg.clone());
-        bench.run(&format!("rfd/apply/n={n}"), || rfd.apply(&field));
+        results.push(bench.run(&format!("rfd/apply/n={n}"), || rfd.apply(&field)));
 
         let trees = TreeEnsembleIntegrator::new(&g, TreeKind::Bartal, 3, 4.0, 0);
-        bench.run(&format!("trees-bartal3/apply/n={n}"), || trees.apply(&field));
+        results.push(bench.run(&format!("trees-bartal3/apply/n={n}"), || trees.apply(&field)));
 
         if n <= 1000 {
-            bench.run(&format!("bf/preprocess/n={n}"), || {
+            results.push(bench.run(&format!("bf/preprocess/n={n}"), || {
                 BruteForceSp::new(&g, &KernelFn::ExpNeg(4.0))
-            });
+            }));
             let bf = BruteForceSp::new(&g, &KernelFn::ExpNeg(4.0));
-            bench.run(&format!("bf/apply/n={n}"), || bf.apply(&field));
+            results.push(bench.run(&format!("bf/apply/n={n}"), || bf.apply(&field)));
         }
+    }
+
+    // Acceptance workloads (ISSUE 1): pre-processing throughput at
+    // n=2048 — RFD (blocked GEMM Gram + Woodbury core) on a random cloud,
+    // BF shortest-path kernel (batched parallel Dijkstra) on its ε-graph.
+    {
+        let mut rng = Rng::new(7);
+        let pc = gfi::pointcloud::random_cloud(2048, &mut rng);
+        let cfg = RfdConfig {
+            num_features: 32,
+            epsilon: 0.15,
+            lambda: -0.5,
+            ..Default::default()
+        };
+        results.push(bench.run("rfd/preprocess/n=2048", || {
+            RfDiffusion::new(&pc, cfg.clone())
+        }));
+        let rfd = RfDiffusion::new(&pc, cfg.clone());
+        let field = Mat::from_vec(2048, 3, (0..2048 * 3).map(|_| rng.gaussian()).collect());
+        results.push(bench.run("rfd/apply/n=2048", || rfd.apply(&field)));
+        let g = pc.epsilon_graph(0.15, gfi::pointcloud::Norm::LInf, true);
+        results.push(bench.run("bf/preprocess/n=2048", || {
+            BruteForceSp::new(&g, &KernelFn::ExpNeg(4.0))
+        }));
     }
 
     // Substrate: Hankel multiply + dense matmul.
@@ -65,10 +93,18 @@ fn main() {
     for d in [256usize, 2048] {
         let h: Vec<f64> = (0..2 * d).map(|_| rng.gaussian()).collect();
         let z: Vec<f64> = (0..d * 3).map(|_| rng.gaussian()).collect();
-        bench.run(&format!("hankel/fft-multi3/D={d}"), || {
+        results.push(bench.run(&format!("hankel/fft-multi3/D={d}"), || {
             hankel_matvec_multi(&h, &z, d, 3)
-        });
+        }));
     }
     let a = Mat::from_vec(512, 512, (0..512 * 512).map(|_| rng.gaussian()).collect());
-    bench.run("linalg/matmul/512", || a.matmul(&a));
+    results.push(bench.run("linalg/matmul/512", || a.matmul(&a)));
+    let b512 = Mat::from_vec(512, 512, (0..512 * 512).map(|_| rng.gaussian()).collect());
+    results.push(bench.run("linalg/t_matmul/512", || a.t_matmul(&b512)));
+
+    let out = "BENCH_integrators.json";
+    match write_json(out, &results) {
+        Ok(()) => println!("\nwrote {out} ({} benchmarks)", results.len()),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
 }

@@ -24,7 +24,7 @@ use std::time::Instant;
 const CLIENTS: usize = 8;
 const REQUESTS_PER_CLIENT: usize = 25;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gfi::util::error::Result<()> {
     // --- Boot the stack. ---
     let artifacts = std::path::Path::new("artifacts");
     let engine = Arc::new(Engine::new(
@@ -152,15 +152,15 @@ struct Client {
 }
 
 impl Client {
-    fn connect(addr: std::net::SocketAddr) -> anyhow::Result<Self> {
+    fn connect(addr: std::net::SocketAddr) -> gfi::util::error::Result<Self> {
         let stream = TcpStream::connect(addr)?;
         let reader = BufReader::new(stream.try_clone()?);
         Ok(Client { stream, reader })
     }
-    fn send(&mut self, line: &str) -> anyhow::Result<gfi::util::json::Json> {
+    fn send(&mut self, line: &str) -> gfi::util::error::Result<gfi::util::json::Json> {
         writeln!(self.stream, "{line}")?;
         let mut resp = String::new();
         self.reader.read_line(&mut resp)?;
-        gfi::util::json::parse(&resp).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+        gfi::util::json::parse(&resp).map_err(|e| gfi::anyhow!("bad response: {e}"))
     }
 }

@@ -54,10 +54,13 @@ pub fn masked_performer_attention(
     let mfeat = mask_a.cols;
     let mut num = Mat::zeros(n, dv);
     let mut den = vec![0.0; n];
-    // Augment V with a ones column to share the two passes.
+    // Augment V with a ones column to share the two passes. One scratch
+    // matrix reused (and re-zeroed) across mask features — the per-feature
+    // allocation was the hot-loop's only allocator traffic.
+    let mut vj = Mat::zeros(n, dv + 1);
     for j in 0..mfeat {
         // Vj = diag(B[:,j]) [V | 1]
-        let mut vj = Mat::zeros(n, dv + 1);
+        vj.data.fill(0.0);
         for i in 0..n {
             let b = mask_b[(i, j)];
             if b == 0.0 {
@@ -174,10 +177,10 @@ mod tests {
         // Random positive rank-3 mask.
         let a = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.uniform() + 0.1).collect());
         let b = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.uniform() + 0.1).collect());
-        let mask = a.matmul(&b.transpose());
+        let mask = a.matmul_nt(&b);
         let fast = masked_performer_attention(&qp, &kp, &v, &a, &b);
         // Dense oracle using the φ-kernel (not exp): K̂_ij = φqᵢᵀφkⱼ.
-        let khat = qp.matmul(&kp.transpose());
+        let khat = qp.matmul_nt(&kp);
         let mut out = Mat::zeros(n, v.cols);
         for i in 0..n {
             let mut den = 0.0;
@@ -206,7 +209,7 @@ mod tests {
         let kp = performer_features(&k, &proj);
         let a = Mat::from_vec(n, 2, (0..n * 2).map(|_| rng.uniform() + 0.2).collect());
         let b = Mat::from_vec(n, 2, (0..n * 2).map(|_| rng.uniform() + 0.2).collect());
-        let mask = a.matmul(&b.transpose());
+        let mask = a.matmul_nt(&b);
         let fast = masked_performer_attention(&qp, &kp, &v, &a, &b);
         let exact = exact_masked_attention(&q, &k, &v, &mask);
         let e = crate::util::stats::rel_err(&fast.data, &exact.data);

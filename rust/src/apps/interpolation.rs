@@ -6,6 +6,7 @@
 //! `apply` over the masked field. Quality = mean cosine similarity between
 //! predicted and ground-truth vectors on the masked set.
 
+use crate::graph::{distances, CsrGraph};
 use crate::integrators::FieldIntegrator;
 use crate::linalg::Mat;
 use crate::util::rng::Rng;
@@ -55,6 +56,34 @@ impl InterpolationTask {
         (cos, pred)
     }
 
+    /// Nearest-unmasked baseline: every masked vertex copies the field of
+    /// its graph-nearest unmasked vertex — one multi-source Voronoi sweep
+    /// through [`distances::nearest_sources`] instead of per-vertex
+    /// searches. The floor any kernel integrator has to beat.
+    pub fn nearest_unmasked_prediction(&self, g: &CsrGraph) -> Mat {
+        let n = self.truth.rows;
+        assert_eq!(g.n, n);
+        let mut is_masked = vec![false; n];
+        for &v in &self.masked {
+            is_masked[v] = true;
+        }
+        let unmasked: Vec<usize> =
+            (0..n).filter(|&v| !is_masked[v]).collect();
+        let mut pred = self.masked_field.clone();
+        if unmasked.is_empty() {
+            return pred;
+        }
+        let (_dist, assign) = distances::nearest_sources(g, &unmasked);
+        for &v in &self.masked {
+            let a = assign[v];
+            if a != u32::MAX {
+                let src = unmasked[a as usize];
+                pred.row_mut(v).copy_from_slice(self.masked_field.row(src));
+            }
+        }
+        pred
+    }
+
     /// Cosine similarity over masked rows only.
     pub fn score(&self, pred: &Mat) -> f64 {
         let d = self.truth.cols;
@@ -98,6 +127,28 @@ mod tests {
         let bf = BruteForceSp::new(&g, &KernelFn::ExpNeg(4.0));
         let (cos, _) = task.evaluate(&bf);
         assert!(cos > 0.9, "cosine similarity {cos}");
+    }
+
+    #[test]
+    fn nearest_unmasked_baseline_reasonable_on_sphere() {
+        // Copying the nearest unmasked normal on a sphere should align
+        // far better than chance (smooth field, local copies).
+        let mesh = icosphere(2);
+        let g = mesh.to_graph();
+        let normals = mesh.vertex_normals();
+        let mut rng = Rng::new(7);
+        let task = InterpolationTask::from_vectors(&normals, 0.5, &mut rng);
+        let pred = task.nearest_unmasked_prediction(&g);
+        let cos = task.score(&pred);
+        assert!(cos > 0.7, "nearest-unmasked cosine {cos}");
+        // Unmasked rows must be untouched.
+        let masked: std::collections::HashSet<usize> =
+            task.masked.iter().copied().collect();
+        for v in 0..g.n {
+            if !masked.contains(&v) {
+                assert_eq!(pred.row(v), task.masked_field.row(v));
+            }
+        }
     }
 
     #[test]

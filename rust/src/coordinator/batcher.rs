@@ -7,7 +7,7 @@
 
 use crate::coordinator::{Backend, Engine};
 use crate::linalg::Mat;
-use anyhow::Result;
+use crate::util::error::Result;
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -57,10 +57,10 @@ impl Batcher {
         let key = format!("{cloud}:{}", backend.cache_key());
         self.tx
             .send(Pending { cloud, key, backend, field, reply: reply_tx })
-            .map_err(|_| anyhow::anyhow!("batcher worker gone"))?;
+            .map_err(|_| crate::anyhow!("batcher worker gone"))?;
         reply_rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("batcher dropped reply"))?
+            .map_err(|_| crate::anyhow!("batcher dropped reply"))?
     }
 }
 
@@ -140,7 +140,7 @@ fn execute_group(engine: &Engine, group: Vec<Pending>, max_cols: usize) {
             Err(e) => {
                 let msg = format!("{e:#}");
                 for p in chunk.drain(..) {
-                    let _ = p.reply.send(Err(anyhow::anyhow!("{msg}")));
+                    let _ = p.reply.send(Err(crate::anyhow!("{msg}")));
                 }
             }
         }

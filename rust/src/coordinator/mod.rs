@@ -30,7 +30,7 @@ use crate::linalg::Mat;
 use crate::mesh::TriMesh;
 use crate::pointcloud::PointCloud;
 use crate::runtime::PjrtRuntime;
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};

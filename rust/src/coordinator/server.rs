@@ -23,7 +23,7 @@ use crate::integrators::KernelFn;
 use crate::linalg::Mat;
 use crate::mesh;
 use crate::util::json::{parse, Json};
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};

@@ -47,19 +47,32 @@ impl HankelPlan {
 
     /// Applies the Hankel matrix to one vector.
     pub fn apply(&self, z: &[f64]) -> Vec<f64> {
+        let mut scratch = vec![Cpx::default(); self.plan.len()];
+        let mut out = vec![0.0; self.rows];
+        self.apply_into(z, &mut scratch, &mut out);
+        out
+    }
+
+    /// Allocation-free apply: `scratch` must be `plan.len()` long (it is
+    /// clobbered), `out` must be `rows` long. Lets callers with many
+    /// slices per SF level reuse one complex buffer across applies.
+    pub fn apply_into(&self, z: &[f64], scratch: &mut [Cpx], out: &mut [f64]) {
         assert_eq!(z.len(), self.zlen);
-        let n = self.plan.len();
-        let mut zr: Vec<Cpx> = vec![Cpx::default(); n];
+        assert_eq!(scratch.len(), self.plan.len());
+        assert_eq!(out.len(), self.rows);
+        scratch.fill(Cpx::default());
         for (j, &v) in z.iter().enumerate() {
             // reversed z
-            zr[self.zlen - 1 - j] = Cpx::new(v, 0.0);
+            scratch[self.zlen - 1 - j] = Cpx::new(v, 0.0);
         }
-        self.plan.forward(&mut zr);
-        for (x, y) in zr.iter_mut().zip(&self.h_hat) {
+        self.plan.forward(scratch);
+        for (x, y) in scratch.iter_mut().zip(&self.h_hat) {
             *x = x.mul(*y);
         }
-        self.plan.inverse(&mut zr);
-        (0..self.rows).map(|i| zr[i + self.zlen - 1].re).collect()
+        self.plan.inverse(scratch);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = scratch[i + self.zlen - 1].re;
+        }
     }
 
     pub fn rows(&self) -> usize {
@@ -77,11 +90,13 @@ pub fn hankel_matvec_multi(h: &[f64], z: &[f64], rows: usize, d: usize) -> Vec<f
     let plan = HankelPlan::new(h, rows, zlen);
     let n = plan.plan.len();
     let mut out = vec![0.0; rows * d];
+    // One complex scratch buffer reused across column pairs.
+    let mut zr = vec![Cpx::default(); n];
     let mut c = 0;
     while c < d {
         if c + 1 < d {
             // Pack columns c (real) and c+1 (imag) into one complex FFT.
-            let mut zr = vec![Cpx::default(); n];
+            zr.fill(Cpx::default());
             for j in 0..zlen {
                 zr[zlen - 1 - j] = Cpx::new(z[j * d + c], z[j * d + c + 1]);
             }
@@ -98,7 +113,8 @@ pub fn hankel_matvec_multi(h: &[f64], z: &[f64], rows: usize, d: usize) -> Vec<f
             c += 2;
         } else {
             let col: Vec<f64> = (0..zlen).map(|j| z[j * d + c]).collect();
-            let w = plan.apply(&col);
+            let mut w = vec![0.0; rows];
+            plan.apply_into(&col, &mut zr, &mut w);
             for i in 0..rows {
                 out[i * d + c] = w[i];
             }

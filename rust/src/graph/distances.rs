@@ -1,0 +1,358 @@
+//! Batched parallel graph-distance engine.
+//!
+//! Every many-source shortest-path workload in the library (brute-force
+//! kernel materialization, SF's per-separator sweeps, leaf all-pairs, GW
+//! shortest-path structure matrices, interpolation baselines) used to run
+//! one independent [`super::dijkstra`] per source — allocating a fresh
+//! distance array and a fresh binary heap every time. This module runs the
+//! same algorithm through per-thread reusable scratch:
+//!
+//! * [`SsspScratch`] — a distance array reset lazily in `O(|touched|)`
+//!   per run (not `O(N)`), a reusable flat binary heap of `(f64, u32)`
+//!   pairs (no per-push allocation, no 16-byte `partial_cmp` wrapper), and
+//!   an optional nearest-source assignment channel.
+//! * [`for_each_source`] — dynamic work-stealing over a source list with
+//!   one scratch per worker thread; the callback sees each dense distance
+//!   row exactly once.
+//! * [`distance_matrix`] / [`rows`] — the common materializations.
+//! * [`nearest_sources`] — multi-source Voronoi: distance to, and index
+//!   of, the nearest source per vertex.
+
+use super::CsrGraph;
+use crate::linalg::Mat;
+use crate::util::par;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Flat binary min-heap push on `(dist, node)` pairs.
+#[inline]
+fn heap_push(h: &mut Vec<(f64, u32)>, item: (f64, u32)) {
+    h.push(item);
+    let mut i = h.len() - 1;
+    while i > 0 {
+        let parent = (i - 1) / 2;
+        if h[parent].0 <= h[i].0 {
+            break;
+        }
+        h.swap(i, parent);
+        i = parent;
+    }
+}
+
+/// Flat binary min-heap pop.
+#[inline]
+fn heap_pop(h: &mut Vec<(f64, u32)>) -> Option<(f64, u32)> {
+    let len = h.len();
+    if len == 0 {
+        return None;
+    }
+    h.swap(0, len - 1);
+    let top = h.pop().unwrap();
+    let n = h.len();
+    let mut i = 0;
+    loop {
+        let l = 2 * i + 1;
+        if l >= n {
+            break;
+        }
+        let r = l + 1;
+        let smallest = if r < n && h[r].0 < h[l].0 { r } else { l };
+        if h[i].0 <= h[smallest].0 {
+            break;
+        }
+        h.swap(i, smallest);
+        i = smallest;
+    }
+    Some(top)
+}
+
+/// Reusable single-/multi-source Dijkstra state for one graph size.
+/// Construction is the only `O(N)` allocation; every subsequent run costs
+/// `O(|reached| log |reached|)` with zero allocation beyond heap growth on
+/// the first run.
+pub struct SsspScratch {
+    dist: Vec<f64>,
+    /// Vertices whose `dist` entry differs from `INFINITY` (reset list).
+    touched: Vec<u32>,
+    heap: Vec<(f64, u32)>,
+}
+
+impl SsspScratch {
+    pub fn new(n: usize) -> Self {
+        SsspScratch { dist: vec![f64::INFINITY; n], touched: Vec::new(), heap: Vec::new() }
+    }
+
+    /// Nearest-source Dijkstra from `sources`. Returns the dense distance
+    /// row (`INFINITY` = unreachable), valid until the next run on this
+    /// scratch.
+    pub fn run(&mut self, g: &CsrGraph, sources: &[usize]) -> &[f64] {
+        self.run_impl(g, sources, None);
+        &self.dist
+    }
+
+    /// Like [`SsspScratch::run`], additionally recording in `assign[v]`
+    /// the index (into `sources`) of the nearest source reaching `v`.
+    /// Entries for unreached vertices are left untouched — pre-fill with
+    /// a sentinel.
+    pub fn run_with_assignment(
+        &mut self,
+        g: &CsrGraph,
+        sources: &[usize],
+        assign: &mut [u32],
+    ) -> &[f64] {
+        self.run_impl(g, sources, Some(assign));
+        &self.dist
+    }
+
+    /// Consumes the scratch, yielding the final distance row (the
+    /// one-shot compatibility path for [`super::multi_source_dijkstra`]).
+    pub fn into_dist(self) -> Vec<f64> {
+        self.dist
+    }
+
+    fn run_impl(&mut self, g: &CsrGraph, sources: &[usize], mut assign: Option<&mut [u32]>) {
+        assert_eq!(self.dist.len(), g.n, "scratch sized for a different graph");
+        if let Some(a) = assign.as_deref() {
+            assert_eq!(a.len(), g.n);
+        }
+        // Lazy reset: only entries the previous run touched.
+        for &v in &self.touched {
+            self.dist[v as usize] = f64::INFINITY;
+        }
+        self.touched.clear();
+        self.heap.clear();
+        for (si, &s) in sources.iter().enumerate() {
+            if self.dist[s] > 0.0 {
+                self.dist[s] = 0.0;
+                self.touched.push(s as u32);
+                if let Some(a) = assign.as_deref_mut() {
+                    a[s] = si as u32;
+                }
+                heap_push(&mut self.heap, (0.0, s as u32));
+            }
+        }
+        while let Some((d, v)) = heap_pop(&mut self.heap) {
+            let vu = v as usize;
+            if d > self.dist[vu] {
+                continue; // stale entry (lazy deletion)
+            }
+            let (lo, hi) = (g.offsets[vu], g.offsets[vu + 1]);
+            for e in lo..hi {
+                let u = g.targets[e] as usize;
+                let nd = d + g.weights[e];
+                if nd < self.dist[u] {
+                    if self.dist[u] == f64::INFINITY {
+                        self.touched.push(u as u32);
+                    }
+                    self.dist[u] = nd;
+                    if let Some(a) = assign.as_deref_mut() {
+                        let label = a[vu];
+                        a[u] = label;
+                    }
+                    heap_push(&mut self.heap, (nd, u as u32));
+                }
+            }
+        }
+    }
+}
+
+/// Runs one single-source Dijkstra per entry of `sources`, in parallel
+/// with per-thread scratch, invoking `f(source_index, distance_row)` for
+/// each. `f` runs concurrently for different indices; each index is seen
+/// exactly once.
+pub fn for_each_source<F>(g: &CsrGraph, sources: &[usize], f: F)
+where
+    F: Fn(usize, &[f64]) + Sync,
+{
+    let n_src = sources.len();
+    if n_src == 0 {
+        return;
+    }
+    let nt = par::num_threads().min(n_src);
+    if nt <= 1 {
+        let mut scratch = SsspScratch::new(g.n);
+        for (i, &s) in sources.iter().enumerate() {
+            f(i, scratch.run(g, &[s]));
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|sc| {
+        for _ in 0..nt {
+            sc.spawn(|| {
+                let mut scratch = SsspScratch::new(g.n);
+                loop {
+                    let i = counter.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_src {
+                        break;
+                    }
+                    f(i, scratch.run(g, &[sources[i]]));
+                }
+            });
+        }
+    });
+}
+
+/// Materializes the `|sources| × n` distance matrix (row `i` = distances
+/// from `sources[i]`).
+pub fn distance_matrix(g: &CsrGraph, sources: &[usize]) -> Mat {
+    let n = g.n;
+    let mut out = Mat::zeros(sources.len(), n);
+    {
+        let cells = par::as_send_cells(&mut out.data);
+        for_each_source(g, sources, |i, d| {
+            // SAFETY: each source index is delivered exactly once, and
+            // rows are disjoint slices of the output buffer.
+            let row =
+                unsafe { std::slice::from_raw_parts_mut(cells.get(i * n) as *mut f64, n) };
+            row.copy_from_slice(d);
+        });
+    }
+    out
+}
+
+/// Per-source distance rows as owned vectors (drop-in for the old
+/// `par_map(ns, |i| dijkstra(g, src[i]))` call sites).
+pub fn rows(g: &CsrGraph, sources: &[usize]) -> Vec<Vec<f64>> {
+    let mut out: Vec<Vec<f64>> = (0..sources.len()).map(|_| Vec::new()).collect();
+    {
+        let cells = par::as_send_cells(&mut out);
+        for_each_source(g, sources, |i, d| {
+            // SAFETY: index i is delivered exactly once.
+            unsafe { *cells.get(i) = d.to_vec() };
+        });
+    }
+    out
+}
+
+/// Multi-source Voronoi decomposition: for every vertex, the distance to
+/// the nearest source and that source's index into `sources`
+/// (`u32::MAX` = unreachable from every source).
+pub fn nearest_sources(g: &CsrGraph, sources: &[usize]) -> (Vec<f64>, Vec<u32>) {
+    assert!(sources.len() < u32::MAX as usize);
+    let mut assign = vec![u32::MAX; g.n];
+    let mut scratch = SsspScratch::new(g.n);
+    scratch.run_with_assignment(g, sources, &mut assign);
+    (scratch.into_dist(), assign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dijkstra;
+
+    fn grid(w: usize, h: usize) -> CsrGraph {
+        let mut e = Vec::new();
+        for r in 0..h {
+            for c in 0..w {
+                let v = r * w + c;
+                if c + 1 < w {
+                    e.push((v, v + 1, 1.0));
+                }
+                if r + 1 < h {
+                    e.push((v, v + w, 1.0));
+                }
+            }
+        }
+        CsrGraph::from_edges(w * h, &e)
+    }
+
+    #[test]
+    fn scratch_matches_dijkstra_across_reuses() {
+        let g = grid(7, 5);
+        let mut scratch = SsspScratch::new(g.n);
+        for s in [0usize, 17, 34, 0, 5] {
+            let fast = scratch.run(&g, &[s]).to_vec();
+            assert_eq!(fast, dijkstra(&g, s), "source {s}");
+        }
+    }
+
+    #[test]
+    fn lazy_reset_handles_disconnected() {
+        // Run on the big component, then from the isolated pair: stale
+        // entries from run 1 must not leak into run 2.
+        let g = CsrGraph::from_edges(5, &[(0, 1, 1.0), (1, 2, 2.0), (3, 4, 0.5)]);
+        let mut scratch = SsspScratch::new(g.n);
+        let d1 = scratch.run(&g, &[0]).to_vec();
+        assert_eq!(d1[..3], [0.0, 1.0, 3.0]);
+        assert!(d1[3].is_infinite() && d1[4].is_infinite());
+        let d2 = scratch.run(&g, &[3]).to_vec();
+        assert!(d2[0].is_infinite() && d2[2].is_infinite());
+        assert_eq!(d2[3], 0.0);
+        assert_eq!(d2[4], 0.5);
+    }
+
+    #[test]
+    fn distance_matrix_matches_per_source() {
+        let g = grid(6, 6);
+        let sources: Vec<usize> = (0..g.n).step_by(5).collect();
+        let m = distance_matrix(&g, &sources);
+        assert_eq!((m.rows, m.cols), (sources.len(), g.n));
+        for (i, &s) in sources.iter().enumerate() {
+            assert_eq!(m.row(i), &dijkstra(&g, s)[..], "source {s}");
+        }
+    }
+
+    #[test]
+    fn rows_matches_distance_matrix() {
+        let g = grid(4, 7);
+        let sources = vec![3, 11, 26, 0];
+        let rs = rows(&g, &sources);
+        let m = distance_matrix(&g, &sources);
+        for (i, r) in rs.iter().enumerate() {
+            assert_eq!(&r[..], m.row(i));
+        }
+    }
+
+    #[test]
+    fn empty_sources_noop() {
+        let g = grid(3, 3);
+        let m = distance_matrix(&g, &[]);
+        assert_eq!((m.rows, m.cols), (0, g.n));
+        let mut scratch = SsspScratch::new(g.n);
+        let d = scratch.run(&g, &[]);
+        assert!(d.iter().all(|x| x.is_infinite()));
+    }
+
+    #[test]
+    fn multi_source_matches_manhattan_oracle() {
+        // 9×4 grid with sources at opposite corners (0 and 35): the
+        // nearest-source distance is the min of the two Manhattan terms.
+        let g = grid(9, 4);
+        let mut scratch = SsspScratch::new(g.n);
+        let fast = scratch.run(&g, &[0, 35]).to_vec();
+        for r in 0..4usize {
+            for c in 0..9usize {
+                let want = (r + c).min((3 - r) + (8 - c)) as f64;
+                assert_eq!(fast[r * 9 + c], want, "vertex ({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn nearest_sources_voronoi_on_path() {
+        // Path 0-1-2-3-4-5 with sources at the ends: vertices 0..2 belong
+        // to source 0, vertices 4..5 to source 1 (vertex 3 ties — either
+        // label is valid, distance must be exact).
+        let g = CsrGraph::from_edges(
+            6,
+            &(0..5).map(|i| (i, i + 1, 1.0)).collect::<Vec<_>>(),
+        );
+        let (d, a) = nearest_sources(&g, &[0, 5]);
+        assert_eq!(d, vec![0.0, 1.0, 2.0, 2.0, 1.0, 0.0]);
+        assert_eq!(&a[..2], &[0, 0]);
+        assert_eq!(&a[4..], &[1, 1]);
+        assert!(a[2] == 0);
+        assert!(a[3] == 0 || a[3] == 1);
+    }
+
+    #[test]
+    fn nearest_sources_unreachable_sentinel() {
+        let g = CsrGraph::from_edges(4, &[(0, 1, 1.0)]);
+        let (d, a) = nearest_sources(&g, &[0]);
+        assert!(d[2].is_infinite() && d[3].is_infinite());
+        assert_eq!(a[2], u32::MAX);
+        assert_eq!(a[3], u32::MAX);
+        assert_eq!(a[0], 0);
+        assert_eq!(a[1], 0);
+    }
+}

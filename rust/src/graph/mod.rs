@@ -1,9 +1,11 @@
 //! Weighted undirected graph substrate: CSR storage, shortest paths
-//! (Dijkstra / BFS), connected components, induced subgraphs, Laplacians,
+//! (Dijkstra / BFS), the batched parallel distance engine
+//! ([`distances`]), connected components, induced subgraphs, Laplacians,
 //! and sparse matvec — everything SF, the tree embeddings, and the
 //! diffusion baselines need.
 
 mod csr;
+pub mod distances;
 mod shortest_path;
 
 pub use csr::CsrGraph;

@@ -32,33 +32,19 @@ impl Ord for HeapItem {
 }
 
 /// Single-source Dijkstra. Unreachable vertices get `f64::INFINITY`.
+///
+/// One-shot convenience over [`super::distances::SsspScratch`]; loops
+/// over many sources should use [`super::distances`] instead, which
+/// reuses the scratch across sources and parallelizes.
 pub fn dijkstra(g: &CsrGraph, source: usize) -> Vec<f64> {
     multi_source_dijkstra(g, &[source])
 }
 
 /// Multi-source Dijkstra: distance to the *nearest* source.
 pub fn multi_source_dijkstra(g: &CsrGraph, sources: &[usize]) -> Vec<f64> {
-    let mut dist = vec![f64::INFINITY; g.n];
-    let mut heap = BinaryHeap::new();
-    for &s in sources {
-        if dist[s] > 0.0 {
-            dist[s] = 0.0;
-            heap.push(HeapItem { dist: 0.0, node: s });
-        }
-    }
-    while let Some(HeapItem { dist: d, node: v }) = heap.pop() {
-        if d > dist[v] {
-            continue;
-        }
-        for (u, w) in g.neighbors(v) {
-            let nd = d + w;
-            if nd < dist[u] {
-                dist[u] = nd;
-                heap.push(HeapItem { dist: nd, node: u });
-            }
-        }
-    }
-    dist
+    let mut scratch = super::distances::SsspScratch::new(g.n);
+    scratch.run(g, sources);
+    scratch.into_dist()
 }
 
 /// Dijkstra truncated at `radius`: vertices farther than `radius` keep

@@ -121,22 +121,19 @@ fn sinkhorn_plan(
     }
     let mut u = vec![1.0; n];
     let mut v = vec![1.0; m];
+    // Allocation-free matvec scratch reused across all Sinkhorn sweeps.
+    let mut kv = vec![0.0; n];
+    let mut kt_u = vec![0.0; m];
     for _ in 0..iters {
         // u = p ./ (K v)
-        for i in 0..n {
-            let s: f64 = k.row(i).iter().zip(&v).map(|(a, b)| a * b).sum();
-            u[i] = p[i] / s.max(1e-300);
+        k.matvec_into(&v, &mut kv);
+        for (ui, (&pi, &s)) in u.iter_mut().zip(p.iter().zip(&kv)) {
+            *ui = pi / s.max(1e-300);
         }
         // v = q ./ (Kᵀ u)
-        let mut kt_u = vec![0.0; m];
-        for i in 0..n {
-            let ui = u[i];
-            for (j, &kij) in k.row(i).iter().enumerate() {
-                kt_u[j] += kij * ui;
-            }
-        }
-        for j in 0..m {
-            v[j] = q[j] / kt_u[j].max(1e-300);
+        k.matvec_t_into(&u, &mut kt_u);
+        for (vj, (&qj, &s)) in v.iter_mut().zip(q.iter().zip(&kt_u)) {
+            *vj = qj / s.max(1e-300);
         }
     }
     let mut t = k;

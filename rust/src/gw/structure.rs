@@ -2,8 +2,10 @@
 //! matrices `C`, `D` accessed only through matvecs and Hadamard-square
 //! vecs — never materialized for the fast variants.
 
+use crate::graph::{distances, CsrGraph};
 use crate::integrators::rfd::{RfDiffusion, RfdConfig};
-use crate::linalg::Mat;
+use crate::integrators::KernelFn;
+use crate::linalg::{Mat, Trans};
 use crate::pointcloud::PointCloud;
 
 /// Operations GW needs from a structure matrix (symmetric).
@@ -31,6 +33,18 @@ impl DenseStructure {
     pub fn diffusion(points: &PointCloud, epsilon: f64, lambda: f64) -> Self {
         let w = points.dense_adjacency(epsilon, crate::pointcloud::Norm::LInf, true);
         DenseStructure { c: crate::linalg::expm_pade(&w.scale(lambda)) }
+    }
+
+    /// Shortest-path-kernel structure `C[i,j] = f(dist_G(i,j))` for mesh
+    /// graphs, materialized by the batched distance engine (all-source
+    /// parallel Dijkstra with reusable scratch). Unreachable pairs get 0.
+    pub fn shortest_path(g: &CsrGraph, f: &KernelFn) -> Self {
+        let sources: Vec<usize> = (0..g.n).collect();
+        let mut c = distances::distance_matrix(g, &sources);
+        for x in c.data.iter_mut() {
+            *x = if x.is_finite() { f.eval(*x) } else { 0.0 };
+        }
+        DenseStructure { c }
     }
 }
 
@@ -134,13 +148,15 @@ impl LowRankStructure {
                 }
             }
         };
-        let u = a.matmul(&m_core).scale(s);
+        // U = s·A·M in one fused-α product (no scale temporary).
+        let mut u = Mat::zeros(a.rows, m_core.cols);
+        u.gemm_assign(s, a, Trans::No, &m_core, Trans::No, 0.0);
         LowRankStructure::new(s, u, b.clone())
     }
 
     /// Materializes the dense matrix (tests only).
     pub fn to_dense(&self) -> Mat {
-        let mut c = self.u.matmul(&self.v.transpose());
+        let mut c = self.u.matmul_nt(&self.v);
         for i in 0..c.rows {
             c[(i, i)] += self.scale;
         }
@@ -206,6 +222,17 @@ mod tests {
         let slow = dense.hadamard_sq_vec(&p);
         let e = rel_err(&fast, &slow);
         assert!(e < 1e-12, "khatri-rao hadamard square wrong: {e}");
+    }
+
+    #[test]
+    fn shortest_path_structure_matches_bf_kernel() {
+        let mesh = crate::mesh::icosphere(1);
+        let g = mesh.to_graph();
+        let f = KernelFn::ExpNeg(2.0);
+        let s = DenseStructure::shortest_path(&g, &f);
+        let bf = crate::integrators::bf::BruteForceSp::new(&g, &f);
+        let e = rel_err(&s.c.data, &bf.kernel().data);
+        assert!(e < 1e-12, "sp structure vs bf kernel: {e}");
     }
 
     #[test]

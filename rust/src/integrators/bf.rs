@@ -8,7 +8,7 @@
 //!   reason the paper's BF column runs out of time/memory first.
 
 use super::{FieldIntegrator, KernelFn};
-use crate::graph::{dijkstra, CsrGraph};
+use crate::graph::{distances, CsrGraph};
 use crate::linalg::{expm_pade, Mat};
 use crate::util::par;
 
@@ -18,19 +18,27 @@ pub struct BruteForceSp {
 }
 
 impl BruteForceSp {
-    /// Pre-processing: N Dijkstra runs (parallelized) + kernel evaluation.
+    /// Pre-processing: N-source batched Dijkstra (parallel, per-thread
+    /// reusable scratch — see [`distances`]) + kernel evaluation.
     /// Unreachable pairs contribute `0` (decaying-kernel convention shared
     /// with SF).
     pub fn new(g: &CsrGraph, f: &KernelFn) -> Self {
         let n = g.n;
         let mut k = Mat::zeros(n, n);
-        let fref = &f;
-        par::par_rows(&mut k.data, n, |i, row| {
-            let d = dijkstra(g, i);
-            for (j, x) in row.iter_mut().enumerate() {
-                *x = if d[j].is_finite() { fref.eval(d[j]) } else { 0.0 };
-            }
-        });
+        let sources: Vec<usize> = (0..n).collect();
+        {
+            let cells = par::as_send_cells(&mut k.data);
+            distances::for_each_source(g, &sources, |i, d| {
+                // SAFETY: each source index arrives exactly once; rows of
+                // the kernel matrix are disjoint.
+                let row = unsafe {
+                    std::slice::from_raw_parts_mut(cells.get(i * n) as *mut f64, n)
+                };
+                for (x, &dj) in row.iter_mut().zip(d) {
+                    *x = if dj.is_finite() { f.eval(dj) } else { 0.0 };
+                }
+            });
+        }
         BruteForceSp { kernel_matrix: k }
     }
 

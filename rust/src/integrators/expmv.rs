@@ -164,9 +164,7 @@ impl LanczosExpmv {
     }
 }
 
-fn dot(a: &[f64], b: &[f64]) -> f64 {
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
-}
+use crate::linalg::gemm::dot;
 
 impl FieldIntegrator for LanczosExpmv {
     fn name(&self) -> String {

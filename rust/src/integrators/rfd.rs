@@ -24,7 +24,7 @@
 //! target agree (DESIGN.md §substitutions).
 
 use super::FieldIntegrator;
-use crate::linalg::{eigh_jacobi, expm_pade, lu_factor, thin_qr, Mat};
+use crate::linalg::{eigh_jacobi, expm_pade, lu_factor, thin_qr, Mat, Trans};
 use crate::pointcloud::PointCloud;
 use crate::util::{par, rng::Rng};
 
@@ -153,7 +153,7 @@ impl RfDiffusion {
             j[(i, m2 + i)] = 0.5;
             j[(m2 + i, i)] = 0.5;
         }
-        let s = r.matmul(&j).matmul(&r.transpose());
+        let s = r.matmul(&j).matmul_nt(&r);
         let mut w_eigs = eigh_jacobi(&s).values;
         // Remaining N − 4m eigenvalues of W are 0.
         let bulk = (n).saturating_sub(w_eigs.len());
@@ -279,14 +279,15 @@ impl FieldIntegrator for RfDiffusion {
     }
 
     /// `y = e^{-Λδ} (x + A · M · (Bᵀ x))` — the inference hot path,
-    /// `O(N·2m·d)`.
+    /// `O(N·2m·d)`. The diagonal-correction scale and the `+x` term are
+    /// fused into the final gemm's α/β store (no extra N×d passes).
     fn apply(&self, field: &Mat) -> Mat {
         assert_eq!(field.rows, self.a.rows);
         let bt_x = self.b.t_matmul(field); // 2m×d
         let core = self.m_core.matmul(&bt_x); // 2m×d
-        let mut out = self.a.matmul(&core); // N×d
-        out.add_assign(field);
-        out.scale(self.diag_scale)
+        let mut out = field.clone();
+        out.gemm_assign(self.diag_scale, &self.a, Trans::No, &core, Trans::No, self.diag_scale);
+        out
     }
 }
 

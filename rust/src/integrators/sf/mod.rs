@@ -29,7 +29,7 @@ pub use separator::{balanced_level_cut, Separation};
 
 use super::{FieldIntegrator, KernelFn};
 use crate::fft::hankel_matvec_multi;
-use crate::graph::{dijkstra, CsrGraph};
+use crate::graph::CsrGraph;
 use crate::linalg::Mat;
 use crate::util::rng::Rng;
 
@@ -153,7 +153,8 @@ fn build_leaf(
 ) -> SfNode {
     let n_sub = nodes.len();
     let mut dist_q = vec![u32::MAX; n_sub * n_sub];
-    let rows: Vec<Vec<f64>> = crate::util::par::par_map(n_sub, |i| dijkstra(sub, i));
+    let all: Vec<usize> = (0..n_sub).collect();
+    let rows: Vec<Vec<f64>> = crate::graph::distances::rows(sub, &all);
     for (i, d) in rows.iter().enumerate() {
         for (j, &dj) in d.iter().enumerate() {
             let q = quantize(dj, cfg.unit_size);
@@ -192,8 +193,8 @@ fn build(
             stats.internals += 1;
             let ns = separator.len();
             // Distances from each S′ vertex to every subtree node.
-            let sep_rows: Vec<Vec<f64>> =
-                crate::util::par::par_map(ns, |k| dijkstra(&sub, separator[k] as usize));
+            let sep_sources: Vec<usize> = separator.iter().map(|&s| s as usize).collect();
+            let sep_rows: Vec<Vec<f64>> = crate::graph::distances::rows(&sub, &sep_sources);
             let mut sep_dq = vec![u32::MAX; ns * n_sub];
             for (s, row) in sep_rows.iter().enumerate() {
                 for (j, &dj) in row.iter().enumerate() {

@@ -18,12 +18,33 @@ pub struct EighResult {
     pub vectors: Mat,
 }
 
-/// Cyclic Jacobi eigendecomposition for symmetric matrices.
+/// Rotates rows `p < q` of a row-major `n×n` buffer by the Givens pair
+/// `(c, s)` — the two rows are contiguous, so this is the vectorizable
+/// half of a Jacobi update.
+#[inline]
+fn rotate_row_pair(data: &mut [f64], n: usize, p: usize, q: usize, c: f64, s: f64) {
+    debug_assert!(p < q);
+    let (head, tail) = data.split_at_mut(q * n);
+    let rp = &mut head[p * n..(p + 1) * n];
+    let rq = &mut tail[..n];
+    for (xp, xq) in rp.iter_mut().zip(rq) {
+        let a = *xp;
+        let b = *xq;
+        *xp = c * a - s * b;
+        *xq = s * a + c * b;
+    }
+}
+
+/// Cyclic Jacobi eigendecomposition for symmetric matrices. Row updates
+/// (and the eigenvector accumulation, kept transposed until the end) run
+/// on contiguous row pairs via the kernel-layer idiom; only the column
+/// half of each rotation is strided.
 pub fn eigh_jacobi(a: &Mat) -> EighResult {
     assert_eq!(a.rows, a.cols);
     let n = a.rows;
     let mut m = a.clone();
-    let mut v = Mat::eye(n);
+    // vt row j holds eigenvector j (column j of the classic accumulator).
+    let mut vt = Mat::eye(n);
     let max_sweeps = 64;
     for _sweep in 0..max_sweeps {
         let mut off = 0.0;
@@ -47,26 +68,17 @@ pub fn eigh_jacobi(a: &Mat) -> EighResult {
                 let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
                 let c = 1.0 / (t * t + 1.0).sqrt();
                 let s = t * c;
-                // Rotate rows/cols p and q of m.
+                // Rotate columns p and q of m (strided).
                 for k in 0..n {
                     let mkp = m[(k, p)];
                     let mkq = m[(k, q)];
                     m[(k, p)] = c * mkp - s * mkq;
                     m[(k, q)] = s * mkp + c * mkq;
                 }
-                for k in 0..n {
-                    let mpk = m[(p, k)];
-                    let mqk = m[(q, k)];
-                    m[(p, k)] = c * mpk - s * mqk;
-                    m[(q, k)] = s * mpk + c * mqk;
-                }
-                // Accumulate eigenvectors.
-                for k in 0..n {
-                    let vkp = v[(k, p)];
-                    let vkq = v[(k, q)];
-                    v[(k, p)] = c * vkp - s * vkq;
-                    v[(k, q)] = s * vkp + c * vkq;
-                }
+                // Rotate rows p and q of m, and the transposed
+                // eigenvector rows (both contiguous).
+                rotate_row_pair(&mut m.data, n, p, q, c, s);
+                rotate_row_pair(&mut vt.data, n, p, q, c, s);
             }
         }
     }
@@ -76,8 +88,9 @@ pub fn eigh_jacobi(a: &Mat) -> EighResult {
     let values: Vec<f64> = idx.iter().map(|&i| vals[i]).collect();
     let mut vectors = Mat::zeros(n, n);
     for (newc, &oldc) in idx.iter().enumerate() {
+        let vrow = vt.row(oldc);
         for r in 0..n {
-            vectors[(r, newc)] = v[(r, oldc)];
+            vectors[(r, newc)] = vrow[r];
         }
     }
     EighResult { values, vectors }

@@ -7,7 +7,18 @@
 //!   polynomial, the dense baseline attributed to Bader et al. (2019) in
 //!   the paper's Fig. 4 comparison.
 
-use super::{lu_solve_inplace, Mat};
+use super::{gemm_into, lu_solve_inplace, Mat, Trans};
+
+/// Repeated squaring `e ← e^(2^s)` ping-ponging between two buffers via
+/// the blocked kernel (no per-step allocation).
+fn square_s_times(mut e: Mat, s: i32) -> Mat {
+    let mut tmp = Mat::zeros(e.rows, e.cols);
+    for _ in 0..s {
+        gemm_into(1.0, &e, Trans::No, &e, Trans::No, 0.0, &mut tmp);
+        std::mem::swap(&mut e, &mut tmp);
+    }
+    e
+}
 
 /// θ_13 from Higham's 2005 analysis: ‖A‖₁ below this needs no scaling for
 /// the degree-13 Padé approximant.
@@ -72,12 +83,8 @@ pub fn expm_pade(a: &Mat) -> Mat {
     // exp(A_s) ≈ (V-U)⁻¹ (V+U)
     let num = v.add(&u);
     let den = v.sub(&u);
-    let mut e = lu_solve_inplace(&den, &num);
-
-    for _ in 0..s {
-        e = e.matmul(&e);
-    }
-    e
+    let e = lu_solve_inplace(&den, &num);
+    square_s_times(e, s)
 }
 
 /// Taylor-polynomial scaling-and-squaring `exp(A)` (Bader-style baseline).
@@ -99,11 +106,7 @@ pub fn expm_taylor(a: &Mat) -> Mat {
             break;
         }
     }
-    let mut e = sum;
-    for _ in 0..s {
-        e = e.matmul(&e);
-    }
-    e
+    square_s_times(sum, s)
 }
 
 #[cfg(test)]

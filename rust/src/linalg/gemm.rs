@@ -1,0 +1,496 @@
+//! Cache-blocked, panel-packed GEMM — the dense-kernel layer every
+//! integrator funnels through (RFD's `BᵀA` Gram step and Woodbury apply,
+//! Padé/Taylor `expm`, QR/eig cores, GW solver inner products).
+//!
+//! Layout follows the classic Goto/BLIS decomposition for row-major f64:
+//!
+//! * the `k` dimension is split into `KC`-deep panels so one packed slice
+//!   of `B` stays resident in L2/L3 across all row blocks;
+//! * rows of the output are split into `MC`-tall blocks, parallelized via
+//!   [`par`] (each worker packs its own `A` panel — `MC×KC` fits L2);
+//! * the inner loops run a register-tiled `MR×NR` microkernel over
+//!   zero-padded micro-panels, so the hot loop is branch-free and sized
+//!   for f64 auto-vectorization (no per-element `== 0.0` tests — see the
+//!   dense-path pessimization this layer replaced in `Mat::matmul`).
+//!
+//! `alpha`/`beta` scaling is fused into the store, giving callers
+//! accumulate (`C ← αAB + C`) and overwrite (`C ← αAB`) without temporary
+//! matrices. [`Trans`] flags cover `AB`, `AᵀB` (the syrk-style Gram
+//! products), `ABᵀ`, and `AᵀBᵀ` with packing — never materialized
+//! transposes.
+//!
+//! [`gemm_naive`] is the kept reference implementation; the property
+//! tests below check blocked-vs-naive parity on randomized shapes,
+//! including empty, 1×1, non-square, and non-multiple-of-block-size
+//! operands.
+
+use super::Mat;
+use crate::util::par;
+
+/// Operand orientation: `No` uses the matrix as stored, `Yes` uses its
+/// transpose (handled in the packing step — nothing is materialized).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Trans {
+    No,
+    Yes,
+}
+
+/// Microkernel tile height (rows of `C` per register tile).
+const MR: usize = 4;
+/// Microkernel tile width (columns of `C` per register tile).
+const NR: usize = 8;
+/// Rows of `A` packed per worker block (`MC×KC` ≈ 128 KiB, L2-resident).
+const MC: usize = 64;
+/// Depth of one packed panel.
+const KC: usize = 256;
+/// Columns of `B` packed at once.
+const NC: usize = 2048;
+/// Below this flop count the packing/threading setup costs more than it
+/// saves; a plain triple loop wins.
+const SMALL_FLOPS: usize = 32 * 32 * 32;
+
+/// Logical `(rows, cols)` of an operand under its orientation flag.
+#[inline]
+fn dims(m: &Mat, t: Trans) -> (usize, usize) {
+    match t {
+        Trans::No => (m.rows, m.cols),
+        Trans::Yes => (m.cols, m.rows),
+    }
+}
+
+/// Logical element access under an orientation flag (reference path only).
+#[inline]
+fn at(m: &Mat, t: Trans, r: usize, c: usize) -> f64 {
+    match t {
+        Trans::No => m.data[r * m.cols + c],
+        Trans::Yes => m.data[c * m.cols + r],
+    }
+}
+
+/// Reference GEMM: `C ← α·op(A)·op(B) + β·C`, plain triple loop. Kept as
+/// the oracle for the blocked-parity property tests and for debugging.
+pub fn gemm_naive(alpha: f64, a: &Mat, ta: Trans, b: &Mat, tb: Trans, beta: f64, c: &mut Mat) {
+    let (n, k) = dims(a, ta);
+    let (kb, m) = dims(b, tb);
+    assert_eq!(k, kb, "gemm_naive inner dims {k} vs {kb}");
+    assert_eq!((c.rows, c.cols), (n, m), "gemm_naive output shape");
+    for i in 0..n {
+        for j in 0..m {
+            let mut s = 0.0;
+            for p in 0..k {
+                s += at(a, ta, i, p) * at(b, tb, p, j);
+            }
+            let idx = i * m + j;
+            // β = 0 means "ignore C" (BLAS semantics: prior NaN/garbage
+            // must not propagate).
+            let prev = if beta == 0.0 { 0.0 } else { beta * c.data[idx] };
+            c.data[idx] = alpha * s + prev;
+        }
+    }
+}
+
+/// Blocked parallel GEMM: `C ← α·op(A)·op(B) + β·C`.
+///
+/// `β = 0` overwrites `C` (existing contents, including NaN, are
+/// ignored); `β = 1` accumulates. Handles every shape including empty
+/// operands; `k = 0` or `α = 0` reduces to `C ← β·C`.
+pub fn gemm(alpha: f64, a: &Mat, ta: Trans, b: &Mat, tb: Trans, beta: f64, c: &mut Mat) {
+    let (n, k) = dims(a, ta);
+    let (kb, m) = dims(b, tb);
+    assert_eq!(
+        k, kb,
+        "gemm inner dims: op(A) is {n}x{k}, op(B) is {kb}x{m}"
+    );
+    assert_eq!((c.rows, c.cols), (n, m), "gemm output is {}x{}, want {n}x{m}", c.rows, c.cols);
+    if n == 0 || m == 0 {
+        return;
+    }
+    if k == 0 || alpha == 0.0 {
+        scale_slice(&mut c.data, beta);
+        return;
+    }
+    if n * m * k <= SMALL_FLOPS {
+        gemm_naive(alpha, a, ta, b, tb, beta, c);
+        return;
+    }
+    let nblocks = n.div_ceil(MC);
+    let kpanels = k.div_ceil(KC);
+    if nblocks == 1 && kpanels > 1 {
+        // Tall-k path (the syrk-style Gram products: `BᵀA` with few
+        // output rows/cols but a long contraction): the row dimension
+        // offers no parallelism, so split the depth across workers into
+        // private partial outputs and reduce. Partials are small (`n×m`
+        // with `n ≤ MC`).
+        let partials: Vec<Vec<f64>> = par::par_map(kpanels, |pi| {
+            let pc = pi * KC;
+            let kc = KC.min(k - pc);
+            let mut part = vec![0.0; n * m];
+            panel_into(alpha, a, ta, b, tb, pc, kc, &mut part, n, m, 0.0);
+            part
+        });
+        scale_slice(&mut c.data, beta);
+        for part in partials {
+            for (o, x) in c.data.iter_mut().zip(part) {
+                *o += x;
+            }
+        }
+        return;
+    }
+    let cc = par::as_send_cells(&mut c.data);
+    for jc in (0..m).step_by(NC) {
+        let nc = NC.min(m - jc);
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            // β applies exactly once, on the first depth panel.
+            let beta_eff = if pc == 0 { beta } else { 1.0 };
+            let pb = pack_b(b, tb, pc, kc, jc, nc);
+            let pb_ref = &pb;
+            let cc_ref = &cc;
+            par::par_for(nblocks, 1, |ib| {
+                let ic = ib * MC;
+                let mc = MC.min(n - ic);
+                let pa = pack_a(a, ta, ic, mc, pc, kc);
+                // SAFETY: row blocks [ic, ic+mc) are disjoint across `ib`,
+                // so each worker owns its slice of C exclusively.
+                let crows = unsafe {
+                    std::slice::from_raw_parts_mut(cc_ref.get(ic * m) as *mut f64, mc * m)
+                };
+                micro_block(&pa, pb_ref, kc, mc, nc, crows, m, jc, alpha, beta_eff);
+            });
+        }
+    }
+}
+
+/// Runs the packed microkernel sweep for one `(row block, depth panel)`
+/// pair over all `NR` column micro-panels of `pb`, storing into `crows`
+/// (a row-slice of C with leading dimension `ld`, columns offset `col0`).
+#[allow(clippy::too_many_arguments)]
+fn micro_block(
+    pa: &[f64],
+    pb: &[f64],
+    kc: usize,
+    mc: usize,
+    nc: usize,
+    crows: &mut [f64],
+    ld: usize,
+    col0: usize,
+    alpha: f64,
+    beta_eff: f64,
+) {
+    for jr in (0..nc).step_by(NR) {
+        let nr = NR.min(nc - jr);
+        let bpanel = &pb[(jr / NR) * kc * NR..][..kc * NR];
+        for ir in (0..mc).step_by(MR) {
+            let mr = MR.min(mc - ir);
+            let apanel = &pa[(ir / MR) * kc * MR..][..kc * MR];
+            let acc = microkernel(kc, apanel, bpanel);
+            store_tile(crows, ld, ir, col0 + jr, mr, nr, alpha, beta_eff, &acc);
+        }
+    }
+}
+
+/// Serial single-depth-panel GEMM into a caller-owned `n×m` buffer —
+/// the per-worker body of the tall-k reduction path.
+#[allow(clippy::too_many_arguments)]
+fn panel_into(
+    alpha: f64,
+    a: &Mat,
+    ta: Trans,
+    b: &Mat,
+    tb: Trans,
+    pc: usize,
+    kc: usize,
+    cbuf: &mut [f64],
+    n: usize,
+    m: usize,
+    beta_eff: f64,
+) {
+    debug_assert_eq!(cbuf.len(), n * m);
+    for jc in (0..m).step_by(NC) {
+        let nc = NC.min(m - jc);
+        let pb = pack_b(b, tb, pc, kc, jc, nc);
+        for ic in (0..n).step_by(MC) {
+            let mc = MC.min(n - ic);
+            let pa = pack_a(a, ta, ic, mc, pc, kc);
+            let crows = &mut cbuf[ic * m..(ic + mc) * m];
+            micro_block(&pa, &pb, kc, mc, nc, crows, m, jc, alpha, beta_eff);
+        }
+    }
+}
+
+/// `x ← β·x` (β = 0 overwrites, clearing NaN too).
+fn scale_slice(xs: &mut [f64], beta: f64) {
+    if beta == 0.0 {
+        xs.fill(0.0);
+    } else if beta != 1.0 {
+        for x in xs.iter_mut() {
+            *x *= beta;
+        }
+    }
+}
+
+/// Packs an `mc×kc` block of `op(A)` into MR-row micro-panels, zero-padded
+/// to a multiple of MR. Element `(ip*MR + r, p)` lands at
+/// `ip*kc*MR + p*MR + r`.
+fn pack_a(a: &Mat, ta: Trans, ic: usize, mc: usize, pc: usize, kc: usize) -> Vec<f64> {
+    let panels = mc.div_ceil(MR);
+    let mut buf = vec![0.0; panels * kc * MR];
+    match ta {
+        Trans::No => {
+            for ip in 0..panels {
+                let base = ip * kc * MR;
+                let rmax = MR.min(mc - ip * MR);
+                for r in 0..rmax {
+                    let src = &a.data[(ic + ip * MR + r) * a.cols + pc..][..kc];
+                    for (p, &v) in src.iter().enumerate() {
+                        buf[base + p * MR + r] = v;
+                    }
+                }
+            }
+        }
+        Trans::Yes => {
+            // Logical A[i, p] = stored a[p, i]: sweep the contiguous
+            // stored rows (fixed p) and copy MR-wide slices.
+            for ip in 0..panels {
+                let base = ip * kc * MR;
+                let rmax = MR.min(mc - ip * MR);
+                for p in 0..kc {
+                    let src = &a.data[(pc + p) * a.cols + ic + ip * MR..][..rmax];
+                    buf[base + p * MR..base + p * MR + rmax].copy_from_slice(src);
+                }
+            }
+        }
+    }
+    buf
+}
+
+/// Packs a `kc×nc` block of `op(B)` into NR-column micro-panels,
+/// zero-padded to a multiple of NR. Element `(p, jp*NR + j)` lands at
+/// `jp*kc*NR + p*NR + j`.
+fn pack_b(b: &Mat, tb: Trans, pc: usize, kc: usize, jc: usize, nc: usize) -> Vec<f64> {
+    let panels = nc.div_ceil(NR);
+    let mut buf = vec![0.0; panels * kc * NR];
+    match tb {
+        Trans::No => {
+            for jp in 0..panels {
+                let base = jp * kc * NR;
+                let jmax = NR.min(nc - jp * NR);
+                for p in 0..kc {
+                    let src = &b.data[(pc + p) * b.cols + jc + jp * NR..][..jmax];
+                    buf[base + p * NR..base + p * NR + jmax].copy_from_slice(src);
+                }
+            }
+        }
+        Trans::Yes => {
+            // Logical B[p, j] = stored b[j, p]: read the contiguous
+            // stored row per output column.
+            for jp in 0..panels {
+                let base = jp * kc * NR;
+                let jmax = NR.min(nc - jp * NR);
+                for j in 0..jmax {
+                    let src = &b.data[(jc + jp * NR + j) * b.cols + pc..][..kc];
+                    for (p, &v) in src.iter().enumerate() {
+                        buf[base + p * NR + j] = v;
+                    }
+                }
+            }
+        }
+    }
+    buf
+}
+
+/// Register-tiled inner kernel: a full `MR×NR` accumulator over one packed
+/// depth panel. Both panels are zero-padded, so no edge branches.
+#[inline]
+fn microkernel(kc: usize, pa: &[f64], pb: &[f64]) -> [[f64; NR]; MR] {
+    debug_assert!(pa.len() >= kc * MR && pb.len() >= kc * NR);
+    let mut acc = [[0.0f64; NR]; MR];
+    for p in 0..kc {
+        let ar = &pa[p * MR..p * MR + MR];
+        let br = &pb[p * NR..p * NR + NR];
+        for r in 0..MR {
+            let av = ar[r];
+            for (j, b) in br.iter().enumerate() {
+                acc[r][j] += av * b;
+            }
+        }
+    }
+    acc
+}
+
+/// Writes an accumulator tile into `C` with fused α/β scaling; only the
+/// valid `mr×nr` corner of the (padded) tile is stored.
+#[allow(clippy::too_many_arguments)]
+fn store_tile(
+    crows: &mut [f64],
+    ld: usize,
+    ir: usize,
+    col0: usize,
+    mr: usize,
+    nr: usize,
+    alpha: f64,
+    beta: f64,
+    acc: &[[f64; NR]; MR],
+) {
+    for r in 0..mr {
+        let crow = &mut crows[(ir + r) * ld + col0..][..nr];
+        let accr = &acc[r];
+        if beta == 0.0 {
+            for (j, x) in crow.iter_mut().enumerate() {
+                *x = alpha * accr[j];
+            }
+        } else if beta == 1.0 {
+            for (j, x) in crow.iter_mut().enumerate() {
+                *x += alpha * accr[j];
+            }
+        } else {
+            for (j, x) in crow.iter_mut().enumerate() {
+                *x = alpha * accr[j] + beta * *x;
+            }
+        }
+    }
+}
+
+/// SIMD-friendly dot product (4 independent accumulators).
+#[inline]
+pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut s = [0.0f64; 4];
+    let chunks = n / 4;
+    for ch in 0..chunks {
+        let i = ch * 4;
+        s[0] += a[i] * b[i];
+        s[1] += a[i + 1] * b[i + 1];
+        s[2] += a[i + 2] * b[i + 2];
+        s[3] += a[i + 3] * b[i + 3];
+    }
+    let mut r = (s[0] + s[1]) + (s[2] + s[3]);
+    for i in chunks * 4..n {
+        r += a[i] * b[i];
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        Mat::from_vec(rows, cols, (0..rows * cols).map(|_| rng.gaussian()).collect())
+    }
+
+    /// Storage shape of an operand whose *logical* shape is `r×c`.
+    fn operand(r: usize, c: usize, t: Trans, rng: &mut Rng) -> Mat {
+        match t {
+            Trans::No => rand_mat(r, c, rng),
+            Trans::Yes => rand_mat(c, r, rng),
+        }
+    }
+
+    fn check_parity(n: usize, k: usize, m: usize, ta: Trans, tb: Trans, alpha: f64, beta: f64) {
+        let mut rng = Rng::new((n * 1009 + k * 31 + m) as u64 + 7);
+        let a = operand(n, k, ta, &mut rng);
+        let b = operand(k, m, tb, &mut rng);
+        let c0 = rand_mat(n, m, &mut rng);
+        let mut fast = c0.clone();
+        let mut slow = c0.clone();
+        gemm(alpha, &a, ta, &b, tb, beta, &mut fast);
+        gemm_naive(alpha, &a, ta, &b, tb, beta, &mut slow);
+        // 1e-12-grade parity, scaled by the accumulation length (both
+        // sides sum k products of O(1) gaussians in different orders).
+        let tol = 1e-12 * (1.0 + k as f64);
+        for (i, (x, y)) in fast.data.iter().zip(&slow.data).enumerate() {
+            assert!(
+                (x - y).abs() <= tol,
+                "n={n} k={k} m={m} ta={ta:?} tb={tb:?} α={alpha} β={beta} @{i}: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn property_blocked_matches_naive_over_shapes() {
+        // Shapes chosen to hit: empty, 1×1, thin/fat, exact block
+        // multiples, off-by-one around MR/NR/MC/KC, and > one block.
+        let shapes = [
+            (0usize, 3usize, 4usize),
+            (4, 0, 3),
+            (1, 1, 1),
+            (1, 5, 9),
+            (5, 1, 7),
+            (4, 8, 8),
+            (17, 13, 29),
+            (64, 64, 64),
+            (65, 33, 9),
+            (63, 257, 17),
+            (70, 40, 70),
+            (128, 100, 72),
+        ];
+        for &(n, k, m) in &shapes {
+            for &ta in &[Trans::No, Trans::Yes] {
+                for &tb in &[Trans::No, Trans::Yes] {
+                    check_parity(n, k, m, ta, tb, 1.0, 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_alpha_beta_fusion() {
+        for &(alpha, beta) in &[(1.0, 1.0), (0.7, -0.3), (0.0, 2.0), (-1.5, 0.0), (2.0, 1.0)] {
+            check_parity(37, 41, 23, Trans::No, Trans::No, alpha, beta);
+            check_parity(33, 65, 40, Trans::Yes, Trans::No, alpha, beta);
+            check_parity(40, 29, 66, Trans::No, Trans::Yes, alpha, beta);
+        }
+    }
+
+    #[test]
+    fn property_large_parallel_path() {
+        // Big enough that several MC row blocks and two KC panels run in
+        // parallel workers.
+        check_parity(200, 300, 50, Trans::No, Trans::No, 1.0, 0.0);
+        check_parity(150, 300, 40, Trans::Yes, Trans::No, 1.0, 1.0);
+    }
+
+    #[test]
+    fn property_tall_k_reduction_path() {
+        // n ≤ MC with k spanning several KC panels exercises the
+        // depth-parallel partial-sum path (the RFD `BᵀA` Gram shape).
+        for &(ta, tb) in &[(Trans::No, Trans::No), (Trans::Yes, Trans::No), (Trans::No, Trans::Yes)] {
+            check_parity(64, 520, 64, ta, tb, 1.0, 0.0);
+        }
+        check_parity(40, 600, 3, Trans::Yes, Trans::No, 0.7, 1.0);
+        check_parity(10, 1000, 10, Trans::No, Trans::No, -1.0, -0.5);
+    }
+
+    #[test]
+    fn beta_zero_overwrites_nan() {
+        let mut rng = Rng::new(5);
+        let a = rand_mat(40, 40, &mut rng);
+        let b = rand_mat(40, 40, &mut rng);
+        let mut c = Mat::from_vec(40, 40, vec![f64::NAN; 1600]);
+        gemm(1.0, &a, Trans::No, &b, Trans::No, 0.0, &mut c);
+        assert!(c.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn zero_depth_scales_only() {
+        let a = Mat::zeros(3, 0);
+        let b = Mat::zeros(0, 2);
+        let mut c = Mat::from_vec(3, 2, vec![1.0; 6]);
+        gemm(1.0, &a, Trans::No, &b, Trans::No, 0.5, &mut c);
+        assert_eq!(c.data, vec![0.5; 6]);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::new(6);
+        for n in [0usize, 1, 3, 4, 7, 64, 129] {
+            let a: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let want: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - want).abs() < 1e-10);
+        }
+    }
+}

@@ -1,6 +1,9 @@
 //! Row-major dense matrix with the arithmetic used across the library.
+//! The O(n·k·m) products delegate to the blocked panel-packed kernels in
+//! [`super::gemm`]; this type owns storage, shape checks, and the O(n·m)
+//! elementwise operations.
 
-use crate::util::par;
+use super::gemm::{self, Trans};
 use std::ops::{Index, IndexMut};
 
 /// Row-major dense `f64` matrix.
@@ -56,7 +59,19 @@ impl Mat {
     }
 
     pub fn col(&self, c: usize) -> Vec<f64> {
-        (0..self.rows).map(|r| self[(r, c)]).collect()
+        let mut out = vec![0.0; self.rows];
+        self.copy_col_into(c, &mut out);
+        out
+    }
+
+    /// Copies column `c` into a caller-owned buffer (allocation-free
+    /// variant of [`Mat::col`] for loops over right-hand sides).
+    pub fn copy_col_into(&self, c: usize, out: &mut [f64]) {
+        assert!(c < self.cols);
+        assert_eq!(out.len(), self.rows);
+        for (r, o) in out.iter_mut().enumerate() {
+            *o = self.data[r * self.cols + c];
+        }
     }
 
     pub fn transpose(&self) -> Mat {
@@ -75,43 +90,68 @@ impl Mat {
         t
     }
 
-    /// Matrix product `self * rhs`, parallelized over row blocks with an
-    /// ikj inner ordering (streams `rhs` rows; no transpose needed).
+    /// Matrix product `self * rhs` (blocked parallel kernel).
     pub fn matmul(&self, rhs: &Mat) -> Mat {
         assert_eq!(self.cols, rhs.rows, "matmul dims {}x{} * {}x{}", self.rows, self.cols, rhs.rows, rhs.cols);
-        let (n, k, m) = (self.rows, self.cols, rhs.cols);
-        let mut out = Mat::zeros(n, m);
-        let lhs = &self.data;
-        let r = &rhs.data;
-        par::par_rows(&mut out.data, m, |i, orow| {
-            let lrow = &lhs[i * k..(i + 1) * k];
-            for (kk, &a) in lrow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let rrow = &r[kk * m..(kk + 1) * m];
-                for (o, &b) in orow.iter_mut().zip(rrow) {
-                    *o += a * b;
-                }
-            }
-        });
+        let mut out = Mat::zeros(self.rows, rhs.cols);
+        gemm::gemm(1.0, self, Trans::No, rhs, Trans::No, 0.0, &mut out);
         out
+    }
+
+    /// `self * rhsᵀ` without forming the transpose (the packing step
+    /// handles the orientation).
+    pub fn matmul_nt(&self, rhs: &Mat) -> Mat {
+        assert_eq!(self.cols, rhs.cols, "matmul_nt dims {}x{} * ({}x{})ᵀ", self.rows, self.cols, rhs.rows, rhs.cols);
+        let mut out = Mat::zeros(self.rows, rhs.rows);
+        gemm::gemm(1.0, self, Trans::No, rhs, Trans::Yes, 0.0, &mut out);
+        out
+    }
+
+    /// `selfᵀ * rhs` without forming the transpose (thin Gram products in
+    /// RFD: `BᵀA`, `Bᵀx`).
+    pub fn t_matmul(&self, rhs: &Mat) -> Mat {
+        assert_eq!(self.rows, rhs.rows);
+        let mut out = Mat::zeros(self.cols, rhs.cols);
+        gemm::gemm(1.0, self, Trans::Yes, rhs, Trans::No, 0.0, &mut out);
+        out
+    }
+
+    /// Fused product-accumulate `self ← α·op(a)·op(b) + β·self`,
+    /// exposing the kernel layer's accumulate path on the `Mat` API.
+    pub fn gemm_assign(&mut self, alpha: f64, a: &Mat, ta: Trans, b: &Mat, tb: Trans, beta: f64) {
+        gemm::gemm(alpha, a, ta, b, tb, beta, self);
     }
 
     /// `self * v` for a vector.
     pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.rows];
+        self.matvec_into(v, &mut out);
+        out
+    }
+
+    /// Allocation-free `out = self * v`.
+    pub fn matvec_into(&self, v: &[f64], out: &mut [f64]) {
         assert_eq!(self.cols, v.len());
-        (0..self.rows)
-            .map(|i| {
-                self.row(i).iter().zip(v).map(|(a, b)| a * b).sum::<f64>()
-            })
-            .collect()
+        assert_eq!(out.len(), self.rows);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = gemm::dot(self.row(i), v);
+        }
     }
 
     /// `selfᵀ * v` without forming the transpose.
     pub fn matvec_t(&self, v: &[f64]) -> Vec<f64> {
-        assert_eq!(self.rows, v.len());
         let mut out = vec![0.0; self.cols];
+        self.matvec_t_into(v, &mut out);
+        out
+    }
+
+    /// Allocation-free `out = selfᵀ * v`. Rows with `v[i] == 0` are
+    /// skipped — a per-row (not per-element) test that pays off on the
+    /// masked fields the interpolation tasks feed through here.
+    pub fn matvec_t_into(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(self.rows, v.len());
+        assert_eq!(out.len(), self.cols);
+        out.fill(0.0);
         for (i, &vi) in v.iter().enumerate() {
             if vi == 0.0 {
                 continue;
@@ -120,44 +160,6 @@ impl Mat {
                 *o += vi * a;
             }
         }
-        out
-    }
-
-    /// `selfᵀ * rhs` without forming the transpose (thin Gram products in
-    /// RFD: `BᵀA`, `Bᵀx`).
-    pub fn t_matmul(&self, rhs: &Mat) -> Mat {
-        assert_eq!(self.rows, rhs.rows);
-        let (k, n, m) = (self.rows, self.cols, rhs.cols);
-        let mut out = Mat::zeros(n, m);
-        // Accumulate outer products row by row; parallel over chunks with
-        // per-thread partial sums to avoid contention.
-        let nt = par::num_threads();
-        let chunk = k.div_ceil(nt).max(1);
-        let partials: Vec<Mat> = par::par_map(k.div_ceil(chunk), |t| {
-            let mut acc = Mat::zeros(n, m);
-            let lo = t * chunk;
-            let hi = (lo + chunk).min(k);
-            for r in lo..hi {
-                let a = self.row(r);
-                let b = rhs.row(r);
-                for (i, &ai) in a.iter().enumerate() {
-                    if ai == 0.0 {
-                        continue;
-                    }
-                    let arow = &mut acc.data[i * m..(i + 1) * m];
-                    for (o, &bj) in arow.iter_mut().zip(b) {
-                        *o += ai * bj;
-                    }
-                }
-            }
-            acc
-        });
-        for p in partials {
-            for (o, x) in out.data.iter_mut().zip(p.data) {
-                *o += x;
-            }
-        }
-        out
     }
 
     pub fn scale(&self, a: f64) -> Mat {
@@ -334,10 +336,52 @@ mod tests {
     }
 
     #[test]
+    fn matmul_nt_matches_explicit() {
+        let mut rng = crate::util::rng::Rng::new(8);
+        let a = Mat::from_vec(9, 6, (0..54).map(|_| rng.gaussian()).collect());
+        let b = Mat::from_vec(11, 6, (0..66).map(|_| rng.gaussian()).collect());
+        approx(&a.matmul_nt(&b), &a.matmul(&b.transpose()), 1e-10);
+    }
+
+    #[test]
+    fn gemm_assign_accumulates() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::eye(2);
+        let mut c = Mat::from_rows(&[&[10.0, 0.0], &[0.0, 10.0]]);
+        c.gemm_assign(2.0, &a, Trans::No, &b, Trans::No, 1.0);
+        approx(&c, &Mat::from_rows(&[&[12.0, 4.0], &[6.0, 18.0]]), 1e-12);
+    }
+
+    #[test]
     fn matvec_and_t() {
         let a = Mat::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
         assert_eq!(a.matvec(&[1.0, 1.0, 1.0]), vec![6.0, 15.0]);
         assert_eq!(a.matvec_t(&[1.0, 1.0]), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn property_matvec_matches_naive() {
+        let mut rng = crate::util::rng::Rng::new(31);
+        for &(n, k) in &[(1usize, 1usize), (7, 3), (64, 64), (130, 65)] {
+            let a = Mat::from_vec(n, k, (0..n * k).map(|_| rng.gaussian()).collect());
+            let v: Vec<f64> = (0..k).map(|_| rng.gaussian()).collect();
+            let w: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let want_av: Vec<f64> = (0..n)
+                .map(|i| a.row(i).iter().zip(&v).map(|(x, y)| x * y).sum())
+                .collect();
+            for (x, y) in a.matvec(&v).iter().zip(&want_av) {
+                assert!((x - y).abs() < 1e-12 * (1.0 + k as f64));
+            }
+            let mut want_atw = vec![0.0; k];
+            for (i, &wi) in w.iter().enumerate() {
+                for (o, &x) in want_atw.iter_mut().zip(a.row(i)) {
+                    *o += wi * x;
+                }
+            }
+            for (x, y) in a.matvec_t(&w).iter().zip(&want_atw) {
+                assert!((x - y).abs() < 1e-12 * (1.0 + n as f64));
+            }
+        }
     }
 
     #[test]

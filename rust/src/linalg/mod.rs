@@ -1,5 +1,6 @@
-//! Dense linear algebra substrate: row-major `f64` matrices with the
-//! operations the paper's algorithms need — blocked/parallel matmul,
+//! Dense linear algebra substrate: row-major `f64` matrices over a
+//! cache-blocked, panel-packed, parallel GEMM kernel layer ([`gemm`]) with
+//! the operations the paper's algorithms need —
 //! LU solves (RFD's `(BᵀA)⁻¹`), Padé `expm` (brute-force diffusion kernel,
 //! Bader/Taylor baselines), symmetric eigensolvers (Jacobi for small,
 //! Householder+QL for large; spectral classification), and thin QR
@@ -7,12 +8,14 @@
 
 mod eig;
 mod expm;
+pub mod gemm;
 mod mat;
 mod qr;
 mod solve;
 
 pub use eig::{eigh_jacobi, eigh_tridiagonal, EighResult};
 pub use expm::{expm_pade, expm_taylor};
+pub use gemm::{gemm as gemm_into, gemm_naive, Trans};
 pub use mat::Mat;
 pub use qr::thin_qr;
 pub use solve::{lu_factor, lu_solve_inplace, LuFactors};

@@ -3,48 +3,49 @@
 //! (k ≪ N), `C = QR` reduces an N×N low-rank symmetric problem to a k×k
 //! dense one (Nakatsukasa 2019, as cited by the paper for Table 4).
 
+use super::gemm::dot;
 use super::Mat;
 
 /// Thin QR decomposition `a = q * r` with `q ∈ R^{n×k}` having orthonormal
 /// columns and `r ∈ R^{k×k}` upper triangular. Rank-deficient columns get a
 /// zero `r` diagonal and a zero `q` column (safe for the eigen use-case:
 /// they contribute nothing to `R J Rᵀ`).
+///
+/// MGS runs on the *transposed* copy so every dot/axpy touches one
+/// contiguous row (column-strided access on row-major storage defeated
+/// vectorization in the scalar predecessor); the one-off blocked
+/// transposes are `O(nk)` against the `O(nk²)` orthogonalization.
 pub fn thin_qr(a: &Mat) -> (Mat, Mat) {
-    let (n, k) = (a.rows, a.cols);
-    let mut q = a.clone();
+    let k = a.cols;
+    // qt row j = column j of `a` (then of `q`).
+    let mut qt = a.transpose();
     let mut r = Mat::zeros(k, k);
     for j in 0..k {
         // Two MGS passes for numerical orthogonality.
         for _pass in 0..2 {
             for i in 0..j {
-                let mut dot = 0.0;
-                for t in 0..n {
-                    dot += q[(t, i)] * q[(t, j)];
-                }
-                r[(i, j)] += dot;
-                for t in 0..n {
-                    let qi = q[(t, i)];
-                    q[(t, j)] -= dot * qi;
+                let (head, tail) = qt.data.split_at_mut(j * qt.cols);
+                let qi = &head[i * qt.cols..(i + 1) * qt.cols];
+                let qj = &mut tail[..qt.cols];
+                let d = dot(qi, qj);
+                r[(i, j)] += d;
+                for (x, &y) in qj.iter_mut().zip(qi) {
+                    *x -= d * y;
                 }
             }
         }
-        let mut norm = 0.0;
-        for t in 0..n {
-            norm += q[(t, j)] * q[(t, j)];
-        }
-        let norm = norm.sqrt();
+        let qj = qt.row_mut(j);
+        let norm = dot(&qj[..], &qj[..]).sqrt();
         r[(j, j)] = norm;
         if norm > 1e-12 {
-            for t in 0..n {
-                q[(t, j)] /= norm;
+            for x in qj.iter_mut() {
+                *x /= norm;
             }
         } else {
-            for t in 0..n {
-                q[(t, j)] = 0.0;
-            }
+            qj.fill(0.0);
         }
     }
-    (q, r)
+    (qt.transpose(), r)
 }
 
 #[cfg(test)]

@@ -86,17 +86,51 @@ impl LuFactors {
         x
     }
 
-    /// Solves `A X = B` column-by-column.
+    /// Solves `A X = B` for all right-hand sides at once: the forward/
+    /// back substitutions run on whole rows of `X` (contiguous,
+    /// vectorizable row-axpys) instead of per-column gathers.
     pub fn solve_mat(&self, b: &Mat) -> Mat {
-        let mut out = Mat::zeros(b.rows, b.cols);
-        for c in 0..b.cols {
-            let col = b.col(c);
-            let x = self.solve(&col);
-            for (r, v) in x.into_iter().enumerate() {
-                out[(r, c)] = v;
+        let n = self.lu.rows;
+        assert_eq!(b.rows, n);
+        let m = b.cols;
+        // Apply the pivot permutation row-wise.
+        let mut x = Mat::zeros(n, m);
+        for (i, &p) in self.piv.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(b.row(p));
+        }
+        // Forward substitution (unit lower): x[i] -= L[i,k]·x[k], k < i.
+        for i in 0..n {
+            for k in 0..i {
+                let f = self.lu[(i, k)];
+                if f == 0.0 {
+                    continue;
+                }
+                let (head, tail) = x.data.split_at_mut(i * m);
+                let xk = &head[k * m..(k + 1) * m];
+                for (o, &v) in tail[..m].iter_mut().zip(xk) {
+                    *o -= f * v;
+                }
             }
         }
-        out
+        // Back substitution: x[i] = (x[i] - Σ U[i,k]·x[k]) / U[i,i].
+        for i in (0..n).rev() {
+            for k in (i + 1)..n {
+                let f = self.lu[(i, k)];
+                if f == 0.0 {
+                    continue;
+                }
+                let (head, tail) = x.data.split_at_mut(k * m);
+                let xi = &mut head[i * m..(i + 1) * m];
+                for (o, &v) in xi.iter_mut().zip(&tail[..m]) {
+                    *o -= f * v;
+                }
+            }
+            let d = self.lu[(i, i)];
+            for o in x.row_mut(i) {
+                *o /= d;
+            }
+        }
+        x
     }
 }
 

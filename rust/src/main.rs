@@ -10,7 +10,7 @@
 //!
 //! (Hand-rolled arg parsing: the offline build has no clap.)
 
-use anyhow::{bail, Result};
+use gfi::util::error::{bail, Result};
 use std::sync::Arc;
 
 fn main() {

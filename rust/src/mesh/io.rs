@@ -3,7 +3,7 @@
 //! (fan-triangulated on load).
 
 use super::TriMesh;
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 /// Parses an ASCII OFF document.
 pub fn parse_off(text: &str) -> Result<TriMesh> {

@@ -8,7 +8,7 @@ use crate::classify::{bf_spectral_features, forest_accuracy, rfd_spectral_featur
 use crate::datasets::{cubes_dataset, graph_dataset, shape_dataset, ShapeDataset};
 use crate::integrators::rfd::RfdConfig;
 use crate::linalg::Mat;
-use anyhow::Result;
+use crate::util::error::Result;
 
 fn split_80_20(n: usize) -> (Vec<usize>, Vec<usize>) {
     let cut = (n * 4) / 5;

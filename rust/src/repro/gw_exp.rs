@@ -7,7 +7,7 @@ use crate::linalg::Mat;
 use crate::pointcloud::random_cloud;
 use crate::util::rng::Rng;
 use crate::util::timer::timed;
-use anyhow::Result;
+use crate::util::error::Result;
 
 fn uniform(n: usize) -> Vec<f64> {
     vec![1.0 / n as f64; n]

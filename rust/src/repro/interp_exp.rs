@@ -12,7 +12,7 @@ use crate::integrators::KernelFn;
 use crate::sim::{ClothConfig, ClothSim};
 use crate::util::rng::Rng;
 use crate::util::timer::timed;
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Builds the normal-prediction task for a mesh.
 fn normal_task(mesh: &crate::mesh::TriMesh, seed: u64) -> InterpolationTask {
@@ -65,6 +65,16 @@ pub fn fig4_sf(quick: bool) -> Result<()> {
         });
         let ((cos, _), apply) = timed(|| task.evaluate(&sf));
         rows.push(Row { method: "SF".into(), pre, apply, cos });
+        // Nearest-unmasked copy baseline: one batched multi-source
+        // Voronoi sweep through graph::distances — the floor every
+        // kernel integrator must beat.
+        let (nn_pred, nn_t) = timed(|| task.nearest_unmasked_prediction(&g));
+        rows.push(Row {
+            method: "NN-copy".into(),
+            pre: 0.0,
+            apply: nn_t,
+            cos: task.score(&nn_pred),
+        });
         // BF
         if n <= bf_limit {
             let (bf, pre) = timed(|| BruteForceSp::new(&g, &KernelFn::ExpNeg(lambda)));

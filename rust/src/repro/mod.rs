@@ -14,7 +14,7 @@ mod interp_exp;
 mod ot_exp;
 mod pct_exp;
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 
 /// All experiment ids.
 pub const EXPERIMENTS: &[(&str, &str)] = &[

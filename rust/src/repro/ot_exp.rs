@@ -16,7 +16,7 @@ use crate::ot::heat::HeatKernel;
 use crate::ot::{concentrated_distributions, wasserstein_barycenter, BarycenterConfig};
 use crate::util::stats::mse;
 use crate::util::timer::timed;
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// The mesh analog ladder (paper meshes → procedural stand-ins).
 fn mesh_ladder(quick: bool) -> Vec<(&'static str, TriMesh)> {

@@ -18,7 +18,7 @@ use crate::linalg::Mat;
 use crate::pointcloud::random_cloud;
 use crate::util::rng::Rng;
 use crate::util::timer::timed;
-use anyhow::Result;
+use crate::util::error::Result;
 
 pub fn pct(quick: bool) -> Result<()> {
     println!("=== Sec 3.3: RFD-masked performer attention ===");
@@ -45,7 +45,7 @@ pub fn pct(quick: bool) -> Result<()> {
         let kp = performer_features(&k, &proj);
         let (fast, t_fast) = timed(|| masked_performer_attention(&qp, &kp, &v, &a, &b));
         if n <= exact_cap {
-            let mask = a.matmul(&b.transpose());
+            let mask = a.matmul_nt(&b);
             let (exact, t_exact) = timed(|| exact_masked_attention(&q, &k, &v, &mask));
             let rel = crate::util::stats::rel_err(&fast.data, &exact.data);
             println!("{:>6} {:>12.3} {:>12.3} {:>10.3}", n, t_fast, t_exact, rel);

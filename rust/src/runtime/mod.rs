@@ -1,6 +1,11 @@
 //! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
 //! `python/compile/aot.py` and executes them on the XLA CPU client.
 //!
+//! The XLA-backed executor is gated behind the `pjrt` cargo feature (which
+//! additionally needs the vendored `xla` crate in `Cargo.toml`). The
+//! default offline build keeps the full public API but answers every job
+//! with an error, so callers degrade to the pure-Rust integrators.
+//!
 //! Design:
 //! * **Executor thread** — the `xla` crate's handles wrap raw C pointers
 //!   without `Send`/`Sync`, so one dedicated thread owns the
@@ -17,7 +22,8 @@
 
 use crate::linalg::Mat;
 use crate::util::json::{self, Json};
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
@@ -209,7 +215,25 @@ fn read_manifest(dir: &Path) -> Result<Vec<BucketInfo>> {
     Ok(out)
 }
 
+/// Stub executor for builds without the vendored `xla` crate (the default
+/// offline configuration): every job is answered with an error so the
+/// coordinator's pure-Rust fallback paths keep serving.
+#[cfg(not(feature = "pjrt"))]
+fn executor_loop(rx: mpsc::Receiver<Msg>, _dir: PathBuf) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Run(job) => {
+                let _ = job
+                    .reply
+                    .send(Err(anyhow!("built without the `pjrt` feature / xla crate")));
+            }
+            Msg::Shutdown => break,
+        }
+    }
+}
+
 /// The executor thread body: owns the client + executable cache.
+#[cfg(feature = "pjrt")]
 fn executor_loop(rx: mpsc::Receiver<Msg>, dir: PathBuf) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => c,
@@ -236,6 +260,7 @@ fn executor_loop(rx: mpsc::Receiver<Msg>, dir: PathBuf) {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn run_job(
     client: &xla::PjRtClient,
     cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,

@@ -2,6 +2,13 @@
 //! (`harness = false` targets in `benches/`). Runs warmup iterations, then
 //! timed iterations until a time budget or iteration cap is reached, and
 //! prints `name  time: [min median max]`-style lines plus throughput.
+//!
+//! [`write_json`] serializes collected [`BenchResult`]s to a
+//! machine-readable `BENCH_*.json` (per-benchmark median/min/max/mean in
+//! nanoseconds plus the iteration count), so CI can track the perf
+//! trajectory across PRs. `BENCH_BUDGET_SECS` / `BENCH_MAX_ITERS`
+//! environment variables override the budget for smoke runs
+//! ([`Bench::with_env_overrides`]).
 
 use std::time::Instant;
 
@@ -42,6 +49,18 @@ impl Bench {
         self
     }
 
+    /// Applies `BENCH_BUDGET_SECS` / `BENCH_MAX_ITERS` environment
+    /// overrides (CI smoke runs shrink the budget without a code change).
+    pub fn with_env_overrides(mut self) -> Self {
+        if let Some(v) = env_parse::<f64>("BENCH_BUDGET_SECS") {
+            self.budget_secs = v;
+        }
+        if let Some(v) = env_parse::<usize>("BENCH_MAX_ITERS") {
+            self.max_iters = v.max(1);
+        }
+        self
+    }
+
     /// Benchmarks `f`, which should perform one complete measured operation
     /// per call and return a value (returned values are black-boxed so the
     /// optimizer cannot elide the work).
@@ -79,6 +98,34 @@ impl Bench {
     }
 }
 
+fn env_parse<T: std::str::FromStr>(name: &str) -> Option<T> {
+    std::env::var(name).ok().and_then(|s| s.parse().ok())
+}
+
+/// Serializes benchmark results to a machine-readable JSON file:
+/// `{"benchmarks": [{"name", "iters", "median_ns", "min_ns", "max_ns",
+/// "mean_ns"}, …]}`. The perf trajectory tracker diffs these across PRs.
+pub fn write_json(path: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    use crate::util::json::Json;
+    let arr = Json::Arr(
+        results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("iters", Json::Num(r.iters as f64)),
+                    ("median_ns", Json::Num(r.median * 1e9)),
+                    ("min_ns", Json::Num(r.min * 1e9)),
+                    ("max_ns", Json::Num(r.max * 1e9)),
+                    ("mean_ns", Json::Num(r.mean * 1e9)),
+                ])
+            })
+            .collect(),
+    );
+    let doc = Json::obj(vec![("benchmarks", arr)]);
+    std::fs::write(path, format!("{doc}\n"))
+}
+
 /// Formats seconds with an adaptive unit.
 pub fn fmt_time(secs: f64) -> String {
     if secs < 1e-6 {
@@ -108,6 +155,24 @@ mod tests {
         let r = b.run("noop", || 1 + 1);
         assert!(r.iters >= 3);
         assert!(r.min <= r.median && r.median <= r.max);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let b = Bench::new().with_budget(0.02).with_max_iters(3);
+        let r1 = b.run("case/a", || 2 + 2);
+        let r2 = b.run("case/b", || 3 * 3);
+        let path = std::env::temp_dir().join("gfi_bench_test.json");
+        let path = path.to_str().unwrap().to_string();
+        write_json(&path, &[r1, r2]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::parse(&text).unwrap();
+        let arr = doc.get("benchmarks").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("name").unwrap().as_str().unwrap(), "case/a");
+        assert!(arr[0].get("median_ns").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(arr[1].get("iters").unwrap().as_usize().unwrap() >= 3);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

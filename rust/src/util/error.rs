@@ -1,0 +1,101 @@
+//! anyhow-lite: the error-handling surface the crate needs (`Result`,
+//! `anyhow!`, `bail!`, `Context`) implemented over
+//! `Box<dyn std::error::Error>`, so the fully-offline build carries no
+//! external error crate. The API is source-compatible with the subset of
+//! `anyhow` the codebase uses; swap the import path back if the real
+//! crate ever lands in the vendored registry.
+
+use std::fmt;
+
+/// Boxed dynamic error. `?` converts from any `std::error::Error` (io,
+/// parse, …) via the std blanket `From` impls.
+pub type Error = Box<dyn std::error::Error + Send + Sync + 'static>;
+
+/// `Result` with the boxed error as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Builds an [`Error`] from a message (the `anyhow!` macro body).
+pub fn msg(m: String) -> Error {
+    m.into()
+}
+
+/// Context-attaching extension trait for `Result` and `Option`, matching
+/// `anyhow::Context`'s `context` / `with_context` methods.
+pub trait Context<T> {
+    /// Wraps the error (or `None`) with a static context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wraps the error (or `None`) with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| msg(format!("{ctx}: {e}")))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| msg(ctx.to_string()))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| msg(f().to_string()))
+    }
+}
+
+/// Formats a message into an [`Error`] (anyhow-compatible).
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)*) => {
+        $crate::util::error::msg(format!($($t)*))
+    };
+}
+
+/// Early-returns `Err(anyhow!(…))` (anyhow-compatible).
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+// Re-export the crate-root macros under this module's path so call sites
+// can `use crate::util::error::{anyhow, bail, Context, Result};`.
+pub use crate::{anyhow, bail};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("boom {}", 7)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "boom 7");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("writing").unwrap_err();
+        assert!(e.to_string().starts_with("writing: "));
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(3).with_context(|| "x").unwrap(), 3);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+}

@@ -4,6 +4,7 @@
 //! usual ecosystem crates (rand, rayon, serde, criterion, clap, rustfft) are
 //! unavailable. Everything the library needs from them is implemented here:
 //!
+//! * [`error`] — anyhow-lite `Result`/`Context`/`anyhow!`/`bail!`.
 //! * [`rng`] — xoshiro256++ PRNG, Gaussian sampling, shuffles.
 //! * [`par`] — scoped-thread parallel maps (rayon-lite).
 //! * [`json`] — minimal JSON parser/serializer for the coordinator protocol.
@@ -13,6 +14,7 @@
 //! * [`timer`] — scoped wall-clock timing.
 
 pub mod bench;
+pub mod error;
 pub mod json;
 pub mod par;
 pub mod rng;
