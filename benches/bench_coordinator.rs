@@ -1,11 +1,13 @@
 //! Coordinator + runtime benchmarks: request-path latency of the cached
-//! integrator route, the PJRT artifact route (when artifacts exist), and
-//! batcher throughput.
+//! integrator route (both the allocating `integrate` and the
+//! allocation-free `integrate_into`), the PJRT artifact route (when
+//! artifacts exist), and batcher throughput.
 
 use gfi::coordinator::batcher::{Batcher, BatcherConfig};
-use gfi::coordinator::{Backend, Engine};
+use gfi::coordinator::Engine;
 use gfi::integrators::rfd::RfdConfig;
 use gfi::integrators::sf::SfConfig;
+use gfi::integrators::IntegratorSpec;
 use gfi::linalg::Mat;
 use gfi::util::bench::Bench;
 use gfi::util::rng::Rng;
@@ -21,13 +23,13 @@ fn main() {
     let mut mesh = gfi::mesh::icosphere(3);
     mesh.normalize_unit_box();
     let id = engine.register_mesh(mesh, "sphere");
-    let n = engine.cloud(id).unwrap().points.len();
+    let n = engine.cloud(id).unwrap().scene.len();
     let mut rng = Rng::new(1);
     let field = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.gaussian()).collect());
 
-    let sf = Backend::Sf(SfConfig::default());
-    let rfd = Backend::Rfd(RfdConfig { num_features: 16, ..Default::default() });
-    let rfd_pjrt = Backend::RfdPjrt(RfdConfig { num_features: 16, ..Default::default() });
+    let sf = IntegratorSpec::Sf(SfConfig::default());
+    let rfd = IntegratorSpec::Rfd(RfdConfig { num_features: 16, ..Default::default() });
+    let rfd_pjrt = IntegratorSpec::RfdPjrt(RfdConfig { num_features: 16, ..Default::default() });
 
     // Warm the caches, then measure the request path.
     let _ = engine.integrate(id, &sf, &field).unwrap();
@@ -37,6 +39,14 @@ fn main() {
     });
     bench.run(&format!("engine/rfd-cached/n={n}"), || {
         engine.integrate(id, &rfd, &field).unwrap()
+    });
+    // Allocation-free serving path: caller-held output, pooled workspace.
+    let mut out = Mat::zeros(n, 3);
+    bench.run(&format!("engine/sf-cached-into/n={n}"), || {
+        engine.integrate_into(id, &sf, &field, &mut out).unwrap()
+    });
+    bench.run(&format!("engine/rfd-cached-into/n={n}"), || {
+        engine.integrate_into(id, &rfd, &field, &mut out).unwrap()
     });
     if engine.has_pjrt() {
         let _ = engine.integrate(id, &rfd_pjrt, &field).unwrap();

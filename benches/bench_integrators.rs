@@ -1,16 +1,17 @@
 //! Integrator hot-path benchmarks (criterion-lite; `cargo bench`).
-//! Covers the workloads behind Fig. 4: SF/RFD/tree/BF pre-processing and
-//! apply at two mesh scales, the n=2048 acceptance workloads for the
-//! blocked-GEMM + batched-distance kernel layers, plus the Hankel/FFT and
-//! matmul substrate. Writes `BENCH_integrators.json` (median ns per case)
-//! so the perf trajectory is tracked from PR 1 onward.
+//! Covers the workloads behind Fig. 4: SF/RFD/tree/BF pre-processing
+//! (through the `prepare` factory) and apply at two mesh scales, the
+//! allocation-free `apply_into` serving path, the n=2048 acceptance
+//! workloads for the blocked-GEMM + batched-distance kernel layers, plus
+//! the Hankel/FFT and matmul substrate. Writes `BENCH_integrators.json`
+//! (median ns per case) so the perf trajectory is tracked across PRs —
+//! CI diffs it against the previous run's artifact.
 
 use gfi::fft::hankel_matvec_multi;
-use gfi::integrators::bf::BruteForceSp;
-use gfi::integrators::rfd::{RfDiffusion, RfdConfig};
-use gfi::integrators::sf::{SeparatorFactorization, SfConfig};
-use gfi::integrators::trees::{TreeEnsembleIntegrator, TreeKind};
-use gfi::integrators::{FieldIntegrator, KernelFn};
+use gfi::integrators::rfd::RfdConfig;
+use gfi::integrators::sf::SfConfig;
+use gfi::integrators::trees::TreeKind;
+use gfi::integrators::{prepare, FieldIntegrator, IntegratorSpec, KernelFn, Scene, Workspace};
 use gfi::linalg::Mat;
 use gfi::util::bench::{write_json, Bench, BenchResult};
 use gfi::util::rng::Rng;
@@ -21,45 +22,64 @@ fn main() {
     for subdiv in [3usize, 4] {
         let mut mesh = gfi::mesh::icosphere(subdiv);
         mesh.normalize_unit_box();
-        let g = mesh.to_graph();
-        let n = g.n;
-        let pc = gfi::pointcloud::PointCloud::new(mesh.verts.clone());
+        let scene = Scene::from_mesh(&mesh);
+        let n = scene.len();
         let mut rng = Rng::new(1);
         let field = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.gaussian()).collect());
+        let mut out = Mat::zeros(n, 3);
+        let mut ws = Workspace::new();
 
-        let sf_cfg = SfConfig { kernel: KernelFn::ExpNeg(4.0), ..Default::default() };
+        let sf_spec = IntegratorSpec::Sf(SfConfig {
+            kernel: KernelFn::ExpNeg(4.0),
+            ..Default::default()
+        });
         results.push(bench.run(&format!("sf/preprocess/n={n}"), || {
-            SeparatorFactorization::new(&g, sf_cfg.clone())
+            prepare(&scene, &sf_spec).unwrap()
         }));
-        let sf = SeparatorFactorization::new(&g, sf_cfg.clone());
+        let sf: Box<dyn FieldIntegrator> = prepare(&scene, &sf_spec).unwrap();
         results.push(bench.run(&format!("sf/apply/n={n}"), || sf.apply(&field)));
+        results.push(bench.run(&format!("sf/apply_into/n={n}"), || {
+            sf.apply_into(&field, &mut out, &mut ws)
+        }));
         // General-f (FFT) path.
-        let sf_gen = SeparatorFactorization::new(
-            &g,
-            SfConfig { kernel: KernelFn::GaussianSq(4.0), ..sf_cfg.clone() },
-        );
+        let sf_gen = prepare(
+            &scene,
+            &IntegratorSpec::Sf(SfConfig {
+                kernel: KernelFn::GaussianSq(4.0),
+                ..Default::default()
+            }),
+        )
+        .unwrap();
         results.push(bench.run(&format!("sf/apply-generalf/n={n}"), || sf_gen.apply(&field)));
 
-        let rfd_cfg = RfdConfig {
+        let rfd_spec = IntegratorSpec::Rfd(RfdConfig {
             num_features: 32,
             epsilon: 0.15,
             lambda: -0.5,
             ..Default::default()
-        };
+        });
         results.push(bench.run(&format!("rfd/preprocess/n={n}"), || {
-            RfDiffusion::new(&pc, rfd_cfg.clone())
+            prepare(&scene, &rfd_spec).unwrap()
         }));
-        let rfd = RfDiffusion::new(&pc, rfd_cfg.clone());
+        let rfd = prepare(&scene, &rfd_spec).unwrap();
         results.push(bench.run(&format!("rfd/apply/n={n}"), || rfd.apply(&field)));
+        results.push(bench.run(&format!("rfd/apply_into/n={n}"), || {
+            rfd.apply_into(&field, &mut out, &mut ws)
+        }));
 
-        let trees = TreeEnsembleIntegrator::new(&g, TreeKind::Bartal, 3, 4.0, 0);
+        let trees = prepare(
+            &scene,
+            &IntegratorSpec::Trees { kind: TreeKind::Bartal, count: 3, lambda: 4.0, seed: 0 },
+        )
+        .unwrap();
         results.push(bench.run(&format!("trees-bartal3/apply/n={n}"), || trees.apply(&field)));
 
         if n <= 1000 {
+            let bf_spec = IntegratorSpec::BfSp(KernelFn::ExpNeg(4.0));
             results.push(bench.run(&format!("bf/preprocess/n={n}"), || {
-                BruteForceSp::new(&g, &KernelFn::ExpNeg(4.0))
+                prepare(&scene, &bf_spec).unwrap()
             }));
-            let bf = BruteForceSp::new(&g, &KernelFn::ExpNeg(4.0));
+            let bf = prepare(&scene, &bf_spec).unwrap();
             results.push(bench.run(&format!("bf/apply/n={n}"), || bf.apply(&field)));
         }
     }
@@ -70,21 +90,22 @@ fn main() {
     {
         let mut rng = Rng::new(7);
         let pc = gfi::pointcloud::random_cloud(2048, &mut rng);
-        let cfg = RfdConfig {
+        let g = pc.epsilon_graph(0.15, gfi::pointcloud::Norm::LInf, true);
+        let scene = Scene::new(pc, Some(g));
+        let spec = IntegratorSpec::Rfd(RfdConfig {
             num_features: 32,
             epsilon: 0.15,
             lambda: -0.5,
             ..Default::default()
-        };
+        });
         results.push(bench.run("rfd/preprocess/n=2048", || {
-            RfDiffusion::new(&pc, cfg.clone())
+            prepare(&scene, &spec).unwrap()
         }));
-        let rfd = RfDiffusion::new(&pc, cfg.clone());
+        let rfd = prepare(&scene, &spec).unwrap();
         let field = Mat::from_vec(2048, 3, (0..2048 * 3).map(|_| rng.gaussian()).collect());
         results.push(bench.run("rfd/apply/n=2048", || rfd.apply(&field)));
-        let g = pc.epsilon_graph(0.15, gfi::pointcloud::Norm::LInf, true);
         results.push(bench.run("bf/preprocess/n=2048", || {
-            BruteForceSp::new(&g, &KernelFn::ExpNeg(4.0))
+            prepare(&scene, &IntegratorSpec::BfSp(KernelFn::ExpNeg(4.0))).unwrap()
         }));
     }
 

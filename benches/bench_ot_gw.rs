@@ -2,9 +2,9 @@
 //! iteration cost (Fig. 7) with dense vs RFD-injected structures.
 
 use gfi::gw::{gw_solve, DenseStructure, GwConfig, LowRankStructure, StructureMatrix};
-use gfi::integrators::rfd::{RfDiffusion, RfdConfig};
-use gfi::integrators::sf::{SeparatorFactorization, SfConfig};
-use gfi::integrators::{FieldIntegrator, KernelFn};
+use gfi::integrators::rfd::RfdConfig;
+use gfi::integrators::sf::SfConfig;
+use gfi::integrators::{prepare, FieldIntegrator, IntegratorSpec, KernelFn, Scene};
 use gfi::linalg::Mat;
 use gfi::ot::{concentrated_distributions, wasserstein_barycenter, BarycenterConfig};
 use gfi::pointcloud::random_cloud;
@@ -17,25 +17,31 @@ fn main() {
     // Barycenter with SF vs RFD FMs on a sphere.
     let mut mesh = gfi::mesh::icosphere(3);
     mesh.normalize_unit_box();
-    let g = mesh.to_graph();
-    let n = g.n;
+    let scene = Scene::from_mesh(&mesh);
+    let n = scene.len();
     let area = mesh.vertex_areas();
     let centers = [0, n / 3, 2 * n / 3];
     let cfg = BarycenterConfig { max_iter: 10, ..Default::default() };
-    let sf = SeparatorFactorization::new(
-        &g,
-        SfConfig { kernel: KernelFn::ExpNeg(8.0), ..Default::default() },
-    );
+    let sf: Box<dyn FieldIntegrator> = prepare(
+        &scene,
+        &IntegratorSpec::Sf(SfConfig { kernel: KernelFn::ExpNeg(8.0), ..Default::default() }),
+    )
+    .unwrap();
     let fm_sf = |x: &Mat| sf.apply(x);
     let mus = concentrated_distributions(n, &centers, &fm_sf);
     bench.run(&format!("barycenter/sf-fm/n={n}/10iter"), || {
         wasserstein_barycenter(&mus, &area, &[1.0 / 3.0; 3], &fm_sf, &cfg)
     });
-    let pc = gfi::pointcloud::PointCloud::new(mesh.verts.clone());
-    let rfd = RfDiffusion::new(
-        &pc,
-        RfdConfig { num_features: 30, epsilon: 0.05, lambda: 0.5, ..Default::default() },
-    );
+    let rfd = prepare(
+        &scene,
+        &IntegratorSpec::Rfd(RfdConfig {
+            num_features: 30,
+            epsilon: 0.05,
+            lambda: 0.5,
+            ..Default::default()
+        }),
+    )
+    .unwrap();
     let fm_rfd = |x: &Mat| rfd.apply(x);
     bench.run(&format!("barycenter/rfd-fm/n={n}/10iter"), || {
         wasserstein_barycenter(&mus, &area, &[1.0 / 3.0; 3], &fm_rfd, &cfg)

@@ -1,21 +1,21 @@
 //! Vertex-normal prediction across the mesh zoo (the Fig. 4 workload as
 //! a library-level example): all integrators side by side on one mesh of
-//! your choosing.
+//! your choosing, every one constructed through `prepare`.
 //!
 //! ```sh
 //! cargo run --release --example mesh_interpolation [n_target]
 //! ```
 
 use gfi::apps::interpolation::InterpolationTask;
-use gfi::integrators::bf::BruteForceSp;
-use gfi::integrators::rfd::{RfDiffusion, RfdConfig};
-use gfi::integrators::sf::{SeparatorFactorization, SfConfig};
-use gfi::integrators::trees::{TreeEnsembleIntegrator, TreeKind};
-use gfi::integrators::{FieldIntegrator, KernelFn};
+use gfi::integrators::rfd::RfdConfig;
+use gfi::integrators::sf::SfConfig;
+use gfi::integrators::trees::TreeKind;
+use gfi::integrators::{prepare, FieldIntegrator, IntegratorSpec, KernelFn, Scene, Workspace};
+use gfi::linalg::Mat;
 use gfi::util::rng::Rng;
 use gfi::util::timer::timed;
 
-fn main() {
+fn main() -> gfi::util::error::Result<()> {
     let n_target: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
@@ -25,59 +25,39 @@ fn main() {
         .next()
         .expect("zoo entry");
     let mesh = entry.mesh;
-    let g = mesh.to_graph();
-    println!("mesh {} — |V|={}, genus χ={}", entry.name, g.n, mesh.euler_characteristic());
+    let scene = Scene::from_mesh(&mesh);
+    let n = scene.len();
+    println!("mesh {} — |V|={}, genus χ={}", entry.name, n, mesh.euler_characteristic());
     let normals = mesh.vertex_normals();
     let mut rng = Rng::new(7);
     let task = InterpolationTask::from_vectors(&normals, 0.8, &mut rng);
     let lambda = 6.0;
 
-    let integrators: Vec<(Box<dyn FieldIntegrator>, f64)> = vec![
-        {
-            let (i, t) = timed(|| {
-                Box::new(SeparatorFactorization::new(
-                    &g,
-                    SfConfig { kernel: KernelFn::ExpNeg(lambda), ..Default::default() },
-                )) as Box<dyn FieldIntegrator>
-            });
-            (i, t)
-        },
-        {
-            let pc = gfi::pointcloud::PointCloud::new(mesh.verts.clone());
-            let (i, t) = timed(|| {
-                Box::new(RfDiffusion::new(
-                    &pc,
-                    RfdConfig {
-                        num_features: 256,
-                        epsilon: 0.15,
-                        lambda: 0.5,
-                        ..Default::default()
-                    },
-                )) as Box<dyn FieldIntegrator>
-            });
-            (i, t)
-        },
-        {
-            let (i, t) = timed(|| {
-                Box::new(TreeEnsembleIntegrator::new(&g, TreeKind::Bartal, 3, lambda, 0))
-                    as Box<dyn FieldIntegrator>
-            });
-            (i, t)
-        },
-        {
-            let (i, t) = timed(|| {
-                Box::new(BruteForceSp::new(&g, &KernelFn::ExpNeg(lambda)))
-                    as Box<dyn FieldIntegrator>
-            });
-            (i, t)
-        },
+    let specs: Vec<IntegratorSpec> = vec![
+        IntegratorSpec::Sf(SfConfig {
+            kernel: KernelFn::ExpNeg(lambda),
+            ..Default::default()
+        }),
+        IntegratorSpec::Rfd(RfdConfig {
+            num_features: 256,
+            epsilon: 0.15,
+            lambda: 0.5,
+            ..Default::default()
+        }),
+        IntegratorSpec::Trees { kind: TreeKind::Bartal, count: 3, lambda, seed: 0 },
+        IntegratorSpec::BfSp(KernelFn::ExpNeg(lambda)),
     ];
     println!(
         "{:<28} {:>12} {:>12} {:>8}",
         "method", "preproc(s)", "interp(s)", "cos"
     );
-    for (integ, pre) in &integrators {
-        let ((cos, _), apply) = timed(|| task.evaluate(integ.as_ref()));
+    let mut pred = Mat::zeros(n, 3);
+    let mut ws = Workspace::new();
+    for spec in &specs {
+        let (integ, pre) = timed(|| prepare(&scene, spec));
+        let integ: Box<dyn FieldIntegrator> = integ?;
+        let (cos, apply) = timed(|| task.evaluate_into(integ.as_ref(), &mut pred, &mut ws));
         println!("{:<28} {:>12.4} {:>12.4} {:>8.4}", integ.name(), pre, apply, cos);
     }
+    Ok(())
 }

@@ -1,25 +1,27 @@
-//! Quickstart: build a mesh, integrate a field three ways (BF exact, SF,
-//! RFD), and compare.
+//! Quickstart: describe the input as a `Scene`, pick backends as
+//! `IntegratorSpec` values, build through the one fallible `prepare`
+//! factory, and serve repeated requests allocation-free with
+//! `apply_into` + a warm `Workspace`.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use gfi::integrators::bf::BruteForceSp;
-use gfi::integrators::rfd::{RfDiffusion, RfdConfig};
-use gfi::integrators::sf::{SeparatorFactorization, SfConfig};
-use gfi::integrators::{FieldIntegrator, KernelFn};
+use gfi::integrators::rfd::RfdConfig;
+use gfi::integrators::sf::SfConfig;
+use gfi::integrators::{prepare, FieldIntegrator, IntegratorSpec, KernelFn, Scene, Workspace};
 use gfi::linalg::Mat;
 use gfi::util::rng::Rng;
 use gfi::util::timer::timed;
 
-fn main() {
-    // A genus-0 mesh normalized into the unit box.
+fn main() -> gfi::util::error::Result<()> {
+    // A genus-0 mesh normalized into the unit box, wrapped as a Scene
+    // (vertex cloud + mesh graph — every backend prepares from this).
     let mut mesh = gfi::mesh::icosphere(3);
     mesh.normalize_unit_box();
-    let graph = mesh.to_graph();
-    let n = graph.n;
-    println!("mesh: icosphere(3) — {n} vertices, {} edges", graph.num_edges());
+    let scene = Scene::from_mesh(&mesh);
+    let n = scene.len();
+    println!("mesh: icosphere(3) — {n} vertices");
 
     // The field to integrate: the vertex normals.
     let normals = mesh.vertex_normals();
@@ -30,41 +32,54 @@ fn main() {
 
     // 1. Exact brute force, K(i,j) = exp(-2·dist(i,j)).
     let kernel = KernelFn::ExpNeg(2.0);
-    let (bf, t_bf) = timed(|| BruteForceSp::new(&graph, &kernel));
+    let (bf, t_bf) = timed(|| prepare(&scene, &IntegratorSpec::BfSp(kernel.clone())));
+    let bf: Box<dyn FieldIntegrator> = bf?;
     let exact = bf.apply(&field);
-    println!("BF   : preproc {:.3}s", t_bf);
+    println!("BF   : preproc {t_bf:.3}s");
 
-    // 2. SeparatorFactorization — O(N log² N).
+    // 2. SeparatorFactorization — O(N log² N). Serve through the
+    //    allocation-free hot path: caller-held output + reusable scratch.
     let (sf, t_sf) = timed(|| {
-        SeparatorFactorization::new(
-            &graph,
-            SfConfig { kernel: kernel.clone(), unit_size: 0.01, ..Default::default() },
+        prepare(
+            &scene,
+            &IntegratorSpec::Sf(SfConfig { kernel, unit_size: 0.01, ..Default::default() }),
         )
     });
-    let (sf_out, t_sf_apply) = timed(|| sf.apply(&field));
+    let sf = sf?;
+    let mut out = Mat::zeros(n, 3);
+    let mut ws = Workspace::new();
+    let (_, t_sf_apply) = timed(|| sf.apply_into(&field, &mut out, &mut ws));
     println!(
         "SF   : preproc {:.3}s, apply {:.3}s, rel err {:.3}",
         t_sf,
         t_sf_apply,
-        gfi::util::stats::rel_err(&sf_out.data, &exact.data)
+        gfi::util::stats::rel_err(&out.data, &exact.data)
     );
 
     // 3. RFDiffusion over the ε-NN representation — O(N).
-    let pc = gfi::pointcloud::PointCloud::new(mesh.verts.clone());
     let (rfd, t_rfd) = timed(|| {
-        RfDiffusion::new(
-            &pc,
-            RfdConfig { num_features: 256, epsilon: 0.15, lambda: 0.5, ..Default::default() },
+        prepare(
+            &scene,
+            &IntegratorSpec::Rfd(RfdConfig {
+                num_features: 256,
+                epsilon: 0.15,
+                lambda: 0.5,
+                ..Default::default()
+            }),
         )
     });
-    let (rfd_out, t_rfd_apply) = timed(|| rfd.apply(&field));
-    println!("RFD  : preproc {:.3}s, apply {:.3}s (diffusion kernel — different geometry than BF-sp)", t_rfd, t_rfd_apply);
-    let _ = rfd_out;
+    let rfd = rfd?;
+    let (_, t_rfd_apply) = timed(|| rfd.apply_into(&field, &mut out, &mut ws));
+    println!(
+        "RFD  : preproc {t_rfd:.3}s, apply {t_rfd_apply:.3}s \
+         (diffusion kernel — different geometry than BF-sp)"
+    );
 
     // 4. Interpolation task: mask 80% of the normals and reconstruct.
     let mut rng = Rng::new(0);
     let task = gfi::apps::interpolation::InterpolationTask::from_vectors(&normals, 0.8, &mut rng);
-    let (cos_sf, _) = task.evaluate(&sf);
-    let (cos_rfd, _) = task.evaluate(&rfd);
+    let cos_sf = task.evaluate_into(sf.as_ref(), &mut out, &mut ws);
+    let cos_rfd = task.evaluate_into(rfd.as_ref(), &mut out, &mut ws);
     println!("vertex-normal interpolation cosine: SF={cos_sf:.4}  RFD={cos_rfd:.4}");
+    Ok(())
 }

@@ -12,7 +12,7 @@
 //! ```
 
 use gfi::coordinator::{server, Engine};
-use gfi::integrators::FieldIntegrator;
+use gfi::integrators::{prepare, FieldIntegrator, IntegratorSpec, KernelFn};
 use gfi::linalg::Mat;
 use gfi::util::rng::Rng;
 use gfi::util::stats;
@@ -53,10 +53,10 @@ fn main() -> gfi::util::error::Result<()> {
 
     // Exact oracle for result checking (SF backend vs BF on the sphere).
     let sphere_entry = engine.cloud(sphere_id as u64)?;
-    let oracle = gfi::integrators::bf::BruteForceSp::new(
-        sphere_entry.graph.as_ref().unwrap(),
-        &gfi::integrators::KernelFn::ExpNeg(4.0),
-    );
+    let oracle: Box<dyn FieldIntegrator> = prepare(
+        &sphere_entry.scene,
+        &IntegratorSpec::BfSp(KernelFn::ExpNeg(4.0)),
+    )?;
 
     // --- Fire the concurrent workload. ---
     let t0 = Instant::now();

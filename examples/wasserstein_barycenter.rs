@@ -6,25 +6,24 @@
 //! cargo run --release --example wasserstein_barycenter
 //! ```
 
-use gfi::integrators::bf::BruteForceSp;
-use gfi::integrators::sf::{SeparatorFactorization, SfConfig};
-use gfi::integrators::{FieldIntegrator, KernelFn};
+use gfi::integrators::sf::SfConfig;
+use gfi::integrators::{prepare, FieldIntegrator, IntegratorSpec, KernelFn, Scene};
 use gfi::linalg::Mat;
 use gfi::ot::{concentrated_distributions, wasserstein_barycenter, BarycenterConfig};
 use gfi::util::timer::timed;
 
-fn main() {
+fn main() -> gfi::util::error::Result<()> {
     let mut mesh = gfi::mesh::icosphere(3);
     mesh.normalize_unit_box();
-    let g = mesh.to_graph();
-    let n = g.n;
+    let scene = Scene::from_mesh(&mesh);
+    let n = scene.len();
     println!("mesh: icosphere(3), |V|={n}");
     let area = mesh.vertex_areas();
     let centers = [0, n / 3, 2 * n / 3];
     let kernel = KernelFn::ExpNeg(8.0);
 
     // Exact FM.
-    let bf = BruteForceSp::new(&g, &kernel);
+    let bf: Box<dyn FieldIntegrator> = prepare(&scene, &IntegratorSpec::BfSp(kernel.clone()))?;
     let fm_bf = |x: &Mat| bf.apply(x);
     let mus = concentrated_distributions(n, &centers, &fm_bf);
     let cfg = BarycenterConfig { max_iter: 40, ..Default::default() };
@@ -32,10 +31,10 @@ fn main() {
         timed(|| wasserstein_barycenter(&mus, &area, &[1.0 / 3.0; 3], &fm_bf, &cfg));
 
     // SF FM.
-    let sf = SeparatorFactorization::new(
-        &g,
-        SfConfig { kernel, unit_size: 0.01, ..Default::default() },
-    );
+    let sf = prepare(
+        &scene,
+        &IntegratorSpec::Sf(SfConfig { kernel, unit_size: 0.01, ..Default::default() }),
+    )?;
     let fm_sf = |x: &Mat| sf.apply(x);
     let (mu_sf, t_sf) =
         timed(|| wasserstein_barycenter(&mus, &area, &[1.0 / 3.0; 3], &fm_sf, &cfg));
@@ -47,4 +46,5 @@ fn main() {
     top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
     println!("top-5 barycenter vertices (SF): {:?}",
         top[..5].iter().map(|&(v, m)| format!("v{v}:{m:.4}")).collect::<Vec<_>>());
+    Ok(())
 }

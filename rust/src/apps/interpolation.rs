@@ -7,7 +7,7 @@
 //! predicted and ground-truth vectors on the masked set.
 
 use crate::graph::{distances, CsrGraph};
-use crate::integrators::FieldIntegrator;
+use crate::integrators::{FieldIntegrator, Workspace};
 use crate::linalg::Mat;
 use crate::util::rng::Rng;
 use crate::util::stats::mean_cosine_sim_rows;
@@ -54,6 +54,19 @@ impl InterpolationTask {
         let pred = integrator.apply(&self.masked_field);
         let cos = self.score(&pred);
         (cos, pred)
+    }
+
+    /// Allocation-free variant of [`InterpolationTask::evaluate`] for
+    /// repeated evaluation loops: the prediction lands in the caller-held
+    /// `pred` (`N × 3`) and scratch comes from `ws`.
+    pub fn evaluate_into(
+        &self,
+        integrator: &dyn FieldIntegrator,
+        pred: &mut Mat,
+        ws: &mut Workspace,
+    ) -> f64 {
+        integrator.apply_into(&self.masked_field, pred, ws);
+        self.score(pred)
     }
 
     /// Nearest-unmasked baseline: every masked vertex copies the field of

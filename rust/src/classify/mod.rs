@@ -17,7 +17,8 @@ use crate::pointcloud::{Norm, PointCloud};
 
 /// RFD spectral features: `k` smallest eigenvalues of `exp(Λ(Ŵ − δI))`.
 pub fn rfd_spectral_features(points: &PointCloud, cfg: &RfdConfig, k: usize) -> Vec<f64> {
-    let rfd = RfDiffusion::new(points, cfg.clone());
+    let rfd = RfDiffusion::try_new(points, cfg.clone())
+        .expect("rfd_spectral_features: RFD preparation failed");
     rfd.kernel_eigenvalues(k, points.len())
 }
 

@@ -1,11 +1,17 @@
-//! Dynamic batcher for the PJRT route: concurrent requests against the
-//! same `(cloud, rfd-config)` are merged into one artifact dispatch by
-//! concatenating field columns up to the bucket width. Amortizes the
-//! per-dispatch PJRT overhead (literal building, executor round trip),
-//! which dominates for small d (the vLLM-router batching idea transposed
-//! to field columns).
+//! Dynamic batcher: concurrent requests against the same
+//! `(cloud, spec.cache_key())` are merged into one engine call.
+//!
+//! * **PJRT groups** are merged by concatenating field columns up to the
+//!   bucket width — one artifact dispatch amortizes the per-dispatch
+//!   overhead (literal building, executor round trip), which dominates
+//!   for small d (the vLLM-router batching idea transposed to field
+//!   columns).
+//! * **Pure-Rust groups** go through [`Engine::integrate_batch`]: one
+//!   cache lookup and one warm workspace for the whole group, no
+//!   merge/split copies.
 
-use crate::coordinator::{Backend, Engine};
+use crate::coordinator::Engine;
+use crate::integrators::IntegratorSpec;
 use crate::linalg::Mat;
 use crate::util::error::Result;
 use std::collections::HashMap;
@@ -17,7 +23,7 @@ use std::time::Duration;
 struct Pending {
     cloud: u64,
     key: String,
-    backend: Backend,
+    spec: IntegratorSpec,
     field: Mat,
     reply: mpsc::Sender<Result<Mat>>,
 }
@@ -52,11 +58,16 @@ impl Batcher {
     }
 
     /// Submits a request; blocks until the batch containing it executes.
-    pub fn integrate(&self, cloud: u64, backend: Backend, field: Mat) -> Result<Mat> {
+    /// Unkeyable specs are rejected up front (they cannot be grouped).
+    pub fn integrate(&self, cloud: u64, spec: IntegratorSpec, field: Mat) -> Result<Mat> {
         let (reply_tx, reply_rx) = mpsc::channel();
-        let key = format!("{cloud}:{}", backend.cache_key());
+        // Rfd and RfdPjrt share an engine cache key on purpose, but they
+        // must not share a *batch*: the group is routed as a whole, so a
+        // mixed group would send pure-Rust requests through the PJRT
+        // artifact (or vice versa). spec.name() splits the routes.
+        let key = format!("{cloud}:{}:{}", spec.name(), spec.cache_key()?);
         self.tx
-            .send(Pending { cloud, key, backend, field, reply: reply_tx })
+            .send(Pending { cloud, key, spec, field, reply: reply_tx })
             .map_err(|_| crate::anyhow!("batcher worker gone"))?;
         reply_rx
             .recv()
@@ -92,9 +103,18 @@ fn worker_loop(engine: Arc<Engine>, rx: mpsc::Receiver<Pending>, cfg: BatcherCon
     }
 }
 
-/// Executes one same-key group, merging up to `max_cols` columns per
-/// dispatch.
+/// Executes one same-key group. PJRT groups merge up to `max_cols`
+/// columns per artifact dispatch; pure-Rust groups run as one
+/// [`Engine::integrate_batch`] call.
 fn execute_group(engine: &Engine, group: Vec<Pending>, max_cols: usize) {
+    let pjrt_route = group
+        .first()
+        .map(|p| matches!(p.spec, IntegratorSpec::RfdPjrt(_)) && engine.has_pjrt())
+        .unwrap_or(false);
+    if !pjrt_route {
+        execute_batch(engine, group);
+        return;
+    }
     let mut chunk: Vec<Pending> = Vec::new();
     let mut cols = 0usize;
     let flush = |chunk: &mut Vec<Pending>, engine: &Engine| {
@@ -103,7 +123,7 @@ fn execute_group(engine: &Engine, group: Vec<Pending>, max_cols: usize) {
         }
         if chunk.len() == 1 {
             let p = chunk.pop().unwrap();
-            let out = engine.integrate(p.cloud, &p.backend, &p.field).map(|(m, _)| m);
+            let out = engine.integrate(p.cloud, &p.spec, &p.field).map(|(m, _)| m);
             let _ = p.reply.send(out);
             return;
         }
@@ -121,7 +141,7 @@ fn execute_group(engine: &Engine, group: Vec<Pending>, max_cols: usize) {
             off += p.field.cols;
         }
         let result = engine
-            .integrate(chunk[0].cloud, &chunk[0].backend, &merged)
+            .integrate(chunk[0].cloud, &chunk[0].spec, &merged)
             .map(|(m, _)| m);
         match result {
             Ok(out) => {
@@ -156,6 +176,37 @@ fn execute_group(engine: &Engine, group: Vec<Pending>, max_cols: usize) {
     flush(&mut chunk, engine);
 }
 
+/// Pure-Rust group execution: one `integrate_batch` over all member
+/// fields (single cache lookup, single workspace), replies positionally.
+fn execute_batch(engine: &Engine, mut group: Vec<Pending>) {
+    if group.is_empty() {
+        return;
+    }
+    if group.len() == 1 {
+        let p = group.pop().unwrap();
+        let out = engine.integrate(p.cloud, &p.spec, &p.field).map(|(m, _)| m);
+        let _ = p.reply.send(out);
+        return;
+    }
+    let fields: Vec<Mat> = group
+        .iter_mut()
+        .map(|p| std::mem::replace(&mut p.field, Mat::zeros(0, 0)))
+        .collect();
+    match engine.integrate_batch(group[0].cloud, &group[0].spec, &fields) {
+        Ok((outs, _)) => {
+            for (p, out) in group.into_iter().zip(outs) {
+                let _ = p.reply.send(Ok(out));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for p in group {
+                let _ = p.reply.send(Err(crate::anyhow!("{msg}")));
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,10 +218,10 @@ mod tests {
     fn batched_results_match_direct() {
         let eng = Arc::new(Engine::new(None));
         let id = eng.register_mesh(icosphere(1), "s");
-        let n = eng.cloud(id).unwrap().points.len();
+        let n = eng.cloud(id).unwrap().scene.len();
         let batcher = Batcher::new(eng.clone(), BatcherConfig::default());
         let cfg = RfdConfig { num_features: 8, seed: 1, ..Default::default() };
-        let backend = Backend::Rfd(cfg);
+        let spec = IntegratorSpec::Rfd(cfg);
         // Fire several concurrent single-column requests.
         let mut rng = Rng::new(5);
         let fields: Vec<Mat> = (0..6)
@@ -178,14 +229,14 @@ mod tests {
             .collect();
         let wants: Vec<Mat> = fields
             .iter()
-            .map(|f| eng.integrate(id, &backend, f).unwrap().0)
+            .map(|f| eng.integrate(id, &spec, f).unwrap().0)
             .collect();
         std::thread::scope(|s| {
             let handles: Vec<_> = fields
                 .iter()
                 .map(|f| {
                     let b = &batcher;
-                    let be = backend.clone();
+                    let be = spec.clone();
                     s.spawn(move || b.integrate(id, be, f.clone()).unwrap())
                 })
                 .collect();
@@ -208,7 +259,7 @@ mod tests {
         // SF on a bare cloud fails — the error must come back, not hang.
         let out = batcher.integrate(
             id,
-            Backend::Sf(crate::integrators::sf::SfConfig::default()),
+            IntegratorSpec::Sf(crate::integrators::sf::SfConfig::default()),
             Mat::zeros(30, 1),
         );
         assert!(out.is_err());

@@ -1,18 +1,31 @@
-//! L3 coordinator — the GFI serving engine.
+//! L3 coordinator — the GFI serving engine, built on the unified
+//! spec → prepare → apply_into lifecycle from [`crate::integrators`].
 //!
-//! Clients register point clouds / meshes once, then submit
-//! `Integrate` requests naming a backend (SF, RFD, RFD-via-PJRT, BF,
-//! tree ensembles). The engine:
+//! Clients register point clouds / meshes once (each becomes a cached
+//! [`Scene`]), then submit `Integrate` requests carrying an
+//! [`IntegratorSpec`]. The engine:
 //!
-//! * caches **prepared integrators** per `(cloud, backend-config)` so
+//! * caches **prepared integrators** per `(cloud, spec.cache_key())` —
 //!   pre-processing (separator trees, RF features, dense kernels) is paid
-//!   once and the request path only runs `apply`;
-//! * routes RFD requests to the **AOT/PJRT artifacts** when present
-//!   (`artifacts/manifest.json`), falling back to the pure-Rust kernel;
-//! * **batches** concurrent PJRT requests for the same cloud+config into
-//!   one executable dispatch (field columns are concatenated up to the
-//!   bucket width) — see [`batcher`];
+//!   once, built through the single fallible [`prepare`] factory, and the
+//!   request path only runs `apply_into`;
+//! * serves the hot path **allocation-free**: [`Engine::integrate_into`]
+//!   writes into a caller-held output matrix and draws scratch from a
+//!   pooled [`Workspace`], so steady-state traffic performs zero
+//!   per-request output/scratch allocation
+//!   ([`Engine::workspace_allocations`] exposes the warmup counter);
+//! * serves multi-field requests through [`Engine::integrate_batch`]
+//!   (one cache lookup + one workspace for the whole batch);
+//! * routes `RfdPjrt` requests to the **AOT/PJRT artifacts** when present
+//!   (`artifacts/manifest.json`), falling back to the pure-Rust kernel —
+//!   the two routes share one cache key on purpose;
+//! * **batches** concurrent requests for the same cloud+spec — see
+//!   [`batcher`];
 //! * records per-backend latency/throughput [`metrics`].
+//!
+//! Unkeyable specs (custom kernels without a label) are rejected with a
+//! typed error instead of silently sharing a cache slot — see
+//! [`IntegratorSpec::cache_key`].
 //!
 //! The TCP JSON-lines front-end lives in [`server`]; the CLI launches it.
 
@@ -20,78 +33,27 @@ pub mod batcher;
 pub mod metrics;
 pub mod server;
 
-use crate::graph::CsrGraph;
-use crate::integrators::bf::{BruteForceDiffusion, BruteForceSp};
-use crate::integrators::rfd::{sample_features, RfDiffusion, RfdConfig};
-use crate::integrators::sf::{SeparatorFactorization, SfConfig};
-use crate::integrators::trees::{TreeEnsembleIntegrator, TreeKind};
-use crate::integrators::{FieldIntegrator, KernelFn};
+use crate::integrators::rfd::sample_features;
+use crate::integrators::{
+    prepare, validate_spec, FieldIntegrator, GfiError, IntegratorSpec, Scene, Workspace,
+};
 use crate::linalg::Mat;
 use crate::mesh::TriMesh;
 use crate::pointcloud::PointCloud;
 use crate::runtime::PjrtRuntime;
 use crate::util::error::{anyhow, bail, Result};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
-/// Integration backend selection + config.
-#[derive(Clone, Debug)]
-pub enum Backend {
-    /// SeparatorFactorization over the mesh graph.
-    Sf(SfConfig),
-    /// RFDiffusion, pure Rust.
-    Rfd(RfdConfig),
-    /// RFDiffusion through the AOT/PJRT artifact (falls back to Rust if
-    /// no runtime is loaded).
-    RfdPjrt(RfdConfig),
-    /// Brute-force shortest-path kernel.
-    BfSp(KernelFn),
-    /// Brute-force diffusion kernel over the ε-graph.
-    BfDiffusion { epsilon: f64, lambda: f64 },
-    /// Low-distortion tree ensemble.
-    Trees { kind: TreeKind, count: usize, lambda: f64 },
-}
+/// Backwards-compatible alias: the old `coordinator::Backend` enum is now
+/// the crate-wide [`IntegratorSpec`].
+pub use crate::integrators::IntegratorSpec as Backend;
 
-impl Backend {
-    /// Cache key: stable textual encoding of backend + parameters.
-    pub fn cache_key(&self) -> String {
-        match self {
-            Backend::Sf(c) => format!(
-                "sf:{:?}:{}:{}:{}:{}",
-                c.kernel, c.unit_size, c.threshold, c.separator_size, c.seed
-            ),
-            Backend::Rfd(c) | Backend::RfdPjrt(c) => format!(
-                "rfd:{}:{}:{}:{}:{}",
-                c.num_features, c.epsilon, c.lambda, c.radius, c.seed
-            ),
-            Backend::BfSp(k) => format!("bfsp:{k:?}"),
-            Backend::BfDiffusion { epsilon, lambda } => {
-                format!("bfdiff:{epsilon}:{lambda}")
-            }
-            Backend::Trees { kind, count, lambda } => {
-                format!("trees:{kind:?}:{count}:{lambda}")
-            }
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Backend::Sf(_) => "sf",
-            Backend::Rfd(_) => "rfd",
-            Backend::RfdPjrt(_) => "rfd_pjrt",
-            Backend::BfSp(_) => "bf_sp",
-            Backend::BfDiffusion { .. } => "bf_diffusion",
-            Backend::Trees { .. } => "trees",
-        }
-    }
-}
-
-/// A registered point cloud (with its mesh graph when it came from a
-/// mesh).
+/// A registered scene (point cloud, plus the mesh graph when it came
+/// from a mesh).
 pub struct CloudEntry {
-    pub points: PointCloud,
-    pub graph: Option<CsrGraph>,
+    pub scene: Scene,
     pub name: String,
 }
 
@@ -117,6 +79,12 @@ pub struct Engine {
     clouds: RwLock<HashMap<u64, Arc<CloudEntry>>>,
     integrators: RwLock<HashMap<(u64, String), Arc<dyn FieldIntegrator>>>,
     pjrt_preps: RwLock<HashMap<(u64, String), Arc<PjrtPrep>>>,
+    /// Pool of warm apply workspaces (one in flight per concurrent
+    /// request; returned after each apply).
+    workspaces: Mutex<Vec<Workspace>>,
+    /// Monotonic total of workspace warmup allocations, folded in at
+    /// check-in so in-flight workspaces never make the count dip.
+    ws_allocations: AtomicUsize,
     next_id: AtomicU64,
     runtime: Option<Arc<PjrtRuntime>>,
     pub metrics: metrics::Metrics,
@@ -137,6 +105,8 @@ impl Engine {
             clouds: RwLock::new(HashMap::new()),
             integrators: RwLock::new(HashMap::new()),
             pjrt_preps: RwLock::new(HashMap::new()),
+            workspaces: Mutex::new(Vec::new()),
+            ws_allocations: AtomicUsize::new(0),
             next_id: AtomicU64::new(1),
             runtime,
             metrics: metrics::Metrics::new(),
@@ -151,28 +121,27 @@ impl Engine {
         self.runtime.as_ref()
     }
 
-    /// Registers a raw point cloud; returns its id.
+    /// Registers an arbitrary scene; returns its id.
+    pub fn register_scene(&self, scene: Scene, name: &str) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.clouds
+            .write()
+            .unwrap()
+            .insert(id, Arc::new(CloudEntry { scene, name: name.to_string() }));
+        id
+    }
+
+    /// Registers a raw point cloud (normalized into the unit box);
+    /// returns its id.
     pub fn register_cloud(&self, mut points: PointCloud, name: &str) -> u64 {
         points.normalize_unit_box();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.clouds.write().unwrap().insert(
-            id,
-            Arc::new(CloudEntry { points, graph: None, name: name.to_string() }),
-        );
-        id
+        self.register_scene(Scene::from_points(points), name)
     }
 
     /// Registers a mesh: stores both the vertex cloud and the mesh graph.
     pub fn register_mesh(&self, mut mesh: TriMesh, name: &str) -> u64 {
         mesh.normalize_unit_box();
-        let graph = mesh.to_graph();
-        let points = PointCloud::new(mesh.verts.clone());
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.clouds.write().unwrap().insert(
-            id,
-            Arc::new(CloudEntry { points, graph: Some(graph), name: name.to_string() }),
-        );
-        id
+        self.register_scene(Scene::from_mesh(&mesh), name)
     }
 
     pub fn cloud(&self, id: u64) -> Result<Arc<CloudEntry>> {
@@ -188,20 +157,81 @@ impl Engine {
         self.clouds.read().unwrap().len()
     }
 
-    /// Integrates `field` over cloud `id` with `backend`. Pre-processing
-    /// is cached per (cloud, config).
-    pub fn integrate(&self, id: u64, backend: &Backend, field: &Mat) -> Result<(Mat, IntegrateInfo)> {
-        let entry = self.cloud(id)?;
-        if field.rows != entry.points.len() {
-            bail!(
-                "field rows {} != cloud size {}",
-                field.rows,
-                entry.points.len()
-            );
+    /// Monotonic total of workspace warmup events — constant across
+    /// repeated same-shape requests ⇔ the apply path is allocation-free.
+    pub fn workspace_allocations(&self) -> usize {
+        self.ws_allocations.load(Ordering::Relaxed)
+    }
+
+    /// Checks a workspace out of the pool; returns it with its current
+    /// allocation count so check-in can fold in only the delta.
+    fn take_workspace(&self) -> (Workspace, usize) {
+        let ws = self.workspaces.lock().unwrap().pop().unwrap_or_default();
+        let baseline = ws.allocations();
+        (ws, baseline)
+    }
+
+    fn put_workspace(&self, ws: Workspace, baseline: usize) {
+        self.ws_allocations
+            .fetch_add(ws.allocations() - baseline, Ordering::Relaxed);
+        self.workspaces.lock().unwrap().push(ws);
+    }
+
+    /// Cached prepared integrator for `(cloud, spec)` — builds through
+    /// [`prepare`] on a miss. Returns `(integrator, cache_hit, seconds)`.
+    fn prepared(
+        &self,
+        id: u64,
+        entry: &CloudEntry,
+        spec: &IntegratorSpec,
+    ) -> Result<(Arc<dyn FieldIntegrator>, bool, f64)> {
+        let key = (id, spec.cache_key()?);
+        if let Some(i) = self.integrators.read().unwrap().get(&key).cloned() {
+            return Ok((i, true, 0.0));
         }
-        // PJRT route.
-        if let (Backend::RfdPjrt(cfg), Some(rt)) = (backend, &self.runtime) {
-            let key = (id, backend.cache_key());
+        let (built, dt) = crate::util::timer::timed(|| prepare(&entry.scene, spec));
+        let built: Arc<dyn FieldIntegrator> = Arc::from(built?);
+        self.integrators.write().unwrap().insert(key, built.clone());
+        Ok((built, false, dt))
+    }
+
+    /// Integrates `field` over cloud `id`, allocating the output —
+    /// convenience wrapper over [`Engine::integrate_into`].
+    pub fn integrate(
+        &self,
+        id: u64,
+        spec: &IntegratorSpec,
+        field: &Mat,
+    ) -> Result<(Mat, IntegrateInfo)> {
+        let mut out = Mat::zeros(0, 0);
+        let info = self.integrate_into(id, spec, field, &mut out)?;
+        Ok((out, info))
+    }
+
+    /// The allocation-free request path: writes `K · field` into the
+    /// caller-held `out` (reshaped in place if needed — a right-sized
+    /// buffer is reused as-is), drawing scratch from the engine's
+    /// workspace pool. Pre-processing is cached per `(cloud, spec)`.
+    pub fn integrate_into(
+        &self,
+        id: u64,
+        spec: &IntegratorSpec,
+        field: &Mat,
+        out: &mut Mat,
+    ) -> Result<IntegrateInfo> {
+        let entry = self.cloud(id)?;
+        let n = entry.scene.len();
+        if field.rows != n {
+            return Err(GfiError::FieldShape { expected_rows: n, got_rows: field.rows }.into());
+        }
+        reshape(out, n, field.cols);
+
+        // PJRT route. Enforce the same spec/scene contract as `prepare`
+        // (the artifact path builds its features elsewhere, so it would
+        // otherwise skip validation and panic on e.g. a point-less scene).
+        if let (IntegratorSpec::RfdPjrt(cfg), Some(rt)) = (spec, &self.runtime) {
+            validate_spec(&entry.scene, spec)?;
+            let key = (id, spec.cache_key()?);
             // NB: clone out of the read guard *before* any write-lock
             // path — RwLock is not reentrant and `if let` scrutinee
             // temporaries live through the else branch.
@@ -216,86 +246,114 @@ impl Engine {
                 self.pjrt_preps.write().unwrap().insert(key, p.clone());
                 (p, false, dt)
             };
-            let (out, apply_secs) = crate::util::timer::timed(|| {
-                rt.rfd_apply(&entry.points.points, &prep.omegas, &prep.qscale, field, prep.lambda)
+            let (res, apply_secs) = crate::util::timer::timed(|| {
+                rt.rfd_apply(
+                    &entry.scene.points.points,
+                    &prep.omegas,
+                    &prep.qscale,
+                    field,
+                    prep.lambda,
+                )
             });
-            let out = out?;
-            let info = IntegrateInfo {
-                backend: backend.name().into(),
+            let res = res?;
+            out.data.copy_from_slice(&res.data);
+            self.metrics.record(spec.name(), apply_secs, field.rows);
+            return Ok(IntegrateInfo {
+                backend: spec.name().into(),
                 preprocess_seconds: prep_secs,
                 apply_seconds: apply_secs,
                 cache_hit,
                 used_pjrt: true,
-            };
-            self.metrics.record(backend.name(), apply_secs, field.rows);
-            return Ok((out, info));
+            });
         }
 
         // Pure-Rust integrator route (with cache).
-        let key = (id, backend.cache_key());
-        let cached = self.integrators.read().unwrap().get(&key).cloned();
-        let (integrator, cache_hit, prep_secs) = if let Some(i) = cached {
-            (i, true, 0.0)
-        } else {
-            let (built, dt) = crate::util::timer::timed(|| self.build(&entry, backend));
-            let built = built?;
-            self.integrators.write().unwrap().insert(key, built.clone());
-            (built, false, dt)
-        };
-        let (out, apply_secs) = crate::util::timer::timed(|| integrator.apply(field));
-        let info = IntegrateInfo {
-            backend: backend.name().into(),
+        let (integrator, cache_hit, prep_secs) = self.prepared(id, &entry, spec)?;
+        let (mut ws, ws_baseline) = self.take_workspace();
+        let (_, apply_secs) =
+            crate::util::timer::timed(|| integrator.apply_into(field, out, &mut ws));
+        self.put_workspace(ws, ws_baseline);
+        self.metrics.record(spec.name(), apply_secs, field.rows);
+        Ok(IntegrateInfo {
+            backend: spec.name().into(),
             preprocess_seconds: prep_secs,
             apply_seconds: apply_secs,
             cache_hit,
             used_pjrt: false,
-        };
-        self.metrics.record(backend.name(), apply_secs, field.rows);
-        Ok((out, info))
+        })
     }
 
-    /// Builds a fresh integrator for a cloud entry.
-    fn build(&self, entry: &CloudEntry, backend: &Backend) -> Result<Arc<dyn FieldIntegrator>> {
-        Ok(match backend {
-            Backend::Sf(cfg) => {
-                let g = entry
-                    .graph
-                    .as_ref()
-                    .ok_or_else(|| anyhow!("SF needs a mesh graph; register a mesh"))?;
-                Arc::new(SeparatorFactorization::new(g, cfg.clone()))
+    /// Multi-field request: one cache lookup and one workspace for the
+    /// whole batch, applied through
+    /// [`FieldIntegrator::apply_batch`]. Results are positionally matched
+    /// to `fields`.
+    pub fn integrate_batch(
+        &self,
+        id: u64,
+        spec: &IntegratorSpec,
+        fields: &[Mat],
+    ) -> Result<(Vec<Mat>, IntegrateInfo)> {
+        if fields.is_empty() {
+            bail!("integrate_batch needs at least one field");
+        }
+        // PJRT requests go through the artifact dispatcher individually
+        // (the batcher amortizes them by column merging instead).
+        if matches!(spec, IntegratorSpec::RfdPjrt(_)) && self.runtime.is_some() {
+            let mut outs = Vec::with_capacity(fields.len());
+            let mut info = None;
+            for f in fields {
+                let (o, i) = self.integrate(id, spec, f)?;
+                outs.push(o);
+                info = Some(i);
             }
-            Backend::Rfd(cfg) | Backend::RfdPjrt(cfg) => {
-                Arc::new(RfDiffusion::new(&entry.points, cfg.clone()))
-            }
-            Backend::BfSp(kernel) => {
-                let g = entry
-                    .graph
-                    .as_ref()
-                    .ok_or_else(|| anyhow!("BF-sp needs a mesh graph"))?;
-                Arc::new(BruteForceSp::new(g, kernel))
-            }
-            Backend::BfDiffusion { epsilon, lambda } => {
-                let g = entry.points.epsilon_graph(
-                    *epsilon,
-                    crate::pointcloud::Norm::LInf,
-                    true,
+            return Ok((outs, info.expect("non-empty batch")));
+        }
+        let entry = self.cloud(id)?;
+        let n = entry.scene.len();
+        for f in fields {
+            if f.rows != n {
+                return Err(
+                    GfiError::FieldShape { expected_rows: n, got_rows: f.rows }.into()
                 );
-                Arc::new(BruteForceDiffusion::new(&g, *lambda))
             }
-            Backend::Trees { kind, count, lambda } => {
-                let g = entry
-                    .graph
-                    .as_ref()
-                    .ok_or_else(|| anyhow!("tree backends need a mesh graph"))?;
-                Arc::new(TreeEnsembleIntegrator::new(g, *kind, *count, *lambda, 0))
-            }
-        })
+        }
+        let (integrator, cache_hit, prep_secs) = self.prepared(id, &entry, spec)?;
+        let mut outs: Vec<Mat> = fields.iter().map(|f| Mat::zeros(n, f.cols)).collect();
+        let (mut ws, ws_baseline) = self.take_workspace();
+        let (_, apply_secs) =
+            crate::util::timer::timed(|| integrator.apply_batch(fields, &mut outs, &mut ws));
+        self.put_workspace(ws, ws_baseline);
+        let rows: usize = fields.iter().map(|f| f.rows).sum();
+        self.metrics.record(spec.name(), apply_secs, rows);
+        Ok((
+            outs,
+            IntegrateInfo {
+                backend: spec.name().into(),
+                preprocess_seconds: prep_secs,
+                apply_seconds: apply_secs,
+                cache_hit,
+                used_pjrt: false,
+            },
+        ))
+    }
+}
+
+/// Reshapes `out` to `rows × cols` in place, reusing its allocation when
+/// the capacity suffices; a right-shaped buffer is left untouched.
+fn reshape(out: &mut Mat, rows: usize, cols: usize) {
+    if (out.rows, out.cols) != (rows, cols) {
+        out.rows = rows;
+        out.cols = cols;
+        out.data.resize(rows * cols, 0.0);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::integrators::rfd::RfdConfig;
+    use crate::integrators::sf::SfConfig;
+    use crate::integrators::KernelFn;
     use crate::mesh::icosphere;
     use crate::util::rng::Rng;
 
@@ -306,33 +364,121 @@ mod tests {
         Engine::new(dir_opt.as_deref())
     }
 
+    fn rand_field(n: usize, d: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_vec(n, d, (0..n * d).map(|_| rng.gaussian()).collect())
+    }
+
     #[test]
     fn register_and_integrate_sf() {
         let eng = engine();
         let id = eng.register_mesh(icosphere(2), "sphere");
-        let n = eng.cloud(id).unwrap().points.len();
-        let mut rng = Rng::new(1);
-        let field = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.gaussian()).collect());
-        let backend = Backend::Sf(SfConfig::default());
-        let (out, info) = eng.integrate(id, &backend, &field).unwrap();
+        let n = eng.cloud(id).unwrap().scene.len();
+        let field = rand_field(n, 3, 1);
+        let spec = IntegratorSpec::Sf(SfConfig::default());
+        let (out, info) = eng.integrate(id, &spec, &field).unwrap();
         assert_eq!(out.rows, n);
         assert!(!info.cache_hit);
         // Second call hits the cache.
-        let (_, info2) = eng.integrate(id, &backend, &field).unwrap();
+        let (_, info2) = eng.integrate(id, &spec, &field).unwrap();
         assert!(info2.cache_hit);
         assert_eq!(info2.preprocess_seconds, 0.0);
+    }
+
+    #[test]
+    fn cached_integrate_into_reuses_caller_buffer() {
+        let eng = engine();
+        let id = eng.register_mesh(icosphere(2), "sphere");
+        let n = eng.cloud(id).unwrap().scene.len();
+        let field = rand_field(n, 3, 2);
+        let spec = IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() });
+        let mut out = Mat::zeros(n, 3);
+        let ptr = out.data.as_ptr();
+        let info1 = eng.integrate_into(id, &spec, &field, &mut out).unwrap();
+        assert!(!info1.cache_hit);
+        assert_eq!(out.data.as_ptr(), ptr, "right-sized output must not reallocate");
+        let info2 = eng.integrate_into(id, &spec, &field, &mut out).unwrap();
+        assert!(info2.cache_hit, "second request must reuse the prepared integrator");
+        assert_eq!(out.data.as_ptr(), ptr, "output buffer reallocated on the hot path");
+        // Steady state: the pooled workspace stops allocating scratch.
+        let warm = eng.workspace_allocations();
+        for _ in 0..3 {
+            eng.integrate_into(id, &spec, &field, &mut out).unwrap();
+        }
+        assert_eq!(
+            eng.workspace_allocations(),
+            warm,
+            "apply path allocated scratch after warmup"
+        );
+        // And the result matches the allocating wrapper bit-for-bit.
+        let (fresh, _) = eng.integrate(id, &spec, &field).unwrap();
+        assert_eq!(fresh.data, out.data);
+    }
+
+    #[test]
+    fn distinct_custom_kernels_do_not_share_cache() {
+        let eng = engine();
+        let id = eng.register_mesh(icosphere(1), "s");
+        let n = eng.cloud(id).unwrap().scene.len();
+        let field = rand_field(n, 2, 3);
+        let steep = IntegratorSpec::BfSp(KernelFn::custom("steep", |x| (-8.0 * x).exp()));
+        let shallow =
+            IntegratorSpec::BfSp(KernelFn::custom("shallow", |x| (-0.1 * x).exp()));
+        let (out_steep, _) = eng.integrate(id, &steep, &field).unwrap();
+        let (out_shallow, info) = eng.integrate(id, &shallow, &field).unwrap();
+        assert!(
+            !info.cache_hit,
+            "second custom kernel must not hit the first one's cache entry"
+        );
+        let diff: f64 = out_steep
+            .data
+            .iter()
+            .zip(&out_shallow.data)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 1e-6, "distinct custom kernels returned identical results");
+        // Same labeled kernel again → cache hit.
+        let shallow2 =
+            IntegratorSpec::BfSp(KernelFn::custom("shallow", |x| (-0.1 * x).exp()));
+        let (_, info2) = eng.integrate(id, &shallow2, &field).unwrap();
+        assert!(info2.cache_hit);
+    }
+
+    #[test]
+    fn unkeyable_spec_is_rejected() {
+        let eng = engine();
+        let id = eng.register_mesh(icosphere(1), "s");
+        let n = eng.cloud(id).unwrap().scene.len();
+        let field = Mat::zeros(n, 1);
+        let opaque = IntegratorSpec::BfSp(KernelFn::custom_opaque(|x| (-x).exp()));
+        let err = eng.integrate(id, &opaque, &field).unwrap_err();
+        assert!(err.to_string().contains("cache key"), "{err}");
+    }
+
+    #[test]
+    fn integrate_batch_matches_individual_requests() {
+        let eng = engine();
+        let id = eng.register_mesh(icosphere(1), "s");
+        let n = eng.cloud(id).unwrap().scene.len();
+        let spec = IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() });
+        let fields: Vec<Mat> = (0..4).map(|i| rand_field(n, 1, 50 + i)).collect();
+        let (outs, _) = eng.integrate_batch(id, &spec, &fields).unwrap();
+        assert_eq!(outs.len(), fields.len());
+        for (f, o) in fields.iter().zip(&outs) {
+            let (want, _) = eng.integrate(id, &spec, f).unwrap();
+            assert_eq!(want.data, o.data);
+        }
     }
 
     #[test]
     fn rfd_pjrt_route_matches_rust_route() {
         let eng = engine();
         let id = eng.register_mesh(icosphere(2), "sphere");
-        let n = eng.cloud(id).unwrap().points.len();
-        let mut rng = Rng::new(2);
-        let field = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.gaussian()).collect());
+        let n = eng.cloud(id).unwrap().scene.len();
+        let field = rand_field(n, 3, 4);
         let cfg = RfdConfig { num_features: 16, epsilon: 0.2, lambda: -0.2, seed: 3, ..Default::default() };
-        let (rust_out, _) = eng.integrate(id, &Backend::Rfd(cfg.clone()), &field).unwrap();
-        let (pjrt_out, info) = eng.integrate(id, &Backend::RfdPjrt(cfg), &field).unwrap();
+        let (rust_out, _) = eng.integrate(id, &IntegratorSpec::Rfd(cfg.clone()), &field).unwrap();
+        let (pjrt_out, info) = eng.integrate(id, &IntegratorSpec::RfdPjrt(cfg), &field).unwrap();
         if eng.has_pjrt() {
             assert!(info.used_pjrt);
             let e = crate::util::stats::rel_err(&pjrt_out.data, &rust_out.data);
@@ -351,12 +497,12 @@ mod tests {
         // SF on a bare cloud (no mesh graph) must fail gracefully.
         let field = Mat::zeros(50, 3);
         assert!(eng
-            .integrate(id, &Backend::Sf(SfConfig::default()), &field)
+            .integrate(id, &IntegratorSpec::Sf(SfConfig::default()), &field)
             .is_err());
         // Wrong field size.
         let bad = Mat::zeros(49, 3);
         assert!(eng
-            .integrate(id, &Backend::Rfd(RfdConfig::default()), &bad)
+            .integrate(id, &IntegratorSpec::Rfd(RfdConfig::default()), &bad)
             .is_err());
     }
 
@@ -364,9 +510,9 @@ mod tests {
     fn metrics_recorded() {
         let eng = engine();
         let id = eng.register_mesh(icosphere(1), "s");
-        let n = eng.cloud(id).unwrap().points.len();
+        let n = eng.cloud(id).unwrap().scene.len();
         let field = Mat::zeros(n, 3);
-        let _ = eng.integrate(id, &Backend::Rfd(RfdConfig::default()), &field).unwrap();
+        let _ = eng.integrate(id, &IntegratorSpec::Rfd(RfdConfig::default()), &field).unwrap();
         let snap = eng.metrics.snapshot();
         assert_eq!(snap.get("rfd").map(|s| s.count), Some(1));
     }

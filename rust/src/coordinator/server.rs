@@ -10,20 +10,25 @@
 //! → {"op":"integrate","cloud":1,"backend":"sf","field":[...],"d":3,
 //!    "lambda":1.0,"unit_size":0.01}
 //! ← {"ok":true,"result":[...],"apply_seconds":0.003,"cache_hit":false}
+//! ```
+//!
+//! The `integrate` request body is exactly the wire form of
+//! [`IntegratorSpec`] (see [`IntegratorSpec::from_request`]): backends
+//! `sf`, `rfd`, `rfd_pjrt`, `bf_sp`, `bf_diffusion`, `trees_mst`,
+//! `trees_bartal`, `trees_frt`, `almohy`, `lanczos`, `bader`.
+//!
+//! ```text
 //! → {"op":"stats"}
 //! ← {"ok":true,"backends":{...}}
 //! → {"op":"shutdown"}
 //! ```
 
-use crate::coordinator::{Backend, Engine};
-use crate::integrators::rfd::RfdConfig;
-use crate::integrators::sf::SfConfig;
-use crate::integrators::trees::TreeKind;
-use crate::integrators::KernelFn;
+use crate::coordinator::Engine;
+use crate::integrators::IntegratorSpec;
 use crate::linalg::Mat;
 use crate::mesh;
-use crate::util::json::{parse, Json};
 use crate::util::error::{anyhow, Result};
+use crate::util::json::{parse, Json};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -130,7 +135,7 @@ fn handle_line(engine: &Engine, line: &str, stop: &AtomicBool) -> Result<Json> {
                 .get("cloud")
                 .and_then(Json::as_usize)
                 .ok_or_else(|| anyhow!("missing cloud"))? as u64;
-            let backend = parse_backend(&req)?;
+            let spec = IntegratorSpec::from_request(&req)?;
             let flat = req
                 .get("field")
                 .and_then(Json::as_f64_vec)
@@ -140,7 +145,7 @@ fn handle_line(engine: &Engine, line: &str, stop: &AtomicBool) -> Result<Json> {
                 return Err(anyhow!("field length {} not divisible by d={d}", flat.len()));
             }
             let field = Mat::from_vec(flat.len() / d, d, flat);
-            let (out, info) = engine.integrate(cloud, &backend, &field)?;
+            let (out, info) = engine.integrate(cloud, &spec, &field)?;
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("result", Json::num_arr(&out.data)),
@@ -162,54 +167,6 @@ fn handle_line(engine: &Engine, line: &str, stop: &AtomicBool) -> Result<Json> {
         }
         other => Err(anyhow!("unknown op {other}")),
     }
-}
-
-/// Parses the backend spec out of an `integrate` request.
-fn parse_backend(req: &Json) -> Result<Backend> {
-    let name = req
-        .get("backend")
-        .and_then(Json::as_str)
-        .ok_or_else(|| anyhow!("missing backend"))?;
-    let num = |k: &str, dflt: f64| req.get(k).and_then(Json::as_f64).unwrap_or(dflt);
-    Ok(match name {
-        "sf" => Backend::Sf(SfConfig {
-            kernel: KernelFn::ExpNeg(num("lambda", 1.0)),
-            unit_size: num("unit_size", 0.01),
-            threshold: num("threshold", 512.0) as usize,
-            separator_size: num("separator_size", 6.0) as usize,
-            seed: num("seed", 0.0) as u64,
-        }),
-        "rfd" | "rfd_pjrt" => {
-            let cfg = RfdConfig {
-                num_features: num("m", 16.0) as usize,
-                epsilon: num("epsilon", 0.1),
-                lambda: num("lambda", -0.1),
-                seed: num("seed", 0.0) as u64,
-                ..Default::default()
-            };
-            if name == "rfd" {
-                Backend::Rfd(cfg)
-            } else {
-                Backend::RfdPjrt(cfg)
-            }
-        }
-        "bf_sp" => Backend::BfSp(KernelFn::ExpNeg(num("lambda", 1.0))),
-        "bf_diffusion" => Backend::BfDiffusion {
-            epsilon: num("epsilon", 0.1),
-            lambda: num("lambda", -0.1),
-        },
-        "trees_bartal" => Backend::Trees {
-            kind: TreeKind::Bartal,
-            count: num("count", 3.0) as usize,
-            lambda: num("lambda", 1.0),
-        },
-        "trees_frt" => Backend::Trees {
-            kind: TreeKind::Frt,
-            count: num("count", 3.0) as usize,
-            lambda: num("lambda", 1.0),
-        },
-        other => return Err(anyhow!("unknown backend {other}")),
-    })
 }
 
 #[cfg(test)]

@@ -68,8 +68,17 @@ impl CsrGraph {
     /// Sparse matvec with the weighted adjacency matrix: `out = W_G · x`
     /// where `x` has `d` interleaved columns (row-major `n × d`).
     pub fn adj_matvec_multi(&self, x: &[f64], d: usize) -> Vec<f64> {
-        assert_eq!(x.len(), self.n * d);
         let mut out = vec![0.0; self.n * d];
+        self.adj_matvec_multi_into(x, d, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`CsrGraph::adj_matvec_multi`]:
+    /// overwrites the caller-held `out`.
+    pub fn adj_matvec_multi_into(&self, x: &[f64], d: usize, out: &mut [f64]) {
+        assert_eq!(x.len(), self.n * d);
+        assert_eq!(out.len(), self.n * d);
+        out.fill(0.0);
         for v in 0..self.n {
             let orow = &mut out[v * d..(v + 1) * d];
             for (u, w) in self.neighbors(v) {
@@ -79,7 +88,6 @@ impl CsrGraph {
                 }
             }
         }
-        out
     }
 
     /// Graph Laplacian matvec: `out = (D − W) x`, multi-column.

@@ -117,7 +117,8 @@ impl LowRankStructure {
     /// RFD-backed structure for a point cloud: `C = exp(Λ(Ŵ − δI))` in
     /// its exact low-rank form (never materialized).
     pub fn from_rfd(points: &PointCloud, cfg: RfdConfig) -> Self {
-        let rfd = RfDiffusion::new(points, cfg.clone());
+        let rfd = RfDiffusion::try_new(points, cfg.clone())
+            .expect("from_rfd: RFD preparation failed");
         let (a, b) = rfd.factors();
         // C x = s·x + s·A·(M·(Bᵀ x)) with s = e^{-Λδ}. Fold s and M into U.
         let s = (-cfg.lambda * rfd.delta()).exp();
@@ -241,7 +242,7 @@ mod tests {
         let pc = random_cloud(40, &mut rng);
         let cfg = RfdConfig { num_features: 16, lambda: -0.2, seed: 9, ..Default::default() };
         let s = LowRankStructure::from_rfd(&pc, cfg.clone());
-        let rfd = RfDiffusion::new(&pc, cfg);
+        let rfd = RfDiffusion::try_new(&pc, cfg).unwrap();
         let x = Mat::from_vec(40, 2, (0..80).map(|_| rng.gaussian()).collect());
         let e = rel_err(&s.apply(&x).data, &rfd.apply(&x).data);
         assert!(e < 1e-10, "structure vs integrator: {e}");

@@ -7,9 +7,9 @@
 //!   `expm` (`O(N³)`). Baseline for RFD (Fig. 4 row 2, Table 2) — and the
 //!   reason the paper's BF column runs out of time/memory first.
 
-use super::{FieldIntegrator, KernelFn};
+use super::{check_apply_shapes, FieldIntegrator, KernelFn, Workspace};
 use crate::graph::{distances, CsrGraph};
-use crate::linalg::{expm_pade, Mat};
+use crate::linalg::{expm_pade, Mat, Trans};
 use crate::util::par;
 
 /// Dense shortest-path-kernel integrator.
@@ -21,8 +21,8 @@ impl BruteForceSp {
     /// Pre-processing: N-source batched Dijkstra (parallel, per-thread
     /// reusable scratch — see [`distances`]) + kernel evaluation.
     /// Unreachable pairs contribute `0` (decaying-kernel convention shared
-    /// with SF).
-    pub fn new(g: &CsrGraph, f: &KernelFn) -> Self {
+    /// with SF). Construct via [`crate::integrators::prepare`].
+    pub(crate) fn new(g: &CsrGraph, f: &KernelFn) -> Self {
         let n = g.n;
         let mut k = Mat::zeros(n, n);
         let sources: Vec<usize> = (0..n).collect();
@@ -55,8 +55,9 @@ impl FieldIntegrator for BruteForceSp {
     fn len(&self) -> usize {
         self.kernel_matrix.rows
     }
-    fn apply(&self, field: &Mat) -> Mat {
-        self.kernel_matrix.matmul(field)
+    fn apply_into(&self, field: &Mat, out: &mut Mat, _ws: &mut Workspace) {
+        check_apply_shapes(self.len(), field, out);
+        out.gemm_assign(1.0, &self.kernel_matrix, Trans::No, field, Trans::No, 0.0);
     }
 }
 
@@ -66,7 +67,8 @@ pub struct BruteForceDiffusion {
 }
 
 impl BruteForceDiffusion {
-    pub fn new(g: &CsrGraph, lambda: f64) -> Self {
+    /// Construct via [`crate::integrators::prepare`].
+    pub(crate) fn new(g: &CsrGraph, lambda: f64) -> Self {
         let n = g.n;
         let mut w = Mat::zeros(n, n);
         for v in 0..n {
@@ -97,8 +99,9 @@ impl FieldIntegrator for BruteForceDiffusion {
     fn len(&self) -> usize {
         self.kernel_matrix.rows
     }
-    fn apply(&self, field: &Mat) -> Mat {
-        self.kernel_matrix.matmul(field)
+    fn apply_into(&self, field: &Mat, out: &mut Mat, _ws: &mut Workspace) {
+        check_apply_shapes(self.len(), field, out);
+        out.gemm_assign(1.0, &self.kernel_matrix, Trans::No, field, Trans::No, 0.0);
     }
 }
 

@@ -10,9 +10,9 @@
 //! * [`BaderDense`] — dense Taylor-polynomial `expm` (Bader et al. 2019),
 //!   the `O(N³)` pre-processing baseline.
 
-use super::FieldIntegrator;
+use super::{check_apply_shapes, FieldIntegrator, Workspace};
 use crate::graph::CsrGraph;
-use crate::linalg::{eigh_jacobi, expm_taylor, Mat};
+use crate::linalg::{eigh_jacobi, expm_taylor, Mat, Trans};
 
 /// Matrix-free Taylor `expm` action with scaling.
 pub struct AlMohyExpmv {
@@ -23,7 +23,8 @@ pub struct AlMohyExpmv {
 }
 
 impl AlMohyExpmv {
-    pub fn new(g: &CsrGraph, lambda: f64) -> Self {
+    /// Construct via [`crate::integrators::prepare`].
+    pub(crate) fn new(g: &CsrGraph, lambda: f64) -> Self {
         AlMohyExpmv { g: g.clone(), lambda, tol: 1e-12, max_terms: 60 }
     }
 
@@ -45,17 +46,23 @@ impl FieldIntegrator for AlMohyExpmv {
         self.g.n
     }
 
-    fn apply(&self, field: &Mat) -> Mat {
+    fn apply_into(&self, field: &Mat, out: &mut Mat, ws: &mut Workspace) {
+        check_apply_shapes(self.len(), field, out);
         let d = field.cols;
         let s = self.norm1().ceil().max(1.0) as usize;
-        let mut x = field.data.clone();
+        let len = field.data.len();
+        let mut x = ws.take(len);
+        x.copy_from_slice(&field.data);
+        let mut acc = ws.take(len);
+        let mut term = ws.take(len);
+        let mut tbuf = ws.take(len);
         for _stage in 0..s {
-            let mut acc = x.clone();
-            let mut term = x.clone();
+            acc.copy_from_slice(&x);
+            term.copy_from_slice(&x);
             for k in 1..=self.max_terms {
-                let t = self.g.adj_matvec_multi(&term, d);
+                self.g.adj_matvec_multi_into(&term, d, &mut tbuf);
                 let scale = self.lambda / (s as f64 * k as f64);
-                for (dst, &src) in term.iter_mut().zip(&t) {
+                for (dst, &src) in term.iter_mut().zip(&tbuf) {
                     *dst = scale * src;
                 }
                 let tn = term.iter().fold(0.0f64, |m, v| m.max(v.abs()));
@@ -67,9 +74,13 @@ impl FieldIntegrator for AlMohyExpmv {
                     break;
                 }
             }
-            x = acc;
+            x.copy_from_slice(&acc);
         }
-        Mat::from_vec(field.rows, d, x)
+        out.data.copy_from_slice(&x);
+        ws.put(tbuf);
+        ws.put(term);
+        ws.put(acc);
+        ws.put(x);
     }
 }
 
@@ -83,7 +94,8 @@ pub struct LanczosExpmv {
 }
 
 impl LanczosExpmv {
-    pub fn new(g: &CsrGraph, lambda: f64, krylov_dim: usize) -> Self {
+    /// Construct via [`crate::integrators::prepare`].
+    pub(crate) fn new(g: &CsrGraph, lambda: f64, krylov_dim: usize) -> Self {
         LanczosExpmv { g: g.clone(), lambda, krylov_dim: krylov_dim.max(2) }
     }
 
@@ -173,18 +185,19 @@ impl FieldIntegrator for LanczosExpmv {
     fn len(&self) -> usize {
         self.g.n
     }
-    fn apply(&self, field: &Mat) -> Mat {
+    /// Krylov iterations allocate per column by nature (the `V` basis);
+    /// this baseline only routes its result through the caller's `out`.
+    fn apply_into(&self, field: &Mat, out: &mut Mat, _ws: &mut Workspace) {
+        check_apply_shapes(self.len(), field, out);
         let cols: Vec<Vec<f64>> = crate::util::par::par_map(field.cols, |c| {
             let x = field.col(c);
             self.apply_column(&x)
         });
-        let mut out = Mat::zeros(field.rows, field.cols);
         for (c, col) in cols.iter().enumerate() {
             for (r, &v) in col.iter().enumerate() {
                 out[(r, c)] = v;
             }
         }
-        out
     }
 }
 
@@ -195,7 +208,8 @@ pub struct BaderDense {
 }
 
 impl BaderDense {
-    pub fn new(g: &CsrGraph, lambda: f64) -> Self {
+    /// Construct via [`crate::integrators::prepare`].
+    pub(crate) fn new(g: &CsrGraph, lambda: f64) -> Self {
         let n = g.n;
         let mut w = Mat::zeros(n, n);
         for v in 0..n {
@@ -214,8 +228,9 @@ impl FieldIntegrator for BaderDense {
     fn len(&self) -> usize {
         self.kernel_matrix.rows
     }
-    fn apply(&self, field: &Mat) -> Mat {
-        self.kernel_matrix.matmul(field)
+    fn apply_into(&self, field: &Mat, out: &mut Mat, _ws: &mut Workspace) {
+        check_apply_shapes(self.len(), field, out);
+        out.gemm_assign(1.0, &self.kernel_matrix, Trans::No, field, Trans::No, 0.0);
     }
 }
 

@@ -1,25 +1,64 @@
-//! Graph-field integrators — the paper's core abstraction.
+//! Graph-field integrators — the paper's core abstraction, behind one
+//! spec → prepare → apply_into lifecycle.
 //!
 //! A [`FieldIntegrator`] computes `i(v) = Σ_w K(w, v) F(w)` for all `v`
 //! simultaneously, i.e. multiplies the (never materialized, except by the
 //! brute-force baselines) kernel matrix `K ∈ R^{N×N}` with the field
-//! matrix `F ∈ R^{N×d}`. Implementations:
+//! matrix `F ∈ R^{N×d}`. Every backend splits the work into an expensive
+//! **prepare** phase (separator trees, random features, dense kernels) and
+//! a cheap **apply** phase — the serving hot path.
 //!
-//! | module | algorithm | kernel class | complexity |
-//! |---|---|---|---|
-//! | [`bf`] | brute force | any | `O(N²d)` (+`O(N³)` diffusion pre-proc) |
-//! | [`sf`] | SeparatorFactorization | `f(dist(·,·))` | `O(N log² N)` |
-//! | [`trees`] | low-distortion trees | `f(dist_T(·,·))` | `O(kNd)` |
-//! | [`rfd`] | RFDiffusion | `exp(ΛW_G)` | `O(N m² d)` |
-//! | [`expmv`] | Al-Mohy–Higham / Lanczos | `exp(ΛW_G)` | iterative |
+//! # Lifecycle
+//!
+//! 1. Describe the input once as a [`Scene`] — a point cloud plus an
+//!    optional graph metric (present when the cloud came from a mesh).
+//! 2. Describe the algorithm + hyper-parameters as an [`IntegratorSpec`]
+//!    value. The spec is plain data: it can be serialized to the wire
+//!    format ([`IntegratorSpec::to_json`]) and has a canonical
+//!    [`IntegratorSpec::cache_key`] used by the serving engine.
+//! 3. Call [`prepare`]`(&scene, &spec)`. Construction is **fallible**:
+//!    a spec that needs a graph on a graph-less scene, an empty scene, or
+//!    degenerate hyper-parameters comes back as a typed [`GfiError`]
+//!    instead of a panic.
+//! 4. Call [`FieldIntegrator::apply_into`] with a caller-held output
+//!    matrix and a reusable [`Workspace`]: after warmup the request path
+//!    performs no output or scratch allocation. [`FieldIntegrator::apply`]
+//!    is the thin allocating convenience wrapper;
+//!    [`FieldIntegrator::apply_batch`] serves multi-field requests off one
+//!    workspace.
+//!
+//! ```ignore
+//! let scene = Scene::from_mesh(&mesh);
+//! let spec = IntegratorSpec::Sf(SfConfig::default());
+//! let integ = prepare(&scene, &spec)?;
+//! let mut out = Mat::zeros(integ.len(), field.cols);
+//! let mut ws = Workspace::new();
+//! integ.apply_into(&field, &mut out, &mut ws); // hot path, reusable buffers
+//! ```
+//!
+//! # Backends
+//!
+//! | spec variant | module | algorithm | kernel class | complexity |
+//! |---|---|---|---|---|
+//! | `Sf` | [`sf`] | SeparatorFactorization | `f(dist(·,·))` | `O(N log² N)` |
+//! | `Rfd`/`RfdPjrt` | [`rfd`] | RFDiffusion | `exp(ΛW_G)` | `O(N m² d)` |
+//! | `BfSp` | [`bf`] | brute force | any | `O(N²d)` |
+//! | `BfDiffusion` | [`bf`] | brute force | `exp(ΛW_G)` | `O(N³)` pre-proc |
+//! | `Trees` | [`trees`] | low-distortion trees | `f(dist_T(·,·))` | `O(kNd)` |
+//! | `AlMohy`/`Lanczos`/`Bader` | [`expmv`] | expm-action baselines | `exp(ΛW_G)` | iterative / `O(N³)` |
 
 pub mod bf;
 pub mod expmv;
 pub mod rfd;
 pub mod sf;
+mod spec;
 pub mod trees;
 
+pub use spec::{prepare, GfiError, IntegratorSpec, Scene};
+pub(crate) use spec::validate_spec;
+
 use crate::linalg::Mat;
+use std::sync::Arc;
 
 /// A kernel profile `f : R≥0 → R` applied to graph distances,
 /// `K_f(w, v) = f(dist(w, v))` (paper Eq. 3).
@@ -35,11 +74,34 @@ pub enum KernelFn {
     /// `f(x) = A·exp(-b x)·sin(ω x + φ)` — the damped-trigonometric class
     /// from Corollary A.3.
     DampedSine { a: f64, b: f64, omega: f64, phi: f64 },
-    /// Arbitrary user profile.
-    Custom(std::sync::Arc<dyn Fn(f64) -> f64 + Send + Sync>),
+    /// Arbitrary user profile. The `label` is the kernel's identity for
+    /// caching: two custom kernels with different labels never share an
+    /// engine cache entry, and an *unlabeled* custom kernel is unkeyable —
+    /// [`IntegratorSpec::cache_key`] rejects it. Build with
+    /// [`KernelFn::custom`] (labeled) or [`KernelFn::custom_opaque`].
+    Custom {
+        label: Option<Arc<str>>,
+        f: Arc<dyn Fn(f64) -> f64 + Send + Sync>,
+    },
 }
 
 impl KernelFn {
+    /// A labeled custom kernel. The label is the cache identity — callers
+    /// must pick distinct labels for distinct profiles (same rule as any
+    /// content-addressed key).
+    pub fn custom(
+        label: impl Into<String>,
+        f: impl Fn(f64) -> f64 + Send + Sync + 'static,
+    ) -> Self {
+        KernelFn::Custom { label: Some(Arc::from(label.into())), f: Arc::new(f) }
+    }
+
+    /// An unlabeled custom kernel: usable for direct `prepare`/`apply`,
+    /// but rejected by every cache-keyed path (the serving engine).
+    pub fn custom_opaque(f: impl Fn(f64) -> f64 + Send + Sync + 'static) -> Self {
+        KernelFn::Custom { label: None, f: Arc::new(f) }
+    }
+
     #[inline]
     pub fn eval(&self, x: f64) -> f64 {
         match self {
@@ -49,7 +111,7 @@ impl KernelFn {
             KernelFn::DampedSine { a, b, omega, phi } => {
                 a * (-b * x).exp() * (omega * x + phi).sin()
             }
-            KernelFn::Custom(f) => f(x),
+            KernelFn::Custom { f, .. } => f(x),
         }
     }
 
@@ -59,6 +121,27 @@ impl KernelFn {
             KernelFn::ExpNeg(l) => Some(*l),
             _ => None,
         }
+    }
+
+    /// Canonical content key used by [`IntegratorSpec::cache_key`].
+    /// Unlabeled custom kernels have no content identity and are rejected.
+    pub fn key(&self) -> Result<String, GfiError> {
+        Ok(match self {
+            KernelFn::ExpNeg(l) => format!("expneg({l})"),
+            KernelFn::GaussianSq(l) => format!("gausssq({l})"),
+            KernelFn::Rational(l) => format!("rational({l})"),
+            KernelFn::DampedSine { a, b, omega, phi } => {
+                format!("dampedsine({a},{b},{omega},{phi})")
+            }
+            KernelFn::Custom { label: Some(l), .. } => format!("custom({l})"),
+            KernelFn::Custom { label: None, .. } => {
+                return Err(GfiError::Unkeyable {
+                    detail: "custom kernel has no label; build it with \
+                             KernelFn::custom(label, f) to make it cacheable"
+                        .into(),
+                })
+            }
+        })
     }
 }
 
@@ -71,23 +154,145 @@ impl std::fmt::Debug for KernelFn {
             KernelFn::DampedSine { a, b, omega, phi } => {
                 write!(f, "DampedSine({a},{b},{omega},{phi})")
             }
-            KernelFn::Custom(_) => write!(f, "Custom"),
+            KernelFn::Custom { label: Some(l), .. } => write!(f, "Custom({l:?})"),
+            KernelFn::Custom { label: None, .. } => write!(f, "Custom(<opaque>)"),
         }
     }
 }
 
-/// A prepared graph-field integrator: pre-processing happened at
-/// construction; `apply` is the inference hot path.
+/// Reusable scratch-buffer pool threaded through the apply hot path.
+///
+/// Integrators draw buffers with [`Workspace::take`] / [`take_mat`]
+/// (zero-filled to the requested length, reusing pooled capacity) and
+/// return them with [`put`] / [`put_mat`]. Buffers persist across
+/// requests, so a warm workspace serves steady-state traffic with zero
+/// scratch allocation; [`Workspace::allocations`] counts the warmup
+/// events (fresh or grown buffers) so tests can assert the steady state.
+///
+/// [`take_mat`]: Workspace::take_mat
+/// [`put`]: Workspace::put
+/// [`put_mat`]: Workspace::put_mat
+#[derive(Default)]
+pub struct Workspace {
+    pool: Vec<Vec<f64>>,
+    allocations: usize,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Workspace::default()
+    }
+
+    /// Hands out a zero-filled buffer of exactly `len` elements, reusing
+    /// the best-fitting pooled buffer (smallest capacity that still holds
+    /// `len`; the largest available otherwise).
+    pub fn take(&mut self, len: usize) -> Vec<f64> {
+        let mut best: Option<usize> = None;
+        for (i, b) in self.pool.iter().enumerate() {
+            let c = b.capacity();
+            best = match best {
+                None => Some(i),
+                Some(j) => {
+                    let cj = self.pool[j].capacity();
+                    let better = if cj >= len { c >= len && c < cj } else { c > cj };
+                    if better {
+                        Some(i)
+                    } else {
+                        Some(j)
+                    }
+                }
+            };
+        }
+        match best {
+            Some(i) => {
+                let mut b = self.pool.swap_remove(i);
+                if b.capacity() < len {
+                    self.allocations += 1;
+                }
+                b.clear();
+                b.resize(len, 0.0);
+                b
+            }
+            None => {
+                self.allocations += 1;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// Returns a buffer to the pool for reuse.
+    pub fn put(&mut self, buf: Vec<f64>) {
+        self.pool.push(buf);
+    }
+
+    /// [`Workspace::take`] shaped as a zeroed `rows × cols` matrix.
+    pub fn take_mat(&mut self, rows: usize, cols: usize) -> Mat {
+        Mat::from_vec(rows, cols, self.take(rows * cols))
+    }
+
+    /// Returns a matrix's storage to the pool.
+    pub fn put_mat(&mut self, m: Mat) {
+        self.put(m.data);
+    }
+
+    /// Number of times `take` could not be satisfied from pooled capacity
+    /// (buffer allocated or grown). Constant across calls ⇔ steady-state
+    /// allocation-free.
+    pub fn allocations(&self) -> usize {
+        self.allocations
+    }
+}
+
+/// A prepared graph-field integrator: pre-processing happened in
+/// [`prepare`]; `apply_into` is the inference hot path.
 pub trait FieldIntegrator: Send + Sync {
     /// Human-readable algorithm tag used in reports.
     fn name(&self) -> String;
+
     /// Number of graph nodes.
     fn len(&self) -> usize;
+
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
-    /// Computes `K · field` where `field` is `N × d` row-major.
-    fn apply(&self, field: &Mat) -> Mat;
+
+    /// Core apply: writes `K · field` into the caller-held `out`
+    /// (`len() × field.cols`, fully overwritten), drawing scratch from
+    /// `ws`. No output allocation; scratch allocation only while the
+    /// workspace warms up.
+    fn apply_into(&self, field: &Mat, out: &mut Mat, ws: &mut Workspace);
+
+    /// Applies the integrator to several fields off one workspace.
+    /// `outs[i]` receives `K · fields[i]`.
+    fn apply_batch(&self, fields: &[Mat], outs: &mut [Mat], ws: &mut Workspace) {
+        assert_eq!(fields.len(), outs.len(), "apply_batch arity mismatch");
+        for (f, o) in fields.iter().zip(outs.iter_mut()) {
+            self.apply_into(f, o, ws);
+        }
+    }
+
+    /// Allocating convenience wrapper over [`FieldIntegrator::apply_into`]
+    /// (fresh output + fresh workspace per call) for one-shot callers.
+    fn apply(&self, field: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.len(), field.cols);
+        let mut ws = Workspace::new();
+        self.apply_into(field, &mut out, &mut ws);
+        out
+    }
+}
+
+/// Shared shape contract for `apply_into` implementations.
+#[inline]
+pub(crate) fn check_apply_shapes(n: usize, field: &Mat, out: &Mat) {
+    assert_eq!(field.rows, n, "field has {} rows, integrator covers {n} nodes", field.rows);
+    assert_eq!(
+        (out.rows, out.cols),
+        (n, field.cols),
+        "out is {}x{}, want {n}x{}",
+        out.rows,
+        out.cols,
+        field.cols
+    );
 }
 
 #[cfg(test)]
@@ -99,7 +304,7 @@ mod tests {
         assert!((KernelFn::ExpNeg(2.0).eval(0.0) - 1.0).abs() < 1e-15);
         assert!((KernelFn::ExpNeg(2.0).eval(1.0) - (-2f64).exp()).abs() < 1e-15);
         assert!((KernelFn::Rational(1.0).eval(1.0) - 0.5).abs() < 1e-15);
-        let c = KernelFn::Custom(std::sync::Arc::new(|x| x * 3.0));
+        let c = KernelFn::custom("x3", |x| x * 3.0);
         assert_eq!(c.eval(2.0), 6.0);
     }
 
@@ -107,5 +312,47 @@ mod tests {
     fn exp_rate_detection() {
         assert_eq!(KernelFn::ExpNeg(0.5).exp_rate(), Some(0.5));
         assert_eq!(KernelFn::GaussianSq(0.5).exp_rate(), None);
+    }
+
+    #[test]
+    fn kernel_keys_distinguish_customs() {
+        let a = KernelFn::custom("a", |x| x);
+        let b = KernelFn::custom("b", |x| 2.0 * x);
+        assert_ne!(a.key().unwrap(), b.key().unwrap());
+        assert!(KernelFn::custom_opaque(|x| x).key().is_err());
+        assert_eq!(KernelFn::ExpNeg(1.5).key().unwrap(), "expneg(1.5)");
+    }
+
+    #[test]
+    fn workspace_reuses_capacity() {
+        let mut ws = Workspace::new();
+        let a = ws.take(100);
+        let b = ws.take(10);
+        assert_eq!(ws.allocations(), 2);
+        ws.put(a);
+        ws.put(b);
+        // Same shapes again: served from the pool, no new allocations.
+        let a2 = ws.take(100);
+        let b2 = ws.take(10);
+        assert_eq!(ws.allocations(), 2);
+        assert!(a2.iter().all(|&x| x == 0.0) && b2.iter().all(|&x| x == 0.0));
+        ws.put(a2);
+        ws.put(b2);
+        // A bigger request grows exactly one buffer.
+        let big = ws.take(1000);
+        assert_eq!(ws.allocations(), 3);
+        ws.put(big);
+        let _big2 = ws.take(1000);
+        assert_eq!(ws.allocations(), 3);
+    }
+
+    #[test]
+    fn workspace_mats_are_zeroed() {
+        let mut ws = Workspace::new();
+        let mut m = ws.take_mat(3, 4);
+        m[(1, 2)] = 5.0;
+        ws.put_mat(m);
+        let m2 = ws.take_mat(3, 4);
+        assert!(m2.data.iter().all(|&x| x == 0.0));
     }
 }

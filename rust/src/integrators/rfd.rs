@@ -23,7 +23,7 @@
 //! build the comparison ε-graphs with the same L∞ norm so estimator and
 //! target agree (DESIGN.md §substitutions).
 
-use super::FieldIntegrator;
+use super::{check_apply_shapes, FieldIntegrator, GfiError, Workspace};
 use crate::linalg::{eigh_jacobi, expm_pade, lu_factor, thin_qr, Mat, Trans};
 use crate::pointcloud::PointCloud;
 use crate::util::{par, rng::Rng};
@@ -79,7 +79,8 @@ pub struct RfDiffusion {
 
 impl RfDiffusion {
     /// Pre-processing (`O(N m²)`): feature maps + the 2m×2m core.
-    pub fn new(points: &PointCloud, cfg: RfdConfig) -> Self {
+    /// Construct via [`crate::integrators::prepare`].
+    pub(crate) fn try_new(points: &PointCloud, cfg: RfdConfig) -> Result<Self, GfiError> {
         let (a, b, delta) = build_features(points, &cfg);
         let g = b.t_matmul(&a); // BᵀA, 2m×2m
         let e = expm_pade(&g.scale(cfg.lambda));
@@ -97,12 +98,14 @@ impl RfDiffusion {
                     gr[(i, i)] += cfg.ridge.max(1e-10);
                 }
                 lu_factor(&gr)
-                    .expect("ridged BᵀA still singular")
+                    .ok_or_else(|| GfiError::Numerical {
+                        detail: "RFD core BᵀA is singular even after ridging".into(),
+                    })?
                     .solve_mat(&e_minus_i)
             }
         };
         let diag_scale = (-cfg.lambda * delta).exp();
-        RfDiffusion { cfg, a, b, m_core, diag_scale, delta }
+        Ok(RfDiffusion { cfg, a, b, m_core, diag_scale, delta })
     }
 
     /// The low-rank factors (used by the GW fast paths and the spectral
@@ -279,15 +282,19 @@ impl FieldIntegrator for RfDiffusion {
     }
 
     /// `y = e^{-Λδ} (x + A · M · (Bᵀ x))` — the inference hot path,
-    /// `O(N·2m·d)`. The diagonal-correction scale and the `+x` term are
-    /// fused into the final gemm's α/β store (no extra N×d passes).
-    fn apply(&self, field: &Mat) -> Mat {
-        assert_eq!(field.rows, self.a.rows);
-        let bt_x = self.b.t_matmul(field); // 2m×d
-        let core = self.m_core.matmul(&bt_x); // 2m×d
-        let mut out = field.clone();
+    /// `O(N·2m·d)`. The two 2m×d intermediates come from the workspace,
+    /// and the diagonal-correction scale and the `+x` term are fused into
+    /// the final gemm's α/β store — zero allocation on a warm workspace.
+    fn apply_into(&self, field: &Mat, out: &mut Mat, ws: &mut Workspace) {
+        check_apply_shapes(self.len(), field, out);
+        let mut bt_x = ws.take_mat(self.b.cols, field.cols);
+        bt_x.gemm_assign(1.0, &self.b, Trans::Yes, field, Trans::No, 0.0);
+        let mut core = ws.take_mat(self.m_core.rows, field.cols);
+        core.gemm_assign(1.0, &self.m_core, Trans::No, &bt_x, Trans::No, 0.0);
+        out.data.copy_from_slice(&field.data);
         out.gemm_assign(self.diag_scale, &self.a, Trans::No, &core, Trans::No, self.diag_scale);
-        out
+        ws.put_mat(core);
+        ws.put_mat(bt_x);
     }
 }
 
@@ -333,7 +340,7 @@ mod tests {
     #[test]
     fn diagonal_correction_exact() {
         let pc = cloud(30, 3);
-        let rfd = RfDiffusion::new(&pc, RfdConfig { num_features: 64, ..Default::default() });
+        let rfd = RfDiffusion::try_new(&pc, RfdConfig { num_features: 64, ..Default::default() }).unwrap();
         // Raw RF diagonal before correction is δ for every i.
         for i in 0..5 {
             let raw: f64 = rfd
@@ -354,7 +361,7 @@ mod tests {
         // compare against dense expm of (ABᵀ − δI).
         let pc = cloud(40, 4);
         let cfg = RfdConfig { num_features: 8, lambda: -0.2, seed: 5, ..Default::default() };
-        let rfd = RfDiffusion::new(&pc, cfg.clone());
+        let rfd = RfDiffusion::try_new(&pc, cfg.clone()).unwrap();
         let (a, b) = rfd.factors();
         let mut w_hat = a.matmul(&b.transpose());
         for i in 0..w_hat.rows {
@@ -380,7 +387,7 @@ mod tests {
             seed: 8,
             ..Default::default()
         };
-        let rfd = RfDiffusion::new(&pc, cfg);
+        let rfd = RfDiffusion::try_new(&pc, cfg).unwrap();
         let w = pc.dense_adjacency(eps, Norm::LInf, true);
         let dense = BruteForceDiffusion::from_dense(&w, lambda);
         let mut rng = Rng::new(9);
@@ -393,7 +400,7 @@ mod tests {
     fn eigenvalues_match_dense() {
         let pc = cloud(50, 10);
         let cfg = RfdConfig { num_features: 8, lambda: -0.3, seed: 11, ..Default::default() };
-        let rfd = RfDiffusion::new(&pc, cfg.clone());
+        let rfd = RfDiffusion::try_new(&pc, cfg.clone()).unwrap();
         let (a, b) = rfd.factors();
         let mut w_hat = a.matmul(&b.transpose());
         for i in 0..w_hat.rows {
@@ -412,8 +419,8 @@ mod tests {
     fn deterministic_given_seed() {
         let pc = cloud(25, 12);
         let cfg = RfdConfig { num_features: 16, seed: 99, ..Default::default() };
-        let r1 = RfDiffusion::new(&pc, cfg.clone());
-        let r2 = RfDiffusion::new(&pc, cfg);
+        let r1 = RfDiffusion::try_new(&pc, cfg.clone()).unwrap();
+        let r2 = RfDiffusion::try_new(&pc, cfg).unwrap();
         let x = Mat::from_vec(25, 1, (0..25).map(|i| i as f64).collect());
         assert_eq!(r1.apply(&x).data, r2.apply(&x).data);
     }

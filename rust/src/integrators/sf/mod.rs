@@ -27,7 +27,7 @@ mod separator;
 
 pub use separator::{balanced_level_cut, Separation};
 
-use super::{FieldIntegrator, KernelFn};
+use super::{check_apply_shapes, FieldIntegrator, KernelFn, Workspace};
 use crate::fft::hankel_matvec_multi;
 use crate::graph::CsrGraph;
 use crate::linalg::Mat;
@@ -118,7 +118,8 @@ pub struct SeparatorFactorization {
 impl SeparatorFactorization {
     /// Pre-processing: builds the separator tree. `O(N log N)` Dijkstra
     /// work (|S′| runs per level) plus leaf all-pairs.
-    pub fn new(g: &CsrGraph, cfg: SfConfig) -> Self {
+    /// Construct via [`crate::integrators::prepare`].
+    pub(crate) fn new(g: &CsrGraph, cfg: SfConfig) -> Self {
         let mut rng = Rng::new(cfg.seed);
         let mut stats = SfStats::default();
         let all: Vec<u32> = (0..g.n as u32).collect();
@@ -263,12 +264,14 @@ impl FieldIntegrator for SeparatorFactorization {
         self.n
     }
 
-    fn apply(&self, field: &Mat) -> Mat {
-        assert_eq!(field.rows, self.n);
-        let d = field.cols;
-        let mut out = Mat::zeros(self.n, d);
-        walk(&self.root, field, &mut out, &self.f_table, &self.cfg, d);
-        out
+    /// Recursive accumulation over the separator tree. All per-node
+    /// slice/histogram scratch comes from the workspace, so a warm
+    /// workspace serves repeated applies without allocator traffic
+    /// (the FFT path's internal transform buffers excepted).
+    fn apply_into(&self, field: &Mat, out: &mut Mat, ws: &mut Workspace) {
+        check_apply_shapes(self.n, field, out);
+        out.data.fill(0.0);
+        walk(&self.root, field, out, &self.f_table, &self.cfg, field.cols, ws);
     }
 }
 
@@ -281,7 +284,16 @@ fn f_at(f_table: &[f64], q: u32) -> f64 {
     }
 }
 
-fn walk(node: &SfNode, field: &Mat, out: &mut Mat, f_table: &[f64], cfg: &SfConfig, d: usize) {
+#[allow(clippy::too_many_arguments)]
+fn walk(
+    node: &SfNode,
+    field: &Mat,
+    out: &mut Mat,
+    f_table: &[f64],
+    cfg: &SfConfig,
+    d: usize,
+    ws: &mut Workspace,
+) {
     match node {
         SfNode::Leaf { nodes, dist_q } => {
             let n = nodes.len();
@@ -310,13 +322,13 @@ fn walk(node: &SfNode, field: &Mat, out: &mut Mat, f_table: &[f64], cfg: &SfConf
             b_child,
         } => {
             let n = nodes.len();
-            let in_sep: std::collections::HashSet<u32> = sep_local.iter().copied().collect();
 
             // --- Step 1: exact contributions involving S′. ---
             for (s, &sl) in sep_local.iter().enumerate() {
                 let gs = nodes[sl as usize] as usize;
-                let srow_field = field.row(gs).to_vec();
-                let mut acc = vec![0.0; d];
+                let mut srow_field = ws.take(d);
+                srow_field.copy_from_slice(field.row(gs));
+                let mut acc = ws.take(d);
                 for (j, &gj) in nodes.iter().enumerate() {
                     let f = f_at(f_table, sep_dq[s * n + j]);
                     if f == 0.0 {
@@ -326,8 +338,10 @@ fn walk(node: &SfNode, field: &Mat, out: &mut Mat, f_table: &[f64], cfg: &SfConf
                     for (a, &x) in acc.iter_mut().zip(frow) {
                         *a += f * x;
                     }
-                    // Sources in S′ → targets outside S′.
-                    if !in_sep.contains(&(j as u32)) {
+                    // Sources in S′ → targets outside S′. |S′| is a small
+                    // constant (≈6–8), so a slice scan beats a hash set —
+                    // and allocates nothing on the apply path.
+                    if !sep_local.contains(&(j as u32)) {
                         let orow = out.row_mut(gj as usize);
                         for (o, &x) in orow.iter_mut().zip(&srow_field) {
                             *o += f * x;
@@ -335,18 +349,20 @@ fn walk(node: &SfNode, field: &Mat, out: &mut Mat, f_table: &[f64], cfg: &SfConf
                     }
                 }
                 let orow = out.row_mut(gs);
-                for (o, a) in orow.iter_mut().zip(acc) {
+                for (o, &a) in orow.iter_mut().zip(&acc) {
                     *o += a;
                 }
+                ws.put(acc);
+                ws.put(srow_field);
             }
 
             // --- Step 2: cross A↔B via sliced τ + g offsets. ---
-            cross_contribution(nodes, slices_a, slices_b, sep_g, field, out, f_table, cfg, d);
-            cross_contribution(nodes, slices_b, slices_a, sep_g, field, out, f_table, cfg, d);
+            cross_contribution(nodes, slices_a, slices_b, sep_g, field, out, f_table, cfg, d, ws);
+            cross_contribution(nodes, slices_b, slices_a, sep_g, field, out, f_table, cfg, d, ws);
 
             // --- Step 3: recurse. ---
-            walk(a_child, field, out, f_table, cfg, d);
-            walk(b_child, field, out, f_table, cfg, d);
+            walk(a_child, field, out, f_table, cfg, d, ws);
+            walk(b_child, field, out, f_table, cfg, d, ws);
         }
     }
 }
@@ -364,12 +380,13 @@ fn cross_contribution(
     f_table: &[f64],
     cfg: &SfConfig,
     d: usize,
+    ws: &mut Workspace,
 ) {
     let ns = dst.len();
     if let Some(lambda) = cfg.kernel.exp_rate() {
         // Rank-1 fast path: per source slice compute the decayed sum once,
         // then combine across slice pairs with e^{-λ·u·g}.
-        let mut src_sums = vec![0.0; ns * d]; // Σ_w e^{-λuτ_w} F(w) per slice
+        let mut src_sums = ws.take(ns * d); // Σ_w e^{-λuτ_w} F(w) per slice
         for (l, sl) in src.iter().enumerate() {
             let acc = &mut src_sums[l * d..(l + 1) * d];
             for &(j, t) in &sl.members {
@@ -380,12 +397,13 @@ fn cross_contribution(
                 }
             }
         }
+        let mut combined = ws.take(d);
         for (k, dl) in dst.iter().enumerate() {
             if dl.members.is_empty() {
                 continue;
             }
             // combined = Σ_l e^{-λ·u·g(k,l)} src_sums[l]
-            let mut combined = vec![0.0; d];
+            combined.fill(0.0);
             for l in 0..ns {
                 let gq = sep_g[k * ns + l];
                 if gq == u32::MAX {
@@ -404,6 +422,8 @@ fn cross_contribution(
                 }
             }
         }
+        ws.put(combined);
+        ws.put(src_sums);
         return;
     }
 
@@ -417,7 +437,7 @@ fn cross_contribution(
                 return None;
             }
             let zlen = sl.max_tau as usize + 1;
-            let mut z = vec![0.0; zlen * d];
+            let mut z = ws.take(zlen * d);
             for &(j, t) in &sl.members {
                 let frow = field.row(nodes[j as usize] as usize);
                 let zr = &mut z[t as usize * d..(t as usize + 1) * d];
@@ -433,7 +453,7 @@ fn cross_contribution(
             continue;
         }
         let rows = dl.max_tau as usize + 1;
-        let mut w_acc = vec![0.0; rows * d];
+        let mut w_acc = ws.take(rows * d);
         for (l, hist) in histograms.iter().enumerate() {
             let Some(z) = hist else { continue };
             let gq = sep_g[k * ns + l];
@@ -443,14 +463,16 @@ fn cross_contribution(
             let zlen = z.len() / d;
             let need = rows + zlen - 1;
             let goff = gq as usize;
-            let h: Vec<f64> = if goff + need <= f_table.len() {
-                f_table[goff..goff + need].to_vec()
+            let mut h = ws.take(need);
+            if goff + need <= f_table.len() {
+                h.copy_from_slice(&f_table[goff..goff + need]);
             } else {
-                (0..need)
-                    .map(|kk| cfg.kernel.eval((kk + goff) as f64 * cfg.unit_size))
-                    .collect()
-            };
+                for (kk, hv) in h.iter_mut().enumerate() {
+                    *hv = cfg.kernel.eval((kk + goff) as f64 * cfg.unit_size);
+                }
+            }
             let w = hankel_matvec_multi(&h, z, rows, d);
+            ws.put(h);
             for (acc, &x) in w_acc.iter_mut().zip(&w) {
                 *acc += x;
             }
@@ -461,6 +483,12 @@ fn cross_contribution(
             for (o, &x) in orow.iter_mut().zip(wrow) {
                 *o += x;
             }
+        }
+        ws.put(w_acc);
+    }
+    for hist in histograms {
+        if let Some(z) = hist {
+            ws.put(z);
         }
     }
 }
@@ -540,7 +568,7 @@ mod tests {
         let sf_slow = SeparatorFactorization::new(
             &g,
             SfConfig {
-                kernel: KernelFn::Custom(std::sync::Arc::new(move |x| (-lam * x).exp())),
+                kernel: KernelFn::custom("exp-as-general", move |x| (-lam * x).exp()),
                 ..base
             },
         );

@@ -1,0 +1,617 @@
+//! The unified integrator spec: one serializable description of *which*
+//! integrator to build ([`IntegratorSpec`]), one input type ([`Scene`]),
+//! one fallible factory ([`prepare`]), and the typed error surface
+//! ([`GfiError`]) that replaces the seed's panicking constructors.
+//!
+//! The spec is the engine's cache identity: [`IntegratorSpec::cache_key`]
+//! derives a canonical textual encoding from every hyper-parameter
+//! (including the kernel profile via [`KernelFn::key`]), so two specs
+//! collide iff they prepare the same integrator. Unkeyable specs —
+//! custom kernels without a label — are rejected instead of silently
+//! sharing a cache slot.
+
+use super::bf::{BruteForceDiffusion, BruteForceSp};
+use super::expmv::{AlMohyExpmv, BaderDense, LanczosExpmv};
+use super::rfd::{RfDiffusion, RfdConfig};
+use super::sf::{SeparatorFactorization, SfConfig};
+use super::trees::{TreeEnsembleIntegrator, TreeKind};
+use super::{FieldIntegrator, KernelFn};
+use crate::graph::CsrGraph;
+use crate::mesh::TriMesh;
+use crate::pointcloud::{Norm, PointCloud};
+use crate::util::json::Json;
+use std::fmt;
+
+/// Typed integrator-construction / serving errors. Everything the seed
+/// handled with `panic!`/`expect` on the build path is one of these.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GfiError {
+    /// The scene has no points and no graph (or zero nodes).
+    EmptyScene,
+    /// The backend integrates a graph metric but the scene has no graph.
+    MissingGraph { backend: &'static str },
+    /// The backend needs point coordinates but the scene has none.
+    MissingPoints { backend: &'static str },
+    /// Scene points and graph disagree on the node count.
+    SceneMismatch { graph_n: usize, points_n: usize },
+    /// A field matrix does not match the scene size.
+    FieldShape { expected_rows: usize, got_rows: usize },
+    /// Degenerate hyper-parameters (non-positive ε or unit size, zero
+    /// features, …).
+    InvalidSpec { detail: String },
+    /// The spec has no canonical cache key (unlabeled custom kernel).
+    Unkeyable { detail: String },
+    /// Numerical failure during preparation (singular core, …).
+    Numerical { detail: String },
+}
+
+impl fmt::Display for GfiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GfiError::EmptyScene => write!(f, "scene is empty (no points, no graph)"),
+            GfiError::MissingGraph { backend } => write!(
+                f,
+                "{backend} needs a graph metric; register a mesh or build the Scene with a graph"
+            ),
+            GfiError::MissingPoints { backend } => {
+                write!(f, "{backend} needs point coordinates; the scene has none")
+            }
+            GfiError::SceneMismatch { graph_n, points_n } => write!(
+                f,
+                "scene graph has {graph_n} nodes but the point cloud has {points_n}"
+            ),
+            GfiError::FieldShape { expected_rows, got_rows } => {
+                write!(f, "field has {got_rows} rows, scene has {expected_rows} nodes")
+            }
+            GfiError::InvalidSpec { detail } => write!(f, "invalid integrator spec: {detail}"),
+            GfiError::Unkeyable { detail } => write!(f, "spec has no cache key: {detail}"),
+            GfiError::Numerical { detail } => write!(f, "numerical failure: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for GfiError {}
+
+/// The input a field integrator is prepared against: a point cloud plus
+/// an optional graph metric over the same nodes (present when the cloud
+/// came from a mesh; absent for bare ε-NN workloads).
+#[derive(Clone)]
+pub struct Scene {
+    pub points: PointCloud,
+    pub graph: Option<CsrGraph>,
+}
+
+impl Scene {
+    /// Scene with both coordinates and a graph metric. The node counts
+    /// must agree; [`prepare`] reports [`GfiError::SceneMismatch`]
+    /// otherwise.
+    pub fn new(points: PointCloud, graph: Option<CsrGraph>) -> Self {
+        Scene { points, graph }
+    }
+
+    /// Bare point cloud (RFD / BF-diffusion workloads).
+    pub fn from_points(points: PointCloud) -> Self {
+        Scene { points, graph: None }
+    }
+
+    /// Graph-only scene (shortest-path workloads with no coordinates).
+    pub fn from_graph(graph: CsrGraph) -> Self {
+        Scene { points: PointCloud::new(Vec::new()), graph: Some(graph) }
+    }
+
+    /// Vertex cloud + mesh graph of a triangle mesh.
+    pub fn from_mesh(mesh: &TriMesh) -> Self {
+        Scene {
+            points: PointCloud::new(mesh.verts.clone()),
+            graph: Some(mesh.to_graph()),
+        }
+    }
+
+    /// Node count (graph size when a graph is present, else point count).
+    pub fn len(&self) -> usize {
+        self.graph.as_ref().map(|g| g.n).unwrap_or_else(|| self.points.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn validate(&self) -> Result<(), GfiError> {
+        if let Some(g) = &self.graph {
+            if !self.points.is_empty() && self.points.len() != g.n {
+                return Err(GfiError::SceneMismatch {
+                    graph_n: g.n,
+                    points_n: self.points.len(),
+                });
+            }
+        }
+        if self.is_empty() {
+            return Err(GfiError::EmptyScene);
+        }
+        Ok(())
+    }
+
+    fn require_graph(&self, backend: &'static str) -> Result<&CsrGraph, GfiError> {
+        self.graph.as_ref().ok_or(GfiError::MissingGraph { backend })
+    }
+
+    fn require_points(&self, backend: &'static str) -> Result<&PointCloud, GfiError> {
+        if self.points.is_empty() {
+            Err(GfiError::MissingPoints { backend })
+        } else {
+            Ok(&self.points)
+        }
+    }
+}
+
+/// One description of a graph-field integrator: algorithm + every
+/// hyper-parameter. Plain data — clone it, serialize it
+/// ([`IntegratorSpec::to_json`] / [`IntegratorSpec::from_request`]), key
+/// a cache with it ([`IntegratorSpec::cache_key`]), and hand it to
+/// [`prepare`].
+#[derive(Clone, Debug)]
+pub enum IntegratorSpec {
+    /// SeparatorFactorization over the scene graph.
+    Sf(SfConfig),
+    /// RFDiffusion over the scene points, pure Rust.
+    Rfd(RfdConfig),
+    /// RFDiffusion through the AOT/PJRT artifact when a runtime is
+    /// loaded; identical pure-Rust fallback otherwise (the two routes
+    /// share one cache key on purpose).
+    RfdPjrt(RfdConfig),
+    /// Brute-force shortest-path kernel over the scene graph.
+    BfSp(KernelFn),
+    /// Brute-force diffusion kernel over the ε-graph of the scene points.
+    BfDiffusion { epsilon: f64, lambda: f64 },
+    /// Low-distortion tree ensemble over the scene graph.
+    Trees { kind: TreeKind, count: usize, lambda: f64, seed: u64 },
+    /// Al-Mohy–Higham expm-action baseline over the scene graph.
+    AlMohy { lambda: f64 },
+    /// Lanczos/Krylov expm-action baseline over the scene graph.
+    Lanczos { lambda: f64, krylov_dim: usize },
+    /// Dense Taylor expm baseline over the scene graph.
+    Bader { lambda: f64 },
+}
+
+impl IntegratorSpec {
+    /// Metrics/reporting tag (stable across hyper-parameters).
+    pub fn name(&self) -> &'static str {
+        match self {
+            IntegratorSpec::Sf(_) => "sf",
+            IntegratorSpec::Rfd(_) => "rfd",
+            IntegratorSpec::RfdPjrt(_) => "rfd_pjrt",
+            IntegratorSpec::BfSp(_) => "bf_sp",
+            IntegratorSpec::BfDiffusion { .. } => "bf_diffusion",
+            IntegratorSpec::Trees { .. } => "trees",
+            IntegratorSpec::AlMohy { .. } => "almohy",
+            IntegratorSpec::Lanczos { .. } => "lanczos",
+            IntegratorSpec::Bader { .. } => "bader",
+        }
+    }
+
+    /// Wire-protocol backend name (tree kinds are distinct ops).
+    fn wire_name(&self) -> &'static str {
+        match self {
+            IntegratorSpec::Trees { kind: TreeKind::Mst, .. } => "trees_mst",
+            IntegratorSpec::Trees { kind: TreeKind::Bartal, .. } => "trees_bartal",
+            IntegratorSpec::Trees { kind: TreeKind::Frt, .. } => "trees_frt",
+            other => other.name(),
+        }
+    }
+
+    /// Canonical cache key: one textual encoding covering **every**
+    /// hyper-parameter. `Rfd` and `RfdPjrt` share a key deliberately —
+    /// the pure-Rust fallback integrator is identical, so the engine
+    /// cache is shared across the two routes. Fails for unkeyable specs
+    /// (unlabeled custom kernels) rather than colliding.
+    pub fn cache_key(&self) -> Result<String, GfiError> {
+        Ok(match self {
+            IntegratorSpec::Sf(c) => format!(
+                "sf|k={}|u={}|t={}|s={}|seed={}",
+                c.kernel.key()?,
+                c.unit_size,
+                c.threshold,
+                c.separator_size,
+                c.seed
+            ),
+            IntegratorSpec::Rfd(c) | IntegratorSpec::RfdPjrt(c) => format!(
+                "rfd|m={}|eps={}|lam={}|sigma={:?}|r={}|ridge={}|seed={}",
+                c.num_features, c.epsilon, c.lambda, c.sigma, c.radius, c.ridge, c.seed
+            ),
+            IntegratorSpec::BfSp(k) => format!("bf_sp|k={}", k.key()?),
+            IntegratorSpec::BfDiffusion { epsilon, lambda } => {
+                format!("bf_diffusion|eps={epsilon}|lam={lambda}")
+            }
+            IntegratorSpec::Trees { kind, count, lambda, seed } => {
+                format!("trees|kind={kind:?}|k={count}|lam={lambda}|seed={seed}")
+            }
+            IntegratorSpec::AlMohy { lambda } => format!("almohy|lam={lambda}"),
+            IntegratorSpec::Lanczos { lambda, krylov_dim } => {
+                format!("lanczos|lam={lambda}|m={krylov_dim}")
+            }
+            IntegratorSpec::Bader { lambda } => format!("bader|lam={lambda}"),
+        })
+    }
+
+    /// Serializes to the flat wire shape the coordinator protocol uses
+    /// (`{"backend":"sf","lambda":…,…}`). Fails for specs the wire cannot
+    /// express (custom kernel profiles).
+    pub fn to_json(&self) -> Result<Json, GfiError> {
+        let mut fields: Vec<(&str, Json)> =
+            vec![("backend", Json::Str(self.wire_name().to_string()))];
+        let wire_kernel = |k: &KernelFn| -> Result<f64, GfiError> {
+            k.exp_rate().ok_or_else(|| GfiError::InvalidSpec {
+                detail: format!("wire format only carries exp kernels, got {k:?}"),
+            })
+        };
+        match self {
+            IntegratorSpec::Sf(c) => {
+                fields.push(("lambda", Json::Num(wire_kernel(&c.kernel)?)));
+                fields.push(("unit_size", Json::Num(c.unit_size)));
+                fields.push(("threshold", Json::Num(c.threshold as f64)));
+                fields.push(("separator_size", Json::Num(c.separator_size as f64)));
+                fields.push(("seed", Json::Num(c.seed as f64)));
+            }
+            IntegratorSpec::Rfd(c) | IntegratorSpec::RfdPjrt(c) => {
+                fields.push(("m", Json::Num(c.num_features as f64)));
+                fields.push(("epsilon", Json::Num(c.epsilon)));
+                fields.push(("lambda", Json::Num(c.lambda)));
+                fields.push(("radius", Json::Num(c.radius)));
+                fields.push(("ridge", Json::Num(c.ridge)));
+                fields.push(("seed", Json::Num(c.seed as f64)));
+                if let Some(s) = c.sigma {
+                    fields.push(("sigma", Json::Num(s)));
+                }
+            }
+            IntegratorSpec::BfSp(k) => {
+                fields.push(("lambda", Json::Num(wire_kernel(k)?)));
+            }
+            IntegratorSpec::BfDiffusion { epsilon, lambda } => {
+                fields.push(("epsilon", Json::Num(*epsilon)));
+                fields.push(("lambda", Json::Num(*lambda)));
+            }
+            IntegratorSpec::Trees { count, lambda, seed, .. } => {
+                fields.push(("count", Json::Num(*count as f64)));
+                fields.push(("lambda", Json::Num(*lambda)));
+                fields.push(("seed", Json::Num(*seed as f64)));
+            }
+            IntegratorSpec::AlMohy { lambda } | IntegratorSpec::Bader { lambda } => {
+                fields.push(("lambda", Json::Num(*lambda)));
+            }
+            IntegratorSpec::Lanczos { lambda, krylov_dim } => {
+                fields.push(("lambda", Json::Num(*lambda)));
+                fields.push(("krylov", Json::Num(*krylov_dim as f64)));
+            }
+        }
+        Ok(Json::obj(fields))
+    }
+
+    /// Parses a spec out of a flat request object (the coordinator wire
+    /// protocol; also accepts everything [`IntegratorSpec::to_json`]
+    /// emits).
+    pub fn from_request(req: &Json) -> Result<IntegratorSpec, GfiError> {
+        let name = req
+            .get("backend")
+            .and_then(Json::as_str)
+            .ok_or_else(|| GfiError::InvalidSpec { detail: "missing backend".into() })?;
+        let num = |k: &str, dflt: f64| req.get(k).and_then(Json::as_f64).unwrap_or(dflt);
+        let rfd_cfg = || RfdConfig {
+            num_features: num("m", 16.0) as usize,
+            epsilon: num("epsilon", 0.1),
+            lambda: num("lambda", -0.1),
+            sigma: req.get("sigma").and_then(Json::as_f64),
+            radius: num("radius", RfdConfig::default().radius),
+            ridge: num("ridge", RfdConfig::default().ridge),
+            seed: num("seed", 0.0) as u64,
+        };
+        let trees = |kind: TreeKind| IntegratorSpec::Trees {
+            kind,
+            count: num("count", 3.0) as usize,
+            lambda: num("lambda", 1.0),
+            seed: num("seed", 0.0) as u64,
+        };
+        Ok(match name {
+            "sf" => IntegratorSpec::Sf(SfConfig {
+                kernel: KernelFn::ExpNeg(num("lambda", 1.0)),
+                unit_size: num("unit_size", 0.01),
+                threshold: num("threshold", 512.0) as usize,
+                separator_size: num("separator_size", 6.0) as usize,
+                seed: num("seed", 0.0) as u64,
+            }),
+            "rfd" => IntegratorSpec::Rfd(rfd_cfg()),
+            "rfd_pjrt" => IntegratorSpec::RfdPjrt(rfd_cfg()),
+            "bf_sp" => IntegratorSpec::BfSp(KernelFn::ExpNeg(num("lambda", 1.0))),
+            "bf_diffusion" => IntegratorSpec::BfDiffusion {
+                epsilon: num("epsilon", 0.1),
+                lambda: num("lambda", -0.1),
+            },
+            "trees_mst" => trees(TreeKind::Mst),
+            "trees_bartal" => trees(TreeKind::Bartal),
+            "trees_frt" => trees(TreeKind::Frt),
+            "almohy" => IntegratorSpec::AlMohy { lambda: num("lambda", -0.1) },
+            "lanczos" => IntegratorSpec::Lanczos {
+                lambda: num("lambda", -0.1),
+                krylov_dim: num("krylov", 30.0) as usize,
+            },
+            "bader" => IntegratorSpec::Bader { lambda: num("lambda", -0.1) },
+            other => {
+                return Err(GfiError::InvalidSpec { detail: format!("unknown backend {other}") })
+            }
+        })
+    }
+}
+
+fn invalid(detail: impl Into<String>) -> GfiError {
+    GfiError::InvalidSpec { detail: detail.into() }
+}
+
+fn validate_rfd(c: &RfdConfig) -> Result<(), GfiError> {
+    if c.num_features == 0 {
+        return Err(invalid("rfd needs num_features ≥ 1"));
+    }
+    if !(c.epsilon.is_finite() && c.epsilon > 0.0) {
+        return Err(invalid(format!("rfd epsilon must be positive, got {}", c.epsilon)));
+    }
+    if !c.lambda.is_finite() {
+        return Err(invalid("rfd lambda must be finite"));
+    }
+    if !(c.radius.is_finite() && c.radius > 0.0) {
+        return Err(invalid(format!("rfd radius must be positive, got {}", c.radius)));
+    }
+    Ok(())
+}
+
+/// Validates `spec` against `scene` without building anything: scene
+/// shape, backend input requirements (graph/points), and hyper-parameter
+/// sanity. [`prepare`] runs this first; the engine's PJRT route calls it
+/// directly so both routes enforce the same contract.
+pub(crate) fn validate_spec(scene: &Scene, spec: &IntegratorSpec) -> Result<(), GfiError> {
+    scene.validate()?;
+    match spec {
+        IntegratorSpec::Sf(cfg) => {
+            if !(cfg.unit_size.is_finite() && cfg.unit_size > 0.0) {
+                return Err(invalid(format!(
+                    "sf unit_size must be positive, got {}",
+                    cfg.unit_size
+                )));
+            }
+            if cfg.separator_size == 0 {
+                return Err(invalid("sf separator_size must be ≥ 1"));
+            }
+            scene.require_graph("sf")?;
+        }
+        IntegratorSpec::Rfd(cfg) | IntegratorSpec::RfdPjrt(cfg) => {
+            validate_rfd(cfg)?;
+            scene.require_points("rfd")?;
+        }
+        IntegratorSpec::BfSp(_) => {
+            scene.require_graph("bf_sp")?;
+        }
+        IntegratorSpec::BfDiffusion { epsilon, lambda } => {
+            if !(epsilon.is_finite() && *epsilon > 0.0) {
+                return Err(invalid(format!(
+                    "bf_diffusion epsilon must be positive, got {epsilon}"
+                )));
+            }
+            if !lambda.is_finite() {
+                return Err(invalid("bf_diffusion lambda must be finite"));
+            }
+            scene.require_points("bf_diffusion")?;
+        }
+        IntegratorSpec::Trees { count, .. } => {
+            if *count == 0 {
+                return Err(invalid("tree ensemble needs count ≥ 1"));
+            }
+            scene.require_graph("trees")?;
+        }
+        IntegratorSpec::AlMohy { .. } => {
+            scene.require_graph("almohy")?;
+        }
+        IntegratorSpec::Lanczos { .. } => {
+            scene.require_graph("lanczos")?;
+        }
+        IntegratorSpec::Bader { .. } => {
+            scene.require_graph("bader")?;
+        }
+    }
+    Ok(())
+}
+
+/// The single integrator factory: validates `spec` against `scene`
+/// ([`validate_spec`]) and runs the backend's pre-processing. Every
+/// backend constructs through here — the seed's six incompatible
+/// `new(...)` signatures and their panics (missing mesh graph,
+/// degenerate ε, singular cores) are behind this one fallible entry
+/// point.
+pub fn prepare(
+    scene: &Scene,
+    spec: &IntegratorSpec,
+) -> Result<Box<dyn FieldIntegrator>, GfiError> {
+    validate_spec(scene, spec)?;
+    let built: Box<dyn FieldIntegrator> = match spec {
+        IntegratorSpec::Sf(cfg) => {
+            let g = scene.require_graph("sf")?;
+            Box::new(SeparatorFactorization::new(g, cfg.clone()))
+        }
+        IntegratorSpec::Rfd(cfg) | IntegratorSpec::RfdPjrt(cfg) => {
+            let pts = scene.require_points("rfd")?;
+            Box::new(RfDiffusion::try_new(pts, cfg.clone())?)
+        }
+        IntegratorSpec::BfSp(kernel) => {
+            let g = scene.require_graph("bf_sp")?;
+            Box::new(BruteForceSp::new(g, kernel))
+        }
+        IntegratorSpec::BfDiffusion { epsilon, lambda } => {
+            let pts = scene.require_points("bf_diffusion")?;
+            let g = pts.epsilon_graph(*epsilon, Norm::LInf, true);
+            Box::new(BruteForceDiffusion::new(&g, *lambda))
+        }
+        IntegratorSpec::Trees { kind, count, lambda, seed } => {
+            let g = scene.require_graph("trees")?;
+            Box::new(TreeEnsembleIntegrator::new(g, *kind, *count, *lambda, *seed))
+        }
+        IntegratorSpec::AlMohy { lambda } => {
+            let g = scene.require_graph("almohy")?;
+            Box::new(AlMohyExpmv::new(g, *lambda))
+        }
+        IntegratorSpec::Lanczos { lambda, krylov_dim } => {
+            let g = scene.require_graph("lanczos")?;
+            Box::new(LanczosExpmv::new(g, *lambda, *krylov_dim))
+        }
+        IntegratorSpec::Bader { lambda } => {
+            let g = scene.require_graph("bader")?;
+            Box::new(BaderDense::new(g, *lambda))
+        }
+    };
+    Ok(built)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::icosphere;
+    use crate::pointcloud::random_cloud;
+    use crate::util::rng::Rng;
+
+    fn mesh_scene() -> Scene {
+        let mut mesh = icosphere(1);
+        mesh.normalize_unit_box();
+        Scene::from_mesh(&mesh)
+    }
+
+    #[test]
+    fn prepare_builds_every_backend_on_a_mesh_scene() {
+        let scene = mesh_scene();
+        let n = scene.len();
+        let specs = [
+            IntegratorSpec::Sf(SfConfig::default()),
+            IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() }),
+            IntegratorSpec::BfSp(KernelFn::ExpNeg(2.0)),
+            IntegratorSpec::BfDiffusion { epsilon: 0.2, lambda: -0.2 },
+            IntegratorSpec::Trees { kind: TreeKind::Mst, count: 2, lambda: 1.0, seed: 0 },
+            IntegratorSpec::AlMohy { lambda: -0.2 },
+            IntegratorSpec::Lanczos { lambda: -0.2, krylov_dim: 10 },
+            IntegratorSpec::Bader { lambda: -0.2 },
+        ];
+        for spec in &specs {
+            let integ = prepare(&scene, spec).unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+            assert_eq!(integ.len(), n, "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn graph_needing_specs_fail_without_graph() {
+        let mut rng = Rng::new(1);
+        let scene = Scene::from_points(random_cloud(20, &mut rng));
+        for spec in [
+            IntegratorSpec::Sf(SfConfig::default()),
+            IntegratorSpec::BfSp(KernelFn::ExpNeg(1.0)),
+            IntegratorSpec::Trees { kind: TreeKind::Bartal, count: 2, lambda: 1.0, seed: 0 },
+            IntegratorSpec::AlMohy { lambda: -0.1 },
+        ] {
+            match prepare(&scene, &spec).err() {
+                Some(GfiError::MissingGraph { .. }) => {}
+                other => panic!("{spec:?}: expected MissingGraph, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn point_needing_specs_fail_on_graph_only_scene() {
+        let g = CsrGraph::from_edges(4, &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0)]);
+        let scene = Scene::from_graph(g);
+        match prepare(&scene, &IntegratorSpec::Rfd(RfdConfig::default())).err() {
+            Some(GfiError::MissingPoints { .. }) => {}
+            other => panic!("expected MissingPoints, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_and_mismatched_scenes_are_rejected() {
+        let empty = Scene::from_points(PointCloud::new(Vec::new()));
+        match prepare(&empty, &IntegratorSpec::Rfd(RfdConfig::default())).err() {
+            Some(GfiError::EmptyScene) => {}
+            other => panic!("expected EmptyScene, got {other:?}"),
+        }
+        let mut rng = Rng::new(2);
+        let pc = random_cloud(5, &mut rng);
+        let g = CsrGraph::from_edges(4, &[(0, 1, 1.0)]);
+        let bad = Scene::new(pc, Some(g));
+        match prepare(&bad, &IntegratorSpec::BfSp(KernelFn::ExpNeg(1.0))).err() {
+            Some(GfiError::SceneMismatch { graph_n: 4, points_n: 5 }) => {}
+            other => panic!("expected SceneMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn degenerate_hyperparameters_are_invalid_spec() {
+        let scene = mesh_scene();
+        let bads = [
+            IntegratorSpec::Sf(SfConfig { unit_size: 0.0, ..Default::default() }),
+            IntegratorSpec::Rfd(RfdConfig { num_features: 0, ..Default::default() }),
+            IntegratorSpec::Rfd(RfdConfig { epsilon: -1.0, ..Default::default() }),
+            IntegratorSpec::BfDiffusion { epsilon: 0.0, lambda: 0.1 },
+            IntegratorSpec::Trees { kind: TreeKind::Mst, count: 0, lambda: 1.0, seed: 0 },
+        ];
+        for spec in &bads {
+            match prepare(&scene, spec).err() {
+                Some(GfiError::InvalidSpec { .. }) => {}
+                other => panic!("{spec:?}: expected InvalidSpec, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn cache_keys_cover_every_parameter() {
+        let base = RfdConfig::default();
+        let a = IntegratorSpec::Rfd(base.clone()).cache_key().unwrap();
+        let b = IntegratorSpec::Rfd(RfdConfig { sigma: Some(2.0), ..base.clone() })
+            .cache_key()
+            .unwrap();
+        let c = IntegratorSpec::Rfd(RfdConfig { ridge: 1e-6, ..base.clone() })
+            .cache_key()
+            .unwrap();
+        assert_ne!(a, b, "sigma must be part of the cache key");
+        assert_ne!(a, c, "ridge must be part of the cache key");
+        // Rfd and RfdPjrt share the prepared fallback integrator.
+        assert_eq!(a, IntegratorSpec::RfdPjrt(base).cache_key().unwrap());
+    }
+
+    #[test]
+    fn custom_kernels_key_by_label_and_opaque_is_rejected() {
+        let k1 = IntegratorSpec::BfSp(KernelFn::custom("steep", |x| (-8.0 * x).exp()));
+        let k2 = IntegratorSpec::BfSp(KernelFn::custom("shallow", |x| (-0.5 * x).exp()));
+        assert_ne!(k1.cache_key().unwrap(), k2.cache_key().unwrap());
+        let opaque = IntegratorSpec::BfSp(KernelFn::custom_opaque(|x| x));
+        match opaque.cache_key() {
+            Err(GfiError::Unkeyable { .. }) => {}
+            other => panic!("expected Unkeyable, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_cache_key() {
+        let specs = [
+            IntegratorSpec::Sf(SfConfig { kernel: KernelFn::ExpNeg(3.0), ..Default::default() }),
+            IntegratorSpec::Rfd(RfdConfig { num_features: 24, seed: 9, ..Default::default() }),
+            IntegratorSpec::BfSp(KernelFn::ExpNeg(1.5)),
+            IntegratorSpec::BfDiffusion { epsilon: 0.2, lambda: -0.3 },
+            IntegratorSpec::Trees { kind: TreeKind::Frt, count: 4, lambda: 2.0, seed: 3 },
+            IntegratorSpec::AlMohy { lambda: -0.2 },
+            IntegratorSpec::Lanczos { lambda: -0.2, krylov_dim: 12 },
+            IntegratorSpec::Bader { lambda: -0.2 },
+        ];
+        for spec in &specs {
+            let wire = spec.to_json().unwrap();
+            let back = IntegratorSpec::from_request(&wire)
+                .unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+            assert_eq!(
+                back.cache_key().unwrap(),
+                spec.cache_key().unwrap(),
+                "roundtrip changed {spec:?}"
+            );
+        }
+        // Custom kernels cannot cross the wire.
+        assert!(IntegratorSpec::BfSp(KernelFn::custom("c", |x| x)).to_json().is_err());
+    }
+}

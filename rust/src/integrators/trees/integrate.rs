@@ -11,29 +11,35 @@
 use super::build::{bartal_tree, frt_tree, mst, WeightedTree};
 use crate::fft::hankel_matvec_multi;
 use crate::graph::CsrGraph;
-use crate::integrators::{FieldIntegrator, KernelFn};
+use crate::integrators::{check_apply_shapes, FieldIntegrator, KernelFn, Workspace};
 use crate::linalg::Mat;
 use crate::util::rng::Rng;
 
-/// Exact `Σ_w exp(-λ·dist_T(v,w)) F(w)` for every original vertex `v`.
-/// Virtual (FRT) nodes carry zero field and are excluded from outputs.
-/// Infinite edge weights (forest stitching) decay to exactly zero.
-pub fn tree_gfi_exp(tree: &WeightedTree, lambda: f64, field: &Mat) -> Mat {
-    assert_eq!(field.rows, tree.n_original);
-    let d = field.cols;
-    let nt = tree.len();
-    let order = tree.topo_order();
-    // decay to parent
-    let decay: Vec<f64> = tree
-        .weight
+/// Per-edge decay factors `exp(-λ·w)` (infinite forest-stitch edges decay
+/// to exactly zero).
+fn decays(tree: &WeightedTree, lambda: f64) -> Vec<f64> {
+    tree.weight
         .iter()
         .map(|&w| if w.is_finite() { (-lambda * w).exp() } else { 0.0 })
-        .collect();
+        .collect()
+}
 
+/// Two-pass DP over one tree with caller-provided traversal order, decay
+/// table, and zeroed `up`/`down` scratch (length `tree.len()·d` each);
+/// **adds** the integral into `out`'s original-vertex rows.
+fn tree_gfi_exp_core(
+    tree: &WeightedTree,
+    order: &[usize],
+    decay: &[f64],
+    field: &Mat,
+    out: &mut Mat,
+    up: &mut [f64],
+    down: &mut [f64],
+) {
+    let d = field.cols;
     // Upward pass: up[v] = F(v) + Σ_c decay[c]·up[c]. Children appear
     // before parents in reverse topo order, so their contributions are
     // already accumulated into up[v] when v is processed — hence `+=`.
-    let mut up = vec![0.0; nt * d];
     for &v in order.iter().rev() {
         if v < tree.n_original {
             for (u, &fv) in up[v * d..(v + 1) * d].iter_mut().zip(field.row(v)) {
@@ -52,7 +58,6 @@ pub fn tree_gfi_exp(tree: &WeightedTree, lambda: f64, field: &Mat) -> Mat {
         }
     }
     // Downward pass: down[c] = decay[c]·(down[p] + up[p] − decay[c]·up[c]).
-    let mut down = vec![0.0; nt * d];
     for &v in order.iter() {
         if v == tree.root {
             continue;
@@ -66,12 +71,27 @@ pub fn tree_gfi_exp(tree: &WeightedTree, lambda: f64, field: &Mat) -> Mat {
             down[v * d + k] = dc * (down[p * d + k] + up[p * d + k] - dc * up[v * d + k]);
         }
     }
-    let mut out = Mat::zeros(tree.n_original, d);
     for v in 0..tree.n_original {
-        for k in 0..d {
-            out[(v, k)] = up[v * d + k] + down[v * d + k];
+        let orow = out.row_mut(v);
+        for (k, o) in orow.iter_mut().enumerate() {
+            *o += up[v * d + k] + down[v * d + k];
         }
     }
+}
+
+/// Exact `Σ_w exp(-λ·dist_T(v,w)) F(w)` for every original vertex `v`.
+/// Virtual (FRT) nodes carry zero field and are excluded from outputs.
+/// Infinite edge weights (forest stitching) decay to exactly zero.
+pub fn tree_gfi_exp(tree: &WeightedTree, lambda: f64, field: &Mat) -> Mat {
+    assert_eq!(field.rows, tree.n_original);
+    let d = field.cols;
+    let nt = tree.len();
+    let order = tree.topo_order();
+    let decay = decays(tree, lambda);
+    let mut up = vec![0.0; nt * d];
+    let mut down = vec![0.0; nt * d];
+    let mut out = Mat::zeros(tree.n_original, d);
+    tree_gfi_exp_core(tree, &order, &decay, field, &mut out, &mut up, &mut down);
     out
 }
 
@@ -362,11 +382,18 @@ fn first_hop(
     }
 }
 
+/// One sampled tree with its traversal order and decay table precomputed
+/// at construction, so the apply path touches no allocator.
+struct PreparedTree {
+    tree: WeightedTree,
+    order: Vec<usize>,
+    decay: Vec<f64>,
+}
+
 /// Ensemble-of-trees integrator (Appendix B): averages exact tree GFIs
 /// over `k` sampled trees.
 pub struct TreeEnsembleIntegrator {
-    trees: Vec<WeightedTree>,
-    lambda: f64,
+    trees: Vec<PreparedTree>,
     name: String,
 }
 
@@ -379,13 +406,19 @@ pub enum TreeKind {
 }
 
 impl TreeEnsembleIntegrator {
-    pub fn new(g: &CsrGraph, kind: TreeKind, k: usize, lambda: f64, seed: u64) -> Self {
+    /// Construct via [`crate::integrators::prepare`].
+    pub(crate) fn new(g: &CsrGraph, kind: TreeKind, k: usize, lambda: f64, seed: u64) -> Self {
         let mut rng = Rng::new(seed);
-        let trees: Vec<WeightedTree> = (0..k.max(1))
-            .map(|_| match kind {
-                TreeKind::Mst => mst(g),
-                TreeKind::Bartal => bartal_tree(g, &mut rng),
-                TreeKind::Frt => frt_tree(g, &mut rng),
+        let trees: Vec<PreparedTree> = (0..k.max(1))
+            .map(|_| {
+                let tree = match kind {
+                    TreeKind::Mst => mst(g),
+                    TreeKind::Bartal => bartal_tree(g, &mut rng),
+                    TreeKind::Frt => frt_tree(g, &mut rng),
+                };
+                let order = tree.topo_order();
+                let decay = decays(&tree, lambda);
+                PreparedTree { tree, order, decay }
             })
             .collect();
         let name = match kind {
@@ -393,7 +426,7 @@ impl TreeEnsembleIntegrator {
             TreeKind::Bartal => format!("T-Bart-{k}"),
             TreeKind::Frt => format!("T-FRT-{k}"),
         };
-        TreeEnsembleIntegrator { trees, lambda, name }
+        TreeEnsembleIntegrator { trees, name }
     }
 }
 
@@ -402,17 +435,30 @@ impl FieldIntegrator for TreeEnsembleIntegrator {
         self.name.clone()
     }
     fn len(&self) -> usize {
-        self.trees[0].n_original
+        self.trees[0].tree.n_original
     }
-    fn apply(&self, field: &Mat) -> Mat {
-        let outs: Vec<Mat> = crate::util::par::par_map(self.trees.len(), |t| {
-            tree_gfi_exp(&self.trees[t], self.lambda, field)
-        });
-        let mut acc = Mat::zeros(field.rows, field.cols);
-        for o in &outs {
-            acc.add_assign(o);
+    /// Sequential accumulation over the (small, k ≈ 3–20) ensemble with
+    /// workspace-pooled DP scratch. This trades the old per-tree
+    /// `par_map` parallelism for a zero-allocation apply path: each tree
+    /// DP is O(nt·d) with tiny constants, so the serving engine's
+    /// cross-request parallelism covers the throughput while the
+    /// workspace keeps the allocator out of the loop.
+    fn apply_into(&self, field: &Mat, out: &mut Mat, ws: &mut Workspace) {
+        check_apply_shapes(self.len(), field, out);
+        out.data.fill(0.0);
+        let d = field.cols;
+        for pt in &self.trees {
+            let nt = pt.tree.len();
+            let mut up = ws.take(nt * d);
+            let mut down = ws.take(nt * d);
+            tree_gfi_exp_core(&pt.tree, &pt.order, &pt.decay, field, out, &mut up, &mut down);
+            ws.put(down);
+            ws.put(up);
         }
-        acc.scale(1.0 / self.trees.len() as f64)
+        let s = 1.0 / self.trees.len() as f64;
+        for x in out.data.iter_mut() {
+            *x *= s;
+        }
     }
 }
 

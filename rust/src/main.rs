@@ -79,40 +79,41 @@ fn serve(args: &[String]) -> Result<()> {
 }
 
 /// Smoke check of the whole stack: SF + RFD on a small sphere, PJRT
-/// round-trip when artifacts exist.
+/// round-trip when artifacts exist — all through the unified
+/// spec → prepare → apply lifecycle.
 fn selfcheck(args: &[String]) -> Result<()> {
-    use gfi::integrators::FieldIntegrator;
+    use gfi::integrators::{prepare, FieldIntegrator, IntegratorSpec, KernelFn, Scene};
     let artifacts = opt(args, "--artifacts", "artifacts");
     let mut mesh = gfi::mesh::icosphere(2);
     mesh.normalize_unit_box();
-    let g = mesh.to_graph();
-    let n = g.n;
+    let scene = Scene::from_mesh(&mesh);
+    let n = scene.len();
     println!("mesh: icosphere(2), |V|={n}");
     let mut rng = gfi::util::rng::Rng::new(1);
     let field =
         gfi::linalg::Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.gaussian()).collect());
-    let bf =
-        gfi::integrators::bf::BruteForceSp::new(&g, &gfi::integrators::KernelFn::ExpNeg(2.0));
+    let bf: Box<dyn FieldIntegrator> =
+        prepare(&scene, &IntegratorSpec::BfSp(KernelFn::ExpNeg(2.0)))?;
     let exact = bf.apply(&field);
-    let sf = gfi::integrators::sf::SeparatorFactorization::new(
-        &g,
-        gfi::integrators::sf::SfConfig {
-            kernel: gfi::integrators::KernelFn::ExpNeg(2.0),
+    let sf = prepare(
+        &scene,
+        &IntegratorSpec::Sf(gfi::integrators::sf::SfConfig {
+            kernel: KernelFn::ExpNeg(2.0),
             ..Default::default()
-        },
-    );
+        }),
+    )?;
     let e_sf = gfi::util::stats::rel_err(&sf.apply(&field).data, &exact.data);
     println!("SF vs BF rel err: {e_sf:.4}");
-    let pc = gfi::pointcloud::PointCloud::new(mesh.verts.clone());
     let cfg = gfi::integrators::rfd::RfdConfig { num_features: 16, ..Default::default() };
-    let rfd = gfi::integrators::rfd::RfDiffusion::new(&pc, cfg.clone());
+    let rfd = prepare(&scene, &IntegratorSpec::Rfd(cfg.clone()))?;
     let rust_out = rfd.apply(&field);
     println!("RFD pure-rust: ok ({} outputs)", rust_out.data.len());
     let dir = std::path::Path::new(artifacts);
     if dir.join("manifest.json").exists() {
         let rt = gfi::runtime::PjrtRuntime::new(dir)?;
         let (omegas, qscale) = gfi::integrators::rfd::sample_features(&cfg);
-        let pjrt_out = rt.rfd_apply(&pc.points, &omegas, &qscale, &field, cfg.lambda)?;
+        let pjrt_out =
+            rt.rfd_apply(&scene.points.points, &omegas, &qscale, &field, cfg.lambda)?;
         let e = gfi::util::stats::rel_err(&pjrt_out.data, &rust_out.data);
         println!("RFD PJRT vs rust rel err: {e:.2e}");
         if e > 1e-3 {

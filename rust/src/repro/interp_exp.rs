@@ -3,12 +3,10 @@
 
 use crate::apps::interpolation::InterpolationTask;
 use crate::datasets::mesh_zoo;
-use crate::integrators::bf::BruteForceSp;
-use crate::integrators::expmv::{AlMohyExpmv, BaderDense, LanczosExpmv};
-use crate::integrators::rfd::{RfDiffusion, RfdConfig};
-use crate::integrators::sf::{SeparatorFactorization, SfConfig};
-use crate::integrators::trees::{TreeEnsembleIntegrator, TreeKind};
-use crate::integrators::KernelFn;
+use crate::integrators::rfd::RfdConfig;
+use crate::integrators::sf::SfConfig;
+use crate::integrators::trees::TreeKind;
+use crate::integrators::{prepare, IntegratorSpec, KernelFn, Scene};
 use crate::sim::{ClothConfig, ClothSim};
 use crate::util::rng::Rng;
 use crate::util::timer::timed;
@@ -47,23 +45,28 @@ pub fn fig4_sf(quick: bool) -> Result<()> {
     for entry in mesh_zoo(300, max) {
         let g = entry.mesh.to_graph();
         let n = g.n;
+        let scene = Scene::new(
+            crate::pointcloud::PointCloud::new(entry.mesh.verts.clone()),
+            Some(g.clone()),
+        );
         let task = normal_task(&entry.mesh, 7);
         let lambda = 6.0;
         let mut rows = Vec::new();
         // SF
         let (sf, pre) = timed(|| {
-            SeparatorFactorization::new(
-                &g,
-                SfConfig {
+            prepare(
+                &scene,
+                &IntegratorSpec::Sf(SfConfig {
                     kernel: KernelFn::ExpNeg(lambda),
                     unit_size: 0.01,
                     threshold: 512,
                     separator_size: 8,
                     seed: 0,
-                },
+                }),
             )
         });
-        let ((cos, _), apply) = timed(|| task.evaluate(&sf));
+        let sf = sf?;
+        let ((cos, _), apply) = timed(|| task.evaluate(sf.as_ref()));
         rows.push(Row { method: "SF".into(), pre, apply, cos });
         // Nearest-unmasked copy baseline: one batched multi-source
         // Voronoi sweep through graph::distances — the floor every
@@ -77,8 +80,10 @@ pub fn fig4_sf(quick: bool) -> Result<()> {
         });
         // BF
         if n <= bf_limit {
-            let (bf, pre) = timed(|| BruteForceSp::new(&g, &KernelFn::ExpNeg(lambda)));
-            let ((cos, _), apply) = timed(|| task.evaluate(&bf));
+            let (bf, pre) =
+                timed(|| prepare(&scene, &IntegratorSpec::BfSp(KernelFn::ExpNeg(lambda))));
+            let bf = bf?;
+            let ((cos, _), apply) = timed(|| task.evaluate(bf.as_ref()));
             rows.push(Row { method: "BF".into(), pre, apply, cos });
         } else {
             rows.push(Row { method: "BF (OOT)".into(), pre: f64::NAN, apply: f64::NAN, cos: f64::NAN });
@@ -90,8 +95,14 @@ pub fn fig4_sf(quick: bool) -> Result<()> {
             (TreeKind::Frt, 3, "T-FRT"),
         ] {
             if n <= tree_limit {
-                let (t, pre) = timed(|| TreeEnsembleIntegrator::new(&g, kind, k, lambda, 1));
-                let ((cos, _), apply) = timed(|| task.evaluate(&t));
+                let (t, pre) = timed(|| {
+                    prepare(
+                        &scene,
+                        &IntegratorSpec::Trees { kind, count: k, lambda, seed: 1 },
+                    )
+                });
+                let t = t?;
+                let ((cos, _), apply) = timed(|| task.evaluate(t.as_ref()));
                 rows.push(Row { method: name.into(), pre, apply, cos });
             } else {
                 rows.push(Row {
@@ -117,36 +128,52 @@ pub fn fig4_rfd(quick: bool) -> Result<()> {
     for entry in mesh_zoo(300, max) {
         let n = entry.mesh.num_verts();
         let pc = crate::pointcloud::PointCloud::new(entry.mesh.verts.clone());
+        // One scene carries the ε-graph world: RFD integrates the point
+        // cloud directly, the expm-action baselines its ε-NN graph.
         let g_eps = pc.epsilon_graph(eps, crate::pointcloud::Norm::LInf, true);
+        let scene = Scene::new(pc, Some(g_eps));
         let task = normal_task(&entry.mesh, 8);
         let mut rows = Vec::new();
         // RFD
         let (rfd, pre) = timed(|| {
-            RfDiffusion::new(
-                &pc,
-                RfdConfig { num_features: 128, epsilon: eps, lambda: lam, seed: 0, ..Default::default() },
+            prepare(
+                &scene,
+                &IntegratorSpec::Rfd(RfdConfig {
+                    num_features: 128,
+                    epsilon: eps,
+                    lambda: lam,
+                    seed: 0,
+                    ..Default::default()
+                }),
             )
         });
-        let ((cos, _), apply) = timed(|| task.evaluate(&rfd));
+        let rfd = rfd?;
+        let ((cos, _), apply) = timed(|| task.evaluate(rfd.as_ref()));
         rows.push(Row { method: "RFD".into(), pre, apply, cos });
         // Bader (dense) — O(N³)
         if n <= dense_limit {
-            let (bd, pre) = timed(|| BaderDense::new(&g_eps, lam));
-            let ((cos, _), apply) = timed(|| task.evaluate(&bd));
+            let (bd, pre) = timed(|| prepare(&scene, &IntegratorSpec::Bader { lambda: lam }));
+            let bd = bd?;
+            let ((cos, _), apply) = timed(|| task.evaluate(bd.as_ref()));
             rows.push(Row { method: "Bader".into(), pre, apply, cos });
         } else {
             rows.push(Row { method: "Bader (OOT)".into(), pre: f64::NAN, apply: f64::NAN, cos: f64::NAN });
         }
         // Al-Mohy (matrix-free)
         if n <= iter_limit {
-            let (am, pre) = timed(|| AlMohyExpmv::new(&g_eps, lam));
-            let ((cos, _), apply) = timed(|| task.evaluate(&am));
+            let (am, pre) =
+                timed(|| prepare(&scene, &IntegratorSpec::AlMohy { lambda: lam }));
+            let am = am?;
+            let ((cos, _), apply) = timed(|| task.evaluate(am.as_ref()));
             rows.push(Row { method: "Al-Mohy".into(), pre, apply, cos });
         }
         // Lanczos
         if n <= iter_limit {
-            let (lz, pre) = timed(|| LanczosExpmv::new(&g_eps, lam, 30));
-            let ((cos, _), apply) = timed(|| task.evaluate(&lz));
+            let (lz, pre) = timed(|| {
+                prepare(&scene, &IntegratorSpec::Lanczos { lambda: lam, krylov_dim: 30 })
+            });
+            let lz = lz?;
+            let ((cos, _), apply) = timed(|| task.evaluate(lz.as_ref()));
             rows.push(Row { method: "Lanczos".into(), pre, apply, cos });
         }
         print_rows(&entry.name, n, &rows);
@@ -170,20 +197,28 @@ pub fn fig5(quick: bool) -> Result<()> {
     );
     for snap_i in 0..4 {
         let snap = sim.run(300);
-        let g = snap.mesh.to_graph();
+        let scene = Scene::from_mesh(&snap.mesh);
         let mut rng = Rng::new(42 + snap_i);
         let task = InterpolationTask::from_vectors(&snap.velocities, 0.05, &mut rng);
-        let sf = SeparatorFactorization::new(
-            &g,
-            SfConfig { kernel: KernelFn::ExpNeg(8.0), unit_size: 0.01, ..Default::default() },
-        );
-        let (sf_cos, _) = task.evaluate(&sf);
-        let pc = crate::pointcloud::PointCloud::new(snap.mesh.verts.clone());
-        let rfd = RfDiffusion::new(
-            &pc,
-            RfdConfig { num_features: 128, epsilon: 0.1, lambda: 0.5, ..Default::default() },
-        );
-        let (rfd_cos, _) = task.evaluate(&rfd);
+        let sf = prepare(
+            &scene,
+            &IntegratorSpec::Sf(SfConfig {
+                kernel: KernelFn::ExpNeg(8.0),
+                unit_size: 0.01,
+                ..Default::default()
+            }),
+        )?;
+        let (sf_cos, _) = task.evaluate(sf.as_ref());
+        let rfd = prepare(
+            &scene,
+            &IntegratorSpec::Rfd(RfdConfig {
+                num_features: 128,
+                epsilon: 0.1,
+                lambda: 0.5,
+                ..Default::default()
+            }),
+        )?;
+        let (rfd_cos, _) = task.evaluate(rfd.as_ref());
         println!(
             "t={:<8.3} {:>8} {:>10.4} {:>10.4}",
             snap.time,
@@ -201,16 +236,23 @@ pub fn fig9(quick: bool) -> Result<()> {
     let mesh = if quick { crate::mesh::icosphere(3) } else { crate::mesh::icosphere(4) };
     let mut m0 = mesh;
     m0.normalize_unit_box();
-    let pc = crate::pointcloud::PointCloud::new(m0.verts.clone());
+    let scene = Scene::from_points(crate::pointcloud::PointCloud::new(m0.verts.clone()));
     let task = normal_task(&m0, 3);
     let run = |m: usize, eps: f64, lam: f64| -> (f64, f64, f64) {
         let (rfd, pre) = timed(|| {
-            RfDiffusion::new(
-                &pc,
-                RfdConfig { num_features: m, epsilon: eps, lambda: lam, seed: 0, ..Default::default() },
+            prepare(
+                &scene,
+                &IntegratorSpec::Rfd(RfdConfig {
+                    num_features: m,
+                    epsilon: eps,
+                    lambda: lam,
+                    seed: 0,
+                    ..Default::default()
+                }),
             )
+            .expect("fig9 rfd prepare")
         });
-        let ((cos, _), apply) = timed(|| task.evaluate(&rfd));
+        let ((cos, _), apply) = timed(|| task.evaluate(rfd.as_ref()));
         (pre, apply, cos)
     };
     println!("-- sweep m (ε=0.15, λ=0.5)");
@@ -238,22 +280,24 @@ pub fn fig10(quick: bool) -> Result<()> {
     let mesh = if quick { crate::mesh::icosphere(3) } else { crate::mesh::icosphere(4) };
     let mut m0 = mesh;
     m0.normalize_unit_box();
-    let g = m0.to_graph();
+    let scene = Scene::from_mesh(&m0);
+    let n = scene.len();
     let task = normal_task(&m0, 4);
     println!("{:>10} {:>12} {:>12} {:>8}", "unit", "preproc(s)", "interp(s)", "cos");
     for unit in [0.002, 0.01, 0.05, 0.1, 0.3] {
         let (sf, pre) = timed(|| {
-            SeparatorFactorization::new(
-                &g,
-                SfConfig {
+            prepare(
+                &scene,
+                &IntegratorSpec::Sf(SfConfig {
                     kernel: KernelFn::ExpNeg(6.0),
                     unit_size: unit,
-                    threshold: g.n / 2,
+                    threshold: n / 2,
                     ..Default::default()
-                },
+                }),
             )
         });
-        let ((cos, _), apply) = timed(|| task.evaluate(&sf));
+        let sf = sf?;
+        let ((cos, _), apply) = timed(|| task.evaluate(sf.as_ref()));
         println!("{unit:>10} {pre:>12.4} {apply:>12.4} {cos:>8.4}");
     }
     Ok(())
@@ -265,24 +309,25 @@ pub fn fig11(quick: bool) -> Result<()> {
     let mesh = if quick { crate::mesh::icosphere(3) } else { crate::mesh::icosphere(4) };
     let mut m0 = mesh;
     m0.normalize_unit_box();
-    let g = m0.to_graph();
-    let n = g.n;
+    let scene = Scene::from_mesh(&m0);
+    let n = scene.len();
     let task = normal_task(&m0, 5);
     println!("{:>10} {:>12} {:>12} {:>8}", "threshold", "preproc(s)", "interp(s)", "cos");
     for frac in [0.05, 0.125, 0.25, 0.5, 1.0] {
         let threshold = ((n as f64) * frac) as usize;
         let (sf, pre) = timed(|| {
-            SeparatorFactorization::new(
-                &g,
-                SfConfig {
+            prepare(
+                &scene,
+                &IntegratorSpec::Sf(SfConfig {
                     kernel: KernelFn::ExpNeg(6.0),
                     unit_size: 0.01,
                     threshold,
                     ..Default::default()
-                },
+                }),
             )
         });
-        let ((cos, _), apply) = timed(|| task.evaluate(&sf));
+        let sf = sf?;
+        let ((cos, _), apply) = timed(|| task.evaluate(sf.as_ref()));
         println!("{threshold:>10} {pre:>12.4} {apply:>12.4} {cos:>8.4}");
     }
     Ok(())

@@ -6,10 +6,9 @@
 //! runtimes explode — ours does too, so full-size BF rows are only run in
 //! non-quick mode up to a practical cap.
 
-use crate::integrators::bf::{BruteForceDiffusion, BruteForceSp};
-use crate::integrators::rfd::{RfDiffusion, RfdConfig};
-use crate::integrators::sf::{SeparatorFactorization, SfConfig};
-use crate::integrators::{FieldIntegrator, KernelFn};
+use crate::integrators::rfd::RfdConfig;
+use crate::integrators::sf::SfConfig;
+use crate::integrators::{prepare, FieldIntegrator, IntegratorSpec, KernelFn, Scene};
 use crate::linalg::Mat;
 use crate::mesh::{icosphere, supershape, torus, TriMesh};
 use crate::ot::heat::HeatKernel;
@@ -65,16 +64,24 @@ pub fn table2(quick: bool) -> Result<()> {
     for (name, mut mesh) in mesh_ladder(quick) {
         mesh.normalize_unit_box();
         let n = mesh.num_verts();
-        let pc = crate::pointcloud::PointCloud::new(mesh.verts.clone());
-        let rfd = RfDiffusion::new(
-            &pc,
-            RfdConfig { num_features: 128, epsilon: eps, lambda: lam, ..Default::default() },
-        );
-        let (mu_rfd, t_rfd) = run_barycenter(&rfd, &mesh, iters);
+        let scene =
+            Scene::from_points(crate::pointcloud::PointCloud::new(mesh.verts.clone()));
+        let rfd = prepare(
+            &scene,
+            &IntegratorSpec::Rfd(RfdConfig {
+                num_features: 128,
+                epsilon: eps,
+                lambda: lam,
+                ..Default::default()
+            }),
+        )?;
+        let (mu_rfd, t_rfd) = run_barycenter(rfd.as_ref(), &mesh, iters);
         if n <= bf_cap {
-            let g = pc.epsilon_graph(eps, crate::pointcloud::Norm::LInf, true);
-            let (bf, t_pre) = timed(|| BruteForceDiffusion::new(&g, lam));
-            let (mu_bf, t_bf) = run_barycenter(&bf, &mesh, iters);
+            let (bf, t_pre) = timed(|| {
+                prepare(&scene, &IntegratorSpec::BfDiffusion { epsilon: eps, lambda: lam })
+            });
+            let bf = bf?;
+            let (mu_bf, t_bf) = run_barycenter(bf.as_ref(), &mesh, iters);
             println!(
                 "{:<10} {:>7} {:>10.2} {:>10.2} {:>10.4}",
                 name,
@@ -100,22 +107,25 @@ pub fn table3(quick: bool) -> Result<()> {
     for (name, mut mesh) in mesh_ladder(quick) {
         mesh.normalize_unit_box();
         let n = mesh.num_verts();
-        let g = mesh.to_graph();
+        let scene = Scene::from_mesh(&mesh);
         let (sf, t_sf_pre) = timed(|| {
-            SeparatorFactorization::new(
-                &g,
-                SfConfig {
+            prepare(
+                &scene,
+                &IntegratorSpec::Sf(SfConfig {
                     kernel: KernelFn::ExpNeg(lambda),
                     unit_size: 0.1,
                     threshold: 2000.min(n / 2).max(64),
                     ..Default::default()
-                },
+                }),
             )
         });
-        let (mu_sf, t_sf) = run_barycenter(&sf, &mesh, iters);
+        let sf = sf?;
+        let (mu_sf, t_sf) = run_barycenter(sf.as_ref(), &mesh, iters);
         if n <= bf_cap {
-            let (bf, t_pre) = timed(|| BruteForceSp::new(&g, &KernelFn::ExpNeg(lambda)));
-            let (mu_bf, t_bf) = run_barycenter(&bf, &mesh, iters);
+            let (bf, t_pre) =
+                timed(|| prepare(&scene, &IntegratorSpec::BfSp(KernelFn::ExpNeg(lambda))));
+            let bf = bf?;
+            let (mu_bf, t_bf) = run_barycenter(bf.as_ref(), &mesh, iters);
             println!(
                 "{:<10} {:>7} {:>10.2} {:>10.2} {:>10.4}",
                 name,
@@ -155,15 +165,23 @@ pub fn table5(quick: bool) -> Result<()> {
             println!("{:<10} {:>7}  (skipped: BF reference OOT)", name, n);
             continue;
         }
-        let pc = crate::pointcloud::PointCloud::new(mesh.verts.clone());
-        let g_eps = pc.epsilon_graph(eps, crate::pointcloud::Norm::LInf, true);
-        let (bf, t_pre) = timed(|| BruteForceDiffusion::new(&g_eps, lam));
-        let (mu_bf, t_bf) = run_barycenter(&bf, &mesh, iters);
-        let rfd = RfDiffusion::new(
-            &pc,
-            RfdConfig { num_features: 128, epsilon: eps, lambda: lam, ..Default::default() },
-        );
-        let (mu_rfd, t_rfd) = run_barycenter(&rfd, &mesh, iters);
+        let scene =
+            Scene::from_points(crate::pointcloud::PointCloud::new(mesh.verts.clone()));
+        let (bf, t_pre) = timed(|| {
+            prepare(&scene, &IntegratorSpec::BfDiffusion { epsilon: eps, lambda: lam })
+        });
+        let bf = bf?;
+        let (mu_bf, t_bf) = run_barycenter(bf.as_ref(), &mesh, iters);
+        let rfd = prepare(
+            &scene,
+            &IntegratorSpec::Rfd(RfdConfig {
+                num_features: 128,
+                epsilon: eps,
+                lambda: lam,
+                ..Default::default()
+            }),
+        )?;
+        let (mu_rfd, t_rfd) = run_barycenter(rfd.as_ref(), &mesh, iters);
         // Heat kernel over the mesh graph.
         let g = mesh.to_graph();
         let hk = HeatKernel::new(&g, 0.005, 4);
@@ -202,19 +220,28 @@ pub fn fig6(quick: bool) -> Result<()> {
     let n = mesh.num_verts();
     let g = mesh.to_graph();
     let iters = if quick { 15 } else { 40 };
-    let bf = BruteForceSp::new(&g, &KernelFn::ExpNeg(8.0));
-    let (mu_bf, _) = run_barycenter(&bf, &mesh, iters);
-    let sf = SeparatorFactorization::new(
-        &g,
-        SfConfig { kernel: KernelFn::ExpNeg(8.0), unit_size: 0.01, ..Default::default() },
-    );
-    let (mu_sf, _) = run_barycenter(&sf, &mesh, iters);
-    let pc = crate::pointcloud::PointCloud::new(mesh.verts.clone());
-    let rfd = RfDiffusion::new(
-        &pc,
-        RfdConfig { num_features: 128, epsilon: 0.1, lambda: 0.5, ..Default::default() },
-    );
-    let (mu_rfd, _) = run_barycenter(&rfd, &mesh, iters);
+    let scene = Scene::from_mesh(&mesh);
+    let bf = prepare(&scene, &IntegratorSpec::BfSp(KernelFn::ExpNeg(8.0)))?;
+    let (mu_bf, _) = run_barycenter(bf.as_ref(), &mesh, iters);
+    let sf = prepare(
+        &scene,
+        &IntegratorSpec::Sf(SfConfig {
+            kernel: KernelFn::ExpNeg(8.0),
+            unit_size: 0.01,
+            ..Default::default()
+        }),
+    )?;
+    let (mu_sf, _) = run_barycenter(sf.as_ref(), &mesh, iters);
+    let rfd = prepare(
+        &scene,
+        &IntegratorSpec::Rfd(RfdConfig {
+            num_features: 128,
+            epsilon: 0.1,
+            lambda: 0.5,
+            ..Default::default()
+        }),
+    )?;
+    let (mu_rfd, _) = run_barycenter(rfd.as_ref(), &mesh, iters);
     let mode = mu_bf
         .iter()
         .enumerate()
@@ -238,22 +265,27 @@ pub fn table6(quick: bool) -> Result<()> {
     println!("=== Table 6: barycenter ablation — SF unit-size ===");
     let mut mesh = if quick { icosphere(3) } else { icosphere(4) };
     mesh.normalize_unit_box();
-    let g = mesh.to_graph();
+    let scene = Scene::from_mesh(&mesh);
     let iters = if quick { 10 } else { 30 };
-    let bf = BruteForceSp::new(&g, &KernelFn::ExpNeg(8.0));
-    let (mu_bf, _) = run_barycenter(&bf, &mesh, iters);
+    let bf = prepare(&scene, &IntegratorSpec::BfSp(KernelFn::ExpNeg(8.0)))?;
+    let (mu_bf, _) = run_barycenter(bf.as_ref(), &mesh, iters);
     println!("{:>10} {:>12} {:>12}", "unit", "MSE", "total(s)");
     for unit in [0.1, 0.5, 1.0, 5.0, 10.0] {
         // The paper's units are in quantized-distance space; ours are in
         // unit-box space — scale by 1/100 for comparable granularity.
         let u = unit / 100.0;
         let (sf, t_pre) = timed(|| {
-            SeparatorFactorization::new(
-                &g,
-                SfConfig { kernel: KernelFn::ExpNeg(8.0), unit_size: u, ..Default::default() },
+            prepare(
+                &scene,
+                &IntegratorSpec::Sf(SfConfig {
+                    kernel: KernelFn::ExpNeg(8.0),
+                    unit_size: u,
+                    ..Default::default()
+                }),
             )
         });
-        let (mu, t) = run_barycenter(&sf, &mesh, iters);
+        let sf = sf?;
+        let (mu, t) = run_barycenter(sf.as_ref(), &mesh, iters);
         println!("{:>10} {:>12.6} {:>12.2}", unit, mse(&mu, &mu_bf), t_pre + t);
     }
     Ok(())
@@ -265,25 +297,30 @@ pub fn table7(quick: bool) -> Result<()> {
     let mut mesh = if quick { icosphere(3) } else { icosphere(4) };
     mesh.normalize_unit_box();
     let n = mesh.num_verts();
-    let pc = crate::pointcloud::PointCloud::new(mesh.verts.clone());
+    let scene = Scene::from_points(crate::pointcloud::PointCloud::new(mesh.verts.clone()));
     let eps = 0.1;
     let iters = if quick { 10 } else { 30 };
     println!("{:>6} {:>12} {:>12}", "λ", "MSE vs BF", "total(s)");
     for lam_abs in [0.1, 0.3, 0.5, 0.7, 0.9] {
         let lam = lam_abs;
-        let g_eps = pc.epsilon_graph(eps, crate::pointcloud::Norm::LInf, true);
         let bf_cap = if quick { 1_500 } else { 12_000 };
         if n > bf_cap {
             println!("{lam_abs:>6}  (BF reference OOT)");
             continue;
         }
-        let bf = BruteForceDiffusion::new(&g_eps, lam);
-        let (mu_bf, _) = run_barycenter(&bf, &mesh, iters);
-        let rfd = RfDiffusion::new(
-            &pc,
-            RfdConfig { num_features: 128, epsilon: eps, lambda: lam, ..Default::default() },
-        );
-        let (mu, t) = run_barycenter(&rfd, &mesh, iters);
+        let bf =
+            prepare(&scene, &IntegratorSpec::BfDiffusion { epsilon: eps, lambda: lam })?;
+        let (mu_bf, _) = run_barycenter(bf.as_ref(), &mesh, iters);
+        let rfd = prepare(
+            &scene,
+            &IntegratorSpec::Rfd(RfdConfig {
+                num_features: 128,
+                epsilon: eps,
+                lambda: lam,
+                ..Default::default()
+            }),
+        )?;
+        let (mu, t) = run_barycenter(rfd.as_ref(), &mesh, iters);
         println!("{:>6} {:>12.6} {:>12.2}", lam_abs, mse(&mu, &mu_bf), t);
     }
     Ok(())

@@ -351,7 +351,7 @@ mod tests {
             seed: 7,
             ..Default::default()
         };
-        let rust_rfd = crate::integrators::rfd::RfDiffusion::new(&pc, cfg.clone());
+        let rust_rfd = crate::integrators::rfd::RfDiffusion::try_new(&pc, cfg.clone()).unwrap();
         let (omegas, qscale) = crate::integrators::rfd::sample_features(&cfg);
         let x = Mat::from_vec(200, 3, (0..600).map(|_| rng.gaussian()).collect());
         use crate::integrators::FieldIntegrator;

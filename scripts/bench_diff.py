@@ -1,0 +1,71 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_*.json files (criterion-lite output) by benchmark median.
+
+Usage: bench_diff.py PREVIOUS.json CURRENT.json
+
+Prints a per-benchmark table of previous/current medians and the ratio,
+flagging cases that moved more than the noise threshold. Report-only:
+always exits 0 (CI smoke budgets are too noisy to gate merges on).
+"""
+
+import json
+import sys
+
+REGRESSION = 1.25  # current/previous median above this → flagged slower
+IMPROVEMENT = 0.80  # below this → flagged faster
+
+
+def load(path):
+    with open(path) as fh:
+        doc = json.load(fh)
+    return {b["name"]: b["median_ns"] for b in doc.get("benchmarks", [])}
+
+
+def fmt_ns(ns):
+    if ns >= 1e9:
+        return f"{ns / 1e9:.2f} s"
+    if ns >= 1e6:
+        return f"{ns / 1e6:.2f} ms"
+    if ns >= 1e3:
+        return f"{ns / 1e3:.2f} µs"
+    return f"{ns:.0f} ns"
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    prev, cur = load(sys.argv[1]), load(sys.argv[2])
+    names = sorted(set(prev) | set(cur))
+    width = max((len(n) for n in names), default=4)
+    print(f"{'benchmark':<{width}}  {'previous':>12}  {'current':>12}  {'ratio':>7}  flag")
+    slower, faster = [], []
+    for name in names:
+        p, c = prev.get(name), cur.get(name)
+        if p is None:
+            print(f"{name:<{width}}  {'—':>12}  {fmt_ns(c):>12}  {'new':>7}")
+            continue
+        if c is None:
+            print(f"{name:<{width}}  {fmt_ns(p):>12}  {'—':>12}  {'gone':>7}")
+            continue
+        ratio = c / p if p > 0 else float("inf")
+        flag = ""
+        if ratio > REGRESSION:
+            flag = "SLOWER"
+            slower.append(name)
+        elif ratio < IMPROVEMENT:
+            flag = "faster"
+            faster.append(name)
+        print(f"{name:<{width}}  {fmt_ns(p):>12}  {fmt_ns(c):>12}  {ratio:>6.2f}x  {flag}")
+    print()
+    print(
+        f"{len(names)} benchmarks: {len(slower)} slower (> {REGRESSION}x), "
+        f"{len(faster)} faster (< {IMPROVEMENT}x)"
+    )
+    if slower:
+        print("slower:", ", ".join(slower))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

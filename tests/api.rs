@@ -1,0 +1,210 @@
+//! Public-API contract tests for the unified integrator lifecycle:
+//! typed `prepare` error paths, `apply_into` vs `apply` bitwise parity
+//! per backend, batched apply, workspace reuse, and the engine-level
+//! cache-key guarantees (distinct custom kernels never collide).
+
+use gfi::coordinator::Engine;
+use gfi::integrators::rfd::RfdConfig;
+use gfi::integrators::sf::SfConfig;
+use gfi::integrators::trees::TreeKind;
+use gfi::integrators::{
+    prepare, FieldIntegrator, GfiError, IntegratorSpec, KernelFn, Scene, Workspace,
+};
+use gfi::linalg::Mat;
+use gfi::util::rng::Rng;
+
+fn rand_field(n: usize, d: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_vec(n, d, (0..n * d).map(|_| rng.gaussian()).collect())
+}
+
+fn mesh_scene() -> Scene {
+    let mut mesh = gfi::mesh::icosphere(1);
+    mesh.normalize_unit_box();
+    Scene::from_mesh(&mesh)
+}
+
+fn all_backend_specs() -> Vec<IntegratorSpec> {
+    vec![
+        IntegratorSpec::Sf(SfConfig { threshold: 16, ..Default::default() }),
+        IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() }),
+        IntegratorSpec::BfSp(KernelFn::ExpNeg(2.0)),
+        IntegratorSpec::BfDiffusion { epsilon: 0.2, lambda: -0.2 },
+        IntegratorSpec::Trees { kind: TreeKind::Bartal, count: 3, lambda: 2.0, seed: 1 },
+        IntegratorSpec::AlMohy { lambda: -0.2 },
+        IntegratorSpec::Lanczos { lambda: -0.2, krylov_dim: 12 },
+        IntegratorSpec::Bader { lambda: -0.2 },
+    ]
+}
+
+/// `apply` is a thin wrapper over `apply_into`: for every backend the two
+/// paths must agree **bitwise**, including on a warm (dirty) workspace.
+#[test]
+fn apply_into_matches_apply_bitwise_per_backend() {
+    let scene = mesh_scene();
+    let n = scene.len();
+    let field = rand_field(n, 3, 7);
+    let mut ws = Workspace::new();
+    for spec in &all_backend_specs() {
+        let integ: Box<dyn FieldIntegrator> =
+            prepare(&scene, spec).unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+        let via_apply = integ.apply(&field);
+        let mut out = Mat::zeros(n, 3);
+        // Run twice on the same workspace: the second run sees recycled
+        // (previously dirty) buffers and must still match exactly.
+        integ.apply_into(&field, &mut out, &mut ws);
+        integ.apply_into(&field, &mut out, &mut ws);
+        assert_eq!(
+            via_apply.data, out.data,
+            "{spec:?}: apply vs apply_into disagree"
+        );
+    }
+}
+
+/// `apply_batch` must equal per-field `apply_into` positionally.
+#[test]
+fn apply_batch_matches_individual_applies() {
+    let scene = mesh_scene();
+    let n = scene.len();
+    let fields: Vec<Mat> = (0..3).map(|i| rand_field(n, 2, 30 + i)).collect();
+    let mut ws = Workspace::new();
+    for spec in [
+        IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() }),
+        IntegratorSpec::Sf(SfConfig { threshold: 16, ..Default::default() }),
+    ] {
+        let integ = prepare(&scene, &spec).unwrap();
+        let mut outs: Vec<Mat> = fields.iter().map(|f| Mat::zeros(n, f.cols)).collect();
+        integ.apply_batch(&fields, &mut outs, &mut ws);
+        for (f, o) in fields.iter().zip(&outs) {
+            assert_eq!(integ.apply(f).data, o.data, "{spec:?}");
+        }
+    }
+}
+
+/// A warm workspace stops allocating: repeated same-shape applies keep
+/// the allocation counter flat.
+#[test]
+fn workspace_goes_allocation_free_after_warmup() {
+    let scene = mesh_scene();
+    let n = scene.len();
+    let field = rand_field(n, 3, 9);
+    let mut out = Mat::zeros(n, 3);
+    for spec in [
+        IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() }),
+        IntegratorSpec::Sf(SfConfig { threshold: 16, ..Default::default() }),
+        IntegratorSpec::Trees { kind: TreeKind::Mst, count: 2, lambda: 1.0, seed: 0 },
+    ] {
+        let integ = prepare(&scene, &spec).unwrap();
+        let mut ws = Workspace::new();
+        integ.apply_into(&field, &mut out, &mut ws);
+        let warm = ws.allocations();
+        for _ in 0..3 {
+            integ.apply_into(&field, &mut out, &mut ws);
+        }
+        assert_eq!(ws.allocations(), warm, "{spec:?} allocated scratch after warmup");
+    }
+}
+
+/// Graph-needing backends on a graph-less cloud report `MissingGraph`.
+#[test]
+fn graph_backends_fail_cleanly_without_graph() {
+    let mut rng = Rng::new(1);
+    let scene = Scene::from_points(gfi::pointcloud::random_cloud(25, &mut rng));
+    for spec in [
+        IntegratorSpec::Sf(SfConfig::default()),
+        IntegratorSpec::BfSp(KernelFn::ExpNeg(1.0)),
+        IntegratorSpec::Trees { kind: TreeKind::Frt, count: 2, lambda: 1.0, seed: 0 },
+        IntegratorSpec::AlMohy { lambda: -0.1 },
+        IntegratorSpec::Lanczos { lambda: -0.1, krylov_dim: 8 },
+        IntegratorSpec::Bader { lambda: -0.1 },
+    ] {
+        match prepare(&scene, &spec).err() {
+            Some(GfiError::MissingGraph { .. }) => {}
+            other => panic!("{spec:?}: expected MissingGraph, got {other:?}"),
+        }
+    }
+}
+
+/// An empty cloud is rejected before any backend code runs.
+#[test]
+fn empty_cloud_is_rejected() {
+    let scene = Scene::from_points(gfi::pointcloud::PointCloud::new(Vec::new()));
+    for spec in all_backend_specs() {
+        match prepare(&scene, &spec).err() {
+            Some(GfiError::EmptyScene) => {}
+            other => panic!("{spec:?}: expected EmptyScene, got {other:?}"),
+        }
+    }
+}
+
+/// Engine-level: mismatched field dimensions come back as the typed
+/// `FieldShape` error (message names both sizes), not a panic.
+#[test]
+fn engine_rejects_mismatched_field_dims() {
+    let engine = Engine::new(None);
+    let id = engine.register_mesh(gfi::mesh::icosphere(1), "s");
+    let n = engine.cloud(id).unwrap().scene.len();
+    let bad = Mat::zeros(n + 1, 3);
+    let err = engine
+        .integrate(id, &IntegratorSpec::Rfd(RfdConfig::default()), &bad)
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains(&format!("{}", n + 1)) && msg.contains(&format!("{n}")),
+        "unhelpful dim error: {msg}"
+    );
+}
+
+/// Engine-level: two *distinct* custom kernels on the same cloud must not
+/// share a cache entry (the seed keyed every custom kernel as "Custom").
+#[test]
+fn engine_distinguishes_custom_kernels() {
+    let engine = Engine::new(None);
+    let id = engine.register_mesh(gfi::mesh::icosphere(1), "s");
+    let n = engine.cloud(id).unwrap().scene.len();
+    let field = rand_field(n, 1, 4);
+    let k_wide = IntegratorSpec::BfSp(KernelFn::custom("wide", |x| 1.0 / (1.0 + x)));
+    let k_narrow =
+        IntegratorSpec::BfSp(KernelFn::custom("narrow", |x| (-10.0 * x).exp()));
+    let (out_wide, _) = engine.integrate(id, &k_wide, &field).unwrap();
+    let (out_narrow, info) = engine.integrate(id, &k_narrow, &field).unwrap();
+    assert!(!info.cache_hit, "distinct custom kernels shared a cache entry");
+    let diff: f64 = out_wide
+        .data
+        .iter()
+        .zip(&out_narrow.data)
+        .map(|(a, b)| (a - b).abs())
+        .sum();
+    assert!(diff > 1e-9, "distinct custom kernels returned identical results");
+    // Unlabeled custom kernels are unkeyable and rejected by the engine.
+    let opaque = IntegratorSpec::BfSp(KernelFn::custom_opaque(|x| (-x).exp()));
+    assert!(engine.integrate(id, &opaque, &field).is_err());
+    // Direct prepare still works for opaque kernels (no cache involved).
+    let mut mesh = gfi::mesh::icosphere(1);
+    mesh.normalize_unit_box();
+    let scene = Scene::from_mesh(&mesh);
+    let opaque_direct =
+        prepare(&scene, &IntegratorSpec::BfSp(KernelFn::custom_opaque(|x| (-x).exp())));
+    assert!(opaque_direct.is_ok());
+}
+
+/// Engine-level: `integrate_into` reuses a right-sized caller buffer and
+/// reshapes a wrong-sized one in place.
+#[test]
+fn engine_integrate_into_handles_caller_buffers() {
+    let engine = Engine::new(None);
+    let id = engine.register_mesh(gfi::mesh::icosphere(1), "s");
+    let n = engine.cloud(id).unwrap().scene.len();
+    let field = rand_field(n, 2, 5);
+    let spec = IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() });
+    // Wrong-shaped buffer gets reshaped.
+    let mut out = Mat::zeros(3, 7);
+    engine.integrate_into(id, &spec, &field, &mut out).unwrap();
+    assert_eq!((out.rows, out.cols), (n, 2));
+    // Right-shaped buffer is reused (no reallocation).
+    let ptr = out.data.as_ptr();
+    engine.integrate_into(id, &spec, &field, &mut out).unwrap();
+    assert_eq!(out.data.as_ptr(), ptr);
+    let (want, _) = engine.integrate(id, &spec, &field).unwrap();
+    assert_eq!(want.data, out.data);
+}

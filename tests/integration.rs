@@ -1,11 +1,12 @@
 //! Cross-module integration + randomized property tests (proptest-style:
 //! seeded random instances sweeping structural parameters; the offline
 //! build has no proptest crate, so cases are explicit seed loops).
+//! Every integrator is built through the unified
+//! `prepare(&Scene, &IntegratorSpec)` factory.
 
-use gfi::integrators::bf::BruteForceSp;
-use gfi::integrators::rfd::{RfDiffusion, RfdConfig};
-use gfi::integrators::sf::{SeparatorFactorization, SfConfig};
-use gfi::integrators::{FieldIntegrator, KernelFn};
+use gfi::integrators::rfd::RfdConfig;
+use gfi::integrators::sf::SfConfig;
+use gfi::integrators::{prepare, FieldIntegrator, IntegratorSpec, KernelFn, Scene};
 use gfi::linalg::Mat;
 use gfi::util::rng::Rng;
 use gfi::util::stats::rel_err;
@@ -15,25 +16,33 @@ fn rand_field(n: usize, d: usize, seed: u64) -> Mat {
     Mat::from_vec(n, d, (0..n * d).map(|_| rng.gaussian()).collect())
 }
 
+fn mesh_scene(mut mesh: gfi::mesh::TriMesh) -> Scene {
+    mesh.normalize_unit_box();
+    Scene::from_mesh(&mesh)
+}
+
 /// Property: every integrator is a *linear* operator —
 /// `apply(αx + βy) == α·apply(x) + β·apply(y)`.
 #[test]
 fn property_integrators_are_linear() {
-    let mut mesh = gfi::mesh::icosphere(2);
-    mesh.normalize_unit_box();
-    let g = mesh.to_graph();
-    let pc = gfi::pointcloud::PointCloud::new(mesh.verts.clone());
-    let n = g.n;
+    let scene = mesh_scene(gfi::mesh::icosphere(2));
+    let n = scene.len();
     let integrators: Vec<Box<dyn FieldIntegrator>> = vec![
-        Box::new(SeparatorFactorization::new(
-            &g,
-            SfConfig { kernel: KernelFn::ExpNeg(2.0), threshold: 64, ..Default::default() },
-        )),
-        Box::new(RfDiffusion::new(
-            &pc,
-            RfdConfig { num_features: 16, ..Default::default() },
-        )),
-        Box::new(BruteForceSp::new(&g, &KernelFn::ExpNeg(2.0))),
+        prepare(
+            &scene,
+            &IntegratorSpec::Sf(SfConfig {
+                kernel: KernelFn::ExpNeg(2.0),
+                threshold: 64,
+                ..Default::default()
+            }),
+        )
+        .unwrap(),
+        prepare(
+            &scene,
+            &IntegratorSpec::Rfd(RfdConfig { num_features: 16, ..Default::default() }),
+        )
+        .unwrap(),
+        prepare(&scene, &IntegratorSpec::BfSp(KernelFn::ExpNeg(2.0))).unwrap(),
     ];
     for seed in 0..5u64 {
         let x = rand_field(n, 2, seed);
@@ -56,14 +65,15 @@ fn property_integrators_are_linear() {
 /// `⟨apply(x), y⟩ == ⟨x, apply(y)⟩`.
 #[test]
 fn property_kernel_symmetry() {
-    let mut mesh = gfi::mesh::torus(14, 8, 1.0, 0.35);
-    mesh.normalize_unit_box();
-    let g = mesh.to_graph();
-    let pc = gfi::pointcloud::PointCloud::new(mesh.verts.clone());
-    let n = g.n;
+    let scene = mesh_scene(gfi::mesh::torus(14, 8, 1.0, 0.35));
+    let n = scene.len();
     let integrators: Vec<Box<dyn FieldIntegrator>> = vec![
-        Box::new(BruteForceSp::new(&g, &KernelFn::ExpNeg(2.0))),
-        Box::new(RfDiffusion::new(&pc, RfdConfig { num_features: 8, ..Default::default() })),
+        prepare(&scene, &IntegratorSpec::BfSp(KernelFn::ExpNeg(2.0))).unwrap(),
+        prepare(
+            &scene,
+            &IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() }),
+        )
+        .unwrap(),
     ];
     for seed in 0..5u64 {
         let x = rand_field(n, 1, seed);
@@ -86,24 +96,23 @@ fn property_kernel_symmetry() {
 /// Property: SF error decreases (weakly) as the separator budget grows.
 #[test]
 fn property_sf_separator_budget_monotonic_ish() {
-    let mut mesh = gfi::mesh::icosphere(2);
-    mesh.normalize_unit_box();
-    let g = mesh.to_graph();
-    let n = g.n;
-    let bf = BruteForceSp::new(&g, &KernelFn::ExpNeg(2.0));
+    let scene = mesh_scene(gfi::mesh::icosphere(2));
+    let n = scene.len();
+    let bf = prepare(&scene, &IntegratorSpec::BfSp(KernelFn::ExpNeg(2.0))).unwrap();
     let x = rand_field(n, 3, 5);
     let exact = bf.apply(&x);
     let err_at = |sep: usize| {
-        let sf = SeparatorFactorization::new(
-            &g,
-            SfConfig {
+        let sf = prepare(
+            &scene,
+            &IntegratorSpec::Sf(SfConfig {
                 kernel: KernelFn::ExpNeg(2.0),
                 threshold: 32,
                 separator_size: sep,
                 seed: 11,
                 ..Default::default()
-            },
-        );
+            }),
+        )
+        .unwrap();
         rel_err(&sf.apply(&x).data, &exact.data)
     };
     let coarse = err_at(2);
@@ -131,24 +140,25 @@ fn property_sf_robust_on_random_graphs() {
                 edges.push((a, b, rng.uniform_in(0.1, 2.0)));
             }
         }
-        let g = gfi::graph::CsrGraph::from_edges(n, &edges);
-        let sf = SeparatorFactorization::new(
-            &g,
-            SfConfig {
+        let scene = Scene::from_graph(gfi::graph::CsrGraph::from_edges(n, &edges));
+        let sf = prepare(
+            &scene,
+            &IntegratorSpec::Sf(SfConfig {
                 kernel: KernelFn::ExpNeg(1.0),
                 unit_size: 0.05,
                 threshold: 16,
                 separator_size: 4,
                 seed,
-            },
-        );
+            }),
+        )
+        .unwrap();
         let x = rand_field(n, 2, seed);
         let out = sf.apply(&x);
         assert!(out.data.iter().all(|v| v.is_finite()), "seed {seed}");
         // Sanity vs exact. Random (non-mesh) graphs are outside SF's
         // bounded-genus design envelope — the guard here is "not garbage",
         // not mesh-grade accuracy.
-        let bf = BruteForceSp::new(&g, &KernelFn::ExpNeg(1.0));
+        let bf = prepare(&scene, &IntegratorSpec::BfSp(KernelFn::ExpNeg(1.0))).unwrap();
         let e = rel_err(&out.data, &bf.apply(&x).data);
         assert!(e < 0.9, "seed {seed}: rel err {e}");
     }
@@ -163,22 +173,24 @@ fn property_rfd_error_decreases_with_features() {
     let pc = gfi::pointcloud::random_cloud(80, &mut rng);
     let w = pc.dense_adjacency(0.25, gfi::pointcloud::Norm::LInf, true);
     let dense = gfi::integrators::bf::BruteForceDiffusion::from_dense(&w, 0.4);
+    let scene = Scene::from_points(pc);
     let x = rand_field(80, 2, 10);
     let exact = dense.apply(&x);
     let err_at = |m: usize| {
         // Average over seeds to smooth RF noise.
         let mut acc = 0.0;
         for seed in 0..3 {
-            let rfd = RfDiffusion::new(
-                &pc,
-                RfdConfig {
+            let rfd = prepare(
+                &scene,
+                &IntegratorSpec::Rfd(RfdConfig {
                     num_features: m,
                     epsilon: 0.25,
                     lambda: 0.4,
                     seed,
                     ..Default::default()
-                },
-            );
+                }),
+            )
+            .unwrap();
             acc += rel_err(&rfd.apply(&x).data, &exact.data);
         }
         acc / 3.0
@@ -196,14 +208,16 @@ fn integration_engine_matches_direct() {
     let mut mesh = gfi::mesh::icosphere(2);
     mesh.normalize_unit_box();
     let id = engine.register_mesh(mesh.clone(), "m");
-    let g = mesh.to_graph();
-    let n = g.n;
+    let scene = Scene::from_mesh(&mesh);
+    let n = scene.len();
     let x = rand_field(n, 3, 20);
-    let cfg = SfConfig { kernel: KernelFn::ExpNeg(3.0), seed: 2, ..Default::default() };
-    let direct = SeparatorFactorization::new(&g, cfg.clone()).apply(&x);
-    let (via_engine, _) = engine
-        .integrate(id, &gfi::coordinator::Backend::Sf(cfg), &x)
-        .unwrap();
+    let spec = IntegratorSpec::Sf(SfConfig {
+        kernel: KernelFn::ExpNeg(3.0),
+        seed: 2,
+        ..Default::default()
+    });
+    let direct = prepare(&scene, &spec).unwrap().apply(&x);
+    let (via_engine, _) = engine.integrate(id, &spec, &x).unwrap();
     let e = rel_err(&via_engine.data, &direct.data);
     assert!(e < 1e-12, "engine route differs: {e}");
 }
@@ -213,19 +227,20 @@ fn integration_engine_matches_direct() {
 fn integration_barycenter_sf_close_to_bf() {
     let mut mesh = gfi::mesh::icosphere(2);
     mesh.normalize_unit_box();
-    let g = mesh.to_graph();
-    let n = g.n;
+    let scene = Scene::from_mesh(&mesh);
+    let n = scene.len();
     let area = mesh.vertex_areas();
-    let bf = BruteForceSp::new(&g, &KernelFn::ExpNeg(8.0));
+    let bf = prepare(&scene, &IntegratorSpec::BfSp(KernelFn::ExpNeg(8.0))).unwrap();
     let fm_bf = |x: &Mat| bf.apply(x);
     let mus = gfi::ot::concentrated_distributions(n, &[0, n / 2], &fm_bf);
     let cfg = gfi::ot::BarycenterConfig { max_iter: 25, ..Default::default() };
     let mu_bf =
         gfi::ot::wasserstein_barycenter(&mus, &area, &[0.5, 0.5], &fm_bf, &cfg);
-    let sf = SeparatorFactorization::new(
-        &g,
-        SfConfig { kernel: KernelFn::ExpNeg(8.0), ..Default::default() },
-    );
+    let sf = prepare(
+        &scene,
+        &IntegratorSpec::Sf(SfConfig { kernel: KernelFn::ExpNeg(8.0), ..Default::default() }),
+    )
+    .unwrap();
     let fm_sf = |x: &Mat| sf.apply(x);
     let mu_sf =
         gfi::ot::wasserstein_barycenter(&mus, &area, &[0.5, 0.5], &fm_sf, &cfg);
