@@ -1,20 +1,25 @@
 //! Coordinator + runtime benchmarks: request-path latency of the cached
 //! integrator route (both the allocating `integrate` and the
 //! allocation-free `integrate_into`), the PJRT artifact route (when
-//! artifacts exist), and batcher throughput.
+//! artifacts exist), batcher throughput, and the bounded-cache churn
+//! path (eviction + transparent re-prepare on every request).
+//!
+//! Writes `BENCH_coordinator.json` so CI's perf trajectory tracks the
+//! serving path alongside `BENCH_integrators.json`.
 
 use gfi::coordinator::batcher::{Batcher, BatcherConfig};
-use gfi::coordinator::Engine;
+use gfi::coordinator::{Engine, EngineConfig};
 use gfi::integrators::rfd::RfdConfig;
 use gfi::integrators::sf::SfConfig;
 use gfi::integrators::IntegratorSpec;
 use gfi::linalg::Mat;
-use gfi::util::bench::Bench;
+use gfi::util::bench::{write_json, Bench, BenchResult};
 use gfi::util::rng::Rng;
 use std::sync::Arc;
 
 fn main() {
-    let bench = Bench::new().with_budget(2.0).with_max_iters(20);
+    let bench = Bench::new().with_budget(2.0).with_max_iters(20).with_env_overrides();
+    let mut results: Vec<BenchResult> = Vec::new();
     let artifacts = std::path::Path::new("artifacts");
     let engine = Arc::new(Engine::new(
         artifacts.join("manifest.json").exists().then_some(artifacts),
@@ -34,31 +39,31 @@ fn main() {
     // Warm the caches, then measure the request path.
     let _ = engine.integrate(id, &sf, &field).unwrap();
     let _ = engine.integrate(id, &rfd, &field).unwrap();
-    bench.run(&format!("engine/sf-cached/n={n}"), || {
+    results.push(bench.run(&format!("engine/sf-cached/n={n}"), || {
         engine.integrate(id, &sf, &field).unwrap()
-    });
-    bench.run(&format!("engine/rfd-cached/n={n}"), || {
+    }));
+    results.push(bench.run(&format!("engine/rfd-cached/n={n}"), || {
         engine.integrate(id, &rfd, &field).unwrap()
-    });
+    }));
     // Allocation-free serving path: caller-held output, pooled workspace.
     let mut out = Mat::zeros(n, 3);
-    bench.run(&format!("engine/sf-cached-into/n={n}"), || {
+    results.push(bench.run(&format!("engine/sf-cached-into/n={n}"), || {
         engine.integrate_into(id, &sf, &field, &mut out).unwrap()
-    });
-    bench.run(&format!("engine/rfd-cached-into/n={n}"), || {
+    }));
+    results.push(bench.run(&format!("engine/rfd-cached-into/n={n}"), || {
         engine.integrate_into(id, &rfd, &field, &mut out).unwrap()
-    });
+    }));
     if engine.has_pjrt() {
         let _ = engine.integrate(id, &rfd_pjrt, &field).unwrap();
-        bench.run(&format!("engine/rfd-pjrt/n={n}"), || {
+        results.push(bench.run(&format!("engine/rfd-pjrt/n={n}"), || {
             engine.integrate(id, &rfd_pjrt, &field).unwrap()
-        });
+        }));
     }
 
     // Batcher throughput: 8 concurrent single-column requests.
     let batcher = Batcher::new(engine.clone(), BatcherConfig::default());
     let col = Mat::from_vec(n, 1, (0..n).map(|_| rng.gaussian()).collect());
-    bench.run("batcher/8x1col-rfd", || {
+    results.push(bench.run("batcher/8x1col-rfd", || {
         std::thread::scope(|s| {
             let hs: Vec<_> = (0..8)
                 .map(|_| {
@@ -70,5 +75,39 @@ fn main() {
                 .collect();
             hs.into_iter().map(|h| h.join().unwrap()).count()
         })
-    });
+    }));
+
+    // Cache churn: more distinct clouds than the byte budget holds, so
+    // every request pays eviction + transparent re-prepare. The delta vs
+    // engine/rfd-cached is the full cost of a cache lifecycle turn.
+    {
+        let probe = Engine::new(None);
+        let pid = probe.register_mesh(gfi::mesh::icosphere(2), "probe");
+        let pn = probe.cloud(pid).unwrap().scene.len();
+        let pfield = Mat::from_vec(pn, 3, (0..pn * 3).map(|_| rng.gaussian()).collect());
+        probe.integrate(pid, &rfd, &pfield).unwrap();
+        // Budget for ~2 of the 4 clouds' prepared integrators.
+        let churn_engine = EngineConfig::default()
+            .max_resident_bytes(probe.resident_bytes() * 5 / 2)
+            .build();
+        let ids: Vec<u64> = (0..4)
+            .map(|i| {
+                churn_engine.register_mesh(gfi::mesh::icosphere(2), &format!("churn-{i}"))
+            })
+            .collect();
+        let mut turn = 0usize;
+        results.push(bench.run(&format!("engine/cache_churn/n={pn}"), || {
+            let cid = ids[turn % ids.len()];
+            turn += 1;
+            churn_engine.integrate(cid, &rfd, &pfield).unwrap()
+        }));
+        let stats = churn_engine.cache_stats();
+        println!(
+            "cache_churn: {} evictions, resident {} bytes",
+            stats.integrators.evictions,
+            churn_engine.resident_bytes()
+        );
+    }
+
+    write_json("BENCH_coordinator.json", &results).expect("write BENCH_coordinator.json");
 }

@@ -7,11 +7,18 @@
 //! and L2 JAX pipeline execute inside the artifact the L3 Rust
 //! coordinator serves.
 //!
+//! Phase 2 is a **bounded-memory churn demo**: a second engine with a
+//! deliberately tiny `max_resident_bytes` budget is hammered by
+//! concurrent clients across more distinct `(cloud, spec)` pairs than
+//! the cache can hold, proving via the `stats` op that resident bytes
+//! stay ≤ budget while every request still succeeds (evicted
+//! preparations rebuild transparently).
+//!
 //! ```sh
 //! make artifacts && cargo run --release --example serve_pipeline
 //! ```
 
-use gfi::coordinator::{server, Engine};
+use gfi::coordinator::{server, Engine, EngineConfig};
 use gfi::integrators::{prepare, FieldIntegrator, IntegratorSpec, KernelFn};
 use gfi::linalg::Mat;
 use gfi::util::rng::Rng;
@@ -143,6 +150,125 @@ fn main() -> gfi::util::error::Result<()> {
     ctl.send(r#"{"op":"shutdown"}"#)?;
     server_thread.join().unwrap()?;
     println!("E2E pipeline OK");
+
+    churn_phase()?;
+    println!("E2E pipeline + bounded-memory churn OK");
+    Ok(())
+}
+
+/// Phase 2: multi-client load generator against a capacity-constrained
+/// engine — more distinct `(cloud, spec)` pairs than the budget holds,
+/// demonstrating bounded memory under churn.
+fn churn_phase() -> gfi::util::error::Result<()> {
+    const CHURN_CLIENTS: usize = 6;
+    const CHURN_REQUESTS: usize = 40;
+    const CHURN_CLOUDS: usize = 5;
+
+    // Probe the resident cost of one prepared RFD integrator on the
+    // workload mesh, then budget the engine to hold only ~3 of the
+    // 5 clouds × 2 specs = 10 distinct prepared artifacts.
+    let probe = Engine::new(None);
+    let pid = probe.register_mesh(gfi::mesh::icosphere(2), "probe");
+    let pn = probe.cloud(pid)?.scene.len();
+    let probe_field = Mat::from_vec(pn, 1, vec![1.0; pn]);
+    probe.integrate(
+        pid,
+        &IntegratorSpec::Rfd(gfi::integrators::rfd::RfdConfig {
+            num_features: 16,
+            ..Default::default()
+        }),
+        &probe_field,
+    )?;
+    let budget = probe.resident_bytes() * 7 / 2;
+    println!("\n[churn] budget = {budget} bytes (~3.5 prepared integrators)");
+
+    let engine = Arc::new(
+        EngineConfig::default()
+            .shards(4)
+            .max_resident_bytes(budget)
+            .build(),
+    );
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let eng_server = engine.clone();
+    let server_thread = std::thread::spawn(move || {
+        server::serve_with(
+            eng_server,
+            "127.0.0.1:0",
+            server::ServerConfig { max_connections: CHURN_CLIENTS + 2 },
+            move |a| addr_tx.send(a).unwrap(),
+        )
+    });
+    let addr = addr_rx.recv()?;
+
+    let mut ctl = Client::connect(addr)?;
+    let mut cloud_ns = Vec::new();
+    for c in 0..CHURN_CLOUDS {
+        let resp = ctl.send(&format!(
+            r#"{{"op":"register_mesh","kind":"icosphere","param":2,"name":"churn-{c}"}}"#
+        ))?;
+        cloud_ns.push((
+            resp.get("id").unwrap().as_usize().unwrap(),
+            resp.get("n").unwrap().as_usize().unwrap(),
+        ));
+    }
+
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        let cloud_ns = &cloud_ns;
+        let handles: Vec<_> = (0..CHURN_CLIENTS)
+            .map(|cid| {
+                s.spawn(move || {
+                    let mut client = Client::connect(addr).expect("connect");
+                    let mut rng = Rng::new(cid as u64 + 900);
+                    for r in 0..CHURN_REQUESTS {
+                        // 5 clouds × 2 seeds → 10 distinct cache keys
+                        // against a ~3.5-entry budget: constant churn.
+                        let (cloud, n) = cloud_ns[(cid + r) % cloud_ns.len()];
+                        let seed = r % 2;
+                        let field: Vec<String> =
+                            (0..n).map(|_| format!("{:.5}", rng.gaussian())).collect();
+                        let req = format!(
+                            r#"{{"op":"integrate","cloud":{cloud},"backend":"rfd","field":[{}],"d":1,"m":16,"seed":{seed}}}"#,
+                            field.join(",")
+                        );
+                        let resp = client.send(&req).expect("integrate");
+                        assert_eq!(
+                            resp.get("ok").and_then(|j| j.as_bool()),
+                            Some(true),
+                            "{resp}"
+                        );
+                        assert_eq!(
+                            resp.get("result").unwrap().as_arr().unwrap().len(),
+                            n
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let stats = ctl.send(r#"{"op":"stats"}"#)?;
+    let resident = stats.get("resident_bytes").unwrap().as_f64().unwrap() as u64;
+    let integ = stats.get("cache").unwrap().get("integrators").unwrap();
+    let evictions = integ.get("evictions").unwrap().as_usize().unwrap();
+    let hits = integ.get("hits").unwrap().as_usize().unwrap();
+    let total = CHURN_CLIENTS * CHURN_REQUESTS;
+    println!(
+        "[churn] {total} requests in {elapsed:.2}s → {:.1} req/s; resident {resident}/{budget} \
+         bytes, {evictions} evictions, {hits} hits",
+        total as f64 / elapsed
+    );
+    assert!(
+        resident <= budget,
+        "bounded engine leaked: resident {resident} > budget {budget}"
+    );
+    assert!(evictions > 0, "churn workload produced no evictions");
+    ctl.send(r#"{"op":"shutdown"}"#)?;
+    server_thread.join().unwrap()?;
     Ok(())
 }
 

@@ -37,7 +37,10 @@ pub struct Batcher {
 /// Batching window and column cap.
 #[derive(Clone, Debug)]
 pub struct BatcherConfig {
+    /// How long the worker waits after the first request to collect a
+    /// batch before executing it.
     pub window: Duration,
+    /// Maximum merged field columns per PJRT artifact dispatch.
     pub max_columns: usize,
 }
 
@@ -48,6 +51,7 @@ impl Default for BatcherConfig {
 }
 
 impl Batcher {
+    /// Spawns the batching worker thread over `engine`.
     pub fn new(engine: Arc<Engine>, cfg: BatcherConfig) -> Self {
         let (tx, rx) = mpsc::channel::<Pending>();
         let worker = std::thread::Builder::new()

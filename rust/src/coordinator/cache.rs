@@ -1,0 +1,430 @@
+//! Sharded, capacity-bounded, cost-aware LRU cache — the engine's
+//! artifact lifecycle.
+//!
+//! The paper's premise (and the Fast Tree-Field Integrators follow-up,
+//! arXiv 2406.15881) is that expensive graph pre-processings are
+//! *reusable*: separator trees, random-feature cores, dense kernels are
+//! paid once and amortized over many requests. At serving scale that only
+//! works if cached artifacts have a real lifecycle — a long-running
+//! engine must bound what it keeps resident and evict cold entries, not
+//! leak every `(cloud, spec)` pair forever. This module provides that
+//! lifecycle:
+//!
+//! * **Sharded** — keys are hashed to one of N shards, each behind its
+//!   own mutex, so concurrent serving traffic on different keys never
+//!   contends on a single global lock. (The exception is eviction
+//!   pressure: finding the global LRU victim scans the shards one at a
+//!   time, so a budget-saturated cache pays an O(entries) sweep per
+//!   eviction — exact LRU was chosen over sampled eviction because the
+//!   entry counts here are small; revisit if budgets ever hold
+//!   thousands of integrators.)
+//! * **Cost-aware** — entries are weighted by estimated resident bytes
+//!   (a BF dense `n×n` kernel weighs ~`8n²`; RFD's low-rank factors only
+//!   `~32nm`), via [`FieldIntegrator::resident_bytes`]. The budget bounds
+//!   *bytes*, not entry counts, so one dense brute-force kernel can cost
+//!   as much as hundreds of tree ensembles.
+//! * **Bounded** — a global byte budget ([`CacheConfig::max_weight_bytes`])
+//!   and entry cap ([`CacheConfig::max_entries`]) are enforced on every
+//!   insert by evicting least-recently-used entries (LRU is global:
+//!   recency stamps come from one shared clock, so eviction picks the
+//!   coldest entry across all shards, not just the inserting shard).
+//! * **Observable** — hit/miss/eviction/rejection counters and live
+//!   occupancy are exported as [`CacheStats`] and surfaced through
+//!   [`crate::coordinator::metrics`] in the server's `stats` op.
+//!
+//! Eviction is transparent to callers: the engine treats an evicted
+//! integrator exactly like a never-prepared one and rebuilds it on the
+//! next request (`cache_hit: false`), so bounded memory costs repeat
+//! pre-processing, never correctness.
+//!
+//! [`FieldIntegrator::resident_bytes`]: crate::integrators::FieldIntegrator::resident_bytes
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Capacity/topology configuration for one [`ShardedCache`].
+#[derive(Clone, Debug)]
+pub struct CacheConfig {
+    /// Number of independently locked shards (clamped to ≥ 1). More
+    /// shards → less lock contention; LRU stays global either way.
+    pub shards: usize,
+    /// Total resident-byte budget across all shards. Inserting past it
+    /// evicts LRU entries until the sum of entry weights fits again.
+    /// `u64::MAX` = unbounded.
+    pub max_weight_bytes: u64,
+    /// Maximum number of entries across all shards. `usize::MAX` =
+    /// unbounded.
+    pub max_entries: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig { shards: 8, max_weight_bytes: u64::MAX, max_entries: usize::MAX }
+    }
+}
+
+/// Counter/occupancy snapshot of one cache (see the module docs for the
+/// lifecycle the counters trace).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    /// Live entries across all shards.
+    pub entries: usize,
+    /// Sum of live entry weights (estimated resident bytes).
+    pub weight_bytes: u64,
+    /// Configured byte budget (`u64::MAX` = unbounded).
+    pub capacity_bytes: u64,
+    /// Configured entry cap (`usize::MAX` = unbounded).
+    pub max_entries: usize,
+    /// `get` calls that found a live entry.
+    pub hits: u64,
+    /// `get` calls that found nothing (includes post-eviction rebuilds).
+    pub misses: u64,
+    /// Entries removed by capacity pressure (not explicit `remove`s).
+    pub evictions: u64,
+    /// Inserts refused because a single entry outweighed the whole
+    /// budget (the caller keeps the value; it is just never cached).
+    pub rejected: u64,
+}
+
+/// What an [`ShardedCache::insert`] did.
+#[derive(Debug)]
+pub struct InsertOutcome<K> {
+    /// `false` iff the entry alone outweighs the configured budget and
+    /// was not stored (the caller's value still works — uncached).
+    pub cached: bool,
+    /// Keys evicted to make room (empty on the fast path). Callers that
+    /// maintain derived state (the engine's per-cloud artifact caches)
+    /// cascade removals from this list.
+    pub evicted: Vec<K>,
+}
+
+struct Entry<V> {
+    value: V,
+    weight: u64,
+    last_used: u64,
+}
+
+/// A sharded, byte-budgeted LRU map. `V` is cloned out on `get` — use
+/// `Arc`s for heavyweight values.
+pub struct ShardedCache<K, V> {
+    shards: Vec<Mutex<HashMap<K, Entry<V>>>>,
+    cfg: CacheConfig,
+    /// Global recency clock: every touch stamps the entry, so LRU
+    /// comparisons are meaningful across shards.
+    clock: AtomicU64,
+    weight: AtomicU64,
+    entries: AtomicUsize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl<K: Hash + Eq + Clone, V: Clone> ShardedCache<K, V> {
+    /// Creates an empty cache with `cfg.shards` independent shards.
+    pub fn new(cfg: CacheConfig) -> Self {
+        let n = cfg.shards.max(1);
+        ShardedCache {
+            shards: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
+            cfg: CacheConfig { shards: n, ..cfg },
+            clock: AtomicU64::new(0),
+            weight: AtomicU64::new(0),
+            entries: AtomicUsize::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_index(&self, k: &K) -> usize {
+        let mut h = DefaultHasher::new();
+        k.hash(&mut h);
+        (h.finish() as usize) % self.shards.len()
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Looks up `k`, refreshing its recency on a hit. Counts a hit or a
+    /// miss either way.
+    pub fn get(&self, k: &K) -> Option<V> {
+        let stamp = self.tick();
+        let mut map = self.shards[self.shard_index(k)].lock().unwrap();
+        match map.get_mut(k) {
+            Some(e) => {
+                e.last_used = stamp;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.value.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Peeks without touching recency or hit/miss counters (used by
+    /// tests and introspection).
+    pub fn peek(&self, k: &K) -> Option<V> {
+        let map = self.shards[self.shard_index(k)].lock().unwrap();
+        map.get(k).map(|e| e.value.clone())
+    }
+
+    /// Inserts `k → v` charged at `weight` bytes, then evicts LRU
+    /// entries (never the one just inserted) until both budgets hold.
+    /// An entry that alone exceeds the byte budget is rejected
+    /// (`cached: false`) rather than evicting the whole cache for a
+    /// value that can never fit.
+    pub fn insert(&self, k: K, v: V, weight: u64) -> InsertOutcome<K> {
+        if weight > self.cfg.max_weight_bytes || self.cfg.max_entries == 0 {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return InsertOutcome { cached: false, evicted: Vec::new() };
+        }
+        {
+            let stamp = self.tick();
+            let mut map = self.shards[self.shard_index(&k)].lock().unwrap();
+            if let Some(old) = map.insert(k.clone(), Entry { value: v, weight, last_used: stamp })
+            {
+                self.weight.fetch_sub(old.weight, Ordering::Relaxed);
+            } else {
+                self.entries.fetch_add(1, Ordering::Relaxed);
+            }
+            self.weight.fetch_add(weight, Ordering::Relaxed);
+        }
+        let mut evicted = Vec::new();
+        while self.weight.load(Ordering::Relaxed) > self.cfg.max_weight_bytes
+            || self.entries.load(Ordering::Relaxed) > self.cfg.max_entries
+        {
+            match self.evict_lru(&k) {
+                Some(victim) => evicted.push(victim),
+                None => break, // nothing evictable left besides `k`
+            }
+        }
+        InsertOutcome { cached: true, evicted }
+    }
+
+    /// Removes the globally least-recently-used entry, skipping
+    /// `protect`; returns its key, or `None` when nothing evictable
+    /// remains. Scans each shard for its local minimum, then removes
+    /// the global minimum — O(entries) per eviction, the price of exact
+    /// global LRU; it only runs while the cache is over budget, the
+    /// shard locks are taken one at a time, and losing a removal race
+    /// rescans rather than giving up (so `insert`'s budget loop never
+    /// terminates early while evictable entries remain).
+    fn evict_lru(&self, protect: &K) -> Option<K> {
+        loop {
+            let mut best: Option<(usize, K, u64)> = None;
+            for (i, shard) in self.shards.iter().enumerate() {
+                let map = shard.lock().unwrap();
+                for (k, e) in map.iter() {
+                    if k == protect {
+                        continue;
+                    }
+                    if best.as_ref().map(|(_, _, lu)| e.last_used < *lu).unwrap_or(true) {
+                        best = Some((i, k.clone(), e.last_used));
+                    }
+                }
+            }
+            let (i, key, _) = best?;
+            let removed = self.shards[i].lock().unwrap().remove(&key);
+            if let Some(e) = removed {
+                self.weight.fetch_sub(e.weight, Ordering::Relaxed);
+                self.entries.fetch_sub(1, Ordering::Relaxed);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+                return Some(key);
+            }
+            // The victim vanished under a concurrent remove — rescan.
+        }
+    }
+
+    /// Explicitly removes `k` (not counted as an eviction). Returns
+    /// whether an entry existed.
+    pub fn remove(&self, k: &K) -> bool {
+        let removed = self.shards[self.shard_index(k)].lock().unwrap().remove(k);
+        if let Some(e) = removed {
+            self.weight.fetch_sub(e.weight, Ordering::Relaxed);
+            self.entries.fetch_sub(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Removes every entry whose key matches `pred` (explicit removals,
+    /// not evictions); returns how many were dropped. Used to cascade
+    /// `unregister_cloud` into the derived artifact caches.
+    pub fn remove_if(&self, pred: impl Fn(&K) -> bool) -> usize {
+        let mut dropped = 0;
+        for shard in &self.shards {
+            let mut map = shard.lock().unwrap();
+            let victims: Vec<K> = map.keys().filter(|k| pred(k)).cloned().collect();
+            for k in victims {
+                if let Some(e) = map.remove(&k) {
+                    self.weight.fetch_sub(e.weight, Ordering::Relaxed);
+                    self.entries.fetch_sub(1, Ordering::Relaxed);
+                    dropped += 1;
+                }
+            }
+        }
+        dropped
+    }
+
+    /// Live entry count across all shards.
+    pub fn len(&self) -> usize {
+        self.entries.load(Ordering::Relaxed)
+    }
+
+    /// Whether the cache currently holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Sum of live entry weights (estimated resident bytes).
+    pub fn weight_bytes(&self) -> u64 {
+        self.weight.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of occupancy and lifetime counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            entries: self.len(),
+            weight_bytes: self.weight_bytes(),
+            capacity_bytes: self.cfg.max_weight_bytes,
+            max_entries: self.cfg.max_entries,
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn cache(max_bytes: u64, max_entries: usize) -> ShardedCache<u64, Arc<Vec<u8>>> {
+        ShardedCache::new(CacheConfig {
+            shards: 4,
+            max_weight_bytes: max_bytes,
+            max_entries,
+        })
+    }
+
+    fn val(n: usize) -> Arc<Vec<u8>> {
+        Arc::new(vec![0u8; n])
+    }
+
+    #[test]
+    fn get_counts_hits_and_misses() {
+        let c = cache(u64::MAX, usize::MAX);
+        assert!(c.get(&1).is_none());
+        c.insert(1, val(10), 10);
+        assert!(c.get(&1).is_some());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries, s.weight_bytes), (1, 1, 1, 10));
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_globally() {
+        let c = cache(100, usize::MAX);
+        for k in 0..10u64 {
+            c.insert(k, val(1), 20); // 5 fit
+        }
+        assert!(c.weight_bytes() <= 100, "weight {}", c.weight_bytes());
+        assert_eq!(c.len(), 5);
+        assert_eq!(c.stats().evictions, 5);
+        // Oldest keys are gone, newest survive.
+        assert!(c.peek(&0).is_none() && c.peek(&4).is_none());
+        assert!(c.peek(&5).is_some() && c.peek(&9).is_some());
+        // Touching key 5 protects it from the next eviction round.
+        let _ = c.get(&5);
+        c.insert(100, val(1), 20);
+        assert!(c.peek(&5).is_some(), "recently used entry was evicted");
+        assert!(c.peek(&6).is_none(), "LRU entry survived");
+    }
+
+    #[test]
+    fn entry_cap_is_enforced() {
+        let c = cache(u64::MAX, 3);
+        for k in 0..8u64 {
+            c.insert(k, val(1), 1);
+        }
+        assert_eq!(c.len(), 3);
+        assert!(c.peek(&7).is_some());
+    }
+
+    #[test]
+    fn oversized_entry_is_rejected_not_cached() {
+        let c = cache(50, usize::MAX);
+        c.insert(1, val(1), 10);
+        let out = c.insert(2, val(1), 80);
+        assert!(!out.cached);
+        assert!(c.peek(&2).is_none());
+        assert!(c.peek(&1).is_some(), "rejection must not disturb live entries");
+        assert_eq!(c.stats().rejected, 1);
+    }
+
+    #[test]
+    fn replacing_a_key_updates_weight() {
+        let c = cache(u64::MAX, usize::MAX);
+        c.insert(1, val(1), 30);
+        c.insert(1, val(1), 12);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.weight_bytes(), 12);
+    }
+
+    #[test]
+    fn insert_reports_evicted_keys() {
+        let c = cache(40, usize::MAX);
+        c.insert(1, val(1), 20);
+        c.insert(2, val(1), 20);
+        let out = c.insert(3, val(1), 20);
+        assert!(out.cached);
+        assert_eq!(out.evicted, vec![1]);
+    }
+
+    #[test]
+    fn remove_and_remove_if() {
+        let c = cache(u64::MAX, usize::MAX);
+        for k in 0..6u64 {
+            c.insert(k, val(1), 5);
+        }
+        assert!(c.remove(&0));
+        assert!(!c.remove(&0));
+        assert_eq!(c.remove_if(|k| k % 2 == 1), 3); // 1, 3, 5
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.weight_bytes(), 10);
+        assert_eq!(c.stats().evictions, 0, "explicit removals are not evictions");
+    }
+
+    #[test]
+    fn concurrent_traffic_keeps_budget_and_counters_consistent() {
+        let c = Arc::new(cache(200, usize::MAX));
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for i in 0..200u64 {
+                        let k = t * 1000 + (i % 25);
+                        if c.get(&k).is_none() {
+                            c.insert(k, val(1), 10);
+                        }
+                    }
+                });
+            }
+        });
+        assert!(c.weight_bytes() <= 200, "budget violated: {}", c.weight_bytes());
+        assert_eq!(c.weight_bytes(), c.len() as u64 * 10);
+        let s = c.stats();
+        // Every live or evicted entry came from a miss (racy double-inserts
+        // of one key replace in place, so ≤ rather than ==).
+        assert!(s.entries as u64 + s.evictions <= s.misses, "{s:?}");
+    }
+}

@@ -1,6 +1,11 @@
-//! Per-backend serving metrics: request counts, node throughput, and
-//! latency percentiles (reservoir-sampled).
+//! Per-backend serving metrics — request counts, node throughput, and
+//! latency percentiles (reservoir-sampled) — plus the JSON surface for
+//! the engine's cache lifecycle counters ([`caches_to_json`]), so the
+//! server's `stats` op reports hit/miss/eviction rates and occupancy
+//! alongside latency.
 
+use crate::coordinator::cache::CacheStats;
+use crate::util::json::Json;
 use crate::util::stats::Reservoir;
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -8,10 +13,15 @@ use std::sync::Mutex;
 /// Snapshot of one backend's counters.
 #[derive(Clone, Debug)]
 pub struct BackendStats {
+    /// Requests served.
     pub count: usize,
+    /// Total field rows processed across requests.
     pub nodes_processed: usize,
+    /// Mean apply latency in seconds.
     pub mean_latency: f64,
+    /// Median apply latency in seconds (reservoir estimate).
     pub p50: f64,
+    /// 99th-percentile apply latency in seconds (reservoir estimate).
     pub p99: f64,
 }
 
@@ -33,6 +43,7 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// An empty registry.
     pub fn new() -> Self {
         Metrics { inner: Mutex::new(HashMap::new()) }
     }
@@ -71,7 +82,6 @@ impl Metrics {
 
     /// JSON encoding for the server's `stats` op.
     pub fn to_json(&self) -> crate::util::json::Json {
-        use crate::util::json::Json;
         let snap = self.snapshot();
         Json::Obj(
             snap.into_iter()
@@ -92,6 +102,33 @@ impl Metrics {
     }
 }
 
+/// JSON encoding of one cache's lifecycle counters (`null` capacity =
+/// unbounded). Used by the server's `stats` op.
+pub fn cache_to_json(s: &CacheStats) -> Json {
+    let bound_u64 = |v: u64| if v == u64::MAX { Json::Null } else { Json::Num(v as f64) };
+    let bound_usize =
+        |v: usize| if v == usize::MAX { Json::Null } else { Json::Num(v as f64) };
+    Json::obj(vec![
+        ("entries", Json::Num(s.entries as f64)),
+        ("weight_bytes", Json::Num(s.weight_bytes as f64)),
+        ("capacity_bytes", bound_u64(s.capacity_bytes)),
+        ("max_entries", bound_usize(s.max_entries)),
+        ("hits", Json::Num(s.hits as f64)),
+        ("misses", Json::Num(s.misses as f64)),
+        ("evictions", Json::Num(s.evictions as f64)),
+        ("rejected", Json::Num(s.rejected as f64)),
+    ])
+}
+
+/// JSON object mapping cache names to [`cache_to_json`] encodings.
+pub fn caches_to_json(stats: &crate::coordinator::EngineCacheStats) -> Json {
+    Json::obj(vec![
+        ("clouds", cache_to_json(&stats.clouds)),
+        ("integrators", cache_to_json(&stats.integrators)),
+        ("pjrt_preps", cache_to_json(&stats.pjrt_preps)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,6 +144,26 @@ mod tests {
         assert_eq!(s.count, 100);
         assert_eq!(s.nodes_processed, 6400);
         assert!(s.p50 > 0.0 && s.p50 <= s.p99);
+    }
+
+    #[test]
+    fn cache_json_marks_unbounded_as_null() {
+        let s = CacheStats {
+            entries: 3,
+            weight_bytes: 120,
+            capacity_bytes: u64::MAX,
+            max_entries: 7,
+            hits: 5,
+            misses: 4,
+            evictions: 1,
+            rejected: 0,
+        };
+        let j = cache_to_json(&s);
+        assert_eq!(j.get("capacity_bytes"), Some(&Json::Null));
+        assert_eq!(j.get("max_entries").unwrap().as_usize(), Some(7));
+        assert_eq!(j.get("evictions").unwrap().as_usize(), Some(1));
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("weight_bytes").unwrap().as_usize(), Some(120));
     }
 
     #[test]

@@ -5,10 +5,18 @@
 //! [`Scene`]), then submit `Integrate` requests carrying an
 //! [`IntegratorSpec`]. The engine:
 //!
-//! * caches **prepared integrators** per `(cloud, spec.cache_key())` —
-//!   pre-processing (separator trees, RF features, dense kernels) is paid
-//!   once, built through the single fallible [`prepare`] factory, and the
-//!   request path only runs `apply_into`;
+//! * caches **prepared integrators** per `(cloud, spec.cache_key())` in a
+//!   sharded, byte-budgeted LRU ([`cache`]) — pre-processing (separator
+//!   trees, RF features, dense kernels) is paid once, built through the
+//!   single fallible [`prepare`] factory, and the request path only runs
+//!   `apply_into`. Entries are weighted by
+//!   [`FieldIntegrator::resident_bytes`], so one dense brute-force kernel
+//!   costs what it actually holds; when [`EngineConfig::max_resident_bytes`]
+//!   is exceeded the coldest entries are evicted and rebuild transparently
+//!   on their next request (`cache_hit: false`);
+//! * bounds **registered scenes** by [`EngineConfig::max_clouds`] (LRU);
+//!   evicting or unregistering a cloud cascades into its prepared
+//!   artifacts so nothing derived outlives its scene;
 //! * serves the hot path **allocation-free**: [`Engine::integrate_into`]
 //!   writes into a caller-held output matrix and draws scratch from a
 //!   pooled [`Workspace`], so steady-state traffic performs zero
@@ -21,15 +29,21 @@
 //!   the two routes share one cache key on purpose;
 //! * **batches** concurrent requests for the same cloud+spec — see
 //!   [`batcher`];
-//! * records per-backend latency/throughput [`metrics`].
+//! * records per-backend latency/throughput [`metrics`] and exposes cache
+//!   occupancy/hit/eviction counters ([`Engine::cache_stats`]).
 //!
 //! Unkeyable specs (custom kernels without a label) are rejected with a
 //! typed error instead of silently sharing a cache slot — see
 //! [`IntegratorSpec::cache_key`].
 //!
 //! The TCP JSON-lines front-end lives in [`server`]; the CLI launches it.
+//! docs/ARCHITECTURE.md maps the full layer stack; docs/PROTOCOL.md is
+//! the wire reference.
+//!
+//! [`FieldIntegrator::resident_bytes`]: crate::integrators::FieldIntegrator::resident_bytes
 
 pub mod batcher;
+pub mod cache;
 pub mod metrics;
 pub mod server;
 
@@ -42,18 +56,96 @@ use crate::mesh::TriMesh;
 use crate::pointcloud::PointCloud;
 use crate::runtime::PjrtRuntime;
 use crate::util::error::{anyhow, bail, Result};
-use std::collections::HashMap;
+use cache::{CacheConfig, CacheStats, ShardedCache};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex};
 
 /// Backwards-compatible alias: the old `coordinator::Backend` enum is now
 /// the crate-wide [`IntegratorSpec`].
 pub use crate::integrators::IntegratorSpec as Backend;
 
+/// Workspaces retained in the idle pool; checkouts beyond this still
+/// work, the surplus is simply dropped at check-in so a burst of
+/// concurrency cannot grow the pool without bound.
+const MAX_POOLED_WORKSPACES: usize = 32;
+
+/// Engine capacity/topology configuration, with a builder-style API:
+///
+/// ```ignore
+/// let engine = EngineConfig::default()
+///     .shards(16)
+///     .max_resident_bytes(512 << 20)
+///     .max_clouds(1024)
+///     .build();
+/// ```
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Directory holding the AOT/PJRT `manifest.json`; `None` disables
+    /// the PJRT route.
+    pub artifacts_dir: Option<PathBuf>,
+    /// Shard count for each internal cache (lock-contention knob).
+    pub shards: usize,
+    /// Byte budget for the prepared-integrator cache, enforced by LRU
+    /// eviction and reported by [`Engine::resident_bytes`]. The
+    /// PJRT-prep side cache — a few hundred bytes per entry — is
+    /// bounded by the same value *independently* (its occupancy shows
+    /// up in [`Engine::cache_stats`], not in `resident_bytes`).
+    /// `u64::MAX` = unbounded.
+    pub max_resident_bytes: u64,
+    /// Maximum registered scenes before the least-recently-used cloud
+    /// (and its prepared artifacts) is evicted. `usize::MAX` = unbounded.
+    pub max_clouds: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            artifacts_dir: None,
+            shards: 8,
+            max_resident_bytes: u64::MAX,
+            max_clouds: usize::MAX,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Sets the AOT/PJRT artifact directory (see [`EngineConfig::artifacts_dir`]).
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts_dir = Some(dir.into());
+        self
+    }
+
+    /// Sets the cache shard count (clamped to ≥ 1).
+    pub fn shards(mut self, n: usize) -> Self {
+        self.shards = n.max(1);
+        self
+    }
+
+    /// Sets the prepared-integrator byte budget.
+    pub fn max_resident_bytes(mut self, bytes: u64) -> Self {
+        self.max_resident_bytes = bytes;
+        self
+    }
+
+    /// Sets the registered-scene cap.
+    pub fn max_clouds(mut self, n: usize) -> Self {
+        self.max_clouds = n;
+        self
+    }
+
+    /// Builds an [`Engine`] from this configuration.
+    pub fn build(self) -> Engine {
+        Engine::with_config(self)
+    }
+}
+
 /// A registered scene (point cloud, plus the mesh graph when it came
 /// from a mesh).
 pub struct CloudEntry {
+    /// The scene integrators are prepared against.
     pub scene: Scene,
+    /// Client-supplied display name.
     pub name: String,
 }
 
@@ -64,70 +156,124 @@ struct PjrtPrep {
     lambda: f64,
 }
 
+impl PjrtPrep {
+    fn resident_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.omegas.len() * std::mem::size_of::<[f64; 3]>()
+            + self.qscale.len() * std::mem::size_of::<f64>()
+    }
+}
+
 /// Result metadata for one integration.
 #[derive(Clone, Debug)]
 pub struct IntegrateInfo {
+    /// Metrics tag of the backend that served the request.
     pub backend: String,
+    /// Pre-processing seconds paid by *this* request (0 on a cache hit).
     pub preprocess_seconds: f64,
+    /// Apply (inference) seconds.
     pub apply_seconds: f64,
+    /// Whether a cached prepared integrator served the request.
     pub cache_hit: bool,
+    /// Whether the PJRT artifact route executed the apply.
     pub used_pjrt: bool,
+}
+
+/// Occupancy + lifetime counters of the engine's three internal caches.
+#[derive(Clone, Debug)]
+pub struct EngineCacheStats {
+    /// Registered scenes (bounded by [`EngineConfig::max_clouds`]).
+    pub clouds: CacheStats,
+    /// Prepared integrators (bounded by
+    /// [`EngineConfig::max_resident_bytes`]).
+    pub integrators: CacheStats,
+    /// PJRT feature preps (same byte bound; tiny entries).
+    pub pjrt_preps: CacheStats,
 }
 
 /// The serving engine. `Arc<Engine>` is shared across server threads.
 pub struct Engine {
-    clouds: RwLock<HashMap<u64, Arc<CloudEntry>>>,
-    integrators: RwLock<HashMap<(u64, String), Arc<dyn FieldIntegrator>>>,
-    pjrt_preps: RwLock<HashMap<(u64, String), Arc<PjrtPrep>>>,
+    cfg: EngineConfig,
+    clouds: ShardedCache<u64, Arc<CloudEntry>>,
+    integrators: ShardedCache<(u64, String), Arc<dyn FieldIntegrator>>,
+    pjrt_preps: ShardedCache<(u64, String), Arc<PjrtPrep>>,
     /// Pool of warm apply workspaces (one in flight per concurrent
-    /// request; returned after each apply).
+    /// request; returned after each apply, capped at
+    /// [`MAX_POOLED_WORKSPACES`]).
     workspaces: Mutex<Vec<Workspace>>,
     /// Monotonic total of workspace warmup allocations, folded in at
     /// check-in so in-flight workspaces never make the count dip.
     ws_allocations: AtomicUsize,
     next_id: AtomicU64,
     runtime: Option<Arc<PjrtRuntime>>,
+    /// Per-backend latency/throughput registry.
     pub metrics: metrics::Metrics,
 }
 
 impl Engine {
-    /// Creates an engine; loads the PJRT runtime when `artifacts_dir`
-    /// holds a manifest (otherwise RFD-PJRT falls back to pure Rust).
+    /// Creates an unbounded engine; loads the PJRT runtime when
+    /// `artifacts_dir` holds a manifest (otherwise RFD-PJRT falls back to
+    /// pure Rust). Capacity-bounded engines go through [`EngineConfig`].
     pub fn new(artifacts_dir: Option<&std::path::Path>) -> Self {
-        let runtime = artifacts_dir.and_then(|d| match PjrtRuntime::new(d) {
+        Engine::with_config(EngineConfig {
+            artifacts_dir: artifacts_dir.map(|p| p.to_path_buf()),
+            ..Default::default()
+        })
+    }
+
+    /// Creates an engine with explicit capacities (see [`EngineConfig`]).
+    pub fn with_config(cfg: EngineConfig) -> Self {
+        let runtime = cfg.artifacts_dir.as_deref().and_then(|d| match PjrtRuntime::new(d) {
             Ok(rt) => Some(Arc::new(rt)),
             Err(e) => {
                 eprintln!("[engine] PJRT runtime unavailable: {e:#}");
                 None
             }
         });
+        let shard_cfg = |max_weight_bytes: u64, max_entries: usize| CacheConfig {
+            shards: cfg.shards,
+            max_weight_bytes,
+            max_entries,
+        };
         Engine {
-            clouds: RwLock::new(HashMap::new()),
-            integrators: RwLock::new(HashMap::new()),
-            pjrt_preps: RwLock::new(HashMap::new()),
+            clouds: ShardedCache::new(shard_cfg(u64::MAX, cfg.max_clouds)),
+            integrators: ShardedCache::new(shard_cfg(cfg.max_resident_bytes, usize::MAX)),
+            pjrt_preps: ShardedCache::new(shard_cfg(cfg.max_resident_bytes, usize::MAX)),
             workspaces: Mutex::new(Vec::new()),
             ws_allocations: AtomicUsize::new(0),
             next_id: AtomicU64::new(1),
             runtime,
             metrics: metrics::Metrics::new(),
+            cfg,
         }
     }
 
+    /// Whether the PJRT artifact route is loaded.
     pub fn has_pjrt(&self) -> bool {
         self.runtime.is_some()
     }
 
+    /// The loaded PJRT runtime, if any.
     pub fn runtime(&self) -> Option<&Arc<PjrtRuntime>> {
         self.runtime.as_ref()
     }
 
-    /// Registers an arbitrary scene; returns its id.
+    /// The capacity configuration this engine was built with.
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Registers an arbitrary scene; returns its id. May LRU-evict the
+    /// coldest registered cloud (and its prepared artifacts) when
+    /// [`EngineConfig::max_clouds`] is reached.
     pub fn register_scene(&self, scene: Scene, name: &str) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.clouds
-            .write()
-            .unwrap()
-            .insert(id, Arc::new(CloudEntry { scene, name: name.to_string() }));
+        let weight = scene.resident_bytes() as u64;
+        let entry = Arc::new(CloudEntry { scene, name: name.to_string() });
+        let outcome = self.clouds.insert(id, entry, weight);
+        for evicted in outcome.evicted {
+            self.purge_cloud_artifacts(evicted);
+        }
         id
     }
 
@@ -144,17 +290,77 @@ impl Engine {
         self.register_scene(Scene::from_mesh(&mesh), name)
     }
 
+    /// Looks up a registered cloud (refreshing its LRU recency).
     pub fn cloud(&self, id: u64) -> Result<Arc<CloudEntry>> {
         self.clouds
-            .read()
-            .unwrap()
             .get(&id)
-            .cloned()
             .ok_or_else(|| anyhow!("unknown cloud id {id}"))
     }
 
+    /// Number of currently registered clouds.
     pub fn cloud_count(&self) -> usize {
-        self.clouds.read().unwrap().len()
+        self.clouds.len()
+    }
+
+    /// Whether cloud `id` is registered, *without* refreshing its LRU
+    /// recency or touching hit/miss counters — for admin/maintenance
+    /// paths (the server's `evict` op) that must not perturb eviction
+    /// order.
+    pub fn has_cloud(&self, id: u64) -> bool {
+        self.clouds.peek(&id).is_some()
+    }
+
+    /// Drops a registered cloud and every prepared artifact derived from
+    /// it. Returns whether the cloud existed.
+    pub fn unregister_cloud(&self, id: u64) -> bool {
+        let existed = self.clouds.remove(&id);
+        self.purge_cloud_artifacts(id);
+        existed
+    }
+
+    /// Drops every prepared artifact (integrators + PJRT preps) for
+    /// cloud `id`, keeping the scene registered; returns how many
+    /// entries were dropped. The next request for any of them re-prepares
+    /// transparently.
+    pub fn evict_cloud_artifacts(&self, id: u64) -> usize {
+        self.purge_cloud_artifacts(id)
+    }
+
+    /// Drops the prepared artifact for one `(cloud, spec)` pair; returns
+    /// how many cache entries (integrator and/or PJRT prep) were
+    /// dropped. Fails only for unkeyable specs.
+    pub fn evict_spec(&self, id: u64, spec: &IntegratorSpec) -> Result<usize> {
+        let key = (id, spec.cache_key()?);
+        let mut dropped = 0;
+        if self.integrators.remove(&key) {
+            dropped += 1;
+        }
+        if self.pjrt_preps.remove(&key) {
+            dropped += 1;
+        }
+        Ok(dropped)
+    }
+
+    fn purge_cloud_artifacts(&self, id: u64) -> usize {
+        self.integrators.remove_if(|k| k.0 == id) + self.pjrt_preps.remove_if(|k| k.0 == id)
+    }
+
+    /// Bytes currently held by the prepared-integrator cache — the
+    /// quantity bounded by [`EngineConfig::max_resident_bytes`]. The
+    /// PJRT prep side cache (a few hundred bytes per entry, bounded by
+    /// the same value independently) is reported separately through
+    /// [`Engine::cache_stats`].
+    pub fn resident_bytes(&self) -> u64 {
+        self.integrators.weight_bytes()
+    }
+
+    /// Snapshot of all three internal caches' occupancy and counters.
+    pub fn cache_stats(&self) -> EngineCacheStats {
+        EngineCacheStats {
+            clouds: self.clouds.stats(),
+            integrators: self.integrators.stats(),
+            pjrt_preps: self.pjrt_preps.stats(),
+        }
     }
 
     /// Monotonic total of workspace warmup events — constant across
@@ -174,11 +380,16 @@ impl Engine {
     fn put_workspace(&self, ws: Workspace, baseline: usize) {
         self.ws_allocations
             .fetch_add(ws.allocations() - baseline, Ordering::Relaxed);
-        self.workspaces.lock().unwrap().push(ws);
+        let mut pool = self.workspaces.lock().unwrap();
+        if pool.len() < MAX_POOLED_WORKSPACES {
+            pool.push(ws);
+        }
     }
 
     /// Cached prepared integrator for `(cloud, spec)` — builds through
-    /// [`prepare`] on a miss. Returns `(integrator, cache_hit, seconds)`.
+    /// [`prepare`] on a miss (including after an eviction, which is how
+    /// an evicted entry rebuilds transparently). Returns
+    /// `(integrator, cache_hit, seconds)`.
     fn prepared(
         &self,
         id: u64,
@@ -186,12 +397,22 @@ impl Engine {
         spec: &IntegratorSpec,
     ) -> Result<(Arc<dyn FieldIntegrator>, bool, f64)> {
         let key = (id, spec.cache_key()?);
-        if let Some(i) = self.integrators.read().unwrap().get(&key).cloned() {
+        if let Some(i) = self.integrators.get(&key) {
             return Ok((i, true, 0.0));
         }
         let (built, dt) = crate::util::timer::timed(|| prepare(&entry.scene, spec));
         let built: Arc<dyn FieldIntegrator> = Arc::from(built?);
-        self.integrators.write().unwrap().insert(key, built.clone());
+        let weight = built.resident_bytes() as u64;
+        // An integrator outweighing the whole budget is served uncached
+        // (`rejected` counter) — correctness never depends on caching.
+        let _ = self.integrators.insert(key.clone(), built.clone(), weight);
+        // Close the unregister race: if the cloud vanished between our
+        // `cloud()` lookup and this insert, its artifact purge may have
+        // run before the insert landed — drop the orphan so nothing
+        // keyed to a dead cloud id survives.
+        if self.clouds.peek(&id).is_none() {
+            self.integrators.remove(&key);
+        }
         Ok((built, false, dt))
     }
 
@@ -232,10 +453,7 @@ impl Engine {
         if let (IntegratorSpec::RfdPjrt(cfg), Some(rt)) = (spec, &self.runtime) {
             validate_spec(&entry.scene, spec)?;
             let key = (id, spec.cache_key()?);
-            // NB: clone out of the read guard *before* any write-lock
-            // path — RwLock is not reentrant and `if let` scrutinee
-            // temporaries live through the else branch.
-            let cached = self.pjrt_preps.read().unwrap().get(&key).cloned();
+            let cached = self.pjrt_preps.get(&key);
             let (prep, cache_hit, prep_secs) = if let Some(p) = cached {
                 (p, true, 0.0)
             } else {
@@ -243,7 +461,12 @@ impl Engine {
                     let (omegas, qscale) = sample_features(cfg);
                     Arc::new(PjrtPrep { omegas, qscale, lambda: cfg.lambda })
                 });
-                self.pjrt_preps.write().unwrap().insert(key, p.clone());
+                let weight = p.resident_bytes() as u64;
+                let _ = self.pjrt_preps.insert(key.clone(), p.clone(), weight);
+                // Same unregister-race guard as the integrator cache.
+                if self.clouds.peek(&id).is_none() {
+                    self.pjrt_preps.remove(&key);
+                }
                 (p, false, dt)
             };
             let (res, apply_secs) = crate::util::timer::timed(|| {
@@ -515,5 +738,92 @@ mod tests {
         let _ = eng.integrate(id, &IntegratorSpec::Rfd(RfdConfig::default()), &field).unwrap();
         let snap = eng.metrics.snapshot();
         assert_eq!(snap.get("rfd").map(|s| s.count), Some(1));
+    }
+
+    #[test]
+    fn max_clouds_evicts_lru_scene_and_its_artifacts() {
+        let eng = EngineConfig::default().max_clouds(2).build();
+        let id1 = eng.register_mesh(icosphere(1), "a");
+        let n = eng.cloud(id1).unwrap().scene.len();
+        let spec = IntegratorSpec::Rfd(RfdConfig { num_features: 4, ..Default::default() });
+        let field = rand_field(n, 1, 1);
+        eng.integrate(id1, &spec, &field).unwrap();
+        assert_eq!(eng.cache_stats().integrators.entries, 1);
+        let id2 = eng.register_mesh(icosphere(1), "b");
+        // Touch id2 so id1 is the LRU cloud, then push it out.
+        eng.cloud(id2).unwrap();
+        let id3 = eng.register_mesh(icosphere(1), "c");
+        assert_eq!(eng.cloud_count(), 2);
+        assert!(eng.cloud(id1).is_err(), "LRU cloud must be evicted");
+        assert!(eng.cloud(id2).is_ok() && eng.cloud(id3).is_ok());
+        assert_eq!(
+            eng.cache_stats().integrators.entries,
+            0,
+            "evicted cloud's prepared integrators must be purged"
+        );
+    }
+
+    #[test]
+    fn unregister_cloud_drops_scene_and_artifacts() {
+        let eng = engine();
+        let id = eng.register_mesh(icosphere(1), "s");
+        let n = eng.cloud(id).unwrap().scene.len();
+        let field = rand_field(n, 1, 2);
+        let spec = IntegratorSpec::Rfd(RfdConfig { num_features: 4, ..Default::default() });
+        eng.integrate(id, &spec, &field).unwrap();
+        assert!(eng.resident_bytes() > 0);
+        assert!(eng.unregister_cloud(id));
+        assert!(!eng.unregister_cloud(id), "second unregister reports absence");
+        assert!(eng.cloud(id).is_err());
+        assert_eq!(eng.resident_bytes(), 0);
+        assert!(eng.integrate(id, &spec, &field).is_err());
+    }
+
+    #[test]
+    fn evict_spec_forces_reprepare_with_identical_result() {
+        let eng = engine();
+        let id = eng.register_mesh(icosphere(1), "s");
+        let n = eng.cloud(id).unwrap().scene.len();
+        let field = rand_field(n, 2, 3);
+        let spec = IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() });
+        let (first, _) = eng.integrate(id, &spec, &field).unwrap();
+        assert_eq!(eng.evict_spec(id, &spec).unwrap(), 1);
+        let (again, info) = eng.integrate(id, &spec, &field).unwrap();
+        assert!(!info.cache_hit, "evicted entry must rebuild, not hit");
+        assert_eq!(first.data, again.data, "re-prepared integrator diverged");
+    }
+
+    #[test]
+    fn bounded_resident_bytes_hold_under_spec_churn() {
+        let n_probe = {
+            let eng = engine();
+            let id = eng.register_mesh(icosphere(1), "probe");
+            let spec = IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() });
+            let n = eng.cloud(id).unwrap().scene.len();
+            eng.integrate(id, &spec, &rand_field(n, 1, 9)).unwrap();
+            eng.resident_bytes()
+        };
+        // Budget fits two prepared RFD integrators.
+        let budget = n_probe * 2 + n_probe / 2;
+        let eng = EngineConfig::default().max_resident_bytes(budget).build();
+        let id = eng.register_mesh(icosphere(1), "s");
+        let n = eng.cloud(id).unwrap().scene.len();
+        let field = rand_field(n, 1, 10);
+        for seed in 0..6 {
+            let spec = IntegratorSpec::Rfd(RfdConfig {
+                num_features: 8,
+                seed,
+                ..Default::default()
+            });
+            eng.integrate(id, &spec, &field).unwrap();
+            assert!(
+                eng.resident_bytes() <= budget,
+                "resident {} exceeds budget {budget}",
+                eng.resident_bytes()
+            );
+        }
+        let stats = eng.cache_stats();
+        assert!(stats.integrators.evictions >= 4, "{stats:?}");
+        assert!(stats.integrators.entries <= 2);
     }
 }

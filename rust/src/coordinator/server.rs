@@ -1,29 +1,19 @@
 //! TCP JSON-lines front-end for the engine.
 //!
-//! Protocol (one JSON object per line, response per line):
+//! One JSON object per line, one response object per line. The full wire
+//! reference — every op (`register_mesh`, `register_cloud`, `integrate`,
+//! `evict`, `unregister_cloud`, `stats`, `shutdown`), every backend's
+//! parameters, the error shape, and a worked netcat session — lives in
+//! **docs/PROTOCOL.md**; the `integrate` body is exactly the wire form of
+//! [`IntegratorSpec::from_request`].
 //!
-//! ```text
-//! → {"op":"register_mesh","kind":"icosphere","param":2,"name":"s"}
-//! ← {"ok":true,"id":1,"n":162}
-//! → {"op":"register_cloud","points":[x0,y0,z0,x1,...]}
-//! ← {"ok":true,"id":2,"n":100}
-//! → {"op":"integrate","cloud":1,"backend":"sf","field":[...],"d":3,
-//!    "lambda":1.0,"unit_size":0.01}
-//! ← {"ok":true,"result":[...],"apply_seconds":0.003,"cache_hit":false}
-//! ```
-//!
-//! The `integrate` request body is exactly the wire form of
-//! [`IntegratorSpec`] (see [`IntegratorSpec::from_request`]): backends
-//! `sf`, `rfd`, `rfd_pjrt`, `bf_sp`, `bf_diffusion`, `trees_mst`,
-//! `trees_bartal`, `trees_frt`, `almohy`, `lanczos`, `bader`.
-//!
-//! ```text
-//! → {"op":"stats"}
-//! ← {"ok":true,"backends":{...}}
-//! → {"op":"shutdown"}
-//! ```
+//! Operationally the server is a bounded thread-per-connection loop:
+//! finished connection threads are reaped (joined) on every accept
+//! iteration instead of accumulating until shutdown, and
+//! [`ServerConfig::max_connections`] caps concurrency — excess clients
+//! wait in the TCP accept backlog.
 
-use crate::coordinator::Engine;
+use crate::coordinator::{metrics, Engine};
 use crate::integrators::IntegratorSpec;
 use crate::linalg::Mat;
 use crate::mesh;
@@ -31,25 +21,90 @@ use crate::util::error::{anyhow, Result};
 use crate::util::json::{parse, Json};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
-/// Runs the server until a `shutdown` op arrives. Returns the bound
-/// address through `on_ready` (port 0 picks a free port).
-pub fn serve(engine: Arc<Engine>, addr: &str, on_ready: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+/// Connection-handling limits for [`serve_with`].
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Maximum concurrent connection threads; further clients queue in
+    /// the TCP accept backlog until a slot frees up.
+    pub max_connections: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_connections: 64 }
+    }
+}
+
+/// Counters shared between the accept loop and connection handlers,
+/// reported by the `stats` op under `"server"`.
+struct ServerShared {
+    stop: AtomicBool,
+    /// Connections accepted over the server's lifetime.
+    connections_total: AtomicU64,
+    /// Connection handlers that have finished executing (their threads
+    /// may still await the join that the next accept iteration performs).
+    connections_finished: AtomicU64,
+    /// Live (spawned, not yet joined) worker threads, as seen by the
+    /// accept loop after its most recent reap. Staying small across many
+    /// short-lived connections is the observable proof that reaping
+    /// works.
+    worker_backlog: AtomicUsize,
+}
+
+/// Runs the server with default limits until a `shutdown` op arrives.
+/// Returns the bound address through `on_ready` (port 0 picks a free
+/// port).
+pub fn serve(
+    engine: Arc<Engine>,
+    addr: &str,
+    on_ready: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    serve_with(engine, addr, ServerConfig::default(), on_ready)
+}
+
+/// [`serve`] with explicit [`ServerConfig`] limits.
+pub fn serve_with(
+    engine: Arc<Engine>,
+    addr: &str,
+    cfg: ServerConfig,
+    on_ready: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
     on_ready(listener.local_addr()?);
-    let stop = Arc::new(AtomicBool::new(false));
-    let mut workers = Vec::new();
-    while !stop.load(Ordering::Relaxed) {
+    let shared = Arc::new(ServerShared {
+        stop: AtomicBool::new(false),
+        connections_total: AtomicU64::new(0),
+        connections_finished: AtomicU64::new(0),
+        worker_backlog: AtomicUsize::new(0),
+    });
+    let max_conns = cfg.max_connections.max(1);
+    let mut workers: Vec<(Arc<AtomicBool>, std::thread::JoinHandle<()>)> = Vec::new();
+    while !shared.stop.load(Ordering::Relaxed) {
+        reap_finished(&mut workers, &shared);
+        if workers.len() >= max_conns {
+            // At the connection cap: let the TCP backlog hold new
+            // clients and retry once a handler exits.
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            continue;
+        }
         match listener.accept() {
             Ok((stream, _)) => {
+                shared.connections_total.fetch_add(1, Ordering::Relaxed);
                 let eng = engine.clone();
-                let st = stop.clone();
-                workers.push(std::thread::spawn(move || {
-                    let _ = handle_client(eng, stream, st);
-                }));
+                let sh = shared.clone();
+                let done = Arc::new(AtomicBool::new(false));
+                let done2 = done.clone();
+                let handle = std::thread::spawn(move || {
+                    let _ = handle_client(eng, stream, &sh);
+                    sh.connections_finished.fetch_add(1, Ordering::Relaxed);
+                    done2.store(true, Ordering::Release);
+                });
+                workers.push((done, handle));
+                shared.worker_backlog.store(workers.len(), Ordering::Relaxed);
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(std::time::Duration::from_millis(5));
@@ -57,13 +112,32 @@ pub fn serve(engine: Arc<Engine>, addr: &str, on_ready: impl FnOnce(std::net::So
             Err(e) => return Err(e.into()),
         }
     }
-    for w in workers {
+    for (_, w) in workers {
         let _ = w.join();
     }
     Ok(())
 }
 
-fn handle_client(engine: Arc<Engine>, stream: TcpStream, stop: Arc<AtomicBool>) -> Result<()> {
+/// Joins every worker whose handler has finished, keeping the live list
+/// (and thus thread count) proportional to *current* connections rather
+/// than total connections served.
+fn reap_finished(
+    workers: &mut Vec<(Arc<AtomicBool>, std::thread::JoinHandle<()>)>,
+    shared: &ServerShared,
+) {
+    let mut i = 0;
+    while i < workers.len() {
+        if workers[i].0.load(Ordering::Acquire) {
+            let (_, handle) = workers.swap_remove(i);
+            let _ = handle.join();
+        } else {
+            i += 1;
+        }
+    }
+    shared.worker_backlog.store(workers.len(), Ordering::Relaxed);
+}
+
+fn handle_client(engine: Arc<Engine>, stream: TcpStream, shared: &ServerShared) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -71,7 +145,7 @@ fn handle_client(engine: Arc<Engine>, stream: TcpStream, stop: Arc<AtomicBool>) 
         if line.trim().is_empty() {
             continue;
         }
-        let response = match handle_line(&engine, &line, &stop) {
+        let response = match handle_line(&engine, &line, shared) {
             Ok(j) => j,
             Err(e) => Json::obj(vec![
                 ("ok", Json::Bool(false)),
@@ -79,14 +153,14 @@ fn handle_client(engine: Arc<Engine>, stream: TcpStream, stop: Arc<AtomicBool>) 
             ]),
         };
         writeln!(writer, "{response}")?;
-        if stop.load(Ordering::Relaxed) {
+        if shared.stop.load(Ordering::Relaxed) {
             break;
         }
     }
     Ok(())
 }
 
-fn handle_line(engine: &Engine, line: &str, stop: &AtomicBool) -> Result<Json> {
+fn handle_line(engine: &Engine, line: &str, shared: &ServerShared) -> Result<Json> {
     let req = parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
     let op = req.get("op").and_then(Json::as_str).ok_or_else(|| anyhow!("missing op"))?;
     match op {
@@ -155,14 +229,72 @@ fn handle_line(engine: &Engine, line: &str, stop: &AtomicBool) -> Result<Json> {
                 ("used_pjrt", Json::Bool(info.used_pjrt)),
             ]))
         }
+        // Drops prepared artifacts. With a `backend` body: that one
+        // (cloud, spec) entry; without: everything prepared for the
+        // cloud. The scene stays registered either way.
+        "evict" => {
+            let cloud = req
+                .get("cloud")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing cloud"))? as u64;
+            // Unknown ids error rather than no-op; `has_cloud` is a
+            // non-touching peek so maintenance evictions don't refresh
+            // the cloud's LRU recency or skew hit/miss counters.
+            if !engine.has_cloud(cloud) {
+                return Err(anyhow!("unknown cloud id {cloud}"));
+            }
+            let dropped = if req.get("backend").is_some() {
+                let spec = IntegratorSpec::from_request(&req)?;
+                engine.evict_spec(cloud, &spec)?
+            } else {
+                engine.evict_cloud_artifacts(cloud)
+            };
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("evicted", Json::Num(dropped as f64)),
+            ]))
+        }
+        // Drops the scene *and* all its prepared artifacts.
+        "unregister_cloud" => {
+            let cloud = req
+                .get("cloud")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing cloud"))? as u64;
+            let removed = engine.unregister_cloud(cloud);
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("removed", Json::Bool(removed)),
+            ]))
+        }
         "stats" => Ok(Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("clouds", Json::Num(engine.cloud_count() as f64)),
             ("pjrt", Json::Bool(engine.has_pjrt())),
             ("backends", engine.metrics.to_json()),
+            ("resident_bytes", Json::Num(engine.resident_bytes() as f64)),
+            ("cache", metrics::caches_to_json(&engine.cache_stats())),
+            (
+                "server",
+                Json::obj(vec![
+                    (
+                        "connections_total",
+                        Json::Num(shared.connections_total.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "connections_finished",
+                        Json::Num(
+                            shared.connections_finished.load(Ordering::Relaxed) as f64
+                        ),
+                    ),
+                    (
+                        "worker_backlog",
+                        Json::Num(shared.worker_backlog.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            ),
         ])),
         "shutdown" => {
-            stop.store(true, Ordering::Relaxed);
+            shared.stop.store(true, Ordering::Relaxed);
             Ok(Json::obj(vec![("ok", Json::Bool(true))]))
         }
         other => Err(anyhow!("unknown op {other}")),
@@ -173,30 +305,38 @@ fn handle_line(engine: &Engine, line: &str, stop: &AtomicBool) -> Result<Json> {
 mod tests {
     use super::*;
 
-    fn roundtrip(lines: &[String]) -> Vec<Json> {
+    fn spawn_server(
+        cfg: ServerConfig,
+    ) -> (Arc<Engine>, std::net::SocketAddr, std::thread::JoinHandle<()>) {
         let engine = Arc::new(Engine::new(None));
         let (addr_tx, addr_rx) = std::sync::mpsc::channel();
         let eng2 = engine.clone();
         let server = std::thread::spawn(move || {
-            serve(eng2, "127.0.0.1:0", move |a| {
+            serve_with(eng2, "127.0.0.1:0", cfg, move |a| {
                 addr_tx.send(a).unwrap();
             })
             .unwrap();
         });
-        let addr = addr_rx.recv().unwrap();
+        (engine, addr_rx.recv().unwrap(), server)
+    }
+
+    fn send_line(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, l: &str) -> Json {
+        writeln!(stream, "{l}").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        parse(&resp).unwrap()
+    }
+
+    fn roundtrip(lines: &[String]) -> Vec<Json> {
+        let (_, addr, server) = spawn_server(ServerConfig::default());
         let mut stream = TcpStream::connect(addr).unwrap();
         let mut out = Vec::new();
         {
             let mut reader = BufReader::new(stream.try_clone().unwrap());
             for l in lines {
-                writeln!(stream, "{l}").unwrap();
-                let mut resp = String::new();
-                reader.read_line(&mut resp).unwrap();
-                out.push(parse(&resp).unwrap());
+                out.push(send_line(&mut stream, &mut reader, l));
             }
-            writeln!(stream, r#"{{"op":"shutdown"}}"#).unwrap();
-            let mut resp = String::new();
-            reader.read_line(&mut resp).unwrap();
+            send_line(&mut stream, &mut reader, r#"{"op":"shutdown"}"#);
         }
         server.join().unwrap();
         out
@@ -220,6 +360,12 @@ mod tests {
             42
         );
         assert_eq!(responses[2].get("ok"), Some(&Json::Bool(true)));
+        // Cache lifecycle + server counters ride along in stats.
+        let stats = &responses[2];
+        assert!(stats.get("resident_bytes").unwrap().as_f64().unwrap() > 0.0);
+        let integ = stats.get("cache").unwrap().get("integrators").unwrap();
+        assert_eq!(integ.get("entries").unwrap().as_usize(), Some(1));
+        assert!(stats.get("server").unwrap().get("connections_total").is_some());
     }
 
     #[test]
@@ -228,10 +374,93 @@ mod tests {
             "not json".to_string(),
             r#"{"op":"nope"}"#.to_string(),
             r#"{"op":"integrate","cloud":99,"backend":"rfd","field":[1],"d":1}"#.to_string(),
+            r#"{"op":"evict","cloud":99}"#.to_string(),
         ]);
         for r in &responses {
             assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{r}");
             assert!(r.get("error").is_some());
         }
+    }
+
+    #[test]
+    fn evict_and_unregister_ops() {
+        let field: String =
+            (0..42).map(|i| i.to_string()).collect::<Vec<_>>().join(",");
+        let responses = roundtrip(&[
+            r#"{"op":"register_mesh","kind":"icosphere","param":1}"#.to_string(),
+            format!(r#"{{"op":"integrate","cloud":1,"backend":"rfd","field":[{field}],"d":1,"m":8}}"#),
+            r#"{"op":"evict","cloud":1,"backend":"rfd","m":8}"#.to_string(),
+            // Post-evict request transparently re-prepares: cache_hit false.
+            format!(r#"{{"op":"integrate","cloud":1,"backend":"rfd","field":[{field}],"d":1,"m":8}}"#),
+            r#"{"op":"unregister_cloud","cloud":1}"#.to_string(),
+            r#"{"op":"unregister_cloud","cloud":1}"#.to_string(),
+            format!(r#"{{"op":"integrate","cloud":1,"backend":"rfd","field":[{field}],"d":1,"m":8}}"#),
+        ]);
+        assert_eq!(responses[2].get("evicted").unwrap().as_usize(), Some(1));
+        assert_eq!(responses[3].get("cache_hit"), Some(&Json::Bool(false)));
+        assert_eq!(responses[4].get("removed"), Some(&Json::Bool(true)));
+        assert_eq!(responses[5].get("removed"), Some(&Json::Bool(false)));
+        assert_eq!(
+            responses[6].get("ok"),
+            Some(&Json::Bool(false)),
+            "integrating an unregistered cloud must fail"
+        );
+    }
+
+    #[test]
+    fn short_lived_connections_are_reaped_not_accumulated() {
+        let (_, addr, server) = spawn_server(ServerConfig { max_connections: 4 });
+        // Many sequential short-lived clients, each one request then EOF.
+        for _ in 0..12 {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let r = send_line(&mut stream, &mut reader, r#"{"op":"stats"}"#);
+            assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        }
+        // Give the last handler a moment to finish, then inspect.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let stats = send_line(&mut stream, &mut reader, r#"{"op":"stats"}"#);
+        let server_stats = stats.get("server").unwrap();
+        assert_eq!(
+            server_stats.get("connections_total").unwrap().as_usize(),
+            Some(13)
+        );
+        let backlog = server_stats.get("worker_backlog").unwrap().as_usize().unwrap();
+        assert!(
+            backlog <= 3,
+            "finished connection threads accumulated: backlog {backlog}"
+        );
+        send_line(&mut stream, &mut reader, r#"{"op":"shutdown"}"#);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn connection_cap_queues_clients_without_dropping_them() {
+        let (_, addr, server) = spawn_server(ServerConfig { max_connections: 2 });
+        // 6 concurrent clients against a 2-thread cap: all must be
+        // served (the backlog holds the rest).
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..6)
+                .map(|_| {
+                    s.spawn(move || {
+                        let mut stream = TcpStream::connect(addr).unwrap();
+                        let mut reader =
+                            BufReader::new(stream.try_clone().unwrap());
+                        let r =
+                            send_line(&mut stream, &mut reader, r#"{"op":"stats"}"#);
+                        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        send_line(&mut stream, &mut reader, r#"{"op":"shutdown"}"#);
+        server.join().unwrap();
     }
 }

@@ -51,6 +51,14 @@ impl CsrGraph {
         self.targets.len() / 2
     }
 
+    /// Estimated resident heap bytes of the CSR arrays (cache weight
+    /// accounting for graph-holding integrators and registered scenes).
+    pub fn resident_bytes(&self) -> usize {
+        self.offsets.len() * std::mem::size_of::<usize>()
+            + self.targets.len() * std::mem::size_of::<u32>()
+            + self.weights.len() * std::mem::size_of::<f64>()
+    }
+
     #[inline]
     pub fn neighbors(&self, v: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
         let lo = self.offsets[v];

@@ -7,7 +7,7 @@
 //!   `expm` (`O(N³)`). Baseline for RFD (Fig. 4 row 2, Table 2) — and the
 //!   reason the paper's BF column runs out of time/memory first.
 
-use super::{check_apply_shapes, FieldIntegrator, KernelFn, Workspace};
+use super::{check_apply_shapes, mat_bytes, FieldIntegrator, KernelFn, Workspace};
 use crate::graph::{distances, CsrGraph};
 use crate::linalg::{expm_pade, Mat, Trans};
 use crate::util::par;
@@ -49,11 +49,15 @@ impl BruteForceSp {
 }
 
 impl FieldIntegrator for BruteForceSp {
+    // Dominant storage: the materialized n×n kernel.
     fn name(&self) -> String {
         "BF-sp".into()
     }
     fn len(&self) -> usize {
         self.kernel_matrix.rows
+    }
+    fn resident_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + mat_bytes(&self.kernel_matrix)
     }
     fn apply_into(&self, field: &Mat, out: &mut Mat, _ws: &mut Workspace) {
         check_apply_shapes(self.len(), field, out);
@@ -87,6 +91,7 @@ impl BruteForceDiffusion {
         BruteForceDiffusion { kernel_matrix: expm_pade(&w.scale(lambda)) }
     }
 
+    /// Direct access to the dense diffusion kernel (test oracle).
     pub fn kernel(&self) -> &Mat {
         &self.kernel_matrix
     }
@@ -98,6 +103,9 @@ impl FieldIntegrator for BruteForceDiffusion {
     }
     fn len(&self) -> usize {
         self.kernel_matrix.rows
+    }
+    fn resident_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + mat_bytes(&self.kernel_matrix)
     }
     fn apply_into(&self, field: &Mat, out: &mut Mat, _ws: &mut Workspace) {
         check_apply_shapes(self.len(), field, out);

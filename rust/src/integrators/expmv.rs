@@ -10,7 +10,7 @@
 //! * [`BaderDense`] — dense Taylor-polynomial `expm` (Bader et al. 2019),
 //!   the `O(N³)` pre-processing baseline.
 
-use super::{check_apply_shapes, FieldIntegrator, Workspace};
+use super::{check_apply_shapes, mat_bytes, FieldIntegrator, Workspace};
 use crate::graph::CsrGraph;
 use crate::linalg::{eigh_jacobi, expm_taylor, Mat, Trans};
 
@@ -44,6 +44,11 @@ impl FieldIntegrator for AlMohyExpmv {
     }
     fn len(&self) -> usize {
         self.g.n
+    }
+
+    /// Matrix-free: only the CSR graph is resident.
+    fn resident_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + self.g.resident_bytes()
     }
 
     fn apply_into(&self, field: &Mat, out: &mut Mat, ws: &mut Workspace) {
@@ -185,6 +190,11 @@ impl FieldIntegrator for LanczosExpmv {
     fn len(&self) -> usize {
         self.g.n
     }
+    /// Matrix-free: only the CSR graph is resident (the Krylov basis is
+    /// per-apply scratch, not cached state).
+    fn resident_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + self.g.resident_bytes()
+    }
     /// Krylov iterations allocate per column by nature (the `V` basis);
     /// this baseline only routes its result through the caller's `out`.
     fn apply_into(&self, field: &Mat, out: &mut Mat, _ws: &mut Workspace) {
@@ -227,6 +237,10 @@ impl FieldIntegrator for BaderDense {
     }
     fn len(&self) -> usize {
         self.kernel_matrix.rows
+    }
+    /// Dense n×n kernel — the expensive end of the cache's cost spectrum.
+    fn resident_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + mat_bytes(&self.kernel_matrix)
     }
     fn apply_into(&self, field: &Mat, out: &mut Mat, _ws: &mut Workspace) {
         check_apply_shapes(self.len(), field, out);

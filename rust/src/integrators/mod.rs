@@ -102,6 +102,7 @@ impl KernelFn {
         KernelFn::Custom { label: None, f: Arc::new(f) }
     }
 
+    /// Evaluates the kernel profile at distance `x`.
     #[inline]
     pub fn eval(&self, x: f64) -> f64 {
         match self {
@@ -179,6 +180,7 @@ pub struct Workspace {
 }
 
 impl Workspace {
+    /// An empty workspace; buffers are pooled as the first applies run.
     pub fn new() -> Self {
         Workspace::default()
     }
@@ -252,9 +254,18 @@ pub trait FieldIntegrator: Send + Sync {
     /// Number of graph nodes.
     fn len(&self) -> usize;
 
+    /// Whether the integrator covers zero nodes.
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Estimated resident heap footprint of the *prepared* integrator,
+    /// in bytes — what keeping it warm costs the serving cache. This is
+    /// the weight the engine's bounded cache charges per entry, so the
+    /// estimate must scale with the dominant storage (BF's dense `n×n`
+    /// kernel ≈ `8n²`; RFD's low-rank factors ≈ `32nm`; SF's separator
+    /// tree; trees' per-node DP tables), not with the struct header.
+    fn resident_bytes(&self) -> usize;
 
     /// Core apply: writes `K · field` into the caller-held `out`
     /// (`len() × field.cols`, fully overwritten), drawing scratch from
@@ -279,6 +290,13 @@ pub trait FieldIntegrator: Send + Sync {
         self.apply_into(field, &mut out, &mut ws);
         out
     }
+}
+
+/// Bytes held by a matrix's element storage (resident-weight helper for
+/// `resident_bytes` implementations).
+#[inline]
+pub(crate) fn mat_bytes(m: &Mat) -> usize {
+    m.data.len() * std::mem::size_of::<f64>()
 }
 
 /// Shared shape contract for `apply_into` implementations.

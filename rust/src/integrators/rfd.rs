@@ -23,7 +23,7 @@
 //! build the comparison ε-graphs with the same L∞ norm so estimator and
 //! target agree (DESIGN.md §substitutions).
 
-use super::{check_apply_shapes, FieldIntegrator, GfiError, Workspace};
+use super::{check_apply_shapes, mat_bytes, FieldIntegrator, GfiError, Workspace};
 use crate::linalg::{eigh_jacobi, expm_pade, lu_factor, thin_qr, Mat, Trans};
 use crate::pointcloud::PointCloud;
 use crate::util::{par, rng::Rng};
@@ -45,6 +45,7 @@ pub struct RfdConfig {
     pub radius: f64,
     /// Ridge added to `BᵀA` when it is near-singular.
     pub ridge: f64,
+    /// PRNG seed for the ω frequency draw.
     pub seed: u64,
 }
 
@@ -114,10 +115,12 @@ impl RfDiffusion {
         (&self.a, &self.b)
     }
 
+    /// The exact estimated-diagonal correction δ (see the module docs).
     pub fn delta(&self) -> f64 {
         self.delta
     }
 
+    /// The hyper-parameters this integrator was prepared with.
     pub fn config(&self) -> &RfdConfig {
         &self.cfg
     }
@@ -279,6 +282,15 @@ impl FieldIntegrator for RfDiffusion {
     }
     fn len(&self) -> usize {
         self.a.rows
+    }
+
+    /// Low-rank storage: two `N×2m` factors plus the `2m×2m` core —
+    /// `O(Nm)`, the cheap end of the cache's cost spectrum.
+    fn resident_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + mat_bytes(&self.a)
+            + mat_bytes(&self.b)
+            + mat_bytes(&self.m_core)
     }
 
     /// `y = e^{-Λδ} (x + A · M · (Bᵀ x))` — the inference hot path,

@@ -97,10 +97,15 @@ enum SfNode {
 /// complexity verification.
 #[derive(Clone, Debug, Default)]
 pub struct SfStats {
+    /// Deepest recursion level of the separator tree.
     pub depth: usize,
+    /// Brute-force leaf count.
     pub leaves: usize,
+    /// Internal (separator) node count.
     pub internals: usize,
+    /// Largest leaf's node count.
     pub max_leaf: usize,
+    /// Largest quantized distance any kernel lookup can index.
     pub max_quantized_dist: u32,
 }
 
@@ -132,9 +137,42 @@ impl SeparatorFactorization {
         SeparatorFactorization { n: g.n, cfg, root, f_table, stats }
     }
 
+    /// Construction/shape statistics of the separator tree.
     pub fn stats(&self) -> &SfStats {
         &self.stats
     }
+}
+
+/// Resident bytes of one separator-tree node, recursively (quantized
+/// distance tables dominate; slices count their member pairs).
+fn node_bytes(node: &SfNode) -> usize {
+    const U32: usize = std::mem::size_of::<u32>();
+    let slice_bytes = |slices: &[Slice]| -> usize {
+        slices
+            .iter()
+            .map(|s| std::mem::size_of::<Slice>() + s.members.len() * 2 * U32)
+            .sum::<usize>()
+    };
+    std::mem::size_of::<SfNode>()
+        + match node {
+            SfNode::Leaf { nodes, dist_q } => (nodes.len() + dist_q.len()) * U32,
+            SfNode::Internal {
+                nodes,
+                sep_local,
+                sep_dq,
+                sep_g,
+                slices_a,
+                slices_b,
+                a_child,
+                b_child,
+            } => {
+                (nodes.len() + sep_local.len() + sep_dq.len() + sep_g.len()) * U32
+                    + slice_bytes(slices_a)
+                    + slice_bytes(slices_b)
+                    + node_bytes(a_child)
+                    + node_bytes(b_child)
+            }
+        }
 }
 
 fn quantize(d: f64, unit: f64) -> u32 {
@@ -262,6 +300,14 @@ impl FieldIntegrator for SeparatorFactorization {
     }
     fn len(&self) -> usize {
         self.n
+    }
+
+    /// Separator tree + kernel lookup table (`O(N log N)` quantized
+    /// distance entries for mesh graphs).
+    fn resident_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + node_bytes(&self.root)
+            + self.f_table.len() * std::mem::size_of::<f64>()
     }
 
     /// Recursive accumulation over the separator tree. All per-node

@@ -77,7 +77,9 @@ impl std::error::Error for GfiError {}
 /// came from a mesh; absent for bare ε-NN workloads).
 #[derive(Clone)]
 pub struct Scene {
+    /// Node coordinates (may be empty for graph-only scenes).
     pub points: PointCloud,
+    /// Graph metric over the same nodes, when one exists.
     pub graph: Option<CsrGraph>,
 }
 
@@ -112,8 +114,16 @@ impl Scene {
         self.graph.as_ref().map(|g| g.n).unwrap_or_else(|| self.points.len())
     }
 
+    /// Whether the scene has zero nodes.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Estimated resident heap bytes of the stored coordinates + graph —
+    /// the weight the engine's bounded cloud cache charges per scene.
+    pub fn resident_bytes(&self) -> usize {
+        self.points.len() * std::mem::size_of::<[f64; 3]>()
+            + self.graph.as_ref().map(CsrGraph::resident_bytes).unwrap_or(0)
     }
 
     fn validate(&self) -> Result<(), GfiError> {

@@ -21,9 +21,11 @@ pub struct WeightedTree {
 }
 
 impl WeightedTree {
+    /// Total node count, including virtual (FRT) nodes.
     pub fn len(&self) -> usize {
         self.parent.len()
     }
+    /// Whether the tree has zero nodes.
     pub fn is_empty(&self) -> bool {
         self.parent.is_empty()
     }

@@ -400,8 +400,11 @@ pub struct TreeEnsembleIntegrator {
 /// Which tree distribution to sample.
 #[derive(Clone, Copy, Debug)]
 pub enum TreeKind {
+    /// Minimum spanning tree (Prim) — the naive embedding.
     Mst,
+    /// Bartal (1996) low-diameter randomized decomposition.
     Bartal,
+    /// Fakcharoenphol–Rao–Talwar (2004) hierarchical cut decomposition.
     Frt,
 }
 
@@ -436,6 +439,17 @@ impl FieldIntegrator for TreeEnsembleIntegrator {
     }
     fn len(&self) -> usize {
         self.trees[0].tree.n_original
+    }
+    /// Per tree: parent/weight/order/decay arrays over all (incl.
+    /// virtual) nodes — `O(k·N)` total.
+    fn resident_bytes(&self) -> usize {
+        let per_node = 2 * std::mem::size_of::<usize>() + 2 * std::mem::size_of::<f64>();
+        std::mem::size_of::<Self>()
+            + self
+                .trees
+                .iter()
+                .map(|pt| std::mem::size_of::<PreparedTree>() + pt.tree.len() * per_node)
+                .sum::<usize>()
     }
     /// Sequential accumulation over the (small, k ≈ 3–20) ensemble with
     /// workspace-pooled DP scratch. This trades the old per-tree

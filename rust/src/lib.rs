@@ -11,7 +11,13 @@
 //! * L2 (python/compile/model.py): JAX RFD pipeline, AOT-lowered to HLO.
 //! * L1 (python/compile/kernels/): Pallas random-feature kernel.
 //!
-//! See DESIGN.md for the system inventory and the per-experiment index.
+//! See docs/ARCHITECTURE.md for the layer map (with file pointers),
+//! docs/PROTOCOL.md for the serving wire protocol, and DESIGN.md for the
+//! system inventory and the per-experiment index.
+
+// Doc debt stays measured: warn-level here, enforced as an advisory
+// `RUSTDOCFLAGS="-D warnings" cargo doc` step in the CI lint job.
+#![warn(missing_docs)]
 
 pub mod classify;
 pub mod coordinator;

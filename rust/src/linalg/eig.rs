@@ -14,7 +14,9 @@ use super::Mat;
 /// eigenvalues ascending, eigenvectors in the *columns* of `vectors`.
 #[derive(Clone, Debug)]
 pub struct EighResult {
+    /// Eigenvalues, ascending.
     pub values: Vec<f64>,
+    /// Eigenvectors in the columns, matching `values` positionally.
     pub vectors: Mat,
 }
 

@@ -31,7 +31,9 @@ use crate::util::par;
 /// transpose (handled in the packing step — nothing is materialized).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Trans {
+    /// Use the operand as stored.
     No,
+    /// Use the operand's transpose.
     Yes,
 }
 

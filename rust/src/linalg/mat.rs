@@ -9,16 +9,21 @@ use std::ops::{Index, IndexMut};
 /// Row-major dense `f64` matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major element storage, `rows * cols` long.
     pub data: Vec<f64>,
 }
 
 impl Mat {
+    /// All-zero `rows × cols` matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Mat { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// `n × n` identity.
     pub fn eye(n: usize) -> Self {
         let mut m = Mat::zeros(n, n);
         for i in 0..n {
@@ -27,6 +32,7 @@ impl Mat {
         m
     }
 
+    /// Builds from row slices (all the same length).
     pub fn from_rows(rows: &[&[f64]]) -> Self {
         let r = rows.len();
         let c = if r == 0 { 0 } else { rows[0].len() };
@@ -38,6 +44,7 @@ impl Mat {
         Mat { rows: r, cols: c, data }
     }
 
+    /// Wraps row-major storage of exactly `rows * cols` elements.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
         assert_eq!(data.len(), rows * cols);
         Mat { rows, cols, data }
@@ -48,16 +55,20 @@ impl Mat {
         Mat { rows: xs.len(), cols: 1, data: xs.to_vec() }
     }
 
+    /// Row `r` as a slice.
     #[inline]
     pub fn row(&self, r: usize) -> &[f64] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Row `r` as a mutable slice.
     #[inline]
     pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Column `c`, copied out (see [`Mat::copy_col_into`] to reuse a
+    /// buffer).
     pub fn col(&self, c: usize) -> Vec<f64> {
         let mut out = vec![0.0; self.rows];
         self.copy_col_into(c, &mut out);
@@ -74,6 +85,8 @@ impl Mat {
         }
     }
 
+    /// Materialized transpose (blocked copy). The product paths take
+    /// [`Trans`] flags instead — prefer those on hot paths.
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
         // Blocked transpose for cache friendliness.
@@ -162,6 +175,7 @@ impl Mat {
         }
     }
 
+    /// Elementwise `a · self`.
     pub fn scale(&self, a: f64) -> Mat {
         Mat {
             rows: self.rows,
@@ -170,6 +184,7 @@ impl Mat {
         }
     }
 
+    /// Elementwise sum.
     pub fn add(&self, other: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         Mat {
@@ -179,6 +194,7 @@ impl Mat {
         }
     }
 
+    /// Elementwise difference.
     pub fn sub(&self, other: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         Mat {
@@ -188,6 +204,7 @@ impl Mat {
         }
     }
 
+    /// In-place elementwise `self += other`.
     pub fn add_assign(&mut self, other: &Mat) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         for (a, b) in self.data.iter_mut().zip(&other.data) {
@@ -195,6 +212,7 @@ impl Mat {
         }
     }
 
+    /// In-place `self += alpha · other`.
     pub fn axpy(&mut self, alpha: f64, other: &Mat) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         for (a, b) in self.data.iter_mut().zip(&other.data) {

@@ -8,7 +8,9 @@ use super::Mat;
 /// pivot permutation.
 #[derive(Clone, Debug)]
 pub struct LuFactors {
+    /// Packed factors: unit-lower `L` below the diagonal, `U` on/above.
     pub lu: Mat,
+    /// Row permutation applied during pivoting.
     pub piv: Vec<usize>,
     /// Smallest |pivot| encountered — a cheap conditioning signal.
     pub min_pivot: f64,

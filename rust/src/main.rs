@@ -3,10 +3,18 @@
 //!
 //! ```text
 //! repro serve [--addr 127.0.0.1:7878] [--artifacts artifacts]
+//!             [--shards 8] [--max-resident-mb MB] [--max-clouds N]
+//!             [--max-conns 64]
 //! repro reproduce <experiment-id|all> [--quick]
 //! repro list
 //! repro selfcheck [--artifacts artifacts]
 //! ```
+//!
+//! `--max-resident-mb` bounds the prepared-integrator cache (LRU
+//! eviction past the budget), `--max-clouds` bounds registered scenes,
+//! `--shards` sets cache lock sharding, and `--max-conns` caps
+//! concurrent server connections. Unset = unbounded (the pre-cache
+//! behavior). See docs/ARCHITECTURE.md and docs/PROTOCOL.md.
 //!
 //! (Hand-rolled arg parsing: the offline build has no clap.)
 
@@ -65,15 +73,55 @@ fn dispatch(args: &[String]) -> Result<()> {
 fn serve(args: &[String]) -> Result<()> {
     let addr = opt(args, "--addr", "127.0.0.1:7878");
     let artifacts = opt(args, "--artifacts", "artifacts");
+    let parse_num = |name: &str| -> Result<Option<u64>> {
+        let raw = opt(args, name, "");
+        if raw.is_empty() {
+            Ok(None)
+        } else {
+            raw.parse::<u64>()
+                .map(Some)
+                .map_err(|_| gfi::anyhow!("{name} expects a non-negative integer, got '{raw}'"))
+        }
+    };
+    let mut cfg = gfi::coordinator::EngineConfig::default();
     let dir = std::path::Path::new(artifacts);
-    let engine = Arc::new(gfi::coordinator::Engine::new(
-        dir.join("manifest.json").exists().then_some(dir),
-    ));
+    if dir.join("manifest.json").exists() {
+        cfg = cfg.artifacts(dir);
+    }
+    if let Some(n) = parse_num("--shards")? {
+        cfg = cfg.shards(n as usize);
+    }
+    if let Some(mb) = parse_num("--max-resident-mb")? {
+        cfg = cfg.max_resident_bytes(mb.saturating_mul(1 << 20));
+    }
+    if let Some(n) = parse_num("--max-clouds")? {
+        cfg = cfg.max_clouds(n as usize);
+    }
+    let server_cfg = gfi::coordinator::server::ServerConfig {
+        max_connections: parse_num("--max-conns")?
+            .map(|n| n as usize)
+            .unwrap_or_else(|| gfi::coordinator::server::ServerConfig::default().max_connections),
+    };
+    let engine = Arc::new(cfg.build());
+    let ecfg = engine.config();
     println!(
-        "gfi coordinator: pjrt={} (artifacts: {artifacts})",
-        engine.has_pjrt()
+        "gfi coordinator: pjrt={} (artifacts: {artifacts}), shards={}, \
+         max_resident_bytes={}, max_clouds={}, max_conns={}",
+        engine.has_pjrt(),
+        ecfg.shards,
+        if ecfg.max_resident_bytes == u64::MAX {
+            "unbounded".to_string()
+        } else {
+            ecfg.max_resident_bytes.to_string()
+        },
+        if ecfg.max_clouds == usize::MAX {
+            "unbounded".to_string()
+        } else {
+            ecfg.max_clouds.to_string()
+        },
+        server_cfg.max_connections,
     );
-    gfi::coordinator::server::serve(engine, addr, |a| {
+    gfi::coordinator::server::serve_with(engine, addr, server_cfg, |a| {
         println!("listening on {a} (JSON lines; send {{\"op\":\"shutdown\"}} to stop)");
     })
 }

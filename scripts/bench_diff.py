@@ -1,11 +1,17 @@
 #!/usr/bin/env python3
 """Diff two BENCH_*.json files (criterion-lite output) by benchmark median.
 
-Usage: bench_diff.py PREVIOUS.json CURRENT.json
+Usage: bench_diff.py [--fail-above PCT] PREVIOUS.json CURRENT.json
 
 Prints a per-benchmark table of previous/current medians and the ratio,
-flagging cases that moved more than the noise threshold. Report-only:
-always exits 0 (CI smoke budgets are too noisy to gate merges on).
+flagging cases that moved more than the noise threshold.
+
+By default the diff is report-only and always exits 0 (CI smoke budgets
+are too noisy to gate merges on). With `--fail-above PCT` the script
+exits 1 when any benchmark's current median exceeds its previous median
+by more than PCT percent (e.g. `--fail-above 50` fails on a >1.5x
+slowdown) — the opt-in gate for runs with real budgets (see
+docs/ARCHITECTURE.md, "Performance tracking").
 """
 
 import json
@@ -31,15 +37,49 @@ def fmt_ns(ns):
     return f"{ns:.0f} ns"
 
 
+def parse_args(argv):
+    fail_above = None
+    paths = []
+    i = 0
+    while i < len(argv):
+        arg = argv[i]
+        if arg == "--fail-above":
+            if i + 1 >= len(argv):
+                print("--fail-above needs a percentage", file=sys.stderr)
+                return None
+            try:
+                fail_above = float(argv[i + 1])
+            except ValueError:
+                print(f"--fail-above: not a number: {argv[i + 1]!r}", file=sys.stderr)
+                return None
+            i += 2
+        elif arg.startswith("--fail-above="):
+            try:
+                fail_above = float(arg.split("=", 1)[1])
+            except ValueError:
+                print(f"--fail-above: not a number: {arg!r}", file=sys.stderr)
+                return None
+            i += 1
+        else:
+            paths.append(arg)
+            i += 1
+    if len(paths) != 2:
+        return None
+    return fail_above, paths[0], paths[1]
+
+
 def main():
-    if len(sys.argv) != 3:
+    parsed = parse_args(sys.argv[1:])
+    if parsed is None:
         print(__doc__, file=sys.stderr)
         return 2
-    prev, cur = load(sys.argv[1]), load(sys.argv[2])
+    fail_above, prev_path, cur_path = parsed
+    prev, cur = load(prev_path), load(cur_path)
     names = sorted(set(prev) | set(cur))
     width = max((len(n) for n in names), default=4)
     print(f"{'benchmark':<{width}}  {'previous':>12}  {'current':>12}  {'ratio':>7}  flag")
-    slower, faster = [], []
+    slower, faster, failures = [], [], []
+    fail_ratio = None if fail_above is None else 1.0 + fail_above / 100.0
     for name in names:
         p, c = prev.get(name), cur.get(name)
         if p is None:
@@ -56,6 +96,9 @@ def main():
         elif ratio < IMPROVEMENT:
             flag = "faster"
             faster.append(name)
+        if fail_ratio is not None and ratio > fail_ratio:
+            flag = (flag + " FAIL").strip()
+            failures.append(name)
         print(f"{name:<{width}}  {fmt_ns(p):>12}  {fmt_ns(c):>12}  {ratio:>6.2f}x  {flag}")
     print()
     print(
@@ -64,6 +107,13 @@ def main():
     )
     if slower:
         print("slower:", ", ".join(slower))
+    if failures:
+        print(
+            f"FAIL: {len(failures)} benchmark(s) regressed past the "
+            f"--fail-above {fail_above}% gate:",
+            ", ".join(failures),
+        )
+        return 1
     return 0
 
 

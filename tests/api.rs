@@ -1,9 +1,12 @@
 //! Public-API contract tests for the unified integrator lifecycle:
 //! typed `prepare` error paths, `apply_into` vs `apply` bitwise parity
-//! per backend, batched apply, workspace reuse, and the engine-level
-//! cache-key guarantees (distinct custom kernels never collide).
+//! per backend, batched apply, workspace reuse, the engine-level
+//! cache-key guarantees (distinct custom kernels never collide), the
+//! bounded-cache lifecycle (budget holds under churn; evicted entries
+//! re-prepare bitwise-identically), and concurrent serving through the
+//! TCP front-end.
 
-use gfi::coordinator::Engine;
+use gfi::coordinator::{server, Engine, EngineConfig};
 use gfi::integrators::rfd::RfdConfig;
 use gfi::integrators::sf::SfConfig;
 use gfi::integrators::trees::TreeKind;
@@ -207,4 +210,196 @@ fn engine_integrate_into_handles_caller_buffers() {
     assert_eq!(out.data.as_ptr(), ptr);
     let (want, _) = engine.integrate(id, &spec, &field).unwrap();
     assert_eq!(want.data, out.data);
+}
+
+/// Every backend reports a resident footprint that at least covers its
+/// dominant storage, and the dense backends dominate the low-rank ones —
+/// the ordering the cost-aware cache relies on.
+#[test]
+fn resident_bytes_reflect_backend_storage() {
+    let scene = mesh_scene();
+    let n = scene.len();
+    for spec in all_backend_specs() {
+        let integ = prepare(&scene, &spec).unwrap();
+        assert!(
+            integ.resident_bytes() >= n * 8,
+            "{spec:?}: implausibly small resident_bytes {}",
+            integ.resident_bytes()
+        );
+    }
+    let dense = prepare(&scene, &IntegratorSpec::BfSp(KernelFn::ExpNeg(1.0))).unwrap();
+    let lowrank =
+        prepare(&scene, &IntegratorSpec::Rfd(RfdConfig { num_features: 4, ..Default::default() }))
+            .unwrap();
+    assert!(
+        dense.resident_bytes() >= n * n * 8,
+        "dense kernel must be charged its n² matrix"
+    );
+    assert!(
+        dense.resident_bytes() > lowrank.resident_bytes(),
+        "cost accounting must separate dense ({}) from low-rank ({})",
+        dense.resident_bytes(),
+        lowrank.resident_bytes()
+    );
+}
+
+/// Acceptance: with `max_resident_bytes` set, a churn workload over more
+/// distinct `(cloud, spec)` pairs than the budget holds keeps reported
+/// resident bytes ≤ budget, surfaces evictions in the stats, and
+/// re-requesting an evicted spec returns results bitwise-identical to an
+/// unbounded engine.
+#[test]
+fn bounded_engine_holds_budget_and_rebuilds_bitwise_identically() {
+    // Probe the per-entry cost so the budget holds exactly ~2 of the 5
+    // prepared integrators used below.
+    let probe = Engine::new(None);
+    let pid = probe.register_mesh(gfi::mesh::icosphere(1), "probe");
+    let pn = probe.cloud(pid).unwrap().scene.len();
+    let probe_spec = IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() });
+    probe.integrate(pid, &probe_spec, &rand_field(pn, 2, 1)).unwrap();
+    let budget = probe.resident_bytes() * 5 / 2;
+
+    let bounded = EngineConfig::default()
+        .shards(4)
+        .max_resident_bytes(budget)
+        .build();
+    let unbounded = Engine::new(None);
+    let bid = bounded.register_mesh(gfi::mesh::icosphere(1), "s");
+    let uid = unbounded.register_mesh(gfi::mesh::icosphere(1), "s");
+    let n = bounded.cloud(bid).unwrap().scene.len();
+    let field = rand_field(n, 2, 2);
+    let specs: Vec<IntegratorSpec> = (0..5)
+        .map(|seed| {
+            IntegratorSpec::Rfd(RfdConfig { num_features: 8, seed, ..Default::default() })
+        })
+        .collect();
+
+    // Two full churn passes: pass 2 re-requests entries pass 1 evicted.
+    let mut rebuilt = 0;
+    for pass in 0..2 {
+        for spec in &specs {
+            let (got, info) = bounded.integrate(bid, spec, &field).unwrap();
+            let (want, _) = unbounded.integrate(uid, spec, &field).unwrap();
+            assert_eq!(
+                want.data, got.data,
+                "bounded engine diverged from unbounded on {spec:?}"
+            );
+            assert!(
+                bounded.resident_bytes() <= budget,
+                "resident {} exceeds budget {budget}",
+                bounded.resident_bytes()
+            );
+            if pass == 1 && !info.cache_hit {
+                rebuilt += 1;
+            }
+        }
+    }
+    let stats = bounded.cache_stats();
+    assert!(
+        stats.integrators.evictions >= 5,
+        "5 specs × 2 passes against a 2-entry budget must evict: {stats:?}"
+    );
+    assert!(rebuilt >= 1, "second pass must transparently re-prepare evicted entries");
+    // The unbounded engine kept everything (and reports it).
+    assert_eq!(unbounded.cache_stats().integrators.entries, 5);
+    assert_eq!(unbounded.cache_stats().integrators.evictions, 0);
+}
+
+/// Four concurrent wire clients across mixed backends: every response is
+/// well-formed and the per-backend metrics in `stats` sum to the request
+/// total.
+#[test]
+fn concurrent_server_clients_mixed_backends() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::Arc;
+
+    const CLIENTS: usize = 4;
+    const REQUESTS: usize = 6;
+    let backends: [&str; 4] = ["rfd", "bf_sp", "almohy", "trees_mst"];
+
+    let engine = Arc::new(Engine::new(None));
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let eng2 = engine.clone();
+    let server_thread = std::thread::spawn(move || {
+        server::serve_with(
+            eng2,
+            "127.0.0.1:0",
+            server::ServerConfig { max_connections: CLIENTS + 1 },
+            move |a| addr_tx.send(a).unwrap(),
+        )
+        .unwrap();
+    });
+    let addr = addr_rx.recv().unwrap();
+
+    let send = |stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str| {
+        writeln!(stream, "{line}").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        gfi::util::json::parse(&resp).unwrap()
+    };
+
+    let mut ctl = TcpStream::connect(addr).unwrap();
+    let mut ctl_reader = BufReader::new(ctl.try_clone().unwrap());
+    let reg = send(
+        &mut ctl,
+        &mut ctl_reader,
+        r#"{"op":"register_mesh","kind":"icosphere","param":1}"#,
+    );
+    let n = reg.get("n").unwrap().as_usize().unwrap();
+
+    std::thread::scope(|s| {
+        let backends = &backends;
+        for cid in 0..CLIENTS {
+            s.spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut rng = Rng::new(cid as u64 + 1);
+                for r in 0..REQUESTS {
+                    let backend = backends[(cid + r) % backends.len()];
+                    let field: Vec<String> =
+                        (0..n).map(|_| format!("{:.5}", rng.gaussian())).collect();
+                    let req = format!(
+                        r#"{{"op":"integrate","cloud":1,"backend":"{backend}","field":[{}],"d":1,"lambda":{},"m":8,"count":2}}"#,
+                        field.join(","),
+                        if backend == "almohy" { -0.2 } else { 1.0 },
+                    );
+                    writeln!(stream, "{req}").unwrap();
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp).unwrap();
+                    let json = gfi::util::json::parse(&resp)
+                        .unwrap_or_else(|e| panic!("malformed response {resp:?}: {e}"));
+                    assert_eq!(
+                        json.get("ok").and_then(|j| j.as_bool()),
+                        Some(true),
+                        "{json}"
+                    );
+                    assert_eq!(
+                        json.get("result").unwrap().as_arr().unwrap().len(),
+                        n,
+                        "wrong result length from {backend}"
+                    );
+                }
+            });
+        }
+    });
+
+    let stats = send(&mut ctl, &mut ctl_reader, r#"{"op":"stats"}"#);
+    let by_backend = stats.get("backends").unwrap();
+    // spec.name() collapses the tree kinds to "trees".
+    let expected = [("rfd", "rfd"), ("bf_sp", "bf_sp"), ("almohy", "almohy"), ("trees_mst", "trees")];
+    let mut total = 0;
+    for (wire, metric) in expected {
+        let count = by_backend
+            .get(metric)
+            .and_then(|b| b.get("count"))
+            .and_then(|c| c.as_usize())
+            .unwrap_or_else(|| panic!("no metrics for {wire} (as {metric}): {stats}"));
+        assert_eq!(count, CLIENTS * REQUESTS / backends.len(), "{metric}");
+        total += count;
+    }
+    assert_eq!(total, CLIENTS * REQUESTS, "per-backend metrics don't sum to the total");
+
+    send(&mut ctl, &mut ctl_reader, r#"{"op":"shutdown"}"#);
+    server_thread.join().unwrap();
 }
