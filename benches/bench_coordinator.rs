@@ -1,18 +1,21 @@
 //! Coordinator + runtime benchmarks: request-path latency of the cached
 //! integrator route (both the allocating `integrate` and the
 //! allocation-free `integrate_into`), the PJRT artifact route (when
-//! artifacts exist), batcher throughput, and the bounded-cache churn
-//! path (eviction + transparent re-prepare on every request).
+//! artifacts exist), batcher throughput, the bounded-cache churn path
+//! (eviction + transparent re-prepare on every request), and the
+//! mesh-dynamics frame-update path (`update_cloud` + SF dirty-subtree
+//! refresh vs dropping the artifacts and paying a full re-prepare).
 //!
 //! Writes `BENCH_coordinator.json` so CI's perf trajectory tracks the
 //! serving path alongside `BENCH_integrators.json`.
 
 use gfi::coordinator::batcher::{Batcher, BatcherConfig};
-use gfi::coordinator::{Engine, EngineConfig};
+use gfi::coordinator::{Engine, EngineConfig, UpdateOpts};
 use gfi::integrators::rfd::RfdConfig;
 use gfi::integrators::sf::SfConfig;
-use gfi::integrators::IntegratorSpec;
+use gfi::integrators::{IntegratorSpec, Scene};
 use gfi::linalg::Mat;
+use gfi::pointcloud::PointCloud;
 use gfi::util::bench::{write_json, Bench, BenchResult};
 use gfi::util::rng::Rng;
 use std::sync::Arc;
@@ -107,6 +110,74 @@ fn main() {
             stats.integrators.evictions,
             churn_engine.resident_bytes()
         );
+    }
+
+    // Mesh-dynamics frame updates on a 10k-node icosphere: every
+    // iteration moves ~1% of the vertices (two alternating localized
+    // bumps, so each update really changes geometry).
+    // `engine/update_frame` pays update_cloud's incremental SF refresh +
+    // one (cache-hit) request; `engine/update_frame_reprepare` drops the
+    // artifacts instead and pays the full prepare on the request — the
+    // gap between the two medians is the dynamic-scene win ROADMAP
+    // tracks.
+    {
+        let mut dmesh = gfi::mesh::icosphere(5); // 10242 vertices
+        dmesh.normalize_unit_box();
+        let dn = dmesh.num_verts();
+        let dyn_engine = Engine::new(None);
+        let did = dyn_engine.register_scene(Scene::from_mesh(&dmesh), "dyn");
+        let sf_spec = IntegratorSpec::Sf(SfConfig { separator_size: 8, ..Default::default() });
+        let dfield = Mat::from_vec(dn, 3, (0..dn * 3).map(|_| rng.gaussian()).collect());
+        dyn_engine.integrate(did, &sf_spec, &dfield).unwrap(); // warm
+        let frame = |center: usize| -> PointCloud {
+            PointCloud::new(gfi::mesh::radial_bump(&dmesh.verts, center, dn / 100, 0.03))
+        };
+        let frames = [frame(11), frame(9173)];
+        // Acceptance check (ISSUE 4): a 1%-vertex perturbation refreshes
+        // to something bitwise-identical to a full prepare while reusing
+        // the majority of the separator tree.
+        let info = dyn_engine
+            .update_cloud(did, frames[0].clone(), &UpdateOpts::default())
+            .unwrap();
+        assert!(
+            info.reused_nodes > info.rebuilt_nodes,
+            "refresh must reuse the majority of the tree: {info:?}"
+        );
+        let (out, served) = dyn_engine.integrate(did, &sf_spec, &dfield).unwrap();
+        assert!(served.cache_hit, "refreshed artifact must serve the request");
+        let fresh = gfi::integrators::prepare(&dyn_engine.cloud(did).unwrap().scene, &sf_spec)
+            .unwrap();
+        assert_eq!(
+            out.data,
+            fresh.apply(&dfield).data,
+            "refresh diverged from a full prepare"
+        );
+        println!(
+            "update_frame acceptance: n={dn} dirty={} reused={}/{} bitwise-identical",
+            info.dirty,
+            info.reused_nodes,
+            info.reused_nodes + info.rebuilt_nodes
+        );
+        let mut turn = 0usize;
+        results.push(bench.run(&format!("engine/update_frame/n={dn}"), || {
+            turn += 1;
+            dyn_engine
+                .update_cloud(did, frames[turn % 2].clone(), &UpdateOpts::default())
+                .unwrap();
+            dyn_engine.integrate(did, &sf_spec, &dfield).unwrap()
+        }));
+        let mut turn2 = 1usize;
+        results.push(bench.run(&format!("engine/update_frame_reprepare/n={dn}"), || {
+            turn2 += 1;
+            dyn_engine
+                .update_cloud(
+                    did,
+                    frames[turn2 % 2].clone(),
+                    &UpdateOpts { refresh: false, ..Default::default() },
+                )
+                .unwrap();
+            dyn_engine.integrate(did, &sf_spec, &dfield).unwrap()
+        }));
     }
 
     write_json("BENCH_coordinator.json", &results).expect("write BENCH_coordinator.json");

@@ -230,15 +230,21 @@ impl<K: Hash + Eq + Clone, V: Clone> ShardedCache<K, V> {
                     }
                 }
             }
-            let (i, key, _) = best?;
-            let removed = self.shards[i].lock().unwrap().remove(&key);
-            if let Some(e) = removed {
-                self.weight.fetch_sub(e.weight, Ordering::Relaxed);
-                self.entries.fetch_sub(1, Ordering::Relaxed);
-                self.evictions.fetch_add(1, Ordering::Relaxed);
-                return Some(key);
+            let (i, key, stamp) = best?;
+            let mut map = self.shards[i].lock().unwrap();
+            // Re-validate under the shard lock: if a concurrent `get`
+            // re-stamped the chosen victim (it is no longer the coldest
+            // entry) or a concurrent remove took it, rescan instead of
+            // evicting a hot key / giving up early.
+            let still_lru = map.get(&key).map_or(false, |e| e.last_used == stamp);
+            if !still_lru {
+                continue;
             }
-            // The victim vanished under a concurrent remove — rescan.
+            let e = map.remove(&key).expect("checked under the same lock");
+            self.weight.fetch_sub(e.weight, Ordering::Relaxed);
+            self.entries.fetch_sub(1, Ordering::Relaxed);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            return Some(key);
         }
     }
 
@@ -272,6 +278,28 @@ impl<K: Hash + Eq + Clone, V: Clone> ShardedCache<K, V> {
             }
         }
         dropped
+    }
+
+    /// Removes every entry whose key matches `pred` and hands the
+    /// `(key, value)` pairs back to the caller (explicit removals, not
+    /// evictions). This is the engine's artifact-migration primitive:
+    /// `update_cloud` takes a cloud's prepared integrators out, refreshes
+    /// them against the new scene epoch, and re-inserts the survivors
+    /// under their new keys.
+    pub fn take_if(&self, pred: impl Fn(&K) -> bool) -> Vec<(K, V)> {
+        let mut taken = Vec::new();
+        for shard in &self.shards {
+            let mut map = shard.lock().unwrap();
+            let victims: Vec<K> = map.keys().filter(|k| pred(k)).cloned().collect();
+            for k in victims {
+                if let Some(e) = map.remove(&k) {
+                    self.weight.fetch_sub(e.weight, Ordering::Relaxed);
+                    self.entries.fetch_sub(1, Ordering::Relaxed);
+                    taken.push((k, e.value));
+                }
+            }
+        }
+        taken
     }
 
     /// Live entry count across all shards.
@@ -402,6 +430,24 @@ mod tests {
         assert_eq!(c.len(), 2);
         assert_eq!(c.weight_bytes(), 10);
         assert_eq!(c.stats().evictions, 0, "explicit removals are not evictions");
+    }
+
+    #[test]
+    fn take_if_returns_entries_and_updates_weight() {
+        let c = cache(u64::MAX, usize::MAX);
+        for k in 0..6u64 {
+            c.insert(k, val(k as usize), 5);
+        }
+        let mut taken = c.take_if(|k| k % 2 == 0);
+        taken.sort_by_key(|(k, _)| *k);
+        assert_eq!(
+            taken.iter().map(|(k, v)| (*k, v.len())).collect::<Vec<_>>(),
+            vec![(0, 0), (2, 2), (4, 4)]
+        );
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.weight_bytes(), 15);
+        assert_eq!(c.stats().evictions, 0, "take_if entries are not evictions");
+        assert!(c.peek(&0).is_none() && c.peek(&1).is_some());
     }
 
     #[test]

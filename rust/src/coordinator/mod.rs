@@ -27,10 +27,22 @@
 //! * routes `RfdPjrt` requests to the **AOT/PJRT artifacts** when present
 //!   (`artifacts/manifest.json`), falling back to the pure-Rust kernel —
 //!   the two routes share one cache key on purpose;
+//! * serves **time-varying scenes** through [`Engine::update_cloud`]:
+//!   a frame update bumps the scene's epoch (cache keys are
+//!   `(cloud, epoch, spec)`, so artifacts of older epochs are retired
+//!   wholesale without scanning), diffs the new geometry against the old
+//!   ([`Scene::diff`]), and *selectively* migrates cached integrators —
+//!   SF trees are refreshed by dirty-subtree rebuild
+//!   ([`SeparatorFactorization::refresh`]), RFD re-features in its
+//!   existing Woodbury shapes, PJRT preps (scene-independent) carry over
+//!   verbatim, and only backends with no incremental path are dropped to
+//!   rebuild on demand;
 //! * **batches** concurrent requests for the same cloud+spec — see
 //!   [`batcher`];
 //! * records per-backend latency/throughput [`metrics`] and exposes cache
 //!   occupancy/hit/eviction counters ([`Engine::cache_stats`]).
+//!
+//! [`SeparatorFactorization::refresh`]: crate::integrators::sf::SeparatorFactorization::refresh
 //!
 //! Unkeyable specs (custom kernels without a label) are rejected with a
 //! typed error instead of silently sharing a cache slot — see
@@ -49,7 +61,8 @@ pub mod server;
 
 use crate::integrators::rfd::sample_features;
 use crate::integrators::{
-    prepare, validate_spec, FieldIntegrator, GfiError, IntegratorSpec, Scene, Workspace,
+    prepare, validate_spec, FieldIntegrator, GfiError, IntegratorSpec, Scene, SceneDelta,
+    Workspace,
 };
 use crate::linalg::Mat;
 use crate::mesh::TriMesh;
@@ -67,8 +80,18 @@ pub use crate::integrators::IntegratorSpec as Backend;
 
 /// Workspaces retained in the idle pool; checkouts beyond this still
 /// work, the surplus is simply dropped at check-in so a burst of
-/// concurrency cannot grow the pool without bound.
-const MAX_POOLED_WORKSPACES: usize = 32;
+/// concurrency cannot grow the pool without bound. Kept in sync with the
+/// server's default connection cap (`ServerConfig::default`), so
+/// default-config full concurrency still serves every request from a
+/// warm workspace.
+const MAX_POOLED_WORKSPACES: usize = 64;
+
+/// Cache key of one prepared artifact: `(cloud id, scene epoch, spec
+/// cache key)`. The epoch tag is what lets [`Engine::update_cloud`]
+/// retire every artifact of an outdated scene version without touching
+/// entries individually — old-epoch keys simply stop being looked up,
+/// and are swept opportunistically.
+type ArtifactKey = (u64, u64, String);
 
 /// Engine capacity/topology configuration, with a builder-style API:
 ///
@@ -147,6 +170,15 @@ pub struct CloudEntry {
     pub scene: Scene,
     /// Client-supplied display name.
     pub name: String,
+    /// The unit-box normalization `p ↦ (p − center) / scale` applied at
+    /// registration ([`Engine::register_cloud`] /
+    /// [`Engine::register_mesh`]). [`Engine::update_cloud`] re-applies it
+    /// to every frame, so wire clients keep sending coordinates in the
+    /// frame they registered in — which also keeps per-frame dirty sets
+    /// localized (the stored normalized coordinates of unmoved vertices
+    /// reproduce bitwise). `None` for scenes registered as-is
+    /// ([`Engine::register_scene`]).
+    pub norm: Option<([f64; 3], f64)>,
 }
 
 /// Pre-sampled RFD features for the PJRT path.
@@ -162,6 +194,50 @@ impl PjrtPrep {
             + self.omegas.len() * std::mem::size_of::<[f64; 3]>()
             + self.qscale.len() * std::mem::size_of::<f64>()
     }
+}
+
+/// Options for [`Engine::update_cloud`].
+#[derive(Clone, Debug)]
+pub struct UpdateOpts {
+    /// Incrementally refresh cached prepared integrators into the new
+    /// epoch (SF dirty-subtree rebuild, RFD in-place re-featuring)
+    /// instead of dropping them to rebuild on demand.
+    pub refresh: bool,
+    /// Recompute mesh-graph edge weights from the new positions
+    /// (Euclidean edge lengths, the `TriMesh::to_graph` convention).
+    /// Disable only for scenes whose graph weights are not a function of
+    /// the coordinates.
+    pub recompute_edge_weights: bool,
+}
+
+impl Default for UpdateOpts {
+    fn default() -> Self {
+        UpdateOpts { refresh: true, recompute_edge_weights: true }
+    }
+}
+
+/// Result metadata for one [`Engine::update_cloud`].
+#[derive(Clone, Debug, Default)]
+pub struct UpdateInfo {
+    /// Scene epoch after the update (unchanged when the update was a
+    /// geometric no-op).
+    pub epoch: u64,
+    /// Nodes the diff marked dirty (moved coordinates or incident edge
+    /// weight changes).
+    pub dirty: usize,
+    /// Cached integrators migrated into the new epoch by incremental
+    /// refresh.
+    pub refreshed: usize,
+    /// Cached integrators dropped (no incremental path, refresh failure,
+    /// or `refresh: false`); they rebuild transparently on next request.
+    pub dropped: usize,
+    /// Separator-tree nodes (summed over refreshed SF integrators)
+    /// carried over unchanged.
+    pub reused_nodes: usize,
+    /// Separator-tree nodes recomputed during refresh.
+    pub rebuilt_nodes: usize,
+    /// Seconds spent refreshing cached integrators.
+    pub refresh_seconds: f64,
 }
 
 /// Result metadata for one integration.
@@ -195,8 +271,8 @@ pub struct EngineCacheStats {
 pub struct Engine {
     cfg: EngineConfig,
     clouds: ShardedCache<u64, Arc<CloudEntry>>,
-    integrators: ShardedCache<(u64, String), Arc<dyn FieldIntegrator>>,
-    pjrt_preps: ShardedCache<(u64, String), Arc<PjrtPrep>>,
+    integrators: ShardedCache<ArtifactKey, Arc<dyn FieldIntegrator>>,
+    pjrt_preps: ShardedCache<ArtifactKey, Arc<PjrtPrep>>,
     /// Pool of warm apply workspaces (one in flight per concurrent
     /// request; returned after each apply, capped at
     /// [`MAX_POOLED_WORKSPACES`]).
@@ -267,27 +343,49 @@ impl Engine {
     /// coldest registered cloud (and its prepared artifacts) when
     /// [`EngineConfig::max_clouds`] is reached.
     pub fn register_scene(&self, scene: Scene, name: &str) -> u64 {
+        self.register_entry(scene, name, None)
+    }
+
+    fn register_entry(
+        &self,
+        scene: Scene,
+        name: &str,
+        norm: Option<([f64; 3], f64)>,
+    ) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let weight = scene.resident_bytes() as u64;
-        let entry = Arc::new(CloudEntry { scene, name: name.to_string() });
+        self.insert_cloud(id, Arc::new(CloudEntry { scene, name: name.to_string(), norm }));
+        id
+    }
+
+    /// Inserts/replaces the scene entry under `id`, cascading the
+    /// artifact purge for any clouds the insert LRU-evicted.
+    fn insert_cloud(&self, id: u64, entry: Arc<CloudEntry>) {
+        let weight = entry.scene.resident_bytes() as u64;
         let outcome = self.clouds.insert(id, entry, weight);
         for evicted in outcome.evicted {
             self.purge_cloud_artifacts(evicted);
         }
-        id
     }
 
-    /// Registers a raw point cloud (normalized into the unit box);
-    /// returns its id.
+    /// Registers a raw point cloud (normalized into the unit box; the
+    /// transform is remembered so [`Engine::update_cloud`] frames stay in
+    /// the client's original coordinate frame); returns its id.
     pub fn register_cloud(&self, mut points: PointCloud, name: &str) -> u64 {
-        points.normalize_unit_box();
-        self.register_scene(Scene::from_points(points), name)
+        let (center, scale) = points.unit_box_transform();
+        points.apply_unit_transform(center, scale);
+        self.register_entry(Scene::from_points(points), name, Some((center, scale)))
     }
 
-    /// Registers a mesh: stores both the vertex cloud and the mesh graph.
+    /// Registers a mesh: stores both the vertex cloud and the mesh graph
+    /// (normalized into the unit box, transform remembered as for
+    /// [`Engine::register_cloud`]).
     pub fn register_mesh(&self, mut mesh: TriMesh, name: &str) -> u64 {
+        // TriMesh::normalize_unit_box applies the identical formula, so
+        // the remembered transform reproduces the stored coordinates
+        // bitwise when re-applied to an unmoved vertex.
+        let (center, scale) = PointCloud::new(mesh.verts.clone()).unit_box_transform();
         mesh.normalize_unit_box();
-        self.register_scene(Scene::from_mesh(&mesh), name)
+        self.register_entry(Scene::from_mesh(&mesh), name, Some((center, scale)))
     }
 
     /// Looks up a registered cloud (refreshing its LRU recency).
@@ -318,6 +416,128 @@ impl Engine {
         existed
     }
 
+    /// Applies one frame of a time-varying scene: replaces cloud `id`'s
+    /// coordinates with `new_points` — given in the *same coordinate
+    /// frame the cloud was registered in* (for clouds registered through
+    /// the normalizing [`Engine::register_cloud`] /
+    /// [`Engine::register_mesh`] ops, the remembered registration
+    /// transform is re-applied, never a fresh per-frame normalization,
+    /// which would shift every vertex; [`Engine::register_scene`] clouds
+    /// are taken as-is) — recomputes the mesh-graph edge weights (see
+    /// [`UpdateOpts::recompute_edge_weights`]), bumps the scene epoch,
+    /// and migrates the cloud's cached artifacts instead of purging them:
+    ///
+    /// * geometric no-op → nothing changes, the epoch stays put;
+    /// * localized move ([`Scene::diff`] → `Moved`) → each cached
+    ///   integrator is offered the dirty set through
+    ///   [`FieldIntegrator::refreshed`]; refreshable backends (SF, RFD)
+    ///   land in the new epoch pre-warmed, the rest rebuild on their next
+    ///   request. PJRT feature preps are scene-independent and carry over
+    ///   verbatim;
+    /// * incompatible update (defensive; `update_cloud` itself preserves
+    ///   topology and rejects node-count changes) → full artifact purge.
+    ///
+    /// The vertex count must match the registered scene; changing it is a
+    /// re-registration, not an update. Concurrent updates to the *same*
+    /// cloud are last-writer-wins — serialize per-cloud frame streams on
+    /// the caller side (concurrent `integrate` traffic needs no such
+    /// care: it sees either the old epoch's artifacts or the new ones,
+    /// both self-consistent).
+    pub fn update_cloud(
+        &self,
+        id: u64,
+        mut new_points: PointCloud,
+        opts: &UpdateOpts,
+    ) -> Result<UpdateInfo> {
+        let old = self.cloud(id)?;
+        if old.scene.points.is_empty() {
+            bail!("cloud {id} has no point coordinates to update");
+        }
+        if new_points.len() != old.scene.len() {
+            return Err(GfiError::SceneMismatch {
+                graph_n: old.scene.len(),
+                points_n: new_points.len(),
+            }
+            .into());
+        }
+        // Clouds registered through the normalizing ops carry their
+        // registration transform: re-apply it so clients keep sending
+        // frames in their original coordinate frame (unmoved vertices
+        // then reproduce the stored coordinates bitwise and the dirty
+        // set stays localized).
+        if let Some((center, scale)) = old.norm {
+            new_points.apply_unit_transform(center, scale);
+        }
+        let mut scene = Scene {
+            points: new_points,
+            graph: old.scene.graph.clone(),
+            epoch: old.scene.epoch,
+        };
+        if opts.recompute_edge_weights {
+            scene.recompute_edge_weights();
+        }
+        let delta = old.scene.diff(&scene);
+        let dirty = match delta {
+            SceneDelta::Unchanged => {
+                return Ok(UpdateInfo { epoch: old.scene.epoch, ..Default::default() })
+            }
+            SceneDelta::Incompatible { .. } => {
+                // Defensive fallback: no incremental path — behave like a
+                // re-registration under the same id.
+                scene.epoch = old.scene.epoch + 1;
+                let epoch = scene.epoch;
+                let entry =
+                    Arc::new(CloudEntry { scene, name: old.name.clone(), norm: old.norm });
+                self.insert_cloud(id, entry);
+                let dropped = self.purge_cloud_artifacts(id);
+                return Ok(UpdateInfo { epoch, dropped, ..Default::default() });
+            }
+            SceneDelta::Moved(dirty) => dirty,
+        };
+        scene.epoch = old.scene.epoch + 1;
+        let new_epoch = scene.epoch;
+        let entry = Arc::new(CloudEntry { scene, name: old.name.clone(), norm: old.norm });
+        self.insert_cloud(id, entry.clone());
+        let mut info = UpdateInfo { epoch: new_epoch, dirty: dirty.len(), ..Default::default() };
+        // Migrate only artifacts of the epoch we diffed against: an even
+        // older straggler (from a prepare that raced a previous update)
+        // would be refreshed against the wrong baseline — those are swept
+        // below instead.
+        let old_epoch = old.scene.epoch;
+        let old_arts = self.integrators.take_if(|k| k.0 == id && k.1 == old_epoch);
+        let ((), refresh_secs) = crate::util::timer::timed(|| {
+            for (key, integ) in old_arts {
+                let migrated = opts
+                    .refresh
+                    .then(|| integ.refreshed(&entry.scene, &dirty))
+                    .flatten();
+                match migrated {
+                    Some(Ok((fresh, rs))) => {
+                        let w = fresh.resident_bytes() as u64;
+                        let arc: Arc<dyn FieldIntegrator> = Arc::from(fresh);
+                        let _ = self.integrators.insert((id, new_epoch, key.2), arc, w);
+                        info.refreshed += 1;
+                        info.reused_nodes += rs.reused_nodes;
+                        info.rebuilt_nodes += rs.rebuilt_nodes;
+                    }
+                    Some(Err(_)) | None => info.dropped += 1,
+                }
+            }
+        });
+        info.refresh_seconds = refresh_secs;
+        // PJRT preps are a pure function of the spec (sampled features),
+        // never of the scene — carry them into the new epoch verbatim.
+        for (key, prep) in self.pjrt_preps.take_if(|k| k.0 == id && k.1 == old_epoch) {
+            let w = prep.resident_bytes() as u64;
+            let _ = self.pjrt_preps.insert((id, new_epoch, key.2), prep, w);
+        }
+        // Sweep stragglers a concurrent prepare may have inserted under
+        // the old epoch between our take and the scene swap.
+        self.integrators.remove_if(|k| k.0 == id && k.1 < new_epoch);
+        self.pjrt_preps.remove_if(|k| k.0 == id && k.1 < new_epoch);
+        Ok(info)
+    }
+
     /// Drops every prepared artifact (integrators + PJRT preps) for
     /// cloud `id`, keeping the scene registered; returns how many
     /// entries were dropped. The next request for any of them re-prepares
@@ -326,18 +546,14 @@ impl Engine {
         self.purge_cloud_artifacts(id)
     }
 
-    /// Drops the prepared artifact for one `(cloud, spec)` pair; returns
-    /// how many cache entries (integrator and/or PJRT prep) were
-    /// dropped. Fails only for unkeyable specs.
+    /// Drops the prepared artifact for one `(cloud, spec)` pair — every
+    /// epoch's copy, should stragglers from a concurrent update survive —
+    /// and returns how many cache entries (integrator and/or PJRT prep)
+    /// were dropped. Fails only for unkeyable specs.
     pub fn evict_spec(&self, id: u64, spec: &IntegratorSpec) -> Result<usize> {
-        let key = (id, spec.cache_key()?);
-        let mut dropped = 0;
-        if self.integrators.remove(&key) {
-            dropped += 1;
-        }
-        if self.pjrt_preps.remove(&key) {
-            dropped += 1;
-        }
+        let skey = spec.cache_key()?;
+        let dropped = self.integrators.remove_if(|k| k.0 == id && k.2 == skey)
+            + self.pjrt_preps.remove_if(|k| k.0 == id && k.2 == skey);
         Ok(dropped)
     }
 
@@ -396,7 +612,7 @@ impl Engine {
         entry: &CloudEntry,
         spec: &IntegratorSpec,
     ) -> Result<(Arc<dyn FieldIntegrator>, bool, f64)> {
-        let key = (id, spec.cache_key()?);
+        let key = (id, entry.scene.epoch, spec.cache_key()?);
         if let Some(i) = self.integrators.get(&key) {
             return Ok((i, true, 0.0));
         }
@@ -406,11 +622,16 @@ impl Engine {
         // An integrator outweighing the whole budget is served uncached
         // (`rejected` counter) — correctness never depends on caching.
         let _ = self.integrators.insert(key.clone(), built.clone(), weight);
-        // Close the unregister race: if the cloud vanished between our
-        // `cloud()` lookup and this insert, its artifact purge may have
-        // run before the insert landed — drop the orphan so nothing
-        // keyed to a dead cloud id survives.
-        if self.clouds.peek(&id).is_none() {
+        // Close the unregister/update races: if the cloud vanished — or
+        // moved to a newer epoch — between our `cloud()` lookup and this
+        // insert, the purge/sweep may have run before the insert landed.
+        // Drop the orphan so nothing keyed to a dead cloud id or a stale
+        // epoch survives to be migrated by a later update.
+        let stale = self
+            .clouds
+            .peek(&id)
+            .map_or(true, |cur| cur.scene.epoch != entry.scene.epoch);
+        if stale {
             self.integrators.remove(&key);
         }
         Ok((built, false, dt))
@@ -452,7 +673,7 @@ impl Engine {
         // otherwise skip validation and panic on e.g. a point-less scene).
         if let (IntegratorSpec::RfdPjrt(cfg), Some(rt)) = (spec, &self.runtime) {
             validate_spec(&entry.scene, spec)?;
-            let key = (id, spec.cache_key()?);
+            let key = (id, entry.scene.epoch, spec.cache_key()?);
             let cached = self.pjrt_preps.get(&key);
             let (prep, cache_hit, prep_secs) = if let Some(p) = cached {
                 (p, true, 0.0)
@@ -463,8 +684,13 @@ impl Engine {
                 });
                 let weight = p.resident_bytes() as u64;
                 let _ = self.pjrt_preps.insert(key.clone(), p.clone(), weight);
-                // Same unregister-race guard as the integrator cache.
-                if self.clouds.peek(&id).is_none() {
+                // Same unregister/stale-epoch guard as the integrator
+                // cache.
+                let stale = self
+                    .clouds
+                    .peek(&id)
+                    .map_or(true, |cur| cur.scene.epoch != entry.scene.epoch);
+                if stale {
                     self.pjrt_preps.remove(&key);
                 }
                 (p, false, dt)
@@ -738,6 +964,130 @@ mod tests {
         let _ = eng.integrate(id, &IntegratorSpec::Rfd(RfdConfig::default()), &field).unwrap();
         let snap = eng.metrics.snapshot();
         assert_eq!(snap.get("rfd").map(|s| s.count), Some(1));
+    }
+
+    #[test]
+    fn update_cloud_refreshes_sf_and_matches_full_prepare() {
+        let eng = engine();
+        let mut mesh = icosphere(3);
+        mesh.normalize_unit_box();
+        let id = eng.register_scene(Scene::from_mesh(&mesh), "dyn");
+        let n = mesh.num_verts();
+        let spec = IntegratorSpec::Sf(crate::integrators::sf::SfConfig {
+            threshold: 64,
+            ..Default::default()
+        });
+        let field = rand_field(n, 3, 7);
+        eng.integrate(id, &spec, &field).unwrap(); // warm the cache
+        let frame = crate::mesh::radial_bump(&mesh.verts, 11, n / 100, 0.05);
+        let info = eng
+            .update_cloud(id, crate::pointcloud::PointCloud::new(frame), &UpdateOpts::default())
+            .unwrap();
+        assert_eq!(info.epoch, 1);
+        assert!(info.dirty > 0, "{info:?}");
+        assert_eq!(info.refreshed, 1, "{info:?}");
+        assert_eq!(info.dropped, 0, "{info:?}");
+        assert!(
+            info.reused_nodes > info.rebuilt_nodes,
+            "a 1% perturbation must reuse the majority of the tree: {info:?}"
+        );
+        // The refreshed artifact serves the next request as a cache hit…
+        let (out, i2) = eng.integrate(id, &spec, &field).unwrap();
+        assert!(i2.cache_hit, "refreshed integrator must be pre-warmed");
+        // …and is bitwise what a fresh prepare on the updated scene gives.
+        let updated = eng.cloud(id).unwrap().scene.clone();
+        assert_eq!(updated.epoch, 1);
+        let fresh = crate::integrators::prepare(&updated, &spec).unwrap();
+        assert_eq!(out.data, fresh.apply(&field).data);
+    }
+
+    #[test]
+    fn update_cloud_without_refresh_drops_artifacts() {
+        let eng = engine();
+        let mut mesh = icosphere(2);
+        mesh.normalize_unit_box();
+        let id = eng.register_scene(Scene::from_mesh(&mesh), "dyn");
+        let n = mesh.num_verts();
+        let spec = IntegratorSpec::Sf(SfConfig { threshold: 32, ..Default::default() });
+        let field = rand_field(n, 1, 8);
+        eng.integrate(id, &spec, &field).unwrap();
+        let frame = crate::mesh::radial_bump(&mesh.verts, 0, 2, 0.04);
+        let info = eng
+            .update_cloud(
+                id,
+                crate::pointcloud::PointCloud::new(frame),
+                &UpdateOpts { refresh: false, ..Default::default() },
+            )
+            .unwrap();
+        assert_eq!((info.refreshed, info.dropped), (0, 1), "{info:?}");
+        let (_, i2) = eng.integrate(id, &spec, &field).unwrap();
+        assert!(!i2.cache_hit, "dropped artifact must re-prepare");
+    }
+
+    #[test]
+    fn update_cloud_noop_keeps_epoch_and_cache() {
+        let eng = engine();
+        let mut mesh = icosphere(2);
+        mesh.normalize_unit_box();
+        let id = eng.register_scene(Scene::from_mesh(&mesh), "dyn");
+        let n = mesh.num_verts();
+        let spec = IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() });
+        let field = rand_field(n, 1, 9);
+        eng.integrate(id, &spec, &field).unwrap();
+        let info = eng
+            .update_cloud(
+                id,
+                crate::pointcloud::PointCloud::new(mesh.verts.clone()),
+                &UpdateOpts::default(),
+            )
+            .unwrap();
+        assert_eq!(info.epoch, 0, "identical frame must not bump the epoch");
+        assert_eq!(info.dirty, 0);
+        let (_, i2) = eng.integrate(id, &spec, &field).unwrap();
+        assert!(i2.cache_hit, "no-op update must keep the cache warm");
+    }
+
+    #[test]
+    fn update_cloud_refreshes_rfd_on_bare_clouds() {
+        let eng = engine();
+        let raw = crate::pointcloud::random_cloud(60, &mut Rng::new(4));
+        let id = eng.register_cloud(raw.clone(), "scan");
+        let spec = IntegratorSpec::Rfd(RfdConfig { num_features: 8, seed: 2, ..Default::default() });
+        let field = rand_field(60, 2, 10);
+        eng.integrate(id, &spec, &field).unwrap();
+        // The client keeps speaking its original (pre-normalization)
+        // frame: perturb the raw scan; the engine re-applies the
+        // remembered registration transform, so only the moved point
+        // goes dirty.
+        let mut moved = raw;
+        moved.points[3][0] += 0.05;
+        let info = eng.update_cloud(id, moved, &UpdateOpts::default()).unwrap();
+        assert_eq!(info.refreshed, 1, "{info:?}");
+        assert_eq!(info.dirty, 1, "re-normalization must not smear the dirty set: {info:?}");
+        let (out, i2) = eng.integrate(id, &spec, &field).unwrap();
+        assert!(i2.cache_hit);
+        let updated = eng.cloud(id).unwrap().scene.clone();
+        let fresh = crate::integrators::prepare(&updated, &spec).unwrap();
+        assert_eq!(out.data, fresh.apply(&field).data);
+    }
+
+    #[test]
+    fn update_cloud_rejects_bad_inputs() {
+        let eng = engine();
+        // Unknown id.
+        assert!(eng
+            .update_cloud(
+                404,
+                crate::pointcloud::PointCloud::new(vec![[0.0; 3]]),
+                &UpdateOpts::default()
+            )
+            .is_err());
+        // Wrong vertex count.
+        let mut mesh = icosphere(1);
+        mesh.normalize_unit_box();
+        let id = eng.register_scene(Scene::from_mesh(&mesh), "s");
+        let short = crate::pointcloud::PointCloud::new(mesh.verts[1..].to_vec());
+        assert!(eng.update_cloud(id, short, &UpdateOpts::default()).is_err());
     }
 
     #[test]

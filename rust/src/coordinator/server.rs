@@ -2,10 +2,10 @@
 //!
 //! One JSON object per line, one response object per line. The full wire
 //! reference — every op (`register_mesh`, `register_cloud`, `integrate`,
-//! `evict`, `unregister_cloud`, `stats`, `shutdown`), every backend's
-//! parameters, the error shape, and a worked netcat session — lives in
-//! **docs/PROTOCOL.md**; the `integrate` body is exactly the wire form of
-//! [`IntegratorSpec::from_request`].
+//! `update_cloud`, `evict`, `unregister_cloud`, `stats`, `shutdown`),
+//! every backend's parameters, the error shape, and a worked netcat
+//! session — lives in **docs/PROTOCOL.md**; the `integrate` body is
+//! exactly the wire form of [`IntegratorSpec::from_request`].
 //!
 //! Operationally the server is a bounded thread-per-connection loop:
 //! finished connection threads are reaped (joined) on every accept
@@ -13,7 +13,7 @@
 //! [`ServerConfig::max_connections`] caps concurrency — excess clients
 //! wait in the TCP accept backlog.
 
-use crate::coordinator::{metrics, Engine};
+use crate::coordinator::{metrics, Engine, UpdateOpts};
 use crate::integrators::IntegratorSpec;
 use crate::linalg::Mat;
 use crate::mesh;
@@ -229,6 +229,42 @@ fn handle_line(engine: &Engine, line: &str, shared: &ServerShared) -> Result<Jso
                 ("used_pjrt", Json::Bool(info.used_pjrt)),
             ]))
         }
+        // One frame of a time-varying scene: same vertex count, moved
+        // coordinates. Bumps the scene epoch and migrates cached
+        // integrators by incremental refresh (see Engine::update_cloud).
+        "update_cloud" => {
+            let cloud = req
+                .get("cloud")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing cloud"))? as u64;
+            let flat = req
+                .get("points")
+                .and_then(Json::as_f64_vec)
+                .ok_or_else(|| anyhow!("missing points"))?;
+            if flat.len() % 3 != 0 {
+                return Err(anyhow!("points length must be divisible by 3"));
+            }
+            let pts: Vec<[f64; 3]> = flat.chunks(3).map(|c| [c[0], c[1], c[2]]).collect();
+            let opts = UpdateOpts {
+                refresh: req.get("refresh").and_then(Json::as_bool).unwrap_or(true),
+                ..Default::default()
+            };
+            let info = engine.update_cloud(
+                cloud,
+                crate::pointcloud::PointCloud::new(pts),
+                &opts,
+            )?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("epoch", Json::Num(info.epoch as f64)),
+                ("dirty", Json::Num(info.dirty as f64)),
+                ("refreshed", Json::Num(info.refreshed as f64)),
+                ("dropped", Json::Num(info.dropped as f64)),
+                ("reused_nodes", Json::Num(info.reused_nodes as f64)),
+                ("rebuilt_nodes", Json::Num(info.rebuilt_nodes as f64)),
+                ("refresh_seconds", Json::Num(info.refresh_seconds)),
+            ]))
+        }
         // Drops prepared artifacts. With a `backend` body: that one
         // (cloud, spec) entry; without: everything prepared for the
         // cloud. The scene stays registered either way.
@@ -405,6 +441,47 @@ mod tests {
             Some(&Json::Bool(false)),
             "integrating an unregistered cloud must fail"
         );
+    }
+
+    #[test]
+    fn update_cloud_op_bumps_epoch_and_keeps_serving() {
+        // Frames are sent in the client's original (pre-normalization)
+        // frame — the server re-applies the registration transform. So
+        // mirror the raw server-side mesh build, no normalization.
+        let mesh = crate::mesh::icosphere(1);
+        let mut verts = mesh.verts.clone();
+        verts[0][2] += 0.1;
+        let flat: String = verts
+            .iter()
+            .flat_map(|p| p.iter())
+            .map(|x| format!("{x}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        let field: String = (0..42).map(|i| i.to_string()).collect::<Vec<_>>().join(",");
+        let responses = roundtrip(&[
+            r#"{"op":"register_mesh","kind":"icosphere","param":1}"#.to_string(),
+            format!(r#"{{"op":"integrate","cloud":1,"backend":"sf","field":[{field}],"d":1,"threshold":16}}"#),
+            format!(r#"{{"op":"update_cloud","cloud":1,"points":[{flat}]}}"#),
+            format!(r#"{{"op":"integrate","cloud":1,"backend":"sf","field":[{field}],"d":1,"threshold":16}}"#),
+            r#"{"op":"update_cloud","cloud":1,"points":[1,2,3]}"#.to_string(),
+        ]);
+        assert_eq!(responses[1].get("cache_hit"), Some(&Json::Bool(false)));
+        let upd = &responses[2];
+        assert_eq!(upd.get("ok"), Some(&Json::Bool(true)), "{upd}");
+        assert_eq!(upd.get("epoch").unwrap().as_usize(), Some(1));
+        assert_eq!(upd.get("refreshed").unwrap().as_usize(), Some(1));
+        assert!(upd.get("dirty").unwrap().as_usize().unwrap() >= 1);
+        assert!(
+            upd.get("reused_nodes").unwrap().as_usize().is_some(),
+            "refresh counters must cross the wire"
+        );
+        assert_eq!(
+            responses[3].get("cache_hit"),
+            Some(&Json::Bool(true)),
+            "refreshed artifact must serve the post-update request"
+        );
+        // Wrong vertex count is an error, not a disconnect.
+        assert_eq!(responses[4].get("ok"), Some(&Json::Bool(false)));
     }
 
     #[test]

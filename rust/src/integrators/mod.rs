@@ -54,7 +54,7 @@ pub mod sf;
 mod spec;
 pub mod trees;
 
-pub use spec::{prepare, GfiError, IntegratorSpec, Scene};
+pub use spec::{prepare, DirtySet, GfiError, IntegratorSpec, Scene, SceneDelta};
 pub(crate) use spec::validate_spec;
 
 use crate::linalg::Mat;
@@ -245,6 +245,18 @@ impl Workspace {
     }
 }
 
+/// Outcome counters of one incremental refresh
+/// ([`FieldIntegrator::refreshed`]): how much prepared structure survived
+/// the scene update versus how much had to be rebuilt. For SF these count
+/// separator-tree nodes; backends without internal structure report 0/0.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RefreshStats {
+    /// Prepared substructures carried over unchanged.
+    pub reused_nodes: usize,
+    /// Prepared substructures recomputed against the updated scene.
+    pub rebuilt_nodes: usize,
+}
+
 /// A prepared graph-field integrator: pre-processing happened in
 /// [`prepare`]; `apply_into` is the inference hot path.
 pub trait FieldIntegrator: Send + Sync {
@@ -280,6 +292,26 @@ pub trait FieldIntegrator: Send + Sync {
         for (f, o) in fields.iter().zip(outs.iter_mut()) {
             self.apply_into(f, o, ws);
         }
+    }
+
+    /// Incremental-refresh hook for time-varying scenes: returns a new
+    /// integrator equivalent to a fresh [`prepare`] against `scene`,
+    /// reusing whatever prepared structure is untouched by the `dirty`
+    /// nodes (SF keeps clean separator subtrees; RFD re-features in the
+    /// existing Woodbury shapes). `None` means the backend has no
+    /// incremental path — the caller should drop the entry and re-prepare
+    /// on demand. `scene` must have the same node count and (for
+    /// graph-metric backends) the same graph topology the integrator was
+    /// prepared against, with `dirty` a superset of the changed nodes;
+    /// under that contract the result is bitwise-identical to a fresh
+    /// `prepare`.
+    fn refreshed(
+        &self,
+        scene: &Scene,
+        dirty: &DirtySet,
+    ) -> Option<Result<(Box<dyn FieldIntegrator>, RefreshStats), GfiError>> {
+        let _ = (scene, dirty);
+        None
     }
 
     /// Allocating convenience wrapper over [`FieldIntegrator::apply_into`]

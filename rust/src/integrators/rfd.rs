@@ -23,7 +23,10 @@
 //! build the comparison ε-graphs with the same L∞ norm so estimator and
 //! target agree (DESIGN.md §substitutions).
 
-use super::{check_apply_shapes, mat_bytes, FieldIntegrator, GfiError, Workspace};
+use super::{
+    check_apply_shapes, mat_bytes, DirtySet, FieldIntegrator, GfiError, RefreshStats, Scene,
+    Workspace,
+};
 use crate::linalg::{eigh_jacobi, expm_pade, lu_factor, thin_qr, Mat, Trans};
 use crate::pointcloud::PointCloud;
 use crate::util::{par, rng::Rng};
@@ -64,8 +67,15 @@ impl Default for RfdConfig {
 }
 
 /// A prepared RFDiffusion integrator.
+#[derive(Clone)]
 pub struct RfDiffusion {
     cfg: RfdConfig,
+    /// The sampled ω anchors (kept so a scene update can re-feature the
+    /// moved points against the *same* random draw — see
+    /// [`RfDiffusion::refresh`]).
+    omegas: Vec<[f64; 3]>,
+    /// Raw importance weights `q_j` matching `omegas`.
+    q: Vec<f64>,
     /// `A ∈ R^{N×2m}` (carries the `q_j/m` weights).
     a: Mat,
     /// `B ∈ R^{N×2m}` (plain trig features).
@@ -78,35 +88,87 @@ pub struct RfDiffusion {
     delta: f64,
 }
 
+/// `M = [exp(λG) − I] G⁻¹` via an LU solve with a ridge retry on hard
+/// singularity (shared by [`RfDiffusion::try_new`] and
+/// [`RfDiffusion::refresh`]).
+fn woodbury_core(g: &Mat, lambda: f64, ridge: f64) -> Result<Mat, GfiError> {
+    let e = expm_pade(&g.scale(lambda));
+    let mut e_minus_i = e;
+    for i in 0..e_minus_i.rows {
+        e_minus_i[(i, i)] -= 1.0;
+    }
+    // M = (E − I) G⁻¹ = G⁻¹ (E − I) (E commutes with G). Solve
+    // G M = (E − I) with a ridge retry on hard singularity.
+    match lu_factor(g) {
+        Some(f) if f.min_pivot > 1e-12 => Ok(f.solve_mat(&e_minus_i)),
+        _ => {
+            let mut gr = g.clone();
+            for i in 0..gr.rows {
+                gr[(i, i)] += ridge.max(1e-10);
+            }
+            Ok(lu_factor(&gr)
+                .ok_or_else(|| GfiError::Numerical {
+                    detail: "RFD core BᵀA is singular even after ridging".into(),
+                })?
+                .solve_mat(&e_minus_i))
+        }
+    }
+}
+
 impl RfDiffusion {
     /// Pre-processing (`O(N m²)`): feature maps + the 2m×2m core.
     /// Construct via [`crate::integrators::prepare`].
     pub(crate) fn try_new(points: &PointCloud, cfg: RfdConfig) -> Result<Self, GfiError> {
-        let (a, b, delta) = build_features(points, &cfg);
+        let (omegas, q) = sample_features(&cfg);
+        let n = points.len();
+        let mut a = Mat::zeros(n, 2 * cfg.num_features);
+        let mut b = Mat::zeros(n, 2 * cfg.num_features);
+        let delta = fill_features(points, &omegas, &q, &mut a, &mut b);
         let g = b.t_matmul(&a); // BᵀA, 2m×2m
-        let e = expm_pade(&g.scale(cfg.lambda));
-        let mut e_minus_i = e;
-        for i in 0..e_minus_i.rows {
-            e_minus_i[(i, i)] -= 1.0;
-        }
-        // M = (E − I) G⁻¹ = G⁻¹ (E − I) (E commutes with G). Solve
-        // G M = (E − I) with a ridge retry on hard singularity.
-        let m_core = match lu_factor(&g) {
-            Some(f) if f.min_pivot > 1e-12 => f.solve_mat(&e_minus_i),
-            _ => {
-                let mut gr = g.clone();
-                for i in 0..gr.rows {
-                    gr[(i, i)] += cfg.ridge.max(1e-10);
-                }
-                lu_factor(&gr)
-                    .ok_or_else(|| GfiError::Numerical {
-                        detail: "RFD core BᵀA is singular even after ridging".into(),
-                    })?
-                    .solve_mat(&e_minus_i)
-            }
-        };
+        let m_core = woodbury_core(&g, cfg.lambda, cfg.ridge)?;
         let diag_scale = (-cfg.lambda * delta).exp();
-        Ok(RfDiffusion { cfg, a, b, m_core, diag_scale, delta })
+        Ok(RfDiffusion { cfg, omegas, q, a, b, m_core, diag_scale, delta })
+    }
+
+    /// Re-prepares this integrator against moved points, reusing the
+    /// sampled ω anchors and every Woodbury scratch shape: the `N×2m`
+    /// feature factors are overwritten in place (no re-sampling, no
+    /// reallocation) and only the `2m×2m` core pipeline reruns. The
+    /// result is bitwise-identical to a fresh
+    /// [`crate::integrators::prepare`] with the same config on the new
+    /// points, because that fresh prepare would draw the identical
+    /// anchors from `cfg.seed`.
+    ///
+    /// On `Err` the integrator is **unusable**: the factors were already
+    /// re-featured in place when the core solve failed, so the old state
+    /// cannot be restored — drop it and re-`prepare`. (The error path
+    /// NaN-poisons the diagonal scale, so a caller that keeps applying
+    /// anyway gets NaNs, never silently wrong values. The engine never
+    /// hits this: it refreshes a detached copy and drops it on error.)
+    pub fn refresh(&mut self, points: &PointCloud) -> Result<(), GfiError> {
+        if points.len() != self.a.rows {
+            return Err(GfiError::InvalidSpec {
+                detail: format!(
+                    "refresh keeps the node count: integrator covers {} nodes, cloud has {}",
+                    self.a.rows,
+                    points.len()
+                ),
+            });
+        }
+        let delta = fill_features(points, &self.omegas, &self.q, &mut self.a, &mut self.b);
+        let g = self.b.t_matmul(&self.a);
+        match woodbury_core(&g, self.cfg.lambda, self.cfg.ridge) {
+            Ok(core) => {
+                self.m_core = core;
+                self.delta = delta;
+                self.diag_scale = (-self.cfg.lambda * delta).exp();
+                Ok(())
+            }
+            Err(e) => {
+                self.diag_scale = f64::NAN;
+                Err(e)
+            }
+        }
     }
 
     /// The low-rank factors (used by the GW fast paths and the spectral
@@ -228,18 +290,34 @@ pub fn build_features_public(points: &PointCloud, cfg: &RfdConfig) -> (Mat, Mat,
 /// so tests and the GW fast paths can use the feature maps without paying
 /// the `O(m³)` Woodbury core.
 pub(crate) fn build_features(points: &PointCloud, cfg: &RfdConfig) -> (Mat, Mat, f64) {
-    let n = points.len();
-    let m = cfg.num_features;
     let (omegas, q) = sample_features(cfg);
+    let n = points.len();
+    let mut a = Mat::zeros(n, 2 * cfg.num_features);
+    let mut b = Mat::zeros(n, 2 * cfg.num_features);
+    let delta = fill_features(points, &omegas, &q, &mut a, &mut b);
+    (a, b, delta)
+}
+
+/// Writes the trig feature maps for `points` against pre-sampled anchors
+/// into the caller-held `a`/`b` (`N×2m`, overwritten in place — the
+/// refresh path's shape-reuse contract) and returns the exact diagonal
+/// estimate δ.
+fn fill_features(
+    points: &PointCloud,
+    omegas: &[[f64; 3]],
+    q: &[f64],
+    a: &mut Mat,
+    b: &mut Mat,
+) -> f64 {
+    let n = points.len();
+    let m = omegas.len();
+    assert_eq!((a.rows, a.cols), (n, 2 * m), "feature factor A shape");
+    assert_eq!((b.rows, b.cols), (n, 2 * m), "feature factor B shape");
     let delta: f64 = q.iter().sum::<f64>() / m as f64;
-    let mut a = Mat::zeros(n, 2 * m);
-    let mut b = Mat::zeros(n, 2 * m);
     {
         let pts = &points.points;
         let acells = par::as_send_cells(&mut a.data);
         let bcells = par::as_send_cells(&mut b.data);
-        let omegas = &omegas;
-        let q = &q;
         par::par_for(n, 64, |i| {
             let p = pts[i];
             for (j, w) in omegas.iter().enumerate() {
@@ -256,7 +334,7 @@ pub(crate) fn build_features(points: &PointCloud, cfg: &RfdConfig) -> (Mat, Mat,
             }
         });
     }
-    (a, b, delta)
+    delta
 }
 
 /// Monte-Carlo estimate of the standard-Gaussian mass inside the L1-ball
@@ -284,13 +362,16 @@ impl FieldIntegrator for RfDiffusion {
         self.a.rows
     }
 
-    /// Low-rank storage: two `N×2m` factors plus the `2m×2m` core —
-    /// `O(Nm)`, the cheap end of the cache's cost spectrum.
+    /// Low-rank storage: two `N×2m` factors plus the `2m×2m` core and
+    /// the `m` sampled anchors — `O(Nm)`, the cheap end of the cache's
+    /// cost spectrum.
     fn resident_bytes(&self) -> usize {
         std::mem::size_of::<Self>()
             + mat_bytes(&self.a)
             + mat_bytes(&self.b)
             + mat_bytes(&self.m_core)
+            + self.omegas.len() * std::mem::size_of::<[f64; 3]>()
+            + self.q.len() * std::mem::size_of::<f64>()
     }
 
     /// `y = e^{-Λδ} (x + A · M · (Bᵀ x))` — the inference hot path,
@@ -307,6 +388,38 @@ impl FieldIntegrator for RfDiffusion {
         out.gemm_assign(self.diag_scale, &self.a, Trans::No, &core, Trans::No, self.diag_scale);
         ws.put_mat(core);
         ws.put_mat(bt_x);
+    }
+
+    /// Scene-update analogue of SF's dirty-subtree rebuild: re-features
+    /// the new coordinates against the stored ω anchors
+    /// ([`RfDiffusion::refresh`]). Only the anchors and config are
+    /// copied — the `N×2m` factors and the core start zeroed because
+    /// `refresh` overwrites them entirely. RFD has no per-node
+    /// substructure, so the counters stay 0/0.
+    fn refreshed(
+        &self,
+        scene: &Scene,
+        _dirty: &DirtySet,
+    ) -> Option<Result<(Box<dyn FieldIntegrator>, RefreshStats), GfiError>> {
+        if scene.points.is_empty() {
+            return Some(Err(GfiError::MissingPoints { backend: "rfd" }));
+        }
+        let mut fresh = RfDiffusion {
+            cfg: self.cfg.clone(),
+            omegas: self.omegas.clone(),
+            q: self.q.clone(),
+            a: Mat::zeros(self.a.rows, self.a.cols),
+            b: Mat::zeros(self.b.rows, self.b.cols),
+            m_core: Mat::zeros(0, 0),
+            diag_scale: 1.0,
+            delta: 0.0,
+        };
+        Some(fresh.refresh(&scene.points).map(|()| {
+            (
+                Box::new(fresh) as Box<dyn FieldIntegrator>,
+                RefreshStats::default(),
+            )
+        }))
     }
 }
 
@@ -435,5 +548,27 @@ mod tests {
         let r2 = RfDiffusion::try_new(&pc, cfg).unwrap();
         let x = Mat::from_vec(25, 1, (0..25).map(|i| i as f64).collect());
         assert_eq!(r1.apply(&x).data, r2.apply(&x).data);
+    }
+
+    #[test]
+    fn refresh_matches_fresh_prepare_bitwise() {
+        let pc = cloud(40, 13);
+        let cfg = RfdConfig { num_features: 16, seed: 7, ..Default::default() };
+        let mut rfd = RfDiffusion::try_new(&pc, cfg.clone()).unwrap();
+        // Move a handful of points and refresh in place.
+        let mut moved = pc.clone();
+        for v in [0usize, 5, 17] {
+            moved.points[v][1] += 0.1;
+        }
+        rfd.refresh(&moved).unwrap();
+        let fresh = RfDiffusion::try_new(&moved, cfg).unwrap();
+        let x = Mat::from_vec(40, 2, (0..80).map(|i| (i as f64).sin()).collect());
+        assert_eq!(
+            rfd.apply(&x).data,
+            fresh.apply(&x).data,
+            "re-featured integrator diverged from a fresh prepare"
+        );
+        // Node-count changes are rejected.
+        assert!(rfd.refresh(&cloud(41, 14)).is_err());
     }
 }

@@ -22,12 +22,28 @@
 //!    quantized grid, computed by FFT (general `f`) or the rank-1
 //!    factorization (`exp` kernel).
 //! 4. **Brute-force leaves** — recursion stops at `threshold` nodes.
+//!
+//! # Time-varying scenes
+//!
+//! Every node of the separator tree draws its randomness from a
+//! deterministic per-node seed (`cfg.seed ⊕ hash(root-to-node path)`), so
+//! a node's entire construction is a pure function of its node set, the
+//! induced subgraph on it, and its tree path. That is what makes
+//! [`SeparatorFactorization::refresh`] possible: when a deforming mesh
+//! moves a few vertices, only subtrees whose node set touches the dirty
+//! set are rebuilt — clean subtrees keep their `dist_q`/`sep_dq`/Hankel
+//! tables and the result is bitwise-identical to a fresh build on the
+//! updated scene (see the `refresh` submodule).
 
+mod refresh;
 mod separator;
 
 pub use separator::{balanced_level_cut, Separation};
 
-use super::{check_apply_shapes, FieldIntegrator, KernelFn, Workspace};
+use super::{
+    check_apply_shapes, DirtySet, FieldIntegrator, GfiError, KernelFn, RefreshStats, Scene,
+    Workspace,
+};
 use crate::fft::hankel_matvec_multi;
 use crate::graph::CsrGraph;
 use crate::linalg::Mat;
@@ -38,8 +54,11 @@ use crate::util::rng::Rng;
 pub struct SfConfig {
     /// Kernel profile `f`.
     pub kernel: KernelFn,
-    /// Distance quantization: all shortest-path lengths are taken modulo
-    /// this unit (paper's `unit-size`, default 0.01 for unit-box meshes).
+    /// Distance quantization: every shortest-path length is *divided by*
+    /// this unit and rounded to the nearest integer grid index (paper's
+    /// `unit-size`, default 0.01 for unit-box meshes). Must be positive
+    /// and finite; [`crate::integrators::prepare`] rejects anything else
+    /// with [`crate::integrators::GfiError::InvalidSpec`].
     pub unit_size: f64,
     /// Max subgraph size handled by a brute-force leaf (paper's
     /// `threshold`).
@@ -63,12 +82,14 @@ impl Default for SfConfig {
 }
 
 /// One τ-slice bucket: nodes of a part whose nearest S′ vertex is `k`.
+#[derive(Clone)]
 struct Slice {
     /// (local node index, quantized τ) pairs.
     members: Vec<(u32, u32)>,
     max_tau: u32,
 }
 
+#[derive(Clone)]
 enum SfNode {
     Leaf {
         /// Global vertex ids.
@@ -76,6 +97,8 @@ enum SfNode {
         /// Quantized pairwise distances on the induced subgraph,
         /// row-major `n×n`; `u32::MAX` = unreachable.
         dist_q: Vec<u32>,
+        /// Largest finite quantized distance in `dist_q`.
+        max_q: u32,
     },
     Internal {
         nodes: Vec<u32>,
@@ -90,12 +113,19 @@ enum SfNode {
         slices_b: Vec<Slice>,
         a_child: Box<SfNode>,
         b_child: Box<SfNode>,
+        /// Largest quantized distance any kernel lookup under this
+        /// subtree (own cross terms *and* children) can index — lets
+        /// `refresh` re-size the kernel table without rescanning clean
+        /// subtrees.
+        max_q: u32,
     },
 }
 
 /// Construction/shape statistics, used by tests, benches, and DESIGN.md's
-/// complexity verification.
-#[derive(Clone, Debug, Default)]
+/// complexity verification. A fresh build reports every tree node under
+/// `rebuilt_nodes`; [`SeparatorFactorization::refresh`] splits the count
+/// into reused vs rebuilt.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct SfStats {
     /// Deepest recursion level of the separator tree.
     pub depth: usize,
@@ -107,9 +137,15 @@ pub struct SfStats {
     pub max_leaf: usize,
     /// Largest quantized distance any kernel lookup can index.
     pub max_quantized_dist: u32,
+    /// Separator-tree nodes carried over unchanged by the last
+    /// build/refresh (0 for a fresh build).
+    pub reused_nodes: usize,
+    /// Separator-tree nodes (re)computed by the last build/refresh.
+    pub rebuilt_nodes: usize,
 }
 
 /// A prepared SeparatorFactorization integrator.
+#[derive(Clone)]
 pub struct SeparatorFactorization {
     n: usize,
     cfg: SfConfig,
@@ -120,26 +156,101 @@ pub struct SeparatorFactorization {
     stats: SfStats,
 }
 
+/// Root path code for the per-node RNG seeding (see [`node_seed`]).
+const ROOT_PATH: u64 = 1;
+
+/// SplitMix64-style finalizer used to hash tree-path codes.
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic per-node RNG seed: `cfg.seed ⊕ hash(node path)`. Every
+/// node's randomness depends only on the user seed and its root-to-node
+/// path, never on sibling subtrees — the property `refresh` relies on to
+/// make a partial rebuild bitwise-identical to a fresh build.
+#[inline]
+fn node_seed(seed: u64, path: u64) -> u64 {
+    seed ^ mix64(path)
+}
+
+/// Path code of a child node (hash-chained, so arbitrarily deep trees
+/// stay well-mixed).
+#[inline]
+fn child_path(path: u64, right: bool) -> u64 {
+    mix64(path ^ if right { 0xA076_1D64_78BD_642F } else { 0x2545_F491_4F6C_DD1D })
+}
+
 impl SeparatorFactorization {
     /// Pre-processing: builds the separator tree. `O(N log N)` Dijkstra
     /// work (|S′| runs per level) plus leaf all-pairs.
     /// Construct via [`crate::integrators::prepare`].
     pub(crate) fn new(g: &CsrGraph, cfg: SfConfig) -> Self {
-        let mut rng = Rng::new(cfg.seed);
         let mut stats = SfStats::default();
         let all: Vec<u32> = (0..g.n as u32).collect();
-        let mut max_q = 0u32;
-        let root = build(g, all, &cfg, &mut rng, 0, &mut stats, &mut max_q);
+        let root = build(g, all, &cfg, ROOT_PATH, 0, &mut stats);
+        let max_q = node_max_q(&root);
         stats.max_quantized_dist = max_q;
-        let f_table: Vec<f64> = (0..=max_q as usize + 1)
-            .map(|k| cfg.kernel.eval(k as f64 * cfg.unit_size))
-            .collect();
+        stats.rebuilt_nodes = stats.leaves + stats.internals;
+        let f_table = kernel_table(&cfg, max_q);
         SeparatorFactorization { n: g.n, cfg, root, f_table, stats }
     }
 
     /// Construction/shape statistics of the separator tree.
     pub fn stats(&self) -> &SfStats {
         &self.stats
+    }
+}
+
+/// Kernel lookup table sized to the max quantized distance.
+fn kernel_table(cfg: &SfConfig, max_q: u32) -> Vec<f64> {
+    (0..=max_q as usize + 1)
+        .map(|k| cfg.kernel.eval(k as f64 * cfg.unit_size))
+        .collect()
+}
+
+/// Subtree-inclusive max quantized distance of a node.
+fn node_max_q(node: &SfNode) -> u32 {
+    match node {
+        SfNode::Leaf { max_q, .. } | SfNode::Internal { max_q, .. } => *max_q,
+    }
+}
+
+/// The node set a tree node covers (global vertex ids).
+fn node_nodes(node: &SfNode) -> &[u32] {
+    match node {
+        SfNode::Leaf { nodes, .. } | SfNode::Internal { nodes, .. } => nodes,
+    }
+}
+
+/// Number of tree nodes (leaves + internals) in a subtree.
+fn tree_node_count(node: &SfNode) -> usize {
+    match node {
+        SfNode::Leaf { .. } => 1,
+        SfNode::Internal { a_child, b_child, .. } => {
+            1 + tree_node_count(a_child) + tree_node_count(b_child)
+        }
+    }
+}
+
+/// Recomputes the shape statistics of a (possibly refreshed) tree — kept
+/// in lockstep with what [`build`] accumulates so a refreshed
+/// integrator's stats match a fresh build's.
+fn collect_stats(node: &SfNode, depth: usize, st: &mut SfStats) {
+    st.depth = st.depth.max(depth);
+    match node {
+        SfNode::Leaf { nodes, .. } => {
+            st.leaves += 1;
+            st.max_leaf = st.max_leaf.max(nodes.len());
+        }
+        SfNode::Internal { a_child, b_child, .. } => {
+            st.internals += 1;
+            collect_stats(a_child, depth + 1, st);
+            collect_stats(b_child, depth + 1, st);
+        }
     }
 }
 
@@ -155,7 +266,7 @@ fn node_bytes(node: &SfNode) -> usize {
     };
     std::mem::size_of::<SfNode>()
         + match node {
-            SfNode::Leaf { nodes, dist_q } => (nodes.len() + dist_q.len()) * U32,
+            SfNode::Leaf { nodes, dist_q, .. } => (nodes.len() + dist_q.len()) * U32,
             SfNode::Internal {
                 nodes,
                 sep_local,
@@ -165,6 +276,7 @@ fn node_bytes(node: &SfNode) -> usize {
                 slices_b,
                 a_child,
                 b_child,
+                ..
             } => {
                 (nodes.len() + sep_local.len() + sep_dq.len() + sep_g.len()) * U32
                     + slice_bytes(slices_a)
@@ -183,40 +295,99 @@ fn quantize(d: f64, unit: f64) -> u32 {
     }
 }
 
-fn build_leaf(
-    sub: &CsrGraph,
-    nodes: Vec<u32>,
-    cfg: &SfConfig,
-    stats: &mut SfStats,
-    max_q: &mut u32,
-) -> SfNode {
+fn build_leaf(sub: &CsrGraph, nodes: Vec<u32>, cfg: &SfConfig, stats: &mut SfStats) -> SfNode {
     let n_sub = nodes.len();
     let mut dist_q = vec![u32::MAX; n_sub * n_sub];
+    let mut max_q = 0u32;
     let all: Vec<usize> = (0..n_sub).collect();
     let rows: Vec<Vec<f64>> = crate::graph::distances::rows(sub, &all);
     for (i, d) in rows.iter().enumerate() {
         for (j, &dj) in d.iter().enumerate() {
             let q = quantize(dj, cfg.unit_size);
             if q != u32::MAX {
-                *max_q = (*max_q).max(q);
+                max_q = max_q.max(q);
             }
             dist_q[i * n_sub + j] = q;
         }
     }
     stats.leaves += 1;
     stats.max_leaf = stats.max_leaf.max(n_sub);
-    SfNode::Leaf { nodes, dist_q }
+    SfNode::Leaf { nodes, dist_q, max_q }
 }
 
-#[allow(clippy::too_many_arguments)]
+/// The weight-dependent tables of one internal node: separator→node and
+/// S′×S′ quantized distances plus the τ-slices of both parts. Shared
+/// between [`build`] and [`refresh`](SeparatorFactorization::refresh)
+/// (which recomputes exactly these when a dirty node lands in the
+/// subtree but the separation itself is unchanged).
+struct InternalTables {
+    sep_dq: Vec<u32>,
+    sep_g: Vec<u32>,
+    slices_a: Vec<Slice>,
+    slices_b: Vec<Slice>,
+    /// Max quantized distance this node's *own* cross terms can index
+    /// (children not included).
+    own_max_q: u32,
+}
+
+fn internal_tables(sub: &CsrGraph, sep: &Separation, cfg: &SfConfig) -> InternalTables {
+    let n_sub = sub.n;
+    let ns = sep.separator.len();
+    // Distances from each S′ vertex to every subtree node.
+    let sep_sources: Vec<usize> = sep.separator.iter().map(|&s| s as usize).collect();
+    let sep_rows: Vec<Vec<f64>> = crate::graph::distances::rows(sub, &sep_sources);
+    let mut sep_dq = vec![u32::MAX; ns * n_sub];
+    let mut own_max_q = 0u32;
+    for (s, row) in sep_rows.iter().enumerate() {
+        for (j, &dj) in row.iter().enumerate() {
+            let q = quantize(dj, cfg.unit_size);
+            if q != u32::MAX {
+                // Cross terms index f at τ_v + g + τ_w ≤ 3·max q.
+                own_max_q = own_max_q.max(q.saturating_mul(3));
+            }
+            sep_dq[s * n_sub + j] = q;
+        }
+    }
+    // S′ × S′ distances.
+    let mut sep_g = vec![u32::MAX; ns * ns];
+    for k in 0..ns {
+        for l in 0..ns {
+            sep_g[k * ns + l] = sep_dq[k * n_sub + sep.separator[l] as usize];
+        }
+    }
+    // Slice parts by nearest separator vertex.
+    let make_slices = |part: &[u32]| -> Vec<Slice> {
+        let mut slices: Vec<Slice> =
+            (0..ns).map(|_| Slice { members: Vec::new(), max_tau: 0 }).collect();
+        for &j in part {
+            let mut best = (u32::MAX, 0usize);
+            for s in 0..ns {
+                let dq = sep_dq[s * n_sub + j as usize];
+                if dq < best.0 {
+                    best = (dq, s);
+                }
+            }
+            if best.0 == u32::MAX {
+                continue; // unreachable from S′ (other component)
+            }
+            let sl = &mut slices[best.1];
+            sl.members.push((j, best.0));
+            sl.max_tau = sl.max_tau.max(best.0);
+        }
+        slices
+    };
+    let slices_a = make_slices(&sep.part_a);
+    let slices_b = make_slices(&sep.part_b);
+    InternalTables { sep_dq, sep_g, slices_a, slices_b, own_max_q }
+}
+
 fn build(
     g: &CsrGraph,
     nodes: Vec<u32>,
     cfg: &SfConfig,
-    rng: &mut Rng,
+    path: u64,
     depth: usize,
     stats: &mut SfStats,
-    max_q: &mut u32,
 ) -> SfNode {
     stats.depth = stats.depth.max(depth);
     let n_sub = nodes.len();
@@ -224,71 +395,34 @@ fn build(
     let (sub, _) = g.induced(&global);
 
     if n_sub <= cfg.threshold.max(2) {
-        return build_leaf(&sub, nodes, cfg, stats, max_q);
+        return build_leaf(&sub, nodes, cfg, stats);
     }
-    match balanced_level_cut(&sub, cfg.separator_size, rng) {
-        None => build_leaf(&sub, nodes, cfg, stats, max_q),
-        Some(Separation { separator, part_a, part_b }) => {
+    let mut rng = Rng::new(node_seed(cfg.seed, path));
+    match balanced_level_cut(&sub, cfg.separator_size, &mut rng) {
+        None => build_leaf(&sub, nodes, cfg, stats),
+        Some(sep) => {
             stats.internals += 1;
-            let ns = separator.len();
-            // Distances from each S′ vertex to every subtree node.
-            let sep_sources: Vec<usize> = separator.iter().map(|&s| s as usize).collect();
-            let sep_rows: Vec<Vec<f64>> = crate::graph::distances::rows(&sub, &sep_sources);
-            let mut sep_dq = vec![u32::MAX; ns * n_sub];
-            for (s, row) in sep_rows.iter().enumerate() {
-                for (j, &dj) in row.iter().enumerate() {
-                    let q = quantize(dj, cfg.unit_size);
-                    if q != u32::MAX {
-                        // Cross terms index f at τ_v + g + τ_w ≤ 3·max q.
-                        *max_q = (*max_q).max(q.saturating_mul(3));
-                    }
-                    sep_dq[s * n_sub + j] = q;
-                }
-            }
-            // S′ × S′ distances.
-            let mut sep_g = vec![u32::MAX; ns * ns];
-            for k in 0..ns {
-                for l in 0..ns {
-                    sep_g[k * ns + l] = sep_dq[k * n_sub + separator[l] as usize];
-                }
-            }
-            // Slice parts by nearest separator vertex.
-            let make_slices = |part: &[u32]| -> Vec<Slice> {
-                let mut slices: Vec<Slice> =
-                    (0..ns).map(|_| Slice { members: Vec::new(), max_tau: 0 }).collect();
-                for &j in part {
-                    let mut best = (u32::MAX, 0usize);
-                    for s in 0..ns {
-                        let dq = sep_dq[s * n_sub + j as usize];
-                        if dq < best.0 {
-                            best = (dq, s);
-                        }
-                    }
-                    if best.0 == u32::MAX {
-                        continue; // unreachable from S′ (other component)
-                    }
-                    let sl = &mut slices[best.1];
-                    sl.members.push((j, best.0));
-                    sl.max_tau = sl.max_tau.max(best.0);
-                }
-                slices
-            };
-            let slices_a = make_slices(&part_a);
-            let slices_b = make_slices(&part_b);
-
-            let a_nodes: Vec<u32> = part_a.iter().map(|&j| nodes[j as usize]).collect();
-            let b_nodes: Vec<u32> = part_b.iter().map(|&j| nodes[j as usize]).collect();
-            let a_child = Box::new(build(g, a_nodes, cfg, rng, depth + 1, stats, max_q));
-            let b_child = Box::new(build(g, b_nodes, cfg, rng, depth + 1, stats, max_q));
+            let tables = internal_tables(&sub, &sep, cfg);
+            let a_nodes: Vec<u32> = sep.part_a.iter().map(|&j| nodes[j as usize]).collect();
+            let b_nodes: Vec<u32> = sep.part_b.iter().map(|&j| nodes[j as usize]).collect();
+            let a_child =
+                Box::new(build(g, a_nodes, cfg, child_path(path, false), depth + 1, stats));
+            let b_child =
+                Box::new(build(g, b_nodes, cfg, child_path(path, true), depth + 1, stats));
+            let max_q = tables
+                .own_max_q
+                .max(node_max_q(&a_child))
+                .max(node_max_q(&b_child));
             SfNode::Internal {
                 nodes,
-                sep_local: separator,
-                sep_dq,
-                sep_g,
-                slices_a,
-                slices_b,
+                sep_local: sep.separator,
+                sep_dq: tables.sep_dq,
+                sep_g: tables.sep_g,
+                slices_a: tables.slices_a,
+                slices_b: tables.slices_b,
                 a_child,
                 b_child,
+                max_q,
             }
         }
     }
@@ -319,6 +453,24 @@ impl FieldIntegrator for SeparatorFactorization {
         out.data.fill(0.0);
         walk(&self.root, field, out, &self.f_table, &self.cfg, field.cols, ws);
     }
+
+    /// Dirty-subtree rebuild: clones the prepared tree and runs
+    /// [`SeparatorFactorization::refresh`] on the clone (cloning a clean
+    /// subtree is a memcpy; rebuilding it would re-run Dijkstra sweeps).
+    fn refreshed(
+        &self,
+        scene: &Scene,
+        dirty: &DirtySet,
+    ) -> Option<Result<(Box<dyn FieldIntegrator>, RefreshStats), GfiError>> {
+        let mut fresh = self.clone();
+        Some(fresh.refresh(scene, dirty).map(|st| {
+            let rs = RefreshStats {
+                reused_nodes: st.reused_nodes,
+                rebuilt_nodes: st.rebuilt_nodes,
+            };
+            (Box::new(fresh) as Box<dyn FieldIntegrator>, rs)
+        }))
+    }
 }
 
 #[inline]
@@ -341,7 +493,7 @@ fn walk(
     ws: &mut Workspace,
 ) {
     match node {
-        SfNode::Leaf { nodes, dist_q } => {
+        SfNode::Leaf { nodes, dist_q, .. } => {
             let n = nodes.len();
             for (i, &gi) in nodes.iter().enumerate() {
                 let orow = out.row_mut(gi as usize);
@@ -366,6 +518,7 @@ fn walk(
             slices_b,
             a_child,
             b_child,
+            ..
         } => {
             let n = nodes.len();
 

@@ -1,0 +1,300 @@
+//! Incremental SF refresh for time-varying scenes (ROADMAP: mesh-dynamics
+//! serving; cf. Fast Tree-Field Integrators, PAPERS.md, which amortizes
+//! tree-structured integrators across repeated queries).
+//!
+//! A deforming mesh keeps its connectivity and moves a few vertices per
+//! frame, so most of the separator tree's quantized distance tables stay
+//! valid: an SF node's entire payload is a pure function of (its node
+//! set, the induced subgraph on it, its per-node RNG seed — see
+//! [`node_seed`]). [`SeparatorFactorization::refresh`] therefore walks
+//! the tree top-down and
+//!
+//! * **reuses** any subtree whose node set misses the dirty set entirely
+//!   (its induced subgraph is unchanged, so a fresh build would produce
+//!   the identical subtree);
+//! * **re-tables** a dirty internal node whose separation is unchanged
+//!   (the BFS level cut depends only on topology + the node seed, never
+//!   on edge weights, so mesh deformation preserves it): the
+//!   weight-dependent `sep_dq`/`sep_g`/τ-slices are recomputed, the
+//!   recursion continues into both children;
+//! * **rebuilds** a subtree from scratch only when its separation moved —
+//!   which under the documented same-topology contract cannot happen.
+//!   This fallback is a safety net for *dirty* subtrees only: a topology
+//!   change in a subtree the dirty set does not cover is never detected
+//!   (the subtree is reused with stale tables), so topology edits always
+//!   require a purge + fresh `prepare`, never a refresh.
+//!
+//! The result is bitwise-identical to a fresh
+//! [`SeparatorFactorization::new`] on the updated scene, at a fraction of
+//! the Dijkstra work: for a dirty set confined to one leaf, the sweep
+//! cost drops from `O(|S′|·N·log N)` (every node at every level) to
+//! `O(|S′|·N)` (one root-to-leaf path of geometrically shrinking nodes).
+
+use super::{
+    build, build_leaf, child_path, collect_stats, internal_tables, kernel_table, node_max_q,
+    node_nodes, node_seed, tree_node_count, DirtySet, GfiError, Scene, SeparatorFactorization,
+    SfNode, SfStats, ROOT_PATH,
+};
+use crate::graph::CsrGraph;
+use crate::integrators::sf::balanced_level_cut;
+use crate::util::rng::Rng;
+
+impl SeparatorFactorization {
+    /// Pushes a scene update down the separator tree, rebuilding only
+    /// subtrees whose node set intersects `dirty` (see the module docs).
+    /// Returns the refreshed statistics — `reused_nodes` /
+    /// `rebuilt_nodes` quantify how much of the tree survived.
+    ///
+    /// Contract: `scene` must have a graph over the same node count with
+    /// the same topology the integrator was prepared against, and `dirty`
+    /// must cover every node whose coordinates moved or whose incident
+    /// edge weights changed (a [`Scene::diff`] `Moved` set satisfies
+    /// both). The refreshed integrator is then bitwise-identical to
+    /// `prepare` on the updated scene.
+    pub fn refresh(&mut self, scene: &Scene, dirty: &DirtySet) -> Result<SfStats, GfiError> {
+        let g = scene.graph.as_ref().ok_or(GfiError::MissingGraph { backend: "sf" })?;
+        if g.n != self.n {
+            return Err(GfiError::InvalidSpec {
+                detail: format!(
+                    "refresh keeps the node count: integrator covers {} nodes, scene has {}",
+                    self.n, g.n
+                ),
+            });
+        }
+        if dirty.node_count() != self.n {
+            return Err(GfiError::InvalidSpec {
+                detail: format!(
+                    "dirty set covers {} nodes, scene has {}",
+                    dirty.node_count(),
+                    self.n
+                ),
+            });
+        }
+        let cfg = self.cfg.clone();
+        let mut reused = 0usize;
+        let mut rebuilt = 0usize;
+        refresh_node(g, &mut self.root, &cfg, ROOT_PATH, dirty, &mut reused, &mut rebuilt);
+        let mut st = SfStats {
+            reused_nodes: reused,
+            rebuilt_nodes: rebuilt,
+            ..Default::default()
+        };
+        collect_stats(&self.root, 0, &mut st);
+        st.max_quantized_dist = node_max_q(&self.root);
+        if self.f_table.len() != st.max_quantized_dist as usize + 2 {
+            self.f_table = kernel_table(&self.cfg, st.max_quantized_dist);
+        }
+        self.stats = st.clone();
+        Ok(st)
+    }
+}
+
+fn refresh_node(
+    g: &CsrGraph,
+    node: &mut SfNode,
+    cfg: &super::SfConfig,
+    path: u64,
+    dirty: &DirtySet,
+    reused: &mut usize,
+    rebuilt: &mut usize,
+) {
+    if !node_nodes(node).iter().any(|&v| dirty.contains(v as usize)) {
+        *reused += tree_node_count(node);
+        return;
+    }
+    // Ownership-based replace: move the node out, rebuild what the dirty
+    // set invalidates, put the (partially reused) node back.
+    let placeholder = SfNode::Leaf { nodes: Vec::new(), dist_q: Vec::new(), max_q: 0 };
+    match std::mem::replace(node, placeholder) {
+        SfNode::Leaf { nodes, .. } => {
+            let global: Vec<usize> = nodes.iter().map(|&x| x as usize).collect();
+            let (sub, _) = g.induced(&global);
+            let mut st = SfStats::default();
+            *node = build_leaf(&sub, nodes, cfg, &mut st);
+            *rebuilt += 1;
+        }
+        SfNode::Internal {
+            nodes,
+            sep_local,
+            mut a_child,
+            mut b_child,
+            ..
+        } => {
+            let global: Vec<usize> = nodes.iter().map(|&x| x as usize).collect();
+            let (sub, _) = g.induced(&global);
+            let mut rng = Rng::new(node_seed(cfg.seed, path));
+            let sep = balanced_level_cut(&sub, cfg.separator_size, &mut rng);
+            // The cut depends only on topology + the node seed; under the
+            // same-topology contract it reproduces the stored partition
+            // exactly (order included).
+            let preserved = sep.as_ref().map_or(false, |s| {
+                s.separator == sep_local
+                    && s.part_a.len() == node_nodes(&a_child).len()
+                    && s.part_b.len() == node_nodes(&b_child).len()
+                    && s.part_a
+                        .iter()
+                        .map(|&j| nodes[j as usize])
+                        .eq(node_nodes(&a_child).iter().copied())
+                    && s.part_b
+                        .iter()
+                        .map(|&j| nodes[j as usize])
+                        .eq(node_nodes(&b_child).iter().copied())
+            });
+            if !preserved {
+                // Topology shifted under us: fall back to a full rebuild
+                // of this subtree (still bitwise what a fresh build does).
+                let mut st = SfStats::default();
+                *node = build(g, nodes, cfg, path, 0, &mut st);
+                *rebuilt += st.leaves + st.internals;
+                return;
+            }
+            let sep = sep.expect("preserved separation exists");
+            let tables = internal_tables(&sub, &sep, cfg);
+            *rebuilt += 1;
+            refresh_node(g, &mut a_child, cfg, child_path(path, false), dirty, reused, rebuilt);
+            refresh_node(g, &mut b_child, cfg, child_path(path, true), dirty, reused, rebuilt);
+            let max_q = tables
+                .own_max_q
+                .max(node_max_q(&a_child))
+                .max(node_max_q(&b_child));
+            *node = SfNode::Internal {
+                nodes,
+                sep_local: sep.separator,
+                sep_dq: tables.sep_dq,
+                sep_g: tables.sep_g,
+                slices_a: tables.slices_a,
+                slices_b: tables.slices_b,
+                a_child,
+                b_child,
+                max_q,
+            };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{SeparatorFactorization, SfConfig};
+    use crate::integrators::{DirtySet, FieldIntegrator, GfiError, KernelFn, Scene, SceneDelta};
+    use crate::linalg::Mat;
+    use crate::mesh::icosphere;
+    use crate::util::rng::Rng;
+
+    /// Deformed copy of a mesh scene: a [`crate::mesh::radial_bump`]
+    /// around vertex `center`, with the edge weights recomputed from the
+    /// moved coordinates over the *same* graph topology — exactly what
+    /// the engine's frame-update path does.
+    fn deformed_scene(base: &Scene, center: usize, k: usize, amp: f64) -> Scene {
+        let mut scene = base.clone();
+        scene.points.points = crate::mesh::radial_bump(&base.points.points, center, k, amp);
+        scene.recompute_edge_weights();
+        scene
+    }
+
+    fn rand_field(n: usize, d: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_vec(n, d, (0..n * d).map(|_| rng.gaussian()).collect())
+    }
+
+    #[test]
+    fn refresh_matches_fresh_build_bitwise() {
+        let mut mesh = icosphere(3); // 642 vertices
+        mesh.normalize_unit_box();
+        let scene0 = Scene::from_mesh(&mesh);
+        let cfg = SfConfig { threshold: 64, separator_size: 6, seed: 11, ..Default::default() };
+        let mut sf = SeparatorFactorization::new(scene0.graph.as_ref().unwrap(), cfg.clone());
+        let total = sf.stats().leaves + sf.stats().internals;
+
+        // Perturb ~1% of the vertices in one geometric neighborhood.
+        let scene1 = deformed_scene(&scene0, 17, mesh.verts.len() / 100, 0.05);
+        let dirty = match scene0.diff(&scene1) {
+            SceneDelta::Moved(d) => d,
+            other => panic!("expected Moved, got {other:?}"),
+        };
+        let st = sf.refresh(&scene1, &dirty).unwrap();
+        assert_eq!(st.reused_nodes + st.rebuilt_nodes, total, "{st:?}");
+        assert!(
+            st.reused_nodes * 2 > total,
+            "majority of the tree must survive a 1% perturbation: {st:?}"
+        );
+
+        let fresh = SeparatorFactorization::new(scene1.graph.as_ref().unwrap(), cfg);
+        let field = rand_field(scene1.len(), 3, 5);
+        assert_eq!(
+            sf.apply(&field).data,
+            fresh.apply(&field).data,
+            "refresh diverged from a fresh build"
+        );
+        // Shape statistics must agree too (reuse counters aside).
+        let (a, b) = (sf.stats(), fresh.stats());
+        assert_eq!(
+            (a.depth, a.leaves, a.internals, a.max_leaf, a.max_quantized_dist),
+            (b.depth, b.leaves, b.internals, b.max_leaf, b.max_quantized_dist)
+        );
+    }
+
+    #[test]
+    fn clean_refresh_reuses_everything() {
+        let mut mesh = icosphere(2);
+        mesh.normalize_unit_box();
+        let scene = Scene::from_mesh(&mesh);
+        let cfg = SfConfig { threshold: 32, ..Default::default() };
+        let mut sf = SeparatorFactorization::new(scene.graph.as_ref().unwrap(), cfg);
+        let total = sf.stats().leaves + sf.stats().internals;
+        let before = sf.apply(&rand_field(scene.len(), 2, 1)).data;
+        let st = sf.refresh(&scene, &DirtySet::new(scene.len())).unwrap();
+        assert_eq!(st.reused_nodes, total);
+        assert_eq!(st.rebuilt_nodes, 0);
+        assert_eq!(sf.apply(&rand_field(scene.len(), 2, 1)).data, before);
+    }
+
+    #[test]
+    fn refresh_through_the_trait_hook_matches_direct() {
+        let mut mesh = icosphere(2);
+        mesh.normalize_unit_box();
+        let scene0 = Scene::from_mesh(&mesh);
+        let cfg = SfConfig { threshold: 32, seed: 3, ..Default::default() };
+        let sf = SeparatorFactorization::new(scene0.graph.as_ref().unwrap(), cfg.clone());
+        let scene1 = deformed_scene(&scene0, 4, 3, 0.04);
+        let dirty = match scene0.diff(&scene1) {
+            SceneDelta::Moved(d) => d,
+            other => panic!("expected Moved, got {other:?}"),
+        };
+        let (via_trait, rs) = sf.refreshed(&scene1, &dirty).unwrap().unwrap();
+        assert!(rs.reused_nodes > 0, "{rs:?}");
+        let fresh = SeparatorFactorization::new(scene1.graph.as_ref().unwrap(), cfg);
+        let field = rand_field(scene1.len(), 3, 9);
+        assert_eq!(via_trait.apply(&field).data, fresh.apply(&field).data);
+    }
+
+    #[test]
+    fn refresh_rejects_mismatched_scenes() {
+        let mesh = icosphere(1);
+        let scene = Scene::from_mesh(&mesh);
+        let mut sf = SeparatorFactorization::new(
+            scene.graph.as_ref().unwrap(),
+            SfConfig { kernel: KernelFn::ExpNeg(1.0), ..Default::default() },
+        );
+        // Graph-less scene.
+        let bare = Scene::from_points(crate::pointcloud::PointCloud::new(
+            mesh.verts.clone(),
+        ));
+        let d = DirtySet::new(scene.len());
+        assert!(matches!(
+            sf.refresh(&bare, &d),
+            Err(GfiError::MissingGraph { .. })
+        ));
+        // Wrong node count.
+        let other = Scene::from_mesh(&icosphere(2));
+        let d2 = DirtySet::new(other.len());
+        assert!(matches!(
+            sf.refresh(&other, &d2),
+            Err(GfiError::InvalidSpec { .. })
+        ));
+        // Wrong dirty-set size.
+        assert!(matches!(
+            sf.refresh(&scene, &DirtySet::new(3)),
+            Err(GfiError::InvalidSpec { .. })
+        ));
+    }
+}

@@ -24,9 +24,15 @@ pub struct Separation {
 
 /// Finds a balanced BFS level-cut separator, truncated to `s_max`
 /// vertices; leftover cut vertices are distributed randomly across A/B
-/// (paper §2.3 pillar 1). Returns `None` when no balanced cut exists
-/// (e.g. complete graphs or tiny diameters) — callers fall back to a
-/// brute-force leaf.
+/// (paper §2.3 pillar 1). On multi-component graphs the cut is taken in
+/// the largest component; every other component goes wholly to the
+/// currently smaller part, keeping the recursion balanced. Returns
+/// `None` when no balanced cut exists (e.g. complete graphs or tiny
+/// diameters) — callers fall back to a brute-force leaf.
+///
+/// The result depends only on the graph *topology* and `rng` — never on
+/// edge weights — which is what lets SF's `refresh` keep a deforming
+/// mesh's separator tree structurally stable across frames.
 pub fn balanced_level_cut(g: &CsrGraph, s_max: usize, rng: &mut Rng) -> Option<Separation> {
     let n = g.n;
     if n < 4 {
@@ -91,10 +97,30 @@ pub fn balanced_level_cut(g: &CsrGraph, s_max: usize, rng: &mut Rng) -> Option<S
     let mut part_b = Vec::new();
     for v in 0..n {
         match levels[v] {
-            usize::MAX => part_b.push(v as u32), // other components
+            usize::MAX => {} // other components, routed below
             l if l < cut => part_a.push(v as u32),
             l if l > cut => part_b.push(v as u32),
             _ => separator_full.push(v as u32),
+        }
+    }
+    // The cut (and its imbalance score) only covers the largest
+    // component. Route every other component *wholly* to whichever part
+    // is currently smaller: no off-component vertex touches the big
+    // component, so the no-A–B-edge invariant holds either way, and the
+    // parts stay balanced instead of B silently absorbing every
+    // disconnected piece (which used to degenerate the recursion on
+    // multi-component clouds). Deterministic given topology — the
+    // placement depends only on component ids and sizes.
+    if comp_sizes.len() > 1 {
+        let mut others: Vec<Vec<u32>> = vec![Vec::new(); ncomp];
+        for v in 0..n {
+            if levels[v] == usize::MAX {
+                others[comp[v]].push(v as u32);
+            }
+        }
+        for group in others.into_iter().filter(|c| !c.is_empty()) {
+            let dst = if part_a.len() <= part_b.len() { &mut part_a } else { &mut part_b };
+            dst.extend(group);
         }
     }
 
@@ -173,7 +199,8 @@ mod tests {
 
     #[test]
     fn no_a_b_edges_in_untruncated_cut() {
-        // With s_max = ∞ (no spill), A and B must not touch.
+        // With s_max = ∞ (no spill), A and B must not touch — checked
+        // from both sides, so a one-directional CSR slip cannot hide.
         let g = grid_mesh(15, 15).to_graph();
         let mut rng = Rng::new(5);
         let s = balanced_level_cut(&g, usize::MAX, &mut rng).unwrap();
@@ -184,6 +211,67 @@ mod tests {
                 assert!(!in_b.contains(&(u as u32)), "edge {a}–{u} crosses the cut");
             }
         }
-        let _ = in_a;
+        for &b in &s.part_b {
+            for (u, _) in g.neighbors(b as usize) {
+                assert!(!in_a.contains(&(u as u32)), "edge {b}–{u} crosses the cut");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_component_parts_stay_balanced() {
+        // One 20×20 grid plus two 7×7 grids. The old code dumped every
+        // off-component vertex into B: B ended up with 498 of 598
+        // vertices and the recursion degenerated. Now each small
+        // component lands wholly on the smaller side.
+        let big = grid_mesh(20, 20).to_graph();
+        let small = grid_mesh(7, 7).to_graph();
+        let mut edges = Vec::new();
+        for v in 0..big.n {
+            for (u, w) in big.neighbors(v) {
+                if u > v {
+                    edges.push((v, u, w));
+                }
+            }
+        }
+        for off in [big.n, big.n + small.n] {
+            for v in 0..small.n {
+                for (u, w) in small.neighbors(v) {
+                    if u > v {
+                        edges.push((off + v, off + u, w));
+                    }
+                }
+            }
+        }
+        let n = big.n + 2 * small.n;
+        let g = CsrGraph::from_edges(n, &edges);
+        let mut rng = Rng::new(6);
+        let s = balanced_level_cut(&g, 8, &mut rng).unwrap();
+        // Balanced despite the disconnected pieces.
+        assert!(
+            s.part_a.len() as f64 > 0.25 * n as f64,
+            "A = {} of {n}",
+            s.part_a.len()
+        );
+        assert!(
+            s.part_b.len() as f64 > 0.25 * n as f64,
+            "B = {} of {n}",
+            s.part_b.len()
+        );
+        // The separator lives in the largest component…
+        let comp = g.components();
+        for &v in &s.separator {
+            assert_eq!(comp[v as usize], comp[0], "separator vertex {v} off-component");
+        }
+        // …and each small component sits wholly on one side.
+        let in_a: std::collections::HashSet<u32> = s.part_a.iter().copied().collect();
+        for off in [big.n, big.n + small.n] {
+            let members = (off..off + small.n).filter(|&v| in_a.contains(&(v as u32))).count();
+            assert!(
+                members == 0 || members == small.n,
+                "component at offset {off} split {members}/{}",
+                small.n
+            );
+        }
     }
 }

@@ -72,6 +72,81 @@ impl fmt::Display for GfiError {
 
 impl std::error::Error for GfiError {}
 
+/// The set of scene nodes whose local geometry changed between two
+/// versions of a scene: moved coordinates plus both endpoints of every
+/// edge whose weight changed. Incremental refreshers
+/// ([`crate::integrators::FieldIntegrator::refreshed`], SF's
+/// dirty-subtree rebuild) treat a substructure as reusable iff it touches
+/// no dirty node, so the set must be a *superset* of the truly changed
+/// nodes — conservative over-marking costs speed, never correctness.
+#[derive(Clone, Debug, Default)]
+pub struct DirtySet {
+    mask: Vec<bool>,
+    count: usize,
+}
+
+impl DirtySet {
+    /// An empty dirty set over `n` nodes.
+    pub fn new(n: usize) -> Self {
+        DirtySet { mask: vec![false; n], count: 0 }
+    }
+
+    /// Marks node `v` dirty (idempotent).
+    pub fn mark(&mut self, v: usize) {
+        if !self.mask[v] {
+            self.mask[v] = true;
+            self.count += 1;
+        }
+    }
+
+    /// Whether node `v` is dirty (out-of-range ids are clean).
+    #[inline]
+    pub fn contains(&self, v: usize) -> bool {
+        self.mask.get(v).copied().unwrap_or(false)
+    }
+
+    /// Number of dirty nodes.
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    /// Whether no node is dirty.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Total node count the set was built over.
+    pub fn node_count(&self) -> usize {
+        self.mask.len()
+    }
+
+    /// Iterates the dirty node ids in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.mask
+            .iter()
+            .enumerate()
+            .filter_map(|(v, &d)| d.then_some(v))
+    }
+}
+
+/// What changed between two versions of a scene (see [`Scene::diff`]).
+#[derive(Clone, Debug)]
+pub enum SceneDelta {
+    /// Bitwise-identical coordinates and edge weights.
+    Unchanged,
+    /// No incremental path from the old version to the new (node count,
+    /// graph topology, or input modality changed): derived artifacts
+    /// must be purged and re-prepared.
+    Incompatible {
+        /// Why no incremental path exists (node count, topology, …).
+        reason: String,
+    },
+    /// Same node count and graph topology; the dirty set holds every
+    /// node that moved or has an incident edge whose weight changed.
+    /// Cached integrators can be incrementally refreshed against it.
+    Moved(DirtySet),
+}
+
 /// The input a field integrator is prepared against: a point cloud plus
 /// an optional graph metric over the same nodes (present when the cloud
 /// came from a mesh; absent for bare ε-NN workloads).
@@ -81,6 +156,11 @@ pub struct Scene {
     pub points: PointCloud,
     /// Graph metric over the same nodes, when one exists.
     pub graph: Option<CsrGraph>,
+    /// Version counter for time-varying scenes: 0 at construction, bumped
+    /// by every applied update (the engine's `update_cloud`). Cached
+    /// artifacts are keyed by it, so updating a scene implicitly retires
+    /// every artifact prepared against an older version.
+    pub epoch: u64,
 }
 
 impl Scene {
@@ -88,17 +168,17 @@ impl Scene {
     /// must agree; [`prepare`] reports [`GfiError::SceneMismatch`]
     /// otherwise.
     pub fn new(points: PointCloud, graph: Option<CsrGraph>) -> Self {
-        Scene { points, graph }
+        Scene { points, graph, epoch: 0 }
     }
 
     /// Bare point cloud (RFD / BF-diffusion workloads).
     pub fn from_points(points: PointCloud) -> Self {
-        Scene { points, graph: None }
+        Scene { points, graph: None, epoch: 0 }
     }
 
     /// Graph-only scene (shortest-path workloads with no coordinates).
     pub fn from_graph(graph: CsrGraph) -> Self {
-        Scene { points: PointCloud::new(Vec::new()), graph: Some(graph) }
+        Scene { points: PointCloud::new(Vec::new()), graph: Some(graph), epoch: 0 }
     }
 
     /// Vertex cloud + mesh graph of a triangle mesh.
@@ -106,6 +186,80 @@ impl Scene {
         Scene {
             points: PointCloud::new(mesh.verts.clone()),
             graph: Some(mesh.to_graph()),
+            epoch: 0,
+        }
+    }
+
+    /// Classifies the change from `self` to `newer`: [`SceneDelta::Moved`]
+    /// when the node count and graph topology (CSR offsets + targets) are
+    /// unchanged — the dirty set then holds every node with a changed
+    /// coordinate plus both endpoints of every edge with a changed weight
+    /// — [`SceneDelta::Unchanged`] when nothing differs bitwise, and
+    /// [`SceneDelta::Incompatible`] otherwise (no incremental path).
+    pub fn diff(&self, newer: &Scene) -> SceneDelta {
+        if self.len() != newer.len() {
+            return SceneDelta::Incompatible {
+                reason: format!("node count changed {} → {}", self.len(), newer.len()),
+            };
+        }
+        if self.points.is_empty() != newer.points.is_empty() {
+            return SceneDelta::Incompatible {
+                reason: "point coordinates appeared or vanished".into(),
+            };
+        }
+        let mut dirty = DirtySet::new(self.len());
+        match (&self.graph, &newer.graph) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                if a.offsets != b.offsets || a.targets != b.targets {
+                    return SceneDelta::Incompatible {
+                        reason: "graph topology changed".into(),
+                    };
+                }
+                for v in 0..a.n {
+                    for i in a.offsets[v]..a.offsets[v + 1] {
+                        if a.weights[i] != b.weights[i] {
+                            dirty.mark(v);
+                            dirty.mark(a.targets[i] as usize);
+                        }
+                    }
+                }
+            }
+            _ => {
+                return SceneDelta::Incompatible {
+                    reason: "graph metric appeared or vanished".into(),
+                }
+            }
+        }
+        for (v, (p, q)) in self.points.points.iter().zip(&newer.points.points).enumerate() {
+            if p != q {
+                dirty.mark(v);
+            }
+        }
+        if dirty.is_empty() {
+            SceneDelta::Unchanged
+        } else {
+            SceneDelta::Moved(dirty)
+        }
+    }
+
+    /// Recomputes every graph edge weight as the Euclidean distance
+    /// between its endpoints' current coordinates — the
+    /// [`TriMesh::to_graph`] convention. This is the weight refresh a
+    /// mesh-dynamics frame update needs after moving vertices: topology
+    /// (offsets/targets) is untouched. No-op for graph-less or
+    /// point-less scenes.
+    pub fn recompute_edge_weights(&mut self) {
+        if self.points.is_empty() {
+            return;
+        }
+        let pts = &self.points.points;
+        if let Some(g) = self.graph.as_mut() {
+            for v in 0..g.n {
+                for i in g.offsets[v]..g.offsets[v + 1] {
+                    g.weights[i] = crate::mesh::dist3(pts[v], pts[g.targets[i] as usize]);
+                }
+            }
         }
     }
 
@@ -569,6 +723,46 @@ mod tests {
                 other => panic!("{spec:?}: expected InvalidSpec, got {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn diff_classifies_scene_changes() {
+        let scene = mesh_scene();
+        // Identical copy → Unchanged.
+        assert!(matches!(scene.diff(&scene.clone()), SceneDelta::Unchanged));
+        // Move one vertex (weights untouched): only that node is dirty.
+        let mut moved = scene.clone();
+        moved.points.points[3][0] += 0.25;
+        match scene.diff(&moved) {
+            SceneDelta::Moved(d) => {
+                assert!(d.contains(3));
+                assert_eq!(d.len(), 1);
+                assert_eq!(d.iter().collect::<Vec<_>>(), vec![3]);
+            }
+            other => panic!("expected Moved, got {other:?}"),
+        }
+        // Change one edge weight: both endpoints go dirty.
+        let mut rewt = scene.clone();
+        {
+            let g = rewt.graph.as_mut().unwrap();
+            let u = 0usize;
+            let i = g.offsets[u];
+            let v = g.targets[i] as usize;
+            g.weights[i] *= 2.0;
+            match scene.diff(&rewt) {
+                SceneDelta::Moved(d) => {
+                    assert!(d.contains(u) && d.contains(v), "{u},{v} not both dirty");
+                }
+                other => panic!("expected Moved, got {other:?}"),
+            }
+        }
+        // Topology change → Incompatible.
+        let mut retopo = scene.clone();
+        retopo.graph = Some(CsrGraph::from_edges(scene.len(), &[(0, 1, 1.0)]));
+        assert!(matches!(scene.diff(&retopo), SceneDelta::Incompatible { .. }));
+        // Node-count change → Incompatible.
+        let smaller = Scene::from_points(random_cloud(scene.len() - 1, &mut Rng::new(3)));
+        assert!(matches!(scene.diff(&smaller), SceneDelta::Incompatible { .. }));
     }
 
     #[test]

@@ -121,6 +121,31 @@ pub fn dist3_pub(a: [f64; 3], b: [f64; 3]) -> f64 {
     dist3(a, b)
 }
 
+/// Localized "surface bump" deformation: a copy of `verts` where the `k`
+/// vertices nearest to `verts[center]` (Euclidean) are pushed radially
+/// outward from the origin by `amp`. This is the canonical frame
+/// generator for the mesh-dynamics workload (the `dynmesh` repro driver,
+/// the `engine/update_frame` bench, and the dynamic-scene tests all
+/// produce their ~1%-dirty frames through it).
+pub fn radial_bump(verts: &[[f64; 3]], center: usize, k: usize, amp: f64) -> Vec<[f64; 3]> {
+    let c = verts[center];
+    let d2 = |v: usize| -> f64 {
+        let p = verts[v];
+        (0..3).map(|i| (p[i] - c[i]).powi(2)).sum()
+    };
+    let mut order: Vec<usize> = (0..verts.len()).collect();
+    order.sort_by(|&a, &b| d2(a).partial_cmp(&d2(b)).unwrap());
+    let mut out = verts.to_vec();
+    for &v in order.iter().take(k) {
+        let p = out[v];
+        let norm = (p[0] * p[0] + p[1] * p[1] + p[2] * p[2]).sqrt().max(1e-9);
+        for i in 0..3 {
+            out[v][i] = p[i] * (1.0 + amp / norm);
+        }
+    }
+    out
+}
+
 #[inline]
 pub(crate) fn dist3(a: [f64; 3], b: [f64; 3]) -> f64 {
     let d = [a[0] - b[0], a[1] - b[1], a[2] - b[2]];

@@ -172,8 +172,11 @@ pub fn concentrated_distributions(
 mod tests {
     use super::*;
     use crate::integrators::bf::BruteForceSp;
-    use crate::integrators::{FieldIntegrator, KernelFn};
+    use crate::integrators::rfd::RfdConfig;
+    use crate::integrators::sf::SfConfig;
+    use crate::integrators::{prepare, FieldIntegrator, IntegratorSpec, KernelFn, Scene};
     use crate::mesh::icosphere;
+    use crate::pointcloud::PointCloud;
 
     fn sphere_fm() -> (usize, BruteForceSp, Vec<f64>) {
         let mesh = icosphere(2);
@@ -181,6 +184,140 @@ mod tests {
         let bf = BruteForceSp::new(&g, &KernelFn::ExpNeg(8.0));
         let areas = mesh.vertex_areas();
         (g.n, bf, areas)
+    }
+
+    /// BF + SF prepared on the same sphere scene with the same
+    /// shortest-path kernel (fine quantization so SF tracks BF tightly),
+    /// plus the RFD diffusion integrator for the approximate-FM leg.
+    fn sphere_backends() -> (
+        usize,
+        Vec<f64>,
+        BruteForceSp,
+        Box<dyn FieldIntegrator>,
+        Box<dyn FieldIntegrator>,
+    ) {
+        let mesh = icosphere(2);
+        let g = mesh.to_graph();
+        let lam = 8.0;
+        let bf = BruteForceSp::new(&g, &KernelFn::ExpNeg(lam));
+        let scene = Scene::new(PointCloud::new(mesh.verts.clone()), Some(g.clone()));
+        let sf = prepare(
+            &scene,
+            &IntegratorSpec::Sf(SfConfig {
+                kernel: KernelFn::ExpNeg(lam),
+                unit_size: 0.002,
+                threshold: 64,
+                separator_size: 8,
+                seed: 1,
+            }),
+        )
+        .unwrap();
+        let rfd = prepare(
+            &scene,
+            &IntegratorSpec::Rfd(RfdConfig {
+                num_features: 64,
+                epsilon: 0.3,
+                lambda: 0.5,
+                seed: 3,
+                ..Default::default()
+            }),
+        )
+        .unwrap();
+        (g.n, mesh.vertex_areas(), bf, sf, rfd)
+    }
+
+    fn l1(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+    }
+
+    #[test]
+    fn barycenter_fm_parity_bf_vs_sf_vs_rfd() {
+        // Algorithm 1 is FM-agnostic: swapping the exact BF closure for
+        // the SF closure (same kernel) must land on essentially the same
+        // barycenter, and the RFD diffusion closure — an approximate FM
+        // whose kernel estimates can go slightly negative — must still
+        // produce a valid distribution through the clamp path.
+        let (n, area, bf, sf, rfd) = sphere_backends();
+        let fm_bf = |x: &Mat| bf.apply(x);
+        let fm_sf = |x: &Mat| sf.apply(x);
+        let alpha = [1.0 / 3.0; 3];
+        let cfg = BarycenterConfig { max_iter: 30, ..Default::default() };
+        let mus = concentrated_distributions(n, &[0, n / 3, 2 * n / 3], &fm_bf);
+        let mu_bf = wasserstein_barycenter(&mus, &area, &alpha, &fm_bf, &cfg);
+        let mu_sf = wasserstein_barycenter(&mus, &area, &alpha, &fm_sf, &cfg);
+        assert!((mu_sf.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        // SF is an approximation (the module's own accuracy tests allow
+        // sizable relative error), so the bound is parity-shaped rather
+        // than tight: L1 well inside the distributions' diameter of 2.
+        let d = l1(&mu_bf, &mu_sf);
+        assert!(d < 0.5, "BF vs SF barycenters diverged: L1 {d}");
+        // RFD leg: different kernel class, so no parity bound — the
+        // invariant is validity (finite, non-negative, normalized).
+        let fm_rfd = |x: &Mat| rfd.apply(x);
+        let mus_r = concentrated_distributions(n, &[0, n / 3, 2 * n / 3], &fm_rfd);
+        let mu_rfd = wasserstein_barycenter(&mus_r, &area, &alpha, &fm_rfd, &cfg);
+        assert!(
+            mu_rfd.iter().all(|x| x.is_finite() && *x >= 0.0),
+            "RFD barycenter left the simplex"
+        );
+        assert!((mu_rfd.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn negative_kernel_values_hit_the_clamp_not_nan() {
+        // Deterministic stand-in for RFD's negative kernel tails: a BF
+        // closure with a small negative band injected. The clamp at the
+        // Bregman division (rust/src/ot/mod.rs, `wasserstein_barycenter`
+        // step 1) must keep every scaling finite.
+        let (n, bf, area) = sphere_fm();
+        let fm = |x: &Mat| {
+            let mut y = bf.apply(x);
+            for r in 0..y.rows.min(4) {
+                for c in 0..y.cols {
+                    y[(r, c)] -= 1e-3;
+                }
+            }
+            y
+        };
+        let mus = concentrated_distributions(n, &[1, n / 2], &fm);
+        let mu = wasserstein_barycenter(
+            &mus,
+            &area,
+            &[0.5, 0.5],
+            &fm,
+            &BarycenterConfig { max_iter: 25, ..Default::default() },
+        );
+        assert!(
+            mu.iter().all(|v| v.is_finite() && *v >= 0.0),
+            "negative kernel values leaked through the clamp"
+        );
+        let s: f64 = mu.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9, "not a distribution: {s}");
+    }
+
+    #[test]
+    fn sinkhorn_fm_parity_bf_vs_sf() {
+        let (n, _area, bf, sf, _) = sphere_backends();
+        let fm_bf = |x: &Mat| bf.apply(x);
+        let fm_sf = |x: &Mat| sf.apply(x);
+        let mus = concentrated_distributions(n, &[1, n / 2], &fm_bf);
+        let (u1, v1) = sinkhorn_scalings(&mus[0], &mus[1], &fm_bf, 200, 1e-300);
+        let (u2, v2) = sinkhorn_scalings(&mus[0], &mus[1], &fm_sf, 200, 1e-300);
+        // Each backend converges onto its own kernel's marginals…
+        assert!(sinkhorn_marginal_error(&mus[0], &u1, &v1, &fm_bf) < 1e-6);
+        assert!(sinkhorn_marginal_error(&mus[0], &u2, &v2, &fm_sf) < 1e-6);
+        // …and the transport plans act the same: compare
+        // `diag(u) K (v ⊙ w)` for a fixed test function w.
+        let w: Vec<f64> = (0..n).map(|j| j as f64 / n as f64).collect();
+        let act = |u: &[f64], v: &[f64], fm: &FastMul| -> Vec<f64> {
+            let vw: Vec<f64> = v.iter().zip(&w).map(|(a, b)| a * b).collect();
+            let k = fm(&Mat::col_vec(&vw));
+            (0..n).map(|j| u[j] * k[(j, 0)]).collect()
+        };
+        let t_bf = act(&u1, &v1, &fm_bf);
+        let t_sf = act(&u2, &v2, &fm_sf);
+        let d = l1(&t_bf, &t_sf);
+        assert!(d < 0.3, "BF vs SF transport plans diverged: L1 {d}");
     }
 
     #[test]

@@ -45,9 +45,13 @@ impl PointCloud {
         self.points.is_empty()
     }
 
-    /// Rescales into the unit cube centered at the origin (matching the
-    /// paper's preprocessing before ε is chosen).
-    pub fn normalize_unit_box(&mut self) {
+    /// The affine transform `p ↦ (p − center) / scale` that
+    /// [`PointCloud::normalize_unit_box`] would apply to this cloud:
+    /// `center` is the bounding-box midpoint, `scale` the largest box
+    /// extent (floored at 1e-12). Exposed so the serving engine can
+    /// store a cloud's registration transform and re-apply it to later
+    /// frames of the same scene.
+    pub fn unit_box_transform(&self) -> ([f64; 3], f64) {
         let mut lo = [f64::INFINITY; 3];
         let mut hi = [f64::NEG_INFINITY; 3];
         for p in &self.points {
@@ -57,11 +61,29 @@ impl PointCloud {
             }
         }
         let scale = (0..3).map(|k| hi[k] - lo[k]).fold(0.0f64, f64::max).max(1e-12);
+        let center = [
+            0.5 * (lo[0] + hi[0]),
+            0.5 * (lo[1] + hi[1]),
+            0.5 * (lo[2] + hi[2]),
+        ];
+        (center, scale)
+    }
+
+    /// Applies `p ↦ (p − center) / scale` in place (the transform shape
+    /// returned by [`PointCloud::unit_box_transform`]).
+    pub fn apply_unit_transform(&mut self, center: [f64; 3], scale: f64) {
         for p in self.points.iter_mut() {
             for k in 0..3 {
-                p[k] = (p[k] - 0.5 * (lo[k] + hi[k])) / scale;
+                p[k] = (p[k] - center[k]) / scale;
             }
         }
+    }
+
+    /// Rescales into the unit cube centered at the origin (matching the
+    /// paper's preprocessing before ε is chosen).
+    pub fn normalize_unit_box(&mut self) {
+        let (center, scale) = self.unit_box_transform();
+        self.apply_unit_transform(center, scale);
     }
 
     /// Uniform random subsample of `k` points (without replacement).

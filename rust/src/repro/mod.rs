@@ -36,6 +36,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("table7", "barycenter ablation: RFD λ"),
     ("table8", "graph classification: VH/RW/WL-SP/FB vs RFD"),
     ("pct", "RFD-masked performer attention (Sec 3.3)"),
+    ("dynmesh", "mesh dynamics: update_cloud + SF refresh vs full re-prepare"),
 ];
 
 /// Runs one experiment by id.
@@ -44,6 +45,7 @@ pub fn run(id: &str, quick: bool) -> Result<()> {
         "fig4-sf" => interp_exp::fig4_sf(quick),
         "fig4-rfd" => interp_exp::fig4_rfd(quick),
         "fig5" => interp_exp::fig5(quick),
+        "dynmesh" => interp_exp::dynmesh(quick),
         "fig9" => interp_exp::fig9(quick),
         "fig10" => interp_exp::fig10(quick),
         "fig11" => interp_exp::fig11(quick),

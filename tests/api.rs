@@ -6,7 +6,7 @@
 //! re-prepare bitwise-identically), and concurrent serving through the
 //! TCP front-end.
 
-use gfi::coordinator::{server, Engine, EngineConfig};
+use gfi::coordinator::{server, Engine, EngineConfig, UpdateOpts};
 use gfi::integrators::rfd::RfdConfig;
 use gfi::integrators::sf::SfConfig;
 use gfi::integrators::trees::TreeKind;
@@ -402,4 +402,53 @@ fn concurrent_server_clients_mixed_backends() {
 
     send(&mut ctl, &mut ctl_reader, r#"{"op":"shutdown"}"#);
     server_thread.join().unwrap();
+}
+
+/// ISSUE 4 acceptance, scaled to the test budget (the ≥10k-node version
+/// of the same check — bitwise parity plus majority tree reuse plus the
+/// refresh-vs-reprepare timing — runs in `bench_coordinator`'s
+/// `engine/update_frame` case): a 1%-vertex perturbation of a mesh
+/// served through `update_cloud` must (a) migrate every refreshable
+/// cached integrator into the new epoch, (b) reuse the majority of the
+/// SF separator tree, and (c) serve results bitwise-identical to a full
+/// `prepare` on the updated scene.
+#[test]
+fn dynamic_scene_update_is_bitwise_identical_and_reuses_majority() {
+    let mut mesh = gfi::mesh::icosphere(4); // 2562 vertices
+    mesh.normalize_unit_box();
+    let n = mesh.num_verts();
+    let eng = Engine::new(None);
+    let id = eng.register_scene(Scene::from_mesh(&mesh), "dyn");
+    let sf = IntegratorSpec::Sf(SfConfig { threshold: 256, separator_size: 8, ..Default::default() });
+    let rfd = IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() });
+    let field = rand_field(n, 3, 41);
+    eng.integrate(id, &sf, &field).unwrap();
+    eng.integrate(id, &rfd, &field).unwrap();
+
+    // Deform ~1% of the vertices in one geometric neighborhood.
+    let verts = gfi::mesh::radial_bump(&mesh.verts, 123, n / 100, 0.04);
+    let info = eng
+        .update_cloud(id, gfi::pointcloud::PointCloud::new(verts), &UpdateOpts::default())
+        .unwrap();
+    assert_eq!(info.epoch, 1);
+    assert_eq!(info.refreshed, 2, "SF and RFD must both migrate: {info:?}");
+    assert_eq!(info.dropped, 0, "{info:?}");
+    let total = info.reused_nodes + info.rebuilt_nodes;
+    assert!(
+        info.reused_nodes * 2 > total,
+        "majority of the separator tree must be reused, got {}/{total}",
+        info.reused_nodes
+    );
+
+    let updated = eng.cloud(id).unwrap().scene.clone();
+    for spec in [&sf, &rfd] {
+        let (out, served) = eng.integrate(id, spec, &field).unwrap();
+        assert!(served.cache_hit, "{spec:?} must be served by the refreshed artifact");
+        let fresh = prepare(&updated, spec).unwrap();
+        assert_eq!(
+            out.data,
+            fresh.apply(&field).data,
+            "{spec:?}: refreshed artifact diverged from a fresh prepare"
+        );
+    }
 }
