@@ -1,5 +1,8 @@
 //! OT/GW benchmarks: the Sinkhorn barycenter loop (Tables 2/3) and GW
 //! iteration cost (Fig. 7) with dense vs RFD-injected structures.
+//!
+//! Writes `BENCH_ot_gw.json` so CI's perf trajectory tracks the OT/GW
+//! path alongside `BENCH_integrators.json` / `BENCH_coordinator.json`.
 
 use gfi::gw::{gw_solve, DenseStructure, GwConfig, LowRankStructure, StructureMatrix};
 use gfi::integrators::rfd::RfdConfig;
@@ -8,11 +11,12 @@ use gfi::integrators::{prepare, FieldIntegrator, IntegratorSpec, KernelFn, Scene
 use gfi::linalg::Mat;
 use gfi::ot::{concentrated_distributions, wasserstein_barycenter, BarycenterConfig};
 use gfi::pointcloud::random_cloud;
-use gfi::util::bench::Bench;
+use gfi::util::bench::{write_json, Bench, BenchResult};
 use gfi::util::rng::Rng;
 
 fn main() {
-    let bench = Bench::new().with_budget(3.0).with_max_iters(8);
+    let bench = Bench::new().with_budget(3.0).with_max_iters(8).with_env_overrides();
+    let mut results: Vec<BenchResult> = Vec::new();
 
     // Barycenter with SF vs RFD FMs on a sphere.
     let mut mesh = gfi::mesh::icosphere(3);
@@ -29,9 +33,9 @@ fn main() {
     .unwrap();
     let fm_sf = |x: &Mat| sf.apply(x);
     let mus = concentrated_distributions(n, &centers, &fm_sf);
-    bench.run(&format!("barycenter/sf-fm/n={n}/10iter"), || {
+    results.push(bench.run(&format!("barycenter/sf-fm/n={n}/10iter"), || {
         wasserstein_barycenter(&mus, &area, &[1.0 / 3.0; 3], &fm_sf, &cfg)
-    });
+    }));
     let rfd = prepare(
         &scene,
         &IntegratorSpec::Rfd(RfdConfig {
@@ -43,9 +47,9 @@ fn main() {
     )
     .unwrap();
     let fm_rfd = |x: &Mat| rfd.apply(x);
-    bench.run(&format!("barycenter/rfd-fm/n={n}/10iter"), || {
+    results.push(bench.run(&format!("barycenter/rfd-fm/n={n}/10iter"), || {
         wasserstein_barycenter(&mus, &area, &[1.0 / 3.0; 3], &fm_rfd, &cfg)
-    });
+    }));
 
     // GW solve, dense vs low-rank.
     let gw_n = 300;
@@ -56,16 +60,39 @@ fn main() {
     let gw_cfg = GwConfig { max_iter: 5, ..Default::default() };
     let da = DenseStructure::diffusion(&pa, 0.3, -0.2);
     let db = DenseStructure::diffusion(&pb, 0.3, -0.2);
-    bench.run(&format!("gw/dense/n={gw_n}/5iter"), || {
+    results.push(bench.run(&format!("gw/dense/n={gw_n}/5iter"), || {
         gw_solve(&da, &db, &p, &p, &gw_cfg)
-    });
+    }));
     let rc = RfdConfig { num_features: 16, epsilon: 0.3, lambda: -0.2, seed: 1, ..Default::default() };
     let la = LowRankStructure::from_rfd(&pa, rc.clone());
     let lb = LowRankStructure::from_rfd(&pb, RfdConfig { seed: 2, ..rc });
-    bench.run(&format!("gw/rfd-lowrank/n={gw_n}/5iter"), || {
+    results.push(bench.run(&format!("gw/rfd-lowrank/n={gw_n}/5iter"), || {
         gw_solve(&la, &lb, &p, &p, &gw_cfg)
-    });
+    }));
     // The Hadamard-square building block on its own.
-    bench.run(&format!("gw/hadamard-sq/dense/n={gw_n}"), || da.hadamard_sq_vec(&p));
-    bench.run(&format!("gw/hadamard-sq/khatri-rao/n={gw_n}"), || la.hadamard_sq_vec(&p));
+    results.push(bench.run(&format!("gw/hadamard-sq/dense/n={gw_n}"), || {
+        da.hadamard_sq_vec(&p)
+    }));
+    results.push(bench.run(&format!("gw/hadamard-sq/khatri-rao/n={gw_n}"), || {
+        la.hadamard_sq_vec(&p)
+    }));
+
+    // Shared-structure GW prep: the shortest-path structure consumes the
+    // same distance-matrix artifact family as BF-sp, so a second kernel
+    // over the same graph only pays the evaluation, not the Dijkstra.
+    {
+        let g = mesh.to_graph();
+        let dist = gfi::integrators::artifacts::graph_distance_matrix(&g);
+        results.push(bench.run(&format!("gw/sp-structure/full/n={n}"), || {
+            DenseStructure::shortest_path(&g, &KernelFn::ExpNeg(4.0))
+        }));
+        results.push(bench.run(&format!("gw/sp-structure/from-shared/n={n}"), || {
+            DenseStructure::new(gfi::integrators::artifacts::sp_kernel_map(
+                &dist,
+                &KernelFn::ExpNeg(4.0),
+            ))
+        }));
+    }
+
+    write_json("BENCH_ot_gw.json", &results).expect("write BENCH_ot_gw.json");
 }

@@ -35,7 +35,11 @@
 //! Eviction is transparent to callers: the engine treats an evicted
 //! integrator exactly like a never-prepared one and rebuilds it on the
 //! next request (`cache_hit: false`), so bounded memory costs repeat
-//! pre-processing, never correctness.
+//! pre-processing, never correctness. The engine runs four of these
+//! caches — scenes, prepared integrators, shared structure artifacts
+//! (the kernel-independent prepare stage, whose `hits` counter doubles
+//! as the share count), and PJRT preps; see
+//! [`crate::coordinator::EngineCacheStats`].
 //!
 //! [`FieldIntegrator::resident_bytes`]: crate::integrators::FieldIntegrator::resident_bytes
 

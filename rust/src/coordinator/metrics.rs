@@ -125,6 +125,9 @@ pub fn caches_to_json(stats: &crate::coordinator::EngineCacheStats) -> Json {
     Json::obj(vec![
         ("clouds", cache_to_json(&stats.clouds)),
         ("integrators", cache_to_json(&stats.integrators)),
+        // The structures cache's `hits` is the share counter: prepares
+        // that skipped the structure stage (see docs/PROTOCOL.md).
+        ("structures", cache_to_json(&stats.structures)),
         ("pjrt_preps", cache_to_json(&stats.pjrt_preps)),
     ])
 }

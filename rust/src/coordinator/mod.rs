@@ -8,12 +8,22 @@
 //! * caches **prepared integrators** per `(cloud, spec.cache_key())` in a
 //!   sharded, byte-budgeted LRU ([`cache`]) — pre-processing (separator
 //!   trees, RF features, dense kernels) is paid once, built through the
-//!   single fallible [`prepare`] factory, and the request path only runs
-//!   `apply_into`. Entries are weighted by
+//!   two-stage [`prepare_structure`] → [`finish`] pipeline, and the
+//!   request path only runs `apply_into`. Entries are weighted by
 //!   [`FieldIntegrator::resident_bytes`], so one dense brute-force kernel
 //!   costs what it actually holds; when [`EngineConfig::max_resident_bytes`]
 //!   is exceeded the coldest entries are evicted and rebuild transparently
 //!   on their next request (`cache_hit: false`);
+//! * caches **shared structure artifacts** per
+//!   `(cloud, epoch, spec.structural_key())` — the kernel-independent
+//!   stage of preparation ([`StructureArtifact`]: SF's separator tree,
+//!   BF-sp's distance matrix, RFD's feature factors, the sampled tree
+//!   ensemble, the ε-graph) — so a kernel sweep over one cloud pays each
+//!   structure **once per `(cloud, epoch)`**: the second spec differing
+//!   only in kernel skips the Dijkstra/tree/feature work entirely (its
+//!   `IntegrateInfo::structure_shared` is true, and the structure
+//!   cache's `hits` counter in [`Engine::cache_stats`] is the share
+//!   count);
 //! * bounds **registered scenes** by [`EngineConfig::max_clouds`] (LRU);
 //!   evicting or unregistering a cloud cascades into its prepared
 //!   artifacts so nothing derived outlives its scene;
@@ -31,18 +41,21 @@
 //!   a frame update bumps the scene's epoch (cache keys are
 //!   `(cloud, epoch, spec)`, so artifacts of older epochs are retired
 //!   wholesale without scanning), diffs the new geometry against the old
-//!   ([`Scene::diff`]), and *selectively* migrates cached integrators —
-//!   SF trees are refreshed by dirty-subtree rebuild
-//!   ([`SeparatorFactorization::refresh`]), RFD re-features in its
-//!   existing Woodbury shapes, PJRT preps (scene-independent) carry over
-//!   verbatim, and only backends with no incremental path are dropped to
-//!   rebuild on demand;
+//!   ([`Scene::diff`]), and *selectively* migrates cached state —
+//!   shared **structures** are refreshed first (SF trees by dirty-subtree
+//!   rebuild, RFD features by re-featuring against the stored anchors),
+//!   then every cached integrator's kernel stage is re-derived from its
+//!   refreshed structure, so a frame update followed by a kernel sweep
+//!   shares one refreshed tree (a structure evicted from the store is
+//!   recovered from any cached integrator still holding it, so the
+//!   once-per-key invariant survives byte pressure); PJRT preps
+//!   (scene-independent) carry over verbatim, and only backends with no
+//!   incremental path are dropped to rebuild on demand;
 //! * **batches** concurrent requests for the same cloud+spec — see
 //!   [`batcher`];
 //! * records per-backend latency/throughput [`metrics`] and exposes cache
 //!   occupancy/hit/eviction counters ([`Engine::cache_stats`]).
 //!
-//! [`SeparatorFactorization::refresh`]: crate::integrators::sf::SeparatorFactorization::refresh
 //!
 //! Unkeyable specs (custom kernels without a label) are rejected with a
 //! typed error instead of silently sharing a cache slot — see
@@ -61,8 +74,8 @@ pub mod server;
 
 use crate::integrators::rfd::sample_features;
 use crate::integrators::{
-    prepare, validate_spec, FieldIntegrator, GfiError, IntegratorSpec, Scene, SceneDelta,
-    Workspace,
+    finish, prepare_structure, validate_spec, FieldIntegrator, GfiError, IntegratorSpec,
+    RefreshStats, Scene, SceneDelta, StructureArtifact, Workspace,
 };
 use crate::linalg::Mat;
 use crate::mesh::TriMesh;
@@ -87,11 +100,21 @@ pub use crate::integrators::IntegratorSpec as Backend;
 const MAX_POOLED_WORKSPACES: usize = 64;
 
 /// Cache key of one prepared artifact: `(cloud id, scene epoch, spec
-/// cache key)`. The epoch tag is what lets [`Engine::update_cloud`]
-/// retire every artifact of an outdated scene version without touching
-/// entries individually — old-epoch keys simply stop being looked up,
-/// and are swept opportunistically.
+/// cache key)` for integrators and PJRT preps, `(cloud id, scene epoch,
+/// spec structural key)` for shared structures. The epoch tag is what
+/// lets [`Engine::update_cloud`] retire every artifact of an outdated
+/// scene version without touching entries individually — old-epoch keys
+/// simply stop being looked up, and are swept opportunistically.
 type ArtifactKey = (u64, u64, String);
+
+/// One cached prepared integrator plus the spec it was prepared from.
+/// Keeping the spec lets [`Engine::update_cloud`] re-derive the kernel
+/// stage from a refreshed shared structure instead of refreshing every
+/// integrator's private copy of it.
+struct PreparedEntry {
+    spec: IntegratorSpec,
+    integrator: Arc<dyn FieldIntegrator>,
+}
 
 /// Engine capacity/topology configuration, with a builder-style API:
 ///
@@ -110,10 +133,12 @@ pub struct EngineConfig {
     /// Shard count for each internal cache (lock-contention knob).
     pub shards: usize,
     /// Byte budget for the prepared-integrator cache, enforced by LRU
-    /// eviction and reported by [`Engine::resident_bytes`]. The
-    /// PJRT-prep side cache — a few hundred bytes per entry — is
-    /// bounded by the same value *independently* (its occupancy shows
-    /// up in [`Engine::cache_stats`], not in `resident_bytes`).
+    /// eviction and reported by [`Engine::resident_bytes`]. The shared
+    /// structure store and the PJRT-prep side cache are each bounded by
+    /// the same value *independently* (their occupancy shows up in
+    /// [`Engine::cache_stats`], not in `resident_bytes`). Note that a
+    /// structure shared with live integrators is charged in both caches —
+    /// the estimates are conservative, never under-counting.
     /// `u64::MAX` = unbounded.
     pub max_resident_bytes: u64,
     /// Maximum registered scenes before the least-recently-used cloud
@@ -228,8 +253,11 @@ pub struct UpdateInfo {
     /// Cached integrators migrated into the new epoch by incremental
     /// refresh.
     pub refreshed: usize,
-    /// Cached integrators dropped (no incremental path, refresh failure,
-    /// or `refresh: false`); they rebuild transparently on next request.
+    /// Cache entries dropped: cached integrators with no incremental
+    /// path, refresh failures, or `refresh: false`; after an
+    /// *incompatible* update, every purged entry (integrators, shared
+    /// structures, PJRT preps). Dropped entries rebuild transparently on
+    /// the next request.
     pub dropped: usize,
     /// Separator-tree nodes (summed over refreshed SF integrators)
     /// carried over unchanged.
@@ -251,11 +279,16 @@ pub struct IntegrateInfo {
     pub apply_seconds: f64,
     /// Whether a cached prepared integrator served the request.
     pub cache_hit: bool,
+    /// Whether *this* request's prepare skipped the structure stage by
+    /// reusing a shared structure artifact built by an earlier spec
+    /// (always `false` on an integrator cache hit, for structure-less
+    /// backends, and on the PJRT route).
+    pub structure_shared: bool,
     /// Whether the PJRT artifact route executed the apply.
     pub used_pjrt: bool,
 }
 
-/// Occupancy + lifetime counters of the engine's three internal caches.
+/// Occupancy + lifetime counters of the engine's four internal caches.
 #[derive(Clone, Debug)]
 pub struct EngineCacheStats {
     /// Registered scenes (bounded by [`EngineConfig::max_clouds`]).
@@ -263,6 +296,11 @@ pub struct EngineCacheStats {
     /// Prepared integrators (bounded by
     /// [`EngineConfig::max_resident_bytes`]).
     pub integrators: CacheStats,
+    /// Shared structure artifacts — the kernel-independent prepare stage
+    /// (same byte bound, enforced independently). `hits` is the **share
+    /// counter**: each hit is one prepare that skipped the structure
+    /// stage because another spec already built it.
+    pub structures: CacheStats,
     /// PJRT feature preps (same byte bound; tiny entries).
     pub pjrt_preps: CacheStats,
 }
@@ -271,7 +309,14 @@ pub struct EngineCacheStats {
 pub struct Engine {
     cfg: EngineConfig,
     clouds: ShardedCache<u64, Arc<CloudEntry>>,
-    integrators: ShardedCache<ArtifactKey, Arc<dyn FieldIntegrator>>,
+    integrators: ShardedCache<ArtifactKey, Arc<PreparedEntry>>,
+    /// Shared kernel-independent structure artifacts, keyed by
+    /// `(cloud, epoch, structural_key)` — one separator tree / distance
+    /// matrix / feature factor per structural key, shared across every
+    /// kernel-stage variant. Byte-bounded by the same
+    /// [`EngineConfig::max_resident_bytes`] value, independently of the
+    /// integrator cache (its `hits` counter is the share count).
+    structures: ShardedCache<ArtifactKey, StructureArtifact>,
     pjrt_preps: ShardedCache<ArtifactKey, Arc<PjrtPrep>>,
     /// Pool of warm apply workspaces (one in flight per concurrent
     /// request; returned after each apply, capped at
@@ -314,6 +359,7 @@ impl Engine {
         Engine {
             clouds: ShardedCache::new(shard_cfg(u64::MAX, cfg.max_clouds)),
             integrators: ShardedCache::new(shard_cfg(cfg.max_resident_bytes, usize::MAX)),
+            structures: ShardedCache::new(shard_cfg(cfg.max_resident_bytes, usize::MAX)),
             pjrt_preps: ShardedCache::new(shard_cfg(cfg.max_resident_bytes, usize::MAX)),
             workspaces: Mutex::new(Vec::new()),
             ws_allocations: AtomicUsize::new(0),
@@ -504,18 +550,75 @@ impl Engine {
         // would be refreshed against the wrong baseline — those are swept
         // below instead.
         let old_epoch = old.scene.epoch;
+        let old_structs = self.structures.take_if(|k| k.0 == id && k.1 == old_epoch);
         let old_arts = self.integrators.take_if(|k| k.0 == id && k.1 == old_epoch);
         let ((), refresh_secs) = crate::util::timer::timed(|| {
-            for (key, integ) in old_arts {
-                let migrated = opts
-                    .refresh
-                    .then(|| integ.refreshed(&entry.scene, &dirty))
-                    .flatten();
+            // Stage 1: refresh each shared *structure* once per
+            // structural key — a frame update followed by a kernel sweep
+            // shares one refreshed tree. A structure evicted from the
+            // store while its integrators stayed cached is recovered from
+            // any of them (`FieldIntegrator::structure_artifact`), so the
+            // once-per-key invariant holds under byte pressure too.
+            // Families with no incremental path (distance matrices,
+            // sampled tree ensembles, ε-graphs) and failed refreshes are
+            // dropped here and rebuild on demand.
+            let mut refreshed_structs: std::collections::HashMap<String, StructureArtifact> =
+                std::collections::HashMap::new();
+            if opts.refresh {
+                let mut to_refresh: std::collections::HashMap<String, StructureArtifact> =
+                    old_structs.into_iter().map(|(k, st)| (k.2, st)).collect();
+                for (_, art) in &old_arts {
+                    if let Some(sk) = art.spec.structural_key() {
+                        if !to_refresh.contains_key(&sk) {
+                            if let Some(st) = art.integrator.structure_artifact() {
+                                to_refresh.insert(sk, st);
+                            }
+                        }
+                    }
+                }
+                for (sk, st) in to_refresh {
+                    if let Some(Ok((st2, rs))) = st.refreshed(&entry.scene, &dirty) {
+                        info.reused_nodes += rs.reused_nodes;
+                        info.rebuilt_nodes += rs.rebuilt_nodes;
+                        let w = st2.resident_bytes() as u64;
+                        let _ = self
+                            .structures
+                            .insert((id, new_epoch, sk.clone()), st2.clone(), w);
+                        refreshed_structs.insert(sk, st2);
+                    }
+                }
+            }
+            // Stage 2: re-derive each cached integrator's *kernel stage*
+            // from its refreshed structure (cheap: kernel table / Woodbury
+            // core, no Dijkstra). Only integrators without a refreshable
+            // structure take the trait-hook fallback; the rest of the
+            // unmigratable ones are dropped to rebuild on demand.
+            for (key, art) in old_arts {
+                let migrated: Option<
+                    std::result::Result<(Box<dyn FieldIntegrator>, RefreshStats), GfiError>,
+                > = if !opts.refresh {
+                    None
+                } else if let Some(st) = art
+                    .spec
+                    .structural_key()
+                    .and_then(|sk| refreshed_structs.get(&sk))
+                {
+                    Some(
+                        finish(&entry.scene, &art.spec, Some(st.clone()))
+                            .map(|b| (b, RefreshStats::default())),
+                    )
+                } else {
+                    art.integrator.refreshed(&entry.scene, &dirty)
+                };
                 match migrated {
                     Some(Ok((fresh, rs))) => {
                         let w = fresh.resident_bytes() as u64;
                         let arc: Arc<dyn FieldIntegrator> = Arc::from(fresh);
-                        let _ = self.integrators.insert((id, new_epoch, key.2), arc, w);
+                        let cached = Arc::new(PreparedEntry {
+                            spec: art.spec.clone(),
+                            integrator: arc,
+                        });
+                        let _ = self.integrators.insert((id, new_epoch, key.2), cached, w);
                         info.refreshed += 1;
                         info.reused_nodes += rs.reused_nodes;
                         info.rebuilt_nodes += rs.rebuilt_nodes;
@@ -534,14 +637,32 @@ impl Engine {
         // Sweep stragglers a concurrent prepare may have inserted under
         // the old epoch between our take and the scene swap.
         self.integrators.remove_if(|k| k.0 == id && k.1 < new_epoch);
+        self.structures.remove_if(|k| k.0 == id && k.1 < new_epoch);
         self.pjrt_preps.remove_if(|k| k.0 == id && k.1 < new_epoch);
+        // Orphan guard, mirroring `prepared()`'s post-insert check: if the
+        // cloud was unregistered while the migration loop ran, its purge
+        // may have raced our re-inserts — drop them so nothing derived
+        // outlives its scene. If another update superseded this epoch
+        // (concurrent same-cloud updates are documented last-writer-wins),
+        // drop only this epoch's plantings and leave the winner's alone.
+        match self.clouds.peek(&id) {
+            None => {
+                self.purge_cloud_artifacts(id);
+            }
+            Some(cur) if cur.scene.epoch != new_epoch => {
+                self.integrators.remove_if(|k| k.0 == id && k.1 == new_epoch);
+                self.structures.remove_if(|k| k.0 == id && k.1 == new_epoch);
+                self.pjrt_preps.remove_if(|k| k.0 == id && k.1 == new_epoch);
+            }
+            Some(_) => {}
+        }
         Ok(info)
     }
 
-    /// Drops every prepared artifact (integrators + PJRT preps) for
-    /// cloud `id`, keeping the scene registered; returns how many
-    /// entries were dropped. The next request for any of them re-prepares
-    /// transparently.
+    /// Drops every prepared artifact (integrators, shared structures,
+    /// and PJRT preps) for cloud `id`, keeping the scene registered;
+    /// returns how many entries were dropped across the three caches.
+    /// The next request for any of them re-prepares transparently.
     pub fn evict_cloud_artifacts(&self, id: u64) -> usize {
         self.purge_cloud_artifacts(id)
     }
@@ -549,7 +670,11 @@ impl Engine {
     /// Drops the prepared artifact for one `(cloud, spec)` pair — every
     /// epoch's copy, should stragglers from a concurrent update survive —
     /// and returns how many cache entries (integrator and/or PJRT prep)
-    /// were dropped. Fails only for unkeyable specs.
+    /// were dropped. The spec's *shared structure* is deliberately kept:
+    /// other kernel-stage variants may still be using it, and a
+    /// re-prepare of the evicted spec reuses it (kernel stage only).
+    /// [`Engine::evict_cloud_artifacts`] / [`Engine::unregister_cloud`]
+    /// drop structures too. Fails only for unkeyable specs.
     pub fn evict_spec(&self, id: u64, spec: &IntegratorSpec) -> Result<usize> {
         let skey = spec.cache_key()?;
         let dropped = self.integrators.remove_if(|k| k.0 == id && k.2 == skey)
@@ -558,23 +683,26 @@ impl Engine {
     }
 
     fn purge_cloud_artifacts(&self, id: u64) -> usize {
-        self.integrators.remove_if(|k| k.0 == id) + self.pjrt_preps.remove_if(|k| k.0 == id)
+        self.integrators.remove_if(|k| k.0 == id)
+            + self.structures.remove_if(|k| k.0 == id)
+            + self.pjrt_preps.remove_if(|k| k.0 == id)
     }
 
     /// Bytes currently held by the prepared-integrator cache — the
     /// quantity bounded by [`EngineConfig::max_resident_bytes`]. The
-    /// PJRT prep side cache (a few hundred bytes per entry, bounded by
-    /// the same value independently) is reported separately through
+    /// structure store and the PJRT prep side cache (bounded by the same
+    /// value independently) are reported separately through
     /// [`Engine::cache_stats`].
     pub fn resident_bytes(&self) -> u64 {
         self.integrators.weight_bytes()
     }
 
-    /// Snapshot of all three internal caches' occupancy and counters.
+    /// Snapshot of all four internal caches' occupancy and counters.
     pub fn cache_stats(&self) -> EngineCacheStats {
         EngineCacheStats {
             clouds: self.clouds.stats(),
             integrators: self.integrators.stats(),
+            structures: self.structures.stats(),
             pjrt_preps: self.pjrt_preps.stats(),
         }
     }
@@ -602,39 +730,78 @@ impl Engine {
         }
     }
 
-    /// Cached prepared integrator for `(cloud, spec)` — builds through
-    /// [`prepare`] on a miss (including after an eviction, which is how
-    /// an evicted entry rebuilds transparently). Returns
-    /// `(integrator, cache_hit, seconds)`.
+    /// Cached prepared integrator for `(cloud, spec)` — on a miss, runs
+    /// the two-stage prepare pipeline: the kernel-independent **structure
+    /// stage** is looked up in (or inserted into) the shared structure
+    /// store keyed by [`IntegratorSpec::structural_key`], then the
+    /// **kernel stage** ([`finish`]) derives the integrator from it. Two
+    /// specs differing only in kernel therefore pay the Dijkstra/tree/
+    /// feature work once per `(cloud, epoch)`. Returns
+    /// `(integrator, cache_hit, structure_shared, seconds)`.
     fn prepared(
         &self,
         id: u64,
         entry: &CloudEntry,
         spec: &IntegratorSpec,
-    ) -> Result<(Arc<dyn FieldIntegrator>, bool, f64)> {
+    ) -> Result<(Arc<dyn FieldIntegrator>, bool, bool, f64)> {
         let key = (id, entry.scene.epoch, spec.cache_key()?);
-        if let Some(i) = self.integrators.get(&key) {
-            return Ok((i, true, 0.0));
+        if let Some(e) = self.integrators.get(&key) {
+            return Ok((e.integrator.clone(), true, false, 0.0));
         }
-        let (built, dt) = crate::util::timer::timed(|| prepare(&entry.scene, spec));
-        let built: Arc<dyn FieldIntegrator> = Arc::from(built?);
+        let (built, dt) = crate::util::timer::timed(
+            || -> Result<(Box<dyn FieldIntegrator>, bool)> {
+                let (structure, shared) = match spec.structural_key() {
+                    None => (None, false),
+                    Some(sk) => {
+                        let skey = (id, entry.scene.epoch, sk);
+                        match self.structures.get(&skey) {
+                            Some(st) => (Some(st), true),
+                            None => {
+                                let st = prepare_structure(&entry.scene, spec)?;
+                                if let Some(st) = &st {
+                                    let w = st.resident_bytes() as u64;
+                                    let _ =
+                                        self.structures.insert(skey.clone(), st.clone(), w);
+                                    // Same unregister/stale-epoch orphan
+                                    // guard as the integrator insert below.
+                                    if self.cloud_is_stale(id, entry.scene.epoch) {
+                                        self.structures.remove(&skey);
+                                    }
+                                }
+                                (st, false)
+                            }
+                        }
+                    }
+                };
+                Ok((finish(&entry.scene, spec, structure)?, shared))
+            },
+        );
+        let (built, structure_shared) = built?;
+        let built: Arc<dyn FieldIntegrator> = Arc::from(built);
         let weight = built.resident_bytes() as u64;
+        let cached =
+            Arc::new(PreparedEntry { spec: spec.clone(), integrator: built.clone() });
         // An integrator outweighing the whole budget is served uncached
         // (`rejected` counter) — correctness never depends on caching.
-        let _ = self.integrators.insert(key.clone(), built.clone(), weight);
+        let _ = self.integrators.insert(key.clone(), cached, weight);
         // Close the unregister/update races: if the cloud vanished — or
         // moved to a newer epoch — between our `cloud()` lookup and this
         // insert, the purge/sweep may have run before the insert landed.
         // Drop the orphan so nothing keyed to a dead cloud id or a stale
         // epoch survives to be migrated by a later update.
-        let stale = self
-            .clouds
-            .peek(&id)
-            .map_or(true, |cur| cur.scene.epoch != entry.scene.epoch);
-        if stale {
+        if self.cloud_is_stale(id, entry.scene.epoch) {
             self.integrators.remove(&key);
         }
-        Ok((built, false, dt))
+        Ok((built, false, structure_shared, dt))
+    }
+
+    /// Whether cloud `id` no longer exists at `epoch` (unregistered or
+    /// updated since the caller looked it up) — the orphan-insert guard
+    /// shared by every artifact-cache insert path.
+    fn cloud_is_stale(&self, id: u64, epoch: u64) -> bool {
+        self.clouds
+            .peek(&id)
+            .map_or(true, |cur| cur.scene.epoch != epoch)
     }
 
     /// Integrates `field` over cloud `id`, allocating the output —
@@ -712,12 +879,14 @@ impl Engine {
                 preprocess_seconds: prep_secs,
                 apply_seconds: apply_secs,
                 cache_hit,
+                structure_shared: false,
                 used_pjrt: true,
             });
         }
 
         // Pure-Rust integrator route (with cache).
-        let (integrator, cache_hit, prep_secs) = self.prepared(id, &entry, spec)?;
+        let (integrator, cache_hit, structure_shared, prep_secs) =
+            self.prepared(id, &entry, spec)?;
         let (mut ws, ws_baseline) = self.take_workspace();
         let (_, apply_secs) =
             crate::util::timer::timed(|| integrator.apply_into(field, out, &mut ws));
@@ -728,6 +897,7 @@ impl Engine {
             preprocess_seconds: prep_secs,
             apply_seconds: apply_secs,
             cache_hit,
+            structure_shared,
             used_pjrt: false,
         })
     }
@@ -766,7 +936,8 @@ impl Engine {
                 );
             }
         }
-        let (integrator, cache_hit, prep_secs) = self.prepared(id, &entry, spec)?;
+        let (integrator, cache_hit, structure_shared, prep_secs) =
+            self.prepared(id, &entry, spec)?;
         let mut outs: Vec<Mat> = fields.iter().map(|f| Mat::zeros(n, f.cols)).collect();
         let (mut ws, ws_baseline) = self.take_workspace();
         let (_, apply_secs) =
@@ -781,6 +952,7 @@ impl Engine {
                 preprocess_seconds: prep_secs,
                 apply_seconds: apply_secs,
                 cache_hit,
+                structure_shared,
                 used_pjrt: false,
             },
         ))

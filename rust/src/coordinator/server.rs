@@ -302,6 +302,9 @@ fn handle_line(engine: &Engine, line: &str, shared: &ServerShared) -> Result<Jso
                 ("removed", Json::Bool(removed)),
             ]))
         }
+        // `cache` includes the shared-structure store of the two-stage
+        // prepare pipeline (`cache.structures`; its `hits` counter is the
+        // share count — see docs/PROTOCOL.md).
         "stats" => Ok(Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("clouds", Json::Num(engine.cloud_count() as f64)),

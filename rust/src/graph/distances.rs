@@ -109,6 +109,57 @@ impl SsspScratch {
         self.dist
     }
 
+    /// Radius-bounded single-source Dijkstra on this scratch: vertices
+    /// farther than `radius` are never expanded (or reported). Returns
+    /// the reached `(vertex, distance)` pairs sorted by
+    /// `(distance, vertex)` — deterministic regardless of heap internals.
+    /// This is the ball-growing kernel the FRT/Bartal tree embeddings
+    /// call in a tight loop: reusing one scratch across calls replaces
+    /// the old per-call `HashMap` + `BinaryHeap` allocations with a lazy
+    /// `O(|touched|)` reset.
+    pub fn run_bounded(
+        &mut self,
+        g: &CsrGraph,
+        source: usize,
+        radius: f64,
+    ) -> Vec<(usize, f64)> {
+        assert_eq!(self.dist.len(), g.n, "scratch sized for a different graph");
+        for &v in &self.touched {
+            self.dist[v as usize] = f64::INFINITY;
+        }
+        self.touched.clear();
+        self.heap.clear();
+        self.dist[source] = 0.0;
+        self.touched.push(source as u32);
+        heap_push(&mut self.heap, (0.0, source as u32));
+        let mut out = Vec::new();
+        while let Some((d, v)) = heap_pop(&mut self.heap) {
+            let vu = v as usize;
+            if d > self.dist[vu] {
+                continue; // stale entry (lazy deletion)
+            }
+            out.push((vu, d));
+            let (lo, hi) = (g.offsets[vu], g.offsets[vu + 1]);
+            for e in lo..hi {
+                let u = g.targets[e] as usize;
+                let nd = d + g.weights[e];
+                if nd <= radius && nd < self.dist[u] {
+                    if self.dist[u] == f64::INFINITY {
+                        self.touched.push(u as u32);
+                    }
+                    self.dist[u] = nd;
+                    heap_push(&mut self.heap, (nd, u as u32));
+                }
+            }
+        }
+        out.sort_by(|a, b| {
+            a.1.partial_cmp(&b.1)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.0.cmp(&b.0))
+        });
+        out
+    }
+
     fn run_impl(&mut self, g: &CsrGraph, sources: &[usize], mut assign: Option<&mut [u32]>) {
         assert_eq!(self.dist.len(), g.n, "scratch sized for a different graph");
         if let Some(a) = assign.as_deref() {
@@ -153,6 +204,48 @@ impl SsspScratch {
             }
         }
     }
+}
+
+/// Single-source Dijkstra. Unreachable vertices get `f64::INFINITY`.
+///
+/// One-shot convenience over [`SsspScratch`]; loops over many sources
+/// should use [`for_each_source`] / a reused scratch instead.
+pub fn dijkstra(g: &CsrGraph, source: usize) -> Vec<f64> {
+    multi_source_dijkstra(g, &[source])
+}
+
+/// Multi-source Dijkstra: distance to the *nearest* source.
+pub fn multi_source_dijkstra(g: &CsrGraph, sources: &[usize]) -> Vec<f64> {
+    let mut scratch = SsspScratch::new(g.n);
+    scratch.run(g, sources);
+    scratch.into_dist()
+}
+
+/// Dijkstra truncated at `radius`: vertices farther than `radius` keep
+/// `INFINITY` and the search never expands past them (used by the FRT/
+/// Bartal ball-growing and by local interpolation windows). One-shot
+/// convenience over [`SsspScratch::run_bounded`] — tight loops should
+/// hold a scratch and call `run_bounded` directly.
+pub fn dijkstra_bounded(g: &CsrGraph, source: usize, radius: f64) -> Vec<(usize, f64)> {
+    SsspScratch::new(g.n).run_bounded(g, source, radius)
+}
+
+/// Unweighted BFS levels from `source` (hop counts; `usize::MAX` if
+/// unreachable).
+pub fn bfs_levels(g: &CsrGraph, source: usize) -> Vec<usize> {
+    let mut level = vec![usize::MAX; g.n];
+    let mut queue = std::collections::VecDeque::new();
+    level[source] = 0;
+    queue.push_back(source);
+    while let Some(v) = queue.pop_front() {
+        for (u, _) in g.neighbors(v) {
+            if level[u] == usize::MAX {
+                level[u] = level[v] + 1;
+                queue.push_back(u);
+            }
+        }
+    }
+    level
 }
 
 /// Runs one single-source Dijkstra per entry of `sources`, in parallel
@@ -238,7 +331,6 @@ pub fn nearest_sources(g: &CsrGraph, sources: &[usize]) -> (Vec<f64>, Vec<u32>) 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::dijkstra;
 
     fn grid(w: usize, h: usize) -> CsrGraph {
         let mut e = Vec::new();

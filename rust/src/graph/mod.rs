@@ -1,8 +1,10 @@
-//! Weighted undirected graph substrate: CSR storage, shortest paths
-//! (Dijkstra / BFS), the batched parallel distance engine
-//! ([`distances`]), connected components, induced subgraphs, Laplacians,
-//! and sparse matvec — everything SF, the tree embeddings, and the
-//! diffusion baselines need.
+//! Weighted undirected graph substrate: CSR storage, the consolidated
+//! shortest-path / BFS kernels and batched parallel distance engine
+//! ([`distances`] — one Dijkstra implementation behind every caller;
+//! [`dijkstra`], [`multi_source_dijkstra`], [`dijkstra_bounded`], and
+//! [`bfs_levels`] are thin compatibility re-exports over it), connected
+//! components, induced subgraphs, Laplacians, and sparse matvec —
+//! everything SF, the tree embeddings, and the diffusion baselines need.
 
 mod csr;
 pub mod distances;

@@ -1,98 +1,21 @@
-//! Shortest paths: binary-heap Dijkstra (single-, multi-source, and
-//! radius-bounded variants) and unweighted BFS levels. These are SF's
-//! pre-processing workhorses (paper App. A.2 uses one Dijkstra run per
-//! separator vertex per recursion level).
+//! Thin compatibility re-exports over the consolidated shortest-path
+//! kernels in [`super::distances`].
+//!
+//! The seed kept two Dijkstra implementations: the batched scratch-reuse
+//! engine in `distances` and a second heap-per-call one here (plus a
+//! `HashMap`-based bounded variant). PR 5 consolidated them — every
+//! caller now runs through the `distances` kernels (flat `(f64, u32)`
+//! heap, lazy `O(|touched|)` reset), so there is exactly one Dijkstra to
+//! optimize. This module survives as the stable import path
+//! (`crate::graph::{dijkstra, multi_source_dijkstra, dijkstra_bounded,
+//! bfs_levels}`); the behavioral contracts are pinned by the tests below.
 
-use super::CsrGraph;
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
-
-#[derive(PartialEq)]
-struct HeapItem {
-    dist: f64,
-    node: usize,
-}
-
-impl Eq for HeapItem {}
-impl PartialOrd for HeapItem {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for HeapItem {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Min-heap via reversed comparison; ties broken by node id for
-        // determinism.
-        other
-            .dist
-            .partial_cmp(&self.dist)
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| other.node.cmp(&self.node))
-    }
-}
-
-/// Single-source Dijkstra. Unreachable vertices get `f64::INFINITY`.
-///
-/// One-shot convenience over [`super::distances::SsspScratch`]; loops
-/// over many sources should use [`super::distances`] instead, which
-/// reuses the scratch across sources and parallelizes.
-pub fn dijkstra(g: &CsrGraph, source: usize) -> Vec<f64> {
-    multi_source_dijkstra(g, &[source])
-}
-
-/// Multi-source Dijkstra: distance to the *nearest* source.
-pub fn multi_source_dijkstra(g: &CsrGraph, sources: &[usize]) -> Vec<f64> {
-    let mut scratch = super::distances::SsspScratch::new(g.n);
-    scratch.run(g, sources);
-    scratch.into_dist()
-}
-
-/// Dijkstra truncated at `radius`: vertices farther than `radius` keep
-/// `INFINITY` and the search never expands past them (used by the FRT/
-/// Bartal ball-growing and by local interpolation windows).
-pub fn dijkstra_bounded(g: &CsrGraph, source: usize, radius: f64) -> Vec<(usize, f64)> {
-    let mut dist = std::collections::HashMap::new();
-    let mut heap = BinaryHeap::new();
-    dist.insert(source, 0.0);
-    heap.push(HeapItem { dist: 0.0, node: source });
-    let mut out = Vec::new();
-    while let Some(HeapItem { dist: d, node: v }) = heap.pop() {
-        if d > *dist.get(&v).unwrap_or(&f64::INFINITY) {
-            continue;
-        }
-        out.push((v, d));
-        for (u, w) in g.neighbors(v) {
-            let nd = d + w;
-            if nd <= radius && nd < *dist.get(&u).unwrap_or(&f64::INFINITY) {
-                dist.insert(u, nd);
-                heap.push(HeapItem { dist: nd, node: u });
-            }
-        }
-    }
-    out
-}
-
-/// Unweighted BFS levels from `source` (hop counts; `usize::MAX` if
-/// unreachable).
-pub fn bfs_levels(g: &CsrGraph, source: usize) -> Vec<usize> {
-    let mut level = vec![usize::MAX; g.n];
-    let mut queue = std::collections::VecDeque::new();
-    level[source] = 0;
-    queue.push_back(source);
-    while let Some(v) = queue.pop_front() {
-        for (u, _) in g.neighbors(v) {
-            if level[u] == usize::MAX {
-                level[u] = level[v] + 1;
-                queue.push_back(u);
-            }
-        }
-    }
-    level
-}
+pub use super::distances::{bfs_levels, dijkstra, dijkstra_bounded, multi_source_dijkstra};
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::CsrGraph;
 
     fn grid3x3() -> CsrGraph {
         // 3x3 grid, unit weights; index = r*3+c.
@@ -152,6 +75,23 @@ mod tests {
         let nodes: std::collections::HashSet<usize> =
             reached.iter().map(|&(v, _)| v).collect();
         assert_eq!(nodes, [0, 1, 3].into_iter().collect());
+    }
+
+    #[test]
+    fn bounded_output_is_distance_sorted() {
+        let g = grid3x3();
+        let reached = dijkstra_bounded(&g, 4, 2.5);
+        for w in reached.windows(2) {
+            assert!(
+                (w[0].1, w[0].0) <= (w[1].1, w[1].0),
+                "bounded output must be (distance, vertex)-sorted: {reached:?}"
+            );
+        }
+        // Distances must match the unbounded run on the reached set.
+        let full = dijkstra(&g, 4);
+        for &(v, d) in &reached {
+            assert_eq!(d, full[v]);
+        }
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //! matrices `C`, `D` accessed only through matvecs and Hadamard-square
 //! vecs — never materialized for the fast variants.
 
-use crate::graph::{distances, CsrGraph};
+use crate::graph::CsrGraph;
+use crate::integrators::artifacts;
 use crate::integrators::rfd::{RfDiffusion, RfdConfig};
 use crate::integrators::KernelFn;
 use crate::linalg::{Mat, Trans};
@@ -36,15 +37,21 @@ impl DenseStructure {
     }
 
     /// Shortest-path-kernel structure `C[i,j] = f(dist_G(i,j))` for mesh
-    /// graphs, materialized by the batched distance engine (all-source
-    /// parallel Dijkstra with reusable scratch). Unreachable pairs get 0.
+    /// graphs: the distance-matrix structure stage
+    /// ([`artifacts::graph_distance_matrix`], the same builder BF-sp's
+    /// prepare uses) followed by [`DenseStructure::from_distances`].
+    /// Unreachable pairs get 0.
     pub fn shortest_path(g: &CsrGraph, f: &KernelFn) -> Self {
-        let sources: Vec<usize> = (0..g.n).collect();
-        let mut c = distances::distance_matrix(g, &sources);
-        for x in c.data.iter_mut() {
-            *x = if x.is_finite() { f.eval(*x) } else { 0.0 };
-        }
-        DenseStructure { c }
+        DenseStructure::from_distances(artifacts::graph_distance_matrix(g), f)
+    }
+
+    /// Kernel stage over a pre-computed all-pairs distance matrix — the
+    /// GW consumer of the engine's shared `Distances` structure artifact
+    /// ([`crate::integrators::StructureArtifact::Distances`]). Shares the
+    /// evaluation code with BF-sp, so the two produce bitwise-identical
+    /// kernels from one Dijkstra pass.
+    pub fn from_distances(dist: Mat, f: &KernelFn) -> Self {
+        DenseStructure { c: artifacts::sp_kernel_from_distances(dist, f) }
     }
 }
 
@@ -122,33 +129,11 @@ impl LowRankStructure {
         let (a, b) = rfd.factors();
         // C x = s·x + s·A·(M·(Bᵀ x)) with s = e^{-Λδ}. Fold s and M into U.
         let s = (-cfg.lambda * rfd.delta()).exp();
-        // U = s · A · M, V = B.
-        let m_core = {
-            // Recover M by applying to the identity of width 2m — cheap
-            // (2m×2m); RfDiffusion exposes apply only, so recompute here
-            // via its factors + a probe. Simpler: rebuild the core.
-            // apply(e_i basis in feature space) is not exposed; instead use
-            // the relation C·B† ... — avoid gymnastics: recompute the core
-            // directly from the factors.
-            let g = b.t_matmul(a);
-            let e = crate::linalg::expm_pade(&g.scale(cfg.lambda));
-            let mut e_minus_i = e;
-            for i in 0..e_minus_i.rows {
-                e_minus_i[(i, i)] -= 1.0;
-            }
-            match crate::linalg::lu_factor(&g) {
-                Some(f) if f.min_pivot > 1e-12 => f.solve_mat(&e_minus_i),
-                _ => {
-                    let mut gr = g.clone();
-                    for i in 0..gr.rows {
-                        gr[(i, i)] += cfg.ridge.max(1e-10);
-                    }
-                    crate::linalg::lu_factor(&gr)
-                        .expect("singular core")
-                        .solve_mat(&e_minus_i)
-                }
-            }
-        };
+        // U = s · A · M, V = B. M is the same Woodbury core the
+        // integrator's kernel stage solves — one implementation.
+        let g = b.t_matmul(a);
+        let m_core = crate::integrators::rfd::woodbury_core(&g, cfg.lambda, cfg.ridge)
+            .expect("from_rfd: singular core");
         // U = s·A·M in one fused-α product (no scale temporary).
         let mut u = Mat::zeros(a.rows, m_core.cols);
         u.gemm_assign(s, a, Trans::No, &m_core, Trans::No, 0.0);
@@ -232,8 +217,9 @@ mod tests {
         let f = KernelFn::ExpNeg(2.0);
         let s = DenseStructure::shortest_path(&g, &f);
         let bf = crate::integrators::bf::BruteForceSp::new(&g, &f);
-        let e = rel_err(&s.c.data, &bf.kernel().data);
-        assert!(e < 1e-12, "sp structure vs bf kernel: {e}");
+        // Both consume the same distance-matrix artifact builder and the
+        // same kernel evaluation — bitwise, not approximately, equal.
+        assert_eq!(s.c.data, bf.kernel().data, "sp structure vs bf kernel diverged");
     }
 
     #[test]

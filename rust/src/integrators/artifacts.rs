@@ -1,0 +1,247 @@
+//! Cross-backend shared-structure artifacts — the first stage of the
+//! two-stage prepare pipeline.
+//!
+//! The paper's FMM framing separates *geometry* (separator trees, ε-NN
+//! graphs, distance tables) from the *kernel* `f` applied over it, and
+//! the Fast Tree-Field Integrators follow-up (arXiv 2406.15881) makes the
+//! same split operational: one tree structure serves whole families of
+//! `f`. This module is that split's currency: a [`StructureArtifact`] is
+//! the kernel-independent output of
+//! [`prepare_structure`](crate::integrators::prepare_structure), keyed by
+//! [`IntegratorSpec::structural_key`] and shared (via `Arc`) between
+//! every spec that agrees on the structural hyper-parameters:
+//!
+//! | artifact | produced by | consumed by | kernel stage left |
+//! |---|---|---|---|
+//! | [`Distances`] | all-pairs batched Dijkstra | `BfSp` (any kernel), GW [`DenseStructure::shortest_path`] | `f` evaluation over the matrix |
+//! | [`SfTree`] | separator-tree build | `Sf` (any kernel) | kernel lookup table |
+//! | [`RfdFeatures`] | ω sampling + feature fill | `Rfd`/`RfdPjrt` (any Λ/ridge) | 2m×2m Woodbury core |
+//! | [`Trees`] | k tree samplings | `Trees` (any λ) | per-edge decay tables |
+//! | [`EpsGraph`] | ε-NN graph build | `BfDiffusion` (any λ) | dense `expm(ΛW)` |
+//!
+//! The serving engine stores artifacts in a byte-budgeted
+//! [`ShardedCache`](crate::coordinator::cache::ShardedCache) keyed by
+//! `(cloud, epoch, structural_key)`, so a kernel sweep over one cloud
+//! pays each structure once per `(cloud, epoch)`; a frame update
+//! ([`StructureArtifact::refreshed`]) migrates the *structure* and the
+//! engine re-derives each cached integrator's kernel stage from it.
+//!
+//! **Accounting note:** a shared structure is charged both by the
+//! structure store and by every finished integrator's `resident_bytes`
+//! (each holds an `Arc` that keeps it alive) — the estimates are
+//! deliberately conservative, never under-counting live memory.
+//!
+//! [`Distances`]: StructureArtifact::Distances
+//! [`SfTree`]: StructureArtifact::SfTree
+//! [`RfdFeatures`]: StructureArtifact::RfdFeatures
+//! [`Trees`]: StructureArtifact::Trees
+//! [`EpsGraph`]: StructureArtifact::EpsGraph
+//! [`DenseStructure::shortest_path`]: crate::gw::DenseStructure::shortest_path
+//! [`IntegratorSpec::structural_key`]: crate::integrators::IntegratorSpec::structural_key
+
+use super::rfd::RfdStructure;
+use super::sf::SfStructure;
+use super::trees::TreesStructure;
+use super::{GfiError, KernelFn, RefreshStats, Scene};
+use crate::graph::{distances, CsrGraph};
+use crate::integrators::DirtySet;
+use crate::linalg::Mat;
+use crate::util::par;
+use std::sync::Arc;
+
+/// One kernel-independent prepared structure, shareable across every
+/// integrator spec with the same structural key on the same
+/// `(cloud, epoch)`. Cloning is cheap (`Arc` handles).
+#[derive(Clone)]
+pub enum StructureArtifact {
+    /// Full `N×N` graph shortest-path distances (`INFINITY` =
+    /// unreachable). Shared by `BfSp` across kernels and by the GW
+    /// shortest-path structure matrix.
+    Distances(Arc<Mat>),
+    /// SF separator tree with raw quantized distance tables (no kernel
+    /// table).
+    SfTree(Arc<SfStructure>),
+    /// RFD ω anchors + importance weights + `N×2m` feature factors
+    /// (before the Λ/ridge-dependent Woodbury core).
+    RfdFeatures(Arc<RfdStructure>),
+    /// `k` sampled low-distortion trees with traversal orders (before the
+    /// λ-dependent decay tables).
+    Trees(Arc<TreesStructure>),
+    /// The ε-NN graph of the scene points (before the λ-dependent dense
+    /// `expm`), tagged with the ε it was built at so the kernel stage can
+    /// verify structural identity.
+    EpsGraph {
+        /// The ε the graph was built with.
+        epsilon: f64,
+        /// The ε-NN graph.
+        graph: Arc<CsrGraph>,
+    },
+}
+
+impl StructureArtifact {
+    /// Short tag naming the artifact family (diagnostics/tests).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            StructureArtifact::Distances(_) => "distances",
+            StructureArtifact::SfTree(_) => "sf_tree",
+            StructureArtifact::RfdFeatures(_) => "rfd_features",
+            StructureArtifact::Trees(_) => "trees",
+            StructureArtifact::EpsGraph { .. } => "eps_graph",
+        }
+    }
+
+    /// Estimated resident heap bytes — the weight the engine's structure
+    /// store charges per entry.
+    pub fn resident_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + match self {
+                StructureArtifact::Distances(d) => {
+                    d.data.len() * std::mem::size_of::<f64>()
+                }
+                StructureArtifact::SfTree(s) => s.resident_bytes(),
+                StructureArtifact::RfdFeatures(s) => s.resident_bytes(),
+                StructureArtifact::Trees(s) => s.resident_bytes(),
+                StructureArtifact::EpsGraph { graph, .. } => graph.resident_bytes(),
+            }
+    }
+
+    /// Incremental refresh against an updated scene — the structural
+    /// analogue of
+    /// [`FieldIntegrator::refreshed`](crate::integrators::FieldIntegrator::refreshed).
+    /// `None` means the artifact family has no incremental path (the full
+    /// distance matrix, sampled trees, and ε-graphs depend globally on
+    /// the geometry): the engine drops it and it rebuilds on demand.
+    /// `Some(Ok(..))` yields a structure bitwise-identical to a fresh
+    /// build on the updated scene, from which every dependent
+    /// integrator's kernel stage can be re-derived.
+    pub fn refreshed(
+        &self,
+        scene: &Scene,
+        dirty: &DirtySet,
+    ) -> Option<Result<(StructureArtifact, RefreshStats), GfiError>> {
+        match self {
+            StructureArtifact::SfTree(s) => Some(s.refreshed(scene, dirty).map(|(s2, st)| {
+                (
+                    StructureArtifact::SfTree(Arc::new(s2)),
+                    RefreshStats {
+                        reused_nodes: st.reused_nodes,
+                        rebuilt_nodes: st.rebuilt_nodes,
+                    },
+                )
+            })),
+            StructureArtifact::RfdFeatures(s) => {
+                if scene.points.is_empty() {
+                    return Some(Err(GfiError::MissingPoints { backend: "rfd" }));
+                }
+                Some(s.refreshed(&scene.points).map(|s2| {
+                    (
+                        StructureArtifact::RfdFeatures(Arc::new(s2)),
+                        RefreshStats::default(),
+                    )
+                }))
+            }
+            StructureArtifact::Distances(_)
+            | StructureArtifact::Trees(_)
+            | StructureArtifact::EpsGraph { .. } => None,
+        }
+    }
+}
+
+/// Materializes the full `N×N` shortest-path distance matrix of `g`
+/// (all-source batched parallel Dijkstra with per-thread scratch —
+/// [`distances::distance_matrix`]). This is the single builder behind
+/// both the `BfSp` kernel matrix and the GW shortest-path structure, so
+/// the two consume bitwise-identical geometry.
+pub fn graph_distance_matrix(g: &CsrGraph) -> Mat {
+    let sources: Vec<usize> = (0..g.n).collect();
+    distances::distance_matrix(g, &sources)
+}
+
+/// Kernel stage over an *owned* distance matrix: evaluates `f`
+/// elementwise in place, parallel over rows (`INFINITY` → `0`, the
+/// decaying-kernel convention — the same per-element evaluation the old
+/// fused Dijkstra+eval loop performed, kept parallel so the kernel
+/// stage of a shared-structure prepare is not serialized). Shared by
+/// `BfSp` and the GW shortest-path structure.
+pub fn sp_kernel_from_distances(mut dist: Mat, f: &KernelFn) -> Mat {
+    let n = dist.cols;
+    let rows = dist.rows;
+    {
+        let cells = par::as_send_cells(&mut dist.data);
+        par::par_for(rows, 16, |i| {
+            // SAFETY: each row index is visited exactly once; rows are
+            // disjoint slices of the matrix buffer.
+            let row =
+                unsafe { std::slice::from_raw_parts_mut(cells.get(i * n) as *mut f64, n) };
+            for x in row.iter_mut() {
+                *x = if x.is_finite() { f.eval(*x) } else { 0.0 };
+            }
+        });
+    }
+    dist
+}
+
+/// Kernel stage over a *store-shared* distance matrix: reads the shared
+/// distances and writes `f(d)` into a fresh matrix (parallel over rows)
+/// — one allocation and one write pass, with no intermediate
+/// full-matrix copy (cloning an `N×N` matrix only to overwrite every
+/// element would double the memory traffic of a shared-structure BF-sp
+/// prepare). Elementwise identical to [`sp_kernel_from_distances`].
+pub fn sp_kernel_map(dist: &Mat, f: &KernelFn) -> Mat {
+    let (rows, n) = (dist.rows, dist.cols);
+    let mut out = Mat::zeros(rows, n);
+    {
+        let cells = par::as_send_cells(&mut out.data);
+        par::par_for(rows, 16, |i| {
+            // SAFETY: each row index is visited exactly once; output rows
+            // are disjoint slices.
+            let row =
+                unsafe { std::slice::from_raw_parts_mut(cells.get(i * n) as *mut f64, n) };
+            for (o, &x) in row.iter_mut().zip(dist.row(i)) {
+                *o = if x.is_finite() { f.eval(x) } else { 0.0 };
+            }
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dijkstra;
+
+    #[test]
+    fn distance_matrix_matches_per_source_dijkstra() {
+        let g = crate::mesh::grid_mesh(5, 4).to_graph();
+        let m = graph_distance_matrix(&g);
+        assert_eq!((m.rows, m.cols), (g.n, g.n));
+        for s in [0usize, 7, g.n - 1] {
+            assert_eq!(m.row(s), &dijkstra(&g, s)[..]);
+        }
+    }
+
+    #[test]
+    fn sp_kernel_maps_unreachable_to_zero() {
+        let g = CsrGraph::from_edges(3, &[(0, 1, 2.0)]);
+        let k = sp_kernel_from_distances(
+            graph_distance_matrix(&g),
+            &KernelFn::ExpNeg(1.0),
+        );
+        assert_eq!(k[(0, 2)], 0.0);
+        assert!((k[(0, 1)] - (-2.0f64).exp()).abs() < 1e-15);
+        assert_eq!(k[(2, 2)], 1.0);
+    }
+
+    #[test]
+    fn artifact_kinds_and_weights_are_plausible() {
+        let g = crate::mesh::grid_mesh(4, 4).to_graph();
+        let d = StructureArtifact::Distances(Arc::new(graph_distance_matrix(&g)));
+        assert_eq!(d.kind(), "distances");
+        assert!(d.resident_bytes() >= g.n * g.n * std::mem::size_of::<f64>());
+        // Distance matrices have no incremental refresh path.
+        let scene = Scene::from_graph(g);
+        assert!(d
+            .refreshed(&scene, &crate::integrators::DirtySet::new(scene.len()))
+            .is_none());
+    }
+}

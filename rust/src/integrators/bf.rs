@@ -8,9 +8,8 @@
 //!   reason the paper's BF column runs out of time/memory first.
 
 use super::{check_apply_shapes, mat_bytes, FieldIntegrator, KernelFn, Workspace};
-use crate::graph::{distances, CsrGraph};
+use crate::graph::CsrGraph;
 use crate::linalg::{expm_pade, Mat, Trans};
-use crate::util::par;
 
 /// Dense shortest-path-kernel integrator.
 pub struct BruteForceSp {
@@ -18,28 +17,28 @@ pub struct BruteForceSp {
 }
 
 impl BruteForceSp {
-    /// Pre-processing: N-source batched Dijkstra (parallel, per-thread
-    /// reusable scratch — see [`distances`]) + kernel evaluation.
-    /// Unreachable pairs contribute `0` (decaying-kernel convention shared
-    /// with SF). Construct via [`crate::integrators::prepare`].
+    /// Pre-processing: structure stage (N-source batched Dijkstra into a
+    /// full distance matrix — see
+    /// [`crate::integrators::artifacts::graph_distance_matrix`]) followed
+    /// by the in-place kernel evaluation. Construct via
+    /// [`crate::integrators::prepare`].
     pub(crate) fn new(g: &CsrGraph, f: &KernelFn) -> Self {
-        let n = g.n;
-        let mut k = Mat::zeros(n, n);
-        let sources: Vec<usize> = (0..n).collect();
-        {
-            let cells = par::as_send_cells(&mut k.data);
-            distances::for_each_source(g, &sources, |i, d| {
-                // SAFETY: each source index arrives exactly once; rows of
-                // the kernel matrix are disjoint.
-                let row = unsafe {
-                    std::slice::from_raw_parts_mut(cells.get(i * n) as *mut f64, n)
-                };
-                for (x, &dj) in row.iter_mut().zip(d) {
-                    *x = if dj.is_finite() { f.eval(dj) } else { 0.0 };
-                }
-            });
-        }
-        BruteForceSp { kernel_matrix: k }
+        use crate::integrators::artifacts;
+        BruteForceSp::from_kernel_matrix(artifacts::sp_kernel_from_distances(
+            artifacts::graph_distance_matrix(g),
+            f,
+        ))
+    }
+
+    /// Wraps an already-evaluated kernel matrix — the kernel stage's
+    /// entry point (`finish` evaluates `f` over the distance-matrix
+    /// artifact via [`crate::integrators::artifacts::sp_kernel_from_distances`]
+    /// / [`crate::integrators::artifacts::sp_kernel_map`], the same
+    /// evaluation the GW shortest-path structure uses, so the two are
+    /// bitwise-identical). Unreachable pairs carry `0` (decaying-kernel
+    /// convention shared with SF).
+    pub(crate) fn from_kernel_matrix(kernel_matrix: Mat) -> Self {
+        BruteForceSp { kernel_matrix }
     }
 
     /// Direct access for accuracy oracles in tests.

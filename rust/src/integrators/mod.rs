@@ -19,7 +19,14 @@
 //! 3. Call [`prepare`]`(&scene, &spec)`. Construction is **fallible**:
 //!    a spec that needs a graph on a graph-less scene, an empty scene, or
 //!    degenerate hyper-parameters comes back as a typed [`GfiError`]
-//!    instead of a panic.
+//!    instead of a panic. Preparation is a **two-stage pipeline**: a
+//!    kernel-independent structure stage ([`prepare_structure`] →
+//!    [`artifacts::StructureArtifact`], keyed by
+//!    [`IntegratorSpec::structural_key`]) and a kernel stage ([`finish`])
+//!    that derives the integrator from a possibly *shared* structure —
+//!    the serving engine pays each separator tree / distance matrix /
+//!    feature factor once per `(cloud, epoch)` across a whole kernel
+//!    sweep.
 //! 4. Call [`FieldIntegrator::apply_into`] with a caller-held output
 //!    matrix and a reusable [`Workspace`]: after warmup the request path
 //!    performs no output or scratch allocation. [`FieldIntegrator::apply`]
@@ -47,6 +54,7 @@
 //! | `Trees` | [`trees`] | low-distortion trees | `f(dist_T(·,·))` | `O(kNd)` |
 //! | `AlMohy`/`Lanczos`/`Bader` | [`expmv`] | expm-action baselines | `exp(ΛW_G)` | iterative / `O(N³)` |
 
+pub mod artifacts;
 pub mod bf;
 pub mod expmv;
 pub mod rfd;
@@ -54,7 +62,10 @@ pub mod sf;
 mod spec;
 pub mod trees;
 
-pub use spec::{prepare, DirtySet, GfiError, IntegratorSpec, Scene, SceneDelta};
+pub use artifacts::StructureArtifact;
+pub use spec::{
+    finish, prepare, prepare_structure, DirtySet, GfiError, IntegratorSpec, Scene, SceneDelta,
+};
 pub(crate) use spec::validate_spec;
 
 use crate::linalg::Mat;
@@ -311,6 +322,17 @@ pub trait FieldIntegrator: Send + Sync {
         dirty: &DirtySet,
     ) -> Option<Result<(Box<dyn FieldIntegrator>, RefreshStats), GfiError>> {
         let _ = (scene, dirty);
+        None
+    }
+
+    /// The shared kernel-independent structure this integrator holds, if
+    /// its backend has an *incrementally refreshable* one (SF's separator
+    /// tree, RFD's feature structure). The engine's `update_cloud` uses
+    /// this to recover a structure that was evicted from the structure
+    /// store while its integrators stayed cached, so a frame update still
+    /// refreshes each tree exactly once however many kernel variants it
+    /// serves. `None` for backends without one.
+    fn structure_artifact(&self) -> Option<StructureArtifact> {
         None
     }
 

@@ -25,11 +25,12 @@
 
 use super::{
     check_apply_shapes, mat_bytes, DirtySet, FieldIntegrator, GfiError, RefreshStats, Scene,
-    Workspace,
+    StructureArtifact, Workspace,
 };
 use crate::linalg::{eigh_jacobi, expm_pade, lu_factor, thin_qr, Mat, Trans};
 use crate::pointcloud::PointCloud;
 use crate::util::{par, rng::Rng};
+use std::sync::Arc;
 
 /// RFD hyper-parameters (paper §3.2 uses m=16–30, ε=0.01–0.3, λ≈±0.1–0.5).
 #[derive(Clone, Debug)]
@@ -66,13 +67,51 @@ impl Default for RfdConfig {
     }
 }
 
-/// A prepared RFDiffusion integrator.
+/// The kernel-independent subset of [`RfdConfig`] — everything the RFD
+/// **structure stage** depends on. Two RFD specs agreeing on these build
+/// bitwise-identical feature structures regardless of Λ/ridge.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RfdStructuralParams {
+    /// Number of complex random features `m`.
+    pub num_features: usize,
+    /// ε-ball radius of the (implicit) ε-NN graph.
+    pub epsilon: f64,
+    /// Proposal scale σ (`None` → 1/ε).
+    pub sigma: Option<f64>,
+    /// Truncation radius `R`.
+    pub radius: f64,
+    /// PRNG seed for the ω draw.
+    pub seed: u64,
+}
+
+impl RfdStructuralParams {
+    /// The structural projection of a full config.
+    pub fn of(cfg: &RfdConfig) -> Self {
+        RfdStructuralParams {
+            num_features: cfg.num_features,
+            epsilon: cfg.epsilon,
+            sigma: cfg.sigma,
+            radius: cfg.radius,
+            seed: cfg.seed,
+        }
+    }
+}
+
+/// The kernel-independent **structure stage** of RFD: the sampled ω
+/// anchors, their importance weights, and the `N×2m` feature factor
+/// matrices `A`, `B` with the exact diagonal estimate δ. Everything here
+/// is a pure function of `(points, RfdStructuralParams)` — the
+/// diffusion coefficient Λ and the ridge only enter the **kernel stage**
+/// (the Woodbury core), so one structure serves a whole Λ/ridge sweep
+/// (see [`crate::integrators::IntegratorSpec::structural_key`]).
 #[derive(Clone)]
-pub struct RfDiffusion {
-    cfg: RfdConfig,
+pub struct RfdStructure {
+    /// Structural parameters the features were built from (the kernel
+    /// stage verifies a finishing spec matches them).
+    params: RfdStructuralParams,
     /// The sampled ω anchors (kept so a scene update can re-feature the
     /// moved points against the *same* random draw — see
-    /// [`RfDiffusion::refresh`]).
+    /// [`RfdStructure::refreshed`]).
     omegas: Vec<[f64; 3]>,
     /// Raw importance weights `q_j` matching `omegas`.
     q: Vec<f64>,
@@ -80,18 +119,91 @@ pub struct RfDiffusion {
     a: Mat,
     /// `B ∈ R^{N×2m}` (plain trig features).
     b: Mat,
+    /// Exact estimated diagonal δ.
+    delta: f64,
+}
+
+impl RfdStructure {
+    /// Structure stage (`O(N m²)`): samples the anchors from the
+    /// kernel-independent subset of `cfg` and fills the feature factors.
+    pub fn build(points: &PointCloud, cfg: &RfdConfig) -> Self {
+        let (omegas, q) = sample_features(cfg);
+        let n = points.len();
+        let mut a = Mat::zeros(n, 2 * cfg.num_features);
+        let mut b = Mat::zeros(n, 2 * cfg.num_features);
+        let delta = fill_features(points, &omegas, &q, &mut a, &mut b);
+        RfdStructure { params: RfdStructuralParams::of(cfg), omegas, q, a, b, delta }
+    }
+
+    /// The structural hyper-parameters the features were built with.
+    pub fn params(&self) -> &RfdStructuralParams {
+        &self.params
+    }
+
+    /// Re-features moved points against the *stored* anchors: the result
+    /// is bitwise-identical to [`RfdStructure::build`] with the same
+    /// config on the new points, because that fresh build would draw the
+    /// identical anchors from the seed.
+    pub fn refreshed(&self, points: &PointCloud) -> Result<RfdStructure, GfiError> {
+        if points.len() != self.a.rows {
+            return Err(GfiError::InvalidSpec {
+                detail: format!(
+                    "refresh keeps the node count: structure covers {} nodes, cloud has {}",
+                    self.a.rows,
+                    points.len()
+                ),
+            });
+        }
+        let mut a = Mat::zeros(self.a.rows, self.a.cols);
+        let mut b = Mat::zeros(self.b.rows, self.b.cols);
+        let delta = fill_features(points, &self.omegas, &self.q, &mut a, &mut b);
+        Ok(RfdStructure {
+            params: self.params.clone(),
+            omegas: self.omegas.clone(),
+            q: self.q.clone(),
+            a,
+            b,
+            delta,
+        })
+    }
+
+    /// The low-rank factors `(A, B)` with `W_G ≈ A Bᵀ − δI`.
+    pub fn factors(&self) -> (&Mat, &Mat) {
+        (&self.a, &self.b)
+    }
+
+    /// The exact estimated-diagonal correction δ.
+    pub fn delta(&self) -> f64 {
+        self.delta
+    }
+
+    /// Estimated resident heap bytes (two `N×2m` factors dominate) — the
+    /// weight the engine's structure store charges.
+    pub fn resident_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + mat_bytes(&self.a)
+            + mat_bytes(&self.b)
+            + self.omegas.len() * std::mem::size_of::<[f64; 3]>()
+            + self.q.len() * std::mem::size_of::<f64>()
+    }
+}
+
+/// A prepared RFDiffusion integrator: a (possibly shared) feature
+/// structure plus the Λ/ridge-dependent Woodbury core.
+#[derive(Clone)]
+pub struct RfDiffusion {
+    cfg: RfdConfig,
+    structure: Arc<RfdStructure>,
     /// `M = [exp(Λ BᵀA) − I](BᵀA)⁻¹ ∈ R^{2m×2m}`.
     m_core: Mat,
     /// `e^{-Λδ}` diagonal correction factor.
     diag_scale: f64,
-    /// Raw estimated diagonal δ (exposed for tests).
-    delta: f64,
 }
 
 /// `M = [exp(λG) − I] G⁻¹` via an LU solve with a ridge retry on hard
-/// singularity (shared by [`RfDiffusion::try_new`] and
-/// [`RfDiffusion::refresh`]).
-fn woodbury_core(g: &Mat, lambda: f64, ridge: f64) -> Result<Mat, GfiError> {
+/// singularity (shared by [`RfDiffusion::from_structure`], the refresh
+/// path, and the GW low-rank structure builder).
+pub(crate) fn woodbury_core(g: &Mat, lambda: f64, ridge: f64) -> Result<Mat, GfiError> {
     let e = expm_pade(&g.scale(lambda));
     let mut e_minus_i = e;
     for i in 0..e_minus_i.rows {
@@ -116,70 +228,61 @@ fn woodbury_core(g: &Mat, lambda: f64, ridge: f64) -> Result<Mat, GfiError> {
 }
 
 impl RfDiffusion {
-    /// Pre-processing (`O(N m²)`): feature maps + the 2m×2m core.
+    /// Pre-processing (`O(N m²)`): structure stage
+    /// ([`RfdStructure::build`]) + the 2m×2m Woodbury core.
     /// Construct via [`crate::integrators::prepare`].
     pub(crate) fn try_new(points: &PointCloud, cfg: RfdConfig) -> Result<Self, GfiError> {
-        let (omegas, q) = sample_features(&cfg);
-        let n = points.len();
-        let mut a = Mat::zeros(n, 2 * cfg.num_features);
-        let mut b = Mat::zeros(n, 2 * cfg.num_features);
-        let delta = fill_features(points, &omegas, &q, &mut a, &mut b);
-        let g = b.t_matmul(&a); // BᵀA, 2m×2m
+        let structure = Arc::new(RfdStructure::build(points, &cfg));
+        RfDiffusion::from_structure(structure, cfg)
+    }
+
+    /// Kernel stage: finishes an integrator from a (shared) feature
+    /// structure by solving the Λ/ridge-dependent Woodbury core — no
+    /// anchor sampling or feature fill. `cfg`'s structural subset must
+    /// match what the structure was built with; the result is then
+    /// bitwise-identical to a from-scratch [`RfDiffusion::try_new`].
+    pub(crate) fn from_structure(
+        structure: Arc<RfdStructure>,
+        cfg: RfdConfig,
+    ) -> Result<Self, GfiError> {
+        let g = structure.b.t_matmul(&structure.a); // BᵀA, 2m×2m
         let m_core = woodbury_core(&g, cfg.lambda, cfg.ridge)?;
-        let diag_scale = (-cfg.lambda * delta).exp();
-        Ok(RfDiffusion { cfg, omegas, q, a, b, m_core, diag_scale, delta })
+        let diag_scale = (-cfg.lambda * structure.delta).exp();
+        Ok(RfDiffusion { cfg, structure, m_core, diag_scale })
     }
 
     /// Re-prepares this integrator against moved points, reusing the
-    /// sampled ω anchors and every Woodbury scratch shape: the `N×2m`
-    /// feature factors are overwritten in place (no re-sampling, no
-    /// reallocation) and only the `2m×2m` core pipeline reruns. The
-    /// result is bitwise-identical to a fresh
-    /// [`crate::integrators::prepare`] with the same config on the new
-    /// points, because that fresh prepare would draw the identical
-    /// anchors from `cfg.seed`.
+    /// sampled ω anchors: the feature structure is rebuilt against the
+    /// *same* random draw ([`RfdStructure::refreshed`]) and only the
+    /// `2m×2m` core pipeline reruns. The result is bitwise-identical to
+    /// a fresh [`crate::integrators::prepare`] with the same config on
+    /// the new points, because that fresh prepare would draw the
+    /// identical anchors from `cfg.seed`.
     ///
-    /// On `Err` the integrator is **unusable**: the factors were already
-    /// re-featured in place when the core solve failed, so the old state
-    /// cannot be restored — drop it and re-`prepare`. (The error path
-    /// NaN-poisons the diagonal scale, so a caller that keeps applying
-    /// anyway gets NaNs, never silently wrong values. The engine never
-    /// hits this: it refreshes a detached copy and drops it on error.)
+    /// Atomic: on `Err` (singular core) the integrator is left in its
+    /// pre-refresh state — the new structure and core are only committed
+    /// together after both succeed.
     pub fn refresh(&mut self, points: &PointCloud) -> Result<(), GfiError> {
-        if points.len() != self.a.rows {
-            return Err(GfiError::InvalidSpec {
-                detail: format!(
-                    "refresh keeps the node count: integrator covers {} nodes, cloud has {}",
-                    self.a.rows,
-                    points.len()
-                ),
-            });
-        }
-        let delta = fill_features(points, &self.omegas, &self.q, &mut self.a, &mut self.b);
-        let g = self.b.t_matmul(&self.a);
-        match woodbury_core(&g, self.cfg.lambda, self.cfg.ridge) {
-            Ok(core) => {
-                self.m_core = core;
-                self.delta = delta;
-                self.diag_scale = (-self.cfg.lambda * delta).exp();
-                Ok(())
-            }
-            Err(e) => {
-                self.diag_scale = f64::NAN;
-                Err(e)
-            }
-        }
+        let structure = Arc::new(self.structure.refreshed(points)?);
+        let fresh = RfDiffusion::from_structure(structure, self.cfg.clone())?;
+        *self = fresh;
+        Ok(())
     }
 
     /// The low-rank factors (used by the GW fast paths and the spectral
     /// classifier): returns `(A, B)` with `W_G ≈ A Bᵀ − δI`.
     pub fn factors(&self) -> (&Mat, &Mat) {
-        (&self.a, &self.b)
+        self.structure.factors()
     }
 
     /// The exact estimated-diagonal correction δ (see the module docs).
     pub fn delta(&self) -> f64 {
-        self.delta
+        self.structure.delta
+    }
+
+    /// The (possibly shared) kernel-independent feature structure.
+    pub fn structure(&self) -> &Arc<RfdStructure> {
+        &self.structure
     }
 
     /// The hyper-parameters this integrator was prepared with.
@@ -189,15 +292,10 @@ impl RfDiffusion {
 
     /// Point estimate of one adjacency entry (test/diagnostic helper).
     pub fn estimate_weight(&self, i: usize, j: usize) -> f64 {
-        let mut w: f64 = self
-            .a
-            .row(i)
-            .iter()
-            .zip(self.b.row(j))
-            .map(|(x, y)| x * y)
-            .sum();
+        let s = &self.structure;
+        let mut w: f64 = s.a.row(i).iter().zip(s.b.row(j)).map(|(x, y)| x * y).sum();
         if i == j {
-            w -= self.delta;
+            w -= s.delta;
         }
         w
     }
@@ -208,11 +306,12 @@ impl RfDiffusion {
     /// the `k` smallest kernel eigenvalues (paper Table 4 features).
     pub fn kernel_eigenvalues(&self, k: usize, n: usize) -> Vec<f64> {
         // C = [A B] ∈ R^{N×4m}; W = C J Cᵀ with J = [[0, I/2],[I/2, 0]].
-        let m2 = self.a.cols;
-        let mut c = Mat::zeros(self.a.rows, 2 * m2);
-        for r in 0..self.a.rows {
-            c.row_mut(r)[..m2].copy_from_slice(self.a.row(r));
-            c.row_mut(r)[m2..].copy_from_slice(self.b.row(r));
+        let (a, b) = self.structure.factors();
+        let m2 = a.cols;
+        let mut c = Mat::zeros(a.rows, 2 * m2);
+        for r in 0..a.rows {
+            c.row_mut(r)[..m2].copy_from_slice(a.row(r));
+            c.row_mut(r)[m2..].copy_from_slice(b.row(r));
         }
         let (_q, r) = thin_qr(&c);
         // S = R J Rᵀ — symmetric core whose eigenvalues are W's nonzero ones.
@@ -229,7 +328,7 @@ impl RfDiffusion {
         // Kernel eigenvalues: exp(Λ(μ − δ)).
         let mut kvals: Vec<f64> = w_eigs
             .iter()
-            .map(|mu| (self.cfg.lambda * (mu - self.delta)).exp())
+            .map(|mu| (self.cfg.lambda * (mu - self.structure.delta)).exp())
             .collect();
         kvals.sort_by(|a, b| a.partial_cmp(b).unwrap());
         kvals.truncate(k);
@@ -290,12 +389,8 @@ pub fn build_features_public(points: &PointCloud, cfg: &RfdConfig) -> (Mat, Mat,
 /// so tests and the GW fast paths can use the feature maps without paying
 /// the `O(m³)` Woodbury core.
 pub(crate) fn build_features(points: &PointCloud, cfg: &RfdConfig) -> (Mat, Mat, f64) {
-    let (omegas, q) = sample_features(cfg);
-    let n = points.len();
-    let mut a = Mat::zeros(n, 2 * cfg.num_features);
-    let mut b = Mat::zeros(n, 2 * cfg.num_features);
-    let delta = fill_features(points, &omegas, &q, &mut a, &mut b);
-    (a, b, delta)
+    let s = RfdStructure::build(points, cfg);
+    (s.a, s.b, s.delta)
 }
 
 /// Writes the trig feature maps for `points` against pre-sampled anchors
@@ -359,19 +454,18 @@ impl FieldIntegrator for RfDiffusion {
         )
     }
     fn len(&self) -> usize {
-        self.a.rows
+        self.structure.a.rows
     }
 
     /// Low-rank storage: two `N×2m` factors plus the `2m×2m` core and
     /// the `m` sampled anchors — `O(Nm)`, the cheap end of the cache's
-    /// cost spectrum.
+    /// cost spectrum. The feature structure is counted even when shared
+    /// with the engine's structure store (the integrator keeps it alive;
+    /// conservative over-count, never under).
     fn resident_bytes(&self) -> usize {
         std::mem::size_of::<Self>()
-            + mat_bytes(&self.a)
-            + mat_bytes(&self.b)
+            + self.structure.resident_bytes()
             + mat_bytes(&self.m_core)
-            + self.omegas.len() * std::mem::size_of::<[f64; 3]>()
-            + self.q.len() * std::mem::size_of::<f64>()
     }
 
     /// `y = e^{-Λδ} (x + A · M · (Bᵀ x))` — the inference hot path,
@@ -380,22 +474,27 @@ impl FieldIntegrator for RfDiffusion {
     /// the final gemm's α/β store — zero allocation on a warm workspace.
     fn apply_into(&self, field: &Mat, out: &mut Mat, ws: &mut Workspace) {
         check_apply_shapes(self.len(), field, out);
-        let mut bt_x = ws.take_mat(self.b.cols, field.cols);
-        bt_x.gemm_assign(1.0, &self.b, Trans::Yes, field, Trans::No, 0.0);
+        let (a, b) = self.structure.factors();
+        let mut bt_x = ws.take_mat(b.cols, field.cols);
+        bt_x.gemm_assign(1.0, b, Trans::Yes, field, Trans::No, 0.0);
         let mut core = ws.take_mat(self.m_core.rows, field.cols);
         core.gemm_assign(1.0, &self.m_core, Trans::No, &bt_x, Trans::No, 0.0);
         out.data.copy_from_slice(&field.data);
-        out.gemm_assign(self.diag_scale, &self.a, Trans::No, &core, Trans::No, self.diag_scale);
+        out.gemm_assign(self.diag_scale, a, Trans::No, &core, Trans::No, self.diag_scale);
         ws.put_mat(core);
         ws.put_mat(bt_x);
     }
 
+    /// The feature structure is the shared structure the engine can
+    /// refresh once per Λ/ridge sweep.
+    fn structure_artifact(&self) -> Option<StructureArtifact> {
+        Some(StructureArtifact::RfdFeatures(self.structure.clone()))
+    }
+
     /// Scene-update analogue of SF's dirty-subtree rebuild: re-features
     /// the new coordinates against the stored ω anchors
-    /// ([`RfDiffusion::refresh`]). Only the anchors and config are
-    /// copied — the `N×2m` factors and the core start zeroed because
-    /// `refresh` overwrites them entirely. RFD has no per-node
-    /// substructure, so the counters stay 0/0.
+    /// ([`RfdStructure::refreshed`]) and re-solves the core. RFD has no
+    /// per-node substructure, so the counters stay 0/0.
     fn refreshed(
         &self,
         scene: &Scene,
@@ -404,22 +503,17 @@ impl FieldIntegrator for RfDiffusion {
         if scene.points.is_empty() {
             return Some(Err(GfiError::MissingPoints { backend: "rfd" }));
         }
-        let mut fresh = RfDiffusion {
-            cfg: self.cfg.clone(),
-            omegas: self.omegas.clone(),
-            q: self.q.clone(),
-            a: Mat::zeros(self.a.rows, self.a.cols),
-            b: Mat::zeros(self.b.rows, self.b.cols),
-            m_core: Mat::zeros(0, 0),
-            diag_scale: 1.0,
-            delta: 0.0,
-        };
-        Some(fresh.refresh(&scene.points).map(|()| {
-            (
-                Box::new(fresh) as Box<dyn FieldIntegrator>,
-                RefreshStats::default(),
-            )
-        }))
+        Some(
+            self.structure
+                .refreshed(&scene.points)
+                .and_then(|s| RfDiffusion::from_structure(Arc::new(s), self.cfg.clone()))
+                .map(|fresh| {
+                    (
+                        Box::new(fresh) as Box<dyn FieldIntegrator>,
+                        RefreshStats::default(),
+                    )
+                }),
+        )
     }
 }
 
@@ -467,12 +561,12 @@ mod tests {
         let pc = cloud(30, 3);
         let rfd = RfDiffusion::try_new(&pc, RfdConfig { num_features: 64, ..Default::default() }).unwrap();
         // Raw RF diagonal before correction is δ for every i.
+        let (fa, fb) = rfd.factors();
         for i in 0..5 {
-            let raw: f64 = rfd
-                .a
+            let raw: f64 = fa
                 .row(i)
                 .iter()
-                .zip(rfd.b.row(i))
+                .zip(fb.row(i))
                 .map(|(x, y)| x * y)
                 .sum();
             assert!((raw - rfd.delta()).abs() < 1e-12);

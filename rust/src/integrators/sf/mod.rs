@@ -42,7 +42,7 @@ pub use separator::{balanced_level_cut, Separation};
 
 use super::{
     check_apply_shapes, DirtySet, FieldIntegrator, GfiError, KernelFn, RefreshStats, Scene,
-    Workspace,
+    StructureArtifact, Workspace,
 };
 use crate::fft::hankel_matvec_multi;
 use crate::graph::CsrGraph;
@@ -77,6 +77,36 @@ impl Default for SfConfig {
             threshold: 512,
             separator_size: 6,
             seed: 0,
+        }
+    }
+}
+
+/// The kernel-independent subset of [`SfConfig`] — everything the
+/// separator-tree **structure stage** depends on. Two SF specs that agree
+/// on these parameters build bitwise-identical trees regardless of their
+/// kernel `f`, which is what lets the engine's structure store share one
+/// tree across a whole kernel sweep
+/// (see [`crate::integrators::IntegratorSpec::structural_key`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SfTreeParams {
+    /// Distance quantization unit (see [`SfConfig::unit_size`]).
+    pub unit_size: f64,
+    /// Brute-force leaf threshold.
+    pub threshold: usize,
+    /// Truncated separator size `|S′|`.
+    pub separator_size: usize,
+    /// PRNG seed for the randomized separator truncation.
+    pub seed: u64,
+}
+
+impl SfTreeParams {
+    /// The structural projection of a full config.
+    pub fn of(cfg: &SfConfig) -> Self {
+        SfTreeParams {
+            unit_size: cfg.unit_size,
+            threshold: cfg.threshold,
+            separator_size: cfg.separator_size,
+            seed: cfg.seed,
         }
     }
 }
@@ -144,16 +174,72 @@ pub struct SfStats {
     pub rebuilt_nodes: usize,
 }
 
-/// A prepared SeparatorFactorization integrator.
+/// The kernel-independent **structure stage** of SF: the separator tree
+/// with its raw quantized distance tables (`dist_q`/`sep_dq`/`sep_g`) and
+/// τ-slices, but *no* kernel lookup table. Building it is the expensive
+/// part of SF preparation (all the Dijkstra sweeps); finishing an
+/// integrator from it ([`SeparatorFactorization::from_structure`]) only
+/// evaluates the kernel on the quantized grid. One structure therefore
+/// serves every kernel `f` over the same `(graph, SfTreeParams)` — the
+/// FMM-style geometry/kernel split the paper's framing implies.
+#[derive(Clone)]
+pub struct SfStructure {
+    n: usize,
+    params: SfTreeParams,
+    root: SfNode,
+    stats: SfStats,
+}
+
+impl SfStructure {
+    /// Builds the separator tree. `O(N log N)` Dijkstra work (|S′| runs
+    /// per level) plus leaf all-pairs. Kernel-free: the result is a pure
+    /// function of `(g, params)`.
+    pub fn build(g: &CsrGraph, params: SfTreeParams) -> Self {
+        let mut stats = SfStats::default();
+        let all: Vec<u32> = (0..g.n as u32).collect();
+        let root = build(g, all, &params, ROOT_PATH, 0, &mut stats);
+        stats.max_quantized_dist = node_max_q(&root);
+        stats.rebuilt_nodes = stats.leaves + stats.internals;
+        SfStructure { n: g.n, params, root, stats }
+    }
+
+    /// Construction/shape statistics of the separator tree (a refreshed
+    /// structure reports its reuse counters here).
+    pub fn stats(&self) -> &SfStats {
+        &self.stats
+    }
+
+    /// The structural hyper-parameters the tree was built with.
+    pub fn params(&self) -> &SfTreeParams {
+        &self.params
+    }
+
+    /// Node count the structure covers.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// Whether the structure covers zero nodes.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Estimated resident heap bytes of the tree (quantized distance
+    /// tables dominate) — the weight the engine's structure store charges.
+    pub fn resident_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + node_bytes(&self.root)
+    }
+}
+
+/// A prepared SeparatorFactorization integrator: a (possibly shared)
+/// separator-tree structure plus the kernel lookup table derived from it.
 #[derive(Clone)]
 pub struct SeparatorFactorization {
-    n: usize,
     cfg: SfConfig,
-    root: SfNode,
+    structure: std::sync::Arc<SfStructure>,
     /// `f_table[k] = f(k · unit_size)`, sized to the max quantized
     /// distance any step can index.
     f_table: Vec<f64>,
-    stats: SfStats,
 }
 
 /// Root path code for the per-node RNG seeding (see [`node_seed`]).
@@ -185,23 +271,40 @@ fn child_path(path: u64, right: bool) -> u64 {
 }
 
 impl SeparatorFactorization {
-    /// Pre-processing: builds the separator tree. `O(N log N)` Dijkstra
-    /// work (|S′| runs per level) plus leaf all-pairs.
-    /// Construct via [`crate::integrators::prepare`].
+    /// Pre-processing: structure stage ([`SfStructure::build`]) followed
+    /// by the kernel stage. Construct via [`crate::integrators::prepare`].
     pub(crate) fn new(g: &CsrGraph, cfg: SfConfig) -> Self {
-        let mut stats = SfStats::default();
-        let all: Vec<u32> = (0..g.n as u32).collect();
-        let root = build(g, all, &cfg, ROOT_PATH, 0, &mut stats);
-        let max_q = node_max_q(&root);
-        stats.max_quantized_dist = max_q;
-        stats.rebuilt_nodes = stats.leaves + stats.internals;
-        let f_table = kernel_table(&cfg, max_q);
-        SeparatorFactorization { n: g.n, cfg, root, f_table, stats }
+        let structure = std::sync::Arc::new(SfStructure::build(g, SfTreeParams::of(&cfg)));
+        SeparatorFactorization::from_structure(structure, cfg)
+    }
+
+    /// Kernel stage: finishes an integrator from a (shared) separator-tree
+    /// structure by evaluating `cfg.kernel` on the quantized grid — no
+    /// Dijkstra work. `cfg`'s structural projection must equal the
+    /// structure's [`SfTreeParams`]; the result is then bitwise-identical
+    /// to a from-scratch [`SeparatorFactorization::new`] with the same
+    /// config.
+    pub(crate) fn from_structure(
+        structure: std::sync::Arc<SfStructure>,
+        cfg: SfConfig,
+    ) -> Self {
+        debug_assert_eq!(
+            structure.params,
+            SfTreeParams::of(&cfg),
+            "kernel stage finished against a structurally different tree"
+        );
+        let f_table = kernel_table(&cfg, structure.stats.max_quantized_dist);
+        SeparatorFactorization { cfg, structure, f_table }
     }
 
     /// Construction/shape statistics of the separator tree.
     pub fn stats(&self) -> &SfStats {
-        &self.stats
+        &self.structure.stats
+    }
+
+    /// The (possibly shared) kernel-independent tree structure.
+    pub fn structure(&self) -> &std::sync::Arc<SfStructure> {
+        &self.structure
     }
 }
 
@@ -295,7 +398,7 @@ fn quantize(d: f64, unit: f64) -> u32 {
     }
 }
 
-fn build_leaf(sub: &CsrGraph, nodes: Vec<u32>, cfg: &SfConfig, stats: &mut SfStats) -> SfNode {
+fn build_leaf(sub: &CsrGraph, nodes: Vec<u32>, p: &SfTreeParams, stats: &mut SfStats) -> SfNode {
     let n_sub = nodes.len();
     let mut dist_q = vec![u32::MAX; n_sub * n_sub];
     let mut max_q = 0u32;
@@ -303,7 +406,7 @@ fn build_leaf(sub: &CsrGraph, nodes: Vec<u32>, cfg: &SfConfig, stats: &mut SfSta
     let rows: Vec<Vec<f64>> = crate::graph::distances::rows(sub, &all);
     for (i, d) in rows.iter().enumerate() {
         for (j, &dj) in d.iter().enumerate() {
-            let q = quantize(dj, cfg.unit_size);
+            let q = quantize(dj, p.unit_size);
             if q != u32::MAX {
                 max_q = max_q.max(q);
             }
@@ -330,7 +433,7 @@ struct InternalTables {
     own_max_q: u32,
 }
 
-fn internal_tables(sub: &CsrGraph, sep: &Separation, cfg: &SfConfig) -> InternalTables {
+fn internal_tables(sub: &CsrGraph, sep: &Separation, p: &SfTreeParams) -> InternalTables {
     let n_sub = sub.n;
     let ns = sep.separator.len();
     // Distances from each S′ vertex to every subtree node.
@@ -340,7 +443,7 @@ fn internal_tables(sub: &CsrGraph, sep: &Separation, cfg: &SfConfig) -> Internal
     let mut own_max_q = 0u32;
     for (s, row) in sep_rows.iter().enumerate() {
         for (j, &dj) in row.iter().enumerate() {
-            let q = quantize(dj, cfg.unit_size);
+            let q = quantize(dj, p.unit_size);
             if q != u32::MAX {
                 // Cross terms index f at τ_v + g + τ_w ≤ 3·max q.
                 own_max_q = own_max_q.max(q.saturating_mul(3));
@@ -384,7 +487,7 @@ fn internal_tables(sub: &CsrGraph, sep: &Separation, cfg: &SfConfig) -> Internal
 fn build(
     g: &CsrGraph,
     nodes: Vec<u32>,
-    cfg: &SfConfig,
+    p: &SfTreeParams,
     path: u64,
     depth: usize,
     stats: &mut SfStats,
@@ -394,21 +497,21 @@ fn build(
     let global: Vec<usize> = nodes.iter().map(|&x| x as usize).collect();
     let (sub, _) = g.induced(&global);
 
-    if n_sub <= cfg.threshold.max(2) {
-        return build_leaf(&sub, nodes, cfg, stats);
+    if n_sub <= p.threshold.max(2) {
+        return build_leaf(&sub, nodes, p, stats);
     }
-    let mut rng = Rng::new(node_seed(cfg.seed, path));
-    match balanced_level_cut(&sub, cfg.separator_size, &mut rng) {
-        None => build_leaf(&sub, nodes, cfg, stats),
+    let mut rng = Rng::new(node_seed(p.seed, path));
+    match balanced_level_cut(&sub, p.separator_size, &mut rng) {
+        None => build_leaf(&sub, nodes, p, stats),
         Some(sep) => {
             stats.internals += 1;
-            let tables = internal_tables(&sub, &sep, cfg);
+            let tables = internal_tables(&sub, &sep, p);
             let a_nodes: Vec<u32> = sep.part_a.iter().map(|&j| nodes[j as usize]).collect();
             let b_nodes: Vec<u32> = sep.part_b.iter().map(|&j| nodes[j as usize]).collect();
             let a_child =
-                Box::new(build(g, a_nodes, cfg, child_path(path, false), depth + 1, stats));
+                Box::new(build(g, a_nodes, p, child_path(path, false), depth + 1, stats));
             let b_child =
-                Box::new(build(g, b_nodes, cfg, child_path(path, true), depth + 1, stats));
+                Box::new(build(g, b_nodes, p, child_path(path, true), depth + 1, stats));
             let max_q = tables
                 .own_max_q
                 .max(node_max_q(&a_child))
@@ -433,14 +536,17 @@ impl FieldIntegrator for SeparatorFactorization {
         format!("SF(u={},t={})", self.cfg.unit_size, self.cfg.threshold)
     }
     fn len(&self) -> usize {
-        self.n
+        self.structure.n
     }
 
     /// Separator tree + kernel lookup table (`O(N log N)` quantized
-    /// distance entries for mesh graphs).
+    /// distance entries for mesh graphs). The tree is counted even when
+    /// the `Arc` is shared with the engine's structure store — the
+    /// integrator keeps it alive, so charging it here is conservative
+    /// (the store double-charges rather than under-counts).
     fn resident_bytes(&self) -> usize {
         std::mem::size_of::<Self>()
-            + node_bytes(&self.root)
+            + self.structure.resident_bytes()
             + self.f_table.len() * std::mem::size_of::<f64>()
     }
 
@@ -449,13 +555,19 @@ impl FieldIntegrator for SeparatorFactorization {
     /// workspace serves repeated applies without allocator traffic
     /// (the FFT path's internal transform buffers excepted).
     fn apply_into(&self, field: &Mat, out: &mut Mat, ws: &mut Workspace) {
-        check_apply_shapes(self.n, field, out);
+        check_apply_shapes(self.structure.n, field, out);
         out.data.fill(0.0);
-        walk(&self.root, field, out, &self.f_table, &self.cfg, field.cols, ws);
+        walk(&self.structure.root, field, out, &self.f_table, &self.cfg, field.cols, ws);
+    }
+
+    /// The separator tree is the shared structure the engine can refresh
+    /// once per kernel sweep.
+    fn structure_artifact(&self) -> Option<StructureArtifact> {
+        Some(StructureArtifact::SfTree(self.structure.clone()))
     }
 
     /// Dirty-subtree rebuild: clones the prepared tree and runs
-    /// [`SeparatorFactorization::refresh`] on the clone (cloning a clean
+    /// [`SfStructure::refreshed`] on the clone (cloning a clean
     /// subtree is a memcpy; rebuilding it would re-run Dijkstra sweeps).
     fn refreshed(
         &self,

@@ -6,8 +6,8 @@
 //! frame, so most of the separator tree's quantized distance tables stay
 //! valid: an SF node's entire payload is a pure function of (its node
 //! set, the induced subgraph on it, its per-node RNG seed — see
-//! [`node_seed`]). [`SeparatorFactorization::refresh`] therefore walks
-//! the tree top-down and
+//! [`node_seed`]). [`SfStructure::refreshed`] therefore walks the tree
+//! top-down and
 //!
 //! * **reuses** any subtree whose node set misses the dirty set entirely
 //!   (its induced subgraph is unchanged, so a fresh build would produce
@@ -24,39 +24,48 @@
 //!   (the subtree is reused with stale tables), so topology edits always
 //!   require a purge + fresh `prepare`, never a refresh.
 //!
-//! The result is bitwise-identical to a fresh
-//! [`SeparatorFactorization::new`] on the updated scene, at a fraction of
-//! the Dijkstra work: for a dirty set confined to one leaf, the sweep
-//! cost drops from `O(|S′|·N·log N)` (every node at every level) to
+//! The refresh lives on the kernel-independent [`SfStructure`] since
+//! PR 5's two-stage prepare split: one refreshed tree serves every kernel
+//! over the updated scene (the engine's `update_cloud` migrates the
+//! structure once, then re-derives each cached integrator's kernel table
+//! from it). The result is bitwise-identical to a fresh
+//! [`SfStructure::build`] on the updated scene, at a fraction of the
+//! Dijkstra work: for a dirty set confined to one leaf, the sweep cost
+//! drops from `O(|S′|·N·log N)` (every node at every level) to
 //! `O(|S′|·N)` (one root-to-leaf path of geometrically shrinking nodes).
 
 use super::{
     build, build_leaf, child_path, collect_stats, internal_tables, kernel_table, node_max_q,
     node_nodes, node_seed, tree_node_count, DirtySet, GfiError, Scene, SeparatorFactorization,
-    SfNode, SfStats, ROOT_PATH,
+    SfNode, SfStats, SfStructure, SfTreeParams, ROOT_PATH,
 };
 use crate::graph::CsrGraph;
 use crate::integrators::sf::balanced_level_cut;
 use crate::util::rng::Rng;
 
-impl SeparatorFactorization {
+impl SfStructure {
     /// Pushes a scene update down the separator tree, rebuilding only
     /// subtrees whose node set intersects `dirty` (see the module docs).
-    /// Returns the refreshed statistics — `reused_nodes` /
-    /// `rebuilt_nodes` quantify how much of the tree survived.
+    /// Returns the refreshed structure plus its statistics —
+    /// `reused_nodes` / `rebuilt_nodes` quantify how much of the tree
+    /// survived (the same counters are stored on the returned structure).
     ///
     /// Contract: `scene` must have a graph over the same node count with
-    /// the same topology the integrator was prepared against, and `dirty`
+    /// the same topology the structure was built against, and `dirty`
     /// must cover every node whose coordinates moved or whose incident
     /// edge weights changed (a [`Scene::diff`] `Moved` set satisfies
-    /// both). The refreshed integrator is then bitwise-identical to
-    /// `prepare` on the updated scene.
-    pub fn refresh(&mut self, scene: &Scene, dirty: &DirtySet) -> Result<SfStats, GfiError> {
+    /// both). The refreshed structure is then bitwise-identical to
+    /// [`SfStructure::build`] on the updated scene.
+    pub fn refreshed(
+        &self,
+        scene: &Scene,
+        dirty: &DirtySet,
+    ) -> Result<(SfStructure, SfStats), GfiError> {
         let g = scene.graph.as_ref().ok_or(GfiError::MissingGraph { backend: "sf" })?;
         if g.n != self.n {
             return Err(GfiError::InvalidSpec {
                 detail: format!(
-                    "refresh keeps the node count: integrator covers {} nodes, scene has {}",
+                    "refresh keeps the node count: structure covers {} nodes, scene has {}",
                     self.n, g.n
                 ),
             });
@@ -70,21 +79,39 @@ impl SeparatorFactorization {
                 ),
             });
         }
-        let cfg = self.cfg.clone();
+        // Clone, then rebuild in place: cloning a clean subtree is a
+        // memcpy, rebuilding it would re-run Dijkstra sweeps.
+        let mut root = self.root.clone();
+        let params = self.params.clone();
         let mut reused = 0usize;
         let mut rebuilt = 0usize;
-        refresh_node(g, &mut self.root, &cfg, ROOT_PATH, dirty, &mut reused, &mut rebuilt);
+        refresh_node(g, &mut root, &params, ROOT_PATH, dirty, &mut reused, &mut rebuilt);
         let mut st = SfStats {
             reused_nodes: reused,
             rebuilt_nodes: rebuilt,
             ..Default::default()
         };
-        collect_stats(&self.root, 0, &mut st);
-        st.max_quantized_dist = node_max_q(&self.root);
+        collect_stats(&root, 0, &mut st);
+        st.max_quantized_dist = node_max_q(&root);
+        Ok((
+            SfStructure { n: self.n, params, root, stats: st.clone() },
+            st,
+        ))
+    }
+}
+
+impl SeparatorFactorization {
+    /// Refreshes this integrator against an updated scene: refreshes the
+    /// tree structure ([`SfStructure::refreshed`]) and re-derives the
+    /// kernel table. Returns the refresh statistics. The refreshed
+    /// integrator is bitwise-identical to a fresh
+    /// [`crate::integrators::prepare`] on the updated scene.
+    pub fn refresh(&mut self, scene: &Scene, dirty: &DirtySet) -> Result<SfStats, GfiError> {
+        let (structure, st) = self.structure.refreshed(scene, dirty)?;
         if self.f_table.len() != st.max_quantized_dist as usize + 2 {
             self.f_table = kernel_table(&self.cfg, st.max_quantized_dist);
         }
-        self.stats = st.clone();
+        self.structure = std::sync::Arc::new(structure);
         Ok(st)
     }
 }
@@ -92,7 +119,7 @@ impl SeparatorFactorization {
 fn refresh_node(
     g: &CsrGraph,
     node: &mut SfNode,
-    cfg: &super::SfConfig,
+    p: &SfTreeParams,
     path: u64,
     dirty: &DirtySet,
     reused: &mut usize,
@@ -110,7 +137,7 @@ fn refresh_node(
             let global: Vec<usize> = nodes.iter().map(|&x| x as usize).collect();
             let (sub, _) = g.induced(&global);
             let mut st = SfStats::default();
-            *node = build_leaf(&sub, nodes, cfg, &mut st);
+            *node = build_leaf(&sub, nodes, p, &mut st);
             *rebuilt += 1;
         }
         SfNode::Internal {
@@ -122,8 +149,8 @@ fn refresh_node(
         } => {
             let global: Vec<usize> = nodes.iter().map(|&x| x as usize).collect();
             let (sub, _) = g.induced(&global);
-            let mut rng = Rng::new(node_seed(cfg.seed, path));
-            let sep = balanced_level_cut(&sub, cfg.separator_size, &mut rng);
+            let mut rng = Rng::new(node_seed(p.seed, path));
+            let sep = balanced_level_cut(&sub, p.separator_size, &mut rng);
             // The cut depends only on topology + the node seed; under the
             // same-topology contract it reproduces the stored partition
             // exactly (order included).
@@ -144,15 +171,15 @@ fn refresh_node(
                 // Topology shifted under us: fall back to a full rebuild
                 // of this subtree (still bitwise what a fresh build does).
                 let mut st = SfStats::default();
-                *node = build(g, nodes, cfg, path, 0, &mut st);
+                *node = build(g, nodes, p, path, 0, &mut st);
                 *rebuilt += st.leaves + st.internals;
                 return;
             }
             let sep = sep.expect("preserved separation exists");
-            let tables = internal_tables(&sub, &sep, cfg);
+            let tables = internal_tables(&sub, &sep, p);
             *rebuilt += 1;
-            refresh_node(g, &mut a_child, cfg, child_path(path, false), dirty, reused, rebuilt);
-            refresh_node(g, &mut b_child, cfg, child_path(path, true), dirty, reused, rebuilt);
+            refresh_node(g, &mut a_child, p, child_path(path, false), dirty, reused, rebuilt);
+            refresh_node(g, &mut b_child, p, child_path(path, true), dirty, reused, rebuilt);
             let max_q = tables
                 .own_max_q
                 .max(node_max_q(&a_child))
@@ -174,7 +201,7 @@ fn refresh_node(
 
 #[cfg(test)]
 mod tests {
-    use super::super::{SeparatorFactorization, SfConfig};
+    use super::super::{SeparatorFactorization, SfConfig, SfStructure, SfTreeParams};
     use crate::integrators::{DirtySet, FieldIntegrator, GfiError, KernelFn, Scene, SceneDelta};
     use crate::linalg::Mat;
     use crate::mesh::icosphere;
@@ -231,6 +258,41 @@ mod tests {
             (a.depth, a.leaves, a.internals, a.max_leaf, a.max_quantized_dist),
             (b.depth, b.leaves, b.internals, b.max_leaf, b.max_quantized_dist)
         );
+    }
+
+    #[test]
+    fn structure_refresh_is_bitwise_a_fresh_structure_build() {
+        // The structure-level refresh (what the engine's update_cloud
+        // migrates once per kernel sweep) must itself reproduce a fresh
+        // structure build bitwise, independent of any kernel.
+        let mut mesh = icosphere(2);
+        mesh.normalize_unit_box();
+        let scene0 = Scene::from_mesh(&mesh);
+        let params = SfTreeParams { unit_size: 0.01, threshold: 32, separator_size: 6, seed: 9 };
+        let s0 = SfStructure::build(scene0.graph.as_ref().unwrap(), params.clone());
+        let scene1 = deformed_scene(&scene0, 7, 4, 0.05);
+        let dirty = match scene0.diff(&scene1) {
+            SceneDelta::Moved(d) => d,
+            other => panic!("expected Moved, got {other:?}"),
+        };
+        let (s1, st) = s0.refreshed(&scene1, &dirty).unwrap();
+        assert!(st.reused_nodes > 0, "{st:?}");
+        let fresh = SfStructure::build(scene1.graph.as_ref().unwrap(), params);
+        // Compare through two different kernels: both must match a fresh
+        // two-stage prepare exactly.
+        let field = rand_field(scene1.len(), 2, 3);
+        for kernel in [KernelFn::ExpNeg(2.0), KernelFn::GaussianSq(1.0)] {
+            let cfg = SfConfig { kernel, threshold: 32, seed: 9, ..Default::default() };
+            let via_refresh = SeparatorFactorization::from_structure(
+                std::sync::Arc::new(s1.clone()),
+                cfg.clone(),
+            );
+            let via_fresh = SeparatorFactorization::from_structure(
+                std::sync::Arc::new(fresh.clone()),
+                cfg,
+            );
+            assert_eq!(via_refresh.apply(&field).data, via_fresh.apply(&field).data);
+        }
     }
 
     #[test]

@@ -10,17 +10,19 @@
 //! custom kernels without a label — are rejected instead of silently
 //! sharing a cache slot.
 
+use super::artifacts::{self, StructureArtifact};
 use super::bf::{BruteForceDiffusion, BruteForceSp};
 use super::expmv::{AlMohyExpmv, BaderDense, LanczosExpmv};
-use super::rfd::{RfDiffusion, RfdConfig};
-use super::sf::{SeparatorFactorization, SfConfig};
-use super::trees::{TreeEnsembleIntegrator, TreeKind};
+use super::rfd::{RfDiffusion, RfdConfig, RfdStructuralParams, RfdStructure};
+use super::sf::{SeparatorFactorization, SfConfig, SfStructure, SfTreeParams};
+use super::trees::{TreeEnsembleIntegrator, TreeKind, TreesStructure};
 use super::{FieldIntegrator, KernelFn};
 use crate::graph::CsrGraph;
 use crate::mesh::TriMesh;
 use crate::pointcloud::{Norm, PointCloud};
 use crate::util::json::Json;
 use std::fmt;
+use std::sync::Arc;
 
 /// Typed integrator-construction / serving errors. Everything the seed
 /// handled with `panic!`/`expect` on the build path is one of these.
@@ -397,6 +399,41 @@ impl IntegratorSpec {
         })
     }
 
+    /// The kernel-independent cache identity of this spec's **structure
+    /// stage**: two specs with equal structural keys build bitwise-
+    /// identical [`StructureArtifact`]s on the same scene, so the engine
+    /// shares one structure across them (a kernel sweep pays the
+    /// Dijkstra/tree/feature work once per `(cloud, epoch)`). The key
+    /// covers *only* the structural hyper-parameters — SF's kernel,
+    /// RFD's Λ/ridge, BF-sp's kernel, BF-diffusion's λ, and the tree
+    /// ensemble's λ are deliberately absent. `None` for backends whose
+    /// preparation has no shareable structure (the matrix-free /
+    /// dense-expm baselines, which hold only the scene graph).
+    ///
+    /// Unlike [`IntegratorSpec::cache_key`] this never fails: custom
+    /// kernels don't enter the structural identity.
+    pub fn structural_key(&self) -> Option<String> {
+        Some(match self {
+            IntegratorSpec::Sf(c) => format!(
+                "sf_tree|u={}|t={}|s={}|seed={}",
+                c.unit_size, c.threshold, c.separator_size, c.seed
+            ),
+            IntegratorSpec::Rfd(c) | IntegratorSpec::RfdPjrt(c) => format!(
+                "rfd_feat|m={}|eps={}|sigma={:?}|r={}|seed={}",
+                c.num_features, c.epsilon, c.sigma, c.radius, c.seed
+            ),
+            // The full distance matrix depends on the graph alone.
+            IntegratorSpec::BfSp(_) => "sp_distances".to_string(),
+            IntegratorSpec::BfDiffusion { epsilon, .. } => format!("eps_graph|eps={epsilon}"),
+            IntegratorSpec::Trees { kind, count, seed, .. } => {
+                format!("trees|kind={kind:?}|k={count}|seed={seed}")
+            }
+            IntegratorSpec::AlMohy { .. }
+            | IntegratorSpec::Lanczos { .. }
+            | IntegratorSpec::Bader { .. } => return None,
+        })
+    }
+
     /// Serializes to the flat wire shape the coordinator protocol uses
     /// (`{"backend":"sf","lambda":…,…}`). Fails for specs the wire cannot
     /// express (custom kernel profiles).
@@ -581,38 +618,200 @@ pub(crate) fn validate_spec(scene: &Scene, spec: &IntegratorSpec) -> Result<(), 
     Ok(())
 }
 
+/// **Structure stage** of the two-stage prepare pipeline: validates
+/// `spec` against `scene` and builds the kernel-independent
+/// [`StructureArtifact`] (separator tree, distance matrix, feature
+/// factors, sampled trees, ε-graph). `Ok(None)` for backends with no
+/// shareable structure ([`IntegratorSpec::structural_key`] is `None`).
+/// The artifact can [`finish`] every spec sharing its structural key, on
+/// this scene, with bitwise-identical results to a one-shot [`prepare`].
+pub fn prepare_structure(
+    scene: &Scene,
+    spec: &IntegratorSpec,
+) -> Result<Option<StructureArtifact>, GfiError> {
+    validate_spec(scene, spec)?;
+    build_structure(scene, spec)
+}
+
+/// **Kernel stage** of the two-stage prepare pipeline: finishes a
+/// [`FieldIntegrator`] from an optional shared structure. With
+/// `structure: None` (or for structure-less backends) the structure is
+/// built inline, making `finish(scene, spec, None)` equivalent to
+/// [`prepare`]. A structure of the wrong family for the spec is a typed
+/// [`GfiError::InvalidSpec`] — the engine's structural keys make that
+/// unreachable, but the contract is enforced here, not assumed.
+pub fn finish(
+    scene: &Scene,
+    spec: &IntegratorSpec,
+    structure: Option<StructureArtifact>,
+) -> Result<Box<dyn FieldIntegrator>, GfiError> {
+    validate_spec(scene, spec)?;
+    finish_impl(scene, spec, structure)
+}
+
 /// The single integrator factory: validates `spec` against `scene`
-/// ([`validate_spec`]) and runs the backend's pre-processing. Every
-/// backend constructs through here — the seed's six incompatible
-/// `new(...)` signatures and their panics (missing mesh graph,
-/// degenerate ε, singular cores) are behind this one fallible entry
-/// point.
+/// ([`validate_spec`]) and runs the backend's pre-processing — the
+/// structure stage ([`prepare_structure`]) followed by the kernel stage
+/// ([`finish`]). Every backend constructs through here — the seed's six
+/// incompatible `new(...)` signatures and their panics (missing mesh
+/// graph, degenerate ε, singular cores) are behind this one fallible
+/// entry point.
 pub fn prepare(
     scene: &Scene,
     spec: &IntegratorSpec,
 ) -> Result<Box<dyn FieldIntegrator>, GfiError> {
     validate_spec(scene, spec)?;
-    let built: Box<dyn FieldIntegrator> = match spec {
+    let structure = build_structure(scene, spec)?;
+    finish_impl(scene, spec, structure)
+}
+
+/// Structure stage, post-validation.
+fn build_structure(
+    scene: &Scene,
+    spec: &IntegratorSpec,
+) -> Result<Option<StructureArtifact>, GfiError> {
+    Ok(Some(match spec {
         IntegratorSpec::Sf(cfg) => {
             let g = scene.require_graph("sf")?;
-            Box::new(SeparatorFactorization::new(g, cfg.clone()))
+            StructureArtifact::SfTree(Arc::new(SfStructure::build(g, SfTreeParams::of(cfg))))
         }
         IntegratorSpec::Rfd(cfg) | IntegratorSpec::RfdPjrt(cfg) => {
             let pts = scene.require_points("rfd")?;
-            Box::new(RfDiffusion::try_new(pts, cfg.clone())?)
+            StructureArtifact::RfdFeatures(Arc::new(RfdStructure::build(pts, cfg)))
+        }
+        IntegratorSpec::BfSp(_) => {
+            let g = scene.require_graph("bf_sp")?;
+            StructureArtifact::Distances(Arc::new(artifacts::graph_distance_matrix(g)))
+        }
+        IntegratorSpec::BfDiffusion { epsilon, .. } => {
+            let pts = scene.require_points("bf_diffusion")?;
+            StructureArtifact::EpsGraph {
+                epsilon: *epsilon,
+                graph: Arc::new(pts.epsilon_graph(*epsilon, Norm::LInf, true)),
+            }
+        }
+        IntegratorSpec::Trees { kind, count, seed, .. } => {
+            let g = scene.require_graph("trees")?;
+            StructureArtifact::Trees(Arc::new(TreesStructure::build(g, *kind, *count, *seed)))
+        }
+        IntegratorSpec::AlMohy { .. }
+        | IntegratorSpec::Lanczos { .. }
+        | IntegratorSpec::Bader { .. } => return Ok(None),
+    }))
+}
+
+fn structure_mismatch(spec: &IntegratorSpec, art: &StructureArtifact) -> GfiError {
+    GfiError::InvalidSpec {
+        detail: format!(
+            "structure artifact `{}` does not fit backend `{}` (structural-key hygiene \
+             violation)",
+            art.kind(),
+            spec.name()
+        ),
+    }
+}
+
+/// Kernel stage, post-validation. Takes the structure by value so a
+/// one-shot `prepare` hands over the only `Arc` and dense artifacts
+/// (the BF-sp distance matrix) are consumed without a copy.
+fn finish_impl(
+    scene: &Scene,
+    spec: &IntegratorSpec,
+    structure: Option<StructureArtifact>,
+) -> Result<Box<dyn FieldIntegrator>, GfiError> {
+    let built: Box<dyn FieldIntegrator> = match spec {
+        IntegratorSpec::Sf(cfg) => {
+            let s = match structure {
+                Some(StructureArtifact::SfTree(s)) => {
+                    if *s.params() != SfTreeParams::of(cfg) {
+                        return Err(structure_mismatch(spec, &StructureArtifact::SfTree(s)));
+                    }
+                    s
+                }
+                Some(other) => return Err(structure_mismatch(spec, &other)),
+                None => {
+                    let g = scene.require_graph("sf")?;
+                    Arc::new(SfStructure::build(g, SfTreeParams::of(cfg)))
+                }
+            };
+            Box::new(SeparatorFactorization::from_structure(s, cfg.clone()))
+        }
+        IntegratorSpec::Rfd(cfg) | IntegratorSpec::RfdPjrt(cfg) => {
+            let s = match structure {
+                Some(StructureArtifact::RfdFeatures(s)) => {
+                    if *s.params() != RfdStructuralParams::of(cfg) {
+                        return Err(structure_mismatch(
+                            spec,
+                            &StructureArtifact::RfdFeatures(s),
+                        ));
+                    }
+                    s
+                }
+                Some(other) => return Err(structure_mismatch(spec, &other)),
+                None => {
+                    let pts = scene.require_points("rfd")?;
+                    Arc::new(RfdStructure::build(pts, cfg))
+                }
+            };
+            Box::new(RfDiffusion::from_structure(s, cfg.clone())?)
         }
         IntegratorSpec::BfSp(kernel) => {
-            let g = scene.require_graph("bf_sp")?;
-            Box::new(BruteForceSp::new(g, kernel))
+            let km = match structure {
+                Some(StructureArtifact::Distances(d)) => match Arc::try_unwrap(d) {
+                    // Uniquely held (one-shot prepare): evaluate in place.
+                    Ok(owned) => artifacts::sp_kernel_from_distances(owned, kernel),
+                    // Store-shared: one out-of-place write pass — no
+                    // intermediate full-matrix copy.
+                    Err(shared) => artifacts::sp_kernel_map(&shared, kernel),
+                },
+                Some(other) => return Err(structure_mismatch(spec, &other)),
+                None => {
+                    let g = scene.require_graph("bf_sp")?;
+                    artifacts::sp_kernel_from_distances(
+                        artifacts::graph_distance_matrix(g),
+                        kernel,
+                    )
+                }
+            };
+            Box::new(BruteForceSp::from_kernel_matrix(km))
         }
         IntegratorSpec::BfDiffusion { epsilon, lambda } => {
-            let pts = scene.require_points("bf_diffusion")?;
-            let g = pts.epsilon_graph(*epsilon, Norm::LInf, true);
+            let g = match structure {
+                Some(StructureArtifact::EpsGraph { epsilon: built_eps, graph }) => {
+                    // Exact equality is the right notion: structural keys
+                    // encode the literal ε value.
+                    if built_eps != *epsilon {
+                        return Err(structure_mismatch(
+                            spec,
+                            &StructureArtifact::EpsGraph { epsilon: built_eps, graph },
+                        ));
+                    }
+                    graph
+                }
+                Some(other) => return Err(structure_mismatch(spec, &other)),
+                None => {
+                    let pts = scene.require_points("bf_diffusion")?;
+                    Arc::new(pts.epsilon_graph(*epsilon, Norm::LInf, true))
+                }
+            };
             Box::new(BruteForceDiffusion::new(&g, *lambda))
         }
         IntegratorSpec::Trees { kind, count, lambda, seed } => {
-            let g = scene.require_graph("trees")?;
-            Box::new(TreeEnsembleIntegrator::new(g, *kind, *count, *lambda, *seed))
+            let s = match structure {
+                Some(StructureArtifact::Trees(s)) => {
+                    if s.kind() != *kind || s.count() != (*count).max(1) || s.seed() != *seed
+                    {
+                        return Err(structure_mismatch(spec, &StructureArtifact::Trees(s)));
+                    }
+                    s
+                }
+                Some(other) => return Err(structure_mismatch(spec, &other)),
+                None => {
+                    let g = scene.require_graph("trees")?;
+                    Arc::new(TreesStructure::build(g, *kind, *count, *seed))
+                }
+            };
+            Box::new(TreeEnsembleIntegrator::from_structure(s, *lambda))
         }
         IntegratorSpec::AlMohy { lambda } => {
             let g = scene.require_graph("almohy")?;
@@ -791,6 +990,201 @@ mod tests {
             Err(GfiError::Unkeyable { .. }) => {}
             other => panic!("expected Unkeyable, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn structural_keys_split_structure_from_kernel() {
+        // Kernel-only differences share a structural key…
+        let sf_a = IntegratorSpec::Sf(SfConfig { kernel: KernelFn::ExpNeg(1.0), ..Default::default() });
+        let sf_b = IntegratorSpec::Sf(SfConfig { kernel: KernelFn::GaussianSq(2.0), ..Default::default() });
+        assert_eq!(sf_a.structural_key(), sf_b.structural_key());
+        assert_ne!(sf_a.cache_key().unwrap(), sf_b.cache_key().unwrap());
+        // …while any structural hyper-parameter splits it.
+        for structural in [
+            IntegratorSpec::Sf(SfConfig { unit_size: 0.02, ..Default::default() }),
+            IntegratorSpec::Sf(SfConfig { threshold: 64, ..Default::default() }),
+            IntegratorSpec::Sf(SfConfig { separator_size: 8, ..Default::default() }),
+            IntegratorSpec::Sf(SfConfig { seed: 7, ..Default::default() }),
+        ] {
+            assert_ne!(sf_a.structural_key(), structural.structural_key(), "{structural:?}");
+        }
+        // RFD: Λ and ridge are kernel-stage, everything else structural.
+        let base = RfdConfig::default();
+        let rfd = |c: RfdConfig| IntegratorSpec::Rfd(c);
+        assert_eq!(
+            rfd(base.clone()).structural_key(),
+            rfd(RfdConfig { lambda: -0.5, ridge: 1e-4, ..base.clone() }).structural_key()
+        );
+        for structural in [
+            RfdConfig { num_features: 24, ..base.clone() },
+            RfdConfig { epsilon: 0.2, ..base.clone() },
+            RfdConfig { sigma: Some(3.0), ..base.clone() },
+            RfdConfig { radius: 2.0, ..base.clone() },
+            RfdConfig { seed: 5, ..base.clone() },
+        ] {
+            assert_ne!(
+                rfd(base.clone()).structural_key(),
+                rfd(structural.clone()).structural_key(),
+                "{structural:?}"
+            );
+        }
+        // Rfd and RfdPjrt share structure like they share the cache key.
+        assert_eq!(
+            rfd(base.clone()).structural_key(),
+            IntegratorSpec::RfdPjrt(base).structural_key()
+        );
+        // BF-sp shares one distance matrix across every kernel — even
+        // unkeyable ones (structural identity ignores the kernel).
+        assert_eq!(
+            IntegratorSpec::BfSp(KernelFn::ExpNeg(1.0)).structural_key(),
+            IntegratorSpec::BfSp(KernelFn::custom_opaque(|x| x)).structural_key()
+        );
+        // Trees: λ is kernel-stage; kind/count/seed are structural.
+        let t = |kind: TreeKind, count: usize, lambda: f64, seed: u64| {
+            IntegratorSpec::Trees { kind, count, lambda, seed }
+        };
+        assert_eq!(
+            t(TreeKind::Mst, 3, 1.0, 0).structural_key(),
+            t(TreeKind::Mst, 3, 2.0, 0).structural_key()
+        );
+        assert_ne!(
+            t(TreeKind::Mst, 3, 1.0, 0).structural_key(),
+            t(TreeKind::Frt, 3, 1.0, 0).structural_key()
+        );
+        assert_ne!(
+            t(TreeKind::Mst, 3, 1.0, 0).structural_key(),
+            t(TreeKind::Mst, 4, 1.0, 0).structural_key()
+        );
+        // Matrix-free baselines have no shareable structure.
+        assert_eq!(IntegratorSpec::AlMohy { lambda: -0.1 }.structural_key(), None);
+        assert_eq!(
+            IntegratorSpec::Lanczos { lambda: -0.1, krylov_dim: 8 }.structural_key(),
+            None
+        );
+        assert_eq!(IntegratorSpec::Bader { lambda: -0.1 }.structural_key(), None);
+    }
+
+    #[test]
+    fn two_stage_prepare_is_bitwise_identical_to_one_shot() {
+        let scene = mesh_scene();
+        let n = scene.len();
+        let mut rng = Rng::new(12);
+        let field = crate::linalg::Mat::from_vec(
+            n,
+            3,
+            (0..n * 3).map(|_| rng.gaussian()).collect(),
+        );
+        let specs = [
+            IntegratorSpec::Sf(SfConfig { threshold: 16, ..Default::default() }),
+            IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() }),
+            IntegratorSpec::BfSp(KernelFn::ExpNeg(2.0)),
+            IntegratorSpec::BfDiffusion { epsilon: 0.2, lambda: -0.2 },
+            IntegratorSpec::Trees { kind: TreeKind::Bartal, count: 2, lambda: 1.0, seed: 3 },
+            IntegratorSpec::AlMohy { lambda: -0.2 },
+        ];
+        for spec in &specs {
+            let structure = prepare_structure(&scene, spec).unwrap();
+            assert_eq!(
+                structure.is_some(),
+                spec.structural_key().is_some(),
+                "{spec:?}: structure presence must track the structural key"
+            );
+            let staged = finish(&scene, spec, structure).unwrap();
+            let oneshot = prepare(&scene, spec).unwrap();
+            assert_eq!(
+                staged.apply(&field).data,
+                oneshot.apply(&field).data,
+                "{spec:?}: two-stage prepare diverged from one-shot"
+            );
+        }
+    }
+
+    #[test]
+    fn shared_structure_finishes_kernel_sweep_bitwise() {
+        // One structure, many kernels: each finish must equal its own
+        // from-scratch prepare bit for bit.
+        let scene = mesh_scene();
+        let n = scene.len();
+        let mut rng = Rng::new(13);
+        let field = crate::linalg::Mat::from_vec(
+            n,
+            2,
+            (0..n * 2).map(|_| rng.gaussian()).collect(),
+        );
+        let sweep = [
+            KernelFn::ExpNeg(1.0),
+            KernelFn::ExpNeg(4.0),
+            KernelFn::GaussianSq(2.0),
+            KernelFn::Rational(0.5),
+        ];
+        let base = IntegratorSpec::Sf(SfConfig { threshold: 16, ..Default::default() });
+        let structure = prepare_structure(&scene, &base).unwrap().unwrap();
+        for kernel in &sweep {
+            let spec = IntegratorSpec::Sf(SfConfig {
+                kernel: kernel.clone(),
+                threshold: 16,
+                ..Default::default()
+            });
+            assert_eq!(base.structural_key(), spec.structural_key());
+            let shared = finish(&scene, &spec, Some(structure.clone())).unwrap();
+            let fresh = prepare(&scene, &spec).unwrap();
+            assert_eq!(shared.apply(&field).data, fresh.apply(&field).data, "{kernel:?}");
+        }
+        // Same story for BF-sp over the shared distance matrix.
+        let bf_structure = prepare_structure(&scene, &IntegratorSpec::BfSp(KernelFn::ExpNeg(1.0)))
+            .unwrap()
+            .unwrap();
+        for kernel in &sweep {
+            let spec = IntegratorSpec::BfSp(kernel.clone());
+            let shared = finish(&scene, &spec, Some(bf_structure.clone())).unwrap();
+            let fresh = prepare(&scene, &spec).unwrap();
+            assert_eq!(shared.apply(&field).data, fresh.apply(&field).data, "{kernel:?}");
+        }
+    }
+
+    #[test]
+    fn mismatched_structure_artifact_is_rejected() {
+        let scene = mesh_scene();
+        let sf = IntegratorSpec::Sf(SfConfig { threshold: 16, ..Default::default() });
+        let bf = IntegratorSpec::BfSp(KernelFn::ExpNeg(1.0));
+        let sf_structure = prepare_structure(&scene, &sf).unwrap();
+        // Wrong family.
+        match finish(&scene, &bf, sf_structure.clone()).err() {
+            Some(GfiError::InvalidSpec { .. }) => {}
+            other => panic!("expected InvalidSpec, got {other:?}"),
+        }
+        // Right family, structurally different parameters.
+        let other_sf = IntegratorSpec::Sf(SfConfig { threshold: 64, ..Default::default() });
+        match finish(&scene, &other_sf, sf_structure).err() {
+            Some(GfiError::InvalidSpec { .. }) => {}
+            other => panic!("expected InvalidSpec, got {other:?}"),
+        }
+        // RFD: a seed (or any structural) mismatch is rejected even when
+        // the factor shapes agree; a Λ/ridge difference is accepted.
+        let rfd = IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() });
+        let rfd_structure = prepare_structure(&scene, &rfd).unwrap();
+        let other_seed =
+            IntegratorSpec::Rfd(RfdConfig { num_features: 8, seed: 9, ..Default::default() });
+        match finish(&scene, &other_seed, rfd_structure.clone()).err() {
+            Some(GfiError::InvalidSpec { .. }) => {}
+            other => panic!("expected InvalidSpec, got {other:?}"),
+        }
+        let other_lambda = IntegratorSpec::Rfd(RfdConfig {
+            num_features: 8,
+            lambda: -0.7,
+            ..Default::default()
+        });
+        assert!(finish(&scene, &other_lambda, rfd_structure).is_ok());
+        // BF-diffusion: an ε mismatch is rejected; a λ difference shares.
+        let bfd = IntegratorSpec::BfDiffusion { epsilon: 0.2, lambda: -0.2 };
+        let eps_structure = prepare_structure(&scene, &bfd).unwrap();
+        let other_eps = IntegratorSpec::BfDiffusion { epsilon: 0.3, lambda: -0.2 };
+        match finish(&scene, &other_eps, eps_structure.clone()).err() {
+            Some(GfiError::InvalidSpec { .. }) => {}
+            other => panic!("expected InvalidSpec, got {other:?}"),
+        }
+        let other_bfd_lambda = IntegratorSpec::BfDiffusion { epsilon: 0.2, lambda: -0.5 };
+        assert!(finish(&scene, &other_bfd_lambda, eps_structure).is_ok());
     }
 
     #[test]

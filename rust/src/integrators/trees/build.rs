@@ -1,6 +1,7 @@
 //! Tree constructions: MST, Bartal, and FRT.
 
-use crate::graph::{dijkstra, dijkstra_bounded, CsrGraph};
+use crate::graph::distances::SsspScratch;
+use crate::graph::CsrGraph;
 use crate::util::rng::Rng;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -155,21 +156,30 @@ impl Ord for HeapEdge {
 /// first cluster's center with edges of weight Δ.
 pub fn bartal_tree(g: &CsrGraph, rng: &mut Rng) -> WeightedTree {
     let n = g.n;
+    // One shared SSSP scratch serves every ball-growing call of this
+    // build (lazy reset instead of per-call heap/map allocation).
+    let mut sssp = SsspScratch::new(n);
     // Upper bound on the diameter: sum of max edge per BFS tree is loose;
     // use Dijkstra eccentricity of vertex 0 × 2 (per component, take max).
-    let d0 = dijkstra(g, 0);
-    let mut diam = d0.iter().copied().filter(|d| d.is_finite()).fold(0.0, f64::max) * 2.0;
+    let mut diam = sssp
+        .run(g, &[0])
+        .iter()
+        .copied()
+        .filter(|d| d.is_finite())
+        .fold(0.0, f64::max)
+        * 2.0;
     if diam <= 0.0 {
         diam = 1.0;
     }
     let mut parent: Vec<usize> = (0..n).collect();
     let mut weight = vec![0.0; n];
     let all: Vec<usize> = (0..n).collect();
-    let root = carve(g, &all, diam, rng, &mut parent, &mut weight);
+    let root = carve(g, &all, diam, rng, &mut parent, &mut weight, &mut sssp);
     WeightedTree { parent, weight, root, n_original: n }
 }
 
 /// Recursive ball carving; returns the representative (center) of `nodes`.
+#[allow(clippy::too_many_arguments)]
 fn carve(
     g: &CsrGraph,
     nodes: &[usize],
@@ -177,6 +187,7 @@ fn carve(
     rng: &mut Rng,
     parent: &mut [usize],
     weight: &mut [f64],
+    sssp: &mut SsspScratch,
 ) -> usize {
     if nodes.len() == 1 {
         return nodes[0];
@@ -194,7 +205,7 @@ fn carve(
         // Random radius in [Δ/8, Δ/4): truncated exponential (Bartal's
         // distribution family).
         let r = (delta / 8.0) * (1.0 + rng.exponential() / logn).min(2.0);
-        let ball = dijkstra_bounded(g, c, r);
+        let ball = sssp.run_bounded(g, c, r);
         let mut members = Vec::new();
         for (v, _) in ball {
             if in_set.contains(&v) && !assigned.contains_key(&v) {
@@ -217,12 +228,12 @@ fn carve(
     if clusters.len() == 1 {
         // Could not split (dense ball): halve Δ and retry.
         let (_, members) = clusters.pop().unwrap();
-        return carve(g, &members, delta / 2.0, rng, parent, weight);
+        return carve(g, &members, delta / 2.0, rng, parent, weight, sssp);
     }
-    let reps: Vec<usize> = clusters
-        .iter()
-        .map(|(_, members)| carve(g, members, delta / 2.0, rng, parent, weight))
-        .collect();
+    let mut reps: Vec<usize> = Vec::with_capacity(clusters.len());
+    for (_, members) in &clusters {
+        reps.push(carve(g, members, delta / 2.0, rng, parent, weight, sssp));
+    }
     let head = reps[0];
     for &r in &reps[1..] {
         parent[r] = head;
@@ -237,8 +248,9 @@ fn carve(
 /// level-i edges of weight 2^i (scaled by the metric's base scale).
 pub fn frt_tree(g: &CsrGraph, rng: &mut Rng) -> WeightedTree {
     let n = g.n;
-    let d0 = dijkstra(g, 0);
-    let diam = d0
+    let mut sssp = SsspScratch::new(n);
+    let diam = sssp
+        .run(g, &[0])
         .iter()
         .copied()
         .filter(|d| d.is_finite())
@@ -291,7 +303,7 @@ pub fn frt_tree(g: &CsrGraph, rng: &mut Rng) -> WeightedTree {
                 }
                 // Center c carves within distance `radius` (centers may be
                 // outside the cluster — that's essential to FRT).
-                let ball = dijkstra_bounded(g, c, radius);
+                let ball = sssp.run_bounded(g, c, radius);
                 let mut sub = Vec::new();
                 for (v, _) in ball {
                     if in_set.contains(&v) && !taken.contains(&v) {
@@ -336,6 +348,7 @@ pub fn frt_tree(g: &CsrGraph, rng: &mut Rng) -> WeightedTree {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::dijkstra;
     use crate::mesh::grid_mesh;
 
     #[test]

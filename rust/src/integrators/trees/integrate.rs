@@ -382,23 +382,87 @@ fn first_hop(
     }
 }
 
-/// One sampled tree with its traversal order and decay table precomputed
-/// at construction, so the apply path touches no allocator.
-struct PreparedTree {
-    tree: WeightedTree,
-    order: Vec<usize>,
-    decay: Vec<f64>,
+/// One sampled tree with its traversal order precomputed — the
+/// kernel-independent part of an ensemble member (the per-edge decay
+/// table depends on λ and lives on the integrator).
+pub struct TreeTopology {
+    pub(crate) tree: WeightedTree,
+    pub(crate) order: Vec<usize>,
+}
+
+/// The kernel-independent **structure stage** of a tree ensemble: the `k`
+/// sampled spanning/embedding trees with their traversal orders. Sampling
+/// is a pure function of `(graph, kind, count, seed)` — λ only enters the
+/// kernel stage (per-edge decay tables), so one structure serves a whole
+/// λ sweep (see [`crate::integrators::IntegratorSpec::structural_key`]).
+pub struct TreesStructure {
+    kind: TreeKind,
+    seed: u64,
+    trees: Vec<TreeTopology>,
+}
+
+impl TreesStructure {
+    /// Samples `k` trees of the given kind (Prim is deterministic; Bartal
+    /// and FRT draw from one `Rng::new(seed)` chain, so the ensemble is a
+    /// pure function of the inputs).
+    pub fn build(g: &CsrGraph, kind: TreeKind, k: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let trees: Vec<TreeTopology> = (0..k.max(1))
+            .map(|_| {
+                let tree = match kind {
+                    TreeKind::Mst => mst(g),
+                    TreeKind::Bartal => bartal_tree(g, &mut rng),
+                    TreeKind::Frt => frt_tree(g, &mut rng),
+                };
+                let order = tree.topo_order();
+                TreeTopology { tree, order }
+            })
+            .collect();
+        TreesStructure { kind, seed, trees }
+    }
+
+    /// The PRNG seed the ensemble was sampled from.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The sampled tree distribution kind.
+    pub fn kind(&self) -> TreeKind {
+        self.kind
+    }
+
+    /// Ensemble size.
+    pub fn count(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// Estimated resident heap bytes: per tree, parent/weight/order over
+    /// all (incl. virtual) nodes — the weight the engine's structure
+    /// store charges.
+    pub fn resident_bytes(&self) -> usize {
+        let per_node = 2 * std::mem::size_of::<usize>() + std::mem::size_of::<f64>();
+        std::mem::size_of::<Self>()
+            + self
+                .trees
+                .iter()
+                .map(|t| std::mem::size_of::<TreeTopology>() + t.tree.len() * per_node)
+                .sum::<usize>()
+    }
 }
 
 /// Ensemble-of-trees integrator (Appendix B): averages exact tree GFIs
-/// over `k` sampled trees.
+/// over `k` sampled trees. Holds a (possibly shared) tree structure plus
+/// the λ-dependent decay tables.
 pub struct TreeEnsembleIntegrator {
-    trees: Vec<PreparedTree>,
+    structure: std::sync::Arc<TreesStructure>,
+    /// Per-tree per-edge decay tables `exp(-λ·w)`, aligned with
+    /// `structure.trees`.
+    decays: Vec<Vec<f64>>,
     name: String,
 }
 
 /// Which tree distribution to sample.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TreeKind {
     /// Minimum spanning tree (Prim) — the naive embedding.
     Mst,
@@ -411,25 +475,35 @@ pub enum TreeKind {
 impl TreeEnsembleIntegrator {
     /// Construct via [`crate::integrators::prepare`].
     pub(crate) fn new(g: &CsrGraph, kind: TreeKind, k: usize, lambda: f64, seed: u64) -> Self {
-        let mut rng = Rng::new(seed);
-        let trees: Vec<PreparedTree> = (0..k.max(1))
-            .map(|_| {
-                let tree = match kind {
-                    TreeKind::Mst => mst(g),
-                    TreeKind::Bartal => bartal_tree(g, &mut rng),
-                    TreeKind::Frt => frt_tree(g, &mut rng),
-                };
-                let order = tree.topo_order();
-                let decay = decays(&tree, lambda);
-                PreparedTree { tree, order, decay }
-            })
+        let structure = std::sync::Arc::new(TreesStructure::build(g, kind, k, seed));
+        TreeEnsembleIntegrator::from_structure(structure, lambda)
+    }
+
+    /// Kernel stage: finishes an integrator from a (shared) ensemble
+    /// structure by tabulating the per-edge decays `exp(-λ·w)` — no tree
+    /// sampling. Bitwise-identical to a from-scratch
+    /// [`TreeEnsembleIntegrator::new`] with the same inputs.
+    pub(crate) fn from_structure(
+        structure: std::sync::Arc<TreesStructure>,
+        lambda: f64,
+    ) -> Self {
+        let decay_tables: Vec<Vec<f64>> = structure
+            .trees
+            .iter()
+            .map(|t| decays(&t.tree, lambda))
             .collect();
-        let name = match kind {
+        let k = structure.trees.len();
+        let name = match structure.kind {
             TreeKind::Mst => format!("T-MST-{k}"),
             TreeKind::Bartal => format!("T-Bart-{k}"),
             TreeKind::Frt => format!("T-FRT-{k}"),
         };
-        TreeEnsembleIntegrator { trees, name }
+        TreeEnsembleIntegrator { structure, decays: decay_tables, name }
+    }
+
+    /// The (possibly shared) kernel-independent ensemble structure.
+    pub fn structure(&self) -> &std::sync::Arc<TreesStructure> {
+        &self.structure
     }
 }
 
@@ -438,18 +512,15 @@ impl FieldIntegrator for TreeEnsembleIntegrator {
         self.name.clone()
     }
     fn len(&self) -> usize {
-        self.trees[0].tree.n_original
+        self.structure.trees[0].tree.n_original
     }
-    /// Per tree: parent/weight/order/decay arrays over all (incl.
-    /// virtual) nodes — `O(k·N)` total.
+    /// Per tree: parent/weight/order arrays (structure, counted even when
+    /// the `Arc` is shared — the integrator keeps it alive) plus the
+    /// λ-dependent decay tables — `O(k·N)` total.
     fn resident_bytes(&self) -> usize {
-        let per_node = 2 * std::mem::size_of::<usize>() + 2 * std::mem::size_of::<f64>();
         std::mem::size_of::<Self>()
-            + self
-                .trees
-                .iter()
-                .map(|pt| std::mem::size_of::<PreparedTree>() + pt.tree.len() * per_node)
-                .sum::<usize>()
+            + self.structure.resident_bytes()
+            + self.decays.iter().map(|d| d.len() * std::mem::size_of::<f64>()).sum::<usize>()
     }
     /// Sequential accumulation over the (small, k ≈ 3–20) ensemble with
     /// workspace-pooled DP scratch. This trades the old per-tree
@@ -461,15 +532,15 @@ impl FieldIntegrator for TreeEnsembleIntegrator {
         check_apply_shapes(self.len(), field, out);
         out.data.fill(0.0);
         let d = field.cols;
-        for pt in &self.trees {
+        for (pt, decay) in self.structure.trees.iter().zip(&self.decays) {
             let nt = pt.tree.len();
             let mut up = ws.take(nt * d);
             let mut down = ws.take(nt * d);
-            tree_gfi_exp_core(&pt.tree, &pt.order, &pt.decay, field, out, &mut up, &mut down);
+            tree_gfi_exp_core(&pt.tree, &pt.order, decay, field, out, &mut up, &mut down);
             ws.put(down);
             ws.put(up);
         }
-        let s = 1.0 / self.trees.len() as f64;
+        let s = 1.0 / self.structure.trees.len() as f64;
         for x in out.data.iter_mut() {
             *x *= s;
         }

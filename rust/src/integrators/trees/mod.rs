@@ -17,4 +17,6 @@ mod build;
 mod integrate;
 
 pub use build::{bartal_tree, frt_tree, mst, WeightedTree};
-pub use integrate::{tree_gfi_exp, tree_gfi_general, TreeEnsembleIntegrator, TreeKind};
+pub use integrate::{
+    tree_gfi_exp, tree_gfi_general, TreeEnsembleIntegrator, TreeKind, TreesStructure,
+};

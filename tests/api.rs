@@ -2,9 +2,12 @@
 //! typed `prepare` error paths, `apply_into` vs `apply` bitwise parity
 //! per backend, batched apply, workspace reuse, the engine-level
 //! cache-key guarantees (distinct custom kernels never collide), the
-//! bounded-cache lifecycle (budget holds under churn; evicted entries
-//! re-prepare bitwise-identically), and concurrent serving through the
-//! TCP front-end.
+//! two-stage prepare pipeline (kernel sweeps share one structure —
+//! share counter = 1 — bitwise-identically to from-scratch prepares;
+//! structural hyper-parameter changes never share), the bounded-cache
+//! lifecycle (budget holds under churn; evicted entries re-prepare
+//! bitwise-identically), and concurrent serving through the TCP
+//! front-end.
 
 use gfi::coordinator::{server, Engine, EngineConfig, UpdateOpts};
 use gfi::integrators::rfd::RfdConfig;
@@ -402,6 +405,240 @@ fn concurrent_server_clients_mixed_backends() {
 
     send(&mut ctl, &mut ctl_reader, r#"{"op":"shutdown"}"#);
     server_thread.join().unwrap();
+}
+
+/// ISSUE 5 acceptance: preparing two specs that differ only in kernel on
+/// the same `(cloud, epoch)` performs the structure stage once — the
+/// structure cache's share counter (`hits`) is exactly 1 — and every
+/// shared-structure prepare is bitwise-identical to a from-scratch
+/// `prepare` on the same scene.
+#[test]
+fn kernel_sweep_shares_structure_once_and_is_bitwise_identical() {
+    let engine = Engine::new(None);
+    let id = engine.register_mesh(gfi::mesh::icosphere(2), "s");
+    let scene = engine.cloud(id).unwrap().scene.clone();
+    let n = scene.len();
+    let field = rand_field(n, 3, 77);
+
+    // SF: same tree parameters, different kernels.
+    let sf_of = |kernel: KernelFn| {
+        IntegratorSpec::Sf(SfConfig { kernel, threshold: 64, ..Default::default() })
+    };
+    let (out_a, info_a) = engine.integrate(id, &sf_of(KernelFn::ExpNeg(1.0)), &field).unwrap();
+    assert!(!info_a.cache_hit && !info_a.structure_shared);
+    let (out_b, info_b) = engine.integrate(id, &sf_of(KernelFn::ExpNeg(4.0)), &field).unwrap();
+    assert!(!info_b.cache_hit, "distinct kernels must not share an integrator entry");
+    assert!(info_b.structure_shared, "second kernel must reuse the separator tree");
+    let stats = engine.cache_stats();
+    assert_eq!(stats.structures.hits, 1, "share counter must be exactly 1: {stats:?}");
+    assert_eq!(stats.structures.entries, 1, "one tree serves both kernels: {stats:?}");
+    assert_eq!(stats.integrators.entries, 2);
+    for (kernel, out) in [(KernelFn::ExpNeg(1.0), &out_a), (KernelFn::ExpNeg(4.0), &out_b)] {
+        let fresh = prepare(&scene, &sf_of(kernel)).unwrap();
+        assert_eq!(
+            out.data,
+            fresh.apply(&field).data,
+            "shared-structure prepare diverged from from-scratch"
+        );
+    }
+
+    // BF-sp: one distance matrix serves every kernel, and GW's
+    // shortest-path structure is built from the same artifact family.
+    let (bf_a, i_a) = engine.integrate(id, &IntegratorSpec::BfSp(KernelFn::ExpNeg(2.0)), &field).unwrap();
+    assert!(!i_a.structure_shared);
+    let (bf_b, i_b) = engine
+        .integrate(id, &IntegratorSpec::BfSp(KernelFn::GaussianSq(1.5)), &field)
+        .unwrap();
+    assert!(i_b.structure_shared, "BF-sp kernels must share the distance matrix");
+    for (kernel, out) in
+        [(KernelFn::ExpNeg(2.0), &bf_a), (KernelFn::GaussianSq(1.5), &bf_b)]
+    {
+        let fresh = prepare(&scene, &IntegratorSpec::BfSp(kernel)).unwrap();
+        assert_eq!(out.data, fresh.apply(&field).data);
+    }
+
+    // RFD: a Λ/ridge sweep shares the feature structure.
+    let rfd_of = |lambda: f64, ridge: f64| {
+        IntegratorSpec::Rfd(RfdConfig { num_features: 8, lambda, ridge, ..Default::default() })
+    };
+    let (rf_a, ri_a) = engine.integrate(id, &rfd_of(-0.1, 1e-8), &field).unwrap();
+    assert!(!ri_a.structure_shared);
+    let (rf_b, ri_b) = engine.integrate(id, &rfd_of(-0.4, 1e-6), &field).unwrap();
+    assert!(ri_b.structure_shared, "Λ/ridge sweep must reuse the RFD features");
+    for (spec, out) in [(rfd_of(-0.1, 1e-8), &rf_a), (rfd_of(-0.4, 1e-6), &rf_b)] {
+        let fresh = prepare(&scene, &spec).unwrap();
+        assert_eq!(out.data, fresh.apply(&field).data);
+    }
+
+    // Trees: a λ sweep shares the sampled ensemble.
+    let trees_of = |lambda: f64| IntegratorSpec::Trees {
+        kind: TreeKind::Bartal,
+        count: 3,
+        lambda,
+        seed: 5,
+    };
+    let (t_a, ti_a) = engine.integrate(id, &trees_of(1.0), &field).unwrap();
+    assert!(!ti_a.structure_shared);
+    let (t_b, ti_b) = engine.integrate(id, &trees_of(2.5), &field).unwrap();
+    assert!(ti_b.structure_shared, "λ sweep must reuse the sampled trees");
+    for (spec, out) in [(trees_of(1.0), &t_a), (trees_of(2.5), &t_b)] {
+        let fresh = prepare(&scene, &spec).unwrap();
+        assert_eq!(out.data, fresh.apply(&field).data);
+    }
+}
+
+/// Refreshable backends expose the shared structure they hold — the
+/// hook `update_cloud` uses to refresh a tree exactly once even when the
+/// structure-store entry was evicted under byte pressure.
+#[test]
+fn integrators_expose_their_shared_structure() {
+    let scene = mesh_scene();
+    let sf = prepare(
+        &scene,
+        &IntegratorSpec::Sf(SfConfig { threshold: 16, ..Default::default() }),
+    )
+    .unwrap();
+    assert_eq!(
+        sf.structure_artifact().map(|a| a.kind()),
+        Some("sf_tree"),
+        "SF must expose its separator tree"
+    );
+    let rfd = prepare(
+        &scene,
+        &IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() }),
+    )
+    .unwrap();
+    assert_eq!(rfd.structure_artifact().map(|a| a.kind()), Some("rfd_features"));
+    // Backends without an incremental structure path expose nothing.
+    let bf = prepare(&scene, &IntegratorSpec::BfSp(KernelFn::ExpNeg(1.0))).unwrap();
+    assert!(bf.structure_artifact().is_none());
+}
+
+/// Structural-key hygiene (the collision-test mirror of PR 2's
+/// `cache_key` fixes): specs differing in *any* structural
+/// hyper-parameter must not share a structure — only kernel-stage
+/// parameters may collapse onto one artifact.
+#[test]
+fn structural_hyperparameter_changes_never_share_a_structure() {
+    let engine = Engine::new(None);
+    let id = engine.register_mesh(gfi::mesh::icosphere(1), "s");
+    let n = engine.cloud(id).unwrap().scene.len();
+    let field = rand_field(n, 2, 78);
+
+    // SF: each structural variant must build its own tree.
+    let variants = [
+        SfConfig { threshold: 16, ..Default::default() },
+        SfConfig { threshold: 32, ..Default::default() },
+        SfConfig { threshold: 16, seed: 9, ..Default::default() },
+        SfConfig { threshold: 16, separator_size: 8, ..Default::default() },
+        SfConfig { threshold: 16, unit_size: 0.02, ..Default::default() },
+    ];
+    for cfg in &variants {
+        let info = engine
+            .integrate(id, &IntegratorSpec::Sf(cfg.clone()), &field)
+            .unwrap()
+            .1;
+        assert!(
+            !info.structure_shared,
+            "structurally distinct SF spec shared a tree: {cfg:?}"
+        );
+    }
+    let stats = engine.cache_stats();
+    assert_eq!(stats.structures.hits, 0, "no structural variant may share: {stats:?}");
+    assert_eq!(stats.structures.entries, variants.len());
+
+    // RFD: sigma/epsilon/m/seed are structural — no sharing across them.
+    let base = RfdConfig { num_features: 8, ..Default::default() };
+    let rfd_variants = [
+        base.clone(),
+        RfdConfig { sigma: Some(2.0), ..base.clone() },
+        RfdConfig { epsilon: 0.2, ..base.clone() },
+        RfdConfig { seed: 3, ..base.clone() },
+        RfdConfig { num_features: 12, ..base.clone() },
+    ];
+    for cfg in &rfd_variants {
+        let info = engine
+            .integrate(id, &IntegratorSpec::Rfd(cfg.clone()), &field)
+            .unwrap()
+            .1;
+        assert!(
+            !info.structure_shared,
+            "structurally distinct RFD spec shared features: {cfg:?}"
+        );
+    }
+    assert_eq!(engine.cache_stats().structures.hits, 0);
+}
+
+/// A frame update followed by a kernel sweep shares one *refreshed*
+/// tree: `update_cloud` migrates the structure once, re-derives the
+/// cached integrators' kernel stages from it, and post-update prepares
+/// of new kernels share the refreshed structure — all bitwise-identical
+/// to from-scratch prepares on the updated scene.
+#[test]
+fn update_cloud_migrates_structure_once_for_kernel_sweeps() {
+    let mut mesh = gfi::mesh::icosphere(3); // 642 vertices
+    mesh.normalize_unit_box();
+    let n = mesh.num_verts();
+    let eng = Engine::new(None);
+    let id = eng.register_scene(Scene::from_mesh(&mesh), "dyn");
+    let sf_of = |lam: f64| {
+        IntegratorSpec::Sf(SfConfig {
+            kernel: KernelFn::ExpNeg(lam),
+            threshold: 64,
+            ..Default::default()
+        })
+    };
+    let field = rand_field(n, 3, 79);
+    // Warm two kernel-stage variants over one shared tree.
+    eng.integrate(id, &sf_of(1.0), &field).unwrap();
+    eng.integrate(id, &sf_of(3.0), &field).unwrap();
+    assert_eq!(eng.cache_stats().structures.entries, 1);
+
+    let verts = gfi::mesh::radial_bump(&mesh.verts, 31, n / 100, 0.04);
+    let info = eng
+        .update_cloud(id, gfi::pointcloud::PointCloud::new(verts), &UpdateOpts::default())
+        .unwrap();
+    assert_eq!(info.epoch, 1);
+    assert_eq!(info.refreshed, 2, "both kernel variants must migrate: {info:?}");
+    assert_eq!(info.dropped, 0, "{info:?}");
+    // The tree was refreshed *once*: the node counters account for
+    // exactly one tree (reused + rebuilt == total), not one per variant.
+    let updated = eng.cloud(id).unwrap().scene.clone();
+    let total_nodes = {
+        // Downcast-free: a fresh build reports every node as rebuilt.
+        let st = gfi::integrators::sf::SfStructure::build(
+            updated.graph.as_ref().unwrap(),
+            gfi::integrators::sf::SfTreeParams::of(&SfConfig {
+                threshold: 64,
+                ..Default::default()
+            }),
+        );
+        st.stats().leaves + st.stats().internals
+    };
+    assert_eq!(
+        info.reused_nodes + info.rebuilt_nodes,
+        total_nodes,
+        "structure must be refreshed exactly once, not per kernel variant: {info:?}"
+    );
+    assert!(info.reused_nodes * 2 > total_nodes, "{info:?}");
+    assert_eq!(eng.cache_stats().structures.entries, 1, "one refreshed tree survives");
+
+    // Migrated integrators serve bitwise-identical to fresh prepares…
+    for lam in [1.0, 3.0] {
+        let (out, served) = eng.integrate(id, &sf_of(lam), &field).unwrap();
+        assert!(served.cache_hit, "migrated kernel variant must be pre-warmed");
+        let fresh = prepare(&updated, &sf_of(lam)).unwrap();
+        assert_eq!(out.data, fresh.apply(&field).data, "lam={lam}");
+    }
+    // …and a *new* kernel after the update shares the refreshed tree.
+    let (out_new, info_new) = eng.integrate(id, &sf_of(8.0), &field).unwrap();
+    assert!(!info_new.cache_hit);
+    assert!(
+        info_new.structure_shared,
+        "post-update kernel sweep must share the refreshed structure"
+    );
+    let fresh_new = prepare(&updated, &sf_of(8.0)).unwrap();
+    assert_eq!(out_new.data, fresh_new.apply(&field).data);
 }
 
 /// ISSUE 4 acceptance, scaled to the test budget (the ≥10k-node version
