@@ -14,11 +14,19 @@
 //! stay ≤ budget while every request still succeeds (evicted
 //! preparations rebuild transparently).
 //!
+//! Phase 3 is a **chaos smoke**: the wire workload re-runs against an
+//! engine with an armed deterministic fault injector (panics, slow
+//! stages, connection drops). Clients retry on typed retryable errors,
+//! reconnect on injected drops, and every eventual result is checked
+//! bitwise against an unfaulted engine. `GFI_FAULTS` overrides the
+//! built-in plan — the CI fault-injection smoke sets it.
+//!
 //! ```sh
 //! make artifacts && cargo run --release --example serve_pipeline
 //! ```
 
-use gfi::coordinator::{server, Engine, EngineConfig};
+use gfi::coordinator::faults::FaultPlan;
+use gfi::coordinator::{server, EngineConfig};
 use gfi::integrators::{prepare, FieldIntegrator, IntegratorSpec, KernelFn};
 use gfi::linalg::Mat;
 use gfi::util::rng::Rng;
@@ -33,10 +41,14 @@ const REQUESTS_PER_CLIENT: usize = 25;
 
 fn main() -> gfi::util::error::Result<()> {
     // --- Boot the stack. ---
+    // Phases 1–2 pin an *empty* fault plan so a GFI_FAULTS env (the CI
+    // chaos smoke) only arms the dedicated chaos phase below.
     let artifacts = std::path::Path::new("artifacts");
-    let engine = Arc::new(Engine::new(
-        artifacts.join("manifest.json").exists().then_some(artifacts),
-    ));
+    let mut cfg = EngineConfig::default().fault_plan(FaultPlan::default());
+    if artifacts.join("manifest.json").exists() {
+        cfg = cfg.artifacts(artifacts);
+    }
+    let engine = Arc::new(cfg.build());
     println!("[boot] pjrt runtime loaded: {}", engine.has_pjrt());
     let (addr_tx, addr_rx) = std::sync::mpsc::channel();
     let eng_server = engine.clone();
@@ -153,6 +165,9 @@ fn main() -> gfi::util::error::Result<()> {
 
     churn_phase()?;
     println!("E2E pipeline + bounded-memory churn OK");
+
+    chaos_phase()?;
+    println!("E2E pipeline + churn + chaos OK");
     Ok(())
 }
 
@@ -167,7 +182,7 @@ fn churn_phase() -> gfi::util::error::Result<()> {
     // Probe the resident cost of one prepared RFD integrator on the
     // workload mesh, then budget the engine to hold only ~3 of the
     // 5 clouds × 2 specs = 10 distinct prepared artifacts.
-    let probe = Engine::new(None);
+    let probe = EngineConfig::default().fault_plan(FaultPlan::default()).build();
     let pid = probe.register_mesh(gfi::mesh::icosphere(2), "probe");
     let pn = probe.cloud(pid)?.scene.len();
     let probe_field = Mat::from_vec(pn, 1, vec![1.0; pn]);
@@ -186,6 +201,7 @@ fn churn_phase() -> gfi::util::error::Result<()> {
         EngineConfig::default()
             .shards(4)
             .max_resident_bytes(budget)
+            .fault_plan(FaultPlan::default())
             .build(),
     );
     let (addr_tx, addr_rx) = std::sync::mpsc::channel();
@@ -194,7 +210,10 @@ fn churn_phase() -> gfi::util::error::Result<()> {
         server::serve_with(
             eng_server,
             "127.0.0.1:0",
-            server::ServerConfig { max_connections: CHURN_CLIENTS + 2 },
+            server::ServerConfig {
+                max_connections: CHURN_CLIENTS + 2,
+                ..Default::default()
+            },
             move |a| addr_tx.send(a).unwrap(),
         )
     });
@@ -270,6 +289,147 @@ fn churn_phase() -> gfi::util::error::Result<()> {
     ctl.send(r#"{"op":"shutdown"}"#)?;
     server_thread.join().unwrap()?;
     Ok(())
+}
+
+/// Phase 3: the wire workload under an armed deterministic fault
+/// injector. Every failed request must carry a typed retryable error,
+/// clients reconnect through injected accept/read drops, and each
+/// eventually-served result is compared **bitwise** against an unfaulted
+/// engine (f64 `Display` round-trips exactly across the wire).
+fn chaos_phase() -> gfi::util::error::Result<()> {
+    const DEFAULT_PLAN: &str = "seed=7;\
+        site=prepare,backend=sf,kind=panic,times=2;\
+        site=finish,backend=rfd,kind=delay,ms=5,times=3;\
+        site=apply,backend=rfd,kind=panic,times=2;\
+        site=accept,kind=drop,times=2;\
+        site=read,kind=drop,times=2,every=5";
+    let env_plan = std::env::var("GFI_FAULTS").ok().filter(|s| !s.trim().is_empty());
+    let plan = FaultPlan::parse(env_plan.as_deref().unwrap_or(DEFAULT_PLAN))
+        .map_err(|e| gfi::anyhow!("chaos plan: {e}"))?;
+    println!(
+        "\n[chaos] armed: {} rules, seed {} ({})",
+        plan.rules.len(),
+        plan.seed,
+        if env_plan.is_some() { "GFI_FAULTS" } else { "built-in plan" }
+    );
+
+    // Unfaulted oracle engine: same mesh, same specs, same fields.
+    let clean = EngineConfig::default().fault_plan(FaultPlan::default()).build();
+    let clean_id = clean.register_mesh(gfi::mesh::icosphere(2), "chaos");
+    let n = clean.cloud(clean_id)?.scene.len();
+
+    let engine = Arc::new(
+        EngineConfig::default()
+            .fault_plan(plan)
+            .quarantine_backoff_ms(1)
+            .build(),
+    );
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let eng_server = engine.clone();
+    let server_thread = std::thread::spawn(move || {
+        server::serve_with(
+            eng_server,
+            "127.0.0.1:0",
+            server::ServerConfig { read_timeout_ms: 2_000, ..Default::default() },
+            move |a| addr_tx.send(a).unwrap(),
+        )
+    });
+    let addr = addr_rx.recv()?;
+
+    let mut client = Client::connect(addr)?;
+    let reg = send_with_retry(
+        addr,
+        &mut client,
+        r#"{"op":"register_mesh","kind":"icosphere","param":2,"name":"chaos"}"#,
+    )?;
+    let cloud = reg.get("id").unwrap().as_usize().unwrap();
+
+    let mut rng = Rng::new(2024);
+    let mut served = 0usize;
+    let mut retried = 0usize;
+    for r in 0..24 {
+        let field: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        // `{}` Display emits the shortest exact f64 representation, so
+        // the wire request and the oracle see identical inputs.
+        let field_json =
+            field.iter().map(|x| format!("{x}")).collect::<Vec<_>>().join(",");
+        let req = if r % 2 == 0 {
+            format!(
+                r#"{{"op":"integrate","cloud":{cloud},"backend":"sf","field":[{field_json}],"d":1,"lambda":4.0}}"#
+            )
+        } else {
+            format!(
+                r#"{{"op":"integrate","cloud":{cloud},"backend":"rfd","field":[{field_json}],"d":1,"m":16}}"#
+            )
+        };
+        let before = engine.robustness_stats();
+        let resp = send_with_retry(addr, &mut client, &req)?;
+        let after = engine.robustness_stats();
+        if after.faults_injected > before.faults_injected
+            || after.panics_caught > before.panics_caught
+        {
+            retried += 1;
+        }
+        let got = resp.get("result").unwrap().as_f64_vec().unwrap();
+        let spec = IntegratorSpec::from_request(&gfi::util::json::parse(&req).unwrap())?;
+        let f = Mat::from_vec(n, 1, field);
+        let (want, _) = clean.integrate(clean_id, &spec, &f)?;
+        assert_eq!(got, want.data, "post-fault result diverged from unfaulted engine");
+        served += 1;
+    }
+
+    let health = send_with_retry(addr, &mut client, r#"{"op":"health"}"#)?;
+    let rb = health.get("robustness").unwrap();
+    let injected = rb.get("faults_injected").unwrap().as_usize().unwrap();
+    let caught = rb.get("panics_caught").unwrap().as_usize().unwrap();
+    println!(
+        "[chaos] {served} requests served bitwise-correct ({retried} through faults); \
+         {injected} faults injected, {caught} panics isolated; health: {}",
+        health.get("status").unwrap()
+    );
+    assert!(
+        injected > 0,
+        "chaos phase ran with an armed plan but injected nothing"
+    );
+    send_with_retry(addr, &mut client, r#"{"op":"shutdown"}"#)?;
+    server_thread.join().unwrap()?;
+    Ok(())
+}
+
+/// Sends one request, retrying typed retryable errors (with the server's
+/// backoff hint) and reconnecting when an injected accept/read drop
+/// severs the connection. Non-retryable errors are fatal.
+fn send_with_retry(
+    addr: std::net::SocketAddr,
+    client: &mut Client,
+    req: &str,
+) -> gfi::util::error::Result<gfi::util::json::Json> {
+    for _attempt in 0..60 {
+        let resp = match client.send(req) {
+            Ok(r) => r,
+            Err(_) => {
+                // Dropped connection (injected at accept/read, or EOF
+                // mid-response): reconnect and retry the request.
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                *client = Client::connect(addr)?;
+                continue;
+            }
+        };
+        if resp.get("ok").and_then(|j| j.as_bool()) == Some(true) {
+            return Ok(resp);
+        }
+        let retryable =
+            resp.get("retryable").and_then(|j| j.as_bool()).unwrap_or(false);
+        if !retryable {
+            return Err(gfi::anyhow!("non-retryable failure: {resp}"));
+        }
+        let backoff = resp
+            .get("retry_after_ms")
+            .and_then(|j| j.as_usize())
+            .unwrap_or(2) as u64;
+        std::thread::sleep(std::time::Duration::from_millis(backoff.clamp(1, 100)));
+    }
+    Err(gfi::anyhow!("request did not recover within the retry budget: {req}"))
 }
 
 struct Client {

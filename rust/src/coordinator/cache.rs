@@ -31,6 +31,11 @@
 //! * **Observable** — hit/miss/eviction/rejection counters and live
 //!   occupancy are exported as [`CacheStats`] and surfaced through
 //!   [`crate::coordinator::metrics`] in the server's `stats` op.
+//! * **Panic-tolerant** — shard locks recover from mutex poisoning
+//!   (`PoisonError::into_inner`): a panic caught at the engine's
+//!   isolation boundary while a cache op was in flight must not brick
+//!   that shard for the rest of the process. See `lock_shard` for why
+//!   the data is consistent across a poisoning panic.
 //!
 //! Eviction is transparent to callers: the engine treats an evicted
 //! integrator exactly like a never-prepared one and rebuilds it on the
@@ -150,6 +155,16 @@ impl<K: Hash + Eq + Clone, V: Clone> ShardedCache<K, V> {
         (h.finish() as usize) % self.shards.len()
     }
 
+    /// Locks shard `i`, recovering from mutex poisoning. A panic while a
+    /// holder was mid-operation can only have fired inside a caller-type
+    /// `Clone` (key or value) — every map mutation and its counter update
+    /// happen together under the same lock hold with no panicking code
+    /// between them — so the shard data is consistent and safe to reuse;
+    /// abandoning it would brick 1/N of the cache forever.
+    fn lock_shard(&self, i: usize) -> std::sync::MutexGuard<'_, HashMap<K, Entry<V>>> {
+        self.shards[i].lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     fn tick(&self) -> u64 {
         self.clock.fetch_add(1, Ordering::Relaxed)
     }
@@ -158,7 +173,7 @@ impl<K: Hash + Eq + Clone, V: Clone> ShardedCache<K, V> {
     /// miss either way.
     pub fn get(&self, k: &K) -> Option<V> {
         let stamp = self.tick();
-        let mut map = self.shards[self.shard_index(k)].lock().unwrap();
+        let mut map = self.lock_shard(self.shard_index(k));
         match map.get_mut(k) {
             Some(e) => {
                 e.last_used = stamp;
@@ -175,7 +190,7 @@ impl<K: Hash + Eq + Clone, V: Clone> ShardedCache<K, V> {
     /// Peeks without touching recency or hit/miss counters (used by
     /// tests and introspection).
     pub fn peek(&self, k: &K) -> Option<V> {
-        let map = self.shards[self.shard_index(k)].lock().unwrap();
+        let map = self.lock_shard(self.shard_index(k));
         map.get(k).map(|e| e.value.clone())
     }
 
@@ -191,7 +206,7 @@ impl<K: Hash + Eq + Clone, V: Clone> ShardedCache<K, V> {
         }
         {
             let stamp = self.tick();
-            let mut map = self.shards[self.shard_index(&k)].lock().unwrap();
+            let mut map = self.lock_shard(self.shard_index(&k));
             if let Some(old) = map.insert(k.clone(), Entry { value: v, weight, last_used: stamp })
             {
                 self.weight.fetch_sub(old.weight, Ordering::Relaxed);
@@ -223,8 +238,8 @@ impl<K: Hash + Eq + Clone, V: Clone> ShardedCache<K, V> {
     fn evict_lru(&self, protect: &K) -> Option<K> {
         loop {
             let mut best: Option<(usize, K, u64)> = None;
-            for (i, shard) in self.shards.iter().enumerate() {
-                let map = shard.lock().unwrap();
+            for i in 0..self.shards.len() {
+                let map = self.lock_shard(i);
                 for (k, e) in map.iter() {
                     if k == protect {
                         continue;
@@ -235,7 +250,7 @@ impl<K: Hash + Eq + Clone, V: Clone> ShardedCache<K, V> {
                 }
             }
             let (i, key, stamp) = best?;
-            let mut map = self.shards[i].lock().unwrap();
+            let mut map = self.lock_shard(i);
             // Re-validate under the shard lock: if a concurrent `get`
             // re-stamped the chosen victim (it is no longer the coldest
             // entry) or a concurrent remove took it, rescan instead of
@@ -255,7 +270,7 @@ impl<K: Hash + Eq + Clone, V: Clone> ShardedCache<K, V> {
     /// Explicitly removes `k` (not counted as an eviction). Returns
     /// whether an entry existed.
     pub fn remove(&self, k: &K) -> bool {
-        let removed = self.shards[self.shard_index(k)].lock().unwrap().remove(k);
+        let removed = self.lock_shard(self.shard_index(k)).remove(k);
         if let Some(e) = removed {
             self.weight.fetch_sub(e.weight, Ordering::Relaxed);
             self.entries.fetch_sub(1, Ordering::Relaxed);
@@ -270,8 +285,8 @@ impl<K: Hash + Eq + Clone, V: Clone> ShardedCache<K, V> {
     /// `unregister_cloud` into the derived artifact caches.
     pub fn remove_if(&self, pred: impl Fn(&K) -> bool) -> usize {
         let mut dropped = 0;
-        for shard in &self.shards {
-            let mut map = shard.lock().unwrap();
+        for i in 0..self.shards.len() {
+            let mut map = self.lock_shard(i);
             let victims: Vec<K> = map.keys().filter(|k| pred(k)).cloned().collect();
             for k in victims {
                 if let Some(e) = map.remove(&k) {
@@ -292,8 +307,8 @@ impl<K: Hash + Eq + Clone, V: Clone> ShardedCache<K, V> {
     /// under their new keys.
     pub fn take_if(&self, pred: impl Fn(&K) -> bool) -> Vec<(K, V)> {
         let mut taken = Vec::new();
-        for shard in &self.shards {
-            let mut map = shard.lock().unwrap();
+        for i in 0..self.shards.len() {
+            let mut map = self.lock_shard(i);
             let victims: Vec<K> = map.keys().filter(|k| pred(k)).cloned().collect();
             for k in victims {
                 if let Some(e) = map.remove(&k) {
@@ -452,6 +467,64 @@ mod tests {
         assert_eq!(c.weight_bytes(), 15);
         assert_eq!(c.stats().evictions, 0, "take_if entries are not evictions");
         assert!(c.peek(&0).is_none() && c.peek(&1).is_some());
+    }
+
+    #[test]
+    fn poisoned_shard_recovers_and_budget_invariant_holds() {
+        use std::sync::atomic::AtomicBool;
+
+        // A key whose Clone panics once, on demand — `insert` clones the
+        // key under the shard lock, so this poisons the mutex exactly
+        // mid-insert, the way a real caught panic would.
+        struct BoomKey {
+            id: u64,
+            armed: Arc<AtomicBool>,
+        }
+        impl Hash for BoomKey {
+            fn hash<H: Hasher>(&self, h: &mut H) {
+                self.id.hash(h);
+            }
+        }
+        impl PartialEq for BoomKey {
+            fn eq(&self, o: &Self) -> bool {
+                self.id == o.id
+            }
+        }
+        impl Eq for BoomKey {}
+        impl Clone for BoomKey {
+            fn clone(&self) -> Self {
+                if self.armed.swap(false, Ordering::SeqCst) {
+                    panic!("injected clone panic mid-insert");
+                }
+                BoomKey { id: self.id, armed: self.armed.clone() }
+            }
+        }
+
+        let armed = Arc::new(AtomicBool::new(false));
+        let key = |id: u64| BoomKey { id, armed: armed.clone() };
+        let c: ShardedCache<BoomKey, u32> = ShardedCache::new(CacheConfig {
+            shards: 1, // one shard ⇒ the poisoned mutex guards everything
+            max_weight_bytes: u64::MAX,
+            max_entries: usize::MAX,
+        });
+        c.insert(key(1), 11, 10);
+
+        armed.store(true, Ordering::SeqCst);
+        let caught =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| c.insert(key(2), 22, 20)));
+        assert!(caught.is_err(), "the armed clone must panic inside insert");
+
+        // The shard lock is now poisoned; every op must still work, and
+        // the aborted insert must have left no partial state behind.
+        assert_eq!((c.len(), c.weight_bytes()), (1, 10));
+        assert_eq!(c.get(&key(1)), Some(11));
+        assert!(c.insert(key(2), 22, 20).cached);
+        assert_eq!(c.get(&key(2)), Some(22));
+        assert_eq!((c.len(), c.weight_bytes()), (2, 30), "byte budget invariant");
+        assert!(c.remove(&key(1)));
+        assert_eq!((c.len(), c.weight_bytes()), (1, 20));
+        assert_eq!(c.take_if(|k| k.id == 2).len(), 1);
+        assert_eq!((c.len(), c.weight_bytes()), (0, 0));
     }
 
     #[test]

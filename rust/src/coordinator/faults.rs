@@ -1,0 +1,429 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a seeded list of rules — *where* ([`FaultSite`]),
+//! *what* ([`FaultKind`]), and *how often* — compiled into a
+//! [`FaultInjector`] that the engine consults at its injection sites
+//! (prepare/finish/refresh/apply, structure-store hits, and the server
+//! accept/read path). The injector is always compiled in: with an empty
+//! plan, [`FaultInjector::fire`] is a single `is_empty` branch, so
+//! production pays nothing. Firing is deterministic — per-rule atomic
+//! hit counters drive `times`/`every`, and the optional probabilistic
+//! mode hashes `(seed, site, backend, hit)` — so a chaos run with a
+//! fixed plan injects the same faults in the same order every time
+//! (modulo thread interleaving of *which request* absorbs each one).
+//!
+//! Plans parse from a compact string (`GFI_FAULTS` env or
+//! `EngineConfig::fault_plan`): semicolon-separated rules of
+//! comma-separated `key=value` pairs, e.g.
+//!
+//! ```text
+//! seed=7;site=prepare,backend=rfd,kind=panic,times=3;site=read,kind=drop,every=5,times=2
+//! ```
+//!
+//! Rule keys: `site` (required), `kind` (required; `delay` takes `ms=N`),
+//! `backend` (prefix match on the backend name / structural key; absent =
+//! every backend), `times` (total fires, default 1), `every` (fire on
+//! every k-th matching hit, default 1), `prob` (seeded coin in `[0,1]`,
+//! default always).
+
+use crate::integrators::GfiError;
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Where in the serving stack a fault can fire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// The structure stage of a cache-miss prepare (`prepare_structure`).
+    Prepare,
+    /// The kernel stage of a cache-miss prepare (`finish`).
+    Finish,
+    /// Incremental refresh during `update_cloud` (structures and cached
+    /// integrators; the backend filter matches the structural key too).
+    Refresh,
+    /// The apply hot path (`apply_into` / `apply_batch`).
+    Apply,
+    /// A structure-store hit. `kind=corrupt` makes the cached artifact
+    /// fail validation: it is dropped and rebuilt from scratch.
+    StructureHit,
+    /// The server accept loop (`kind=drop` closes the fresh connection).
+    Accept,
+    /// The server per-line read path (`kind=drop` severs mid-stream).
+    Read,
+}
+
+impl FaultSite {
+    /// Stable lowercase name (plan syntax and error messages).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::Prepare => "prepare",
+            FaultSite::Finish => "finish",
+            FaultSite::Refresh => "refresh",
+            FaultSite::Apply => "apply",
+            FaultSite::StructureHit => "structure_hit",
+            FaultSite::Accept => "accept",
+            FaultSite::Read => "read",
+        }
+    }
+
+    fn parse(s: &str) -> Option<FaultSite> {
+        Some(match s {
+            "prepare" => FaultSite::Prepare,
+            "finish" => FaultSite::Finish,
+            "refresh" => FaultSite::Refresh,
+            "apply" => FaultSite::Apply,
+            "structure_hit" => FaultSite::StructureHit,
+            "accept" => FaultSite::Accept,
+            "read" => FaultSite::Read,
+            _ => return None,
+        })
+    }
+}
+
+/// What an armed rule does when it fires.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Panic at the site (exercises the engine's `catch_unwind` boundary
+    /// exactly like a real backend panic).
+    Panic,
+    /// Return a spurious typed error ([`GfiError::Internal`]).
+    Error,
+    /// Sleep for the given duration (slow-stage; drives deadline tests).
+    Delay(Duration),
+    /// Treat a cached artifact as failing validation (StructureHit only).
+    Corrupt,
+    /// Sever the connection (server sites only).
+    Drop,
+}
+
+/// One rule of a fault plan. See the module docs for the plan syntax.
+#[derive(Clone, Debug)]
+pub struct FaultRule {
+    pub site: FaultSite,
+    /// Backend filter: fires when the site's backend tag *starts with*
+    /// this (so `rfd` also matches `rfd_pjrt` and the `rfd_feat|…`
+    /// structural key). `None` matches everything.
+    pub backend: Option<String>,
+    pub kind: FaultKind,
+    /// Total number of times this rule fires before it is exhausted.
+    pub times: u64,
+    /// Fire on every `every`-th matching hit (1 = every hit).
+    pub every: u64,
+    /// Probability a matching hit fires, decided by the seeded hash.
+    pub prob: f64,
+}
+
+/// A seed plus the rules. Parsed with [`FaultPlan::parse`]; an empty plan
+/// (the default) disables injection entirely.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// Whether the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// Parses the compact plan syntax (module docs). Unknown keys, sites,
+    /// or kinds are errors — a chaos plan with a typo must not silently
+    /// run clean.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for seg in s.split(';').map(str::trim).filter(|seg| !seg.is_empty()) {
+            let mut site = None;
+            let mut backend = None;
+            let mut kind = None;
+            let mut ms = 10u64;
+            let mut times = 1u64;
+            let mut every = 1u64;
+            let mut prob = 1.0f64;
+            let mut seed_only = None;
+            for pair in seg.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+                let (k, v) = pair
+                    .split_once('=')
+                    .ok_or_else(|| format!("fault rule '{pair}': expected key=value"))?;
+                let bad = |what: &str| format!("fault rule '{seg}': bad {what} '{v}'");
+                match k {
+                    "seed" => seed_only = Some(v.parse().map_err(|_| bad("seed"))?),
+                    "site" => {
+                        site = Some(FaultSite::parse(v).ok_or_else(|| bad("site"))?);
+                    }
+                    "backend" => backend = Some(v.to_string()),
+                    "kind" => {
+                        kind = Some(match v {
+                            "panic" => FaultKind::Panic,
+                            "error" => FaultKind::Error,
+                            "delay" => FaultKind::Delay(Duration::ZERO), // ms fills in below
+                            "corrupt" => FaultKind::Corrupt,
+                            "drop" => FaultKind::Drop,
+                            _ => return Err(bad("kind")),
+                        });
+                    }
+                    "ms" => ms = v.parse().map_err(|_| bad("ms"))?,
+                    "times" => times = v.parse().map_err(|_| bad("times"))?,
+                    "every" => every = v.parse::<u64>().map_err(|_| bad("every"))?.max(1),
+                    "prob" => prob = v.parse::<f64>().map_err(|_| bad("prob"))?.clamp(0.0, 1.0),
+                    _ => return Err(format!("fault rule '{seg}': unknown key '{k}'")),
+                }
+            }
+            if let Some(seed) = seed_only {
+                plan.seed = seed;
+                if site.is_none() && kind.is_none() {
+                    continue; // pure `seed=N` segment
+                }
+            }
+            let site = site.ok_or_else(|| format!("fault rule '{seg}': missing site="))?;
+            let mut kind = kind.ok_or_else(|| format!("fault rule '{seg}': missing kind="))?;
+            if let FaultKind::Delay(_) = kind {
+                kind = FaultKind::Delay(Duration::from_millis(ms));
+            }
+            plan.rules.push(FaultRule { site, backend, kind, times, every, prob });
+        }
+        Ok(plan)
+    }
+
+    /// The plan from the `GFI_FAULTS` env var; empty when unset. A parse
+    /// error is reported to stderr and treated as empty rather than
+    /// killing the engine — chaos opt-in must not take serving down.
+    pub fn from_env() -> FaultPlan {
+        match std::env::var("GFI_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => FaultPlan::parse(&s).unwrap_or_else(|e| {
+                eprintln!("GFI_FAULTS ignored: {e}");
+                FaultPlan::default()
+            }),
+            _ => FaultPlan::default(),
+        }
+    }
+}
+
+/// What the caller should do for a fired fault. Engine sites route
+/// through [`FaultAction::trigger`]; server sites and the structure
+/// store handle `Drop`/`Corrupt` structurally.
+#[derive(Debug, PartialEq)]
+pub enum FaultAction {
+    Panic(String),
+    Error(String),
+    Delay(Duration),
+    Corrupt,
+    Drop,
+}
+
+impl FaultAction {
+    /// Engine-path semantics: panic (caught by the isolation boundary
+    /// like any real panic), typed spurious error, or a slow-stage sleep.
+    /// `Corrupt`/`Drop` planned at an engine site degrade to `Error` —
+    /// they have no structural meaning there.
+    pub fn trigger(self) -> Result<(), GfiError> {
+        match self {
+            FaultAction::Panic(msg) => panic!("{msg}"),
+            FaultAction::Error(msg) => Err(GfiError::Internal { detail: msg }),
+            FaultAction::Delay(d) => {
+                std::thread::sleep(d);
+                Ok(())
+            }
+            FaultAction::Corrupt | FaultAction::Drop => Err(GfiError::Internal {
+                detail: "injected fault (corrupt/drop at a non-structural site)".into(),
+            }),
+        }
+    }
+}
+
+struct RuleState {
+    hits: AtomicU64,
+    fired: AtomicU64,
+}
+
+/// A compiled plan with per-rule firing state. One injector per
+/// [`crate::coordinator::Engine`] (never process-global, so concurrent
+/// engines/tests can't contaminate each other).
+pub struct FaultInjector {
+    plan: FaultPlan,
+    state: Vec<RuleState>,
+    injected: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        let state = plan
+            .rules
+            .iter()
+            .map(|_| RuleState { hits: AtomicU64::new(0), fired: AtomicU64::new(0) })
+            .collect();
+        FaultInjector { plan, state, injected: AtomicU64::new(0) }
+    }
+
+    /// Consult the plan at `site` for `backend`. The empty-plan fast path
+    /// is one branch — the injector costs nothing unless armed.
+    #[inline]
+    pub fn fire(&self, site: FaultSite, backend: &str) -> Option<FaultAction> {
+        if self.state.is_empty() {
+            return None;
+        }
+        self.fire_slow(site, backend)
+    }
+
+    #[cold]
+    fn fire_slow(&self, site: FaultSite, backend: &str) -> Option<FaultAction> {
+        for (rule, st) in self.plan.rules.iter().zip(&self.state) {
+            if rule.site != site {
+                continue;
+            }
+            if let Some(b) = &rule.backend {
+                if !backend.starts_with(b.as_str()) {
+                    continue;
+                }
+            }
+            let hit = st.hits.fetch_add(1, Ordering::Relaxed) + 1;
+            if hit % rule.every != 0 {
+                continue;
+            }
+            if rule.prob < 1.0 && !self.coin(site, backend, hit, rule.prob) {
+                continue;
+            }
+            // fetch_add returns the pre-increment count, so exactly
+            // `times` hits observe `prev < times` — no over-fire race.
+            if st.fired.fetch_add(1, Ordering::Relaxed) >= rule.times {
+                continue;
+            }
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return Some(match &rule.kind {
+                FaultKind::Panic => FaultAction::Panic(format!(
+                    "injected panic at {}/{backend} (hit {hit})",
+                    site.name()
+                )),
+                FaultKind::Error => FaultAction::Error(format!(
+                    "injected error at {}/{backend} (hit {hit})",
+                    site.name()
+                )),
+                FaultKind::Delay(d) => FaultAction::Delay(*d),
+                FaultKind::Corrupt => FaultAction::Corrupt,
+                FaultKind::Drop => FaultAction::Drop,
+            });
+        }
+        None
+    }
+
+    /// Seeded deterministic coin: hash of (seed, site, backend, hit)
+    /// mapped to [0,1).
+    fn coin(&self, site: FaultSite, backend: &str, hit: u64, prob: f64) -> bool {
+        let mut h = DefaultHasher::new();
+        self.plan.seed.hash(&mut h);
+        site.hash(&mut h);
+        backend.hash(&mut h);
+        hit.hash(&mut h);
+        (h.finish() as f64 / u64::MAX as f64) < prob
+    }
+
+    /// Total faults this injector has fired (the `faults_injected`
+    /// counter in `stats`/`health`).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Whether the plan has any rules at all.
+    pub fn armed(&self) -> bool {
+        !self.state.is_empty()
+    }
+}
+
+/// Fires the injector at an engine site inside an `Err(GfiError)`-typed
+/// context: a planned panic unwinds (to be caught at the isolation
+/// boundary), a planned error early-returns, a delay sleeps through.
+macro_rules! fault_point {
+    ($inj:expr, $site:expr, $backend:expr) => {
+        if let Some(act) = $inj.fire($site, $backend) {
+            act.trigger()?;
+        }
+    };
+}
+pub(crate) use fault_point;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_never_fires() {
+        let inj = FaultInjector::new(FaultPlan::default());
+        for _ in 0..100 {
+            assert!(inj.fire(FaultSite::Apply, "sf").is_none());
+        }
+        assert_eq!(inj.injected(), 0);
+        assert!(!inj.armed());
+    }
+
+    #[test]
+    fn parse_roundtrip_and_counts() {
+        let plan = FaultPlan::parse(
+            "seed=9; site=prepare,backend=rfd,kind=panic,times=2; \
+             site=read,kind=drop,every=3,times=2; site=apply,kind=delay,ms=5",
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 9);
+        assert_eq!(plan.rules.len(), 3);
+        let inj = FaultInjector::new(plan);
+        // Rule 1: prefix-matched backend, fires exactly twice.
+        assert!(inj.fire(FaultSite::Prepare, "sf").is_none());
+        assert!(matches!(inj.fire(FaultSite::Prepare, "rfd"), Some(FaultAction::Panic(_))));
+        assert!(matches!(
+            inj.fire(FaultSite::Prepare, "rfd_pjrt"),
+            Some(FaultAction::Panic(_))
+        ));
+        assert!(inj.fire(FaultSite::Prepare, "rfd").is_none());
+        // Rule 2: every 3rd hit, twice total → hits 3 and 6 fire.
+        let fired: Vec<bool> = (1..=9)
+            .map(|_| inj.fire(FaultSite::Read, "server").is_some())
+            .collect();
+        assert_eq!(
+            fired,
+            [false, false, true, false, false, true, false, false, false]
+        );
+        // Rule 3: delay carries its ms.
+        match inj.fire(FaultSite::Apply, "trees") {
+            Some(FaultAction::Delay(d)) => assert_eq!(d, Duration::from_millis(5)),
+            other => panic!("expected delay, got {other:?}"),
+        }
+        assert_eq!(inj.injected(), 5);
+    }
+
+    #[test]
+    fn parse_rejects_typos() {
+        assert!(FaultPlan::parse("site=nope,kind=panic").is_err());
+        assert!(FaultPlan::parse("site=apply,kind=explode").is_err());
+        assert!(FaultPlan::parse("site=apply,kind=panic,bogus=1").is_err());
+        assert!(FaultPlan::parse("site=apply").is_err()); // missing kind
+        assert!(FaultPlan::parse("kind=panic").is_err()); // missing site
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn seeded_prob_is_deterministic() {
+        let mk = || {
+            FaultInjector::new(
+                FaultPlan::parse("seed=42;site=apply,kind=error,times=1000,prob=0.5").unwrap(),
+            )
+        };
+        let run = |inj: &FaultInjector| -> Vec<bool> {
+            (0..64).map(|_| inj.fire(FaultSite::Apply, "sf").is_some()).collect()
+        };
+        let (a, b) = (run(&mk()), run(&mk()));
+        assert_eq!(a, b, "same seed must fire identically");
+        let fired = a.iter().filter(|x| **x).count();
+        assert!(fired > 10 && fired < 54, "p=0.5 over 64 hits fired {fired}");
+    }
+
+    #[test]
+    fn trigger_semantics() {
+        assert!(matches!(
+            FaultAction::Error("x".into()).trigger(),
+            Err(GfiError::Internal { .. })
+        ));
+        assert!(FaultAction::Delay(Duration::from_millis(1)).trigger().is_ok());
+        let p = std::panic::catch_unwind(|| FaultAction::Panic("boom".into()).trigger());
+        assert!(p.is_err());
+    }
+}

@@ -69,7 +69,9 @@
 
 pub mod batcher;
 pub mod cache;
+pub mod faults;
 pub mod metrics;
+pub mod quarantine;
 pub mod server;
 
 use crate::integrators::rfd::sample_features;
@@ -83,9 +85,12 @@ use crate::pointcloud::PointCloud;
 use crate::runtime::PjrtRuntime;
 use crate::util::error::{anyhow, bail, Result};
 use cache::{CacheConfig, CacheStats, ShardedCache};
+use faults::{fault_point, FaultAction, FaultInjector, FaultPlan, FaultSite};
+use quarantine::{QuarantinePolicy, QuarantineRegistry};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// Backwards-compatible alias: the old `coordinator::Backend` enum is now
 /// the crate-wide [`IntegratorSpec`].
@@ -144,6 +149,25 @@ pub struct EngineConfig {
     /// Maximum registered scenes before the least-recently-used cloud
     /// (and its prepared artifacts) is evicted. `usize::MAX` = unbounded.
     pub max_clouds: usize,
+    /// Fault-injection plan. `None` (the default) consults the
+    /// `GFI_FAULTS` env var at build time; `Some(plan)` uses exactly the
+    /// given plan (tests set this explicitly so concurrent engines never
+    /// contaminate each other). An empty plan disables injection at the
+    /// cost of one branch per site.
+    pub fault_plan: Option<FaultPlan>,
+    /// Quarantine retry policy for failing cache entries (see
+    /// [`quarantine`]).
+    pub quarantine: QuarantinePolicy,
+    /// Load-shed high-water mark: a cache-miss prepare arriving while
+    /// this many prepares are already in flight gets a typed retryable
+    /// [`GfiError::Overloaded`] instead of queueing unboundedly. Cache
+    /// hits are always served. `usize::MAX` = never shed.
+    pub max_inflight_prepares: usize,
+    /// Load-shed high-water mark on prepared-integrator resident bytes:
+    /// past it, cache-miss prepares are shed (hits still served). Set it
+    /// at or below `max_resident_bytes` to refuse new work *before*
+    /// eviction thrashing starts. `u64::MAX` = never shed.
+    pub shed_resident_bytes: u64,
 }
 
 impl Default for EngineConfig {
@@ -153,6 +177,10 @@ impl Default for EngineConfig {
             shards: 8,
             max_resident_bytes: u64::MAX,
             max_clouds: usize::MAX,
+            fault_plan: None,
+            quarantine: QuarantinePolicy::default(),
+            max_inflight_prepares: usize::MAX,
+            shed_resident_bytes: u64::MAX,
         }
     }
 }
@@ -182,10 +210,101 @@ impl EngineConfig {
         self
     }
 
+    /// Sets an explicit fault-injection plan (overrides `GFI_FAULTS`).
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+
+    /// Sets the quarantine failure cap (rebuild attempts before a key is
+    /// hard-quarantined until the next epoch).
+    pub fn quarantine_attempts(mut self, n: u32) -> Self {
+        self.quarantine.max_attempts = n;
+        self
+    }
+
+    /// Sets the quarantine exponential-backoff base, in milliseconds.
+    pub fn quarantine_backoff_ms(mut self, ms: u64) -> Self {
+        self.quarantine.backoff_base_ms = ms;
+        self
+    }
+
+    /// Sets the in-flight-prepare shed mark.
+    pub fn max_inflight_prepares(mut self, n: usize) -> Self {
+        self.max_inflight_prepares = n;
+        self
+    }
+
+    /// Sets the resident-byte shed mark.
+    pub fn shed_resident_bytes(mut self, bytes: u64) -> Self {
+        self.shed_resident_bytes = bytes;
+        self
+    }
+
     /// Builds an [`Engine`] from this configuration.
     pub fn build(self) -> Engine {
         Engine::with_config(self)
     }
+}
+
+/// Per-request serving options (the `_opts` request variants).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RequestOpts {
+    /// Absolute deadline, checked before each of the structure / kernel /
+    /// apply stages. A request that cannot make it returns a typed
+    /// retryable [`GfiError::DeadlineExceeded`]; work already done (e.g.
+    /// a finished prepare) stays cached for the retry.
+    pub deadline: Option<Instant>,
+}
+
+impl RequestOpts {
+    /// Options with a deadline budget of `ms` milliseconds from now.
+    pub fn deadline_ms(ms: u64) -> Self {
+        RequestOpts { deadline: Some(Instant::now() + std::time::Duration::from_millis(ms)) }
+    }
+}
+
+/// Robustness counters (surfaced by the server's `stats` and `health`
+/// ops; see docs/PROTOCOL.md).
+#[derive(Clone, Debug, Default)]
+pub struct RobustnessStats {
+    /// Faults the configured plan has injected so far.
+    pub faults_injected: u64,
+    /// Panics caught at the engine's isolation boundary.
+    pub panics_caught: u64,
+    /// Total quarantine failures ever recorded (monotonic).
+    pub quarantines: u64,
+    /// Keys currently holding a quarantine record.
+    pub quarantined_live: usize,
+    /// Requests shed with a typed `overloaded` error.
+    pub sheds: u64,
+    /// Requests failed with a typed `deadline_exceeded` error.
+    pub deadline_hits: u64,
+    /// Cache-miss prepares currently in flight.
+    pub in_flight_prepares: usize,
+}
+
+/// Client backoff hint attached to shed (`overloaded`) responses.
+const SHED_RETRY_HINT_MS: u64 = 50;
+
+/// Decrements the in-flight-prepare gauge when the request leaves the
+/// prepare path — normally, via an error, or via an unwinding panic.
+struct GaugeGuard<'a>(&'a AtomicUsize);
+
+impl Drop for GaugeGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Best-effort extraction of a panic payload's message (shared with the
+/// server's request-level unwind guard).
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&'static str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("<non-string panic payload>")
 }
 
 /// A registered scene (point cloud, plus the mesh graph when it came
@@ -329,6 +448,15 @@ pub struct Engine {
     runtime: Option<Arc<PjrtRuntime>>,
     /// Per-backend latency/throughput registry.
     pub metrics: metrics::Metrics,
+    /// Deterministic fault injector (empty plan = one branch per site).
+    faults: FaultInjector,
+    /// Typed failure lifecycle for evicted/failing keys.
+    quarantine: QuarantineRegistry,
+    /// Cache-miss prepares currently in flight (load-shed gauge).
+    inflight_prepares: AtomicUsize,
+    panics_caught: AtomicU64,
+    sheds: AtomicU64,
+    deadline_hits: AtomicU64,
 }
 
 impl Engine {
@@ -366,6 +494,14 @@ impl Engine {
             next_id: AtomicU64::new(1),
             runtime,
             metrics: metrics::Metrics::new(),
+            faults: FaultInjector::new(
+                cfg.fault_plan.clone().unwrap_or_else(FaultPlan::from_env),
+            ),
+            quarantine: QuarantineRegistry::new(cfg.quarantine),
+            inflight_prepares: AtomicUsize::new(0),
+            panics_caught: AtomicU64::new(0),
+            sheds: AtomicU64::new(0),
+            deadline_hits: AtomicU64::new(0),
             cfg,
         }
     }
@@ -383,6 +519,97 @@ impl Engine {
     /// The capacity configuration this engine was built with.
     pub fn config(&self) -> &EngineConfig {
         &self.cfg
+    }
+
+    /// The engine's fault injector (armed only when a plan was
+    /// configured; the server consults it for accept/read drops).
+    pub fn faults(&self) -> &FaultInjector {
+        &self.faults
+    }
+
+    /// The quarantine registry (typed failure lifecycle).
+    pub fn quarantine(&self) -> &QuarantineRegistry {
+        &self.quarantine
+    }
+
+    /// Whether a cache-miss prepare arriving now would be shed.
+    pub fn is_shedding(&self) -> bool {
+        self.inflight_prepares.load(Ordering::Relaxed) >= self.cfg.max_inflight_prepares
+            || self.integrators.weight_bytes() >= self.cfg.shed_resident_bytes
+    }
+
+    /// Snapshot of the robustness counters (stats/health ops).
+    pub fn robustness_stats(&self) -> RobustnessStats {
+        RobustnessStats {
+            faults_injected: self.faults.injected(),
+            panics_caught: self.panics_caught.load(Ordering::Relaxed),
+            quarantines: self.quarantine.total_failures(),
+            quarantined_live: self.quarantine.live(),
+            sheds: self.sheds.load(Ordering::Relaxed),
+            deadline_hits: self.deadline_hits.load(Ordering::Relaxed),
+            in_flight_prepares: self.inflight_prepares.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Runs one prepare/refresh/apply stage behind the engine's panic
+    /// isolation boundary: consults the fault injector at `site`, then
+    /// `catch_unwind`s the stage, converting a panic into a typed
+    /// [`GfiError::Internal`].
+    ///
+    /// `AssertUnwindSafe` soundness: every [`FieldIntegrator`] impl was
+    /// audited to hold no interior mutability (no `Mutex`/`RefCell`/
+    /// `Cell`/atomics anywhere under `integrators/`), so the only
+    /// caller-visible state a panicking stage can have half-written is
+    /// the output matrix (overwritten by any retry) and pooled workspace
+    /// scratch (resized by the next checkout). Engine caches are only
+    /// mutated *after* a stage returns `Ok`.
+    fn guarded<T>(
+        &self,
+        backend: &str,
+        site: FaultSite,
+        stage: impl FnOnce() -> std::result::Result<T, GfiError>,
+    ) -> std::result::Result<T, GfiError> {
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if let Some(act) = self.faults.fire(site, backend) {
+                act.trigger()?;
+            }
+            stage()
+        }));
+        match run {
+            Ok(r) => r,
+            Err(payload) => {
+                self.panics_caught.fetch_add(1, Ordering::Relaxed);
+                Err(GfiError::Internal {
+                    detail: format!(
+                        "panic isolated at {}/{backend}: {}",
+                        site.name(),
+                        panic_message(&*payload)
+                    ),
+                })
+            }
+        }
+    }
+
+    /// Deadline gate between serving stages; counts and types the miss.
+    fn check_deadline(
+        &self,
+        deadline: Option<Instant>,
+        stage: &'static str,
+    ) -> std::result::Result<(), GfiError> {
+        match deadline {
+            Some(d) if Instant::now() >= d => {
+                self.deadline_hits.fetch_add(1, Ordering::Relaxed);
+                Err(GfiError::DeadlineExceeded { stage })
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Whether `e` counts toward quarantine: serving failures (caught
+    /// panics, numerical blow-ups) do; deterministic spec/scene errors
+    /// and the deadline/shed gates do not.
+    fn counts_toward_quarantine(e: &GfiError) -> bool {
+        matches!(e, GfiError::Internal { .. } | GfiError::Numerical { .. })
     }
 
     /// Registers an arbitrary scene; returns its id. May LRU-evict the
@@ -577,14 +804,35 @@ impl Engine {
                     }
                 }
                 for (sk, st) in to_refresh {
-                    if let Some(Ok((st2, rs))) = st.refreshed(&entry.scene, &dirty) {
-                        info.reused_nodes += rs.reused_nodes;
-                        info.rebuilt_nodes += rs.rebuilt_nodes;
-                        let w = st2.resident_bytes() as u64;
-                        let _ = self
-                            .structures
-                            .insert((id, new_epoch, sk.clone()), st2.clone(), w);
-                        refreshed_structs.insert(sk, st2);
+                    // Isolation boundary: a panicking or failing structure
+                    // refresh evicts (the old copy is already taken) and
+                    // quarantines the structural family under the new
+                    // epoch — it must never NaN-poison or kill the update.
+                    let refreshed = self.guarded(&sk, FaultSite::Refresh, || {
+                        match st.refreshed(&entry.scene, &dirty) {
+                            Some(r) => r.map(Some),
+                            None => Ok(None), // no incremental path
+                        }
+                    });
+                    match refreshed {
+                        Ok(Some((st2, rs))) => {
+                            info.reused_nodes += rs.reused_nodes;
+                            info.rebuilt_nodes += rs.rebuilt_nodes;
+                            let w = st2.resident_bytes() as u64;
+                            let _ = self
+                                .structures
+                                .insert((id, new_epoch, sk.clone()), st2.clone(), w);
+                            refreshed_structs.insert(sk, st2);
+                        }
+                        Ok(None) => {}
+                        Err(e) => {
+                            if Self::counts_toward_quarantine(&e) {
+                                self.quarantine.record_failure(
+                                    &(id, new_epoch, sk.clone()),
+                                    &e.to_string(),
+                                );
+                            }
+                        }
                     }
                 }
             }
@@ -603,12 +851,21 @@ impl Engine {
                     .structural_key()
                     .and_then(|sk| refreshed_structs.get(&sk))
                 {
-                    Some(
+                    Some(self.guarded(art.spec.name(), FaultSite::Refresh, || {
                         finish(&entry.scene, &art.spec, Some(st.clone()))
-                            .map(|b| (b, RefreshStats::default())),
-                    )
+                            .map(|b| (b, RefreshStats::default()))
+                    }))
                 } else {
-                    art.integrator.refreshed(&entry.scene, &dirty)
+                    match self.guarded(art.spec.name(), FaultSite::Refresh, || {
+                        match art.integrator.refreshed(&entry.scene, &dirty) {
+                            Some(r) => r.map(Some),
+                            None => Ok(None), // no incremental path: drop
+                        }
+                    }) {
+                        Ok(Some(x)) => Some(Ok(x)),
+                        Ok(None) => None,
+                        Err(e) => Some(Err(e)),
+                    }
                 };
                 match migrated {
                     Some(Ok((fresh, rs))) => {
@@ -623,7 +880,19 @@ impl Engine {
                         info.reused_nodes += rs.reused_nodes;
                         info.rebuilt_nodes += rs.rebuilt_nodes;
                     }
-                    Some(Err(_)) | None => info.dropped += 1,
+                    Some(Err(e)) => {
+                        // A panicking/failing migration is not fatal to the
+                        // update — the artifact is dropped (rebuild on
+                        // demand) and the failure counts toward quarantine
+                        // under the new epoch so a doomed kernel stage
+                        // cannot retry unboundedly.
+                        if Self::counts_toward_quarantine(&e) {
+                            self.quarantine
+                                .record_failure(&(id, new_epoch, key.2.clone()), &e.to_string());
+                        }
+                        info.dropped += 1;
+                    }
+                    None => info.dropped += 1,
                 }
             }
         });
@@ -639,6 +908,9 @@ impl Engine {
         self.integrators.remove_if(|k| k.0 == id && k.1 < new_epoch);
         self.structures.remove_if(|k| k.0 == id && k.1 < new_epoch);
         self.pjrt_preps.remove_if(|k| k.0 == id && k.1 < new_epoch);
+        // New geometry gets a fresh start: retire quarantine records of
+        // older epochs (the documented hard-quarantine recovery path).
+        self.quarantine.sweep_below_epoch(id, new_epoch);
         // Orphan guard, mirroring `prepared()`'s post-insert check: if the
         // cloud was unregistered while the migration loop ran, its purge
         // may have raced our re-inserts — drop them so nothing derived
@@ -683,6 +955,7 @@ impl Engine {
     }
 
     fn purge_cloud_artifacts(&self, id: u64) -> usize {
+        self.quarantine.purge_cloud(id);
         self.integrators.remove_if(|k| k.0 == id)
             + self.structures.remove_if(|k| k.0 == id)
             + self.pjrt_preps.remove_if(|k| k.0 == id)
@@ -716,7 +989,14 @@ impl Engine {
     /// Checks a workspace out of the pool; returns it with its current
     /// allocation count so check-in can fold in only the delta.
     fn take_workspace(&self) -> (Workspace, usize) {
-        let ws = self.workspaces.lock().unwrap().pop().unwrap_or_default();
+        // Poison recovery: the pool is a plain Vec push/pop — a panic
+        // elsewhere while the lock was held cannot leave it inconsistent.
+        let ws = self
+            .workspaces
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .pop()
+            .unwrap_or_default();
         let baseline = ws.allocations();
         (ws, baseline)
     }
@@ -724,7 +1004,7 @@ impl Engine {
     fn put_workspace(&self, ws: Workspace, baseline: usize) {
         self.ws_allocations
             .fetch_add(ws.allocations() - baseline, Ordering::Relaxed);
-        let mut pool = self.workspaces.lock().unwrap();
+        let mut pool = self.workspaces.lock().unwrap_or_else(|p| p.into_inner());
         if pool.len() < MAX_POOLED_WORKSPACES {
             pool.push(ws);
         }
@@ -743,21 +1023,70 @@ impl Engine {
         id: u64,
         entry: &CloudEntry,
         spec: &IntegratorSpec,
+        deadline: Option<Instant>,
     ) -> Result<(Arc<dyn FieldIntegrator>, bool, bool, f64)> {
         let key = (id, entry.scene.epoch, spec.cache_key()?);
         if let Some(e) = self.integrators.get(&key) {
             return Ok((e.integrator.clone(), true, false, 0.0));
         }
+        // Cache miss ⇒ this request pays a prepare. The degradation gates
+        // run first, cheapest-refusal order: quarantine admission (typed
+        // error while a failing key backs off), load shedding (hits are
+        // always served — shedding degrades, it never blacks out), then
+        // the deadline.
+        self.quarantine.admit(&key)?;
+        let skey = spec.structural_key().map(|sk| (id, entry.scene.epoch, sk));
+        if let Some(sk) = &skey {
+            if sk.2 != key.2 {
+                self.quarantine.admit(sk)?;
+            }
+        }
+        let inflight = self.inflight_prepares.fetch_add(1, Ordering::Relaxed);
+        let _inflight = GaugeGuard(&self.inflight_prepares);
+        if inflight >= self.cfg.max_inflight_prepares
+            || self.integrators.weight_bytes() >= self.cfg.shed_resident_bytes
+        {
+            self.sheds.fetch_add(1, Ordering::Relaxed);
+            let reason = if inflight >= self.cfg.max_inflight_prepares {
+                format!("{} prepares in flight (shed mark {})", inflight + 1,
+                    self.cfg.max_inflight_prepares)
+            } else {
+                format!("resident bytes {} over shed mark {}",
+                    self.integrators.weight_bytes(), self.cfg.shed_resident_bytes)
+            };
+            return Err(GfiError::Overloaded {
+                reason,
+                retry_after_ms: SHED_RETRY_HINT_MS,
+            }
+            .into());
+        }
+        self.check_deadline(deadline, "structure")?;
+        let backend = spec.name();
         let (built, dt) = crate::util::timer::timed(
-            || -> Result<(Box<dyn FieldIntegrator>, bool)> {
-                let (structure, shared) = match spec.structural_key() {
+            || -> std::result::Result<(Box<dyn FieldIntegrator>, bool), GfiError> {
+                let (structure, shared) = match &skey {
                     None => (None, false),
-                    Some(sk) => {
-                        let skey = (id, entry.scene.epoch, sk);
-                        match self.structures.get(&skey) {
+                    Some(skey) => {
+                        let mut cached = self.structures.get(skey);
+                        if cached.is_some()
+                            && matches!(
+                                self.faults.fire(FaultSite::StructureHit, backend),
+                                Some(FaultAction::Corrupt)
+                            )
+                        {
+                            // Injected artifact corruption: the cached
+                            // structure is treated as failing validation —
+                            // dropped and rebuilt from the scene, so the
+                            // result is identical to a cold prepare.
+                            self.structures.remove(skey);
+                            cached = None;
+                        }
+                        match cached {
                             Some(st) => (Some(st), true),
                             None => {
-                                let st = prepare_structure(&entry.scene, spec)?;
+                                let st = self.guarded(backend, FaultSite::Prepare, || {
+                                    prepare_structure(&entry.scene, spec)
+                                })?;
                                 if let Some(st) = &st {
                                     let w = st.resident_bytes() as u64;
                                     let _ =
@@ -765,7 +1094,7 @@ impl Engine {
                                     // Same unregister/stale-epoch orphan
                                     // guard as the integrator insert below.
                                     if self.cloud_is_stale(id, entry.scene.epoch) {
-                                        self.structures.remove(&skey);
+                                        self.structures.remove(skey);
                                     }
                                 }
                                 (st, false)
@@ -773,10 +1102,27 @@ impl Engine {
                         }
                     }
                 };
-                Ok((finish(&entry.scene, spec, structure)?, shared))
+                self.check_deadline(deadline, "kernel")?;
+                let built = self
+                    .guarded(backend, FaultSite::Finish, || finish(&entry.scene, spec, structure))?;
+                Ok((built, shared))
             },
         );
-        let (built, structure_shared) = built?;
+        let (built, structure_shared) = match built {
+            Ok(v) => v,
+            Err(e) => {
+                if Self::counts_toward_quarantine(&e) {
+                    self.quarantine.record_failure(&key, &e.to_string());
+                }
+                return Err(e.into());
+            }
+        };
+        // A successful build clears any backoff record for the key and
+        // its structural family.
+        self.quarantine.clear(&key);
+        if let Some(sk) = &skey {
+            self.quarantine.clear(sk);
+        }
         let built: Arc<dyn FieldIntegrator> = Arc::from(built);
         let weight = built.resident_bytes() as u64;
         let cached =
@@ -812,8 +1158,19 @@ impl Engine {
         spec: &IntegratorSpec,
         field: &Mat,
     ) -> Result<(Mat, IntegrateInfo)> {
+        self.integrate_opts(id, spec, field, &RequestOpts::default())
+    }
+
+    /// [`Engine::integrate`] with per-request options (deadline budget).
+    pub fn integrate_opts(
+        &self,
+        id: u64,
+        spec: &IntegratorSpec,
+        field: &Mat,
+        opts: &RequestOpts,
+    ) -> Result<(Mat, IntegrateInfo)> {
         let mut out = Mat::zeros(0, 0);
-        let info = self.integrate_into(id, spec, field, &mut out)?;
+        let info = self.integrate_into_opts(id, spec, field, &mut out, opts)?;
         Ok((out, info))
     }
 
@@ -828,6 +1185,20 @@ impl Engine {
         field: &Mat,
         out: &mut Mat,
     ) -> Result<IntegrateInfo> {
+        self.integrate_into_opts(id, spec, field, out, &RequestOpts::default())
+    }
+
+    /// [`Engine::integrate_into`] with per-request options. The deadline
+    /// is checked before each serving stage (structure / kernel / apply);
+    /// see [`RequestOpts`].
+    pub fn integrate_into_opts(
+        &self,
+        id: u64,
+        spec: &IntegratorSpec,
+        field: &Mat,
+        out: &mut Mat,
+        opts: &RequestOpts,
+    ) -> Result<IntegrateInfo> {
         let entry = self.cloud(id)?;
         let n = entry.scene.len();
         if field.rows != n {
@@ -840,6 +1211,10 @@ impl Engine {
         // otherwise skip validation and panic on e.g. a point-less scene).
         if let (IntegratorSpec::RfdPjrt(cfg), Some(rt)) = (spec, &self.runtime) {
             validate_spec(&entry.scene, spec)?;
+            // The PJRT route shares the deadline/injection surface (the
+            // dispatcher has its own error path, so no catch_unwind).
+            self.check_deadline(opts.deadline, "apply")?;
+            fault_point!(self.faults, FaultSite::Apply, spec.name());
             let key = (id, entry.scene.epoch, spec.cache_key()?);
             let cached = self.pjrt_preps.get(&key);
             let (prep, cache_hit, prep_secs) = if let Some(p) = cached {
@@ -886,11 +1261,20 @@ impl Engine {
 
         // Pure-Rust integrator route (with cache).
         let (integrator, cache_hit, structure_shared, prep_secs) =
-            self.prepared(id, &entry, spec)?;
+            self.prepared(id, &entry, spec, opts.deadline)?;
+        self.check_deadline(opts.deadline, "apply")?;
         let (mut ws, ws_baseline) = self.take_workspace();
-        let (_, apply_secs) =
-            crate::util::timer::timed(|| integrator.apply_into(field, out, &mut ws));
+        let (applied, apply_secs) = crate::util::timer::timed(|| {
+            self.guarded(spec.name(), FaultSite::Apply, || {
+                integrator.apply_into(field, out, &mut ws);
+                Ok(())
+            })
+        });
         self.put_workspace(ws, ws_baseline);
+        if let Err(e) = applied {
+            self.evict_on_serving_failure(id, entry.scene.epoch, spec, &e);
+            return Err(e.into());
+        }
         self.metrics.record(spec.name(), apply_secs, field.rows);
         Ok(IntegrateInfo {
             backend: spec.name().into(),
@@ -900,6 +1284,21 @@ impl Engine {
             structure_shared,
             used_pjrt: false,
         })
+    }
+
+    /// A panicking apply evicts its cached entry and records a quarantine
+    /// failure: a backend that panics on *this* prepared state must not
+    /// keep serving it from cache. (Deadline misses and deterministic
+    /// errors leave the cache alone.)
+    fn evict_on_serving_failure(&self, id: u64, epoch: u64, spec: &IntegratorSpec, e: &GfiError) {
+        if !Self::counts_toward_quarantine(e) {
+            return;
+        }
+        if let Ok(ck) = spec.cache_key() {
+            let key = (id, epoch, ck);
+            self.integrators.remove(&key);
+            self.quarantine.record_failure(&key, &e.to_string());
+        }
     }
 
     /// Multi-field request: one cache lookup and one workspace for the
@@ -912,6 +1311,17 @@ impl Engine {
         spec: &IntegratorSpec,
         fields: &[Mat],
     ) -> Result<(Vec<Mat>, IntegrateInfo)> {
+        self.integrate_batch_opts(id, spec, fields, &RequestOpts::default())
+    }
+
+    /// [`Engine::integrate_batch`] with per-request options (deadline).
+    pub fn integrate_batch_opts(
+        &self,
+        id: u64,
+        spec: &IntegratorSpec,
+        fields: &[Mat],
+        opts: &RequestOpts,
+    ) -> Result<(Vec<Mat>, IntegrateInfo)> {
         if fields.is_empty() {
             bail!("integrate_batch needs at least one field");
         }
@@ -921,7 +1331,7 @@ impl Engine {
             let mut outs = Vec::with_capacity(fields.len());
             let mut info = None;
             for f in fields {
-                let (o, i) = self.integrate(id, spec, f)?;
+                let (o, i) = self.integrate_opts(id, spec, f, opts)?;
                 outs.push(o);
                 info = Some(i);
             }
@@ -937,12 +1347,21 @@ impl Engine {
             }
         }
         let (integrator, cache_hit, structure_shared, prep_secs) =
-            self.prepared(id, &entry, spec)?;
+            self.prepared(id, &entry, spec, opts.deadline)?;
+        self.check_deadline(opts.deadline, "apply")?;
         let mut outs: Vec<Mat> = fields.iter().map(|f| Mat::zeros(n, f.cols)).collect();
         let (mut ws, ws_baseline) = self.take_workspace();
-        let (_, apply_secs) =
-            crate::util::timer::timed(|| integrator.apply_batch(fields, &mut outs, &mut ws));
+        let (applied, apply_secs) = crate::util::timer::timed(|| {
+            self.guarded(spec.name(), FaultSite::Apply, || {
+                integrator.apply_batch(fields, &mut outs, &mut ws);
+                Ok(())
+            })
+        });
         self.put_workspace(ws, ws_baseline);
+        if let Err(e) = applied {
+            self.evict_on_serving_failure(id, entry.scene.epoch, spec, &e);
+            return Err(e.into());
+        }
         let rows: usize = fields.iter().map(|f| f.rows).sum();
         self.metrics.record(spec.name(), apply_secs, rows);
         Ok((
@@ -1347,5 +1766,125 @@ mod tests {
         let stats = eng.cache_stats();
         assert!(stats.integrators.evictions >= 4, "{stats:?}");
         assert!(stats.integrators.entries <= 2);
+    }
+
+    fn gfi(err: &crate::util::error::Error) -> &GfiError {
+        err.downcast_ref::<GfiError>().expect("typed GfiError")
+    }
+
+    #[test]
+    fn injected_prepare_panic_is_isolated_quarantined_and_recovers() {
+        let plan = FaultPlan::parse("site=prepare,backend=sf,kind=panic,times=1").unwrap();
+        let eng = EngineConfig::default()
+            .fault_plan(plan)
+            .quarantine_backoff_ms(1)
+            .build();
+        let id = eng.register_mesh(icosphere(2), "sphere");
+        let n = eng.cloud(id).unwrap().scene.len();
+        let field = rand_field(n, 2, 21);
+        let spec = IntegratorSpec::Sf(SfConfig::default());
+
+        let err = eng.integrate(id, &spec, &field).unwrap_err();
+        match gfi(&err) {
+            GfiError::Internal { detail } => {
+                assert!(detail.contains("panic isolated"), "{detail}")
+            }
+            other => panic!("expected Internal, got {other:?}"),
+        }
+        assert!(gfi(&err).retryable());
+        let rs = eng.robustness_stats();
+        assert_eq!((rs.faults_injected, rs.panics_caught), (1, 1), "{rs:?}");
+        assert_eq!(rs.quarantined_live, 1, "failed key must be quarantined");
+
+        // The injected fault is exhausted (times=1): after the backoff
+        // window the retry rebuilds, clears the record, and the result is
+        // bitwise-identical to an unfaulted engine's.
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let (out, info) = eng.integrate(id, &spec, &field).unwrap();
+        assert!(!info.cache_hit);
+        assert_eq!(eng.robustness_stats().quarantined_live, 0);
+        let clean = engine();
+        let id2 = clean.register_mesh(icosphere(2), "sphere");
+        let (expect, _) = clean.integrate(id2, &spec, &field).unwrap();
+        assert_eq!(out.data, expect.data, "post-fault result diverged");
+    }
+
+    #[test]
+    fn nan_frame_quarantines_rfd_and_good_frame_recovers() {
+        let eng = EngineConfig::default().quarantine_backoff_ms(0).build();
+        let raw = crate::pointcloud::random_cloud(50, &mut Rng::new(7));
+        let id = eng.register_cloud(raw.clone(), "scan");
+        let spec = IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() });
+        let field = rand_field(50, 2, 22);
+        let (baseline, _) = eng.integrate(id, &spec, &field).unwrap();
+
+        // A NaN frame: the refresh fails typed, the artifact is dropped
+        // (never NaN-poisoned), and the family is quarantined under the
+        // new epoch.
+        let mut bad = raw.clone();
+        bad.points[3] = [f64::NAN, 0.4, 0.4];
+        let info = eng.update_cloud(id, bad, &UpdateOpts::default()).unwrap();
+        assert_eq!(info.refreshed, 0, "{info:?}");
+        assert!(eng.robustness_stats().quarantines >= 1);
+        // Every serve against the poisoned scene fails typed — backoff
+        // admissions rebuild, fail `Numerical`, and re-quarantine; no
+        // request ever sees a NaN result.
+        for _ in 0..5 {
+            let err = eng.integrate(id, &spec, &field).unwrap_err();
+            assert!(
+                matches!(
+                    gfi(&err),
+                    GfiError::Numerical { .. }
+                        | GfiError::Quarantined { .. }
+                        | GfiError::Internal { .. }
+                ),
+                "expected typed failure, got {err}"
+            );
+        }
+        assert!(eng.robustness_stats().quarantined_live >= 1);
+
+        // The next good frame bumps the epoch, sweeps the quarantine, and
+        // serving recovers bitwise.
+        eng.update_cloud(id, raw, &UpdateOpts::default()).unwrap();
+        let (out, _) = eng.integrate(id, &spec, &field).unwrap();
+        assert_eq!(eng.robustness_stats().quarantined_live, 0, "epoch sweep");
+        assert_eq!(out.data, baseline.data, "recovered result diverged");
+    }
+
+    #[test]
+    fn shed_and_deadline_gates_return_typed_retryable_errors() {
+        // Resident-byte shed mark of 1: the first prepare is admitted
+        // (cache empty), caches, and pushes the weight over the mark —
+        // new prepares shed, cache hits still serve.
+        let eng = EngineConfig::default().shed_resident_bytes(1).build();
+        let id = eng.register_mesh(icosphere(1), "s");
+        let n = eng.cloud(id).unwrap().scene.len();
+        let field = rand_field(n, 1, 23);
+        let hot = IntegratorSpec::Rfd(RfdConfig { num_features: 4, ..Default::default() });
+        eng.integrate(id, &hot, &field).unwrap();
+        let cold = IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() });
+        let err = eng.integrate(id, &cold, &field).unwrap_err();
+        match gfi(&err) {
+            GfiError::Overloaded { retry_after_ms, .. } => {
+                assert_eq!(*retry_after_ms, SHED_RETRY_HINT_MS)
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert_eq!(gfi(&err).retry_after_ms(), Some(SHED_RETRY_HINT_MS));
+        let (_, info) = eng.integrate(id, &hot, &field).unwrap();
+        assert!(info.cache_hit, "shedding must not refuse cache hits");
+        assert_eq!(eng.robustness_stats().sheds, 1);
+
+        // An already-expired deadline fails typed before the apply stage
+        // even on a warm cache.
+        let err = eng
+            .integrate_opts(id, &hot, &field, &RequestOpts::deadline_ms(0))
+            .unwrap_err();
+        match gfi(&err) {
+            GfiError::DeadlineExceeded { stage } => assert_eq!(*stage, "apply"),
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        assert!(gfi(&err).retryable());
+        assert_eq!(eng.robustness_stats().deadline_hits, 1);
     }
 }

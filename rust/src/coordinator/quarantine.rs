@@ -1,0 +1,231 @@
+//! Typed quarantine for failing cache entries.
+//!
+//! When a prepare/refresh/apply for a `(cloud, epoch, key)` fails with a
+//! *serving* failure (a caught panic or a numerical blow-up — never a
+//! deterministic spec error), the engine evicts the entry and records the
+//! failure here. Subsequent requests for the key are gated by
+//! [`QuarantineRegistry::admit`]:
+//!
+//! 1. Under `max_attempts` failures: rebuilds are admitted after an
+//!    exponential backoff (`backoff_base_ms · 2^(failures−1)`, capped);
+//!    inside the window the caller gets a typed retryable
+//!    [`GfiError::Quarantined`] with a `retry_after_ms` hint.
+//! 2. At `max_attempts`: the key is *hard* quarantined — typed error with
+//!    no retry hint — until the cloud's next epoch (an `update_cloud`
+//!    sweeps entries of older epochs) or the cloud is unregistered.
+//!
+//! A successful rebuild clears the record. This replaces the seed's two
+//! failure modes — NaN fail-poisoning (serve garbage forever) and silent
+//! rebuild storms (retry a doomed prepare on every request) — with a
+//! bounded, observable lifecycle.
+
+use crate::integrators::GfiError;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// The engine-wide artifact key: `(cloud id, epoch, cache/structural key)`.
+pub type QuarantineKey = (u64, u64, String);
+
+/// Retry policy knobs (engine config `quarantine_attempts` /
+/// `quarantine_backoff_ms`).
+#[derive(Clone, Copy, Debug)]
+pub struct QuarantinePolicy {
+    /// Failures before the key is hard-quarantined until the next epoch.
+    pub max_attempts: u32,
+    /// Base of the exponential rebuild backoff, in milliseconds.
+    pub backoff_base_ms: u64,
+}
+
+impl Default for QuarantinePolicy {
+    fn default() -> Self {
+        QuarantinePolicy { max_attempts: 3, backoff_base_ms: 50 }
+    }
+}
+
+#[derive(Debug)]
+struct Record {
+    failures: u32,
+    last_failure: Instant,
+    reason: String,
+}
+
+/// Registry of failing keys. All locking recovers from poisoning
+/// (`PoisonError::into_inner`) — a panic elsewhere must not brick the
+/// quarantine gate itself.
+pub struct QuarantineRegistry {
+    policy: QuarantinePolicy,
+    entries: Mutex<HashMap<QuarantineKey, Record>>,
+    /// Total failures ever recorded (the `quarantines` stats counter).
+    total: AtomicU64,
+}
+
+impl QuarantineRegistry {
+    pub fn new(policy: QuarantinePolicy) -> Self {
+        QuarantineRegistry {
+            policy,
+            entries: Mutex::new(HashMap::new()),
+            total: AtomicU64::new(0),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, HashMap<QuarantineKey, Record>> {
+        self.entries.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn backoff(&self, failures: u32) -> Duration {
+        // base · 2^(failures−1), capped at 2^10 · base (~51s at 50ms).
+        let shift = failures.saturating_sub(1).min(10);
+        Duration::from_millis(self.policy.backoff_base_ms.saturating_mul(1 << shift))
+    }
+
+    /// Gate before a rebuild attempt for `key`. `Ok` admits the attempt;
+    /// `Err` is the typed [`GfiError::Quarantined`] the request returns.
+    pub fn admit(&self, key: &QuarantineKey) -> Result<(), GfiError> {
+        let map = self.lock();
+        let rec = match map.get(key) {
+            None => return Ok(()),
+            Some(r) => r,
+        };
+        let display = format!("{}@{}:{}", key.0, key.1, key.2);
+        if rec.failures >= self.policy.max_attempts {
+            return Err(GfiError::Quarantined {
+                key: display,
+                failures: rec.failures,
+                retry_after_ms: None,
+            });
+        }
+        let window = self.backoff(rec.failures);
+        let elapsed = rec.last_failure.elapsed();
+        if elapsed < window {
+            let remaining = window - elapsed;
+            return Err(GfiError::Quarantined {
+                key: display,
+                failures: rec.failures,
+                retry_after_ms: Some(remaining.as_millis() as u64 + 1),
+            });
+        }
+        Ok(())
+    }
+
+    /// Records a serving failure for `key` (after eviction). Returns the
+    /// updated failure count.
+    pub fn record_failure(&self, key: &QuarantineKey, reason: &str) -> u32 {
+        self.total.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.lock();
+        let rec = map.entry(key.clone()).or_insert(Record {
+            failures: 0,
+            last_failure: Instant::now(),
+            reason: String::new(),
+        });
+        rec.failures += 1;
+        rec.last_failure = Instant::now();
+        rec.reason = reason.to_string();
+        rec.failures
+    }
+
+    /// Clears the record after a successful rebuild.
+    pub fn clear(&self, key: &QuarantineKey) {
+        self.lock().remove(key);
+    }
+
+    /// Epoch sweep: an `update_cloud` retires every record of `cloud`
+    /// below `epoch` — the new geometry gets a fresh start.
+    pub fn sweep_below_epoch(&self, cloud: u64, epoch: u64) {
+        self.lock().retain(|k, _| !(k.0 == cloud && k.1 < epoch));
+    }
+
+    /// Drops every record of `cloud` (unregister).
+    pub fn purge_cloud(&self, cloud: u64) {
+        self.lock().retain(|k, _| k.0 != cloud);
+    }
+
+    /// Number of currently-quarantined keys (failure records present).
+    pub fn live(&self) -> usize {
+        self.lock().len()
+    }
+
+    /// Total failures ever recorded.
+    pub fn total_failures(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Last recorded reason for `key`, if quarantined (health/debugging).
+    pub fn reason(&self, key: &QuarantineKey) -> Option<String> {
+        self.lock().get(key).map(|r| r.reason.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(s: &str) -> QuarantineKey {
+        (1, 0, s.to_string())
+    }
+
+    #[test]
+    fn lifecycle_backoff_then_hard_quarantine_then_epoch_sweep() {
+        let q = QuarantineRegistry::new(QuarantinePolicy {
+            max_attempts: 2,
+            backoff_base_ms: 20,
+        });
+        let k = key("rfd|…");
+        assert!(q.admit(&k).is_ok(), "unknown keys are admitted");
+
+        // Failure 1 → inside the backoff window → typed hint.
+        q.record_failure(&k, "injected panic");
+        match q.admit(&k) {
+            Err(GfiError::Quarantined { failures: 1, retry_after_ms: Some(ms), .. }) => {
+                assert!(ms <= 21, "hint {ms}ms should be within the 20ms window");
+            }
+            other => panic!("expected soft quarantine, got {other:?}"),
+        }
+        // After the window the rebuild is admitted again.
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(q.admit(&k).is_ok());
+
+        // Failure 2 hits max_attempts → hard quarantine, no hint, and
+        // waiting does not help.
+        q.record_failure(&k, "injected panic");
+        std::thread::sleep(Duration::from_millis(45));
+        match q.admit(&k) {
+            Err(GfiError::Quarantined { failures: 2, retry_after_ms: None, .. }) => {}
+            other => panic!("expected hard quarantine, got {other:?}"),
+        }
+        assert_eq!(q.reason(&k).as_deref(), Some("injected panic"));
+        assert_eq!((q.live(), q.total_failures()), (1, 2));
+
+        // The next epoch sweeps the record; other clouds are untouched.
+        q.record_failure(&(2, 0, "other".into()), "x");
+        q.sweep_below_epoch(1, 1);
+        assert!(q.admit(&k).is_ok());
+        assert_eq!(q.live(), 1);
+        q.purge_cloud(2);
+        assert_eq!(q.live(), 0);
+        assert_eq!(q.total_failures(), 3, "total is monotonic across sweeps");
+    }
+
+    #[test]
+    fn success_clears_the_record() {
+        let q = QuarantineRegistry::new(QuarantinePolicy::default());
+        let k = key("sf|…");
+        q.record_failure(&k, "boom");
+        q.clear(&k);
+        assert!(q.admit(&k).is_ok());
+        assert_eq!(q.live(), 0);
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_and_caps() {
+        let q = QuarantineRegistry::new(QuarantinePolicy {
+            max_attempts: 100,
+            backoff_base_ms: 10,
+        });
+        assert_eq!(q.backoff(1), Duration::from_millis(10));
+        assert_eq!(q.backoff(2), Duration::from_millis(20));
+        assert_eq!(q.backoff(5), Duration::from_millis(160));
+        assert_eq!(q.backoff(50), Duration::from_millis(10 * 1024), "capped at 2^10");
+    }
+}

@@ -12,9 +12,18 @@
 //! iteration instead of accumulating until shutdown, and
 //! [`ServerConfig::max_connections`] caps concurrency — excess clients
 //! wait in the TCP accept backlog.
+//!
+//! Fault tolerance (docs/ARCHITECTURE.md, "Failure model"): socket
+//! read/write timeouts disconnect silent or half-writing clients so a
+//! stalled peer cannot pin a connection slot; every request is handled
+//! behind an unwind guard (one poisoned request can never kill a worker
+//! thread); failures cross the wire as typed error objects
+//! (`code`/`retryable`/`retry_after_ms`); and the `health` op reports
+//! the engine's degradation state for load balancers.
 
-use crate::coordinator::{metrics, Engine, UpdateOpts};
-use crate::integrators::IntegratorSpec;
+use crate::coordinator::faults::{FaultAction, FaultSite};
+use crate::coordinator::{metrics, panic_message, Engine, RequestOpts, UpdateOpts};
+use crate::integrators::{GfiError, IntegratorSpec};
 use crate::linalg::Mat;
 use crate::mesh;
 use crate::util::error::{anyhow, Result};
@@ -23,6 +32,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Connection-handling limits for [`serve_with`].
 #[derive(Clone, Debug)]
@@ -30,11 +40,29 @@ pub struct ServerConfig {
     /// Maximum concurrent connection threads; further clients queue in
     /// the TCP accept backlog until a slot frees up.
     pub max_connections: usize,
+    /// Socket read timeout in milliseconds: a client that stays silent —
+    /// or never finishes a line — for this long is disconnected, freeing
+    /// its connection slot for the accept backlog. `0` disables the
+    /// timeout (a never-writing client then holds its slot forever).
+    pub read_timeout_ms: u64,
+    /// Socket write timeout in milliseconds (`0` = none): a client that
+    /// stops draining responses is disconnected rather than pinning a
+    /// worker on a full send buffer.
+    pub write_timeout_ms: u64,
+    /// Default per-request deadline budget in milliseconds applied to
+    /// `integrate` requests that don't carry their own `deadline_ms`
+    /// field (`0` = no default; see [`RequestOpts`]).
+    pub request_deadline_ms: u64,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_connections: 64 }
+        ServerConfig {
+            max_connections: 64,
+            read_timeout_ms: 30_000,
+            write_timeout_ms: 10_000,
+            request_deadline_ms: 0,
+        }
     }
 }
 
@@ -52,6 +80,8 @@ struct ServerShared {
     /// short-lived connections is the observable proof that reaping
     /// works.
     worker_backlog: AtomicUsize,
+    /// [`ServerConfig::request_deadline_ms`], shared with the handlers.
+    default_deadline_ms: u64,
 }
 
 /// Runs the server with default limits until a `shutdown` op arrives.
@@ -80,6 +110,7 @@ pub fn serve_with(
         connections_total: AtomicU64::new(0),
         connections_finished: AtomicU64::new(0),
         worker_backlog: AtomicUsize::new(0),
+        default_deadline_ms: cfg.request_deadline_ms,
     });
     let max_conns = cfg.max_connections.max(1);
     let mut workers: Vec<(Arc<AtomicBool>, std::thread::JoinHandle<()>)> = Vec::new();
@@ -93,6 +124,24 @@ pub fn serve_with(
         }
         match listener.accept() {
             Ok((stream, _)) => {
+                // Accept-site chaos (`site=accept`): `drop` abandons the
+                // connection before a worker is spawned — the client sees
+                // a clean EOF and reconnects; `delay` stalls the accept
+                // loop. Both exercise client retry paths.
+                if let Some(act) = engine.faults().fire(FaultSite::Accept, "server") {
+                    match act {
+                        FaultAction::Delay(d) => std::thread::sleep(d),
+                        _ => continue,
+                    }
+                }
+                if cfg.read_timeout_ms > 0 {
+                    let _ = stream
+                        .set_read_timeout(Some(Duration::from_millis(cfg.read_timeout_ms)));
+                }
+                if cfg.write_timeout_ms > 0 {
+                    let _ = stream
+                        .set_write_timeout(Some(Duration::from_millis(cfg.write_timeout_ms)));
+                }
                 shared.connections_total.fetch_add(1, Ordering::Relaxed);
                 let eng = engine.clone();
                 let sh = shared.clone();
@@ -141,16 +190,42 @@ fn handle_client(engine: Arc<Engine>, stream: TcpStream, shared: &ServerShared) 
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
+        // A read error — including the socket timeout firing against a
+        // silent or half-writing client — closes the connection, which
+        // frees its `max_connections` slot for the accept backlog.
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
-        let response = match handle_line(&engine, &line, shared) {
-            Ok(j) => j,
-            Err(e) => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::Str(format!("{e:#}"))),
-            ]),
+        // Read-site chaos (`site=read`): `drop` severs the connection
+        // mid-stream (the client sees EOF after a request it already
+        // sent); `delay` stalls the read loop.
+        if let Some(act) = engine.faults().fire(FaultSite::Read, "server") {
+            match act {
+                FaultAction::Delay(d) => std::thread::sleep(d),
+                _ => return Ok(()),
+            }
+        }
+        // Last-resort isolation: the engine catches panics at its own
+        // stage boundaries; this unwind guard additionally covers request
+        // parsing and response assembly, so no single request can kill a
+        // worker thread.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            handle_line(&engine, &line, shared)
+        }));
+        let response = match outcome {
+            Ok(Ok(j)) => j,
+            Ok(Err(e)) => error_json(&e),
+            Err(payload) => {
+                let e: crate::util::error::Error = GfiError::Internal {
+                    detail: format!(
+                        "panic isolated at server/request: {}",
+                        panic_message(&*payload)
+                    ),
+                }
+                .into();
+                error_json(&e)
+            }
         };
         writeln!(writer, "{response}")?;
         if shared.stop.load(Ordering::Relaxed) {
@@ -158,6 +233,45 @@ fn handle_client(engine: Arc<Engine>, stream: TcpStream, shared: &ServerShared) 
         }
     }
     Ok(())
+}
+
+/// The wire error form (docs/PROTOCOL.md): every failure carries a
+/// stable `code` and a `retryable` flag; degradation errors add a
+/// `retry_after_ms` client backoff hint. Untyped errors (bad JSON,
+/// unknown ops/ids) report `code: "error"`, not retryable.
+fn error_json(e: &crate::util::error::Error) -> Json {
+    let mut fields = vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(format!("{e:#}"))),
+    ];
+    match e.downcast_ref::<GfiError>() {
+        Some(g) => {
+            fields.push(("code", Json::Str(g.code().into())));
+            fields.push(("retryable", Json::Bool(g.retryable())));
+            if let Some(ms) = g.retry_after_ms() {
+                fields.push(("retry_after_ms", Json::Num(ms as f64)));
+            }
+        }
+        None => {
+            fields.push(("code", Json::Str("error".into())));
+            fields.push(("retryable", Json::Bool(false)));
+        }
+    }
+    Json::obj(fields)
+}
+
+/// The `stats`/`health` robustness block (engine fault counters).
+fn robustness_json(engine: &Engine) -> Json {
+    let rs = engine.robustness_stats();
+    Json::obj(vec![
+        ("faults_injected", Json::Num(rs.faults_injected as f64)),
+        ("panics_caught", Json::Num(rs.panics_caught as f64)),
+        ("quarantines", Json::Num(rs.quarantines as f64)),
+        ("quarantined_live", Json::Num(rs.quarantined_live as f64)),
+        ("sheds", Json::Num(rs.sheds as f64)),
+        ("deadline_hits", Json::Num(rs.deadline_hits as f64)),
+        ("in_flight_prepares", Json::Num(rs.in_flight_prepares as f64)),
+    ])
 }
 
 fn handle_line(engine: &Engine, line: &str, shared: &ServerShared) -> Result<Json> {
@@ -219,7 +333,21 @@ fn handle_line(engine: &Engine, line: &str, shared: &ServerShared) -> Result<Jso
                 return Err(anyhow!("field length {} not divisible by d={d}", flat.len()));
             }
             let field = Mat::from_vec(flat.len() / d, d, flat);
-            let (out, info) = engine.integrate(cloud, &spec, &field)?;
+            // Per-request deadline budget: the request's own
+            // `deadline_ms` wins; otherwise the server default applies
+            // (0 = none). Checked between serving stages; a miss is the
+            // typed retryable `deadline_exceeded` error.
+            let deadline_ms = req
+                .get("deadline_ms")
+                .and_then(Json::as_usize)
+                .map(|v| v as u64)
+                .unwrap_or(shared.default_deadline_ms);
+            let opts = if deadline_ms > 0 {
+                RequestOpts::deadline_ms(deadline_ms)
+            } else {
+                RequestOpts::default()
+            };
+            let (out, info) = engine.integrate_opts(cloud, &spec, &field, &opts)?;
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("result", Json::num_arr(&out.data)),
@@ -305,6 +433,32 @@ fn handle_line(engine: &Engine, line: &str, shared: &ServerShared) -> Result<Jso
         // `cache` includes the shared-structure store of the two-stage
         // prepare pipeline (`cache.structures`; its `hits` counter is the
         // share count — see docs/PROTOCOL.md).
+        // Liveness/degradation probe for load balancers: `status` is
+        // `"shedding"` while the load-shed gates refuse new prepares,
+        // `"degraded"` while any key is quarantined, `"ok"` otherwise.
+        // Always answers — a degraded engine still serves cache hits.
+        "health" => {
+            let rs = engine.robustness_stats();
+            let shedding = engine.is_shedding();
+            let status = if shedding {
+                "shedding"
+            } else if rs.quarantined_live > 0 {
+                "degraded"
+            } else {
+                "ok"
+            };
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("status", Json::Str(status.into())),
+                ("shedding", Json::Bool(shedding)),
+                ("robustness", robustness_json(engine)),
+                ("resident_bytes", Json::Num(engine.resident_bytes() as f64)),
+                (
+                    "worker_backlog",
+                    Json::Num(shared.worker_backlog.load(Ordering::Relaxed) as f64),
+                ),
+            ]))
+        }
         "stats" => Ok(Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("clouds", Json::Num(engine.cloud_count() as f64)),
@@ -312,6 +466,7 @@ fn handle_line(engine: &Engine, line: &str, shared: &ServerShared) -> Result<Jso
             ("backends", engine.metrics.to_json()),
             ("resident_bytes", Json::Num(engine.resident_bytes() as f64)),
             ("cache", metrics::caches_to_json(&engine.cache_stats())),
+            ("robustness", robustness_json(engine)),
             (
                 "server",
                 Json::obj(vec![
@@ -347,7 +502,13 @@ mod tests {
     fn spawn_server(
         cfg: ServerConfig,
     ) -> (Arc<Engine>, std::net::SocketAddr, std::thread::JoinHandle<()>) {
-        let engine = Arc::new(Engine::new(None));
+        spawn_engine_server(Arc::new(Engine::new(None)), cfg)
+    }
+
+    fn spawn_engine_server(
+        engine: Arc<Engine>,
+        cfg: ServerConfig,
+    ) -> (Arc<Engine>, std::net::SocketAddr, std::thread::JoinHandle<()>) {
         let (addr_tx, addr_rx) = std::sync::mpsc::channel();
         let eng2 = engine.clone();
         let server = std::thread::spawn(move || {
@@ -489,7 +650,8 @@ mod tests {
 
     #[test]
     fn short_lived_connections_are_reaped_not_accumulated() {
-        let (_, addr, server) = spawn_server(ServerConfig { max_connections: 4 });
+        let (_, addr, server) =
+            spawn_server(ServerConfig { max_connections: 4, ..Default::default() });
         // Many sequential short-lived clients, each one request then EOF.
         for _ in 0..12 {
             let mut stream = TcpStream::connect(addr).unwrap();
@@ -518,7 +680,8 @@ mod tests {
 
     #[test]
     fn connection_cap_queues_clients_without_dropping_them() {
-        let (_, addr, server) = spawn_server(ServerConfig { max_connections: 2 });
+        let (_, addr, server) =
+            spawn_server(ServerConfig { max_connections: 2, ..Default::default() });
         // 6 concurrent clients against a 2-thread cap: all must be
         // served (the backlog holds the rest).
         std::thread::scope(|s| {
@@ -540,6 +703,142 @@ mod tests {
         });
         let mut stream = TcpStream::connect(addr).unwrap();
         let mut reader = BufReader::new(stream.try_clone().unwrap());
+        send_line(&mut stream, &mut reader, r#"{"op":"shutdown"}"#);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn slow_client_is_timed_out_and_frees_its_connection_slot() {
+        // One connection slot, 150ms read timeout. Client A grabs the
+        // slot and half-writes a request (no newline, so the line never
+        // completes); client B queues in the accept backlog. B must be
+        // served once A is timed out, and A must see its connection
+        // closed — a stalled peer cannot pin the slot.
+        let (_, addr, server) = spawn_server(ServerConfig {
+            max_connections: 1,
+            read_timeout_ms: 150,
+            ..Default::default()
+        });
+        let mut slow = TcpStream::connect(addr).unwrap();
+        slow.write_all(br#"{"op":"#).unwrap();
+        slow.flush().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+
+        let t0 = std::time::Instant::now();
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let r = send_line(&mut stream, &mut reader, r#"{"op":"stats"}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(5),
+            "B waited {:?} for the slot", t0.elapsed()
+        );
+
+        // A was disconnected: finishing the line now reads EOF.
+        let _ = slow.write_all(b"\"stats\"}\n");
+        let mut resp = String::new();
+        let n = BufReader::new(slow).read_line(&mut resp).unwrap_or(0);
+        assert_eq!(n, 0, "timed-out client expected EOF, read {resp:?}");
+
+        send_line(&mut stream, &mut reader, r#"{"op":"shutdown"}"#);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn errors_cross_the_wire_typed_and_health_reports_degradation() {
+        use crate::coordinator::{faults::FaultPlan, EngineConfig};
+        // Engine with one injected prepare panic: the wire client sees a
+        // typed retryable `internal` error (worker thread survives), the
+        // key shows up quarantined in `health`, and the retry after the
+        // fault clears serves normally.
+        let plan = FaultPlan::parse("site=prepare,backend=sf,kind=panic,times=1").unwrap();
+        let engine = Arc::new(
+            EngineConfig::default().fault_plan(plan).quarantine_backoff_ms(1).build(),
+        );
+        let (_, addr, server) = spawn_engine_server(engine, ServerConfig::default());
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let field: String = (0..42).map(|i| i.to_string()).collect::<Vec<_>>().join(",");
+
+        send_line(&mut stream, &mut reader, r#"{"op":"register_mesh","kind":"icosphere","param":1}"#);
+        let integrate = format!(
+            r#"{{"op":"integrate","cloud":1,"backend":"sf","field":[{field}],"d":1,"threshold":16}}"#
+        );
+        let err = send_line(&mut stream, &mut reader, &integrate);
+        assert_eq!(err.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(err.get("code").and_then(Json::as_str), Some("internal"), "{err}");
+        assert_eq!(err.get("retryable"), Some(&Json::Bool(true)));
+
+        let health = send_line(&mut stream, &mut reader, r#"{"op":"health"}"#);
+        assert_eq!(health.get("status").and_then(Json::as_str), Some("degraded"), "{health}");
+        let rb = health.get("robustness").unwrap();
+        assert_eq!(rb.get("panics_caught").unwrap().as_usize(), Some(1));
+        assert_eq!(rb.get("quarantined_live").unwrap().as_usize(), Some(1));
+
+        // Fault exhausted (times=1): past the backoff the same request
+        // serves, and health returns to ok.
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let ok = send_line(&mut stream, &mut reader, &integrate);
+        assert_eq!(ok.get("ok"), Some(&Json::Bool(true)), "{ok}");
+        let health = send_line(&mut stream, &mut reader, r#"{"op":"health"}"#);
+        assert_eq!(health.get("status").and_then(Json::as_str), Some("ok"), "{health}");
+
+        // Untyped errors carry the fallback code and are not retryable.
+        let bad = send_line(&mut stream, &mut reader, r#"{"op":"nope"}"#);
+        assert_eq!(bad.get("code").and_then(Json::as_str), Some("error"));
+        assert_eq!(bad.get("retryable"), Some(&Json::Bool(false)));
+
+        send_line(&mut stream, &mut reader, r#"{"op":"shutdown"}"#);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn deadline_budget_crosses_the_wire() {
+        use crate::coordinator::{faults::FaultPlan, EngineConfig};
+        // A 60ms injected slow-stage delay inside the kernel stage, a
+        // 20ms server-default deadline: the apply-stage gate fires
+        // deterministically (the stage order is fixed), the prepare that
+        // *did* finish stays cached, and the retry — fault exhausted —
+        // hits the cache and serves inside the same budget.
+        let plan =
+            FaultPlan::parse("site=finish,backend=rfd,kind=delay,ms=60,times=1").unwrap();
+        let engine = Arc::new(EngineConfig::default().fault_plan(plan).build());
+        let (engine, addr, server) = spawn_engine_server(
+            engine,
+            ServerConfig { request_deadline_ms: 20, ..Default::default() },
+        );
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let field: String = (0..42).map(|i| i.to_string()).collect::<Vec<_>>().join(",");
+        send_line(&mut stream, &mut reader, r#"{"op":"register_mesh","kind":"icosphere","param":1}"#);
+        let integrate = format!(
+            r#"{{"op":"integrate","cloud":1,"backend":"rfd","field":[{field}],"d":1,"m":8}}"#
+        );
+        let err = send_line(&mut stream, &mut reader, &integrate);
+        assert_eq!(err.get("ok"), Some(&Json::Bool(false)), "{err}");
+        assert_eq!(
+            err.get("code").and_then(Json::as_str),
+            Some("deadline_exceeded"),
+            "{err}"
+        );
+        assert_eq!(err.get("retryable"), Some(&Json::Bool(true)));
+        assert_eq!(engine.robustness_stats().deadline_hits, 1);
+
+        let ok = send_line(&mut stream, &mut reader, &integrate);
+        assert_eq!(ok.get("ok"), Some(&Json::Bool(true)), "{ok}");
+        assert_eq!(
+            ok.get("cache_hit"),
+            Some(&Json::Bool(true)),
+            "work done before the deadline miss must stay cached"
+        );
+        // Per-request deadline_ms: 0 explicitly disables the default.
+        let unhurried = format!(
+            r#"{{"op":"integrate","cloud":1,"backend":"rfd","field":[{field}],"d":1,"m":8,"deadline_ms":0}}"#
+        );
+        assert_eq!(
+            send_line(&mut stream, &mut reader, &unhurried).get("ok"),
+            Some(&Json::Bool(true))
+        );
         send_line(&mut stream, &mut reader, r#"{"op":"shutdown"}"#);
         server.join().unwrap();
     }

@@ -248,6 +248,18 @@ impl RfDiffusion {
         let g = structure.b.t_matmul(&structure.a); // BᵀA, 2m×2m
         let m_core = woodbury_core(&g, cfg.lambda, cfg.ridge)?;
         let diag_scale = (-cfg.lambda * structure.delta).exp();
+        // Finiteness gate: non-finite points (or an extreme Λ) flow
+        // through fill_features → δ/core as NaN/∞ with no solver error.
+        // Fail typed here so neither prepare nor refresh can ever commit
+        // a NaN-serving integrator — the engine evicts + quarantines the
+        // entry instead of serving poisoned results.
+        if !diag_scale.is_finite() || m_core.data.iter().any(|x| !x.is_finite()) {
+            return Err(GfiError::Numerical {
+                detail: "RFD core solve produced non-finite values \
+                         (non-finite points or extreme Λδ)"
+                    .into(),
+            });
+        }
         Ok(RfDiffusion { cfg, structure, m_core, diag_scale })
     }
 
@@ -527,6 +539,32 @@ mod tests {
     fn cloud(n: usize, seed: u64) -> PointCloud {
         let mut rng = Rng::new(seed);
         random_cloud(n, &mut rng)
+    }
+
+    #[test]
+    fn refresh_against_nan_points_fails_typed_and_stays_atomic() {
+        // Regression for the NaN fail-poisoning path: a refresh against
+        // non-finite coordinates must return a typed error and leave the
+        // integrator bitwise-unchanged, never commit NaN core state.
+        let pc = cloud(40, 5);
+        let cfg = RfdConfig { num_features: 8, ..Default::default() };
+        let mut rf = RfDiffusion::try_new(&pc, cfg).unwrap();
+        let field = Mat::from_vec(40, 1, (0..40).map(|i| i as f64).collect());
+        let before = rf.apply(&field);
+        let mut bad = pc.clone();
+        bad.points[3] = [f64::NAN, 0.5, 0.5];
+        let err = rf.refresh(&bad).unwrap_err();
+        assert!(
+            matches!(err, GfiError::Numerical { .. }),
+            "expected typed Numerical error, got {err}"
+        );
+        // Atomic: pre-refresh state intact, outputs bitwise-identical.
+        let after = rf.apply(&field);
+        assert_eq!(before.data, after.data);
+        assert!(after.data.iter().all(|x| x.is_finite()));
+        // A fresh prepare on the same poisoned cloud fails typed too.
+        let cfg2 = RfdConfig { num_features: 8, ..Default::default() };
+        assert!(RfDiffusion::try_new(&bad, cfg2).is_err());
     }
 
     #[test]

@@ -45,6 +45,20 @@ pub enum GfiError {
     Unkeyable { detail: String },
     /// Numerical failure during preparation (singular core, …).
     Numerical { detail: String },
+    /// A panic (or injected fault) caught at the engine's isolation
+    /// boundary. The offending cache entry is evicted; retrying is safe.
+    Internal { detail: String },
+    /// The request's deadline budget expired before the named stage
+    /// (`"structure"`, `"kernel"`, or `"apply"`) ran. Retryable.
+    DeadlineExceeded { stage: &'static str },
+    /// The engine is shedding load (in-flight prepares or resident bytes
+    /// over the high-water mark). Retry after the hinted backoff.
+    Overloaded { reason: String, retry_after_ms: u64 },
+    /// The `(cloud, epoch, key)` entry has failed repeatedly and is
+    /// quarantined. `retry_after_ms: Some(_)` means a rebuild attempt is
+    /// admitted after the backoff; `None` means the key stays quarantined
+    /// until the cloud's next epoch (an `update_cloud`).
+    Quarantined { key: String, failures: u32, retry_after_ms: Option<u64> },
 }
 
 impl fmt::Display for GfiError {
@@ -68,6 +82,70 @@ impl fmt::Display for GfiError {
             GfiError::InvalidSpec { detail } => write!(f, "invalid integrator spec: {detail}"),
             GfiError::Unkeyable { detail } => write!(f, "spec has no cache key: {detail}"),
             GfiError::Numerical { detail } => write!(f, "numerical failure: {detail}"),
+            GfiError::Internal { detail } => write!(f, "internal fault (isolated): {detail}"),
+            GfiError::DeadlineExceeded { stage } => {
+                write!(f, "request deadline exceeded before the {stage} stage")
+            }
+            GfiError::Overloaded { reason, retry_after_ms } => {
+                write!(f, "engine overloaded ({reason}); retry after ~{retry_after_ms}ms")
+            }
+            GfiError::Quarantined { key, failures, retry_after_ms } => match retry_after_ms {
+                Some(ms) => write!(
+                    f,
+                    "entry {key} quarantined after {failures} failure(s); next rebuild \
+                     admitted in ~{ms}ms"
+                ),
+                None => write!(
+                    f,
+                    "entry {key} quarantined after {failures} failure(s) until the next \
+                     epoch (update_cloud)"
+                ),
+            },
+        }
+    }
+}
+
+impl GfiError {
+    /// Stable wire code for this error (the `code` field of a server
+    /// error response). One token per variant; see docs/PROTOCOL.md.
+    pub fn code(&self) -> &'static str {
+        match self {
+            GfiError::EmptyScene => "empty_scene",
+            GfiError::MissingGraph { .. } => "missing_graph",
+            GfiError::MissingPoints { .. } => "missing_points",
+            GfiError::SceneMismatch { .. } => "scene_mismatch",
+            GfiError::FieldShape { .. } => "field_shape",
+            GfiError::InvalidSpec { .. } => "invalid_spec",
+            GfiError::Unkeyable { .. } => "unkeyable",
+            GfiError::Numerical { .. } => "numerical",
+            GfiError::Internal { .. } => "internal",
+            GfiError::DeadlineExceeded { .. } => "deadline_exceeded",
+            GfiError::Overloaded { .. } => "overloaded",
+            GfiError::Quarantined { .. } => "quarantined",
+        }
+    }
+
+    /// Whether a client may usefully retry the same request. True for the
+    /// transient serving errors (isolated fault, deadline, shed,
+    /// quarantine backoff); false for deterministic spec/scene errors
+    /// that fail identically every time.
+    pub fn retryable(&self) -> bool {
+        matches!(
+            self,
+            GfiError::Internal { .. }
+                | GfiError::DeadlineExceeded { .. }
+                | GfiError::Overloaded { .. }
+                | GfiError::Quarantined { .. }
+        )
+    }
+
+    /// Suggested client backoff before retrying, when the engine can
+    /// compute one (shed hint, quarantine backoff window).
+    pub fn retry_after_ms(&self) -> Option<u64> {
+        match self {
+            GfiError::Overloaded { retry_after_ms, .. } => Some(*retry_after_ms),
+            GfiError::Quarantined { retry_after_ms, .. } => *retry_after_ms,
+            _ => None,
         }
     }
 }
@@ -840,6 +918,40 @@ mod tests {
         let mut mesh = icosphere(1);
         mesh.normalize_unit_box();
         Scene::from_mesh(&mesh)
+    }
+
+    #[test]
+    fn error_codes_and_retryability() {
+        // Deterministic spec/scene errors are terminal; serving errors
+        // (fault, deadline, shed, quarantine) are retryable.
+        let terminal = [
+            GfiError::EmptyScene,
+            GfiError::MissingGraph { backend: "bf_sp" },
+            GfiError::InvalidSpec { detail: "x".into() },
+            GfiError::Numerical { detail: "x".into() },
+        ];
+        for e in &terminal {
+            assert!(!e.retryable(), "{e} should not be retryable");
+            assert!(e.retry_after_ms().is_none());
+        }
+        let transient = [
+            GfiError::Internal { detail: "panic".into() },
+            GfiError::DeadlineExceeded { stage: "apply" },
+            GfiError::Overloaded { reason: "inflight".into(), retry_after_ms: 10 },
+            GfiError::Quarantined { key: "k".into(), failures: 2, retry_after_ms: Some(5) },
+        ];
+        for e in &transient {
+            assert!(e.retryable(), "{e} should be retryable");
+        }
+        assert_eq!(GfiError::DeadlineExceeded { stage: "apply" }.code(), "deadline_exceeded");
+        assert_eq!(
+            GfiError::Overloaded { reason: "x".into(), retry_after_ms: 7 }.retry_after_ms(),
+            Some(7)
+        );
+        // Hard quarantine (until next epoch) carries no retry hint.
+        let hard = GfiError::Quarantined { key: "k".into(), failures: 3, retry_after_ms: None };
+        assert!(hard.retryable() && hard.retry_after_ms().is_none());
+        assert_eq!(hard.code(), "quarantined");
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! ```text
 //! repro serve [--addr 127.0.0.1:7878] [--artifacts artifacts]
 //!             [--shards 8] [--max-resident-mb MB] [--max-clouds N]
-//!             [--max-conns 64]
+//!             [--max-conns 64] [--read-timeout-ms MS]
+//!             [--write-timeout-ms MS] [--deadline-ms MS]
+//!             [--faults PLAN]
 //! repro reproduce <experiment-id|all> [--quick]
 //! repro list
 //! repro selfcheck [--artifacts artifacts]
@@ -14,7 +16,12 @@
 //! eviction past the budget), `--max-clouds` bounds registered scenes,
 //! `--shards` sets cache lock sharding, and `--max-conns` caps
 //! concurrent server connections. Unset = unbounded (the pre-cache
-//! behavior). See docs/ARCHITECTURE.md and docs/PROTOCOL.md.
+//! behavior). `--read-timeout-ms`/`--write-timeout-ms` override the
+//! slow-client socket timeouts (0 disables), `--deadline-ms` sets a
+//! default per-request deadline budget, and `--faults` arms the
+//! deterministic fault injector with a chaos plan (same syntax as the
+//! `GFI_FAULTS` env var — see docs/ARCHITECTURE.md, "Failure model").
+//! See docs/ARCHITECTURE.md and docs/PROTOCOL.md.
 //!
 //! (Hand-rolled arg parsing: the offline build has no clap.)
 
@@ -97,16 +104,31 @@ fn serve(args: &[String]) -> Result<()> {
     if let Some(n) = parse_num("--max-clouds")? {
         cfg = cfg.max_clouds(n as usize);
     }
-    let server_cfg = gfi::coordinator::server::ServerConfig {
-        max_connections: parse_num("--max-conns")?
-            .map(|n| n as usize)
-            .unwrap_or_else(|| gfi::coordinator::server::ServerConfig::default().max_connections),
-    };
+    let faults = opt(args, "--faults", "");
+    if !faults.is_empty() {
+        let plan = gfi::coordinator::faults::FaultPlan::parse(faults)
+            .map_err(|e| gfi::anyhow!("--faults: {e}"))?;
+        cfg = cfg.fault_plan(plan);
+    }
+    let mut server_cfg = gfi::coordinator::server::ServerConfig::default();
+    if let Some(n) = parse_num("--max-conns")? {
+        server_cfg.max_connections = n as usize;
+    }
+    if let Some(ms) = parse_num("--read-timeout-ms")? {
+        server_cfg.read_timeout_ms = ms;
+    }
+    if let Some(ms) = parse_num("--write-timeout-ms")? {
+        server_cfg.write_timeout_ms = ms;
+    }
+    if let Some(ms) = parse_num("--deadline-ms")? {
+        server_cfg.request_deadline_ms = ms;
+    }
     let engine = Arc::new(cfg.build());
     let ecfg = engine.config();
     println!(
         "gfi coordinator: pjrt={} (artifacts: {artifacts}), shards={}, \
-         max_resident_bytes={}, max_clouds={}, max_conns={}",
+         max_resident_bytes={}, max_clouds={}, max_conns={}, \
+         read_timeout_ms={}, deadline_ms={}, faults_armed={}",
         engine.has_pjrt(),
         ecfg.shards,
         if ecfg.max_resident_bytes == u64::MAX {
@@ -120,6 +142,9 @@ fn serve(args: &[String]) -> Result<()> {
             ecfg.max_clouds.to_string()
         },
         server_cfg.max_connections,
+        server_cfg.read_timeout_ms,
+        server_cfg.request_deadline_ms,
+        engine.faults().armed(),
     );
     gfi::coordinator::server::serve_with(engine, addr, server_cfg, |a| {
         println!("listening on {a} (JSON lines; send {{\"op\":\"shutdown\"}} to stop)");

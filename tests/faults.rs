@@ -1,0 +1,316 @@
+//! Chaos suite for the fault-tolerance layer (docs/ARCHITECTURE.md,
+//! "Failure model"): a seeded fault plan injecting panics, spurious
+//! errors, slow stages, artifact corruption, and connection drops across
+//! five backends and the server accept/read path is run against a live
+//! server. The acceptance contract:
+//!
+//! * no worker thread dies — the server keeps answering after every
+//!   injected fault, and its reaped-thread backlog stays small;
+//! * every failed request yields a *well-formed typed* error
+//!   (`code` + `retryable`, with `retry_after_ms` on degradation);
+//! * quarantined keys recover once the fault clears (backoff retry, or
+//!   the epoch bump of the next `update_cloud`);
+//! * after the plan is exhausted, results are **bitwise-identical** to
+//!   an unfaulted engine serving the same requests.
+
+use gfi::coordinator::faults::FaultPlan;
+use gfi::coordinator::{server, Engine, EngineConfig, RequestOpts, UpdateOpts};
+use gfi::integrators::{GfiError, IntegratorSpec};
+use gfi::linalg::Mat;
+use gfi::util::json::{parse, Json};
+use gfi::util::rng::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+fn spawn_server(
+    engine: Arc<Engine>,
+    cfg: server::ServerConfig,
+) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        server::serve_with(engine, "127.0.0.1:0", cfg, move |a| {
+            addr_tx.send(a).unwrap();
+        })
+        .unwrap();
+    });
+    (addr_rx.recv().unwrap(), handle)
+}
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    /// One request/response; `Err` on any transport failure (dropped
+    /// connection, EOF mid-response).
+    fn send(&mut self, line: &str) -> std::io::Result<Json> {
+        writeln!(self.stream, "{line}")?;
+        let mut resp = String::new();
+        if self.reader.read_line(&mut resp)? == 0 {
+            return Err(std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "eof"));
+        }
+        parse(&resp)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+    }
+}
+
+/// Sends with the documented client recovery loop: reconnect on injected
+/// connection drops, back off and retry on typed retryable errors.
+/// Panics when a failure response is malformed (missing `code` /
+/// `retryable`) or a non-retryable error arrives — both acceptance
+/// violations.
+fn send_with_retry(addr: std::net::SocketAddr, client: &mut Client, req: &str) -> Json {
+    for _ in 0..80 {
+        let resp = match client.send(req) {
+            Ok(r) => r,
+            Err(_) => {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                *client = Client::connect(addr).expect("reconnect");
+                continue;
+            }
+        };
+        if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+            return resp;
+        }
+        let code = resp.get("code").and_then(Json::as_str);
+        let retryable = resp.get("retryable").and_then(Json::as_bool);
+        assert!(
+            code.is_some() && retryable.is_some(),
+            "malformed error response: {resp}"
+        );
+        assert_eq!(retryable, Some(true), "non-retryable failure for {req}: {resp}");
+        let backoff = resp
+            .get("retry_after_ms")
+            .and_then(Json::as_usize)
+            .unwrap_or(2) as u64;
+        std::thread::sleep(std::time::Duration::from_millis(backoff.clamp(1, 100)));
+    }
+    panic!("request never recovered: {req}");
+}
+
+/// The wire request for workload variant `v` (cycled per client). The
+/// two `sf` lambdas share one balanced-separator structure, so the
+/// second spec exercises the structure-store hit path (and its `corrupt`
+/// rule). Fields are formatted with `{}` — the shortest exact f64 form —
+/// so the oracle engine sees bitwise-identical inputs.
+fn request_for(v: usize, cloud: usize, field: &[f64]) -> String {
+    let fj = field.iter().map(|x| format!("{x}")).collect::<Vec<_>>().join(",");
+    match v % 6 {
+        0 => format!(
+            r#"{{"op":"integrate","cloud":{cloud},"backend":"sf","field":[{fj}],"d":1,"lambda":2.0,"threshold":16}}"#
+        ),
+        1 => format!(
+            r#"{{"op":"integrate","cloud":{cloud},"backend":"sf","field":[{fj}],"d":1,"lambda":4.0,"threshold":16}}"#
+        ),
+        2 => format!(
+            r#"{{"op":"integrate","cloud":{cloud},"backend":"rfd","field":[{fj}],"d":1,"m":8}}"#
+        ),
+        3 => format!(
+            r#"{{"op":"integrate","cloud":{cloud},"backend":"bf_sp","field":[{fj}],"d":1,"lambda":2.0}}"#
+        ),
+        4 => format!(
+            r#"{{"op":"integrate","cloud":{cloud},"backend":"bf_diffusion","field":[{fj}],"d":1,"epsilon":0.25,"lambda":-0.2}}"#
+        ),
+        _ => format!(
+            r#"{{"op":"integrate","cloud":{cloud},"backend":"trees_bartal","field":[{fj}],"d":1,"count":3,"lambda":2.0,"seed":1}}"#
+        ),
+    }
+}
+
+/// The acceptance chaos run: a seeded plan worth 25+ fault fires
+/// (panics, spurious errors, slow stages, artifact corruption,
+/// connection drops) across five backends plus the server accept/read
+/// path, absorbed by two concurrent retrying clients.
+#[test]
+fn chaos_plan_recovers_to_bitwise_identical_results() {
+    const PLAN: &str = "seed=11;\
+        site=prepare,backend=sf,kind=panic,times=3;\
+        site=finish,backend=sf,kind=error,times=3;\
+        site=prepare,backend=rfd,kind=panic,times=3;\
+        site=apply,backend=rfd,kind=panic,times=3;\
+        site=apply,backend=bf_sp,kind=delay,ms=2,times=4;\
+        site=prepare,backend=bf_diffusion,kind=error,times=3;\
+        site=apply,backend=trees,kind=panic,times=2;\
+        site=structure_hit,backend=sf,kind=corrupt,times=2;\
+        site=accept,kind=drop,times=2;\
+        site=read,kind=drop,times=2,every=4";
+    let plan = FaultPlan::parse(PLAN).unwrap();
+    assert!(plan.rules.iter().map(|r| r.times).sum::<u64>() >= 20);
+
+    // Unfaulted oracle: same mesh (register_mesh is deterministic), same
+    // specs, same fields.
+    let clean = Arc::new(EngineConfig::default().fault_plan(FaultPlan::default()).build());
+    let clean_id = clean.register_mesh(gfi::mesh::icosphere(1), "chaos");
+    let n = clean.cloud(clean_id).unwrap().scene.len();
+
+    let engine = Arc::new(
+        EngineConfig::default()
+            .fault_plan(plan)
+            .quarantine_attempts(10) // deeper than any rule's panic budget
+            .quarantine_backoff_ms(1)
+            .build(),
+    );
+    let (addr, server_thread) = spawn_server(engine.clone(), server::ServerConfig::default());
+
+    let mut ctl = Client::connect(addr).unwrap();
+    let reg = send_with_retry(
+        addr,
+        &mut ctl,
+        r#"{"op":"register_mesh","kind":"icosphere","param":1,"name":"chaos"}"#,
+    );
+    let cloud = reg.get("id").unwrap().as_usize().unwrap();
+
+    std::thread::scope(|s| {
+        let clean = &clean;
+        for cid in 0..2usize {
+            s.spawn(move || {
+                let mut client = Client::connect(addr).expect("connect");
+                let mut rng = Rng::new(cid as u64 + 500);
+                for r in 0..12usize {
+                    let field: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+                    let req = request_for(r, cloud, &field);
+                    let resp = send_with_retry(addr, &mut client, &req);
+                    let got = resp.get("result").unwrap().as_f64_vec().unwrap();
+                    let spec =
+                        IntegratorSpec::from_request(&parse(&req).unwrap()).unwrap();
+                    let f = Mat::from_vec(n, 1, field);
+                    let (want, _) = clean.integrate(clean_id, &spec, &f).unwrap();
+                    assert_eq!(
+                        got, want.data,
+                        "variant {r} diverged from the unfaulted engine"
+                    );
+                }
+            });
+        }
+    });
+
+    // The same server must still answer (no worker thread died), the plan
+    // must actually have fired, and every quarantined key must have
+    // recovered — its last rebuild succeeded and cleared the record.
+    let health = send_with_retry(addr, &mut ctl, r#"{"op":"health"}"#);
+    assert_eq!(health.get("status").and_then(Json::as_str), Some("ok"), "{health}");
+    let rb = health.get("robustness").unwrap();
+    assert_eq!(rb.get("quarantined_live").unwrap().as_usize(), Some(0));
+    assert!(rb.get("quarantines").unwrap().as_usize().unwrap() >= 1);
+    let injected = engine.faults().injected();
+    assert!(injected >= 20, "plan injected only {injected} faults");
+    assert!(engine.robustness_stats().panics_caught >= 8, "panic rules under-fired");
+
+    let stats = send_with_retry(addr, &mut ctl, r#"{"op":"stats"}"#);
+    let backlog = stats
+        .get("server")
+        .unwrap()
+        .get("worker_backlog")
+        .unwrap()
+        .as_usize()
+        .unwrap();
+    assert!(backlog <= 4, "worker threads accumulated under chaos: {backlog}");
+
+    send_with_retry(addr, &mut ctl, r#"{"op":"shutdown"}"#);
+    drop(ctl); // free the last worker so the accept loop can join it
+    server_thread.join().unwrap();
+}
+
+/// A key that keeps failing past `max_attempts` is *hard* quarantined —
+/// typed error with no retry hint, waiting doesn't help — until the next
+/// epoch (a good `update_cloud` frame) sweeps it and serving recovers.
+#[test]
+fn hard_quarantine_recovers_at_the_next_epoch() {
+    let plan = FaultPlan::parse("site=prepare,backend=rfd,kind=panic,times=3").unwrap();
+    let eng = EngineConfig::default()
+        .fault_plan(plan)
+        .quarantine_attempts(2)
+        .quarantine_backoff_ms(0)
+        .build();
+    let raw = {
+        let mut rng = Rng::new(3);
+        gfi::pointcloud::random_cloud(40, &mut rng)
+    };
+    let id = eng.register_cloud(raw.clone(), "scan");
+    let spec =
+        IntegratorSpec::from_request(&parse(r#"{"backend":"rfd","m":8}"#).unwrap()).unwrap();
+    let mut rng = Rng::new(77);
+    let field = Mat::from_vec(40, 1, (0..40).map(|_| rng.gaussian()).collect());
+
+    // Two injected panics reach max_attempts=2 → hard quarantine: the
+    // third request is refused *without* consuming the remaining planned
+    // fault, and waiting does not lift it.
+    for _ in 0..2 {
+        let err = eng.integrate(id, &spec, &field).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<GfiError>(),
+            Some(GfiError::Internal { .. })
+        ));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(5));
+    let err = eng.integrate(id, &spec, &field).unwrap_err();
+    match err.downcast_ref::<GfiError>() {
+        Some(GfiError::Quarantined { failures: 2, retry_after_ms: None, .. }) => {}
+        other => panic!("expected hard quarantine, got {other:?}"),
+    }
+    assert_eq!(eng.faults().injected(), 2, "hard quarantine must gate the rebuild");
+
+    // A good frame bumps the epoch and sweeps the record. The planned
+    // fault has one fire left: it burns on the first post-sweep rebuild,
+    // and the retry after it serves — bitwise-identical to a clean engine
+    // fed the same registration + frame.
+    let mut moved = raw;
+    moved.points[5][1] += 0.01;
+    eng.update_cloud(id, moved.clone(), &UpdateOpts::default()).unwrap();
+    let err = eng.integrate(id, &spec, &field).unwrap_err();
+    assert!(matches!(
+        err.downcast_ref::<GfiError>(),
+        Some(GfiError::Internal { .. })
+    ));
+    let (out, _) = eng.integrate(id, &spec, &field).unwrap();
+    assert_eq!(eng.robustness_stats().quarantined_live, 0);
+
+    let clean = EngineConfig::default().fault_plan(FaultPlan::default()).build();
+    let cid = clean.register_cloud(
+        {
+            let mut rng = Rng::new(3);
+            gfi::pointcloud::random_cloud(40, &mut rng)
+        },
+        "scan",
+    );
+    clean.update_cloud(cid, moved, &UpdateOpts::default()).unwrap();
+    let (want, _) = clean.integrate(cid, &spec, &field).unwrap();
+    assert_eq!(out.data, want.data, "post-recovery result diverged");
+}
+
+/// `max_inflight_prepares: 0` sheds every cache-miss prepare with the
+/// typed `overloaded` error and its retry hint — and shedding is pure
+/// backpressure: it never quarantines the refused key.
+#[test]
+fn zero_inflight_budget_sheds_all_prepares_with_typed_errors() {
+    let eng = EngineConfig::default()
+        .fault_plan(FaultPlan::default())
+        .max_inflight_prepares(0)
+        .build();
+    let id = eng.register_mesh(gfi::mesh::icosphere(1), "s");
+    let n = eng.cloud(id).unwrap().scene.len();
+    let field = Mat::from_vec(n, 1, vec![1.0; n]);
+    let spec =
+        IntegratorSpec::from_request(&parse(r#"{"backend":"sf","lambda":2.0}"#).unwrap())
+            .unwrap();
+    assert!(eng.is_shedding());
+    for _ in 0..3 {
+        let err = eng
+            .integrate_opts(id, &spec, &field, &RequestOpts::default())
+            .unwrap_err();
+        match err.downcast_ref::<GfiError>() {
+            Some(GfiError::Overloaded { retry_after_ms, .. }) => assert!(*retry_after_ms > 0),
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+    }
+    assert_eq!(eng.robustness_stats().sheds, 3);
+    assert_eq!(eng.robustness_stats().quarantined_live, 0, "sheds must not quarantine");
+}
