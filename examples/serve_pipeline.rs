@@ -25,7 +25,7 @@
 //! make artifacts && cargo run --release --example serve_pipeline
 //! ```
 
-use gfi::coordinator::faults::FaultPlan;
+use gfi::coordinator::faults::{FaultKind, FaultPlan};
 use gfi::coordinator::{server, EngineConfig};
 use gfi::integrators::{prepare, FieldIntegrator, IntegratorSpec, KernelFn};
 use gfi::linalg::Mat;
@@ -318,9 +318,25 @@ fn chaos_phase() -> gfi::util::error::Result<()> {
     let clean_id = clean.register_mesh(gfi::mesh::icosphere(2), "chaos");
     let n = clean.cloud(clean_id)?.scene.len();
 
+    // Keep the quarantine failure cap above the plan's total panic
+    // budget: this phase never calls `update_cloud`, so a hard-
+    // quarantined key (which only an epoch bump can lift) would leave
+    // the retry loop with a permanently failing request. With the cap
+    // above the budget every injected panic lands in the soft-backoff
+    // regime and the key recovers once the rules exhaust — for the
+    // built-in plan and any `GFI_FAULTS` override (the CI smoke) alike.
+    // Summed, not max'd: several panic rules can hit one key.
+    let panic_budget: u64 = plan
+        .rules
+        .iter()
+        .filter(|r| matches!(r.kind, FaultKind::Panic))
+        .map(|r| r.times)
+        .sum();
+    let quarantine_cap = u32::try_from(panic_budget).unwrap_or(u32::MAX).saturating_add(2);
     let engine = Arc::new(
         EngineConfig::default()
             .fault_plan(plan)
+            .quarantine_attempts(quarantine_cap)
             .quarantine_backoff_ms(1)
             .build(),
     );

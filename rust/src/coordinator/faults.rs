@@ -278,7 +278,9 @@ impl FaultInjector {
                 }
             }
             let hit = st.hits.fetch_add(1, Ordering::Relaxed) + 1;
-            if hit % rule.every != 0 {
+            // `.max(1)` guards directly-constructed rules: the fields are
+            // pub, and only `FaultPlan::parse` clamps `every`.
+            if hit % rule.every.max(1) != 0 {
                 continue;
             }
             if rule.prob < 1.0 && !self.coin(site, backend, hit, rule.prob) {
@@ -329,18 +331,6 @@ impl FaultInjector {
         !self.state.is_empty()
     }
 }
-
-/// Fires the injector at an engine site inside an `Err(GfiError)`-typed
-/// context: a planned panic unwinds (to be caught at the isolation
-/// boundary), a planned error early-returns, a delay sleeps through.
-macro_rules! fault_point {
-    ($inj:expr, $site:expr, $backend:expr) => {
-        if let Some(act) = $inj.fire($site, $backend) {
-            act.trigger()?;
-        }
-    };
-}
-pub(crate) use fault_point;
 
 #[cfg(test)]
 mod tests {
@@ -398,6 +388,28 @@ mod tests {
         assert!(FaultPlan::parse("site=apply").is_err()); // missing kind
         assert!(FaultPlan::parse("kind=panic").is_err()); // missing site
         assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn directly_constructed_every_zero_does_not_panic() {
+        // The rule fields are pub; bypassing `FaultPlan::parse` (which
+        // clamps `every`) must not divide by zero in the hot path.
+        let plan = FaultPlan {
+            seed: 0,
+            rules: vec![FaultRule {
+                site: FaultSite::Apply,
+                backend: None,
+                kind: FaultKind::Error,
+                times: 2,
+                every: 0,
+                prob: 1.0,
+            }],
+        };
+        let inj = FaultInjector::new(plan);
+        // every=0 behaves like every=1: fires on each hit until exhausted.
+        assert!(inj.fire(FaultSite::Apply, "sf").is_some());
+        assert!(inj.fire(FaultSite::Apply, "sf").is_some());
+        assert!(inj.fire(FaultSite::Apply, "sf").is_none());
     }
 
     #[test]

@@ -85,7 +85,7 @@ use crate::pointcloud::PointCloud;
 use crate::runtime::PjrtRuntime;
 use crate::util::error::{anyhow, bail, Result};
 use cache::{CacheConfig, CacheStats, ShardedCache};
-use faults::{fault_point, FaultAction, FaultInjector, FaultPlan, FaultSite};
+use faults::{FaultAction, FaultInjector, FaultPlan, FaultSite};
 use quarantine::{QuarantinePolicy, QuarantineRegistry};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -1211,10 +1211,14 @@ impl Engine {
         // otherwise skip validation and panic on e.g. a point-less scene).
         if let (IntegratorSpec::RfdPjrt(cfg), Some(rt)) = (spec, &self.runtime) {
             validate_spec(&entry.scene, spec)?;
-            // The PJRT route shares the deadline/injection surface (the
-            // dispatcher has its own error path, so no catch_unwind).
+            // The PJRT route shares the deadline/injection surface. The
+            // injection point sits behind `guarded` so a planned panic
+            // becomes the same typed `internal` error as on the pure-Rust
+            // route instead of unwinding into library callers; the
+            // dispatcher itself reports failures through its own Result
+            // path.
             self.check_deadline(opts.deadline, "apply")?;
-            fault_point!(self.faults, FaultSite::Apply, spec.name());
+            self.guarded(spec.name(), FaultSite::Apply, || Ok(()))?;
             let key = (id, entry.scene.epoch, spec.cache_key()?);
             let cached = self.pjrt_preps.get(&key);
             let (prep, cache_hit, prep_secs) = if let Some(p) = cached {

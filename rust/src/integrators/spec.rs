@@ -56,8 +56,9 @@ pub enum GfiError {
     Overloaded { reason: String, retry_after_ms: u64 },
     /// The `(cloud, epoch, key)` entry has failed repeatedly and is
     /// quarantined. `retry_after_ms: Some(_)` means a rebuild attempt is
-    /// admitted after the backoff; `None` means the key stays quarantined
-    /// until the cloud's next epoch (an `update_cloud`).
+    /// admitted after the backoff (retryable); `None` means the key stays
+    /// quarantined until the cloud's next epoch (an `update_cloud`) — not
+    /// retryable, since an identical retry is refused until then.
     Quarantined { key: String, failures: u32, retry_after_ms: Option<u64> },
 }
 
@@ -128,15 +129,18 @@ impl GfiError {
     /// Whether a client may usefully retry the same request. True for the
     /// transient serving errors (isolated fault, deadline, shed,
     /// quarantine backoff); false for deterministic spec/scene errors
-    /// that fail identically every time.
+    /// that fail identically every time, and for *hard* quarantine
+    /// (`retry_after_ms: None`) — an identical retry is refused until a
+    /// new epoch arrives via `update_cloud`, so backing off and resending
+    /// the same request can never succeed.
     pub fn retryable(&self) -> bool {
-        matches!(
-            self,
+        match self {
             GfiError::Internal { .. }
-                | GfiError::DeadlineExceeded { .. }
-                | GfiError::Overloaded { .. }
-                | GfiError::Quarantined { .. }
-        )
+            | GfiError::DeadlineExceeded { .. }
+            | GfiError::Overloaded { .. } => true,
+            GfiError::Quarantined { retry_after_ms, .. } => retry_after_ms.is_some(),
+            _ => false,
+        }
     }
 
     /// Suggested client backoff before retrying, when the engine can
@@ -948,9 +952,11 @@ mod tests {
             GfiError::Overloaded { reason: "x".into(), retry_after_ms: 7 }.retry_after_ms(),
             Some(7)
         );
-        // Hard quarantine (until next epoch) carries no retry hint.
+        // Hard quarantine (until next epoch) carries no retry hint and is
+        // NOT retryable — only an `update_cloud` epoch bump lifts it, so
+        // resending the identical request cannot succeed.
         let hard = GfiError::Quarantined { key: "k".into(), failures: 3, retry_after_ms: None };
-        assert!(hard.retryable() && hard.retry_after_ms().is_none());
+        assert!(!hard.retryable() && hard.retry_after_ms().is_none());
         assert_eq!(hard.code(), "quarantined");
     }
 
