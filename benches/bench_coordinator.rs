@@ -6,7 +6,10 @@
 //! prepare pipeline (`engine/prepare_shared` — kernel sweep reusing one
 //! shared separator tree — vs `engine/prepare_full`), and the
 //! mesh-dynamics frame-update path (`update_cloud` + SF dirty-subtree
-//! refresh vs dropping the artifacts and paying a full re-prepare).
+//! refresh vs dropping the artifacts and paying a full re-prepare), and
+//! the persistent-store warm restart (`engine/cold_start_cold_dir` —
+//! fresh engine, empty disk — vs `engine/cold_start_warm_dir` — fresh
+//! engine, disk tier pre-populated by a previous engine's spills).
 //!
 //! Writes `BENCH_coordinator.json` so CI's perf trajectory tracks the
 //! serving path alongside `BENCH_integrators.json`.
@@ -246,6 +249,68 @@ fn main() {
                 .unwrap();
             dyn_engine.integrate(did, &sf_spec, &dfield).unwrap()
         }));
+    }
+
+    // Persistent store, warm restart (ISSUE 7): every iteration builds a
+    // *fresh* engine (empty RAM tier — a process restart) and pays one
+    // SF prepare at n=10242. cold_dir pays the full structure stage;
+    // warm_dir finds the previous engine's spill on disk and pays only
+    // validated decode + kernel stage. The gap is the restart win the
+    // store exists for — asserted ≥5× on the medians, and the disk-served
+    // output is asserted bitwise-identical to the cold computation.
+    {
+        let mut wmesh = gfi::mesh::icosphere(5); // 10242 vertices
+        wmesh.normalize_unit_box();
+        let wn = wmesh.num_verts();
+        let wscene = Scene::from_mesh(&wmesh);
+        let spec = IntegratorSpec::Sf(SfConfig { separator_size: 8, ..Default::default() });
+        let wfield = Mat::from_vec(wn, 1, (0..wn).map(|_| rng.gaussian()).collect());
+        let cold_dir =
+            std::env::temp_dir().join(format!("gfi_bench_cold_{}", std::process::id()));
+        let warm_dir =
+            std::env::temp_dir().join(format!("gfi_bench_warm_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&cold_dir);
+        let _ = std::fs::remove_dir_all(&warm_dir);
+        // Populate the warm dir once and record the oracle output.
+        let oracle_out = {
+            let warmer =
+                EngineConfig::default().artifacts(&warm_dir).store(true).build();
+            let wid = warmer.register_scene(wscene.clone(), "warm");
+            warmer.integrate(wid, &spec, &wfield).unwrap().0
+        }; // dropped: RAM tier gone, spill file survives
+        let cold = bench.run(&format!("engine/cold_start_cold_dir/n={wn}"), || {
+            let e = EngineConfig::default().artifacts(&cold_dir).store(true).build();
+            let id = e.register_scene(wscene.clone(), "cold");
+            let (out, info) = e.integrate(id, &spec, &wfield).unwrap();
+            assert!(!info.structure_shared, "cold dir must rebuild the structure");
+            assert_eq!(out.data, oracle_out.data, "cold start diverged");
+            // Purge the spill so the next iteration starts cold again.
+            e.unregister_cloud(id);
+        });
+        let warm = bench.run(&format!("engine/cold_start_warm_dir/n={wn}"), || {
+            let e = EngineConfig::default().artifacts(&warm_dir).store(true).build();
+            let id = e.register_scene(wscene.clone(), "warm");
+            let (out, info) = e.integrate(id, &spec, &wfield).unwrap();
+            assert!(info.structure_shared, "warm dir must serve the structure from disk");
+            assert_eq!(out.data, oracle_out.data, "warm restart diverged");
+        });
+        println!(
+            "cold_start acceptance: n={wn} cold {:.1}ms vs warm {:.1}ms ({:.1}x), \
+             bitwise-identical",
+            cold.median * 1e3,
+            warm.median * 1e3,
+            cold.median / warm.median
+        );
+        assert!(
+            warm.median * 5.0 <= cold.median,
+            "warm restart must be >=5x faster than a cold start: cold {:.1}ms vs warm {:.1}ms",
+            cold.median * 1e3,
+            warm.median * 1e3
+        );
+        results.push(cold);
+        results.push(warm);
+        let _ = std::fs::remove_dir_all(&cold_dir);
+        let _ = std::fs::remove_dir_all(&warm_dir);
     }
 
     write_json("BENCH_coordinator.json", &results).expect("write BENCH_coordinator.json");

@@ -21,6 +21,12 @@
 //! bitwise against an unfaulted engine. `GFI_FAULTS` overrides the
 //! built-in plan — the CI fault-injection smoke sets it.
 //!
+//! Phase 4 is a **warm-restart demo**: an engine with the persistent
+//! structure store spills its prepared structures, "crashes" (drop), and
+//! a successor on the same artifacts dir serves the identical workload
+//! with every structure loaded from disk — zero structure rebuilds,
+//! bitwise-identical results.
+//!
 //! ```sh
 //! make artifacts && cargo run --release --example serve_pipeline
 //! ```
@@ -168,6 +174,78 @@ fn main() -> gfi::util::error::Result<()> {
 
     chaos_phase()?;
     println!("E2E pipeline + churn + chaos OK");
+
+    restart_phase()?;
+    println!("E2E pipeline + churn + chaos + warm restart OK");
+    Ok(())
+}
+
+/// Phase 4: warm restart off the persistent structure store. Engine A
+/// spills every prepared structure to disk, dies; engine B on the same
+/// artifacts dir serves the same workload with every structure stage a
+/// validated disk load — `disk_hits` equals the structure count, and the
+/// results are bitwise-identical to A's.
+fn restart_phase() -> gfi::util::error::Result<()> {
+    let dir = std::env::temp_dir().join(format!("gfi_e2e_store_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let specs = [
+        IntegratorSpec::Sf(gfi::integrators::sf::SfConfig::default()),
+        IntegratorSpec::Rfd(gfi::integrators::rfd::RfdConfig {
+            num_features: 16,
+            ..Default::default()
+        }),
+        IntegratorSpec::BfSp(KernelFn::ExpNeg(2.0)),
+    ];
+
+    // Engine A: prepare + spill, then "crash".
+    let (n, before) = {
+        let a = EngineConfig::default()
+            .fault_plan(FaultPlan::default())
+            .artifacts(&dir)
+            .store(true)
+            .build();
+        let id = a.register_mesh(gfi::mesh::icosphere(3), "restart");
+        let n = a.cloud(id)?.scene.len();
+        let mut rng = Rng::new(4242);
+        let field = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.gaussian()).collect());
+        let outs: Vec<Mat> = specs
+            .iter()
+            .map(|s| a.integrate(id, s, &field).map(|(o, _)| o))
+            .collect::<Result<_, _>>()?;
+        let s = a.store_stats().expect("store is on");
+        println!(
+            "\n[restart] engine A: {} structures spilled ({} bytes on disk), dropping it",
+            s.spills, s.disk_resident_bytes
+        );
+        (n, outs)
+    };
+
+    // Engine B: same dir, fresh RAM — the restart path.
+    let b = EngineConfig::default()
+        .fault_plan(FaultPlan::default())
+        .artifacts(&dir)
+        .store(true)
+        .build();
+    let id = b.register_mesh(gfi::mesh::icosphere(3), "restart");
+    let mut rng = Rng::new(4242);
+    let field = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.gaussian()).collect());
+    let t0 = Instant::now();
+    for (spec, want) in specs.iter().zip(&before) {
+        let (out, info) = b.integrate(id, spec, &field)?;
+        assert!(info.structure_shared, "restarted engine must load structures from disk");
+        assert_eq!(out.data, want.data, "warm restart diverged from pre-crash results");
+    }
+    let s = b.store_stats().expect("store is on");
+    assert_eq!(s.disk_hits, specs.len() as u64, "every structure must be a disk hit");
+    assert_eq!(s.invalid_files, 0);
+    println!(
+        "[restart] engine B served {} specs from disk in {:.1}ms \
+         ({} disk hits, 0 rebuilds, bitwise-identical)",
+        specs.len(),
+        t0.elapsed().as_secs_f64() * 1e3,
+        s.disk_hits
+    );
+    let _ = std::fs::remove_dir_all(&dir);
     Ok(())
 }
 

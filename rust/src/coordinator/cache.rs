@@ -100,14 +100,16 @@ pub struct CacheStats {
 
 /// What an [`ShardedCache::insert`] did.
 #[derive(Debug)]
-pub struct InsertOutcome<K> {
+pub struct InsertOutcome<K, V> {
     /// `false` iff the entry alone outweighs the configured budget and
     /// was not stored (the caller's value still works — uncached).
     pub cached: bool,
-    /// Keys evicted to make room (empty on the fast path). Callers that
-    /// maintain derived state (the engine's per-cloud artifact caches)
-    /// cascade removals from this list.
-    pub evicted: Vec<K>,
+    /// Entries evicted to make room (empty on the fast path), with
+    /// their values still in hand. Callers that maintain derived state
+    /// cascade removals from this list; the engine's structure store
+    /// uses the values to *demote* evicted structures to disk instead
+    /// of losing them.
+    pub evicted: Vec<(K, V)>,
 }
 
 struct Entry<V> {
@@ -199,7 +201,7 @@ impl<K: Hash + Eq + Clone, V: Clone> ShardedCache<K, V> {
     /// An entry that alone exceeds the byte budget is rejected
     /// (`cached: false`) rather than evicting the whole cache for a
     /// value that can never fit.
-    pub fn insert(&self, k: K, v: V, weight: u64) -> InsertOutcome<K> {
+    pub fn insert(&self, k: K, v: V, weight: u64) -> InsertOutcome<K, V> {
         if weight > self.cfg.max_weight_bytes || self.cfg.max_entries == 0 {
             self.rejected.fetch_add(1, Ordering::Relaxed);
             return InsertOutcome { cached: false, evicted: Vec::new() };
@@ -228,14 +230,15 @@ impl<K: Hash + Eq + Clone, V: Clone> ShardedCache<K, V> {
     }
 
     /// Removes the globally least-recently-used entry, skipping
-    /// `protect`; returns its key, or `None` when nothing evictable
+    /// `protect`; returns the evicted `(key, value)` pair, or `None`
+    /// when nothing evictable
     /// remains. Scans each shard for its local minimum, then removes
     /// the global minimum — O(entries) per eviction, the price of exact
     /// global LRU; it only runs while the cache is over budget, the
     /// shard locks are taken one at a time, and losing a removal race
     /// rescans rather than giving up (so `insert`'s budget loop never
     /// terminates early while evictable entries remain).
-    fn evict_lru(&self, protect: &K) -> Option<K> {
+    fn evict_lru(&self, protect: &K) -> Option<(K, V)> {
         loop {
             let mut best: Option<(usize, K, u64)> = None;
             for i in 0..self.shards.len() {
@@ -263,7 +266,7 @@ impl<K: Hash + Eq + Clone, V: Clone> ShardedCache<K, V> {
             self.weight.fetch_sub(e.weight, Ordering::Relaxed);
             self.entries.fetch_sub(1, Ordering::Relaxed);
             self.evictions.fetch_add(1, Ordering::Relaxed);
-            return Some(key);
+            return Some((key, e.value));
         }
     }
 
@@ -428,13 +431,16 @@ mod tests {
     }
 
     #[test]
-    fn insert_reports_evicted_keys() {
+    fn insert_reports_evicted_entries_with_values() {
         let c = cache(40, usize::MAX);
-        c.insert(1, val(1), 20);
+        c.insert(1, val(7), 20);
         c.insert(2, val(1), 20);
         let out = c.insert(3, val(1), 20);
         assert!(out.cached);
-        assert_eq!(out.evicted, vec![1]);
+        assert_eq!(out.evicted.len(), 1);
+        let (k, v) = &out.evicted[0];
+        assert_eq!(*k, 1);
+        assert_eq!(v.len(), 7, "evicted value travels with its key");
     }
 
     #[test]

@@ -3,8 +3,9 @@
 //! A [`FaultPlan`] is a seeded list of rules — *where* ([`FaultSite`]),
 //! *what* ([`FaultKind`]), and *how often* — compiled into a
 //! [`FaultInjector`] that the engine consults at its injection sites
-//! (prepare/finish/refresh/apply, structure-store hits, and the server
-//! accept/read path). The injector is always compiled in: with an empty
+//! (prepare/finish/refresh/apply, structure-store hits, the persistent
+//! artifact store's spill/load paths, and the server accept/read path).
+//! The injector is always compiled in: with an empty
 //! plan, [`FaultInjector::fire`] is a single `is_empty` branch, so
 //! production pays nothing. Firing is deterministic — per-rule atomic
 //! hit counters drive `times`/`every`, and the optional probabilistic
@@ -51,6 +52,15 @@ pub enum FaultSite {
     Accept,
     /// The server per-line read path (`kind=drop` severs mid-stream).
     Read,
+    /// The artifact store's spill (RAM → disk) path. `error` skips the
+    /// write, `corrupt` flips a byte of the encoded file, `truncate`
+    /// writes a torn file, `delay` slows the write — all soft: serving
+    /// results are never affected, only the store's hit rate.
+    Spill,
+    /// The artifact store's load (disk → RAM) path. `error` turns the
+    /// read into a soft miss, `corrupt`/`truncate` mangle the bytes read
+    /// (the validation ladder must catch them), `delay` slows the read.
+    Load,
 }
 
 impl FaultSite {
@@ -64,6 +74,8 @@ impl FaultSite {
             FaultSite::StructureHit => "structure_hit",
             FaultSite::Accept => "accept",
             FaultSite::Read => "read",
+            FaultSite::Spill => "spill",
+            FaultSite::Load => "load",
         }
     }
 
@@ -76,6 +88,8 @@ impl FaultSite {
             "structure_hit" => FaultSite::StructureHit,
             "accept" => FaultSite::Accept,
             "read" => FaultSite::Read,
+            "spill" => FaultSite::Spill,
+            "load" => FaultSite::Load,
             _ => return None,
         })
     }
@@ -91,10 +105,14 @@ pub enum FaultKind {
     Error,
     /// Sleep for the given duration (slow-stage; drives deadline tests).
     Delay(Duration),
-    /// Treat a cached artifact as failing validation (StructureHit only).
+    /// Treat a cached artifact as failing validation (StructureHit), or
+    /// flip a byte of the spilled/loaded bytes (Spill/Load).
     Corrupt,
     /// Sever the connection (server sites only).
     Drop,
+    /// Tear the file: write/read only a prefix of the bytes (Spill/Load
+    /// sites; the store's validation ladder must reject the torn file).
+    Truncate,
 }
 
 /// One rule of a fault plan. See the module docs for the plan syntax.
@@ -160,6 +178,7 @@ impl FaultPlan {
                             "delay" => FaultKind::Delay(Duration::ZERO), // ms fills in below
                             "corrupt" => FaultKind::Corrupt,
                             "drop" => FaultKind::Drop,
+                            "truncate" => FaultKind::Truncate,
                             _ => return Err(bad("kind")),
                         });
                     }
@@ -210,6 +229,7 @@ pub enum FaultAction {
     Delay(Duration),
     Corrupt,
     Drop,
+    Truncate,
 }
 
 impl FaultAction {
@@ -225,9 +245,12 @@ impl FaultAction {
                 std::thread::sleep(d);
                 Ok(())
             }
-            FaultAction::Corrupt | FaultAction::Drop => Err(GfiError::Internal {
-                detail: "injected fault (corrupt/drop at a non-structural site)".into(),
-            }),
+            FaultAction::Corrupt | FaultAction::Drop | FaultAction::Truncate => {
+                Err(GfiError::Internal {
+                    detail: "injected fault (corrupt/drop/truncate at a non-structural site)"
+                        .into(),
+                })
+            }
         }
     }
 }
@@ -304,6 +327,7 @@ impl FaultInjector {
                 FaultKind::Delay(d) => FaultAction::Delay(*d),
                 FaultKind::Corrupt => FaultAction::Corrupt,
                 FaultKind::Drop => FaultAction::Drop,
+                FaultKind::Truncate => FaultAction::Truncate,
             });
         }
         None
@@ -388,6 +412,28 @@ mod tests {
         assert!(FaultPlan::parse("site=apply").is_err()); // missing kind
         assert!(FaultPlan::parse("kind=panic").is_err()); // missing site
         assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn store_sites_and_truncate_parse() {
+        let plan = FaultPlan::parse(
+            "seed=3;site=spill,kind=truncate,times=2;site=load,kind=corrupt;\
+             site=load,backend=sf_tree,kind=error",
+        )
+        .unwrap();
+        assert_eq!(plan.rules.len(), 3);
+        assert_eq!(plan.rules[0].site, FaultSite::Spill);
+        assert_eq!(plan.rules[0].kind, FaultKind::Truncate);
+        assert_eq!(plan.rules[1].site, FaultSite::Load);
+        let inj = FaultInjector::new(plan);
+        assert!(matches!(inj.fire(FaultSite::Spill, "trees|..."), Some(FaultAction::Truncate)));
+        // Backend filter prefix-matches structural keys at store sites.
+        assert!(matches!(inj.fire(FaultSite::Load, "sp_distances"), Some(FaultAction::Corrupt)));
+        assert!(inj.fire(FaultSite::Load, "sp_distances").is_none());
+        assert!(matches!(
+            inj.fire(FaultSite::Load, "sf_tree|u=0.01"),
+            Some(FaultAction::Error(_))
+        ));
     }
 
     #[test]

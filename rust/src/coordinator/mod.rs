@@ -37,6 +37,14 @@
 //! * routes `RfdPjrt` requests to the **AOT/PJRT artifacts** when present
 //!   (`artifacts/manifest.json`), falling back to the pure-Rust kernel —
 //!   the two routes share one cache key on purpose;
+//! * optionally **persists** shared structures through a spill-to-disk
+//!   tier under `artifacts_dir/structures/` ([`store`]): every structure
+//!   is written through to disk on insert, so RAM eviction becomes
+//!   *demotion* rather than loss, and a restarted engine serves its
+//!   first kernel-sweep request at kernel-stage-only cost,
+//!   bitwise-identical. Every load passes a full validation ladder —
+//!   a corrupt, truncated, stale-epoch, or wrong-version file degrades
+//!   to recompute (typed counter), never to a wrong result;
 //! * serves **time-varying scenes** through [`Engine::update_cloud`]:
 //!   a frame update bumps the scene's epoch (cache keys are
 //!   `(cloud, epoch, spec)`, so artifacts of older epochs are retired
@@ -73,6 +81,7 @@ pub mod faults;
 pub mod metrics;
 pub mod quarantine;
 pub mod server;
+pub mod store;
 
 use crate::integrators::rfd::sample_features;
 use crate::integrators::{
@@ -87,6 +96,7 @@ use crate::util::error::{anyhow, bail, Result};
 use cache::{CacheConfig, CacheStats, ShardedCache};
 use faults::{FaultAction, FaultInjector, FaultPlan, FaultSite};
 use quarantine::{QuarantinePolicy, QuarantineRegistry};
+use store::{scene_fingerprint, ArtifactStore};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -132,8 +142,16 @@ struct PreparedEntry {
 /// ```
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
-    /// Directory holding the AOT/PJRT `manifest.json`; `None` disables
-    /// the PJRT route.
+    /// Root artifact directory, shared by two subsystems in disjoint
+    /// namespaces: the AOT/PJRT `manifest.json` (plus its compiled
+    /// programs) lives at the directory's *top level* and enables the
+    /// PJRT route, while the persistent structure store
+    /// ([`EngineConfig::store`]) keeps its files under the
+    /// `structures/` subdirectory. `None` disables both. The path is
+    /// validated once, at build time: an unusable directory degrades
+    /// each consumer with a typed [`ConfigWarning`] (surfaced by
+    /// [`Engine::config_warnings`] and the server's `stats` op) instead
+    /// of failing the build.
     pub artifacts_dir: Option<PathBuf>,
     /// Shard count for each internal cache (lock-contention knob).
     pub shards: usize,
@@ -168,6 +186,22 @@ pub struct EngineConfig {
     /// at or below `max_resident_bytes` to refuse new work *before*
     /// eviction thrashing starts. `u64::MAX` = never shed.
     pub shed_resident_bytes: u64,
+    /// Enables the persistent structure store — the spill-to-disk tier
+    /// under `artifacts_dir/structures/` (see [`store`]). Requires a
+    /// usable [`EngineConfig::artifacts_dir`]; enabling it without one
+    /// degrades to a [`ConfigWarning`] and a RAM-only engine.
+    pub store: bool,
+    /// Disk byte budget for the structure store: past it, the
+    /// oldest-modified spill files are pruned. Independent of the RAM
+    /// budget ([`EngineConfig::max_resident_bytes`]), which continues to
+    /// bound only resident memory. `u64::MAX` = unbounded.
+    pub store_disk_bytes: u64,
+    /// Whether every spill fsyncs before renaming into place
+    /// (durability against power loss, at a spill-latency cost). Off by
+    /// default: a torn file from a crash is caught by the load-time
+    /// validation ladder and recomputed, so correctness never depends
+    /// on this knob.
+    pub store_fsync: bool,
 }
 
 impl Default for EngineConfig {
@@ -181,12 +215,17 @@ impl Default for EngineConfig {
             quarantine: QuarantinePolicy::default(),
             max_inflight_prepares: usize::MAX,
             shed_resident_bytes: u64::MAX,
+            store: false,
+            store_disk_bytes: u64::MAX,
+            store_fsync: false,
         }
     }
 }
 
 impl EngineConfig {
-    /// Sets the AOT/PJRT artifact directory (see [`EngineConfig::artifacts_dir`]).
+    /// Sets the shared artifact directory — PJRT manifests at its top
+    /// level, the persistent structure store under `structures/` (see
+    /// [`EngineConfig::artifacts_dir`] for the layout contract).
     pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
         self.artifacts_dir = Some(dir.into());
         self
@@ -241,6 +280,24 @@ impl EngineConfig {
         self
     }
 
+    /// Enables/disables the persistent structure store.
+    pub fn store(mut self, on: bool) -> Self {
+        self.store = on;
+        self
+    }
+
+    /// Sets the structure store's disk byte budget.
+    pub fn store_disk_bytes(mut self, bytes: u64) -> Self {
+        self.store_disk_bytes = bytes;
+        self
+    }
+
+    /// Sets the structure store's fsync-on-spill policy.
+    pub fn store_fsync(mut self, on: bool) -> Self {
+        self.store_fsync = on;
+        self
+    }
+
     /// Builds an [`Engine`] from this configuration.
     pub fn build(self) -> Engine {
         Engine::with_config(self)
@@ -282,6 +339,20 @@ pub struct RobustnessStats {
     pub deadline_hits: u64,
     /// Cache-miss prepares currently in flight.
     pub in_flight_prepares: usize,
+}
+
+/// A non-fatal configuration problem detected at engine build time: the
+/// named component degraded (the PJRT route falls back to pure Rust,
+/// the structure store runs RAM-only) instead of failing the build.
+/// Surfaced by [`Engine::config_warnings`] and the server's `stats` op
+/// — replacing the old behavior of a silent stderr line.
+#[derive(Clone, Debug)]
+pub struct ConfigWarning {
+    /// Which subsystem degraded: `"artifacts_dir"`, `"pjrt"`, or
+    /// `"store"`.
+    pub component: &'static str,
+    /// What failed and the fallback taken.
+    pub detail: String,
 }
 
 /// Client backoff hint attached to shed (`overloaded`) responses.
@@ -399,9 +470,10 @@ pub struct IntegrateInfo {
     /// Whether a cached prepared integrator served the request.
     pub cache_hit: bool,
     /// Whether *this* request's prepare skipped the structure stage by
-    /// reusing a shared structure artifact built by an earlier spec
-    /// (always `false` on an integrator cache hit, for structure-less
-    /// backends, and on the PJRT route).
+    /// reusing a shared structure artifact — built by an earlier spec
+    /// and found in the RAM cache, or promoted from the persistent disk
+    /// store (always `false` on an integrator cache hit, for
+    /// structure-less backends, and on the PJRT route).
     pub structure_shared: bool,
     /// Whether the PJRT artifact route executed the apply.
     pub used_pjrt: bool,
@@ -448,8 +520,15 @@ pub struct Engine {
     runtime: Option<Arc<PjrtRuntime>>,
     /// Per-backend latency/throughput registry.
     pub metrics: metrics::Metrics,
+    /// Spill-to-disk tier under the structures cache (`None` = RAM
+    /// only; see [`EngineConfig::store`]).
+    store: Option<ArtifactStore>,
+    /// Non-fatal build-time configuration degradations (see
+    /// [`ConfigWarning`]).
+    warnings: Vec<ConfigWarning>,
     /// Deterministic fault injector (empty plan = one branch per site).
-    faults: FaultInjector,
+    /// `Arc`-shared with the store's spill/load paths.
+    faults: Arc<FaultInjector>,
     /// Typed failure lifecycle for evicted/failing keys.
     quarantine: QuarantineRegistry,
     /// Cache-miss prepares currently in flight (load-shed gauge).
@@ -460,9 +539,15 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Creates an unbounded engine; loads the PJRT runtime when
-    /// `artifacts_dir` holds a manifest (otherwise RFD-PJRT falls back to
-    /// pure Rust). Capacity-bounded engines go through [`EngineConfig`].
+    /// Creates an unbounded engine. `artifacts_dir` is the shared
+    /// artifact root described at [`EngineConfig::artifacts_dir`]: a
+    /// PJRT `manifest.json` at its top level enables the PJRT route
+    /// (otherwise RFD-PJRT serves pure Rust), and — when
+    /// [`EngineConfig::store`] is enabled — the persistent structure
+    /// store lives under its `structures/` subdirectory. An unusable
+    /// path degrades with a typed [`ConfigWarning`]; see
+    /// [`Engine::with_config`]. Capacity-bounded engines go through
+    /// [`EngineConfig`].
     pub fn new(artifacts_dir: Option<&std::path::Path>) -> Self {
         Engine::with_config(EngineConfig {
             artifacts_dir: artifacts_dir.map(|p| p.to_path_buf()),
@@ -471,14 +556,83 @@ impl Engine {
     }
 
     /// Creates an engine with explicit capacities (see [`EngineConfig`]).
+    ///
+    /// `artifacts_dir` is validated here, once, for both of its
+    /// consumers: the directory is created if absent, an uncreatable
+    /// path disables the PJRT route *and* the store, and every
+    /// degradation lands as a typed [`ConfigWarning`] in
+    /// [`Engine::config_warnings`] (and the server's `stats` op) — the
+    /// build itself never fails, and nothing is written to stderr.
     pub fn with_config(cfg: EngineConfig) -> Self {
-        let runtime = cfg.artifacts_dir.as_deref().and_then(|d| match PjrtRuntime::new(d) {
-            Ok(rt) => Some(Arc::new(rt)),
-            Err(e) => {
-                eprintln!("[engine] PJRT runtime unavailable: {e:#}");
+        let mut warnings = Vec::new();
+        let artifacts_dir = match cfg.artifacts_dir.clone() {
+            None => None,
+            Some(d) => match std::fs::create_dir_all(&d) {
+                Ok(()) => Some(d),
+                Err(e) => {
+                    warnings.push(ConfigWarning {
+                        component: "artifacts_dir",
+                        detail: format!(
+                            "cannot create {}: {e}; PJRT route and structure store disabled",
+                            d.display()
+                        ),
+                    });
+                    None
+                }
+            },
+        };
+        // The PJRT route is attempted only when a manifest is actually
+        // present: a store-only artifacts dir is a normal configuration,
+        // not a degraded one.
+        let runtime = artifacts_dir
+            .as_deref()
+            .filter(|d| d.join("manifest.json").exists())
+            .and_then(|d| match PjrtRuntime::new(d) {
+                Ok(rt) => Some(Arc::new(rt)),
+                Err(e) => {
+                    warnings.push(ConfigWarning {
+                        component: "pjrt",
+                        detail: format!(
+                            "PJRT runtime unavailable (RFD-PJRT serves pure Rust): {e:#}"
+                        ),
+                    });
+                    None
+                }
+            });
+        let faults = Arc::new(FaultInjector::new(
+            cfg.fault_plan.clone().unwrap_or_else(FaultPlan::from_env),
+        ));
+        let store = match (&artifacts_dir, cfg.store) {
+            (_, false) => None,
+            (None, true) => {
+                warnings.push(ConfigWarning {
+                    component: "store",
+                    detail: "store enabled without a usable artifacts_dir; \
+                             structures stay RAM-only"
+                        .into(),
+                });
                 None
             }
-        });
+            (Some(d), true) => match ArtifactStore::open(
+                d.join("structures"),
+                cfg.store_disk_bytes,
+                cfg.store_fsync,
+                faults.clone(),
+            ) {
+                Ok(s) => Some(s),
+                Err(e) => {
+                    warnings.push(ConfigWarning {
+                        component: "store",
+                        detail: format!(
+                            "cannot open structure store under {}: {e}; \
+                             structures stay RAM-only",
+                            d.display()
+                        ),
+                    });
+                    None
+                }
+            },
+        };
         let shard_cfg = |max_weight_bytes: u64, max_entries: usize| CacheConfig {
             shards: cfg.shards,
             max_weight_bytes,
@@ -494,9 +648,9 @@ impl Engine {
             next_id: AtomicU64::new(1),
             runtime,
             metrics: metrics::Metrics::new(),
-            faults: FaultInjector::new(
-                cfg.fault_plan.clone().unwrap_or_else(FaultPlan::from_env),
-            ),
+            store,
+            warnings,
+            faults,
             quarantine: QuarantineRegistry::new(cfg.quarantine),
             inflight_prepares: AtomicUsize::new(0),
             panics_caught: AtomicU64::new(0),
@@ -524,7 +678,21 @@ impl Engine {
     /// The engine's fault injector (armed only when a plan was
     /// configured; the server consults it for accept/read drops).
     pub fn faults(&self) -> &FaultInjector {
-        &self.faults
+        &*self.faults
+    }
+
+    /// Counter snapshot of the persistent structure store, or `None`
+    /// when the store is disabled (or degraded at build time — see
+    /// [`Engine::config_warnings`]).
+    pub fn store_stats(&self) -> Option<store::StoreStats> {
+        self.store.as_ref().map(|s| s.stats())
+    }
+
+    /// Non-fatal configuration degradations recorded at build time
+    /// (unusable artifacts dir, PJRT load failure, store open failure).
+    /// Empty on a cleanly configured engine.
+    pub fn config_warnings(&self) -> &[ConfigWarning] {
+        &self.warnings
     }
 
     /// The quarantine registry (typed failure lifecycle).
@@ -635,8 +803,14 @@ impl Engine {
     fn insert_cloud(&self, id: u64, entry: Arc<CloudEntry>) {
         let weight = entry.scene.resident_bytes() as u64;
         let outcome = self.clouds.insert(id, entry, weight);
-        for evicted in outcome.evicted {
+        for (evicted, _) in outcome.evicted {
             self.purge_cloud_artifacts(evicted);
+            // An evicted cloud's spilled structures can never validate
+            // again (and a recycled id must not inherit them) — purge
+            // the disk tier too.
+            if let Some(store) = &self.store {
+                store.purge_cloud(evicted);
+            }
         }
     }
 
@@ -682,10 +856,14 @@ impl Engine {
     }
 
     /// Drops a registered cloud and every prepared artifact derived from
-    /// it. Returns whether the cloud existed.
+    /// it — including its spilled structures in the persistent store.
+    /// Returns whether the cloud existed.
     pub fn unregister_cloud(&self, id: u64) -> bool {
         let existed = self.clouds.remove(&id);
         self.purge_cloud_artifacts(id);
+        if let Some(store) = &self.store {
+            store.purge_cloud(id);
+        }
         existed
     }
 
@@ -763,6 +941,11 @@ impl Engine {
                     Arc::new(CloudEntry { scene, name: old.name.clone(), norm: old.norm });
                 self.insert_cloud(id, entry);
                 let dropped = self.purge_cloud_artifacts(id);
+                // Old-geometry spill files can never validate against
+                // the new scene — sweep them now instead of on load.
+                if let Some(store) = &self.store {
+                    store.prune_below_epoch(id, epoch);
+                }
                 return Ok(UpdateInfo { epoch, dropped, ..Default::default() });
             }
             SceneDelta::Moved(dirty) => dirty,
@@ -772,6 +955,9 @@ impl Engine {
         let entry = Arc::new(CloudEntry { scene, name: old.name.clone(), norm: old.norm });
         self.insert_cloud(id, entry.clone());
         let mut info = UpdateInfo { epoch: new_epoch, dirty: dirty.len(), ..Default::default() };
+        // One geometry hash for every write-through spill of this
+        // update (computed only when the store is on).
+        let new_fp = self.store.as_ref().map(|_| scene_fingerprint(&entry.scene));
         // Migrate only artifacts of the epoch we diffed against: an even
         // older straggler (from a prepare that raced a previous update)
         // would be refreshed against the wrong baseline — those are swept
@@ -819,9 +1005,16 @@ impl Engine {
                             info.reused_nodes += rs.reused_nodes;
                             info.rebuilt_nodes += rs.rebuilt_nodes;
                             let w = st2.resident_bytes() as u64;
-                            let _ = self
+                            let out = self
                                 .structures
                                 .insert((id, new_epoch, sk.clone()), st2.clone(), w);
+                            // Write-through + demotion: the refreshed
+                            // structure is durable under the new epoch
+                            // before it serves.
+                            if let (Some(store), Some(fp)) = (&self.store, new_fp) {
+                                store.spill(id, new_epoch, &sk, fp, &st2);
+                            }
+                            self.demote_structures(out.evicted);
                             refreshed_structs.insert(sk, st2);
                         }
                         Ok(None) => {}
@@ -908,6 +1101,11 @@ impl Engine {
         self.integrators.remove_if(|k| k.0 == id && k.1 < new_epoch);
         self.structures.remove_if(|k| k.0 == id && k.1 < new_epoch);
         self.pjrt_preps.remove_if(|k| k.0 == id && k.1 < new_epoch);
+        // Disk-tier janitor: superseded-epoch spill files can never
+        // validate again — sweep them with the same stragglers.
+        if let Some(store) = &self.store {
+            store.prune_below_epoch(id, new_epoch);
+        }
         // New geometry gets a fresh start: retire quarantine records of
         // older epochs (the documented hard-quarantine recovery path).
         self.quarantine.sweep_below_epoch(id, new_epoch);
@@ -920,11 +1118,13 @@ impl Engine {
         match self.clouds.peek(&id) {
             None => {
                 self.purge_cloud_artifacts(id);
+                self.prune_stale_disk(id);
             }
             Some(cur) if cur.scene.epoch != new_epoch => {
                 self.integrators.remove_if(|k| k.0 == id && k.1 == new_epoch);
                 self.structures.remove_if(|k| k.0 == id && k.1 == new_epoch);
                 self.pjrt_preps.remove_if(|k| k.0 == id && k.1 == new_epoch);
+                self.prune_stale_disk(id);
             }
             Some(_) => {}
         }
@@ -935,6 +1135,11 @@ impl Engine {
     /// and PJRT preps) for cloud `id`, keeping the scene registered;
     /// returns how many entries were dropped across the three caches.
     /// The next request for any of them re-prepares transparently.
+    /// The persistent store's disk copies are deliberately *kept*
+    /// (demotion, not loss): the scene is still registered, so spilled
+    /// structures stay valid and the next request promotes them back
+    /// at kernel-stage-only cost instead of recomputing.
+    /// [`Engine::unregister_cloud`] is the op that clears the disk tier.
     pub fn evict_cloud_artifacts(&self, id: u64) -> usize {
         self.purge_cloud_artifacts(id)
     }
@@ -959,6 +1164,40 @@ impl Engine {
         self.integrators.remove_if(|k| k.0 == id)
             + self.structures.remove_if(|k| k.0 == id)
             + self.pjrt_preps.remove_if(|k| k.0 == id)
+    }
+
+    /// Demotes structures the RAM cache evicted into the disk tier —
+    /// byte pressure in RAM must not cost durability. Write-through
+    /// spills make this a cheap existence check in the common case; it
+    /// only writes when the insert-time spill was skipped or failed
+    /// (e.g. an injected spill fault).
+    fn demote_structures(&self, evicted: Vec<(ArtifactKey, StructureArtifact)>) {
+        let Some(store) = &self.store else { return };
+        for ((cloud, epoch, sk), st) in evicted {
+            if store.contains(cloud, epoch, &sk) {
+                continue;
+            }
+            // Only structures whose scene is still live at this epoch
+            // are worth demoting — the header fingerprint comes from
+            // the live scene, so anything staler could never load.
+            let Some(cur) = self.clouds.peek(&cloud) else { continue };
+            if cur.scene.epoch != epoch {
+                continue;
+            }
+            store.spill(cloud, epoch, &sk, scene_fingerprint(&cur.scene), &st);
+        }
+    }
+
+    /// Disk-side mirror of the orphan-insert guard: drops spill files a
+    /// racing unregister/update may have orphaned (the cloud vanished →
+    /// purge; the epoch moved on → prune everything below the current
+    /// one).
+    fn prune_stale_disk(&self, id: u64) {
+        let Some(store) = &self.store else { return };
+        match self.clouds.peek(&id) {
+            None => store.purge_cloud(id),
+            Some(cur) => store.prune_below_epoch(id, cur.scene.epoch),
+        }
     }
 
     /// Bytes currently held by the prepared-integrator cache — the
@@ -1016,7 +1255,10 @@ impl Engine {
     /// store keyed by [`IntegratorSpec::structural_key`], then the
     /// **kernel stage** ([`finish`]) derives the integrator from it. Two
     /// specs differing only in kernel therefore pay the Dijkstra/tree/
-    /// feature work once per `(cloud, epoch)`. Returns
+    /// feature work once per `(cloud, epoch)`. With the persistent
+    /// store enabled, a RAM miss consults the disk tier before
+    /// rebuilding (RAM → disk → recompute), and every fresh build is
+    /// spilled write-through. Returns
     /// `(integrator, cache_hit, structure_shared, seconds)`.
     fn prepared(
         &self,
@@ -1081,6 +1323,29 @@ impl Engine {
                             self.structures.remove(skey);
                             cached = None;
                         }
+                        // RAM miss → disk tier: a validated spill file
+                        // is promoted back into the RAM cache and serves
+                        // at kernel-stage-only cost (`structure_shared`),
+                        // with zero `prepare_structure` work. Any
+                        // invalid file soft-missed inside `load` and we
+                        // fall through to a full rebuild.
+                        if cached.is_none() {
+                            if let Some(store) = &self.store {
+                                let fp = scene_fingerprint(&entry.scene);
+                                if let Some(st) =
+                                    store.load(id, entry.scene.epoch, &skey.2, fp)
+                                {
+                                    let w = st.resident_bytes() as u64;
+                                    let out =
+                                        self.structures.insert(skey.clone(), st.clone(), w);
+                                    self.demote_structures(out.evicted);
+                                    if self.cloud_is_stale(id, entry.scene.epoch) {
+                                        self.structures.remove(skey);
+                                    }
+                                    cached = Some(st);
+                                }
+                            }
+                        }
                         match cached {
                             Some(st) => (Some(st), true),
                             None => {
@@ -1089,12 +1354,21 @@ impl Engine {
                                 })?;
                                 if let Some(st) = &st {
                                     let w = st.resident_bytes() as u64;
-                                    let _ =
+                                    let out =
                                         self.structures.insert(skey.clone(), st.clone(), w);
+                                    // Write-through: durable before first
+                                    // use, so later RAM eviction is
+                                    // demotion, not loss.
+                                    if let Some(store) = &self.store {
+                                        let fp = scene_fingerprint(&entry.scene);
+                                        store.spill(id, entry.scene.epoch, &skey.2, fp, st);
+                                    }
+                                    self.demote_structures(out.evicted);
                                     // Same unregister/stale-epoch orphan
                                     // guard as the integrator insert below.
                                     if self.cloud_is_stale(id, entry.scene.epoch) {
                                         self.structures.remove(skey);
+                                        self.prune_stale_disk(id);
                                     }
                                 }
                                 (st, false)
@@ -1774,6 +2048,86 @@ mod tests {
 
     fn gfi(err: &crate::util::error::Error) -> &GfiError {
         err.downcast_ref::<GfiError>().expect("typed GfiError")
+    }
+
+    #[test]
+    fn unusable_artifacts_dir_degrades_with_typed_warnings() {
+        let tmp = std::env::temp_dir()
+            .join(format!("gfi_cfgwarn_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&tmp);
+        std::fs::create_dir_all(&tmp).unwrap();
+        // A *file* where the directory must go: `create_dir_all` fails
+        // for any uid, making the test deterministic under root too.
+        let blocker = tmp.join("blocker");
+        std::fs::write(&blocker, b"x").unwrap();
+        let eng = EngineConfig::default()
+            .artifacts(blocker.join("sub"))
+            .store(true)
+            .build();
+        assert!(!eng.has_pjrt());
+        assert!(eng.store_stats().is_none(), "store must be disabled");
+        let warns = eng.config_warnings();
+        assert!(
+            warns.iter().any(|w| w.component == "artifacts_dir"),
+            "missing artifacts_dir warning: {warns:?}"
+        );
+        assert!(
+            warns.iter().any(|w| w.component == "store"),
+            "missing store warning: {warns:?}"
+        );
+        // The engine still serves — degraded, not dead.
+        let id = eng.register_mesh(icosphere(1), "s");
+        let n = eng.cloud(id).unwrap().scene.len();
+        let spec = IntegratorSpec::Rfd(RfdConfig { num_features: 4, ..Default::default() });
+        eng.integrate(id, &spec, &rand_field(n, 1, 5)).unwrap();
+        // A cleanly configured engine reports no warnings.
+        assert!(EngineConfig::default().build().config_warnings().is_empty());
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn store_enabled_without_artifacts_dir_warns_and_serves() {
+        let eng = EngineConfig::default().store(true).build();
+        assert!(eng.store_stats().is_none());
+        assert!(
+            eng.config_warnings().iter().any(|w| w.component == "store"),
+            "{:?}",
+            eng.config_warnings()
+        );
+        let id = eng.register_mesh(icosphere(1), "s");
+        let n = eng.cloud(id).unwrap().scene.len();
+        let spec = IntegratorSpec::Rfd(RfdConfig { num_features: 4, ..Default::default() });
+        eng.integrate(id, &spec, &rand_field(n, 1, 6)).unwrap();
+    }
+
+    #[test]
+    fn demoted_structure_promotes_from_disk_bitwise() {
+        let tmp = std::env::temp_dir()
+            .join(format!("gfi_demote_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&tmp);
+        let eng = EngineConfig::default().artifacts(&tmp).store(true).build();
+        assert!(eng.config_warnings().is_empty(), "{:?}", eng.config_warnings());
+        let id = eng.register_mesh(icosphere(2), "s");
+        let n = eng.cloud(id).unwrap().scene.len();
+        let field = rand_field(n, 2, 31);
+        let spec = IntegratorSpec::Sf(SfConfig::default());
+        let (baseline, _) = eng.integrate(id, &spec, &field).unwrap();
+        let s = eng.store_stats().unwrap();
+        assert_eq!(s.spills, 1, "write-through spill on first build: {s:?}");
+        // Force everything out of RAM; the disk tier deliberately
+        // survives an artifact eviction (demotion, not loss).
+        eng.evict_cloud_artifacts(id);
+        assert_eq!(eng.cache_stats().structures.entries, 0);
+        let (out, info) = eng.integrate(id, &spec, &field).unwrap();
+        assert!(!info.cache_hit);
+        assert!(info.structure_shared, "disk hit must skip the structure stage");
+        let s = eng.store_stats().unwrap();
+        assert_eq!(s.disk_hits, 1, "{s:?}");
+        assert_eq!(out.data, baseline.data, "promoted structure diverged");
+        // Unregister clears the disk tier.
+        eng.unregister_cloud(id);
+        assert_eq!(eng.store_stats().unwrap().files, 0);
+        let _ = std::fs::remove_dir_all(&tmp);
     }
 
     #[test]

@@ -260,6 +260,44 @@ fn error_json(e: &crate::util::error::Error) -> Json {
     Json::obj(fields)
 }
 
+/// The `stats`/`health` persistent-store block. `enabled: false` (with
+/// no counters) when the engine runs RAM-only — either by configuration
+/// or because the store degraded at build time (see `config_warnings`
+/// in `stats`).
+fn store_json(engine: &Engine) -> Json {
+    match engine.store_stats() {
+        None => Json::obj(vec![("enabled", Json::Bool(false))]),
+        Some(s) => Json::obj(vec![
+            ("enabled", Json::Bool(true)),
+            ("spills", Json::Num(s.spills as f64)),
+            ("disk_hits", Json::Num(s.disk_hits as f64)),
+            ("disk_misses", Json::Num(s.disk_misses as f64)),
+            ("invalid_files", Json::Num(s.invalid_files as f64)),
+            ("io_errors", Json::Num(s.io_errors as f64)),
+            ("pruned_files", Json::Num(s.pruned_files as f64)),
+            ("disk_resident_bytes", Json::Num(s.disk_resident_bytes as f64)),
+            ("files", Json::Num(s.files as f64)),
+        ]),
+    }
+}
+
+/// The `stats` config-warnings block: non-fatal build-time degradations
+/// (unusable artifacts dir, PJRT load failure, store open failure).
+fn config_warnings_json(engine: &Engine) -> Json {
+    Json::Arr(
+        engine
+            .config_warnings()
+            .iter()
+            .map(|w| {
+                Json::obj(vec![
+                    ("component", Json::Str(w.component.into())),
+                    ("detail", Json::Str(w.detail.clone())),
+                ])
+            })
+            .collect(),
+    )
+}
+
 /// The `stats`/`health` robustness block (engine fault counters).
 fn robustness_json(engine: &Engine) -> Json {
     let rs = engine.robustness_stats();
@@ -452,6 +490,7 @@ fn handle_line(engine: &Engine, line: &str, shared: &ServerShared) -> Result<Jso
                 ("status", Json::Str(status.into())),
                 ("shedding", Json::Bool(shedding)),
                 ("robustness", robustness_json(engine)),
+                ("store", store_json(engine)),
                 ("resident_bytes", Json::Num(engine.resident_bytes() as f64)),
                 (
                     "worker_backlog",
@@ -467,6 +506,8 @@ fn handle_line(engine: &Engine, line: &str, shared: &ServerShared) -> Result<Jso
             ("resident_bytes", Json::Num(engine.resident_bytes() as f64)),
             ("cache", metrics::caches_to_json(&engine.cache_stats())),
             ("robustness", robustness_json(engine)),
+            ("store", store_json(engine)),
+            ("config_warnings", config_warnings_json(engine)),
             (
                 "server",
                 Json::obj(vec![
@@ -566,6 +607,17 @@ mod tests {
         let integ = stats.get("cache").unwrap().get("integrators").unwrap();
         assert_eq!(integ.get("entries").unwrap().as_usize(), Some(1));
         assert!(stats.get("server").unwrap().get("connections_total").is_some());
+        // The persistent-store block is always present; on a store-less
+        // engine it reports disabled, and a clean config has no
+        // warnings.
+        assert_eq!(
+            stats.get("store").unwrap().get("enabled"),
+            Some(&Json::Bool(false))
+        );
+        assert_eq!(
+            stats.get("config_warnings").unwrap().as_arr().map(|v| v.len()),
+            Some(0)
+        );
     }
 
     #[test]

@@ -1,0 +1,706 @@
+//! Persistent artifact store — the disk tier under the structures cache.
+//!
+//! The paper's economics (one expensive structure build amortized over
+//! many integrations) die with the process unless structures survive
+//! restarts. This module is the durable tier: every structure inserted
+//! into the RAM cache is also **spilled** to `artifacts_dir/structures/`
+//! (write-through), so eviction from the byte-budgeted RAM cache is
+//! *demotion* rather than loss, and a restarted engine serves its first
+//! kernel-sweep request at `prepare_shared` (kernel-stage-only) cost —
+//! bitwise-identical, because every numeric field travels as its bit
+//! pattern (`util::codec`).
+//!
+//! # File format
+//!
+//! One file per `(cloud, epoch, structural_key)`, laid out as:
+//!
+//! ```text
+//! offset 0   magic "GFIA"                (4 bytes)
+//! offset 4   format version              (u32 LE)
+//! offset 8   cloud id                    (u64 LE)
+//! offset 16  cloud epoch                 (u64 LE)
+//! offset 24  scene fingerprint           (u64 LE, FNV-1a of geometry)
+//! …          structural key              (length-prefixed UTF-8)
+//! …          payload length              (u64 LE)
+//! …          payload checksum            (u64 LE, FNV-1a of payload)
+//! …          payload                     (StructureArtifact encoding)
+//! ```
+//!
+//! Files live at `structures/c<cloud>/e<epoch>-k<hash16>.art`, keeping
+//! the store namespaced away from the PJRT `manifest.json` that shares
+//! `artifacts_dir`.
+//!
+//! # Validation ladder
+//!
+//! A load re-checks, in order: readability → magic → version → cloud →
+//! epoch → scene fingerprint → structural key → payload length →
+//! checksum → payload decode. **Any** failure is a typed *soft miss*:
+//! the counter (`io_errors` or `invalid_files`) bumps, the bad file is
+//! deleted, and the caller recomputes — the store can lose performance
+//! but never correctness, and it never serves a stale or corrupt
+//! artifact. The scene fingerprint guards against cloud-id collisions
+//! across restarts (ids restart from 1; a different cloud registered
+//! under a recycled id must not inherit its predecessor's structures).
+//!
+//! # Fault injection
+//!
+//! The spill and load paths consult the engine's [`FaultInjector`]
+//! (`site=spill` / `site=load`, kinds error/corrupt/truncate/delay) so
+//! the chaos suite can prove torn and bit-flipped files degrade to
+//! recompute. All injected store faults are soft by construction.
+
+use super::faults::{FaultAction, FaultInjector, FaultSite};
+use crate::integrators::{Scene, StructureArtifact};
+use crate::util::codec::{self, Fnv64, Reader, Writer};
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// File magic: "GFIA" (GFI Artifact).
+pub const MAGIC: [u8; 4] = *b"GFIA";
+/// Current on-disk format version. Bump on any layout change; files
+/// with any other version are soft-missed and recomputed.
+pub const FORMAT_VERSION: u32 = 1;
+/// Byte offset of the format version field (tests doctor it to fake a
+/// wrong-version file).
+pub const OFF_VERSION: usize = 4;
+/// Byte offset of the cloud-id field.
+pub const OFF_CLOUD: usize = 8;
+/// Byte offset of the epoch field (tests doctor it to fake a
+/// stale-epoch file).
+pub const OFF_EPOCH: usize = 16;
+/// Byte offset of the scene-fingerprint field.
+pub const OFF_FINGERPRINT: usize = 24;
+
+/// Counter/occupancy snapshot of the store, surfaced through the
+/// server's `stats`/`health` ops.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StoreStats {
+    /// Artifacts written to disk (write-through inserts + demotions).
+    pub spills: u64,
+    /// Loads that passed the full validation ladder.
+    pub disk_hits: u64,
+    /// Loads that found no file or a file that failed validation.
+    pub disk_misses: u64,
+    /// Files rejected by the validation ladder (bad magic/version/key/
+    /// epoch/fingerprint/checksum/decode) — each one fell back to
+    /// recompute.
+    pub invalid_files: u64,
+    /// Read/write system errors (including injected `error` faults) —
+    /// each one was absorbed as a soft miss or a skipped spill.
+    pub io_errors: u64,
+    /// Files removed by the janitor (superseded epochs, unregistered
+    /// clouds, disk-budget pressure).
+    pub pruned_files: u64,
+    /// Bytes currently on disk under the store root.
+    pub disk_resident_bytes: u64,
+    /// Files currently on disk under the store root.
+    pub files: u64,
+}
+
+/// The spill-to-disk tier under the engine's structures cache. All
+/// operations are infallible from the caller's point of view: failures
+/// bump typed counters and degrade to recompute.
+pub struct ArtifactStore {
+    root: PathBuf,
+    disk_budget: u64,
+    fsync: bool,
+    faults: Arc<FaultInjector>,
+    /// Serializes writers (spill/prune/purge) so byte/file accounting
+    /// stays exact under concurrent spills of the same key. Loads are
+    /// lock-free.
+    write_lock: Mutex<()>,
+    tmp_seq: AtomicU64,
+    disk_bytes: AtomicU64,
+    files: AtomicU64,
+    spills: AtomicU64,
+    disk_hits: AtomicU64,
+    disk_misses: AtomicU64,
+    invalid_files: AtomicU64,
+    io_errors: AtomicU64,
+    pruned_files: AtomicU64,
+}
+
+impl ArtifactStore {
+    /// Opens (creating if absent) a store rooted at `root`
+    /// (`artifacts_dir/structures`). Scans existing files to seed the
+    /// occupancy counters and sweeps leftover `*.tmp` files from a
+    /// previous crash mid-spill.
+    pub fn open(
+        root: PathBuf,
+        disk_budget: u64,
+        fsync: bool,
+        faults: Arc<FaultInjector>,
+    ) -> std::io::Result<Self> {
+        fs::create_dir_all(&root)?;
+        let store = ArtifactStore {
+            root,
+            disk_budget,
+            fsync,
+            faults,
+            write_lock: Mutex::new(()),
+            tmp_seq: AtomicU64::new(0),
+            disk_bytes: AtomicU64::new(0),
+            files: AtomicU64::new(0),
+            spills: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
+            disk_misses: AtomicU64::new(0),
+            invalid_files: AtomicU64::new(0),
+            io_errors: AtomicU64::new(0),
+            pruned_files: AtomicU64::new(0),
+        };
+        let (bytes, count) = store.scan();
+        store.disk_bytes.store(bytes, Ordering::Relaxed);
+        store.files.store(count, Ordering::Relaxed);
+        Ok(store)
+    }
+
+    /// Walks the store, deleting stale `*.tmp` files and summing the
+    /// size/count of `*.art` files.
+    fn scan(&self) -> (u64, u64) {
+        let (mut bytes, mut count) = (0u64, 0u64);
+        for path in self.all_files(true) {
+            if path.extension().map_or(false, |e| e == "tmp") {
+                let _ = fs::remove_file(&path);
+                continue;
+            }
+            if let Ok(md) = fs::metadata(&path) {
+                bytes += md.len();
+                count += 1;
+            }
+        }
+        (bytes, count)
+    }
+
+    /// Every regular file under the two-level `c*/e*-k*.art` layout
+    /// (optionally including `*.tmp` leftovers).
+    fn all_files(&self, include_tmp: bool) -> Vec<PathBuf> {
+        let mut out = Vec::new();
+        let Ok(clouds) = fs::read_dir(&self.root) else { return out };
+        for cd in clouds.flatten() {
+            let Ok(entries) = fs::read_dir(cd.path()) else { continue };
+            for e in entries.flatten() {
+                let p = e.path();
+                let is_art = p.extension().map_or(false, |x| x == "art");
+                let is_tmp = p.extension().map_or(false, |x| x == "tmp");
+                if is_art || (include_tmp && is_tmp) {
+                    out.push(p);
+                }
+            }
+        }
+        out
+    }
+
+    fn cloud_dir(&self, cloud: u64) -> PathBuf {
+        self.root.join(format!("c{cloud}"))
+    }
+
+    /// Content-addressed file path for one `(cloud, epoch, key)` slot.
+    pub fn file_path(&self, cloud: u64, epoch: u64, skey: &str) -> PathBuf {
+        self.cloud_dir(cloud)
+            .join(format!("e{epoch}-k{:016x}.art", codec::fnv1a(skey.as_bytes())))
+    }
+
+    /// Whether a file exists for this slot (no validation — a corrupt
+    /// file still reports `true`; the load path sorts that out).
+    pub fn contains(&self, cloud: u64, epoch: u64, skey: &str) -> bool {
+        self.file_path(cloud, epoch, skey).exists()
+    }
+
+    /// Spills one structure to disk (best effort, never errors out to
+    /// the caller). Writes to a unique temp file and renames into
+    /// place, so a crash mid-write can only leave a `*.tmp` leftover,
+    /// never a torn `*.art` (modulo injected faults, which the
+    /// validation ladder catches on load).
+    pub fn spill(
+        &self,
+        cloud: u64,
+        epoch: u64,
+        skey: &str,
+        fingerprint: u64,
+        art: &StructureArtifact,
+    ) {
+        let mut bytes = encode_file(cloud, epoch, fingerprint, skey, art);
+        match self.faults.fire(FaultSite::Spill, skey) {
+            None => {}
+            Some(FaultAction::Delay(d)) => std::thread::sleep(d),
+            Some(FaultAction::Corrupt) => {
+                // Flip a payload byte: the file lands on disk but the
+                // checksum rejects it on load.
+                if let Some(b) = bytes.last_mut() {
+                    *b ^= 0xff;
+                }
+            }
+            Some(FaultAction::Truncate) => {
+                bytes.truncate(bytes.len() / 2);
+            }
+            Some(_) => {
+                // error/panic/drop at a spill site behave like a failed
+                // write: nothing lands on disk.
+                self.io_errors.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+        let path = self.file_path(cloud, epoch, skey);
+        let _guard = self.lock_writes();
+        match self.write_atomic(&path, &bytes) {
+            Ok(old_size) => {
+                self.spills.fetch_add(1, Ordering::Relaxed);
+                if let Some(old) = old_size {
+                    self.disk_bytes.fetch_sub(old, Ordering::Relaxed);
+                } else {
+                    self.files.fetch_add(1, Ordering::Relaxed);
+                }
+                self.disk_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                self.enforce_budget();
+            }
+            Err(_) => {
+                self.io_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Temp-file write + rename. Returns the size of the file that was
+    /// replaced, if any (for byte accounting). Caller holds the write
+    /// lock.
+    fn write_atomic(&self, path: &Path, bytes: &[u8]) -> std::io::Result<Option<u64>> {
+        let dir = path.parent().expect("store paths always have a parent");
+        fs::create_dir_all(dir)?;
+        let old_size = fs::metadata(path).ok().map(|m| m.len());
+        let tmp = dir.join(format!(
+            ".w{}-{}.tmp",
+            std::process::id(),
+            self.tmp_seq.fetch_add(1, Ordering::Relaxed)
+        ));
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        if self.fsync {
+            f.sync_all()?;
+        }
+        drop(f);
+        if let Err(e) = fs::rename(&tmp, path) {
+            let _ = fs::remove_file(&tmp);
+            return Err(e);
+        }
+        Ok(old_size)
+    }
+
+    /// Loads and fully validates one slot. `None` is always a soft
+    /// miss: absent file, I/O error, or any validation failure (the bad
+    /// file is deleted so it cannot fail again); the caller recomputes.
+    pub fn load(
+        &self,
+        cloud: u64,
+        epoch: u64,
+        skey: &str,
+        fingerprint: u64,
+    ) -> Option<StructureArtifact> {
+        let path = self.file_path(cloud, epoch, skey);
+        let mut bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(e) => {
+                if e.kind() != std::io::ErrorKind::NotFound {
+                    self.io_errors.fetch_add(1, Ordering::Relaxed);
+                }
+                self.disk_misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        match self.faults.fire(FaultSite::Load, skey) {
+            None => {}
+            Some(FaultAction::Delay(d)) => std::thread::sleep(d),
+            Some(FaultAction::Corrupt) => {
+                if let Some(b) = bytes.last_mut() {
+                    *b ^= 0xff;
+                }
+            }
+            Some(FaultAction::Truncate) => bytes.truncate(bytes.len() / 2),
+            Some(_) => {
+                // error/panic/drop at a load site behave like a failed
+                // read: soft miss, recompute.
+                self.io_errors.fetch_add(1, Ordering::Relaxed);
+                self.disk_misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        }
+        match validate_file(cloud, epoch, skey, fingerprint, &bytes) {
+            Ok(art) => {
+                self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                Some(art)
+            }
+            Err(_) => {
+                self.invalid_files.fetch_add(1, Ordering::Relaxed);
+                self.disk_misses.fetch_add(1, Ordering::Relaxed);
+                // Delete the rejected file: it can never validate, and
+                // the recompute's write-through spill will replace it.
+                let _guard = self.lock_writes();
+                self.remove_accounted(&path);
+                None
+            }
+        }
+    }
+
+    /// Janitor: removes every file of `cloud` whose epoch is below
+    /// `epoch` (superseded by an `update_cloud`).
+    pub fn prune_below_epoch(&self, cloud: u64, epoch: u64) {
+        let dir = self.cloud_dir(cloud);
+        let Ok(entries) = fs::read_dir(&dir) else { return };
+        let _guard = self.lock_writes();
+        for e in entries.flatten() {
+            let p = e.path();
+            let Some(file_epoch) = parse_epoch(&p) else { continue };
+            if file_epoch < epoch && self.remove_accounted(&p) {
+                self.pruned_files.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Janitor: removes every file of `cloud` (it was unregistered or
+    /// evicted from the cloud LRU — its artifacts can never validate
+    /// again, and a recycled id must not inherit them).
+    pub fn purge_cloud(&self, cloud: u64) {
+        let dir = self.cloud_dir(cloud);
+        let Ok(entries) = fs::read_dir(&dir) else { return };
+        let _guard = self.lock_writes();
+        for e in entries.flatten() {
+            if self.remove_accounted(&e.path()) {
+                self.pruned_files.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let _ = fs::remove_dir(&dir);
+    }
+
+    /// Deletes `path` and updates the byte/file accounting. Caller
+    /// holds the write lock. Returns whether a file was removed.
+    fn remove_accounted(&self, path: &Path) -> bool {
+        let size = fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+        if fs::remove_file(path).is_ok() {
+            self.disk_bytes.fetch_sub(size, Ordering::Relaxed);
+            self.files.fetch_sub(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// While over the disk byte budget, deletes oldest-modified files
+    /// first. Caller holds the write lock.
+    fn enforce_budget(&self) {
+        if self.disk_bytes.load(Ordering::Relaxed) <= self.disk_budget {
+            return;
+        }
+        let mut files: Vec<(std::time::SystemTime, PathBuf)> = self
+            .all_files(false)
+            .into_iter()
+            .filter_map(|p| {
+                let md = fs::metadata(&p).ok()?;
+                Some((md.modified().ok()?, p))
+            })
+            .collect();
+        files.sort_by(|a, b| a.0.cmp(&b.0));
+        for (_, p) in files {
+            if self.disk_bytes.load(Ordering::Relaxed) <= self.disk_budget {
+                break;
+            }
+            if self.remove_accounted(&p) {
+                self.pruned_files.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn lock_writes(&self) -> std::sync::MutexGuard<'_, ()> {
+        self.write_lock.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Snapshot of the store counters.
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            spills: self.spills.load(Ordering::Relaxed),
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
+            disk_misses: self.disk_misses.load(Ordering::Relaxed),
+            invalid_files: self.invalid_files.load(Ordering::Relaxed),
+            io_errors: self.io_errors.load(Ordering::Relaxed),
+            pruned_files: self.pruned_files.load(Ordering::Relaxed),
+            disk_resident_bytes: self.disk_bytes.load(Ordering::Relaxed),
+            files: self.files.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// FNV-1a fingerprint of a scene's geometry (point coordinates as bit
+/// patterns + the CSR graph arrays). Spill stamps it into the header;
+/// load re-derives it from the *live* scene and rejects a mismatch, so
+/// a recycled cloud id can never resurrect another cloud's structures.
+pub fn scene_fingerprint(scene: &Scene) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_u64(scene.points.len() as u64);
+    for p in &scene.points.points {
+        h.write_f64(p[0]);
+        h.write_f64(p[1]);
+        h.write_f64(p[2]);
+    }
+    match &scene.graph {
+        None => h.write_u64(0),
+        Some(g) => {
+            h.write_u64(1);
+            h.write_u64(g.n as u64);
+            for &o in &g.offsets {
+                h.write_u64(o as u64);
+            }
+            for &t in &g.targets {
+                h.write_u64(t as u64);
+            }
+            for &w in &g.weights {
+                h.write_f64(w);
+            }
+        }
+    }
+    h.finish()
+}
+
+/// Encodes one complete artifact file (header + keyed frame + checksum
+/// + payload) per the module-level format.
+fn encode_file(
+    cloud: u64,
+    epoch: u64,
+    fingerprint: u64,
+    skey: &str,
+    art: &StructureArtifact,
+) -> Vec<u8> {
+    let mut pw = Writer::with_capacity(art.resident_bytes());
+    art.encode_payload(&mut pw);
+    let payload = pw.into_bytes();
+    let mut w = Writer::with_capacity(payload.len() + skey.len() + 64);
+    w.put_bytes(&MAGIC);
+    w.put_u32(FORMAT_VERSION);
+    w.put_u64(cloud);
+    w.put_u64(epoch);
+    w.put_u64(fingerprint);
+    w.put_str(skey);
+    w.put_u64(payload.len() as u64);
+    w.put_u64(codec::fnv1a(&payload));
+    w.put_bytes(&payload);
+    w.into_bytes()
+}
+
+/// The validation ladder (module docs): every rung is a typed error and
+/// the caller treats all of them identically — soft miss, recompute.
+fn validate_file(
+    cloud: u64,
+    epoch: u64,
+    skey: &str,
+    fingerprint: u64,
+    bytes: &[u8],
+) -> Result<StructureArtifact, codec::CodecError> {
+    let mut r = Reader::new(bytes);
+    if r.bytes(4)? != MAGIC {
+        return Err(codec::invalid("bad magic"));
+    }
+    let version = r.u32()?;
+    if version != FORMAT_VERSION {
+        return Err(codec::invalid(format!(
+            "format version {version} != {FORMAT_VERSION}"
+        )));
+    }
+    let file_cloud = r.u64()?;
+    if file_cloud != cloud {
+        return Err(codec::invalid(format!("cloud {file_cloud} != {cloud}")));
+    }
+    let file_epoch = r.u64()?;
+    if file_epoch != epoch {
+        return Err(codec::invalid(format!("epoch {file_epoch} != {epoch}")));
+    }
+    let file_fp = r.u64()?;
+    if file_fp != fingerprint {
+        return Err(codec::invalid("scene fingerprint mismatch"));
+    }
+    let file_key = r.str_()?;
+    if file_key != skey {
+        return Err(codec::invalid("structural key mismatch"));
+    }
+    let plen = r.usize_()?;
+    let checksum = r.u64()?;
+    if r.remaining() != plen {
+        return Err(codec::invalid(format!(
+            "payload length {} != declared {plen}",
+            r.remaining()
+        )));
+    }
+    let payload = r.bytes(plen)?;
+    if codec::fnv1a(payload) != checksum {
+        return Err(codec::invalid("payload checksum mismatch"));
+    }
+    StructureArtifact::decode_payload(&mut Reader::new(payload))
+}
+
+/// Parses the epoch out of an `e<epoch>-k<hash>.art` file name.
+fn parse_epoch(path: &Path) -> Option<u64> {
+    let name = path.file_name()?.to_str()?;
+    let rest = name.strip_prefix('e')?;
+    let (epoch, _) = rest.split_once('-')?;
+    epoch.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::integrators::artifacts::graph_distance_matrix;
+    use crate::util::rng::Rng;
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "gfi_store_{tag}_{}_{}",
+            std::process::id(),
+            Rng::new(0xfeed ^ tag.len() as u64).next_u64()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn no_faults() -> Arc<FaultInjector> {
+        Arc::new(FaultInjector::new(super::super::faults::FaultPlan::default()))
+    }
+
+    fn sample_scene() -> Scene {
+        Scene::from_graph(crate::mesh::grid_mesh(4, 4).to_graph())
+    }
+
+    fn sample_artifact(scene: &Scene) -> StructureArtifact {
+        StructureArtifact::Distances(std::sync::Arc::new(graph_distance_matrix(
+            scene.graph.as_ref().unwrap(),
+        )))
+    }
+
+    #[test]
+    fn spill_then_load_roundtrips_bitwise() {
+        let root = tmp_root("roundtrip");
+        let store = ArtifactStore::open(root.clone(), u64::MAX, false, no_faults()).unwrap();
+        let scene = sample_scene();
+        let fp = scene_fingerprint(&scene);
+        let art = sample_artifact(&scene);
+        store.spill(1, 0, "sp_distances", fp, &art);
+        let s = store.stats();
+        assert_eq!((s.spills, s.files), (1, 1));
+        assert!(s.disk_resident_bytes > 0);
+        let back = store.load(1, 0, "sp_distances", fp).expect("valid file must load");
+        match (&art, &back) {
+            (StructureArtifact::Distances(a), StructureArtifact::Distances(b)) => {
+                assert!(a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+            }
+            _ => panic!("variant changed"),
+        }
+        assert_eq!(store.stats().disk_hits, 1);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn every_validation_rung_soft_misses() {
+        let scene = sample_scene();
+        let fp = scene_fingerprint(&scene);
+        let art = sample_artifact(&scene);
+        // (tag, doctor) pairs covering each rung of the ladder.
+        let cases: Vec<(&str, Box<dyn Fn(&mut Vec<u8>)>)> = vec![
+            ("magic", Box::new(|b: &mut Vec<u8>| b[0] ^= 0xff)),
+            ("version", Box::new(|b: &mut Vec<u8>| b[OFF_VERSION] ^= 0xff)),
+            ("cloud", Box::new(|b: &mut Vec<u8>| b[OFF_CLOUD] ^= 0xff)),
+            ("epoch", Box::new(|b: &mut Vec<u8>| b[OFF_EPOCH] ^= 0xff)),
+            ("fingerprint", Box::new(|b: &mut Vec<u8>| b[OFF_FINGERPRINT] ^= 0xff)),
+            (
+                "checksum",
+                Box::new(|b: &mut Vec<u8>| {
+                    let last = b.len() - 1;
+                    b[last] ^= 0x01;
+                }),
+            ),
+            ("truncate", Box::new(|b: &mut Vec<u8>| b.truncate(b.len() / 2))),
+        ];
+        for (tag, doctor) in cases {
+            let root = tmp_root(tag);
+            let store =
+                ArtifactStore::open(root.clone(), u64::MAX, false, no_faults()).unwrap();
+            store.spill(1, 0, "sp_distances", fp, &art);
+            let path = store.file_path(1, 0, "sp_distances");
+            let mut bytes = fs::read(&path).unwrap();
+            doctor(&mut bytes);
+            fs::write(&path, &bytes).unwrap();
+            assert!(
+                store.load(1, 0, "sp_distances", fp).is_none(),
+                "{tag}: doctored file must not load"
+            );
+            let s = store.stats();
+            assert_eq!(s.invalid_files, 1, "{tag}: invalid_files must bump");
+            assert!(!path.exists(), "{tag}: rejected file must be deleted");
+            let _ = fs::remove_dir_all(&root);
+        }
+    }
+
+    #[test]
+    fn janitor_prunes_epochs_and_purges_clouds() {
+        let root = tmp_root("janitor");
+        let store = ArtifactStore::open(root.clone(), u64::MAX, false, no_faults()).unwrap();
+        let scene = sample_scene();
+        let fp = scene_fingerprint(&scene);
+        let art = sample_artifact(&scene);
+        store.spill(1, 0, "sp_distances", fp, &art);
+        store.spill(1, 1, "sp_distances", fp, &art);
+        store.spill(2, 0, "sp_distances", fp, &art);
+        assert_eq!(store.stats().files, 3);
+        store.prune_below_epoch(1, 1);
+        assert_eq!(store.stats().files, 2);
+        assert!(!store.contains(1, 0, "sp_distances"));
+        assert!(store.contains(1, 1, "sp_distances"));
+        store.purge_cloud(1);
+        assert_eq!(store.stats().files, 1);
+        assert!(store.contains(2, 0, "sp_distances"));
+        assert_eq!(store.stats().pruned_files, 2);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn disk_budget_prunes_and_reopen_rescans() {
+        let root = tmp_root("budget");
+        let scene = sample_scene();
+        let fp = scene_fingerprint(&scene);
+        let art = sample_artifact(&scene);
+        let one_size = {
+            let store =
+                ArtifactStore::open(root.clone(), u64::MAX, false, no_faults()).unwrap();
+            store.spill(1, 0, "a", fp, &art);
+            store.stats().disk_resident_bytes
+        };
+        // Budget for ~2 files: the third spill must prune back down.
+        let store =
+            ArtifactStore::open(root.clone(), one_size * 2 + 8, false, no_faults()).unwrap();
+        assert_eq!(store.stats().files, 1, "reopen must rescan existing files");
+        store.spill(1, 0, "b", fp, &art);
+        store.spill(1, 0, "c", fp, &art);
+        let s = store.stats();
+        assert!(
+            s.disk_resident_bytes <= one_size * 2 + 8,
+            "budget violated: {} > {}",
+            s.disk_resident_bytes,
+            one_size * 2 + 8
+        );
+        assert!(s.pruned_files >= 1);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn recycled_cloud_id_is_rejected_by_fingerprint() {
+        let root = tmp_root("recycle");
+        let store = ArtifactStore::open(root.clone(), u64::MAX, false, no_faults()).unwrap();
+        let scene = sample_scene();
+        let fp = scene_fingerprint(&scene);
+        store.spill(1, 0, "sp_distances", fp, &sample_artifact(&scene));
+        // Same cloud id + epoch, different geometry → different
+        // fingerprint → must soft-miss, not serve the old structure.
+        let other = Scene::from_graph(crate::mesh::grid_mesh(5, 5).to_graph());
+        let fp2 = scene_fingerprint(&other);
+        assert_ne!(fp, fp2);
+        assert!(store.load(1, 0, "sp_distances", fp2).is_none());
+        assert_eq!(store.stats().invalid_files, 1);
+        let _ = fs::remove_dir_all(&root);
+    }
+}

@@ -46,7 +46,7 @@ use super::{GfiError, KernelFn, RefreshStats, Scene};
 use crate::graph::{distances, CsrGraph};
 use crate::integrators::DirtySet;
 use crate::linalg::Mat;
-use crate::util::par;
+use crate::util::{codec, par};
 use std::sync::Arc;
 
 /// One kernel-independent prepared structure, shareable across every
@@ -145,6 +145,105 @@ impl StructureArtifact {
             | StructureArtifact::EpsGraph { .. } => None,
         }
     }
+
+    /// Serializes the artifact payload for the persistent store: one
+    /// variant tag byte, then the variant's own encoding. Every numeric
+    /// field travels as its bit pattern, so a decoded artifact finishes
+    /// into integrators whose outputs are bitwise-identical to the
+    /// original's.
+    pub(crate) fn encode_payload(&self, w: &mut codec::Writer) {
+        match self {
+            StructureArtifact::Distances(d) => {
+                w.put_u8(0);
+                encode_mat(d, w);
+            }
+            StructureArtifact::SfTree(s) => {
+                w.put_u8(1);
+                s.encode(w);
+            }
+            StructureArtifact::RfdFeatures(s) => {
+                w.put_u8(2);
+                s.encode(w);
+            }
+            StructureArtifact::Trees(s) => {
+                w.put_u8(3);
+                s.encode(w);
+            }
+            StructureArtifact::EpsGraph { epsilon, graph } => {
+                w.put_u8(4);
+                w.put_f64(*epsilon);
+                encode_graph(graph, w);
+            }
+        }
+    }
+
+    /// Inverse of [`StructureArtifact::encode_payload`]. Any malformed
+    /// byte — bad tag, inconsistent shapes, short buffer — is a typed
+    /// [`codec::CodecError`]; the store treats it as a soft miss.
+    pub(crate) fn decode_payload(
+        r: &mut codec::Reader<'_>,
+    ) -> Result<StructureArtifact, codec::CodecError> {
+        let art = match r.u8()? {
+            0 => StructureArtifact::Distances(Arc::new(decode_mat(r)?)),
+            1 => StructureArtifact::SfTree(Arc::new(SfStructure::decode(r)?)),
+            2 => StructureArtifact::RfdFeatures(Arc::new(RfdStructure::decode(r)?)),
+            3 => StructureArtifact::Trees(Arc::new(TreesStructure::decode(r)?)),
+            4 => {
+                let epsilon = r.f64()?;
+                let graph = Arc::new(decode_graph(r)?);
+                StructureArtifact::EpsGraph { epsilon, graph }
+            }
+            t => return Err(codec::invalid(format!("bad artifact tag {t}"))),
+        };
+        r.finish()?;
+        Ok(art)
+    }
+}
+
+/// Encodes a dense matrix (dims + bit-pattern data) — shared by the
+/// artifact variants that embed [`Mat`]s.
+pub(crate) fn encode_mat(m: &Mat, w: &mut codec::Writer) {
+    w.put_usize(m.rows);
+    w.put_usize(m.cols);
+    w.put_f64s(&m.data);
+}
+
+/// Inverse of [`encode_mat`], validating `rows·cols == data.len()`.
+pub(crate) fn decode_mat(r: &mut codec::Reader<'_>) -> Result<Mat, codec::CodecError> {
+    let rows = r.usize_()?;
+    let cols = r.usize_()?;
+    let data = r.f64s()?;
+    if rows.checked_mul(cols) != Some(data.len()) {
+        return Err(codec::invalid("matrix dims do not match data length"));
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+/// Encodes a CSR graph (n + offsets/targets/weights) for the store.
+pub(crate) fn encode_graph(g: &CsrGraph, w: &mut codec::Writer) {
+    w.put_usize(g.n);
+    w.put_usizes(&g.offsets);
+    w.put_u32s(&g.targets);
+    w.put_f64s(&g.weights);
+}
+
+/// Inverse of [`encode_graph`], validating CSR invariants (offsets
+/// monotone, final offset == edge count, targets in range).
+pub(crate) fn decode_graph(r: &mut codec::Reader<'_>) -> Result<CsrGraph, codec::CodecError> {
+    let n = r.usize_()?;
+    let offsets = r.usizes()?;
+    let targets = r.u32s()?;
+    let weights = r.f64s()?;
+    if offsets.len() != n + 1
+        || offsets.first() != Some(&0)
+        || offsets.windows(2).any(|w| w[0] > w[1])
+        || *offsets.last().unwrap_or(&0) != targets.len()
+        || targets.len() != weights.len()
+        || targets.iter().any(|&t| t as usize >= n.max(1))
+    {
+        return Err(codec::invalid("CSR graph invariants violated"));
+    }
+    Ok(CsrGraph { n, offsets, targets, weights })
 }
 
 /// Materializes the full `N×N` shortest-path distance matrix of `g`
@@ -230,6 +329,68 @@ mod tests {
         assert_eq!(k[(0, 2)], 0.0);
         assert!((k[(0, 1)] - (-2.0f64).exp()).abs() < 1e-15);
         assert_eq!(k[(2, 2)], 1.0);
+    }
+
+    #[test]
+    fn distances_payload_roundtrips_bitwise() {
+        let g = crate::mesh::grid_mesh(4, 3).to_graph();
+        let art = StructureArtifact::Distances(Arc::new(graph_distance_matrix(&g)));
+        let mut w = codec::Writer::new();
+        art.encode_payload(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = codec::Reader::new(&bytes);
+        let back = StructureArtifact::decode_payload(&mut r).unwrap();
+        match (&art, &back) {
+            (StructureArtifact::Distances(a), StructureArtifact::Distances(b)) => {
+                assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+                assert!(a
+                    .data
+                    .iter()
+                    .zip(&b.data)
+                    .all(|(x, y)| x.to_bits() == y.to_bits()));
+            }
+            _ => panic!("variant changed in roundtrip"),
+        }
+    }
+
+    #[test]
+    fn eps_graph_payload_roundtrips() {
+        let g = crate::mesh::grid_mesh(3, 3).to_graph();
+        let art = StructureArtifact::EpsGraph { epsilon: 0.25, graph: Arc::new(g.clone()) };
+        let mut w = codec::Writer::new();
+        art.encode_payload(&mut w);
+        let bytes = w.into_bytes();
+        let back = StructureArtifact::decode_payload(&mut codec::Reader::new(&bytes)).unwrap();
+        match back {
+            StructureArtifact::EpsGraph { epsilon, graph } => {
+                assert_eq!(epsilon, 0.25);
+                assert_eq!(graph.n, g.n);
+                assert_eq!(graph.offsets, g.offsets);
+                assert_eq!(graph.targets, g.targets);
+                assert_eq!(graph.weights, g.weights);
+            }
+            _ => panic!("variant changed in roundtrip"),
+        }
+    }
+
+    #[test]
+    fn malformed_payload_is_typed_error() {
+        // Bad variant tag.
+        assert!(StructureArtifact::decode_payload(&mut codec::Reader::new(&[9])).is_err());
+        // Valid tag, truncated body.
+        let g = crate::mesh::grid_mesh(3, 3).to_graph();
+        let art = StructureArtifact::Distances(Arc::new(graph_distance_matrix(&g)));
+        let mut w = codec::Writer::new();
+        art.encode_payload(&mut w);
+        let bytes = w.into_bytes();
+        let cut = &bytes[..bytes.len() / 2];
+        assert!(StructureArtifact::decode_payload(&mut codec::Reader::new(cut)).is_err());
+        // Trailing garbage after a valid payload.
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(
+            StructureArtifact::decode_payload(&mut codec::Reader::new(&padded)).is_err()
+        );
     }
 
     #[test]

@@ -29,7 +29,7 @@ use super::{
 };
 use crate::linalg::{eigh_jacobi, expm_pade, lu_factor, thin_qr, Mat, Trans};
 use crate::pointcloud::PointCloud;
-use crate::util::{par, rng::Rng};
+use crate::util::{codec, par, rng::Rng};
 use std::sync::Arc;
 
 /// RFD hyper-parameters (paper §3.2 uses m=16–30, ε=0.01–0.3, λ≈±0.1–0.5).
@@ -185,6 +185,76 @@ impl RfdStructure {
             + mat_bytes(&self.b)
             + self.omegas.len() * std::mem::size_of::<[f64; 3]>()
             + self.q.len() * std::mem::size_of::<f64>()
+    }
+
+    /// Serializes the structure for the persistent artifact store
+    /// (fields are private, so the codec lives with the layout).
+    pub(crate) fn encode(&self, w: &mut codec::Writer) {
+        w.put_usize(self.params.num_features);
+        w.put_f64(self.params.epsilon);
+        match self.params.sigma {
+            None => w.put_u8(0),
+            Some(s) => {
+                w.put_u8(1);
+                w.put_f64(s);
+            }
+        }
+        w.put_f64(self.params.radius);
+        w.put_u64(self.params.seed);
+        w.put_u64(self.omegas.len() as u64);
+        for o in &self.omegas {
+            w.put_f64(o[0]);
+            w.put_f64(o[1]);
+            w.put_f64(o[2]);
+        }
+        w.put_f64s(&self.q);
+        super::artifacts::encode_mat(&self.a, w);
+        super::artifacts::encode_mat(&self.b, w);
+        w.put_f64(self.delta);
+    }
+
+    /// Inverse of [`RfdStructure::encode`]; every field travels as its
+    /// bit pattern, so the decoded structure is bitwise-identical to the
+    /// one spilled.
+    pub(crate) fn decode(r: &mut codec::Reader<'_>) -> Result<Self, codec::CodecError> {
+        let num_features = r.usize_()?;
+        let epsilon = r.f64()?;
+        let sigma = match r.u8()? {
+            0 => None,
+            1 => Some(r.f64()?),
+            t => return Err(codec::invalid(format!("bad sigma tag {t}"))),
+        };
+        let radius = r.f64()?;
+        let seed = r.u64()?;
+        let n_omegas = r.usize_()?;
+        if (r.remaining() as u64) < (n_omegas as u64).saturating_mul(24) {
+            return Err(codec::CodecError::Truncated {
+                needed: n_omegas as u64 * 24,
+                have: r.remaining() as u64,
+            });
+        }
+        let mut omegas = Vec::with_capacity(n_omegas);
+        for _ in 0..n_omegas {
+            omegas.push([r.f64()?, r.f64()?, r.f64()?]);
+        }
+        let q = r.f64s()?;
+        if q.len() != omegas.len() {
+            return Err(codec::invalid("rfd q/omega length mismatch"));
+        }
+        let a = super::artifacts::decode_mat(r)?;
+        let b = super::artifacts::decode_mat(r)?;
+        let delta = r.f64()?;
+        if a.rows != b.rows || a.cols != b.cols || a.cols != 2 * num_features {
+            return Err(codec::invalid("rfd factor shape mismatch"));
+        }
+        Ok(RfdStructure {
+            params: RfdStructuralParams { num_features, epsilon, sigma, radius, seed },
+            omegas,
+            q,
+            a,
+            b,
+            delta,
+        })
     }
 }
 

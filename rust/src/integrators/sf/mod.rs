@@ -47,7 +47,7 @@ use super::{
 use crate::fft::hankel_matvec_multi;
 use crate::graph::CsrGraph;
 use crate::linalg::Mat;
-use crate::util::rng::Rng;
+use crate::util::{codec, rng::Rng};
 
 /// SF hyper-parameters (paper App. D.1.3 / E.1).
 #[derive(Clone, Debug)]
@@ -228,6 +228,171 @@ impl SfStructure {
     /// tables dominate) — the weight the engine's structure store charges.
     pub fn resident_bytes(&self) -> usize {
         std::mem::size_of::<Self>() + node_bytes(&self.root)
+    }
+
+    /// Serializes the tree for the persistent artifact store (fields
+    /// are private, so the codec lives with the layout). The quantized
+    /// tables travel verbatim, so a decoded structure yields the same
+    /// kernel lookups bit for bit.
+    pub(crate) fn encode(&self, w: &mut codec::Writer) {
+        w.put_usize(self.n);
+        w.put_f64(self.params.unit_size);
+        w.put_usize(self.params.threshold);
+        w.put_usize(self.params.separator_size);
+        w.put_u64(self.params.seed);
+        w.put_usize(self.stats.depth);
+        w.put_usize(self.stats.leaves);
+        w.put_usize(self.stats.internals);
+        w.put_usize(self.stats.max_leaf);
+        w.put_u32(self.stats.max_quantized_dist);
+        w.put_usize(self.stats.reused_nodes);
+        w.put_usize(self.stats.rebuilt_nodes);
+        encode_node(&self.root, w);
+    }
+
+    /// Inverse of [`SfStructure::encode`].
+    pub(crate) fn decode(r: &mut codec::Reader<'_>) -> Result<Self, codec::CodecError> {
+        let n = r.usize_()?;
+        let params = SfTreeParams {
+            unit_size: r.f64()?,
+            threshold: r.usize_()?,
+            separator_size: r.usize_()?,
+            seed: r.u64()?,
+        };
+        let stats = SfStats {
+            depth: r.usize_()?,
+            leaves: r.usize_()?,
+            internals: r.usize_()?,
+            max_leaf: r.usize_()?,
+            max_quantized_dist: r.u32()?,
+            reused_nodes: r.usize_()?,
+            rebuilt_nodes: r.usize_()?,
+        };
+        let root = decode_node(r, 0)?;
+        Ok(SfStructure { n, params, root, stats })
+    }
+}
+
+/// Recursion-depth cap for [`decode_node`]: a well-formed separator tree
+/// is `O(log N)` deep; anything past this is a corrupt or adversarial
+/// file and decoding bails with a typed error instead of blowing the
+/// stack.
+const MAX_DECODE_DEPTH: usize = 96;
+
+fn encode_slice(s: &Slice, w: &mut codec::Writer) {
+    w.put_u64(s.members.len() as u64);
+    for &(idx, tau) in &s.members {
+        w.put_u32(idx);
+        w.put_u32(tau);
+    }
+    w.put_u32(s.max_tau);
+}
+
+fn decode_slice(r: &mut codec::Reader<'_>) -> Result<Slice, codec::CodecError> {
+    let n = r.usize_()?;
+    if (r.remaining() as u64) < (n as u64).saturating_mul(8) {
+        return Err(codec::CodecError::Truncated {
+            needed: n as u64 * 8,
+            have: r.remaining() as u64,
+        });
+    }
+    let mut members = Vec::with_capacity(n);
+    for _ in 0..n {
+        members.push((r.u32()?, r.u32()?));
+    }
+    let max_tau = r.u32()?;
+    Ok(Slice { members, max_tau })
+}
+
+fn encode_node(node: &SfNode, w: &mut codec::Writer) {
+    match node {
+        SfNode::Leaf { nodes, dist_q, max_q } => {
+            w.put_u8(0);
+            w.put_u32s(nodes);
+            w.put_u32s(dist_q);
+            w.put_u32(*max_q);
+        }
+        SfNode::Internal {
+            nodes,
+            sep_local,
+            sep_dq,
+            sep_g,
+            slices_a,
+            slices_b,
+            a_child,
+            b_child,
+            max_q,
+        } => {
+            w.put_u8(1);
+            w.put_u32s(nodes);
+            w.put_u32s(sep_local);
+            w.put_u32s(sep_dq);
+            w.put_u32s(sep_g);
+            w.put_u64(slices_a.len() as u64);
+            for s in slices_a {
+                encode_slice(s, w);
+            }
+            w.put_u64(slices_b.len() as u64);
+            for s in slices_b {
+                encode_slice(s, w);
+            }
+            encode_node(a_child, w);
+            encode_node(b_child, w);
+            w.put_u32(*max_q);
+        }
+    }
+}
+
+fn decode_node(r: &mut codec::Reader<'_>, depth: usize) -> Result<SfNode, codec::CodecError> {
+    if depth > MAX_DECODE_DEPTH {
+        return Err(codec::invalid("separator tree deeper than decode cap"));
+    }
+    match r.u8()? {
+        0 => {
+            let nodes = r.u32s()?;
+            let dist_q = r.u32s()?;
+            let max_q = r.u32()?;
+            if dist_q.len() != nodes.len() * nodes.len() {
+                return Err(codec::invalid("leaf dist_q is not n×n"));
+            }
+            Ok(SfNode::Leaf { nodes, dist_q, max_q })
+        }
+        1 => {
+            let nodes = r.u32s()?;
+            let sep_local = r.u32s()?;
+            let sep_dq = r.u32s()?;
+            let sep_g = r.u32s()?;
+            if sep_dq.len() != sep_local.len() * nodes.len()
+                || sep_g.len() != sep_local.len() * sep_local.len()
+            {
+                return Err(codec::invalid("separator table shape mismatch"));
+            }
+            let na = r.usize_()?;
+            let mut slices_a = Vec::with_capacity(na.min(r.remaining()));
+            for _ in 0..na {
+                slices_a.push(decode_slice(r)?);
+            }
+            let nb = r.usize_()?;
+            let mut slices_b = Vec::with_capacity(nb.min(r.remaining()));
+            for _ in 0..nb {
+                slices_b.push(decode_slice(r)?);
+            }
+            let a_child = Box::new(decode_node(r, depth + 1)?);
+            let b_child = Box::new(decode_node(r, depth + 1)?);
+            let max_q = r.u32()?;
+            Ok(SfNode::Internal {
+                nodes,
+                sep_local,
+                sep_dq,
+                sep_g,
+                slices_a,
+                slices_b,
+                a_child,
+                b_child,
+                max_q,
+            })
+        }
+        t => Err(codec::invalid(format!("bad SF node tag {t}"))),
     }
 }
 

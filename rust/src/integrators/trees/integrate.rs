@@ -13,7 +13,7 @@ use crate::fft::hankel_matvec_multi;
 use crate::graph::CsrGraph;
 use crate::integrators::{check_apply_shapes, FieldIntegrator, KernelFn, Workspace};
 use crate::linalg::Mat;
-use crate::util::rng::Rng;
+use crate::util::{codec, rng::Rng};
 
 /// Per-edge decay factors `exp(-λ·w)` (infinite forest-stitch edges decay
 /// to exactly zero).
@@ -447,6 +447,59 @@ impl TreesStructure {
                 .iter()
                 .map(|t| std::mem::size_of::<TreeTopology>() + t.tree.len() * per_node)
                 .sum::<usize>()
+    }
+
+    /// Serializes the ensemble for the persistent artifact store. Only
+    /// the trees themselves travel; traversal orders are recomputed on
+    /// decode (`topo_order` is deterministic).
+    pub(crate) fn encode(&self, w: &mut codec::Writer) {
+        w.put_u8(match self.kind {
+            TreeKind::Mst => 0,
+            TreeKind::Bartal => 1,
+            TreeKind::Frt => 2,
+        });
+        w.put_u64(self.seed);
+        w.put_u64(self.trees.len() as u64);
+        for t in &self.trees {
+            w.put_usizes(&t.tree.parent);
+            w.put_f64s(&t.tree.weight);
+            w.put_usize(t.tree.root);
+            w.put_usize(t.tree.n_original);
+        }
+    }
+
+    /// Inverse of [`TreesStructure::encode`]; recomputes each tree's
+    /// traversal order, which is a pure function of the parent array.
+    pub(crate) fn decode(r: &mut codec::Reader<'_>) -> Result<Self, codec::CodecError> {
+        let kind = match r.u8()? {
+            0 => TreeKind::Mst,
+            1 => TreeKind::Bartal,
+            2 => TreeKind::Frt,
+            t => return Err(codec::invalid(format!("bad tree kind tag {t}"))),
+        };
+        let seed = r.u64()?;
+        let k = r.usize_()?;
+        let mut trees = Vec::with_capacity(k.min(r.remaining()));
+        for _ in 0..k {
+            let parent = r.usizes()?;
+            let weight = r.f64s()?;
+            let root = r.usize_()?;
+            let n_original = r.usize_()?;
+            if weight.len() != parent.len()
+                || root >= parent.len().max(1)
+                || n_original > parent.len()
+                || parent.iter().any(|&p| p >= parent.len())
+            {
+                return Err(codec::invalid("tree arrays inconsistent"));
+            }
+            let tree = WeightedTree { parent, weight, root, n_original };
+            let order = tree.topo_order();
+            trees.push(TreeTopology { tree, order });
+        }
+        if trees.is_empty() {
+            return Err(codec::invalid("empty tree ensemble"));
+        }
+        Ok(TreesStructure { kind, seed, trees })
     }
 }
 

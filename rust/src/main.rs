@@ -3,6 +3,7 @@
 //!
 //! ```text
 //! repro serve [--addr 127.0.0.1:7878] [--artifacts artifacts]
+//!             [--store] [--store-disk-mb MB] [--store-fsync]
 //!             [--shards 8] [--max-resident-mb MB] [--max-clouds N]
 //!             [--max-conns 64] [--read-timeout-ms MS]
 //!             [--write-timeout-ms MS] [--deadline-ms MS]
@@ -21,6 +22,10 @@
 //! default per-request deadline budget, and `--faults` arms the
 //! deterministic fault injector with a chaos plan (same syntax as the
 //! `GFI_FAULTS` env var — see docs/ARCHITECTURE.md, "Failure model").
+//! `--store` enables the persistent structure store (spill-to-disk
+//! cache under `<artifacts>/structures/` — warm restarts serve at
+//! kernel-stage-only cost); `--store-disk-mb` bounds its disk usage
+//! and `--store-fsync` makes every spill fsync before rename.
 //! See docs/ARCHITECTURE.md and docs/PROTOCOL.md.
 //!
 //! (Hand-rolled arg parsing: the offline build has no clap.)
@@ -92,8 +97,21 @@ fn serve(args: &[String]) -> Result<()> {
     };
     let mut cfg = gfi::coordinator::EngineConfig::default();
     let dir = std::path::Path::new(artifacts);
-    if dir.join("manifest.json").exists() {
+    // The artifacts dir now serves two consumers (PJRT manifests at its
+    // top level, the structure store under `structures/`), so it is
+    // passed through whenever either needs it; the engine validates it
+    // once at build time and reports problems as typed config warnings.
+    if flag(args, "--store") || dir.join("manifest.json").exists() {
         cfg = cfg.artifacts(dir);
+    }
+    if flag(args, "--store") {
+        cfg = cfg.store(true);
+    }
+    if let Some(mb) = parse_num("--store-disk-mb")? {
+        cfg = cfg.store_disk_bytes(mb.saturating_mul(1 << 20));
+    }
+    if flag(args, "--store-fsync") {
+        cfg = cfg.store_fsync(true);
     }
     if let Some(n) = parse_num("--shards")? {
         cfg = cfg.shards(n as usize);
@@ -124,12 +142,16 @@ fn serve(args: &[String]) -> Result<()> {
         server_cfg.request_deadline_ms = ms;
     }
     let engine = Arc::new(cfg.build());
+    for w in engine.config_warnings() {
+        eprintln!("warning [{}]: {}", w.component, w.detail);
+    }
     let ecfg = engine.config();
     println!(
-        "gfi coordinator: pjrt={} (artifacts: {artifacts}), shards={}, \
+        "gfi coordinator: pjrt={}, store={} (artifacts: {artifacts}), shards={}, \
          max_resident_bytes={}, max_clouds={}, max_conns={}, \
          read_timeout_ms={}, deadline_ms={}, faults_armed={}",
         engine.has_pjrt(),
+        engine.store_stats().is_some(),
         ecfg.shards,
         if ecfg.max_resident_bytes == u64::MAX {
             "unbounded".to_string()

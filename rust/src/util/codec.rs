@@ -1,0 +1,465 @@
+//! Dependency-free little-endian binary codec for persisted artifacts.
+//!
+//! The artifact store (`coordinator/store.rs`) serializes
+//! `StructureArtifact`s into framed files. This module provides the
+//! byte-level substrate: a [`Writer`] that appends fixed-width
+//! little-endian scalars and length-prefixed sequences to a growable
+//! buffer, a bounds-checked [`Reader`] that decodes them with typed
+//! errors (never panics on malformed input), and [`fnv1a`] /
+//! [`Fnv64`] — the FNV-1a 64-bit hash used both as the content
+//! checksum in artifact frames and as the scene fingerprint.
+//!
+//! Design rules, enforced here so every call site inherits them:
+//!
+//! - **Little-endian everywhere**, via `to_le_bytes`/`from_le_bytes`;
+//!   files written on one host must decode on any other.
+//! - **Lengths are `u64`** on the wire and checked against the number
+//!   of bytes actually remaining *before* any allocation, so a corrupt
+//!   length field is a clean [`CodecError::Truncated`] rather than an
+//!   attempted multi-gigabyte allocation.
+//! - **`f64` travels as its IEEE-754 bit pattern** (`to_bits`), so
+//!   NaN payloads and signed zeros round-trip bitwise — required for
+//!   the repo-wide bitwise-identical-results invariant.
+
+use std::fmt;
+
+/// FNV-1a 64-bit offset basis.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// One-shot FNV-1a 64-bit hash of a byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write(bytes);
+    h.finish()
+}
+
+/// Incremental FNV-1a 64-bit hasher (streaming counterpart of
+/// [`fnv1a`]); used to fingerprint scenes without materializing their
+/// byte representation.
+#[derive(Clone, Debug)]
+pub struct Fnv64(u64);
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    /// Creates a hasher seeded with the FNV offset basis.
+    pub fn new() -> Self {
+        Fnv64(FNV_OFFSET)
+    }
+
+    /// Feeds raw bytes into the hash.
+    pub fn write(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        self.0 = h;
+    }
+
+    /// Feeds one `u64` (as its little-endian bytes).
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    /// Feeds one `f64` as its IEEE-754 bit pattern.
+    pub fn write_f64(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    /// Returns the hash of everything written so far.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Typed decode failure. Every variant is a *soft* condition: callers
+/// (the artifact store's validation ladder) treat any `CodecError` as
+/// "this file is unusable, recompute" — never as corrupted output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecError {
+    /// The buffer ended before the declared data did.
+    Truncated {
+        /// Bytes the decoder needed to make progress.
+        needed: u64,
+        /// Bytes actually remaining in the buffer.
+        have: u64,
+    },
+    /// A field held a value that cannot be valid (bad enum tag,
+    /// non-UTF-8 string, inconsistent dimensions, …).
+    Invalid {
+        /// Human-readable description of the violation.
+        detail: String,
+    },
+    /// Decoding finished but bytes were left over — the frame does not
+    /// match the declared payload exactly.
+    Trailing {
+        /// Number of unconsumed bytes.
+        extra: u64,
+    },
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecError::Truncated { needed, have } => {
+                write!(f, "truncated input: needed {needed} bytes, have {have}")
+            }
+            CodecError::Invalid { detail } => write!(f, "invalid encoding: {detail}"),
+            CodecError::Trailing { extra } => {
+                write!(f, "trailing garbage: {extra} unconsumed bytes")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// Convenience constructor for [`CodecError::Invalid`].
+pub fn invalid(detail: impl Into<String>) -> CodecError {
+    CodecError::Invalid { detail: detail.into() }
+}
+
+/// Append-only little-endian encoder over a growable byte buffer.
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    /// Creates an empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Creates a writer with `cap` bytes preallocated.
+    pub fn with_capacity(cap: usize) -> Self {
+        Writer { buf: Vec::with_capacity(cap) }
+    }
+
+    /// Consumes the writer, returning the encoded bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Number of bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing has been written yet.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Appends raw bytes verbatim (no length prefix).
+    pub fn put_bytes(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Appends one byte.
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Appends a `u32`, little-endian.
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Appends a `u64`, little-endian.
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Appends a `usize` as a `u64` (the wire has no `usize`).
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    /// Appends an `f64` as its IEEE-754 bit pattern, little-endian.
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    /// Appends a length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Appends a length-prefixed `u32` sequence.
+    pub fn put_u32s(&mut self, vs: &[u32]) {
+        self.put_u64(vs.len() as u64);
+        for &v in vs {
+            self.put_u32(v);
+        }
+    }
+
+    /// Appends a length-prefixed `u64` sequence.
+    pub fn put_u64s(&mut self, vs: &[u64]) {
+        self.put_u64(vs.len() as u64);
+        for &v in vs {
+            self.put_u64(v);
+        }
+    }
+
+    /// Appends a length-prefixed `usize` sequence (each as `u64`).
+    pub fn put_usizes(&mut self, vs: &[usize]) {
+        self.put_u64(vs.len() as u64);
+        for &v in vs {
+            self.put_u64(v as u64);
+        }
+    }
+
+    /// Appends a length-prefixed `f64` sequence (bit patterns).
+    pub fn put_f64s(&mut self, vs: &[f64]) {
+        self.put_u64(vs.len() as u64);
+        for &v in vs {
+            self.put_f64(v);
+        }
+    }
+}
+
+/// Bounds-checked little-endian decoder over a borrowed byte slice.
+///
+/// Every read validates available length first and returns
+/// [`CodecError::Truncated`] on shortfall; sequence reads validate the
+/// declared element count against the remaining bytes *before*
+/// allocating.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Wraps a byte slice for decoding from its start.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Current read offset from the start of the buffer.
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    /// Succeeds iff every byte has been consumed; otherwise returns
+    /// [`CodecError::Trailing`]. Call at the end of a frame decode.
+    pub fn finish(&self) -> Result<(), CodecError> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(CodecError::Trailing { extra: self.remaining() as u64 })
+        }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.remaining() < n {
+            return Err(CodecError::Truncated {
+                needed: n as u64,
+                have: self.remaining() as u64,
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Reads `n` raw bytes (no length prefix).
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        self.take(n)
+    }
+
+    /// Reads one byte.
+    pub fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Reads a little-endian `u32`.
+    pub fn u32(&mut self) -> Result<u32, CodecError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Reads a little-endian `u64`.
+    pub fn u64(&mut self) -> Result<u64, CodecError> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    /// Reads a `u64` and checks it fits in `usize` on this host.
+    pub fn usize_(&mut self) -> Result<usize, CodecError> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| invalid(format!("value {v} exceeds usize")))
+    }
+
+    /// Reads an `f64` from its IEEE-754 bit pattern.
+    pub fn f64(&mut self) -> Result<f64, CodecError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Reads a declared-length `u64`, validated so that `len * elem`
+    /// bytes are actually present before any allocation happens.
+    fn seq_len(&mut self, elem: usize) -> Result<usize, CodecError> {
+        let n = self.u64()?;
+        let need = n.checked_mul(elem as u64).ok_or_else(|| invalid("length overflow"))?;
+        if (self.remaining() as u64) < need {
+            return Err(CodecError::Truncated { needed: need, have: self.remaining() as u64 });
+        }
+        Ok(n as usize)
+    }
+
+    /// Reads a length-prefixed UTF-8 string.
+    pub fn str_(&mut self) -> Result<String, CodecError> {
+        let n = self.seq_len(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| invalid("non-UTF-8 string"))
+    }
+
+    /// Reads a length-prefixed `u32` sequence.
+    pub fn u32s(&mut self) -> Result<Vec<u32>, CodecError> {
+        let n = self.seq_len(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u32()?);
+        }
+        Ok(out)
+    }
+
+    /// Reads a length-prefixed `u64` sequence.
+    pub fn u64s(&mut self) -> Result<Vec<u64>, CodecError> {
+        let n = self.seq_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+
+    /// Reads a length-prefixed `usize` sequence (each a wire `u64`).
+    pub fn usizes(&mut self) -> Result<Vec<usize>, CodecError> {
+        let n = self.seq_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.usize_()?);
+        }
+        Ok(out)
+    }
+
+    /// Reads a length-prefixed `f64` sequence (bit patterns).
+    pub fn f64s(&mut self) -> Result<Vec<f64>, CodecError> {
+        let n = self.seq_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = Writer::new();
+        w.put_u8(7);
+        w.put_u32(0xdead_beef);
+        w.put_u64(u64::MAX - 3);
+        w.put_f64(-0.0);
+        w.put_f64(f64::INFINITY);
+        w.put_f64(f64::NAN);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.f64().unwrap(), f64::INFINITY);
+        assert!(r.f64().unwrap().is_nan());
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn sequence_roundtrip() {
+        let mut w = Writer::new();
+        w.put_str("sf_tree|u=0.5");
+        w.put_u32s(&[1, 2, 3]);
+        w.put_usizes(&[0, 10, usize::MAX]);
+        w.put_f64s(&[1.5, -2.25]);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.str_().unwrap(), "sf_tree|u=0.5");
+        assert_eq!(r.u32s().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.usizes().unwrap(), vec![0, 10, usize::MAX]);
+        assert_eq!(r.f64s().unwrap(), vec![1.5, -2.25]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncated_is_typed_not_panic() {
+        let mut w = Writer::new();
+        w.put_u64(42);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes[..5]);
+        match r.u64() {
+            Err(CodecError::Truncated { needed: 8, have: 5 }) => {}
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn huge_declared_length_rejected_before_alloc() {
+        // A corrupt length field claiming 2^60 elements must fail the
+        // remaining-bytes check, not attempt the allocation.
+        let mut w = Writer::new();
+        w.put_u64(1u64 << 60);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert!(matches!(r.f64s(), Err(CodecError::Truncated { .. })));
+    }
+
+    #[test]
+    fn trailing_bytes_detected() {
+        let mut w = Writer::new();
+        w.put_u8(1);
+        w.put_u8(2);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        r.u8().unwrap();
+        assert_eq!(r.finish(), Err(CodecError::Trailing { extra: 1 }));
+    }
+
+    #[test]
+    fn fnv_matches_known_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fnv_streaming_matches_oneshot() {
+        let mut h = Fnv64::new();
+        h.write(b"foo");
+        h.write(b"bar");
+        assert_eq!(h.finish(), fnv1a(b"foobar"));
+        let mut h2 = Fnv64::new();
+        h2.write_u64(0x0102_0304_0506_0708);
+        assert_eq!(h2.finish(), fnv1a(&[8, 7, 6, 5, 4, 3, 2, 1]));
+    }
+}

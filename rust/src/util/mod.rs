@@ -9,11 +9,14 @@
 //! * [`par`] — scoped-thread parallel maps (rayon-lite).
 //! * [`json`] — minimal JSON parser/serializer for the coordinator protocol.
 //! * [`bench`] — a criterion-lite timing harness used by `benches/`.
+//! * [`codec`] — little-endian framed binary writer/reader + FNV-1a
+//!   hashing for the persistent artifact store.
 //! * [`stats`] — summary statistics + error metrics shared by the repro
 //!   drivers (cosine similarity, MSE, relative error, percentiles).
 //! * [`timer`] — scoped wall-clock timing.
 
 pub mod bench;
+pub mod codec;
 pub mod error;
 pub mod json;
 pub mod par;

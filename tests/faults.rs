@@ -11,7 +11,9 @@
 //! * quarantined keys recover once the fault clears (backoff retry, or
 //!   the epoch bump of the next `update_cloud`);
 //! * after the plan is exhausted, results are **bitwise-identical** to
-//!   an unfaulted engine serving the same requests.
+//!   an unfaulted engine serving the same requests;
+//! * persistence-tier faults (`site=spill` / `site=load`) are soft by
+//!   construction — they can cost disk hits, never correctness.
 
 use gfi::coordinator::faults::FaultPlan;
 use gfi::coordinator::{server, Engine, EngineConfig, RequestOpts, UpdateOpts};
@@ -313,4 +315,118 @@ fn zero_inflight_budget_sheds_all_prepares_with_typed_errors() {
     }
     assert_eq!(eng.robustness_stats().sheds, 3);
     assert_eq!(eng.robustness_stats().quarantined_live, 0, "sheds must not quarantine");
+}
+
+/// ISSUE 7 chaos coverage for the persistence tier: a seeded plan fires
+/// every store fault kind — `spill` error/corrupt/truncate/delay on the
+/// writing engine, then `load` error/corrupt/truncate/delay on a
+/// restarted engine — across the five structural backends. The contract
+/// is "the store can lose performance but never correctness": every
+/// request succeeds bitwise-identical to an unfaulted oracle, every
+/// mangled file is rejected by the validation ladder (typed counter
+/// bump) and healed by the recompute's write-through spill, and a
+/// third, unfaulted restart serves everything from disk.
+#[test]
+fn store_chaos_degrades_softly_and_heals() {
+    use gfi::integrators::rfd::RfdConfig;
+    use gfi::integrators::sf::SfConfig;
+    use gfi::integrators::trees::TreeKind;
+    use gfi::integrators::KernelFn;
+
+    let dir = std::env::temp_dir().join(format!("gfi_store_chaos_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    // Five structural backends → five spill (then load) attempts in a
+    // fixed order; the plan's rules are consumed first-match in order.
+    let specs = vec![
+        IntegratorSpec::Sf(SfConfig { threshold: 16, ..Default::default() }),
+        IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() }),
+        IntegratorSpec::BfSp(KernelFn::ExpNeg(2.0)),
+        IntegratorSpec::Trees { kind: TreeKind::Bartal, count: 3, lambda: 2.0, seed: 1 },
+        IntegratorSpec::BfDiffusion { epsilon: 0.25, lambda: -0.2 },
+    ];
+
+    // Unfaulted, store-less oracle.
+    let clean = EngineConfig::default().fault_plan(FaultPlan::default()).build();
+    let cid = clean.register_mesh(gfi::mesh::icosphere(1), "chaos");
+    let n = clean.cloud(cid).unwrap().scene.len();
+    let field = {
+        let mut rng = Rng::new(42);
+        Mat::from_vec(n, 2, (0..n * 2).map(|_| rng.gaussian()).collect())
+    };
+    let want: Vec<Mat> =
+        specs.iter().map(|s| clean.integrate(cid, s, &field).unwrap().0).collect();
+
+    // Engine A: every spill fault kind fires once, in spec order.
+    let spill_plan = FaultPlan::parse(
+        "seed=5;site=spill,kind=error,times=1;site=spill,kind=corrupt,times=1;\
+         site=spill,kind=truncate,times=1;site=spill,kind=delay,ms=1,times=1",
+    )
+    .unwrap();
+    {
+        let a = EngineConfig::default()
+            .artifacts(&dir)
+            .store(true)
+            .fault_plan(spill_plan)
+            .build();
+        let id = a.register_mesh(gfi::mesh::icosphere(1), "chaos");
+        for (spec, w) in specs.iter().zip(&want) {
+            let (out, _) = a.integrate(id, spec, &field).unwrap();
+            assert_eq!(out.data, w.data, "{spec:?}: spill fault leaked into serving");
+        }
+        let s = a.store_stats().unwrap();
+        // error → failed write (nothing lands); corrupt/truncate land as
+        // poisoned files; delay + the unfaulted fifth spill land clean.
+        assert_eq!((s.spills, s.files, s.io_errors), (4, 4, 1), "{s:?}");
+        assert_eq!(a.faults().injected(), 4, "spill rules under-fired");
+    }
+
+    // Engine B (restart): every load fault kind fires once, in spec
+    // order. The on-disk population A left behind: Sf missing (failed
+    // write), Rfd corrupt, BfSp torn, Trees good, BfDiffusion good.
+    let load_plan = FaultPlan::parse(
+        "seed=5;site=load,kind=error,times=1;site=load,kind=corrupt,times=1;\
+         site=load,kind=truncate,times=1;site=load,kind=delay,ms=1,times=1",
+    )
+    .unwrap();
+    {
+        let b = EngineConfig::default()
+            .artifacts(&dir)
+            .store(true)
+            .fault_plan(load_plan)
+            .build();
+        let id = b.register_mesh(gfi::mesh::icosphere(1), "chaos");
+        for (spec, w) in specs.iter().zip(&want) {
+            let (out, _) = b.integrate(id, spec, &field).unwrap();
+            assert_eq!(out.data, w.data, "{spec:?}: load fault leaked into serving");
+        }
+        let s = b.store_stats().unwrap();
+        // Sf: absent file → plain miss (no rule consumed — faults fire
+        // only on bytes that were actually read). Rfd: injected read
+        // error (io_error + miss). BfSp: torn file + injected flip →
+        // ladder reject (invalid). Trees: good file, injected
+        // truncation → ladder reject (invalid). BfDiffusion: delayed
+        // but validates → the one disk hit.
+        assert_eq!(s.disk_hits, 1, "{s:?}");
+        assert_eq!((s.io_errors, s.invalid_files, s.disk_misses), (1, 2, 4), "{s:?}");
+        // Every miss recomputed and re-spilled: the store is healed.
+        assert_eq!((s.spills, s.files), (4, 5), "{s:?}");
+        assert_eq!(b.faults().injected(), 4, "load rules under-fired");
+    }
+
+    // Engine C (second restart, no faults): fully warm — every
+    // structure loads from disk, still bitwise-identical.
+    let c = EngineConfig::default()
+        .artifacts(&dir)
+        .store(true)
+        .fault_plan(FaultPlan::default())
+        .build();
+    let id = c.register_mesh(gfi::mesh::icosphere(1), "chaos");
+    for (spec, w) in specs.iter().zip(&want) {
+        let (out, info) = c.integrate(id, spec, &field).unwrap();
+        assert!(info.structure_shared, "{spec:?}: healed store must serve from disk");
+        assert_eq!(out.data, w.data, "{spec:?}: warm restart diverged");
+    }
+    let s = c.store_stats().unwrap();
+    assert_eq!((s.disk_hits, s.invalid_files, s.io_errors), (5, 0, 0), "{s:?}");
+    let _ = std::fs::remove_dir_all(&dir);
 }
