@@ -123,6 +123,65 @@ fn main() {
     let b512 = Mat::from_vec(512, 512, (0..512 * 512).map(|_| rng.gaussian()).collect());
     results.push(bench.run("linalg/t_matmul/512", || a.t_matmul(&b512)));
 
+    // SIMD dispatch differential (PR 8): identical workloads under pinned
+    // scalar vs native dispatch, covering the three explicit microkernel
+    // sites — the GEMM tile, the kernel-table fill (Rational is the fully
+    // vectorized profile), and BF preprocessing (batched Dijkstra + table
+    // fill). The crate builds with `-C target-cpu=native`, so LLVM
+    // already auto-vectorizes the scalar oracles where it can; the gate
+    // is therefore a *no-regression parity* assert (native ≤ 1.15×
+    // scalar) on CPUs with vector kernels, and the printed ratio is the
+    // tracked number (ROADMAP carries the ≥2× aspiration for the
+    // gather-bound fills on toolchains without autovectorization).
+    {
+        use gfi::util::simd::{self, SimdMode};
+        let detected = simd::kernel_name(); // honors GFI_SIMD
+        let mut rng = Rng::new(3);
+        let a384 = Mat::from_vec(384, 384, (0..384 * 384).map(|_| rng.gaussian()).collect());
+        let mut dist = Mat::zeros(512, 512);
+        for v in dist.data.iter_mut() {
+            *v = rng.gaussian().abs() * 4.0;
+        }
+        let kf = KernelFn::Rational(1.0);
+        let mut rng2 = Rng::new(7);
+        let pc = gfi::pointcloud::random_cloud(1024, &mut rng2);
+        let g = pc.epsilon_graph(0.2, gfi::pointcloud::Norm::LInf, true);
+        let scene1k = Scene::new(pc, Some(g));
+        let bf_spec = IntegratorSpec::BfSp(KernelFn::ExpNeg(4.0));
+
+        let mut pairs = Vec::new();
+        for (mode, tag) in [(SimdMode::Scalar, "scalar"), (SimdMode::Native, "native")] {
+            simd::set_override(Some(mode));
+            let mm = bench.run(&format!("simd/matmul-{tag}/384"), || a384.matmul(&a384));
+            let kt = bench.run(&format!("simd/kernel-table-{tag}/512"), || {
+                gfi::integrators::artifacts::sp_kernel_map(&dist, &kf)
+            });
+            let bf = bench.run(&format!("simd/bf-preprocess-{tag}/1024"), || {
+                prepare(&scene1k, &bf_spec).unwrap()
+            });
+            pairs.push([mm, kt, bf]);
+        }
+        simd::set_override(None);
+        let [scalar_runs, native_runs] = [pairs.remove(0), pairs.remove(0)];
+        for (s, v) in scalar_runs.iter().zip(&native_runs) {
+            let ratio = s.median / v.median;
+            println!("simd speedup {}: {ratio:.2}x (kernel: {detected})", v.name);
+            if detected != "scalar" {
+                // Parity gate: explicit SIMD must never lose to the
+                // (auto-vectorized) scalar oracle by more than noise.
+                assert!(
+                    v.median <= s.median * 1.15,
+                    "{}: native ({:.0} ns) regressed vs scalar ({:.0} ns)",
+                    v.name,
+                    v.median * 1e9,
+                    s.median * 1e9
+                );
+            }
+        }
+        results.extend(scalar_runs);
+        results.extend(native_runs);
+    }
+
     let out = "BENCH_integrators.json";
     match write_json(out, &results) {
         Ok(()) => println!("\nwrote {out} ({} benchmarks)", results.len()),

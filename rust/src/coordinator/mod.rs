@@ -202,6 +202,13 @@ pub struct EngineConfig {
     /// validation ladder and recomputed, so correctness never depends
     /// on this knob.
     pub store_fsync: bool,
+    /// SIMD dispatch override for the numeric kernels (see
+    /// [`crate::util::simd`]). `None` (the default) leaves dispatch to
+    /// the `GFI_SIMD` env var and runtime CPU detection; `Some(mode)`
+    /// pins it at build time. **Process-global**: the override is a
+    /// process-wide latch shared by every engine (the kernels read one
+    /// dispatch state), so the last engine built with `Some(..)` wins.
+    pub simd: Option<crate::util::simd::SimdMode>,
 }
 
 impl Default for EngineConfig {
@@ -218,6 +225,7 @@ impl Default for EngineConfig {
             store: false,
             store_disk_bytes: u64::MAX,
             store_fsync: false,
+            simd: None,
         }
     }
 }
@@ -295,6 +303,13 @@ impl EngineConfig {
     /// Sets the structure store's fsync-on-spill policy.
     pub fn store_fsync(mut self, on: bool) -> Self {
         self.store_fsync = on;
+        self
+    }
+
+    /// Pins the SIMD dispatch mode (process-global — see
+    /// [`EngineConfig::simd`]).
+    pub fn simd(mut self, mode: crate::util::simd::SimdMode) -> Self {
+        self.simd = Some(mode);
         self
     }
 
@@ -565,6 +580,10 @@ impl Engine {
     /// build itself never fails, and nothing is written to stderr.
     pub fn with_config(cfg: EngineConfig) -> Self {
         let mut warnings = Vec::new();
+        if let Some(mode) = cfg.simd {
+            // Process-global latch, documented on `EngineConfig::simd`.
+            crate::util::simd::set_override(Some(mode));
+        }
         let artifacts_dir = match cfg.artifacts_dir.clone() {
             None => None,
             Some(d) => match std::fs::create_dir_all(&d) {

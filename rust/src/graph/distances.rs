@@ -21,6 +21,7 @@
 use super::CsrGraph;
 use crate::linalg::Mat;
 use crate::util::par;
+use crate::util::simd::{self, Kern};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Flat binary min-heap push on `(dist, node)` pairs.
@@ -181,29 +182,118 @@ impl SsspScratch {
                 heap_push(&mut self.heap, (0.0, s as u32));
             }
         }
+        // SIMD prefilter needs i32-safe gather indices; graphs beyond
+        // 2^31 vertices (never in practice) fall back to scalar.
+        let kern = if g.n <= i32::MAX as usize { simd::kern() } else { Kern::Scalar };
         while let Some((d, v)) = heap_pop(&mut self.heap) {
             let vu = v as usize;
             if d > self.dist[vu] {
                 continue; // stale entry (lazy deletion)
             }
             let (lo, hi) = (g.offsets[vu], g.offsets[vu + 1]);
-            for e in lo..hi {
+            let mut e = lo;
+            // AVX2 prefilter over 4 edges at a time: gather the 4 live
+            // distances, compute nd = d + w (exactly-rounded vector add —
+            // the same f64 each scalar lane would compute), and skip the
+            // whole chunk when no lane improves. This is sound even with
+            // duplicate targets in one chunk: `dist` only ever decreases,
+            // so nd ≥ gathered ⟹ nd ≥ live ⟹ the scalar check would
+            // fail too. Lanes that *do* pass re-run the exact scalar
+            // relaxation in lane order (with the live distance), so the
+            // heap evolves bitwise-identically to the scalar path.
+            #[cfg(target_arch = "x86_64")]
+            if kern == Kern::Avx2 {
+                while e + 4 <= hi {
+                    // SAFETY: AVX2 is detected and 4 targets/weights
+                    // starting at `e` are in bounds (e + 4 <= hi).
+                    let mask = unsafe {
+                        relax_mask_avx2(&self.dist, &g.targets[e..], &g.weights[e..], d)
+                    };
+                    if mask != 0 {
+                        for lane in 0..4usize {
+                            if mask & (1 << lane) != 0 {
+                                let ei = e + lane;
+                                let u = g.targets[ei] as usize;
+                                let nd = d + g.weights[ei];
+                                relax_edge(
+                                    &mut self.dist,
+                                    &mut self.touched,
+                                    &mut self.heap,
+                                    &mut assign,
+                                    vu,
+                                    u,
+                                    nd,
+                                );
+                            }
+                        }
+                    }
+                    e += 4;
+                }
+            }
+            let _ = kern;
+            while e < hi {
                 let u = g.targets[e] as usize;
                 let nd = d + g.weights[e];
-                if nd < self.dist[u] {
-                    if self.dist[u] == f64::INFINITY {
-                        self.touched.push(u as u32);
-                    }
-                    self.dist[u] = nd;
-                    if let Some(a) = assign.as_deref_mut() {
-                        let label = a[vu];
-                        a[u] = label;
-                    }
-                    heap_push(&mut self.heap, (nd, u as u32));
-                }
+                relax_edge(
+                    &mut self.dist,
+                    &mut self.touched,
+                    &mut self.heap,
+                    &mut assign,
+                    vu,
+                    u,
+                    nd,
+                );
+                e += 1;
             }
         }
     }
+}
+
+/// The scalar relaxation — the oracle the AVX2 prefilter defers to. Both
+/// the tail loop and every prefilter-passing lane run exactly this body
+/// against the live `dist`, so SIMD on/off cannot change any committed
+/// distance, touch order, or heap push sequence.
+#[inline]
+fn relax_edge(
+    dist: &mut [f64],
+    touched: &mut Vec<u32>,
+    heap: &mut Vec<(f64, u32)>,
+    assign: &mut Option<&mut [u32]>,
+    vu: usize,
+    u: usize,
+    nd: f64,
+) {
+    if nd < dist[u] {
+        if dist[u] == f64::INFINITY {
+            touched.push(u as u32);
+        }
+        dist[u] = nd;
+        if let Some(a) = assign.as_deref_mut() {
+            let label = a[vu];
+            a[u] = label;
+        }
+        heap_push(heap, (nd, u as u32));
+    }
+}
+
+/// Lane mask of edges whose tentative distance `d + w[lane]` beats the
+/// gathered (possibly stale-high, never stale-low) current distance of
+/// its target. `_CMP_LT_OQ` matches scalar `<` exactly, including the
+/// all-false behaviour on NaN weights.
+///
+/// # Safety
+/// Requires AVX2; `targets`/`weights` must hold ≥ 4 entries and every
+/// target must index into `dist` (CSR invariant).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn relax_mask_avx2(dist: &[f64], targets: &[u32], weights: &[f64], d: f64) -> i32 {
+    use std::arch::x86_64::*;
+    debug_assert!(targets.len() >= 4 && weights.len() >= 4);
+    let idx = _mm_loadu_si128(targets.as_ptr() as *const __m128i);
+    let cur = _mm256_i32gather_pd::<8>(dist.as_ptr(), idx);
+    let nd = _mm256_add_pd(_mm256_set1_pd(d), _mm256_loadu_pd(weights.as_ptr()));
+    let lt = _mm256_cmp_pd::<_CMP_LT_OQ>(nd, cur);
+    _mm256_movemask_pd(lt)
 }
 
 /// Single-source Dijkstra. Unreachable vertices get `f64::INFINITY`.

@@ -18,6 +18,8 @@
 //! | [`RfdFeatures`] | ω sampling + feature fill | `Rfd`/`RfdPjrt` (any Λ/ridge) | 2m×2m Woodbury core |
 //! | [`Trees`] | k tree samplings | `Trees` (any λ) | per-edge decay tables |
 //! | [`EpsGraph`] | ε-NN graph build | `BfDiffusion` (any λ) | dense `expm(ΛW)` |
+//! | [`DistancesF32`] | [`distances_to_f32`] quantization | `BfSp` under an f32 precision policy | `f` evaluation, f32 table |
+//! | [`RfdFeaturesF32`] | f64 feature build + quantization | `Rfd` under an f32 precision policy | 2m×2m Woodbury core |
 //!
 //! The serving engine stores artifacts in a byte-budgeted
 //! [`ShardedCache`](crate::coordinator::cache::ShardedCache) keyed by
@@ -36,16 +38,19 @@
 //! [`RfdFeatures`]: StructureArtifact::RfdFeatures
 //! [`Trees`]: StructureArtifact::Trees
 //! [`EpsGraph`]: StructureArtifact::EpsGraph
+//! [`DistancesF32`]: StructureArtifact::DistancesF32
+//! [`RfdFeaturesF32`]: StructureArtifact::RfdFeaturesF32
 //! [`DenseStructure::shortest_path`]: crate::gw::DenseStructure::shortest_path
 //! [`IntegratorSpec::structural_key`]: crate::integrators::IntegratorSpec::structural_key
 
-use super::rfd::RfdStructure;
+use super::rfd::{RfdStructure, RfdStructureF32};
 use super::sf::SfStructure;
 use super::trees::TreesStructure;
 use super::{GfiError, KernelFn, RefreshStats, Scene};
 use crate::graph::{distances, CsrGraph};
 use crate::integrators::DirtySet;
-use crate::linalg::Mat;
+use crate::linalg::{Mat, MatF32};
+use crate::util::simd::{self, Kern};
 use crate::util::{codec, par};
 use std::sync::Arc;
 
@@ -76,6 +81,14 @@ pub enum StructureArtifact {
         /// The ε-NN graph.
         graph: Arc<CsrGraph>,
     },
+    /// f32-quantized shortest-path distances ([`distances_to_f32`]:
+    /// non-finite entries normalized to `+∞`), shared by `BfSp` specs
+    /// under either f32 precision policy. Half the resident bytes of
+    /// [`Distances`](StructureArtifact::Distances).
+    DistancesF32(Arc<MatF32>),
+    /// f32-quantized RFD feature factors (built in f64, then quantized
+    /// once), shared by `Rfd` specs under either f32 precision policy.
+    RfdFeaturesF32(Arc<RfdStructureF32>),
 }
 
 impl StructureArtifact {
@@ -87,6 +100,8 @@ impl StructureArtifact {
             StructureArtifact::RfdFeatures(_) => "rfd_features",
             StructureArtifact::Trees(_) => "trees",
             StructureArtifact::EpsGraph { .. } => "eps_graph",
+            StructureArtifact::DistancesF32(_) => "distances_f32",
+            StructureArtifact::RfdFeaturesF32(_) => "rfd_features_f32",
         }
     }
 
@@ -102,6 +117,10 @@ impl StructureArtifact {
                 StructureArtifact::RfdFeatures(s) => s.resident_bytes(),
                 StructureArtifact::Trees(s) => s.resident_bytes(),
                 StructureArtifact::EpsGraph { graph, .. } => graph.resident_bytes(),
+                StructureArtifact::DistancesF32(d) => {
+                    d.data.len() * std::mem::size_of::<f32>()
+                }
+                StructureArtifact::RfdFeaturesF32(s) => s.resident_bytes(),
             }
     }
 
@@ -140,9 +159,15 @@ impl StructureArtifact {
                     )
                 }))
             }
+            // The f32 variants are quantized snapshots of an f64 build;
+            // refreshing them incrementally would compound quantization
+            // with refresh, so they rebuild from scratch like the other
+            // globally-geometry-dependent artifacts.
             StructureArtifact::Distances(_)
             | StructureArtifact::Trees(_)
-            | StructureArtifact::EpsGraph { .. } => None,
+            | StructureArtifact::EpsGraph { .. }
+            | StructureArtifact::DistancesF32(_)
+            | StructureArtifact::RfdFeaturesF32(_) => None,
         }
     }
 
@@ -150,8 +175,9 @@ impl StructureArtifact {
     /// variant tag byte, then the variant's own encoding. Every numeric
     /// field travels as its bit pattern, so a decoded artifact finishes
     /// into integrators whose outputs are bitwise-identical to the
-    /// original's.
-    pub(crate) fn encode_payload(&self, w: &mut codec::Writer) {
+    /// original's. Public as the store's codec substrate so external
+    /// round-trip/fuzz tests can drive it directly.
+    pub fn encode_payload(&self, w: &mut codec::Writer) {
         match self {
             StructureArtifact::Distances(d) => {
                 w.put_u8(0);
@@ -174,13 +200,21 @@ impl StructureArtifact {
                 w.put_f64(*epsilon);
                 encode_graph(graph, w);
             }
+            StructureArtifact::DistancesF32(d) => {
+                w.put_u8(5);
+                encode_mat_f32(d, w);
+            }
+            StructureArtifact::RfdFeaturesF32(s) => {
+                w.put_u8(6);
+                s.encode(w);
+            }
         }
     }
 
     /// Inverse of [`StructureArtifact::encode_payload`]. Any malformed
     /// byte — bad tag, inconsistent shapes, short buffer — is a typed
     /// [`codec::CodecError`]; the store treats it as a soft miss.
-    pub(crate) fn decode_payload(
+    pub fn decode_payload(
         r: &mut codec::Reader<'_>,
     ) -> Result<StructureArtifact, codec::CodecError> {
         let art = match r.u8()? {
@@ -193,6 +227,8 @@ impl StructureArtifact {
                 let graph = Arc::new(decode_graph(r)?);
                 StructureArtifact::EpsGraph { epsilon, graph }
             }
+            5 => StructureArtifact::DistancesF32(Arc::new(decode_mat_f32(r)?)),
+            6 => StructureArtifact::RfdFeaturesF32(Arc::new(RfdStructureF32::decode(r)?)),
             t => return Err(codec::invalid(format!("bad artifact tag {t}"))),
         };
         r.finish()?;
@@ -217,6 +253,25 @@ pub(crate) fn decode_mat(r: &mut codec::Reader<'_>) -> Result<Mat, codec::CodecE
         return Err(codec::invalid("matrix dims do not match data length"));
     }
     Ok(Mat::from_vec(rows, cols, data))
+}
+
+/// Encodes an f32 dense matrix (dims + bit-pattern data) — the
+/// mixed-precision twin of [`encode_mat`].
+pub(crate) fn encode_mat_f32(m: &MatF32, w: &mut codec::Writer) {
+    w.put_usize(m.rows);
+    w.put_usize(m.cols);
+    w.put_f32s(&m.data);
+}
+
+/// Inverse of [`encode_mat_f32`], validating `rows·cols == data.len()`.
+pub(crate) fn decode_mat_f32(r: &mut codec::Reader<'_>) -> Result<MatF32, codec::CodecError> {
+    let rows = r.usize_()?;
+    let cols = r.usize_()?;
+    let data = r.f32s()?;
+    if rows.checked_mul(cols) != Some(data.len()) {
+        return Err(codec::invalid("matrix dims do not match data length"));
+    }
+    Ok(MatF32::from_vec(rows, cols, data))
 }
 
 /// Encodes a CSR graph (n + offsets/targets/weights) for the store.
@@ -265,6 +320,7 @@ pub fn graph_distance_matrix(g: &CsrGraph) -> Mat {
 pub fn sp_kernel_from_distances(mut dist: Mat, f: &KernelFn) -> Mat {
     let n = dist.cols;
     let rows = dist.rows;
+    let kern = simd::kern();
     {
         let cells = par::as_send_cells(&mut dist.data);
         par::par_for(rows, 16, |i| {
@@ -272,9 +328,7 @@ pub fn sp_kernel_from_distances(mut dist: Mat, f: &KernelFn) -> Mat {
             // disjoint slices of the matrix buffer.
             let row =
                 unsafe { std::slice::from_raw_parts_mut(cells.get(i * n) as *mut f64, n) };
-            for x in row.iter_mut() {
-                *x = if x.is_finite() { f.eval(*x) } else { 0.0 };
-            }
+            eval_kernel_inplace(kern, f, row);
         });
     }
     dist
@@ -289,6 +343,7 @@ pub fn sp_kernel_from_distances(mut dist: Mat, f: &KernelFn) -> Mat {
 pub fn sp_kernel_map(dist: &Mat, f: &KernelFn) -> Mat {
     let (rows, n) = (dist.rows, dist.cols);
     let mut out = Mat::zeros(rows, n);
+    let kern = simd::kern();
     {
         let cells = par::as_send_cells(&mut out.data);
         par::par_for(rows, 16, |i| {
@@ -296,8 +351,101 @@ pub fn sp_kernel_map(dist: &Mat, f: &KernelFn) -> Mat {
             // are disjoint slices.
             let row =
                 unsafe { std::slice::from_raw_parts_mut(cells.get(i * n) as *mut f64, n) };
+            row.copy_from_slice(dist.row(i));
+            eval_kernel_inplace(kern, f, row);
+        });
+    }
+    out
+}
+
+/// One flat kernel-table row: `x ← f(x)` for finite entries, `0` for
+/// non-finite ones (the decaying-kernel unreachable convention). The
+/// AVX2 path fully vectorizes [`KernelFn::Rational`] (multiply, add, and
+/// divide are exactly rounded, so it is bitwise-identical to the scalar
+/// loop); kernels built on `exp`/`sin` stay on the scalar path — libm
+/// calls are per-lane scalar either way, and a vectorized argument would
+/// buy nothing while the bitwise-oracle contract forbids reassociation.
+pub(crate) fn eval_kernel_inplace(kern: Kern, f: &KernelFn, row: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if kern == Kern::Avx2 {
+        if let KernelFn::Rational(l) = f {
+            // SAFETY: Kern::Avx2 implies AVX2 was runtime-detected.
+            unsafe { rational_row_avx2(*l, row) };
+            return;
+        }
+    }
+    let _ = kern;
+    for x in row.iter_mut() {
+        *x = if x.is_finite() { f.eval(*x) } else { 0.0 };
+    }
+}
+
+/// AVX2 lane-parallel `1/(1+λx)` with a finiteness mask. Division is
+/// exactly rounded (IEEE-754), so each lane reproduces the scalar
+/// `1.0 / (1.0 + l * x)` bit-for-bit; non-finite inputs (`+∞`
+/// unreachable markers, NaN) compare false under `_CMP_LT_OQ` and are
+/// masked to `+0.0`, exactly like the scalar `is_finite` branch.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn rational_row_avx2(l: f64, row: &mut [f64]) {
+    use std::arch::x86_64::*;
+    let n = row.len();
+    let lv = _mm256_set1_pd(l);
+    let one = _mm256_set1_pd(1.0);
+    let inf = _mm256_set1_pd(f64::INFINITY);
+    let abs_mask = _mm256_set1_pd(f64::from_bits(0x7fff_ffff_ffff_ffff));
+    let mut i = 0;
+    while i + 4 <= n {
+        let p = row.as_mut_ptr().add(i);
+        let x = _mm256_loadu_pd(p);
+        // finite(x) ⇔ |x| < ∞ (NaN compares false under OQ).
+        let finite = _mm256_cmp_pd::<_CMP_LT_OQ>(_mm256_and_pd(x, abs_mask), inf);
+        let y = _mm256_div_pd(one, _mm256_add_pd(one, _mm256_mul_pd(lv, x)));
+        _mm256_storeu_pd(p, _mm256_and_pd(y, finite));
+        i += 4;
+    }
+    for x in &mut row[i..] {
+        *x = if x.is_finite() { 1.0 / (1.0 + l * *x) } else { 0.0 };
+    }
+}
+
+/// Quantizes a shortest-path distance matrix to f32 storage for the
+/// mixed-precision policy, normalizing **every** non-finite entry
+/// (`+∞` unreachable markers, and NaN from degenerate weights) to
+/// `f32::INFINITY` — so the downstream "finite ⇒ eval, else 0" kernel
+/// convention classifies exactly the same entries in both precisions.
+/// Finite f64 distances beyond f32 range saturate to `+∞` via the `as`
+/// cast, which also (correctly) classifies them unreachable-at-f32.
+pub fn distances_to_f32(d: &Mat) -> MatF32 {
+    MatF32 {
+        rows: d.rows,
+        cols: d.cols,
+        data: d
+            .data
+            .iter()
+            .map(|&x| if x.is_finite() { x as f32 } else { f32::INFINITY })
+            .collect(),
+    }
+}
+
+/// Kernel stage over f32-quantized distances: widens each finite
+/// distance exactly to f64, evaluates `f` in f64, and rounds the result
+/// once to f32 (non-finite → `0`, the same convention as
+/// [`sp_kernel_map`]). Both f32 precision policies build their tables
+/// through this single path, so `f32` and `f32_acc_f64` share one
+/// bitwise-identical kernel table and differ only at accumulation.
+pub fn sp_kernel_map_f32(dist: &MatF32, f: &KernelFn) -> MatF32 {
+    let (rows, n) = (dist.rows, dist.cols);
+    let mut out = MatF32::zeros(rows, n);
+    {
+        let cells = par::as_send_cells(&mut out.data);
+        par::par_for(rows, 16, |i| {
+            // SAFETY: each row index is visited exactly once; output rows
+            // are disjoint slices.
+            let row =
+                unsafe { std::slice::from_raw_parts_mut(cells.get(i * n) as *mut f32, n) };
             for (o, &x) in row.iter_mut().zip(dist.row(i)) {
-                *o = if x.is_finite() { f.eval(x) } else { 0.0 };
+                *o = if x.is_finite() { f.eval(x as f64) as f32 } else { 0.0 };
             }
         });
     }
@@ -391,6 +539,80 @@ mod tests {
         assert!(
             StructureArtifact::decode_payload(&mut codec::Reader::new(&padded)).is_err()
         );
+    }
+
+    #[test]
+    fn distances_to_f32_clamps_nonfinite_identically() {
+        let d = Mat::from_rows(&[
+            &[0.0, 2.5, f64::INFINITY],
+            &[1e300, f64::NAN, 1.0],
+            &[f64::NEG_INFINITY, 0.5, 0.0],
+        ]);
+        let q = distances_to_f32(&d);
+        // Every non-finite (and f32-overflowing) f64 entry is +∞ in f32,
+        // so both precisions classify the same entries unreachable.
+        for (x64, x32) in d.data.iter().zip(&q.data) {
+            let unreachable64 = !x64.is_finite() || x64.abs() > f32::MAX as f64;
+            assert_eq!(!x32.is_finite(), unreachable64, "{x64} -> {x32}");
+            if x32.is_finite() {
+                assert_eq!(*x32, *x64 as f32);
+            } else {
+                assert_eq!(*x32, f32::INFINITY);
+            }
+        }
+        let f = KernelFn::ExpNeg(1.0);
+        let k64 = sp_kernel_map(&d, &f);
+        let k32 = sp_kernel_map_f32(&q, &f);
+        for ((x64, x32), orig) in k64.data.iter().zip(&k32.data).zip(&d.data) {
+            if !orig.is_finite() || orig.abs() > f32::MAX as f64 {
+                assert_eq!(*x32, 0.0);
+            }
+            if orig.is_finite() && orig.abs() <= f32::MAX as f64 {
+                assert!((*x64 - *x32 as f64).abs() < 1e-6, "{x64} vs {x32}");
+            }
+        }
+    }
+
+    #[test]
+    fn distances_f32_payload_roundtrips_bitwise() {
+        let g = crate::mesh::grid_mesh(4, 3).to_graph();
+        let q = distances_to_f32(&graph_distance_matrix(&g));
+        let art = StructureArtifact::DistancesF32(Arc::new(q.clone()));
+        assert_eq!(art.kind(), "distances_f32");
+        assert!(art.resident_bytes() >= q.data.len() * 4);
+        let mut w = codec::Writer::new();
+        art.encode_payload(&mut w);
+        let bytes = w.into_bytes();
+        let back = StructureArtifact::decode_payload(&mut codec::Reader::new(&bytes)).unwrap();
+        match back {
+            StructureArtifact::DistancesF32(b) => {
+                assert_eq!((b.rows, b.cols), (q.rows, q.cols));
+                assert!(q.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+            }
+            _ => panic!("variant changed in roundtrip"),
+        }
+    }
+
+    #[test]
+    fn eval_kernel_inplace_matches_scalar_for_rational() {
+        // The AVX2 Rational path must be bitwise scalar-identical,
+        // including ∞/NaN masking and remainder lanes.
+        let mut rng = crate::util::rng::Rng::new(11);
+        for n in [0usize, 1, 3, 4, 5, 13, 64, 67] {
+            let mut src: Vec<f64> = (0..n).map(|_| rng.gaussian().abs()).collect();
+            if n > 2 {
+                src[1] = f64::INFINITY;
+                src[2] = f64::NAN;
+            }
+            let f = KernelFn::Rational(0.7);
+            let mut scalar = src.clone();
+            eval_kernel_inplace(Kern::Scalar, &f, &mut scalar);
+            let mut native = src.clone();
+            eval_kernel_inplace(simd::kern(), &f, &mut native);
+            for (a, b) in scalar.iter().zip(&native) {
+                assert_eq!(a.to_bits(), b.to_bits(), "n={n}");
+            }
+        }
     }
 
     #[test]

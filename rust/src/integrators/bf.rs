@@ -6,14 +6,99 @@
 //! * [`BruteForceDiffusion`]: materializes `K = exp(Λ W_G)` by dense Padé
 //!   `expm` (`O(N³)`). Baseline for RFD (Fig. 4 row 2, Table 2) — and the
 //!   reason the paper's BF column runs out of time/memory first.
+//!
+//! Both support the engine's mixed-precision policy
+//! ([`crate::integrators::Precision`]): the dense kernel table can be
+//! stored f32 ([`DenseKernel::F32`]) — computed in f64, rounded once —
+//! halving the `O(N²)` footprint that makes these baselines die first,
+//! with apply-time accumulation in f32 or f64 per the policy.
 
 use super::{check_apply_shapes, mat_bytes, FieldIntegrator, KernelFn, Workspace};
 use crate::graph::CsrGraph;
-use crate::linalg::{expm_pade, Mat, Trans};
+use crate::linalg::{expm_pade, Mat, MatF32, Trans};
+use crate::util::par;
+
+/// A dense `n×n` kernel table at the spec's storage precision. The f64
+/// variant applies through the blocked GEMM; the f32 variant stores half
+/// the bytes and applies through a hand-rolled parallel row loop whose
+/// accumulator follows the precision policy (`acc64`).
+pub(crate) enum DenseKernel {
+    /// Full-precision table (the default policy).
+    F64(Mat),
+    /// Quantized table; `acc64` selects f64 (`f32-accumulate-f64`) or
+    /// f32 accumulation at apply time.
+    F32 { table: MatF32, acc64: bool },
+}
+
+impl DenseKernel {
+    fn rows(&self) -> usize {
+        match self {
+            DenseKernel::F64(m) => m.rows,
+            DenseKernel::F32 { table, .. } => table.rows,
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        match self {
+            DenseKernel::F64(m) => mat_bytes(m),
+            DenseKernel::F32 { table, .. } => {
+                std::mem::size_of::<MatF32>() + table.data.len() * std::mem::size_of::<f32>()
+            }
+        }
+    }
+
+    fn precision_tag(&self) -> &'static str {
+        match self {
+            DenseKernel::F64(_) => "",
+            DenseKernel::F32 { acc64: false, .. } => "(f32)",
+            DenseKernel::F32 { acc64: true, .. } => "(f32acc64)",
+        }
+    }
+
+    /// `out = K · field`. The f32 path widens each stored entry exactly;
+    /// in plain-f32 mode the running row sums accumulate in f32 (stored
+    /// losslessly in the f64 output slots between steps), in acc64 mode
+    /// they accumulate in f64.
+    fn apply_into(&self, field: &Mat, out: &mut Mat) {
+        match self {
+            DenseKernel::F64(k) => {
+                out.gemm_assign(1.0, k, Trans::No, field, Trans::No, 0.0);
+            }
+            DenseKernel::F32 { table, acc64 } => {
+                let d = field.cols;
+                if d == 0 {
+                    return;
+                }
+                let acc64 = *acc64;
+                par::par_rows(&mut out.data, d, |i, orow| {
+                    let krow = table.row(i);
+                    orow.iter_mut().for_each(|v| *v = 0.0);
+                    if acc64 {
+                        for (j, &kv) in krow.iter().enumerate() {
+                            let kvw = kv as f64;
+                            let frow = field.row(j);
+                            for (c, &fv) in frow.iter().enumerate() {
+                                orow[c] += kvw * fv;
+                            }
+                        }
+                    } else {
+                        for (j, &kv) in krow.iter().enumerate() {
+                            let frow = field.row(j);
+                            for (c, &fv) in frow.iter().enumerate() {
+                                let s = orow[c] as f32 + kv * fv as f32;
+                                orow[c] = s as f64;
+                            }
+                        }
+                    }
+                });
+            }
+        }
+    }
+}
 
 /// Dense shortest-path-kernel integrator.
 pub struct BruteForceSp {
-    kernel_matrix: Mat,
+    kernel: DenseKernel,
 }
 
 impl BruteForceSp {
@@ -38,40 +123,80 @@ impl BruteForceSp {
     /// bitwise-identical). Unreachable pairs carry `0` (decaying-kernel
     /// convention shared with SF).
     pub(crate) fn from_kernel_matrix(kernel_matrix: Mat) -> Self {
-        BruteForceSp { kernel_matrix }
+        BruteForceSp { kernel: DenseKernel::F64(kernel_matrix) }
+    }
+
+    /// Wraps a quantized kernel table (see
+    /// [`crate::integrators::artifacts::sp_kernel_map_f32`]) under the
+    /// given accumulation policy.
+    pub(crate) fn from_kernel_f32(table: MatF32, acc64: bool) -> Self {
+        BruteForceSp { kernel: DenseKernel::F32 { table, acc64 } }
     }
 
     /// Direct access for accuracy oracles in tests.
+    ///
+    /// # Panics
+    /// On an f32-policy integrator — there is no f64 table to borrow;
+    /// use [`BruteForceSp::kernel_f32`].
     pub fn kernel(&self) -> &Mat {
-        &self.kernel_matrix
+        match &self.kernel {
+            DenseKernel::F64(m) => m,
+            DenseKernel::F32 { .. } => {
+                panic!("BruteForceSp::kernel(): f32-policy table; use kernel_f32()")
+            }
+        }
+    }
+
+    /// The quantized table, when this integrator runs the f32 policy.
+    pub fn kernel_f32(&self) -> Option<&MatF32> {
+        match &self.kernel {
+            DenseKernel::F64(_) => None,
+            DenseKernel::F32 { table, .. } => Some(table),
+        }
     }
 }
 
 impl FieldIntegrator for BruteForceSp {
     // Dominant storage: the materialized n×n kernel.
     fn name(&self) -> String {
-        "BF-sp".into()
+        format!("BF-sp{}", self.kernel.precision_tag())
     }
     fn len(&self) -> usize {
-        self.kernel_matrix.rows
+        self.kernel.rows()
     }
     fn resident_bytes(&self) -> usize {
-        std::mem::size_of::<Self>() + mat_bytes(&self.kernel_matrix)
+        std::mem::size_of::<Self>() + self.kernel.bytes()
     }
     fn apply_into(&self, field: &Mat, out: &mut Mat, _ws: &mut Workspace) {
         check_apply_shapes(self.len(), field, out);
-        out.gemm_assign(1.0, &self.kernel_matrix, Trans::No, field, Trans::No, 0.0);
+        self.kernel.apply_into(field, out);
     }
 }
 
 /// Dense diffusion-kernel integrator `K = exp(Λ W_G)`.
 pub struct BruteForceDiffusion {
-    kernel_matrix: Mat,
+    kernel: DenseKernel,
 }
 
 impl BruteForceDiffusion {
     /// Construct via [`crate::integrators::prepare`].
     pub(crate) fn new(g: &CsrGraph, lambda: f64) -> Self {
+        BruteForceDiffusion { kernel: DenseKernel::F64(Self::dense_expm(g, lambda)) }
+    }
+
+    /// f32-policy construction: the expm runs in full f64 (its stability
+    /// is the whole point of the Padé scaling-and-squaring), and the
+    /// finished table is rounded once to f32 for storage.
+    pub(crate) fn new_f32(g: &CsrGraph, lambda: f64, acc64: bool) -> Self {
+        BruteForceDiffusion {
+            kernel: DenseKernel::F32 {
+                table: MatF32::from_f64(&Self::dense_expm(g, lambda)),
+                acc64,
+            },
+        }
+    }
+
+    fn dense_expm(g: &CsrGraph, lambda: f64) -> Mat {
         let n = g.n;
         let mut w = Mat::zeros(n, n);
         for v in 0..n {
@@ -81,40 +206,58 @@ impl BruteForceDiffusion {
                 w[(v, u)] = wt;
             }
         }
-        BruteForceDiffusion { kernel_matrix: expm_pade(&w.scale(lambda)) }
+        expm_pade(&w.scale(lambda))
     }
 
     /// Builds directly from a dense weighted adjacency (used by tests and
     /// the classification baseline).
     pub fn from_dense(w: &Mat, lambda: f64) -> Self {
-        BruteForceDiffusion { kernel_matrix: expm_pade(&w.scale(lambda)) }
+        BruteForceDiffusion { kernel: DenseKernel::F64(expm_pade(&w.scale(lambda))) }
     }
 
     /// Direct access to the dense diffusion kernel (test oracle).
+    ///
+    /// # Panics
+    /// On an f32-policy integrator; use [`BruteForceDiffusion::kernel_f32`].
     pub fn kernel(&self) -> &Mat {
-        &self.kernel_matrix
+        match &self.kernel {
+            DenseKernel::F64(m) => m,
+            DenseKernel::F32 { .. } => {
+                panic!("BruteForceDiffusion::kernel(): f32-policy table; use kernel_f32()")
+            }
+        }
+    }
+
+    /// The quantized table, when this integrator runs the f32 policy.
+    pub fn kernel_f32(&self) -> Option<&MatF32> {
+        match &self.kernel {
+            DenseKernel::F64(_) => None,
+            DenseKernel::F32 { table, .. } => Some(table),
+        }
     }
 }
 
 impl FieldIntegrator for BruteForceDiffusion {
     fn name(&self) -> String {
-        "BF-diffusion".into()
+        format!("BF-diffusion{}", self.kernel.precision_tag())
     }
     fn len(&self) -> usize {
-        self.kernel_matrix.rows
+        self.kernel.rows()
     }
     fn resident_bytes(&self) -> usize {
-        std::mem::size_of::<Self>() + mat_bytes(&self.kernel_matrix)
+        std::mem::size_of::<Self>() + self.kernel.bytes()
     }
     fn apply_into(&self, field: &Mat, out: &mut Mat, _ws: &mut Workspace) {
         check_apply_shapes(self.len(), field, out);
-        out.gemm_assign(1.0, &self.kernel_matrix, Trans::No, field, Trans::No, 0.0);
+        self.kernel.apply_into(field, out);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::rel_err;
 
     fn path_graph(n: usize) -> CsrGraph {
         CsrGraph::from_edges(n, &(0..n - 1).map(|i| (i, i + 1, 1.0)).collect::<Vec<_>>())
@@ -151,6 +294,46 @@ mod tests {
         let bf = BruteForceSp::new(&g, &KernelFn::ExpNeg(1.0));
         assert_eq!(bf.kernel()[(0, 2)], 0.0);
         assert_eq!(bf.kernel()[(2, 2)], 1.0); // f(0) = 1
+    }
+
+    #[test]
+    fn f32_tables_track_f64_at_half_the_bytes() {
+        use crate::integrators::artifacts;
+        let g = path_graph(40);
+        let f = KernelFn::ExpNeg(0.5);
+        let bf64 = BruteForceSp::new(&g, &f);
+        let dist32 = artifacts::distances_to_f32(&artifacts::graph_distance_matrix(&g));
+        let table = artifacts::sp_kernel_map_f32(&dist32, &f);
+        let bf32 = BruteForceSp::from_kernel_f32(table.clone(), false);
+        let bfacc = BruteForceSp::from_kernel_f32(table, true);
+        let mut rng = Rng::new(7);
+        let x = Mat::from_vec(40, 3, (0..120).map(|_| rng.gaussian()).collect());
+        let y64 = bf64.apply(&x);
+        assert!(rel_err(&bf32.apply(&x).data, &y64.data) < 1e-5);
+        assert!(rel_err(&bfacc.apply(&x).data, &y64.data) < 1e-5);
+        // The f32 table stores half the bytes of the f64 one.
+        assert!(2 * bf32.resident_bytes() < bf64.resident_bytes() + 512);
+        assert!(bf32.kernel_f32().is_some() && bf64.kernel_f32().is_none());
+        assert_eq!(bf32.name(), "BF-sp(f32)");
+        assert_eq!(bfacc.name(), "BF-sp(f32acc64)");
+    }
+
+    #[test]
+    fn diffusion_f32_matches_f64_closely() {
+        let g = path_graph(12);
+        let bf64 = BruteForceDiffusion::new(&g, -0.3);
+        let bf32 = BruteForceDiffusion::new_f32(&g, -0.3, false);
+        let bfacc = BruteForceDiffusion::new_f32(&g, -0.3, true);
+        let mut rng = Rng::new(8);
+        let x = Mat::from_vec(12, 2, (0..24).map(|_| rng.gaussian()).collect());
+        let y64 = bf64.apply(&x);
+        assert!(rel_err(&bf32.apply(&x).data, &y64.data) < 1e-5);
+        assert!(rel_err(&bfacc.apply(&x).data, &y64.data) < 1e-5);
+        // The quantized table is the rounded f64 table, entry for entry.
+        let t32 = bf32.kernel_f32().unwrap();
+        for (q, &v) in t32.data.iter().zip(bf64.kernel().data.iter()) {
+            assert_eq!(q.to_bits(), (v as f32).to_bits());
+        }
     }
 
     #[test]

@@ -64,7 +64,8 @@ pub mod trees;
 
 pub use artifacts::StructureArtifact;
 pub use spec::{
-    finish, prepare, prepare_structure, DirtySet, GfiError, IntegratorSpec, Scene, SceneDelta,
+    finish, prepare, prepare_structure, DirtySet, GfiError, IntegratorSpec, Precision, Scene,
+    SceneDelta,
 };
 pub(crate) use spec::validate_spec;
 

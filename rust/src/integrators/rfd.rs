@@ -27,8 +27,9 @@ use super::{
     check_apply_shapes, mat_bytes, DirtySet, FieldIntegrator, GfiError, RefreshStats, Scene,
     StructureArtifact, Workspace,
 };
-use crate::linalg::{eigh_jacobi, expm_pade, lu_factor, thin_qr, Mat, Trans};
+use crate::linalg::{eigh_jacobi, expm_pade, lu_factor, thin_qr, Mat, MatF32, Trans};
 use crate::pointcloud::PointCloud;
+use crate::util::simd::{self, Kern};
 use crate::util::{codec, par, rng::Rng};
 use std::sync::Arc;
 
@@ -251,6 +252,104 @@ impl RfdStructure {
             params: RfdStructuralParams { num_features, epsilon, sigma, radius, seed },
             omegas,
             q,
+            a,
+            b,
+            delta,
+        })
+    }
+}
+
+/// f32-quantized snapshot of an [`RfdStructure`]'s feature factors: the
+/// `N×2m` `A`/`B` matrices stored at half the bytes, quantized **once**
+/// from the f64 build (every entry is the nearest-f32 rounding of the f64
+/// value, so `F32` and `F32AccF64` integrators share one structure — they
+/// differ only in apply-time accumulation). The ω anchors and raw weights
+/// are dropped: a quantized snapshot cannot be incrementally re-featured,
+/// so scene updates rebuild from scratch (`refreshed → None` upstream).
+#[derive(Clone)]
+pub struct RfdStructureF32 {
+    params: RfdStructuralParams,
+    a: MatF32,
+    b: MatF32,
+    delta: f64,
+}
+
+impl RfdStructureF32 {
+    /// Quantizes a full-precision structure (nearest-f32 per entry; the
+    /// exact diagonal δ stays f64 — it feeds the scalar `e^{-Λδ}`).
+    pub fn from_f64(s: &RfdStructure) -> Self {
+        RfdStructureF32 {
+            params: s.params.clone(),
+            a: MatF32::from_f64(&s.a),
+            b: MatF32::from_f64(&s.b),
+            delta: s.delta,
+        }
+    }
+
+    /// The structural hyper-parameters the source structure was built with.
+    pub fn params(&self) -> &RfdStructuralParams {
+        &self.params
+    }
+
+    /// The quantized low-rank factors `(A, B)`.
+    pub fn factors(&self) -> (&MatF32, &MatF32) {
+        (&self.a, &self.b)
+    }
+
+    /// The exact estimated-diagonal correction δ (kept f64).
+    pub fn delta(&self) -> f64 {
+        self.delta
+    }
+
+    /// Resident heap bytes — half an [`RfdStructure`]'s factor footprint,
+    /// and no anchor/weight vectors at all.
+    pub fn resident_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.a.data.len() * std::mem::size_of::<f32>()
+            + self.b.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Serializes for the persistent artifact store: the structural
+    /// params exactly as [`RfdStructure::encode`] lays them out, then the
+    /// two f32 factors and δ — all bit patterns, so the round trip is
+    /// bitwise.
+    pub(crate) fn encode(&self, w: &mut codec::Writer) {
+        w.put_usize(self.params.num_features);
+        w.put_f64(self.params.epsilon);
+        match self.params.sigma {
+            None => w.put_u8(0),
+            Some(s) => {
+                w.put_u8(1);
+                w.put_f64(s);
+            }
+        }
+        w.put_f64(self.params.radius);
+        w.put_u64(self.params.seed);
+        super::artifacts::encode_mat_f32(&self.a, w);
+        super::artifacts::encode_mat_f32(&self.b, w);
+        w.put_f64(self.delta);
+    }
+
+    /// Inverse of [`RfdStructureF32::encode`], with the same shape
+    /// validation as the f64 decoder.
+    pub(crate) fn decode(r: &mut codec::Reader<'_>) -> Result<Self, codec::CodecError> {
+        let num_features = r.usize_()?;
+        let epsilon = r.f64()?;
+        let sigma = match r.u8()? {
+            0 => None,
+            1 => Some(r.f64()?),
+            t => return Err(codec::invalid(format!("bad sigma tag {t}"))),
+        };
+        let radius = r.f64()?;
+        let seed = r.u64()?;
+        let a = super::artifacts::decode_mat_f32(r)?;
+        let b = super::artifacts::decode_mat_f32(r)?;
+        let delta = r.f64()?;
+        if a.rows != b.rows || a.cols != b.cols || a.cols != 2 * num_features {
+            return Err(codec::invalid("rfd f32 factor shape mismatch"));
+        }
+        Ok(RfdStructureF32 {
+            params: RfdStructuralParams { num_features, epsilon, sigma, radius, seed },
             a,
             b,
             delta,
@@ -491,27 +590,107 @@ fn fill_features(
     assert_eq!((a.rows, a.cols), (n, 2 * m), "feature factor A shape");
     assert_eq!((b.rows, b.cols), (n, 2 * m), "feature factor B shape");
     let delta: f64 = q.iter().sum::<f64>() / m as f64;
+    let kern = simd::kern();
     {
         let pts = &points.points;
         let acells = par::as_send_cells(&mut a.data);
         let bcells = par::as_send_cells(&mut b.data);
         par::par_for(n, 64, |i| {
             let p = pts[i];
-            for (j, w) in omegas.iter().enumerate() {
-                let phase = w[0] * p[0] + w[1] * p[1] + w[2] * p[2];
-                let (sn, cs) = phase.sin_cos();
-                let scale = q[j] / m as f64;
-                // SAFETY: row i is written only by this iteration.
-                unsafe {
-                    *acells.get(i * 2 * m + 2 * j) = scale * cs;
-                    *acells.get(i * 2 * m + 2 * j + 1) = scale * sn;
-                    *bcells.get(i * 2 * m + 2 * j) = cs;
-                    *bcells.get(i * 2 * m + 2 * j + 1) = sn;
-                }
-            }
+            // SAFETY: row i is written only by this iteration, and the
+            // factor matrices are N×2m, so the row slices are in bounds
+            // and disjoint across iterations.
+            let arow = unsafe {
+                std::slice::from_raw_parts_mut(acells.get(i * 2 * m) as *mut f64, 2 * m)
+            };
+            let brow = unsafe {
+                std::slice::from_raw_parts_mut(bcells.get(i * 2 * m) as *mut f64, 2 * m)
+            };
+            fill_row(kern, p, omegas, q, arow, brow);
         });
     }
     delta
+}
+
+/// One feature row: `arow[2j] = (q_j/m)·cos⟨ω_j,p⟩`, `arow[2j+1]` the sine
+/// twin, `brow` the unweighted pair. The scalar loop is the oracle; the
+/// AVX2 path vectorizes only the phase dot products (gathered ω components,
+/// mul+add in the scalar association order) and keeps `sin_cos` scalar per
+/// lane, so both paths are bitwise-identical.
+fn fill_row(
+    kern: Kern,
+    p: [f64; 3],
+    omegas: &[[f64; 3]],
+    q: &[f64],
+    arow: &mut [f64],
+    brow: &mut [f64],
+) {
+    let m = omegas.len();
+    let mut j = 0usize;
+    #[cfg(target_arch = "x86_64")]
+    if kern == Kern::Avx2 {
+        let mut phases = [0.0f64; 4];
+        while j + 4 <= m {
+            unsafe { phases_avx2(p, omegas, j, &mut phases) };
+            for (lane, &phase) in phases.iter().enumerate() {
+                write_feature(phase, q[j + lane], m, j + lane, arow, brow);
+            }
+            j += 4;
+        }
+    }
+    let _ = kern;
+    for jj in j..m {
+        let w = &omegas[jj];
+        let phase = w[0] * p[0] + w[1] * p[1] + w[2] * p[2];
+        write_feature(phase, q[jj], m, jj, arow, brow);
+    }
+}
+
+/// The per-feature store shared by the scalar and AVX2 fill paths — the
+/// trig evaluation and interleaved write are identical by construction.
+#[inline]
+fn write_feature(phase: f64, qj: f64, m: usize, j: usize, arow: &mut [f64], brow: &mut [f64]) {
+    let (sn, cs) = phase.sin_cos();
+    let scale = qj / m as f64;
+    arow[2 * j] = scale * cs;
+    arow[2 * j + 1] = scale * sn;
+    brow[2 * j] = cs;
+    brow[2 * j + 1] = sn;
+}
+
+/// Four phase dot products `⟨ω_{j+lane}, p⟩` at once: three strided
+/// gathers pull the ω components (f64 element offsets `3(j+lane)+k`,
+/// scale 8), then `((ω₀p₀) + (ω₁p₁)) + (ω₂p₂)` with separate mul/add —
+/// the scalar loop's exact association order, so every lane rounds
+/// identically to the oracle.
+///
+/// # Safety
+/// Requires AVX2 and `j + 4 <= omegas.len()` (gather offsets stay inside
+/// the `[f64; 3]` slab).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn phases_avx2(p: [f64; 3], omegas: &[[f64; 3]], j: usize, out: &mut [f64; 4]) {
+    use std::arch::x86_64::*;
+    debug_assert!(j + 4 <= omegas.len());
+    let base = omegas.as_ptr() as *const f64;
+    // _mm_set_epi32 takes lanes high→low.
+    let idx = _mm_set_epi32(
+        (3 * (j + 3)) as i32,
+        (3 * (j + 2)) as i32,
+        (3 * (j + 1)) as i32,
+        (3 * j) as i32,
+    );
+    let w0 = _mm256_i32gather_pd::<8>(base, idx);
+    let w1 = _mm256_i32gather_pd::<8>(base, _mm_add_epi32(idx, _mm_set1_epi32(1)));
+    let w2 = _mm256_i32gather_pd::<8>(base, _mm_add_epi32(idx, _mm_set1_epi32(2)));
+    let acc = _mm256_add_pd(
+        _mm256_add_pd(
+            _mm256_mul_pd(w0, _mm256_set1_pd(p[0])),
+            _mm256_mul_pd(w1, _mm256_set1_pd(p[1])),
+        ),
+        _mm256_mul_pd(w2, _mm256_set1_pd(p[2])),
+    );
+    _mm256_storeu_pd(out.as_mut_ptr(), acc);
 }
 
 /// Monte-Carlo estimate of the standard-Gaussian mass inside the L1-ball
@@ -596,6 +775,187 @@ impl FieldIntegrator for RfDiffusion {
                     )
                 }),
         )
+    }
+}
+
+/// Mixed-precision RFDiffusion: f32-stored factors, with the precision
+/// policy governing *accumulation* at apply time.
+///
+/// * `acc64 = false` (policy `f32`): the two long-`N` factor stages
+///   (`Bᵀx` and `A·core`) accumulate in f32 (every f32 partial sum is
+///   exactly representable in the f64 slot it lives in, so "round the
+///   running sum to f32 after each step" is exact f32 accumulation).
+/// * `acc64 = true` (policy `f32-accumulate-f64`): each stored f32 is
+///   widened exactly to f64 and the reductions accumulate in f64 — same
+///   storage footprint, f64-grade summation error.
+///
+/// In **both** modes the tiny `2m×2m` Woodbury core is built and applied
+/// in f64 (widened exactly from the quantized factors): the core is a
+/// matrix inverse/exponential whose conditioning, not its footprint, is
+/// the concern, and it is `O(m²)` bytes against the factors' `O(Nm)`.
+pub struct RfDiffusionF32 {
+    cfg: RfdConfig,
+    structure: Arc<RfdStructureF32>,
+    /// `M = [exp(Λ BᵀA) − I](BᵀA)⁻¹ ∈ R^{2m×2m}` — f64, from the
+    /// *quantized* factors (consistent with what apply multiplies by).
+    m_core: Mat,
+    /// `e^{-Λδ}` diagonal correction factor.
+    diag_scale: f64,
+    /// `true` → f64 accumulation over the f32 factors.
+    acc64: bool,
+}
+
+impl RfDiffusionF32 {
+    /// Kernel stage over a quantized structure: `G = BᵀA` is formed in
+    /// f64 from the exactly-widened f32 factors (so the core matches the
+    /// factors apply will use), then the usual Woodbury solve and
+    /// finiteness gate.
+    pub(crate) fn from_structure(
+        structure: Arc<RfdStructureF32>,
+        cfg: RfdConfig,
+        acc64: bool,
+    ) -> Result<Self, GfiError> {
+        let (a, b) = structure.factors();
+        let k = a.cols;
+        let mut g = Mat::zeros(k, k);
+        for i in 0..a.rows {
+            let ar = a.row(i);
+            let br = b.row(i);
+            for (jj, &bv) in br.iter().enumerate() {
+                let bvw = bv as f64;
+                let grow = g.row_mut(jj);
+                for (kk, &av) in ar.iter().enumerate() {
+                    grow[kk] += bvw * av as f64;
+                }
+            }
+        }
+        let m_core = woodbury_core(&g, cfg.lambda, cfg.ridge)?;
+        let diag_scale = (-cfg.lambda * structure.delta).exp();
+        if !diag_scale.is_finite() || m_core.data.iter().any(|x| !x.is_finite()) {
+            return Err(GfiError::Numerical {
+                detail: "RFD f32 core solve produced non-finite values \
+                         (non-finite points or extreme Λδ)"
+                    .into(),
+            });
+        }
+        Ok(RfDiffusionF32 { cfg, structure, m_core, diag_scale, acc64 })
+    }
+
+    /// The quantized feature structure (shared across the Λ/ridge sweep
+    /// and both f32 accumulation policies).
+    pub fn structure(&self) -> &Arc<RfdStructureF32> {
+        &self.structure
+    }
+}
+
+impl FieldIntegrator for RfDiffusionF32 {
+    fn name(&self) -> String {
+        format!(
+            "RFD(m={},eps={},lam={},prec={})",
+            self.cfg.num_features,
+            self.cfg.epsilon,
+            self.cfg.lambda,
+            if self.acc64 { "f32acc64" } else { "f32" }
+        )
+    }
+
+    fn len(&self) -> usize {
+        self.structure.a.rows
+    }
+
+    /// Half the factor bytes of the f64 integrator — the point of the
+    /// precision policy.
+    fn resident_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.structure.resident_bytes()
+            + mat_bytes(&self.m_core)
+    }
+
+    /// `y = e^{-Λδ} (x + A · M · (Bᵀ x))` over the f32 factors. The two
+    /// long-`N` stages run hand-rolled loops with the policy's
+    /// accumulator; the `2m×2m` core multiply stays the f64 gemm. The
+    /// 2m×d intermediates come from the (f64) workspace — the f32
+    /// accumulation path stores its running f32 sums in f64 slots, which
+    /// is lossless, so no f32 scratch is ever allocated.
+    fn apply_into(&self, field: &Mat, out: &mut Mat, ws: &mut Workspace) {
+        check_apply_shapes(self.len(), field, out);
+        let (a, b) = self.structure.factors();
+        let k = b.cols;
+        let d = field.cols;
+        if d == 0 {
+            return;
+        }
+        // Stage 1: btx = Bᵀ x  (k×d, reduction over N rows).
+        let mut bt_x = ws.take_mat(k, d);
+        bt_x.data.iter_mut().for_each(|v| *v = 0.0);
+        if self.acc64 {
+            for i in 0..b.rows {
+                let br = b.row(i);
+                let xr = field.row(i);
+                for (jj, &bv) in br.iter().enumerate() {
+                    let bvw = bv as f64;
+                    let row = &mut bt_x.data[jj * d..(jj + 1) * d];
+                    for (c, &xv) in xr.iter().enumerate() {
+                        row[c] += bvw * xv;
+                    }
+                }
+            }
+        } else {
+            for i in 0..b.rows {
+                let br = b.row(i);
+                let xr = field.row(i);
+                for (jj, &bv) in br.iter().enumerate() {
+                    let row = &mut bt_x.data[jj * d..(jj + 1) * d];
+                    for (c, &xv) in xr.iter().enumerate() {
+                        let s = row[c] as f32 + bv * xv as f32;
+                        row[c] = s as f64;
+                    }
+                }
+            }
+        }
+        // Stage 2: core = M · btx — 2m×2m, f64 in every precision mode.
+        let mut core = ws.take_mat(self.m_core.rows, d);
+        core.gemm_assign(1.0, &self.m_core, Trans::No, &bt_x, Trans::No, 0.0);
+        // Stage 3: out = e^{-Λδ}(x + A·core), parallel over rows; the
+        // A·core reduction (over 2m) uses the policy accumulator, the
+        // final diagonal-corrected assembly is f64 in both modes.
+        let acc64 = self.acc64;
+        let core_ref = &core;
+        let diag_scale = self.diag_scale;
+        par::par_rows(&mut out.data, d, |i, orow| {
+            let ar = a.row(i);
+            let xr = field.row(i);
+            orow.iter_mut().for_each(|v| *v = 0.0);
+            if acc64 {
+                for (jj, &av) in ar.iter().enumerate() {
+                    let avw = av as f64;
+                    let crow = core_ref.row(jj);
+                    for (c, &cv) in crow.iter().enumerate() {
+                        orow[c] += avw * cv;
+                    }
+                }
+            } else {
+                for (jj, &av) in ar.iter().enumerate() {
+                    let crow = core_ref.row(jj);
+                    for (c, &cv) in crow.iter().enumerate() {
+                        let s = orow[c] as f32 + av * cv as f32;
+                        orow[c] = s as f64;
+                    }
+                }
+            }
+            for (o, &x) in orow.iter_mut().zip(xr) {
+                *o = diag_scale * x + diag_scale * *o;
+            }
+        });
+        ws.put_mat(core);
+        ws.put_mat(bt_x);
+    }
+
+    /// The quantized structure spills/shares like any other — but a
+    /// quantized snapshot cannot be incrementally re-featured (no stored
+    /// anchors), so scene updates fall back to a full rebuild.
+    fn structure_artifact(&self) -> Option<StructureArtifact> {
+        Some(StructureArtifact::RfdFeaturesF32(self.structure.clone()))
     }
 }
 
@@ -750,6 +1110,42 @@ mod tests {
         let r2 = RfDiffusion::try_new(&pc, cfg).unwrap();
         let x = Mat::from_vec(25, 1, (0..25).map(|i| i as f64).collect());
         assert_eq!(r1.apply(&x).data, r2.apply(&x).data);
+    }
+
+    #[test]
+    fn f32_policies_track_f64_closely_at_half_the_bytes() {
+        let pc = cloud(60, 21);
+        let cfg = RfdConfig { num_features: 16, seed: 3, ..Default::default() };
+        let rfd = RfDiffusion::try_new(&pc, cfg.clone()).unwrap();
+        let s32 = Arc::new(RfdStructureF32::from_f64(rfd.structure()));
+        let plain = RfDiffusionF32::from_structure(s32.clone(), cfg.clone(), false).unwrap();
+        let acc = RfDiffusionF32::from_structure(s32.clone(), cfg, true).unwrap();
+        let mut rng = Rng::new(4);
+        let x = Mat::from_vec(60, 2, (0..120).map(|_| rng.gaussian()).collect());
+        let y64 = rfd.apply(&x);
+        let e_plain = rel_err(&plain.apply(&x).data, &y64.data);
+        let e_acc = rel_err(&acc.apply(&x).data, &y64.data);
+        assert!(e_plain < 1e-4, "f32 policy vs f64: {e_plain}");
+        assert!(e_acc < 1e-4, "f32acc64 policy vs f64: {e_acc}");
+        // Quantized factor storage is half the f64 structure's factor
+        // bytes (and drops the anchors entirely).
+        assert!(2 * s32.resident_bytes() < rfd.structure().resident_bytes() + 512);
+        assert!(plain.resident_bytes() < rfd.resident_bytes());
+    }
+
+    #[test]
+    fn f32_structure_roundtrips_bitwise() {
+        let pc = cloud(17, 22);
+        let cfg = RfdConfig { num_features: 6, sigma: Some(4.0), seed: 9, ..Default::default() };
+        let s32 = RfdStructureF32::from_f64(&RfdStructure::build(&pc, &cfg));
+        let mut w = codec::Writer::new();
+        s32.encode(&mut w);
+        let bytes = w.into_bytes();
+        let back = RfdStructureF32::decode(&mut codec::Reader::new(&bytes)).unwrap();
+        assert_eq!(back.params(), s32.params());
+        assert_eq!(back.a.data, s32.a.data);
+        assert_eq!(back.b.data, s32.b.data);
+        assert_eq!(back.delta.to_bits(), s32.delta.to_bits());
     }
 
     #[test]

@@ -13,7 +13,9 @@
 use super::artifacts::{self, StructureArtifact};
 use super::bf::{BruteForceDiffusion, BruteForceSp};
 use super::expmv::{AlMohyExpmv, BaderDense, LanczosExpmv};
-use super::rfd::{RfDiffusion, RfdConfig, RfdStructuralParams, RfdStructure};
+use super::rfd::{
+    RfDiffusion, RfDiffusionF32, RfdConfig, RfdStructuralParams, RfdStructure, RfdStructureF32,
+};
 use super::sf::{SeparatorFactorization, SfConfig, SfStructure, SfTreeParams};
 use super::trees::{TreeEnsembleIntegrator, TreeKind, TreesStructure};
 use super::{FieldIntegrator, KernelFn};
@@ -392,6 +394,47 @@ impl Scene {
     }
 }
 
+/// Storage/accumulation precision policy for the dense-storage backends
+/// (see [`IntegratorSpec::with_precision`]).
+///
+/// * `F64` — the default: everything stored and accumulated in f64.
+/// * `F32` — kernel tables / feature factors are computed in f64, rounded
+///   **once** to f32 for storage (halving `resident_bytes`), and apply
+///   accumulates in f32.
+/// * `F32AccF64` — same f32 storage (and therefore the *same* stored
+///   structure, shared with `F32`), but apply widens each f32 exactly to
+///   f64 and accumulates in f64 — f64-grade summation error at f32
+///   footprint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// Full f64 storage and accumulation (the default).
+    F64,
+    /// f32 storage, f32 accumulation.
+    F32,
+    /// f32 storage, f64 accumulation.
+    F32AccF64,
+}
+
+impl Precision {
+    /// Cache-key token (also the accuracy-table label).
+    pub fn key(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+            Precision::F32AccF64 => "f32acc64",
+        }
+    }
+
+    /// Wire-protocol token (the `precision` request field).
+    pub fn wire_token(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+            Precision::F32AccF64 => "f32_acc_f64",
+        }
+    }
+}
+
 /// One description of a graph-field integrator: algorithm + every
 /// hyper-parameter. Plain data — clone it, serialize it
 /// ([`IntegratorSpec::to_json`] / [`IntegratorSpec::from_request`]), key
@@ -419,9 +462,38 @@ pub enum IntegratorSpec {
     Lanczos { lambda: f64, krylov_dim: usize },
     /// Dense Taylor expm baseline over the scene graph.
     Bader { lambda: f64 },
+    /// A non-default [`Precision`] policy wrapped around a dense-storage
+    /// backend (`Rfd`, `BfSp`, or `BfDiffusion`). Construct via
+    /// [`IntegratorSpec::with_precision`] — it normalizes `F64` away and
+    /// never nests; a hand-built `Precision(F64, _)` or nested wrapper is
+    /// rejected by validation.
+    Precision(Precision, Box<IntegratorSpec>),
 }
 
 impl IntegratorSpec {
+    /// Wraps `inner` in a precision policy, normalizing: `F64` returns
+    /// `inner` unchanged (f64 **is** the unwrapped representation — one
+    /// cache identity, not two), and wrapping an already-wrapped spec
+    /// replaces its policy instead of nesting.
+    pub fn with_precision(prec: Precision, inner: IntegratorSpec) -> IntegratorSpec {
+        let inner = match inner {
+            IntegratorSpec::Precision(_, i) => *i,
+            other => other,
+        };
+        match prec {
+            Precision::F64 => inner,
+            p => IntegratorSpec::Precision(p, Box::new(inner)),
+        }
+    }
+
+    /// The precision policy in force ([`Precision::F64`] unless wrapped).
+    pub fn precision(&self) -> Precision {
+        match self {
+            IntegratorSpec::Precision(p, _) => *p,
+            _ => Precision::F64,
+        }
+    }
+
     /// Metrics/reporting tag (stable across hyper-parameters).
     pub fn name(&self) -> &'static str {
         match self {
@@ -434,15 +506,19 @@ impl IntegratorSpec {
             IntegratorSpec::AlMohy { .. } => "almohy",
             IntegratorSpec::Lanczos { .. } => "lanczos",
             IntegratorSpec::Bader { .. } => "bader",
+            // The policy renames nothing — metrics group by algorithm.
+            IntegratorSpec::Precision(_, inner) => inner.name(),
         }
     }
 
-    /// Wire-protocol backend name (tree kinds are distinct ops).
+    /// Wire-protocol backend name (tree kinds are distinct ops; the
+    /// precision policy travels as a separate `precision` field).
     fn wire_name(&self) -> &'static str {
         match self {
             IntegratorSpec::Trees { kind: TreeKind::Mst, .. } => "trees_mst",
             IntegratorSpec::Trees { kind: TreeKind::Bartal, .. } => "trees_bartal",
             IntegratorSpec::Trees { kind: TreeKind::Frt, .. } => "trees_frt",
+            IntegratorSpec::Precision(_, inner) => inner.wire_name(),
             other => other.name(),
         }
     }
@@ -478,6 +554,11 @@ impl IntegratorSpec {
                 format!("lanczos|lam={lambda}|m={krylov_dim}")
             }
             IntegratorSpec::Bader { lambda } => format!("bader|lam={lambda}"),
+            // Distinct prefix per policy: an f32 integrator never shares
+            // a cache slot with its f64 (or f32acc64) sibling.
+            IntegratorSpec::Precision(p, inner) => {
+                format!("prec={}|{}", p.key(), inner.cache_key()?)
+            }
         })
     }
 
@@ -513,6 +594,18 @@ impl IntegratorSpec {
             IntegratorSpec::AlMohy { .. }
             | IntegratorSpec::Lanczos { .. }
             | IntegratorSpec::Bader { .. } => return None,
+            // f32 specs store quantized structures, so they get their own
+            // structural identity — except BF-diffusion, whose structure
+            // (the ε-graph) is precision-independent and stays shared
+            // with the f64 sibling. `F32` and `F32AccF64` always share:
+            // the policy only changes apply-time accumulation.
+            IntegratorSpec::Precision(_, inner) => {
+                match (&**inner, inner.structural_key()) {
+                    (IntegratorSpec::BfDiffusion { .. }, Some(k)) => k,
+                    (_, Some(k)) => format!("f32|{k}"),
+                    (_, None) => return None,
+                }
+            }
         })
     }
 
@@ -520,6 +613,13 @@ impl IntegratorSpec {
     /// (`{"backend":"sf","lambda":…,…}`). Fails for specs the wire cannot
     /// express (custom kernel profiles).
     pub fn to_json(&self) -> Result<Json, GfiError> {
+        if let IntegratorSpec::Precision(p, inner) = self {
+            let mut j = inner.to_json()?;
+            if let Json::Obj(m) = &mut j {
+                m.insert("precision".to_string(), Json::Str(p.wire_token().to_string()));
+            }
+            return Ok(j);
+        }
         let mut fields: Vec<(&str, Json)> =
             vec![("backend", Json::Str(self.wire_name().to_string()))];
         let wire_kernel = |k: &KernelFn| -> Result<f64, GfiError> {
@@ -565,6 +665,7 @@ impl IntegratorSpec {
                 fields.push(("lambda", Json::Num(*lambda)));
                 fields.push(("krylov", Json::Num(*krylov_dim as f64)));
             }
+            IntegratorSpec::Precision(..) => unreachable!("handled by the early return above"),
         }
         Ok(Json::obj(fields))
     }
@@ -593,7 +694,7 @@ impl IntegratorSpec {
             lambda: num("lambda", 1.0),
             seed: num("seed", 0.0) as u64,
         };
-        Ok(match name {
+        let spec = match name {
             "sf" => IntegratorSpec::Sf(SfConfig {
                 kernel: KernelFn::ExpNeg(num("lambda", 1.0)),
                 unit_size: num("unit_size", 0.01),
@@ -620,7 +721,18 @@ impl IntegratorSpec {
             other => {
                 return Err(GfiError::InvalidSpec { detail: format!("unknown backend {other}") })
             }
-        })
+        };
+        // Optional precision field; "f64" (or absence) is the bare spec.
+        match req.get("precision").and_then(Json::as_str) {
+            None | Some("f64") => Ok(spec),
+            Some("f32") => Ok(IntegratorSpec::with_precision(Precision::F32, spec)),
+            Some("f32_acc_f64") => {
+                Ok(IntegratorSpec::with_precision(Precision::F32AccF64, spec))
+            }
+            Some(other) => Err(GfiError::InvalidSpec {
+                detail: format!("unknown precision {other} (f64 | f32 | f32_acc_f64)"),
+            }),
+        }
     }
 }
 
@@ -695,6 +807,31 @@ pub(crate) fn validate_spec(scene: &Scene, spec: &IntegratorSpec) -> Result<(), 
         }
         IntegratorSpec::Bader { .. } => {
             scene.require_graph("bader")?;
+        }
+        IntegratorSpec::Precision(p, inner) => {
+            if *p == Precision::F64 {
+                return Err(invalid(
+                    "precision f64 is the bare spec — build via \
+                     IntegratorSpec::with_precision, which normalizes it away",
+                ));
+            }
+            match &**inner {
+                IntegratorSpec::Rfd(_)
+                | IntegratorSpec::BfSp(_)
+                | IntegratorSpec::BfDiffusion { .. } => {}
+                IntegratorSpec::Precision(..) => {
+                    return Err(invalid("nested precision wrappers are invalid"))
+                }
+                other => {
+                    return Err(invalid(format!(
+                        "precision {} is not supported for backend {} \
+                         (dense-storage backends only: rfd, bf_sp, bf_diffusion)",
+                        p.key(),
+                        other.name()
+                    )))
+                }
+            }
+            validate_spec(scene, inner)?;
         }
     }
     Ok(())
@@ -779,6 +916,30 @@ fn build_structure(
         IntegratorSpec::AlMohy { .. }
         | IntegratorSpec::Lanczos { .. }
         | IntegratorSpec::Bader { .. } => return Ok(None),
+        IntegratorSpec::Precision(_, inner) => match &**inner {
+            // The f64 structure is built normally and quantized once —
+            // F32 and F32AccF64 share the result (same structural key).
+            IntegratorSpec::Rfd(cfg) => {
+                let pts = scene.require_points("rfd")?;
+                StructureArtifact::RfdFeaturesF32(Arc::new(RfdStructureF32::from_f64(
+                    &RfdStructure::build(pts, cfg),
+                )))
+            }
+            IntegratorSpec::BfSp(_) => {
+                let g = scene.require_graph("bf_sp")?;
+                StructureArtifact::DistancesF32(Arc::new(artifacts::distances_to_f32(
+                    &artifacts::graph_distance_matrix(g),
+                )))
+            }
+            // The ε-graph is precision-independent: share the f64 one.
+            IntegratorSpec::BfDiffusion { .. } => return build_structure(scene, inner),
+            other => {
+                return Err(invalid(format!(
+                    "precision wrapper on unsupported backend {}",
+                    other.name()
+                )))
+            }
+        },
     }))
 }
 
@@ -906,6 +1067,76 @@ fn finish_impl(
         IntegratorSpec::Bader { lambda } => {
             let g = scene.require_graph("bader")?;
             Box::new(BaderDense::new(g, *lambda))
+        }
+        IntegratorSpec::Precision(p, inner) => {
+            let acc64 = *p == Precision::F32AccF64;
+            match &**inner {
+                IntegratorSpec::Rfd(cfg) => {
+                    let s = match structure {
+                        Some(StructureArtifact::RfdFeaturesF32(s)) => {
+                            if *s.params() != RfdStructuralParams::of(cfg) {
+                                return Err(structure_mismatch(
+                                    spec,
+                                    &StructureArtifact::RfdFeaturesF32(s),
+                                ));
+                            }
+                            s
+                        }
+                        Some(other) => return Err(structure_mismatch(spec, &other)),
+                        None => {
+                            let pts = scene.require_points("rfd")?;
+                            Arc::new(RfdStructureF32::from_f64(&RfdStructure::build(pts, cfg)))
+                        }
+                    };
+                    Box::new(RfDiffusionF32::from_structure(s, cfg.clone(), acc64)?)
+                }
+                IntegratorSpec::BfSp(kernel) => {
+                    let km = match structure {
+                        Some(StructureArtifact::DistancesF32(d)) => {
+                            artifacts::sp_kernel_map_f32(&d, kernel)
+                        }
+                        Some(other) => return Err(structure_mismatch(spec, &other)),
+                        None => {
+                            let g = scene.require_graph("bf_sp")?;
+                            artifacts::sp_kernel_map_f32(
+                                &artifacts::distances_to_f32(&artifacts::graph_distance_matrix(
+                                    g,
+                                )),
+                                kernel,
+                            )
+                        }
+                    };
+                    Box::new(BruteForceSp::from_kernel_f32(km, acc64))
+                }
+                IntegratorSpec::BfDiffusion { epsilon, lambda } => {
+                    let g = match structure {
+                        Some(StructureArtifact::EpsGraph { epsilon: built_eps, graph }) => {
+                            if built_eps != *epsilon {
+                                return Err(structure_mismatch(
+                                    spec,
+                                    &StructureArtifact::EpsGraph {
+                                        epsilon: built_eps,
+                                        graph,
+                                    },
+                                ));
+                            }
+                            graph
+                        }
+                        Some(other) => return Err(structure_mismatch(spec, &other)),
+                        None => {
+                            let pts = scene.require_points("bf_diffusion")?;
+                            Arc::new(pts.epsilon_graph(*epsilon, Norm::LInf, true))
+                        }
+                    };
+                    Box::new(BruteForceDiffusion::new_f32(&g, *lambda, acc64))
+                }
+                other => {
+                    return Err(invalid(format!(
+                        "precision wrapper on unsupported backend {}",
+                        other.name()
+                    )))
+                }
+            }
         }
     };
     Ok(built)
@@ -1096,6 +1327,68 @@ mod tests {
         assert_ne!(a, c, "ridge must be part of the cache key");
         // Rfd and RfdPjrt share the prepared fallback integrator.
         assert_eq!(a, IntegratorSpec::RfdPjrt(base).cache_key().unwrap());
+    }
+
+    #[test]
+    fn precision_policy_keys_normalization_and_wire() {
+        let base = IntegratorSpec::BfSp(KernelFn::ExpNeg(1.0));
+        let f32s = IntegratorSpec::with_precision(Precision::F32, base.clone());
+        let acc = IntegratorSpec::with_precision(Precision::F32AccF64, base.clone());
+        // F64 normalizes away; re-wrapping replaces, never nests.
+        assert!(matches!(
+            IntegratorSpec::with_precision(Precision::F64, f32s.clone()),
+            IntegratorSpec::BfSp(_)
+        ));
+        assert!(matches!(
+            IntegratorSpec::with_precision(Precision::F32AccF64, f32s.clone()),
+            IntegratorSpec::Precision(Precision::F32AccF64, _)
+        ));
+        assert_eq!(f32s.precision(), Precision::F32);
+        assert_eq!(base.precision(), Precision::F64);
+        // Three distinct cache identities.
+        let k64 = base.cache_key().unwrap();
+        let k32 = f32s.cache_key().unwrap();
+        let kacc = acc.cache_key().unwrap();
+        assert_ne!(k64, k32);
+        assert_ne!(k64, kacc);
+        assert_ne!(k32, kacc);
+        // f32 and f32acc64 share one quantized structure; f64 does not.
+        assert_eq!(f32s.structural_key(), acc.structural_key());
+        assert_ne!(base.structural_key(), f32s.structural_key());
+        // BF-diffusion's ε-graph is precision-independent and shared.
+        let bfd = IntegratorSpec::BfDiffusion { epsilon: 0.2, lambda: -0.2 };
+        let bfd32 = IntegratorSpec::with_precision(Precision::F32, bfd.clone());
+        assert_eq!(bfd.structural_key(), bfd32.structural_key());
+        assert_ne!(bfd.cache_key().unwrap(), bfd32.cache_key().unwrap());
+        // Wire round-trip preserves the policy and the cache identity.
+        let wire = f32s.to_json().unwrap();
+        let back = IntegratorSpec::from_request(&wire).unwrap();
+        assert_eq!(back.cache_key().unwrap(), k32);
+        assert_eq!(back.precision(), Precision::F32);
+        // Unknown precision tokens are rejected at parse time.
+        let mut bad_wire = match bfd.to_json().unwrap() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        bad_wire.insert("precision".into(), Json::Str("f16".into()));
+        assert!(matches!(
+            IntegratorSpec::from_request(&Json::Obj(bad_wire)),
+            Err(GfiError::InvalidSpec { .. })
+        ));
+        // Hand-built degenerate wrappers fail validation.
+        let scene = mesh_scene();
+        let on_baseline = IntegratorSpec::Precision(
+            Precision::F32,
+            Box::new(IntegratorSpec::AlMohy { lambda: -0.1 }),
+        );
+        assert!(matches!(
+            prepare(&scene, &on_baseline),
+            Err(GfiError::InvalidSpec { .. })
+        ));
+        let f64_wrap = IntegratorSpec::Precision(Precision::F64, Box::new(base.clone()));
+        assert!(matches!(prepare(&scene, &f64_wrap), Err(GfiError::InvalidSpec { .. })));
+        let nested = IntegratorSpec::Precision(Precision::F32, Box::new(acc));
+        assert!(matches!(prepare(&scene, &nested), Err(GfiError::InvalidSpec { .. })));
     }
 
     #[test]

@@ -23,9 +23,18 @@
 //! tests below check blocked-vs-naive parity on randomized shapes,
 //! including empty, 1×1, non-square, and non-multiple-of-block-size
 //! operands.
+//!
+//! The register tile has three interchangeable implementations: the
+//! scalar [`microkernel`] (the documented oracle), an AVX2 f64x4 kernel,
+//! and a NEON f64x2 kernel. The SIMD kernels replay the oracle's exact
+//! operation order with separate multiplies and adds (no FMA
+//! contraction), so all three are **bitwise identical** — proven by
+//! `tests/simd.rs`. Dispatch is resolved once per [`gemm`] call via
+//! [`crate::util::simd`] and threaded by value.
 
 use super::Mat;
 use crate::util::par;
+use crate::util::simd::{self, Kern};
 
 /// Operand orientation: `No` uses the matrix as stored, `Yes` uses its
 /// transpose (handled in the packing step — nothing is materialized).
@@ -115,6 +124,7 @@ pub fn gemm(alpha: f64, a: &Mat, ta: Trans, b: &Mat, tb: Trans, beta: f64, c: &m
         gemm_naive(alpha, a, ta, b, tb, beta, c);
         return;
     }
+    let kern = simd::kern();
     let nblocks = n.div_ceil(MC);
     let kpanels = k.div_ceil(KC);
     if nblocks == 1 && kpanels > 1 {
@@ -127,7 +137,7 @@ pub fn gemm(alpha: f64, a: &Mat, ta: Trans, b: &Mat, tb: Trans, beta: f64, c: &m
             let pc = pi * KC;
             let kc = KC.min(k - pc);
             let mut part = vec![0.0; n * m];
-            panel_into(alpha, a, ta, b, tb, pc, kc, &mut part, n, m, 0.0);
+            panel_into(kern, alpha, a, ta, b, tb, pc, kc, &mut part, n, m, 0.0);
             part
         });
         scale_slice(&mut c.data, beta);
@@ -157,7 +167,7 @@ pub fn gemm(alpha: f64, a: &Mat, ta: Trans, b: &Mat, tb: Trans, beta: f64, c: &m
                 let crows = unsafe {
                     std::slice::from_raw_parts_mut(cc_ref.get(ic * m) as *mut f64, mc * m)
                 };
-                micro_block(&pa, pb_ref, kc, mc, nc, crows, m, jc, alpha, beta_eff);
+                micro_block(kern, &pa, pb_ref, kc, mc, nc, crows, m, jc, alpha, beta_eff);
             });
         }
     }
@@ -168,6 +178,7 @@ pub fn gemm(alpha: f64, a: &Mat, ta: Trans, b: &Mat, tb: Trans, beta: f64, c: &m
 /// (a row-slice of C with leading dimension `ld`, columns offset `col0`).
 #[allow(clippy::too_many_arguments)]
 fn micro_block(
+    kern: Kern,
     pa: &[f64],
     pb: &[f64],
     kc: usize,
@@ -185,7 +196,7 @@ fn micro_block(
         for ir in (0..mc).step_by(MR) {
             let mr = MR.min(mc - ir);
             let apanel = &pa[(ir / MR) * kc * MR..][..kc * MR];
-            let acc = microkernel(kc, apanel, bpanel);
+            let acc = microkernel_dispatch(kern, kc, apanel, bpanel);
             store_tile(crows, ld, ir, col0 + jr, mr, nr, alpha, beta_eff, &acc);
         }
     }
@@ -195,6 +206,7 @@ fn micro_block(
 /// the per-worker body of the tall-k reduction path.
 #[allow(clippy::too_many_arguments)]
 fn panel_into(
+    kern: Kern,
     alpha: f64,
     a: &Mat,
     ta: Trans,
@@ -215,7 +227,7 @@ fn panel_into(
             let mc = MC.min(n - ic);
             let pa = pack_a(a, ta, ic, mc, pc, kc);
             let crows = &mut cbuf[ic * m..(ic + mc) * m];
-            micro_block(&pa, &pb, kc, mc, nc, crows, m, jc, alpha, beta_eff);
+            micro_block(kern, &pa, &pb, kc, mc, nc, crows, m, jc, alpha, beta_eff);
         }
     }
 }
@@ -303,6 +315,13 @@ fn pack_b(b: &Mat, tb: Trans, pc: usize, kc: usize, jc: usize, nc: usize) -> Vec
 
 /// Register-tiled inner kernel: a full `MR×NR` accumulator over one packed
 /// depth panel. Both panels are zero-padded, so no edge branches.
+///
+/// **This scalar version is the oracle.** The SIMD kernels below must
+/// replay its exact per-element operation sequence — for each depth step
+/// `p`, each output lane `(r, j)` performs one rounded multiply
+/// `av * b[j]` followed by one rounded add into `acc[r][j]`, with no
+/// cross-lane reassociation and no FMA contraction — so their results
+/// are bitwise identical to this loop (asserted by `tests/simd.rs`).
 #[inline]
 fn microkernel(kc: usize, pa: &[f64], pb: &[f64]) -> [[f64; NR]; MR] {
     debug_assert!(pa.len() >= kc * MR && pb.len() >= kc * NR);
@@ -318,6 +337,87 @@ fn microkernel(kc: usize, pa: &[f64], pb: &[f64]) -> [[f64; NR]; MR] {
         }
     }
     acc
+}
+
+/// Resolved-kernel dispatch for one register tile. The `Kern` value was
+/// produced by runtime feature detection (or pinned by `GFI_SIMD` / an
+/// engine override), so reaching a SIMD arm implies the feature is
+/// present — that is the safety contract of the `unsafe` calls.
+#[inline]
+fn microkernel_dispatch(kern: Kern, kc: usize, pa: &[f64], pb: &[f64]) -> [[f64; NR]; MR] {
+    match kern {
+        Kern::Scalar => microkernel(kc, pa, pb),
+        // SAFETY: Kern::Avx2 is only constructed after
+        // `is_x86_feature_detected!("avx2")` succeeded.
+        #[cfg(target_arch = "x86_64")]
+        Kern::Avx2 => unsafe { microkernel_avx2(kc, pa, pb) },
+        // SAFETY: NEON is baseline on aarch64.
+        #[cfg(target_arch = "aarch64")]
+        Kern::Neon => unsafe { microkernel_neon(kc, pa, pb) },
+    }
+}
+
+/// AVX2 register tile: per row `r`, two `__m256d` accumulators cover the
+/// NR = 8 columns. Multiplies and adds stay separate (`_mm256_mul_pd` +
+/// `_mm256_add_pd`, deliberately not `_mm256_fmadd_pd`) so each lane's
+/// rounding matches the scalar oracle exactly.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn microkernel_avx2(kc: usize, pa: &[f64], pb: &[f64]) -> [[f64; NR]; MR] {
+    use std::arch::x86_64::*;
+    debug_assert!(pa.len() >= kc * MR && pb.len() >= kc * NR);
+    let mut acc = [[_mm256_setzero_pd(); 2]; MR];
+    for p in 0..kc {
+        let bp = pb.as_ptr().add(p * NR);
+        let b0 = _mm256_loadu_pd(bp);
+        let b1 = _mm256_loadu_pd(bp.add(4));
+        let ap = pa.as_ptr().add(p * MR);
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = _mm256_set1_pd(*ap.add(r));
+            accr[0] = _mm256_add_pd(accr[0], _mm256_mul_pd(av, b0));
+            accr[1] = _mm256_add_pd(accr[1], _mm256_mul_pd(av, b1));
+        }
+    }
+    let mut out = [[0.0f64; NR]; MR];
+    for (r, accr) in acc.iter().enumerate() {
+        _mm256_storeu_pd(out[r].as_mut_ptr(), accr[0]);
+        _mm256_storeu_pd(out[r].as_mut_ptr().add(4), accr[1]);
+    }
+    out
+}
+
+/// NEON register tile: per row `r`, four `float64x2_t` accumulators cover
+/// the NR = 8 columns; `vmulq_f64` + `vaddq_f64` (not `vfmaq_f64`) keeps
+/// per-lane rounding identical to the scalar oracle.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn microkernel_neon(kc: usize, pa: &[f64], pb: &[f64]) -> [[f64; NR]; MR] {
+    use std::arch::aarch64::*;
+    debug_assert!(pa.len() >= kc * MR && pb.len() >= kc * NR);
+    let mut acc = [[vdupq_n_f64(0.0); 4]; MR];
+    for p in 0..kc {
+        let bp = pb.as_ptr().add(p * NR);
+        let b = [
+            vld1q_f64(bp),
+            vld1q_f64(bp.add(2)),
+            vld1q_f64(bp.add(4)),
+            vld1q_f64(bp.add(6)),
+        ];
+        let ap = pa.as_ptr().add(p * MR);
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = vdupq_n_f64(*ap.add(r));
+            for (j, bj) in b.iter().enumerate() {
+                accr[j] = vaddq_f64(accr[j], vmulq_f64(av, *bj));
+            }
+        }
+    }
+    let mut out = [[0.0f64; NR]; MR];
+    for (r, accr) in acc.iter().enumerate() {
+        for (j, v) in accr.iter().enumerate() {
+            vst1q_f64(out[r].as_mut_ptr().add(2 * j), *v);
+        }
+    }
+    out
 }
 
 /// Writes an accumulator tile into `C` with fused α/β scaling; only the
@@ -483,6 +583,30 @@ mod tests {
         let mut c = Mat::from_vec(3, 2, vec![1.0; 6]);
         gemm(1.0, &a, Trans::No, &b, Trans::No, 0.5, &mut c);
         assert_eq!(c.data, vec![0.5; 6]);
+    }
+
+    #[test]
+    fn simd_microkernel_is_bitwise_oracle() {
+        // Direct tile-level check; the end-to-end differential suite
+        // lives in tests/simd.rs. Exercises whichever SIMD kernel this
+        // CPU detects; trivially passes (scalar vs scalar) elsewhere.
+        let kern = simd::kern();
+        let mut rng = Rng::new(42);
+        for kc in [1usize, 2, 7, 64, KC] {
+            let pa: Vec<f64> = (0..kc * MR).map(|_| rng.gaussian()).collect();
+            let pb: Vec<f64> = (0..kc * NR).map(|_| rng.gaussian()).collect();
+            let want = microkernel(kc, &pa, &pb);
+            let got = microkernel_dispatch(kern, kc, &pa, &pb);
+            for r in 0..MR {
+                for j in 0..NR {
+                    assert_eq!(
+                        want[r][j].to_bits(),
+                        got[r][j].to_bits(),
+                        "kc={kc} r={r} j={j} kern={kern:?}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

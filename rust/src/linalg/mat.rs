@@ -309,6 +309,85 @@ impl Mat {
     }
 }
 
+/// Row-major dense `f32` matrix — the storage type behind the
+/// mixed-precision policy (`IntegratorSpec` precision `f32` /
+/// `f32_acc_f64`). It is a storage container, not an arithmetic type:
+/// apply paths widen or accumulate explicitly (`integrators/bf.rs`,
+/// `integrators/rfd.rs`), and values are produced by quantizing f64
+/// results via [`MatF32::from_f64`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatF32 {
+    /// Row count.
+    pub rows: usize,
+    /// Column count.
+    pub cols: usize,
+    /// Row-major element storage, `rows * cols` long.
+    pub data: Vec<f32>,
+}
+
+impl MatF32 {
+    /// All-zero `rows × cols` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatF32 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Wraps row-major storage of exactly `rows * cols` elements.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        MatF32 { rows, cols, data }
+    }
+
+    /// Quantizes an f64 matrix to f32 storage. Rust `as` casts saturate:
+    /// finite values beyond f32 range become `±f32::INFINITY` and NaN
+    /// stays NaN — non-finite *distances* are additionally normalized by
+    /// `integrators::artifacts::distances_to_f32`.
+    pub fn from_f64(m: &Mat) -> Self {
+        MatF32 {
+            rows: m.rows,
+            cols: m.cols,
+            data: m.data.iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    /// Widens back to f64 (exact: every f32 is representable in f64).
+    pub fn to_f64(&self) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    /// Row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Row `r` as a mutable slice.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+impl Index<(usize, usize)> for MatF32 {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl IndexMut<(usize, usize)> for MatF32 {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
 impl Index<(usize, usize)> for Mat {
     type Output = f64;
     #[inline]
@@ -432,5 +511,20 @@ mod tests {
         let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
         assert_eq!(a.row_sums(), vec![3.0, 7.0]);
         assert_eq!(a.col_sums(), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn matf32_quantize_widen_saturate() {
+        let a = Mat::from_rows(&[&[1.5, 1e300, -1e300], &[f64::INFINITY, f64::NAN, 0.25]]);
+        let q = MatF32::from_f64(&a);
+        assert_eq!(q.data[0], 1.5);
+        assert_eq!(q.data[1], f32::INFINITY); // saturating cast
+        assert_eq!(q.data[2], f32::NEG_INFINITY);
+        assert_eq!(q.data[3], f32::INFINITY);
+        assert!(q.data[4].is_nan());
+        let w = q.to_f64();
+        assert_eq!(w.data[0], 1.5);
+        assert_eq!(w.data[5], 0.25);
+        assert_eq!(q.row(1).len(), 3);
     }
 }

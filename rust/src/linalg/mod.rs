@@ -16,6 +16,6 @@ mod solve;
 pub use eig::{eigh_jacobi, eigh_tridiagonal, EighResult};
 pub use expm::{expm_pade, expm_taylor};
 pub use gemm::{gemm as gemm_into, gemm_naive, Trans};
-pub use mat::Mat;
+pub use mat::{Mat, MatF32};
 pub use qr::thin_qr;
 pub use solve::{lu_factor, lu_solve_inplace, LuFactors};

@@ -13,6 +13,7 @@ mod gw_exp;
 mod interp_exp;
 mod ot_exp;
 mod pct_exp;
+mod precision_exp;
 
 use crate::util::error::{bail, Result};
 
@@ -37,6 +38,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("table8", "graph classification: VH/RW/WL-SP/FB vs RFD"),
     ("pct", "RFD-masked performer attention (Sec 3.3)"),
     ("dynmesh", "mesh dynamics: update_cloud + SF refresh vs full re-prepare"),
+    ("precision", "mixed-precision f32 policies: max-rel-error + bytes vs f64"),
 ];
 
 /// Runs one experiment by id.
@@ -61,6 +63,7 @@ pub fn run(id: &str, quick: bool) -> Result<()> {
         "table4" => classify_exp::table4(quick),
         "table8" => classify_exp::table8(quick),
         "pct" => pct_exp::pct(quick),
+        "precision" => precision_exp::precision(quick),
         "all" => {
             for (eid, _) in EXPERIMENTS {
                 println!("\n########## {eid} ##########");

@@ -1,0 +1,73 @@
+//! Mixed-precision accuracy/footprint table (PR 8): for every backend
+//! that supports the precision policy (`rfd`, `bf_sp`, `bf_diffusion`),
+//! reports the max relative error of the `f32` and `f32-accumulate-f64`
+//! policies against the f64 reference apply, together with the
+//! resident-byte ratio — the evidence behind the "f32 halves the dense
+//! footprint at ~1e-7 relative error" claim in docs/ARCHITECTURE.md
+//! ("SIMD & precision").
+
+use crate::integrators::rfd::RfdConfig;
+use crate::integrators::{prepare, IntegratorSpec, KernelFn, Precision, Scene};
+use crate::linalg::Mat;
+use crate::pointcloud::random_cloud;
+use crate::util::error::{anyhow, Result};
+use crate::util::rng::Rng;
+
+/// Max elementwise deviation of `got` from `want`, relative to the
+/// largest reference magnitude (scale-free, robust to near-zero entries).
+fn max_rel_err(want: &Mat, got: &Mat) -> f64 {
+    let scale = want.data.iter().map(|v| v.abs()).fold(0.0, f64::max).max(1e-30);
+    want.data
+        .iter()
+        .zip(&got.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max)
+        / scale
+}
+
+pub fn precision(quick: bool) -> Result<()> {
+    println!("=== Mixed precision: f32 storage policies vs f64 reference ===");
+    let n = if quick { 256 } else { 1024 };
+    let mut rng = Rng::new(11);
+    let pc = random_cloud(n, &mut rng);
+    let g = pc.epsilon_graph(0.2, crate::pointcloud::Norm::LInf, true);
+    let scene = Scene::new(pc, Some(g));
+    let field = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.gaussian()).collect());
+
+    let bases = [
+        ("rfd", IntegratorSpec::Rfd(RfdConfig { num_features: 32, epsilon: 0.2, lambda: -0.5, ..Default::default() })),
+        ("bf_sp", IntegratorSpec::BfSp(KernelFn::ExpNeg(4.0))),
+        ("bf_diffusion", IntegratorSpec::BfDiffusion { epsilon: 0.2, lambda: -0.2 }),
+    ];
+    println!(
+        "{:>14} {:>14} {:>14} {:>12}",
+        "backend", "relerr(f32)", "relerr(acc64)", "bytes ratio"
+    );
+    for (name, base) in bases {
+        let i64_ = prepare(&scene, &base)?;
+        let want = i64_.apply(&field);
+        let mut errs = [0.0f64; 2];
+        let mut bytes32 = 0usize;
+        for (slot, prec) in [Precision::F32, Precision::F32AccF64].into_iter().enumerate() {
+            let spec = IntegratorSpec::with_precision(prec, base.clone());
+            let integ = prepare(&scene, &spec)?;
+            errs[slot] = max_rel_err(&want, &integ.apply(&field));
+            bytes32 = integ.resident_bytes();
+        }
+        println!(
+            "{:>14} {:>14.3e} {:>14.3e} {:>12.3}",
+            name,
+            errs[0],
+            errs[1],
+            bytes32 as f64 / i64_.resident_bytes() as f64
+        );
+        // Acceptance: quantize-once storage keeps both policies within
+        // f32 epsilon territory of the f64 reference.
+        for (prec, e) in ["f32", "f32_acc_f64"].iter().zip(errs) {
+            if e > 1e-4 {
+                return Err(anyhow!("{name}/{prec}: rel err {e:.3e} exceeds 1e-4"));
+            }
+        }
+    }
+    Ok(())
+}

@@ -225,6 +225,21 @@ impl Writer {
             self.put_f64(v);
         }
     }
+
+    /// Appends an `f32` as its IEEE-754 bit pattern, little-endian —
+    /// bitwise round-trip for the mixed-precision artifacts, same
+    /// rationale as `put_f64`.
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+
+    /// Appends a length-prefixed `f32` sequence (bit patterns).
+    pub fn put_f32s(&mut self, vs: &[f32]) {
+        self.put_u64(vs.len() as u64);
+        for &v in vs {
+            self.put_f32(v);
+        }
+    }
 }
 
 /// Bounds-checked little-endian decoder over a borrowed byte slice.
@@ -368,6 +383,21 @@ impl<'a> Reader<'a> {
         }
         Ok(out)
     }
+
+    /// Reads an `f32` from its IEEE-754 bit pattern.
+    pub fn f32(&mut self) -> Result<f32, CodecError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    /// Reads a length-prefixed `f32` sequence (bit patterns).
+    pub fn f32s(&mut self) -> Result<Vec<f32>, CodecError> {
+        let n = self.seq_len(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -407,6 +437,22 @@ mod tests {
         assert_eq!(r.u32s().unwrap(), vec![1, 2, 3]);
         assert_eq!(r.usizes().unwrap(), vec![0, 10, usize::MAX]);
         assert_eq!(r.f64s().unwrap(), vec![1.5, -2.25]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn f32_bitwise_roundtrip() {
+        let vals = [1.5f32, -0.0, f32::INFINITY, f32::NEG_INFINITY, f32::NAN, f32::MIN_POSITIVE];
+        let mut w = Writer::new();
+        w.put_f32(0.25);
+        w.put_f32s(&vals);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.f32().unwrap(), 0.25);
+        let back = r.f32s().unwrap();
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
         r.finish().unwrap();
     }
 

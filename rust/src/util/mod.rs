@@ -13,6 +13,8 @@
 //!   hashing for the persistent artifact store.
 //! * [`stats`] — summary statistics + error metrics shared by the repro
 //!   drivers (cosine similarity, MSE, relative error, percentiles).
+//! * [`simd`] — runtime SIMD kernel dispatch (`GFI_SIMD`, feature
+//!   detection, process override) for the `core::arch` microkernels.
 //! * [`timer`] — scoped wall-clock timing.
 
 pub mod bench;
@@ -21,5 +23,6 @@ pub mod error;
 pub mod json;
 pub mod par;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod timer;

@@ -1,0 +1,153 @@
+//! Runtime SIMD dispatch for the crate's explicit `core::arch`
+//! microkernels (`linalg/gemm.rs`, `integrators/artifacts.rs`,
+//! `integrators/rfd.rs`, `graph/distances.rs`).
+//!
+//! Three layers pick the kernel, highest priority first:
+//!
+//! 1. **Process override** — [`set_override`], set by
+//!    `EngineConfig::simd` and by the differential test suite
+//!    (`tests/simd.rs`) to pin one path per assertion.
+//! 2. **`GFI_SIMD` env var** — `off` / `scalar` pin the scalar oracle
+//!    path, `native` (or unset) enables runtime feature detection. CI
+//!    runs the whole test suite under both settings so the scalar
+//!    oracle can never bit-rot.
+//! 3. **Feature detection** — AVX2 on x86_64
+//!    (`is_x86_feature_detected!`), NEON on aarch64 (baseline), scalar
+//!    everywhere else. Detected once, cached.
+//!
+//! **The oracle contract:** every SIMD kernel in this crate performs the
+//! *same* floating-point operations in the *same* order as its scalar
+//! oracle — multiplies and adds stay separate (no FMA contraction, which
+//! would change rounding), reductions keep the scalar association order,
+//! and transcendentals (`exp`, `sin_cos`) stay scalar libm per lane.
+//! SIMD and scalar results are therefore **bitwise identical**, which is
+//! what `tests/simd.rs` asserts (a stronger bar than the ≤1 ULP
+//! acceptance criterion). The cost of that contract is that the SIMD
+//! win is bounded: the crate builds with `-C target-cpu=native`, so LLVM
+//! already auto-vectorizes the scalar kernels where reassociation is not
+//! required — see docs/ARCHITECTURE.md, "SIMD & precision".
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Which dispatch path integrator hot loops take.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Always the scalar oracle kernels.
+    Scalar,
+    /// Runtime feature detection picks the widest available kernel
+    /// (AVX2 / NEON), falling back to scalar.
+    Native,
+}
+
+/// Process-wide override: 0 = none, 1 = scalar, 2 = native.
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Pins (or, with `None`, releases) the process-wide dispatch mode.
+/// Takes priority over `GFI_SIMD`. Process-global by nature — concurrent
+/// callers that need a pinned mode must serialize (the differential
+/// suite holds a lock around every pinned section).
+pub fn set_override(mode: Option<SimdMode>) {
+    let v = match mode {
+        None => 0,
+        Some(SimdMode::Scalar) => 1,
+        Some(SimdMode::Native) => 2,
+    };
+    OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// `GFI_SIMD` parse, cached for the process lifetime: `off`/`scalar`/`0`
+/// pin the scalar path; `native`/`on` (and any other value, and unset)
+/// mean feature detection.
+fn env_mode() -> SimdMode {
+    static ENV: OnceLock<SimdMode> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("GFI_SIMD") {
+        Ok(v) if v.eq_ignore_ascii_case("off")
+            || v.eq_ignore_ascii_case("scalar")
+            || v == "0" =>
+        {
+            SimdMode::Scalar
+        }
+        _ => SimdMode::Native,
+    })
+}
+
+/// The effective dispatch mode (override, else env, else native).
+pub fn mode() -> SimdMode {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        1 => SimdMode::Scalar,
+        2 => SimdMode::Native,
+        _ => env_mode(),
+    }
+}
+
+/// One resolved kernel choice, threaded by value through the hot loops
+/// so dispatch costs one atomic load per *call*, never per iteration.
+/// Variants only exist on architectures that compile their kernels; the
+/// scalar fallback is always compiled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kern {
+    /// The scalar oracle path.
+    Scalar,
+    /// AVX2 f64x4 kernels (x86_64, runtime-detected).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// NEON f64x2 kernels (aarch64 baseline).
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+/// Widest kernel the CPU supports, detected once.
+fn native_kern() -> Kern {
+    static K: OnceLock<Kern> = OnceLock::new();
+    *K.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return Kern::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        return Kern::Neon;
+        #[cfg(not(target_arch = "aarch64"))]
+        Kern::Scalar
+    })
+}
+
+/// Resolves the kernel for one hot-loop call under the current mode.
+pub fn kern() -> Kern {
+    match mode() {
+        SimdMode::Scalar => Kern::Scalar,
+        SimdMode::Native => native_kern(),
+    }
+}
+
+/// Human-readable name of the currently-resolved kernel (benches, docs).
+pub fn kernel_name() -> &'static str {
+    match kern() {
+        Kern::Scalar => "scalar",
+        #[cfg(target_arch = "x86_64")]
+        Kern::Avx2 => "avx2",
+        #[cfg(target_arch = "aarch64")]
+        Kern::Neon => "neon",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn override_wins_and_releases() {
+        // Serialized against nothing: unit tests in this module are the
+        // only in-crate writers; the integration suite has its own lock.
+        set_override(Some(SimdMode::Scalar));
+        assert_eq!(mode(), SimdMode::Scalar);
+        assert_eq!(kern(), Kern::Scalar);
+        set_override(Some(SimdMode::Native));
+        assert_eq!(mode(), SimdMode::Native);
+        set_override(None);
+        let _ = mode(); // env-dependent; just must not panic
+        let _ = kernel_name();
+    }
+}

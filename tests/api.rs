@@ -14,7 +14,8 @@ use gfi::integrators::rfd::RfdConfig;
 use gfi::integrators::sf::SfConfig;
 use gfi::integrators::trees::TreeKind;
 use gfi::integrators::{
-    prepare, FieldIntegrator, GfiError, IntegratorSpec, KernelFn, Scene, Workspace,
+    prepare, prepare_structure, FieldIntegrator, GfiError, IntegratorSpec, KernelFn, Precision,
+    Scene, StructureArtifact, Workspace,
 };
 use gfi::linalg::Mat;
 use gfi::util::rng::Rng;
@@ -836,5 +837,319 @@ fn doctored_store_files_degrade_to_recompute_bitwise() {
         assert_eq!(c.store_stats().unwrap().disk_hits, 1, "{tag}");
         assert_eq!(out2.data, want.data, "{tag}");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// PR 8 acceptance (precision policy, keys + footprint): each precision
+/// variant of a dense-storage spec gets its own cache identity, the f32
+/// policies report roughly half the resident bytes of f64 on the dense
+/// backends, track the f64 results closely, and the two f32 policies
+/// share one quantized structure (one structural key) while staying
+/// distinct cache entries.
+#[test]
+fn precision_policies_have_distinct_keys_and_half_the_footprint() {
+    let scene = mesh_scene();
+    let n = scene.len();
+    let field = rand_field(n, 3, 92);
+    let bases = [
+        IntegratorSpec::BfSp(KernelFn::ExpNeg(2.0)),
+        IntegratorSpec::BfDiffusion { epsilon: 0.2, lambda: -0.2 },
+        IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() }),
+    ];
+    for base in &bases {
+        let f32_spec = IntegratorSpec::with_precision(Precision::F32, base.clone());
+        let acc_spec = IntegratorSpec::with_precision(Precision::F32AccF64, base.clone());
+        // Three distinct cache identities…
+        let keys = [
+            base.cache_key().unwrap(),
+            f32_spec.cache_key().unwrap(),
+            acc_spec.cache_key().unwrap(),
+        ];
+        assert_ne!(keys[0], keys[1], "{base:?}");
+        assert_ne!(keys[1], keys[2], "{base:?}");
+        assert_ne!(keys[0], keys[2], "{base:?}");
+        // …but the two f32 policies share one quantized structure.
+        assert_eq!(
+            f32_spec.structural_key(),
+            acc_spec.structural_key(),
+            "{base:?}: F32 and F32AccF64 must share a structure"
+        );
+        let i64 = prepare(&scene, base).unwrap();
+        let i32_ = prepare(&scene, &f32_spec).unwrap();
+        let iacc = prepare(&scene, &acc_spec).unwrap();
+        // f32 storage shrinks the footprint; on the dense-table backends
+        // (BF) it is within rounding of exactly half.
+        assert!(
+            i32_.resident_bytes() < i64.resident_bytes(),
+            "{base:?}: f32 {} vs f64 {}",
+            i32_.resident_bytes(),
+            i64.resident_bytes()
+        );
+        if matches!(base, IntegratorSpec::BfSp(_) | IntegratorSpec::BfDiffusion { .. }) {
+            assert!(
+                i32_.resident_bytes() * 10 <= i64.resident_bytes() * 6,
+                "{base:?}: dense f32 table must be ~half: {} vs {}",
+                i32_.resident_bytes(),
+                i64.resident_bytes()
+            );
+        }
+        assert_eq!(i32_.resident_bytes(), iacc.resident_bytes(), "{base:?}");
+        // Quantized results track f64 closely.
+        let want = i64.apply(&field);
+        let scale = want.data.iter().map(|v| v.abs()).fold(0.0, f64::max).max(1e-30);
+        for got in [i32_.apply(&field), iacc.apply(&field)] {
+            let max_abs = want
+                .data
+                .iter()
+                .zip(&got.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            assert!(max_abs / scale < 1e-4, "{base:?}: rel err {}", max_abs / scale);
+        }
+    }
+    // Engine level: the three variants occupy three cache entries.
+    let engine = Engine::new(None);
+    let id = engine.register_mesh(gfi::mesh::icosphere(1), "s");
+    let n = engine.cloud(id).unwrap().scene.len();
+    let field = rand_field(n, 2, 93);
+    let base = IntegratorSpec::BfSp(KernelFn::ExpNeg(2.0));
+    for spec in [
+        base.clone(),
+        IntegratorSpec::with_precision(Precision::F32, base.clone()),
+        IntegratorSpec::with_precision(Precision::F32AccF64, base),
+    ] {
+        let (_, first) = engine.integrate(id, &spec, &field).unwrap();
+        assert!(!first.cache_hit, "{spec:?}");
+        let (_, second) = engine.integrate(id, &spec, &field).unwrap();
+        assert!(second.cache_hit, "{spec:?}");
+    }
+    assert_eq!(engine.cache_stats().integrators.entries, 3);
+}
+
+/// PR 8 acceptance (f32 artifacts on disk): quantized structures
+/// round-trip the store codec bitwise, and a warm restart serves the f32
+/// specs from disk with zero structure builds (tripwire-proven), bitwise
+/// identical to the pre-restart outputs.
+#[test]
+fn f32_artifacts_roundtrip_bitwise_and_survive_warm_restart() {
+    let scene = mesh_scene();
+    let specs = [
+        IntegratorSpec::with_precision(Precision::F32, IntegratorSpec::BfSp(KernelFn::ExpNeg(2.0))),
+        IntegratorSpec::with_precision(
+            Precision::F32AccF64,
+            IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() }),
+        ),
+    ];
+    // Codec round-trip is bitwise: encode → decode → re-encode yields
+    // identical bytes.
+    for spec in &specs {
+        let art = prepare_structure(&scene, spec).unwrap().unwrap();
+        assert!(art.kind().ends_with("_f32"), "{spec:?} must build a quantized structure");
+        let mut w = gfi::util::codec::Writer::new();
+        art.encode_payload(&mut w);
+        let bytes = w.into_bytes();
+        let decoded =
+            StructureArtifact::decode_payload(&mut gfi::util::codec::Reader::new(&bytes))
+                .unwrap();
+        assert_eq!(decoded.kind(), art.kind());
+        let mut w2 = gfi::util::codec::Writer::new();
+        decoded.encode_payload(&mut w2);
+        assert_eq!(bytes, w2.into_bytes(), "{spec:?}: f32 artifact round-trip not bitwise");
+    }
+
+    let dir = std::env::temp_dir().join(format!("gfi_f32_restart_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let (n, outs_a) = {
+        let a = EngineConfig::default().artifacts(&dir).store(true).build();
+        let id = a.register_mesh(gfi::mesh::icosphere(2), "sphere");
+        let n = a.cloud(id).unwrap().scene.len();
+        let field = rand_field(n, 3, 94);
+        let outs: Vec<Mat> =
+            specs.iter().map(|s| a.integrate(id, s, &field).unwrap().0).collect();
+        let s = a.store_stats().unwrap();
+        assert_eq!(s.spills, 2, "one spill per quantized structural key: {s:?}");
+        (n, outs)
+    };
+    let trip = gfi::coordinator::faults::FaultPlan::parse("site=prepare,kind=error,times=1000")
+        .unwrap();
+    let b = EngineConfig::default().artifacts(&dir).store(true).fault_plan(trip).build();
+    let id = b.register_mesh(gfi::mesh::icosphere(2), "sphere");
+    let field = rand_field(n, 3, 94);
+    for (spec, want) in specs.iter().zip(&outs_a) {
+        let (out, info) = b
+            .integrate(id, spec, &field)
+            .unwrap_or_else(|e| panic!("{spec:?}: restart must not rebuild: {e}"));
+        assert!(info.structure_shared, "{spec:?}: quantized structure must come from disk");
+        assert_eq!(out.data, want.data, "{spec:?}: restarted f32 result diverged");
+    }
+    assert_eq!(b.store_stats().unwrap().disk_hits, 2);
+    assert_eq!(b.faults().injected(), 0, "tripwire fired: a structure was rebuilt");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// PR 8 acceptance (codec hardening): a seeded byte-flip/truncate fuzz
+/// loop over encoded artifacts of **every** `StructureArtifact` family
+/// must never panic in `decode_payload` — every malformed buffer is a
+/// typed `CodecError` (or decodes cleanly when the flip only touched
+/// payload data bits) — and a doctored spill file of a quantized
+/// artifact degrades to a counted soft miss in the store ladder.
+#[test]
+fn codec_fuzz_never_panics_across_all_artifact_families() {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let scene = mesh_scene();
+    let family_specs = [
+        IntegratorSpec::Sf(SfConfig { threshold: 16, ..Default::default() }),
+        IntegratorSpec::BfSp(KernelFn::ExpNeg(2.0)),
+        IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() }),
+        IntegratorSpec::Trees { kind: TreeKind::Bartal, count: 2, lambda: 2.0, seed: 1 },
+        IntegratorSpec::BfDiffusion { epsilon: 0.2, lambda: -0.2 },
+        IntegratorSpec::with_precision(Precision::F32, IntegratorSpec::BfSp(KernelFn::ExpNeg(2.0))),
+        IntegratorSpec::with_precision(
+            Precision::F32,
+            IntegratorSpec::Rfd(RfdConfig { num_features: 8, ..Default::default() }),
+        ),
+    ];
+    let mut kinds = Vec::new();
+    let mut rng = Rng::new(2024);
+    for spec in &family_specs {
+        let art = prepare_structure(&scene, spec).unwrap().unwrap();
+        kinds.push(art.kind());
+        let mut w = gfi::util::codec::Writer::new();
+        art.encode_payload(&mut w);
+        let clean = w.into_bytes();
+        // Sanity: the clean buffer decodes.
+        StructureArtifact::decode_payload(&mut gfi::util::codec::Reader::new(&clean))
+            .unwrap_or_else(|e| panic!("{}: clean buffer failed to decode: {e:?}", art.kind()));
+        for _ in 0..120 {
+            let mut bytes = clean.clone();
+            match rng.below(3) {
+                0 => {
+                    let i = rng.below(bytes.len());
+                    bytes[i] ^= 1 << rng.below(8);
+                }
+                1 => bytes.truncate(rng.below(bytes.len() + 1)),
+                _ => {
+                    let i = rng.below(bytes.len());
+                    bytes[i] ^= 1 << rng.below(8);
+                    bytes.truncate(rng.below(bytes.len() + 1));
+                }
+            }
+            let kind = art.kind();
+            let res = catch_unwind(AssertUnwindSafe(|| {
+                StructureArtifact::decode_payload(&mut gfi::util::codec::Reader::new(&bytes))
+                    .map(|a| a.kind())
+            }));
+            // The decode may succeed or fail — but it must never panic.
+            assert!(res.is_ok(), "{kind}: decode_payload panicked on doctored bytes");
+        }
+    }
+    // Every artifact family was covered, including the quantized ones.
+    for want in [
+        "sf_tree",
+        "distances",
+        "rfd_features",
+        "trees",
+        "eps_graph",
+        "distances_f32",
+        "rfd_features_f32",
+    ] {
+        assert!(kinds.contains(&want), "fuzz loop missed family {want}: {kinds:?}");
+    }
+
+    // Store-ladder integration: a flipped byte in a *quantized* spill
+    // file is a counted soft miss and the request recomputes bitwise.
+    let spec = IntegratorSpec::with_precision(
+        Precision::F32,
+        IntegratorSpec::BfSp(KernelFn::ExpNeg(2.0)),
+    );
+    let dir = std::env::temp_dir().join(format!("gfi_f32_doctor_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let want = {
+        let a = EngineConfig::default().artifacts(&dir).store(true).build();
+        let id = a.register_mesh(gfi::mesh::icosphere(1), "s");
+        let n = a.cloud(id).unwrap().scene.len();
+        a.integrate(id, &spec, &rand_field(n, 2, 95)).unwrap().0
+    };
+    let files = store_files(&dir);
+    assert_eq!(files.len(), 1);
+    let mut bytes = std::fs::read(&files[0]).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x10;
+    std::fs::write(&files[0], &bytes).unwrap();
+    let b = EngineConfig::default().artifacts(&dir).store(true).build();
+    let id = b.register_mesh(gfi::mesh::icosphere(1), "s");
+    let n = b.cloud(id).unwrap().scene.len();
+    let (out, info) = b.integrate(id, &spec, &rand_field(n, 2, 95)).unwrap();
+    assert!(!info.structure_shared, "doctored f32 spill must not serve");
+    assert_eq!(b.store_stats().unwrap().invalid_files, 1);
+    assert_eq!(out.data, want.data, "f32 recompute diverged");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// PR 8 acceptance (non-finite distance propagation): on a disconnected
+/// graph, unreachable pairs are `∞` in the f64 distance matrix, stay `∞`
+/// through the f32 quantization, and contribute exactly `0` under every
+/// precision policy — a field supported on one component never leaks
+/// into the other.
+#[test]
+fn disconnected_graphs_contribute_zero_in_every_precision() {
+    use gfi::graph::CsrGraph;
+    use gfi::integrators::artifacts;
+    // Two 4-cliques with no bridge.
+    let n = 8;
+    let mut edges = Vec::new();
+    for base in [0usize, 4] {
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                edges.push((base + i, base + j, 0.5 + 0.1 * (i + j) as f64));
+            }
+        }
+    }
+    let g = CsrGraph::from_edges(n, &edges);
+    let mut rng = Rng::new(96);
+    let pts: Vec<[f64; 3]> =
+        (0..n).map(|_| [rng.uniform(), rng.uniform(), rng.uniform()]).collect();
+    let scene = Scene::new(gfi::pointcloud::PointCloud::new(pts), Some(g.clone()));
+
+    // The quantization preserves ∞ exactly where the f64 matrix has it.
+    let d64 = artifacts::graph_distance_matrix(&g);
+    let d32 = artifacts::distances_to_f32(&d64);
+    for (a, b) in d64.data.iter().zip(&d32.data) {
+        assert_eq!(a.is_finite(), b.is_finite(), "quantization changed reachability");
+        if !a.is_finite() {
+            assert_eq!(*b, f32::INFINITY);
+        }
+    }
+    let k32 = artifacts::sp_kernel_map_f32(&d32, &KernelFn::ExpNeg(1.0));
+    for (d, k) in d32.data.iter().zip(&k32.data) {
+        if *d == f32::INFINITY {
+            assert_eq!(*k, 0.0, "unreachable pair must contribute zero in f32");
+        }
+    }
+
+    // Field = 1 on the first component, 0 on the second: every precision
+    // policy must leave the second component's output at exactly 0.
+    let mut field = Mat::zeros(n, 1);
+    for i in 0..4 {
+        field[(i, 0)] = 1.0;
+    }
+    let base = IntegratorSpec::BfSp(KernelFn::ExpNeg(1.0));
+    for spec in [
+        base.clone(),
+        IntegratorSpec::with_precision(Precision::F32, base.clone()),
+        IntegratorSpec::with_precision(Precision::F32AccF64, base),
+    ] {
+        let integ = prepare(&scene, &spec).unwrap();
+        let out = integ.apply(&field);
+        for i in 4..8 {
+            assert_eq!(
+                out[(i, 0)],
+                0.0,
+                "{spec:?}: disconnected component received mass"
+            );
+        }
+        for i in 0..4 {
+            assert!(out[(i, 0)] > 0.0, "{spec:?}: connected component lost its mass");
+        }
     }
 }

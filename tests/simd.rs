@@ -1,0 +1,260 @@
+//! Differential-oracle suite for the explicit SIMD microkernels
+//! (`rust/src/util/simd.rs` documents the dispatch ladder and the oracle
+//! contract). Every test runs the same computation twice — dispatch
+//! pinned to the scalar oracle, then to the native (AVX2/NEON) path —
+//! and asserts the results are **bitwise identical**: the SIMD kernels
+//! keep multiplies and adds separate (no FMA contraction) and preserve
+//! the scalar association order, so exact equality is the contract, not
+//! just ≤1 ULP. On hardware without the vector extensions both runs
+//! resolve to the scalar kernel and the assertions hold trivially.
+//!
+//! CI additionally runs the *whole* test suite under `GFI_SIMD=off`, so
+//! the scalar oracle itself stays exercised end to end.
+
+use gfi::graph::{distances, CsrGraph};
+use gfi::integrators::artifacts;
+use gfi::integrators::rfd::RfdConfig;
+use gfi::integrators::{prepare, IntegratorSpec, KernelFn, Precision, Scene};
+use gfi::linalg::{gemm_naive, Mat, Trans};
+use gfi::pointcloud::PointCloud;
+use gfi::util::rng::Rng;
+use gfi::util::simd::{set_override, SimdMode};
+use std::sync::Mutex;
+
+/// The dispatch override is process-global (one latch for every kernel),
+/// so tests that pin it must serialize — `cargo test` runs integration
+/// tests on a thread pool.
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Runs `f` once under the pinned scalar oracle and once under native
+/// dispatch, releasing the override afterwards even on panic-free exit.
+/// Returns `(scalar, native)` for the caller to compare.
+fn differential<T>(f: impl Fn() -> T) -> (T, T) {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    set_override(Some(SimdMode::Scalar));
+    let scalar = f();
+    set_override(Some(SimdMode::Native));
+    let native = f();
+    set_override(None);
+    (scalar, native)
+}
+
+fn rand_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_vec(rows, cols, (0..rows * cols).map(|_| rng.gaussian()).collect())
+}
+
+fn bits(m: &Mat) -> Vec<u64> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------------
+// GEMM: the MR×NR microkernel vs its scalar oracle
+// ---------------------------------------------------------------------
+
+/// Adversarial shapes around every boundary in the blocked GEMM: empty
+/// operands, 1×1, the small-flops reference path, exact MR/NR multiples,
+/// MR/NR remainders, multiple row blocks (MC = 64), multiple depth
+/// panels (KC = 256, the tall-k split path) — under assorted α/β
+/// combinations on a dirty (non-zero) C.
+#[test]
+fn gemm_simd_is_bitwise_equal_to_scalar_across_shapes() {
+    // (n, k, m): op(A) is n×k, op(B) is k×m.
+    let shapes = [
+        (0usize, 3usize, 2usize), // empty output rows
+        (3, 0, 2),                // k = 0: pure C ← β·C
+        (1, 1, 1),
+        (5, 7, 3),    // small-flops reference path
+        (40, 40, 40), // exercises the blocked path (64000 flops)
+        (36, 41, 48), // exact MR multiple × NR multiple
+        (37, 41, 13), // MR remainder 1, NR remainder 5
+        (39, 35, 47), // MR remainder 3, NR remainder 7
+        (130, 19, 33), // three MC row blocks
+        (9, 600, 17), // one row block, three KC panels: tall-k split
+    ];
+    let alphas_betas = [(1.0, 0.0), (1.0, 1.0), (0.5, 0.25), (-1.25, 1.0), (0.0, 0.75)];
+    for (si, &(n, k, m)) in shapes.iter().enumerate() {
+        for (ci, &(alpha, beta)) in alphas_betas.iter().enumerate() {
+            for (ta, tb) in [
+                (Trans::No, Trans::No),
+                (Trans::Yes, Trans::No),
+                (Trans::No, Trans::Yes),
+                (Trans::Yes, Trans::Yes),
+            ] {
+                let seed = (si * 100 + ci) as u64;
+                let (ar, ac) = if matches!(ta, Trans::No) { (n, k) } else { (k, n) };
+                let (br, bc) = if matches!(tb, Trans::No) { (k, m) } else { (m, k) };
+                let a = rand_mat(ar, ac, seed);
+                let b = rand_mat(br, bc, seed + 1);
+                let c0 = rand_mat(n, m, seed + 2);
+                let run = || {
+                    let mut c = c0.clone();
+                    c.gemm_assign(alpha, &a, ta, &b, tb, beta);
+                    c
+                };
+                let (scalar, native) = differential(run);
+                assert_eq!(
+                    bits(&scalar),
+                    bits(&native),
+                    "gemm {n}x{k}x{m} ta={ta:?} tb={tb:?} alpha={alpha} beta={beta}"
+                );
+                // And the blocked result matches the naive triple-loop
+                // oracle to high accuracy (association differs, so not
+                // bitwise).
+                let mut naive = c0.clone();
+                gemm_naive(alpha, &a, ta, &b, tb, beta, &mut naive);
+                for (x, y) in scalar.data.iter().zip(naive.data.iter()) {
+                    assert!((x - y).abs() <= 1e-10 * (1.0 + y.abs()));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Kernel-table evaluation (sp_kernel_from_distances / sp_kernel_map)
+// ---------------------------------------------------------------------
+
+/// Every kernel profile over a distance table salted with ∞ (unreachable
+/// pairs) and huge-but-finite entries: the vectorized rows must match the
+/// scalar evaluation bitwise, including the unreachable → 0 convention.
+#[test]
+fn kernel_tables_simd_match_scalar_bitwise() {
+    let n = 67; // NR-odd size: exercises vector body + remainder lanes
+    let mut rng = Rng::new(41);
+    let mut dist = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            dist[(i, j)] = match rng.below(12) {
+                0 => f64::INFINITY,
+                1 => 1e300,
+                _ => rng.uniform_in(0.0, 8.0),
+            };
+        }
+    }
+    let kernels = [
+        KernelFn::ExpNeg(0.7),
+        KernelFn::GaussianSq(0.3),
+        KernelFn::Rational(1.9),
+        KernelFn::DampedSine { a: 1.1, b: 0.4, omega: 3.0, phi: 0.2 },
+        KernelFn::custom("halve", |x| if x.is_finite() { 0.5 * x } else { 0.0 }),
+    ];
+    for f in &kernels {
+        let (s, v) = differential(|| artifacts::sp_kernel_map(&dist, f));
+        assert_eq!(bits(&s), bits(&v), "sp_kernel_map {f:?}");
+        let (s, v) = differential(|| artifacts::sp_kernel_from_distances(dist.clone(), f));
+        assert_eq!(bits(&s), bits(&v), "sp_kernel_from_distances {f:?}");
+        // The f32 table derives from the same scalar evaluations in both
+        // modes (quantization is elementwise), so it must agree too.
+        let d32 = artifacts::distances_to_f32(&dist);
+        let (s, v) = differential(|| artifacts::sp_kernel_map_f32(&d32, f));
+        assert_eq!(
+            s.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            v.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "sp_kernel_map_f32 {f:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dijkstra relaxation (the AVX2 gather prefilter)
+// ---------------------------------------------------------------------
+
+/// Two random components (so unreachable = ∞ flows through the gather
+/// compare) plus high-degree hubs (so edge chunks of ≥ 4 exist): full
+/// distance matrices and nearest-source assignments must be bitwise
+/// identical between dispatch modes.
+#[test]
+fn dijkstra_simd_prefilter_is_bitwise_equal_to_scalar() {
+    for seed in 0..6u64 {
+        let n = 140;
+        let cut = 90; // nodes ≥ cut form a disconnected component
+        let mut rng = Rng::new(1000 + seed);
+        let mut edges = Vec::new();
+        for i in 0..n - 1 {
+            if i + 1 == cut {
+                continue;
+            }
+            edges.push((i, i + 1, rng.uniform_in(0.1, 2.0)));
+        }
+        // Random intra-component chords, including hub fan-out so many
+        // vertices relax ≥ 4 edges per pop.
+        for _ in 0..4 * n {
+            let (lo, hi) = if rng.below(2) == 0 { (0, cut) } else { (cut, n) };
+            let a = lo + rng.below(hi - lo);
+            let b = lo + rng.below(hi - lo);
+            if a != b {
+                edges.push((a, b, rng.uniform_in(0.05, 3.0)));
+            }
+        }
+        let g = CsrGraph::from_edges(n, &edges);
+        let sources: Vec<usize> = vec![0, 3, 17 % cut];
+        let (s, v) = differential(|| distances::distance_matrix(&g, &sources));
+        assert_eq!(bits(&s), bits(&v), "distance_matrix seed={seed}");
+        // Unreachable pairs must be ∞ in both (sources are all < cut).
+        assert!(s.data.iter().any(|d| *d == f64::INFINITY));
+        let (sa, va) = differential(|| distances::nearest_sources(&g, &sources));
+        assert_eq!(
+            sa.0.iter().map(|d| d.to_bits()).collect::<Vec<_>>(),
+            va.0.iter().map(|d| d.to_bits()).collect::<Vec<_>>(),
+            "nearest_sources dist seed={seed}"
+        );
+        assert_eq!(sa.1, va.1, "nearest_sources assignment seed={seed}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// End-to-end integrators (fill_features + GEMM + apply hot paths)
+// ---------------------------------------------------------------------
+
+fn cloud_scene(n: usize, seed: u64) -> Scene {
+    let mut rng = Rng::new(seed);
+    let pts: Vec<[f64; 3]> =
+        (0..n).map(|_| [rng.uniform(), rng.uniform(), rng.uniform()]).collect();
+    Scene::from_points(PointCloud::new(pts))
+}
+
+/// RFD prepare + apply — the random-feature fill (gathered phase dot
+/// products), the Gram/Woodbury GEMMs, and the three-stage apply — must
+/// be bitwise reproducible across dispatch modes, in every precision
+/// policy.
+#[test]
+fn rfd_pipeline_is_bitwise_equal_across_dispatch_modes() {
+    let scene = cloud_scene(90, 5);
+    let field = rand_mat(90, 3, 6);
+    let base = IntegratorSpec::Rfd(RfdConfig { num_features: 12, ..Default::default() });
+    for spec in [
+        base.clone(),
+        IntegratorSpec::with_precision(Precision::F32, base.clone()),
+        IntegratorSpec::with_precision(Precision::F32AccF64, base),
+    ] {
+        let (s, v) = differential(|| {
+            let integ = prepare(&scene, &spec).expect("prepare");
+            integ.apply(&field)
+        });
+        assert_eq!(bits(&s), bits(&v), "{spec:?}");
+    }
+}
+
+/// BF-sp (dense kernel table from batched Dijkstra) end-to-end, f64 and
+/// both f32 policies.
+#[test]
+fn bf_sp_pipeline_is_bitwise_equal_across_dispatch_modes() {
+    let mut mesh = gfi::mesh::icosphere(1);
+    mesh.normalize_unit_box();
+    let scene = Scene::from_mesh(&mesh);
+    let n = scene.len();
+    let field = rand_mat(n, 2, 9);
+    let base = IntegratorSpec::BfSp(KernelFn::ExpNeg(1.3));
+    for spec in [
+        base.clone(),
+        IntegratorSpec::with_precision(Precision::F32, base.clone()),
+        IntegratorSpec::with_precision(Precision::F32AccF64, base),
+    ] {
+        let (s, v) = differential(|| {
+            let integ = prepare(&scene, &spec).expect("prepare");
+            integ.apply(&field)
+        });
+        assert_eq!(bits(&s), bits(&v), "{spec:?}");
+    }
+}
