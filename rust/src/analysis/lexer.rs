@@ -1,0 +1,500 @@
+//! Token-level Rust lexer for the in-tree invariant analyzer.
+//!
+//! Deliberately *not* a parser: the analyzer's rules work on token
+//! sequences, comment placement, and raw lines, which is enough to
+//! check every invariant in [`crate::analysis`] without pulling in
+//! `syn` or rustc internals (the build is offline and dependency-free).
+//! What the lexer does get right — because the rules are wrong
+//! otherwise — is the hard tokenization cases:
+//!
+//! * line (`//`, `///`, `//!`) and block (`/* .. */`, nested) comments
+//!   are captured out-of-band as per-line [`Comment`] records, never as
+//!   tokens, so `mul_add` in a doc comment can't trip `oracle-purity`;
+//! * string literals (`"…"`, `b"…"`, raw `r#"…"#` with any hash count)
+//!   become single [`TokKind::Str`] tokens holding the *inner* text, so
+//!   `".lock().unwrap()"` inside a fixture string can't trip
+//!   `lock-discipline`;
+//! * `'a` lifetimes vs `'x'` / `'\n'` / `b'\''` char literals are
+//!   disambiguated, so `&'static str` never reads as a `static` item.
+//!
+//! Everything else is intentionally coarse: punctuation is emitted one
+//! character at a time (`=>` is `=`, `>`), and numbers are a single
+//! greedy token. Rules that need multi-character operators match
+//! adjacent tokens.
+
+/// Token classification — only as fine as the rules need.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`unsafe`, `static`, `match`, `foo`).
+    Ident,
+    /// Single punctuation character (`.`, `{`, `=`, …).
+    Punct,
+    /// String literal (regular, byte, or raw); `text` is the inner
+    /// content without quotes, hashes, or prefix.
+    Str,
+    /// Char or byte-char literal; `text` is the raw body.
+    Char,
+    /// Numeric literal (integer or float, any base/suffix).
+    Num,
+    /// Lifetime (`'a`, `'static`); `text` includes the leading `'`.
+    Lifetime,
+}
+
+/// One lexed token with its 1-based starting line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    /// Classification.
+    pub kind: TokKind,
+    /// Token text (see [`TokKind`] for what each kind stores).
+    pub text: String,
+    /// 1-based line the token starts on.
+    pub line: u32,
+}
+
+/// One comment *line* (block comments are split per line so rules can
+/// ask "is there a comment mentioning X on line N").
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// 1-based line this comment text sits on.
+    pub line: u32,
+    /// Raw text of the comment on this line, including markers
+    /// (`//`, `/*`) where present.
+    pub text: String,
+}
+
+/// A lexed source file: tokens, out-of-band comments, and raw lines.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path relative to the repo root, with `/` separators
+    /// (e.g. `rust/src/util/simd.rs`).
+    pub rel_path: String,
+    /// Token stream (comments and whitespace removed).
+    pub toks: Vec<Tok>,
+    /// Per-line comment records, in file order.
+    pub comments: Vec<Comment>,
+    /// Raw source lines (for line-shape checks such as "is this line
+    /// only a comment or attribute").
+    pub lines: Vec<String>,
+}
+
+impl SourceFile {
+    /// All comment records with `line` in `lo..=hi` (1-based, inclusive).
+    pub fn comments_in(&self, lo: u32, hi: u32) -> impl Iterator<Item = &Comment> {
+        self.comments.iter().filter(move |c| c.line >= lo && c.line <= hi)
+    }
+}
+
+/// Lexes `src` into a [`SourceFile`]. Infallible by design: malformed
+/// input (e.g. an unterminated string) consumes to end-of-file rather
+/// than erroring — the compiler, not the analyzer, owns syntax errors.
+pub fn lex(rel_path: &str, src: &str) -> SourceFile {
+    let b: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let n = b.len();
+    let at = |i: usize| if i < n { b[i] } else { '\0' };
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (//, ///, //!).
+        if c == '/' && at(i + 1) == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            comments.push(Comment { line, text: b[start..i].iter().collect() });
+            continue;
+        }
+        // Block comment (/* */), nested per Rust rules; one Comment
+        // record per spanned line.
+        if c == '/' && at(i + 1) == '*' {
+            let mut depth = 1usize;
+            let mut seg_start = i;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && at(i + 1) == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && at(i + 1) == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else if b[i] == '\n' {
+                    comments.push(Comment { line, text: b[seg_start..i].iter().collect() });
+                    line += 1;
+                    i += 1;
+                    seg_start = i;
+                } else {
+                    i += 1;
+                }
+            }
+            comments.push(Comment { line, text: b[seg_start..i].iter().collect() });
+            continue;
+        }
+        // Raw strings / byte strings / raw identifiers: r"..", r#".."#,
+        // b"..", br#".."#, b'x', r#ident.
+        if c == 'r' || c == 'b' {
+            let mut j = i + 1;
+            let byte = c == 'b';
+            if byte && at(j) == 'r' {
+                j += 1;
+            }
+            let raw = at(i) == 'r' || (byte && at(i + 1) == 'r');
+            if raw {
+                let mut hashes = 0usize;
+                while at(j) == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if at(j) == '"' {
+                    let (tok, ni, nl) = lex_raw_string(&b, j + 1, hashes, line);
+                    toks.push(Tok { kind: TokKind::Str, text: tok, line });
+                    line = nl;
+                    i = ni;
+                    continue;
+                }
+                if !byte && hashes == 1 && is_ident_start(at(j)) {
+                    // Raw identifier r#foo — lex as a plain ident.
+                    let start = j;
+                    let mut k = j;
+                    while is_ident_char(at(k)) {
+                        k += 1;
+                    }
+                    toks.push(Tok {
+                        kind: TokKind::Ident,
+                        text: b[start..k].iter().collect(),
+                        line,
+                    });
+                    i = k;
+                    continue;
+                }
+                // `r` / `b` followed by neither a quote nor a raw
+                // ident: fall through to plain ident lexing below.
+            } else if byte && at(j) == '"' {
+                let (tok, ni, nl) = lex_string(&b, j + 1, line);
+                toks.push(Tok { kind: TokKind::Str, text: tok, line });
+                line = nl;
+                i = ni;
+                continue;
+            } else if byte && at(j) == '\'' {
+                let (tok, ni) = lex_char(&b, j + 1);
+                toks.push(Tok { kind: TokKind::Char, text: tok, line });
+                i = ni;
+                continue;
+            }
+        }
+        if c == '"' {
+            let (tok, ni, nl) = lex_string(&b, i + 1, line);
+            toks.push(Tok { kind: TokKind::Str, text: tok, line });
+            line = nl;
+            i = ni;
+            continue;
+        }
+        // `'` opens either a lifetime or a char literal. A char literal
+        // is `'<escape>'` or `'<one char>'`; anything else (`'a`,
+        // `'static`) is a lifetime.
+        if c == '\'' {
+            if at(i + 1) == '\\' {
+                let (tok, ni) = lex_char(&b, i + 1);
+                toks.push(Tok { kind: TokKind::Char, text: tok, line });
+                i = ni;
+                continue;
+            }
+            if at(i + 2) == '\'' && at(i + 1) != '\'' && at(i + 1) != '\0' {
+                toks.push(Tok { kind: TokKind::Char, text: at(i + 1).to_string(), line });
+                i += 3;
+                continue;
+            }
+            let start = i;
+            i += 1;
+            while is_ident_char(at(i)) {
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Lifetime,
+                text: b[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        if is_ident_start(c) {
+            let start = i;
+            while is_ident_char(at(i)) {
+                i += 1;
+            }
+            toks.push(Tok { kind: TokKind::Ident, text: b[start..i].iter().collect(), line });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            loop {
+                let d = at(i);
+                if is_ident_char(d) {
+                    // Digits, hex digits, suffixes (u64, f32), `_`, `e`.
+                    i += 1;
+                } else if d == '.' && at(i + 1).is_ascii_digit() {
+                    // Decimal point only when followed by a digit, so
+                    // `0..n` stays three tokens.
+                    i += 1;
+                } else if (d == '+' || d == '-')
+                    && matches!(at(i - 1), 'e' | 'E')
+                    && at(i + 1).is_ascii_digit()
+                {
+                    // Exponent sign (`1.5e-3`).
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok { kind: TokKind::Num, text: b[start..i].iter().collect(), line });
+            continue;
+        }
+        // Everything else: single-character punctuation.
+        toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+
+    SourceFile {
+        rel_path: rel_path.to_string(),
+        toks,
+        comments,
+        lines: src.lines().map(str::to_string).collect(),
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c == '_' || c.is_ascii_alphabetic()
+}
+
+fn is_ident_char(c: char) -> bool {
+    c == '_' || c.is_ascii_alphanumeric()
+}
+
+/// Lexes a regular (escaped) string body starting just past the opening
+/// quote; returns (inner text, next index, next line).
+fn lex_string(b: &[char], mut i: usize, mut line: u32) -> (String, usize, u32) {
+    let n = b.len();
+    let start = i;
+    while i < n {
+        match b[i] {
+            '\\' => i = (i + 2).min(n),
+            '"' => {
+                let text = b[start..i].iter().collect();
+                return (text, i + 1, line);
+            }
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    (b[start..n].iter().collect(), n, line)
+}
+
+/// Lexes a raw string body starting just past the opening quote;
+/// terminates on `"` followed by `hashes` `#` characters.
+fn lex_raw_string(b: &[char], mut i: usize, hashes: usize, mut line: u32) -> (String, usize, u32) {
+    let n = b.len();
+    let start = i;
+    while i < n {
+        if b[i] == '"' {
+            let mut k = 0usize;
+            while k < hashes && i + 1 + k < n && b[i + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                let text = b[start..i].iter().collect();
+                return (text, i + 1 + hashes, line);
+            }
+        }
+        if b[i] == '\n' {
+            line += 1;
+        }
+        i += 1;
+    }
+    (b[start..n].iter().collect(), n, line)
+}
+
+/// Lexes an (escaped) char-literal body starting just past the opening
+/// quote; returns (body text, next index). Escapes never contain a
+/// bare `'` except as the escaped character itself, so: consume one
+/// escape head unconditionally, then scan to the closing quote.
+fn lex_char(b: &[char], mut i: usize) -> (String, usize) {
+    let n = b.len();
+    let start = i;
+    if i < n && b[i] == '\\' {
+        i = (i + 2).min(n); // backslash + escaped head (may be `'`)
+    }
+    while i < n && b[i] != '\'' {
+        i += 1;
+    }
+    (b[start..i].iter().collect(), (i + 1).min(n))
+}
+
+// ---------------------------------------------------------------------------
+// Token-stream utilities shared by the rules. All are kind-aware: a
+// string literal whose text happens to be `match` or `{` never
+// participates in structural matching.
+// ---------------------------------------------------------------------------
+
+fn is_code_tok(t: &Tok) -> bool {
+    matches!(t.kind, TokKind::Ident | TokKind::Punct | TokKind::Num)
+}
+
+/// First index `i >= from` where `pat` matches `toks[i..]` token-for-token
+/// (by text, on code tokens only — never inside string/char literals).
+pub(crate) fn find_seq(toks: &[Tok], from: usize, pat: &[&str]) -> Option<usize> {
+    if pat.is_empty() || toks.len() < pat.len() {
+        return None;
+    }
+    (from..=toks.len() - pat.len()).find(|&i| {
+        pat.iter()
+            .enumerate()
+            .all(|(j, p)| is_code_tok(&toks[i + j]) && toks[i + j].text == *p)
+    })
+}
+
+/// Index of the `}` matching the `{` at `open` (which must be a Punct `{`).
+pub(crate) fn matching_brace(toks: &[Tok], open: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    for (i, t) in toks.iter().enumerate().skip(open) {
+        if t.kind != TokKind::Punct {
+            continue;
+        }
+        match t.text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth = depth.checked_sub(1)?;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Body tokens of the first `fn <name>` in `toks` (between its braces,
+/// exclusive). Signatures in this codebase never contain `{`, so the
+/// first `{` after the name opens the body.
+pub(crate) fn fn_body<'a>(toks: &'a [Tok], name: &str) -> Option<&'a [Tok]> {
+    let at = find_seq(toks, 0, &["fn", name])?;
+    let open = (at + 2..toks.len())
+        .find(|&i| toks[i].kind == TokKind::Punct && toks[i].text == "{")?;
+    let close = matching_brace(toks, open)?;
+    Some(&toks[open + 1..close])
+}
+
+/// Field names (with lines) of the first `struct <name> { ... }` in
+/// `toks`. A field is an ident directly followed by a single `:` whose
+/// preceding token is one of `{ , ] ) pub` — which excludes idents in
+/// type position (`T::Item`) and generic bounds.
+pub(crate) fn struct_fields(toks: &[Tok], name: &str) -> Option<Vec<(String, u32)>> {
+    let at = find_seq(toks, 0, &["struct", name])?;
+    let open = (at + 2..toks.len())
+        .find(|&i| toks[i].kind == TokKind::Punct && toks[i].text == "{")?;
+    let close = matching_brace(toks, open)?;
+    let body = &toks[open + 1..close];
+    let mut depth = 0usize;
+    let mut out = Vec::new();
+    for i in 0..body.len() {
+        let t = &body[i];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" => depth += 1,
+                "}" => depth = depth.saturating_sub(1),
+                _ => {}
+            }
+            continue;
+        }
+        if depth > 0 || t.kind != TokKind::Ident {
+            continue;
+        }
+        let colon = matches!(body.get(i + 1), Some(n) if n.kind == TokKind::Punct && n.text == ":");
+        let double = matches!(body.get(i + 2), Some(n) if n.kind == TokKind::Punct && n.text == ":");
+        let prev_ok = if i == 0 {
+            true
+        } else {
+            let p = &body[i - 1];
+            (p.kind == TokKind::Punct && matches!(p.text.as_str(), "," | "]" | ")"))
+                || (p.kind == TokKind::Ident && p.text == "pub")
+        };
+        if colon && !double && prev_ok {
+            out.push((t.text.clone(), t.line));
+        }
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(f: &SourceFile) -> Vec<&str> {
+        f.toks.iter().map(|t| t.text.as_str()).collect()
+    }
+
+    #[test]
+    fn comments_are_out_of_band() {
+        let f = lex("t.rs", "// mul_add here\nlet x = 1; /* unsafe\n still unsafe */ y");
+        assert!(f.toks.iter().all(|t| t.text != "mul_add" && t.text != "unsafe"));
+        assert_eq!(f.comments.len(), 3, "line comment + 2 block-comment lines");
+        assert_eq!(f.comments[1].line, 2);
+        assert_eq!(f.toks.last().unwrap().line, 3, "line count survives block comments");
+    }
+
+    #[test]
+    fn strings_swallow_their_contents() {
+        let f = lex("t.rs", r##"let s = "a.lock().unwrap()"; let r = r#"un"safe"#;"##);
+        let strs: Vec<_> =
+            f.toks.iter().filter(|t| t.kind == TokKind::Str).map(|t| t.text.as_str()).collect();
+        assert_eq!(strs, vec!["a.lock().unwrap()", "un\"safe"]);
+        assert!(!texts(&f).contains(&"unwrap"));
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let f = lex("t.rs", "fn f<'a>(x: &'static str) { let c = '\"'; let d = '\\''; }");
+        let kinds: Vec<_> = f
+            .toks
+            .iter()
+            .filter(|t| matches!(t.kind, TokKind::Lifetime | TokKind::Char))
+            .map(|t| (t.kind, t.text.clone()))
+            .collect();
+        assert_eq!(kinds[0], (TokKind::Lifetime, "'a".into()));
+        assert_eq!(kinds[1], (TokKind::Lifetime, "'static".into()));
+        assert_eq!(kinds[2], (TokKind::Char, "\"".into()));
+        assert_eq!(kinds[3], (TokKind::Char, "\\'".into()));
+        // No bare `static` ident: `&'static` must not look like a static item.
+        assert!(!texts(&f).contains(&"static"));
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges() {
+        let f = lex("t.rs", "for i in 0..n { x += 1.5e-3; y = 0xFFu64; }");
+        let t = texts(&f);
+        assert!(t.contains(&"0") && t.contains(&"1.5e-3") && t.contains(&"0xFFu64"));
+        assert_eq!(t.iter().filter(|s| **s == ".").count(), 2, "range dots survive");
+    }
+
+    #[test]
+    fn byte_and_raw_prefixes() {
+        let f = lex("t.rs", r#"let a = b"bytes"; let c = b'x'; let k = r#try;"#);
+        assert!(f.toks.iter().any(|t| t.kind == TokKind::Str && t.text == "bytes"));
+        assert!(f.toks.iter().any(|t| t.kind == TokKind::Char && t.text == "x"));
+        assert!(f.toks.iter().any(|t| t.kind == TokKind::Ident && t.text == "try"));
+    }
+}

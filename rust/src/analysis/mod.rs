@@ -1,0 +1,172 @@
+//! `gfi-analyze` — the in-tree invariant analyzer.
+//!
+//! Eight PRs of this repo were authored in containers with no Rust
+//! toolchain; its correctness story leans on invariants no compiler
+//! checks: the bitwise scalar-oracle SIMD contract (no FMA), cache-key
+//! completeness over every hyper-parameter, poison-recovering lock
+//! discipline, SAFETY documentation on every `unsafe`, and wire
+//! protocol / fault-site / counter names kept in sync with
+//! `docs/PROTOCOL.md`. This module enforces all of them mechanically:
+//! a dependency-free, token-level analyzer (hand-rolled lexer in
+//! [`lexer`]; no `syn`, no rustc internals) with a rule engine, a
+//! `file:line [rule-id] message` findings report, and narrow inline
+//! suppressions.
+//!
+//! Three entry points, one engine:
+//!
+//! * **CLI** — `repro analyze` or the `gfi-analyze` bin (blocking CI
+//!   step). Exit 0 clean, 1 findings, 2 scan/suppression errors.
+//! * **Tier-1 test** — `tests/analysis.rs` self-scans the repo and
+//!   asserts zero findings, so `cargo test` is the enforcement point.
+//! * **Fixture tests** — each rule has firing + clean fixtures beside
+//!   its implementation.
+//!
+//! Suppressing a finding takes an adjacent comment with a mandatory
+//! reason (see [`rules`]): write `allow(<rule-id>) <reason>` after a
+//! leading `gfi-analyze:` directive marker on the line above the
+//! finding. Unknown rule ids in a directive fail the whole run.
+//!
+//! # Adding a rule
+//!
+//! 1. Write `pub(crate) fn check_<name>(&RepoContext, &mut Vec<Finding>)`
+//!    in the fitting `rules_*.rs` file (pure function of the lexed
+//!    tree; anchor-missing must be a finding, not a silent pass).
+//! 2. Register it in [`rules::registry`] with a stable kebab-case id.
+//! 3. Add a firing fixture test and a clean fixture test.
+//! 4. Document it in the rule table in `docs/ARCHITECTURE.md`
+//!    ("Static analysis") and drive the tree to zero findings.
+
+mod lexer;
+mod rules;
+mod rules_code;
+mod rules_spec;
+mod rules_sync;
+
+pub use rules::{registry, run, Finding, RepoContext, Report, Rule};
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Directories scanned relative to the repo root. `rust/src` is the
+/// library; tests/benches/examples are included so lock discipline and
+/// SAFETY coverage hold everywhere code runs in CI.
+const SCAN_ROOTS: [&str; 4] = ["rust/src", "tests", "benches", "examples"];
+
+/// Reads and lexes every `.rs` file under the [`SCAN_ROOTS`] of `root`,
+/// plus `docs/PROTOCOL.md`, into a [`RepoContext`].
+///
+/// Deterministic: files are sorted by relative path. Errors only on
+/// unreadable files or an empty scan (a wrong `--root` should fail
+/// loudly, not report a clean empty tree).
+pub fn scan_repo(root: &Path) -> Result<RepoContext, String> {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for top in SCAN_ROOTS {
+        let dir = root.join(top);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut paths)?;
+        }
+    }
+    if paths.is_empty() {
+        return Err(format!(
+            "no .rs files under {} (expected a repo root containing {})",
+            root.display(),
+            SCAN_ROOTS.join(", ")
+        ));
+    }
+    let mut files = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let src = fs::read_to_string(p).map_err(|e| format!("read {}: {e}", p.display()))?;
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        files.push(lexer::lex(&rel, &src));
+    }
+    files.sort_by(|a, b| a.rel_path.cmp(&b.rel_path));
+    let protocol_md = fs::read_to_string(root.join("docs/PROTOCOL.md")).unwrap_or_default();
+    Ok(RepoContext { files, protocol_md })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = rd
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// CLI entry shared by `repro analyze` and the `gfi-analyze` bin.
+///
+/// ```text
+/// gfi-analyze [--root DIR] [--list-rules]
+/// ```
+///
+/// Prints one `file:line [rule-id] message` line per finding. Exit
+/// codes: 0 clean, 1 findings, 2 scan or suppression-syntax error.
+pub fn cli_main(args: &[String]) -> i32 {
+    let mut root = String::from(".");
+    let mut list = false;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => match it.next() {
+                Some(d) => root = d.clone(),
+                None => {
+                    eprintln!("gfi-analyze: --root needs a directory");
+                    return 2;
+                }
+            },
+            "--list-rules" => list = true,
+            other => {
+                eprintln!(
+                    "gfi-analyze: unknown argument '{other}' \
+                     (usage: gfi-analyze [--root DIR] [--list-rules])"
+                );
+                return 2;
+            }
+        }
+    }
+    if list {
+        for r in registry() {
+            println!("{:<24} {}", r.id, r.summary);
+        }
+        return 0;
+    }
+    let ctx = match scan_repo(Path::new(&root)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("gfi-analyze: {e}");
+            return 2;
+        }
+    };
+    let report = match run(&ctx) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("gfi-analyze: {e}");
+            return 2;
+        }
+    };
+    for f in &report.findings {
+        println!("{f}");
+    }
+    println!(
+        "gfi-analyze: {} files, {} rules, {} finding{}, {} suppressed",
+        report.files_scanned,
+        report.rules_run,
+        report.findings.len(),
+        if report.findings.len() == 1 { "" } else { "s" },
+        report.suppressed.len()
+    );
+    i32::from(!report.findings.is_empty())
+}

@@ -1,0 +1,316 @@
+//! Rule engine for the in-tree invariant analyzer: the rule registry,
+//! the repo-wide scan context, findings, and inline suppressions.
+//!
+//! A rule is a pure function over the lexed repository: it receives a
+//! [`RepoContext`] (every lexed `.rs` file plus `docs/PROTOCOL.md` as
+//! text) and pushes [`Finding`]s. Rules never do IO and never mutate,
+//! so the whole run is deterministic and fixture-testable from inline
+//! sources.
+//!
+//! Suppression is deliberately narrow. A comment of the form
+//! `gfi-analyze: allow(<rule-id>) <reason>` (after the usual `//`)
+//! suppresses findings of exactly that rule on the comment's own line
+//! and the line directly below it — nothing wider, no file-level or
+//! block-level escape hatch. The reason is mandatory and an unknown
+//! rule id is a hard error (the run fails before any rule executes),
+//! so a typo can't silently disable a check.
+
+use super::lexer::SourceFile;
+use super::{rules_code, rules_spec, rules_sync};
+
+/// One analyzer finding.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Repo-relative path of the offending file (`/` separators).
+    pub file: String,
+    /// 1-based line the finding anchors to.
+    pub line: u32,
+    /// Rule id (one of [`registry`]'s ids).
+    pub rule: &'static str,
+    /// Human-readable description of the violation and the expected fix.
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{} [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Everything a rule may look at: the lexed tree and the protocol doc.
+pub struct RepoContext {
+    /// All lexed `.rs` files (rust/src recursively, plus tests/,
+    /// benches/, examples/), sorted by `rel_path`.
+    pub files: Vec<SourceFile>,
+    /// Raw text of `docs/PROTOCOL.md` (empty string if absent — the
+    /// sync rules then report the anchor as missing).
+    pub protocol_md: String,
+}
+
+impl RepoContext {
+    /// The unique scanned file whose path ends with `suffix`, if any.
+    pub fn file_ending(&self, suffix: &str) -> Option<&SourceFile> {
+        self.files.iter().find(|f| f.rel_path.ends_with(suffix))
+    }
+}
+
+/// A registered rule: stable id, one-line summary, check function.
+pub struct Rule {
+    /// Stable kebab-case id — used in reports and `allow(...)` comments.
+    pub id: &'static str,
+    /// One-line summary for `--list-rules` and the docs table.
+    pub summary: &'static str,
+    /// The check itself.
+    pub check: fn(&RepoContext, &mut Vec<Finding>),
+}
+
+/// The full rule registry, in report order.
+pub fn registry() -> Vec<Rule> {
+    vec![
+        Rule {
+            id: "unsafe-safety",
+            summary: "every `unsafe` block/fn/impl carries an adjacent SAFETY comment",
+            check: rules_code::check_unsafe_safety,
+        },
+        Rule {
+            id: "lock-discipline",
+            summary: ".lock().unwrap()/.expect() forbidden; recover with into_inner()",
+            check: rules_code::check_lock_discipline,
+        },
+        Rule {
+            id: "oracle-purity",
+            summary: "no FMA tokens (mul_add/fmadd/vfma*) in scalar-oracle modules",
+            check: rules_code::check_oracle_purity,
+        },
+        Rule {
+            id: "global-state",
+            summary: "interior-mutable statics only in the util/simd.rs dispatch latch",
+            check: rules_code::check_global_state,
+        },
+        Rule {
+            id: "cache-key-completeness",
+            summary: "every IntegratorSpec hyper-parameter is referenced in cache_key()",
+            check: rules_spec::check_cache_key_completeness,
+        },
+        Rule {
+            id: "protocol-sync",
+            summary: "server op match arms == docs/PROTOCOL.md op headings, both ways",
+            check: rules_sync::check_protocol_sync,
+        },
+        Rule {
+            id: "fault-site-sync",
+            summary: "fault site names: injection sites == faults.rs parse list == docs",
+            check: rules_sync::check_fault_site_sync,
+        },
+        Rule {
+            id: "counter-sync",
+            summary: "StoreStats/RobustnessStats fields appear in JSON emitters and docs",
+            check: rules_sync::check_counter_sync,
+        },
+    ]
+}
+
+/// A parsed `gfi-analyze: allow(rule) reason` comment.
+#[derive(Debug)]
+struct Suppression {
+    file: String,
+    line: u32,
+    rule: String,
+    #[allow(dead_code)] // the reason is *required*, not yet displayed
+    reason: String,
+}
+
+/// Analyzer output: surviving findings, suppressed findings, and scan
+/// counts for the summary line.
+#[derive(Debug)]
+pub struct Report {
+    /// Findings not covered by a suppression, sorted (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Findings that were matched by an `allow(...)` comment.
+    pub suppressed: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// Number of rules executed.
+    pub rules_run: usize,
+}
+
+/// Runs every registered rule over `ctx`.
+///
+/// Returns `Err` — before any rule executes — if a suppression comment
+/// is malformed: unknown rule id, or missing reason. Those are hard
+/// errors so they can't rot silently.
+pub fn run(ctx: &RepoContext) -> Result<Report, String> {
+    let rules = registry();
+    let suppressions = collect_suppressions(ctx, &rules)?;
+
+    let mut all = Vec::new();
+    for r in &rules {
+        (r.check)(ctx, &mut all);
+    }
+    all.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+
+    let (mut findings, mut suppressed) = (Vec::new(), Vec::new());
+    for f in all {
+        let hit = suppressions.iter().any(|s| {
+            s.file == f.file && s.rule == f.rule && (s.line == f.line || s.line + 1 == f.line)
+        });
+        if hit {
+            suppressed.push(f);
+        } else {
+            findings.push(f);
+        }
+    }
+    Ok(Report { findings, suppressed, files_scanned: ctx.files.len(), rules_run: rules.len() })
+}
+
+/// Extracts and validates every suppression comment in the tree.
+fn collect_suppressions(ctx: &RepoContext, rules: &[Rule]) -> Result<Vec<Suppression>, String> {
+    let mut out = Vec::new();
+    for f in &ctx.files {
+        for c in &f.comments {
+            // Strip exactly one comment marker, then require the
+            // directive at the start — prose that merely *mentions*
+            // the syntax mid-sentence is not a directive.
+            let body = strip_comment_marker(&c.text);
+            let Some(rest) = body.strip_prefix("gfi-analyze:") else { continue };
+            let rest = rest.trim_start();
+            let err = |what: &str| {
+                Err(format!(
+                    "{}:{}: malformed suppression ({what}); expected \
+                     `gfi-analyze: allow(<rule-id>) <reason>`",
+                    f.rel_path, c.line
+                ))
+            };
+            let Some(rest) = rest.strip_prefix("allow(") else {
+                return err("missing `allow(`");
+            };
+            let Some(close) = rest.find(')') else {
+                return err("unclosed `allow(`");
+            };
+            let rule = rest[..close].trim().to_string();
+            if !rules.iter().any(|r| r.id == rule) {
+                return Err(format!(
+                    "{}:{}: unknown rule '{rule}' in suppression (known: {})",
+                    f.rel_path,
+                    c.line,
+                    rules.iter().map(|r| r.id).collect::<Vec<_>>().join(", ")
+                ));
+            }
+            let reason = rest[close + 1..].trim().trim_end_matches("*/").trim();
+            if reason.is_empty() {
+                return err("missing reason after allow(...)");
+            }
+            out.push(Suppression {
+                file: f.rel_path.clone(),
+                line: c.line,
+                rule,
+                reason: reason.to_string(),
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Removes one leading comment marker (`//!`, `///`, `//`, `/*!`,
+/// `/**`, `/*`) and surrounding whitespace. Exactly one, so a doc
+/// comment quoting a suppression (`//! // gfi-analyze: ...`) does not
+/// itself become one.
+fn strip_comment_marker(text: &str) -> &str {
+    let t = text.trim_start();
+    for m in ["//!", "///", "//", "/*!", "/**", "/*"] {
+        if let Some(rest) = t.strip_prefix(m) {
+            // `///` must not match the `//` arm first — the list is
+            // ordered longest-first, so the first hit is the marker.
+            return rest.trim_start();
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! Shared fixture helpers for per-rule tests.
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    /// Builds a context from inline `(rel_path, source)` pairs.
+    pub fn ctx(files: &[(&str, &str)]) -> RepoContext {
+        ctx_with_protocol(files, "")
+    }
+
+    /// Same, with a `docs/PROTOCOL.md` body for the sync rules.
+    pub fn ctx_with_protocol(files: &[(&str, &str)], protocol: &str) -> RepoContext {
+        RepoContext {
+            files: files.iter().map(|(p, s)| lex(p, s)).collect(),
+            protocol_md: protocol.to_string(),
+        }
+    }
+
+    /// Runs one rule by id and returns its findings.
+    pub fn run_rule(id: &str, ctx: &RepoContext) -> Vec<Finding> {
+        let rule = registry().into_iter().find(|r| r.id == id).expect("known rule id");
+        let mut out = Vec::new();
+        (rule.check)(ctx, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::ctx;
+    use super::*;
+
+    #[test]
+    fn suppression_covers_same_and_next_line() {
+        let src = "fn f(m: &std::sync::Mutex<u32>) {\n\
+                   // gfi-analyze: allow(lock-discipline) fixture: exercising suppression\n\
+                   let _ = m.lock().unwrap();\n\
+                   let _ = m.lock().unwrap();\n\
+                   }\n";
+        let c = ctx(&[("rust/src/x.rs", src)]);
+        let rep = run(&c).expect("well-formed suppression");
+        assert_eq!(rep.suppressed.len(), 1, "line below the comment is covered");
+        assert_eq!(rep.findings.len(), 1, "two lines below is not");
+        assert_eq!(rep.findings[0].line, 4);
+    }
+
+    #[test]
+    fn unknown_rule_in_suppression_is_a_hard_error() {
+        let c = ctx(&[("rust/src/x.rs", "// gfi-analyze: allow(no-such-rule) because\n")]);
+        let e = run(&c).expect_err("unknown rule must fail the run");
+        assert!(e.contains("unknown rule 'no-such-rule'"), "got: {e}");
+    }
+
+    #[test]
+    fn reasonless_suppression_is_a_hard_error() {
+        let c = ctx(&[("rust/src/x.rs", "// gfi-analyze: allow(lock-discipline)\n")]);
+        let e = run(&c).expect_err("missing reason must fail the run");
+        assert!(e.contains("missing reason"), "got: {e}");
+    }
+
+    #[test]
+    fn quoting_the_syntax_in_docs_is_not_a_directive() {
+        let src = "//! Suppress with `gfi-analyze: allow(lock-discipline) why`.\n\
+                   //! // gfi-analyze: allow(lock-discipline) quoted example\n";
+        let c = ctx(&[("rust/src/x.rs", src)]);
+        let rep = run(&c).expect("neither line is a directive");
+        assert!(rep.findings.is_empty() && rep.suppressed.is_empty());
+    }
+
+    #[test]
+    fn registry_ids_are_unique_and_kebab_case() {
+        let rules = registry();
+        let mut ids: Vec<_> = rules.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), rules.len(), "duplicate rule id");
+        for id in ids {
+            assert!(
+                id.chars().all(|c| c.is_ascii_lowercase() || c == '-'),
+                "rule id '{id}' is not kebab-case"
+            );
+        }
+    }
+}

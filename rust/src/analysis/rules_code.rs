@@ -1,0 +1,406 @@
+//! Code-shape rules: `unsafe-safety`, `lock-discipline`,
+//! `oracle-purity`, `global-state`.
+//!
+//! These four rules are pure token/comment-placement checks on
+//! individual files (the cross-file synchronization rules live in
+//! [`crate::analysis::rules_sync`]). Each encodes an invariant this
+//! repo already relies on but no compiler enforces; the module-level
+//! docs of the files they guard explain *why* the invariant matters,
+//! the rule here only makes it unskippable.
+
+use super::lexer::{SourceFile, Tok, TokKind};
+use super::rules::{Finding, RepoContext};
+
+/// The modules bound by the PR 8 bitwise scalar-oracle contract: every
+/// explicit SIMD microkernel in these files must perform the same FP
+/// ops in the same order as its scalar oracle, so fused ops are banned
+/// outright (an FMA rounds once where `a*b + c` rounds twice).
+const ORACLE_MODULES: [&str; 4] = [
+    "rust/src/linalg/gemm.rs",
+    "rust/src/integrators/artifacts.rs",
+    "rust/src/integrators/rfd.rs",
+    "rust/src/graph/distances.rs",
+];
+
+/// The one file allowed to hold interior-mutable statics: the SIMD
+/// dispatch latch (`GFI_SIMD` override + detected-kernel cache).
+const GLOBAL_STATE_ALLOWLIST: [&str; 1] = ["rust/src/util/simd.rs"];
+
+// ---------------------------------------------------------------------------
+// unsafe-safety
+// ---------------------------------------------------------------------------
+
+/// Every `unsafe` token (block, fn, or impl) must have a SAFETY
+/// comment adjacent to the statement that introduces it: either in the
+/// contiguous comment/attribute run directly above the statement's
+/// first line, or between the statement start and the `unsafe` token
+/// itself. Accepted markers: `SAFETY` (the `// SAFETY:` idiom) or a
+/// rustdoc `# Safety` section heading.
+pub(crate) fn check_unsafe_safety(ctx: &RepoContext, out: &mut Vec<Finding>) {
+    for f in &ctx.files {
+        for (i, t) in f.toks.iter().enumerate() {
+            if t.kind == TokKind::Ident && t.text == "unsafe" && !has_safety_comment(f, i) {
+                out.push(Finding {
+                    file: f.rel_path.clone(),
+                    line: t.line,
+                    rule: "unsafe-safety",
+                    message: "`unsafe` without an adjacent `// SAFETY:` comment (or \
+                              `# Safety` doc section); state the invariant that makes \
+                              this sound, directly above the statement"
+                        .into(),
+                });
+            }
+        }
+    }
+}
+
+/// Line on which the statement containing token `i` starts: walk
+/// tokens backward to the nearest statement boundary (`;`, `{`, `}`,
+/// or `,` — the comma so that individual match arms and `unsafe impl`
+/// items are their own units), then take that next token's line.
+fn stmt_start_line(f: &SourceFile, i: usize) -> u32 {
+    let boundary = |t: &Tok| {
+        t.kind == TokKind::Punct && matches!(t.text.as_str(), ";" | "{" | "}" | ",")
+    };
+    let mut j = i;
+    while j > 0 && !boundary(&f.toks[j - 1]) {
+        j -= 1;
+    }
+    f.toks[j].line
+}
+
+fn is_safety_text(s: &str) -> bool {
+    s.contains("SAFETY") || s.contains("# Safety")
+}
+
+fn has_safety_comment(f: &SourceFile, i: usize) -> bool {
+    let unsafe_line = f.toks[i].line;
+    let stmt_line = stmt_start_line(f, i).min(unsafe_line);
+    // Comments inside the statement, before the `unsafe` itself
+    // (e.g. `let x = /* SAFETY: .. */ unsafe { .. }`).
+    if f.comments_in(stmt_line, unsafe_line).any(|c| is_safety_text(&c.text)) {
+        return true;
+    }
+    // Contiguous run of comment / attribute lines directly above the
+    // statement. A blank or code line ends the run: a SAFETY comment
+    // separated from its statement is as good as missing.
+    let mut l = stmt_line;
+    while l > 1 {
+        let s = f.lines.get(l as usize - 2).map(|s| s.trim()).unwrap_or("");
+        let annotation = s.starts_with("//")
+            || s.starts_with("#[")
+            || s.starts_with("#!")
+            || s.starts_with("/*")
+            || s.starts_with('*');
+        if !annotation {
+            return false;
+        }
+        if is_safety_text(s) {
+            return true;
+        }
+        l -= 1;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// lock-discipline
+// ---------------------------------------------------------------------------
+
+/// `.lock().unwrap()` / `.lock().expect(..)` propagate mutex
+/// poisoning: one caught panic while a holder was mid-operation then
+/// permanently bricks that mutex for every later caller. This repo's
+/// locks guard data that stays consistent across a poisoning panic
+/// (see `coordinator/cache.rs::lock_shard` for the argument), so the
+/// recovering idiom `.lock().unwrap_or_else(|p| p.into_inner())` is
+/// required everywhere. Token-level matching makes line breaks between
+/// the calls irrelevant.
+pub(crate) fn check_lock_discipline(ctx: &RepoContext, out: &mut Vec<Finding>) {
+    for f in &ctx.files {
+        let t = &f.toks;
+        for i in 0..t.len().saturating_sub(6) {
+            let is = |k: usize, kind: TokKind, text: &str| {
+                t[i + k].kind == kind && t[i + k].text == text
+            };
+            if is(0, TokKind::Punct, ".")
+                && is(1, TokKind::Ident, "lock")
+                && is(2, TokKind::Punct, "(")
+                && is(3, TokKind::Punct, ")")
+                && is(4, TokKind::Punct, ".")
+                && (is(5, TokKind::Ident, "unwrap") || is(5, TokKind::Ident, "expect"))
+                && is(6, TokKind::Punct, "(")
+            {
+                out.push(Finding {
+                    file: f.rel_path.clone(),
+                    line: t[i + 1].line,
+                    rule: "lock-discipline",
+                    message: format!(
+                        "`.lock().{}()` propagates mutex poisoning; use \
+                         `.lock().unwrap_or_else(|p| p.into_inner())` (see \
+                         coordinator/cache.rs::lock_shard for why recovery is sound)",
+                        t[i + 5].text
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// oracle-purity
+// ---------------------------------------------------------------------------
+
+/// No fused-multiply-add tokens in the scalar-oracle modules: `mul_add`,
+/// any `*fmadd*` intrinsic (x86), or any `vfma*` intrinsic (NEON).
+/// Comments and strings are exempt by construction (the lexer drops
+/// them), so the modules may still *document* why FMA is banned.
+pub(crate) fn check_oracle_purity(ctx: &RepoContext, out: &mut Vec<Finding>) {
+    for f in &ctx.files {
+        if !ORACLE_MODULES.iter().any(|m| f.rel_path.ends_with(m)) {
+            continue;
+        }
+        for t in &f.toks {
+            if t.kind != TokKind::Ident {
+                continue;
+            }
+            let fused =
+                t.text == "mul_add" || t.text.contains("fmadd") || t.text.starts_with("vfma");
+            if fused {
+                out.push(Finding {
+                    file: f.rel_path.clone(),
+                    line: t.line,
+                    rule: "oracle-purity",
+                    message: format!(
+                        "fused-FP token `{}` in a scalar-oracle module — the SIMD \
+                         contract requires identical FP ops in identical order \
+                         (no FMA, no reassociation; docs/ARCHITECTURE.md, \
+                         \"SIMD & precision\")",
+                        t.text
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// global-state
+// ---------------------------------------------------------------------------
+
+/// `static` items with interior-mutable types are only allowed in the
+/// documented dispatch latch (`util/simd.rs`): anywhere else, hidden
+/// global state undermines the determinism and warm-restart arguments
+/// the engine is built on — configuration belongs on `EngineConfig`.
+/// Scope: `rust/src/**` (tests may coordinate through statics).
+pub(crate) fn check_global_state(ctx: &RepoContext, out: &mut Vec<Finding>) {
+    for f in &ctx.files {
+        if !f.rel_path.starts_with("rust/src/")
+            || GLOBAL_STATE_ALLOWLIST.iter().any(|a| f.rel_path == *a)
+        {
+            continue;
+        }
+        let t = &f.toks;
+        for i in 0..t.len() {
+            if !(t[i].kind == TokKind::Ident && t[i].text == "static") {
+                continue;
+            }
+            // `static [mut] NAME : <type> = ...;` — collect idents in
+            // the type segment. (`&'static` never gets here: lifetimes
+            // lex as Lifetime tokens, not a `static` ident.)
+            let mut j = i + 1;
+            if matches!(t.get(j), Some(n) if n.text == "mut") {
+                j += 1;
+            }
+            if !matches!(t.get(j), Some(n) if n.kind == TokKind::Ident) {
+                continue;
+            }
+            if !matches!(t.get(j + 1), Some(n) if n.kind == TokKind::Punct && n.text == ":") {
+                continue;
+            }
+            let mut k = j + 2;
+            while let Some(tok) = t.get(k) {
+                if tok.kind == TokKind::Punct && (tok.text == ";" || tok.text == "=") {
+                    break;
+                }
+                if tok.kind == TokKind::Ident && is_interior_mutable(&tok.text) {
+                    out.push(Finding {
+                        file: f.rel_path.clone(),
+                        line: t[i].line,
+                        rule: "global-state",
+                        message: format!(
+                            "interior-mutable `static` (`{}`) outside the documented \
+                             util/simd.rs dispatch latch; thread state through \
+                             EngineConfig instead of globals",
+                            tok.text
+                        ),
+                    });
+                    break;
+                }
+                k += 1;
+            }
+        }
+    }
+}
+
+fn is_interior_mutable(ty: &str) -> bool {
+    ty.starts_with("Atomic")
+        || matches!(
+            ty,
+            "Mutex"
+                | "RwLock"
+                | "OnceLock"
+                | "OnceCell"
+                | "LazyLock"
+                | "LazyCell"
+                | "Cell"
+                | "RefCell"
+                | "UnsafeCell"
+                | "Condvar"
+        )
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::analysis::rules::testutil::{ctx, run_rule};
+
+    // -- unsafe-safety ------------------------------------------------------
+
+    #[test]
+    fn unsafe_safety_fires_without_comment() {
+        let src = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        let got = run_rule("unsafe-safety", &ctx(&[("rust/src/x.rs", src)]));
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].line, 2);
+    }
+
+    #[test]
+    fn unsafe_safety_accepts_adjacent_comment_forms() {
+        let src = "\
+fn f(p: *const u8) -> u8 {
+    // SAFETY: caller guarantees p is valid for reads.
+    unsafe { *p }
+}
+
+/// Reads a byte.
+///
+/// # Safety
+/// `p` must be valid for reads.
+#[inline]
+pub unsafe fn g(p: *const u8) -> u8 {
+    // SAFETY: contract forwarded from our own # Safety section.
+    unsafe { *p }
+}
+
+// SAFETY: T: Sync is required by the bound below.
+unsafe impl<T: Sync> Send for W<T> {}
+";
+        let got = run_rule("unsafe-safety", &ctx(&[("rust/src/x.rs", src)]));
+        assert!(got.is_empty(), "all covered: {got:?}");
+    }
+
+    #[test]
+    fn unsafe_safety_rejects_detached_comment() {
+        // A blank line between the comment and the statement breaks
+        // adjacency: the comment may describe something else entirely.
+        let src = "// SAFETY: stale comment, far away.\n\nfn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        let got = run_rule("unsafe-safety", &ctx(&[("rust/src/x.rs", src)]));
+        assert_eq!(got.len(), 1);
+    }
+
+    #[test]
+    fn unsafe_safety_covers_match_arms_individually() {
+        let src = "\
+fn d(k: K) {
+    match k {
+        // SAFETY: avx2 was runtime-detected.
+        K::A => unsafe { a() },
+        K::B => unsafe { b() },
+    }
+}
+";
+        let got = run_rule("unsafe-safety", &ctx(&[("rust/src/x.rs", src)]));
+        assert_eq!(got.len(), 1, "only the uncommented arm fires: {got:?}");
+        assert_eq!(got[0].line, 5);
+    }
+
+    #[test]
+    fn unsafe_in_strings_and_comments_is_ignored() {
+        let src = "// unsafe unsafe unsafe\nfn f() -> &'static str { \"unsafe { }\" }\n";
+        assert!(run_rule("unsafe-safety", &ctx(&[("rust/src/x.rs", src)])).is_empty());
+    }
+
+    // -- lock-discipline ----------------------------------------------------
+
+    #[test]
+    fn lock_discipline_fires_across_line_breaks() {
+        let src = "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    *m.lock()\n        .unwrap()\n}\n";
+        let got = run_rule("lock-discipline", &ctx(&[("rust/src/x.rs", src)]));
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].line, 2, "reported at the .lock() call");
+    }
+
+    #[test]
+    fn lock_discipline_fires_on_expect() {
+        let src = "fn f(m: &std::sync::Mutex<u32>) { m.lock().expect(\"poisoned\"); }\n";
+        assert_eq!(run_rule("lock-discipline", &ctx(&[("rust/src/x.rs", src)])).len(), 1);
+    }
+
+    #[test]
+    fn lock_discipline_accepts_recovering_idiom() {
+        let src = "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    \
+                   *m.lock().unwrap_or_else(|p| p.into_inner())\n}\n";
+        assert!(run_rule("lock-discipline", &ctx(&[("rust/src/x.rs", src)])).is_empty());
+    }
+
+    #[test]
+    fn lock_discipline_ignores_other_unwraps() {
+        let src = "fn f(v: Vec<u32>) -> u32 { v.first().unwrap() + v.last().copied().unwrap() }\n";
+        assert!(run_rule("lock-discipline", &ctx(&[("rust/src/x.rs", src)])).is_empty());
+    }
+
+    // -- oracle-purity ------------------------------------------------------
+
+    #[test]
+    fn oracle_purity_fires_on_mul_add_and_intrinsics() {
+        let src = "fn k(a: f64, b: f64, c: f64) -> f64 {\n    a.mul_add(b, c)\n}\n\
+                   fn v() { _mm256_fmadd_pd(); vfmaq_f64(); }\n";
+        let got = run_rule("oracle-purity", &ctx(&[("rust/src/linalg/gemm.rs", src)]));
+        assert_eq!(got.len(), 3, "{got:?}");
+    }
+
+    #[test]
+    fn oracle_purity_scopes_to_oracle_modules_and_skips_comments() {
+        let clean = "// mul_add is banned here; see the contract.\n\
+                     fn k(a: f64, b: f64, c: f64) -> f64 { a * b + c }\n";
+        let elsewhere = "fn free() -> f64 { 2f64.mul_add(3.0, 4.0) }\n";
+        let c = ctx(&[
+            ("rust/src/linalg/gemm.rs", clean),
+            ("rust/src/apps/attention.rs", elsewhere),
+        ]);
+        assert!(run_rule("oracle-purity", &c).is_empty());
+    }
+
+    // -- global-state -------------------------------------------------------
+
+    #[test]
+    fn global_state_fires_outside_allowlist() {
+        let src = "use std::sync::atomic::AtomicU64;\n\
+                   static HITS: AtomicU64 = AtomicU64::new(0);\n";
+        let got = run_rule("global-state", &ctx(&[("rust/src/graph/mod.rs", src)]));
+        assert_eq!(got.len(), 1);
+        assert!(got[0].message.contains("AtomicU64"));
+    }
+
+    #[test]
+    fn global_state_allows_simd_latch_and_plain_statics() {
+        let latch = "static OVERRIDE: AtomicU8 = AtomicU8::new(0);\n";
+        let plain = "static NAMES: [&str; 2] = [\"a\", \"b\"];\n\
+                     fn f(s: &'static str) -> usize { s.len() }\n";
+        let c = ctx(&[
+            ("rust/src/util/simd.rs", latch),
+            ("rust/src/graph/mod.rs", plain),
+            ("tests/simd.rs", "static LOCK: Mutex<()> = Mutex::new(());\n"),
+        ]);
+        assert!(run_rule("global-state", &c).is_empty(), "latch + tests are exempt");
+    }
+}

@@ -1,0 +1,335 @@
+//! `cache-key-completeness`: every hyper-parameter of every
+//! [`IntegratorSpec`] variant must be referenced by `cache_key()`.
+//!
+//! The engine's prepared-integrator cache is keyed by
+//! `IntegratorSpec::cache_key()`; a hyper-parameter missing from the
+//! key makes two *different* integrators collide into one cache slot —
+//! a bug class that shipped twice before PR 2 fixed it. This rule
+//! makes the omission mechanical to catch: it parses the
+//! `enum IntegratorSpec` in `integrators/spec.rs`, resolves
+//! `*Config`-struct payloads to their field lists, and requires every
+//! variant name and every field name to be *referenced* in the
+//! `cache_key()` body — as an ident token (`c.seed`, a match binding)
+//! or a `{field}` / `{field:?}` format interpolation.
+//!
+//! Known limit, worth stating: the referenced-set is body-global, so a
+//! field bound in one arm can mask a same-named omission in another.
+//! That still catches the shipped bug class (a hyper-parameter absent
+//! from the key *everywhere*), and Rust itself closes most of the
+//! rest: adding a field to a variant breaks every exhaustive pattern
+//! that doesn't bind it, and binding-without-using is a compiler
+//! warning the CI lint job surfaces.
+//!
+//! [`IntegratorSpec`]: crate::integrators::IntegratorSpec
+
+use std::collections::BTreeSet;
+
+use super::lexer::{find_seq, fn_body, matching_brace, struct_fields, Tok, TokKind};
+use super::rules::{Finding, RepoContext};
+
+/// One parsed enum variant.
+struct Variant {
+    name: String,
+    line: u32,
+    /// Field idents of a `Name { a: T, b: U }` variant.
+    named_fields: Vec<String>,
+    /// Type idents of a `Name(T, U)` variant.
+    tuple_types: Vec<String>,
+}
+
+/// See the module docs.
+pub(crate) fn check_cache_key_completeness(ctx: &RepoContext, out: &mut Vec<Finding>) {
+    let rule = "cache-key-completeness";
+    let anchor = |out: &mut Vec<Finding>, what: &str| {
+        out.push(Finding {
+            file: "rust/src/integrators/spec.rs".to_string(),
+            line: 1,
+            rule,
+            message: format!(
+                "anchor not found: {what} — the rule cannot run; restore the anchor or \
+                 update rust/src/analysis/rules_spec.rs alongside the refactor"
+            ),
+        });
+    };
+    let Some(spec) = ctx.file_ending("integrators/spec.rs") else {
+        anchor(out, "integrators/spec.rs not scanned");
+        return;
+    };
+    let Some(variants) = enum_variants(&spec.toks, "IntegratorSpec") else {
+        anchor(out, "`enum IntegratorSpec {`");
+        return;
+    };
+    let Some(body) = fn_body(&spec.toks, "cache_key") else {
+        anchor(out, "fn cache_key");
+        return;
+    };
+    let referenced = referenced_idents(body);
+
+    for v in &variants {
+        if !referenced.contains(v.name.as_str()) {
+            out.push(Finding {
+                file: spec.rel_path.clone(),
+                line: v.line,
+                rule,
+                message: format!(
+                    "variant {} never appears in cache_key() — unkeyed specs collide \
+                     in the integrator cache",
+                    v.name
+                ),
+            });
+        }
+        for field in &v.named_fields {
+            if !referenced.contains(field.as_str()) {
+                out.push(Finding {
+                    file: spec.rel_path.clone(),
+                    line: v.line,
+                    rule,
+                    message: format!(
+                        "hyper-parameter `{field}` of variant {} is not referenced in \
+                         cache_key() — two specs differing only in `{field}` would \
+                         share a cache slot",
+                        v.name
+                    ),
+                });
+            }
+        }
+        // Config-struct payloads (`Sf(SfConfig)`, `Rfd(RfdConfig)`):
+        // resolve the struct definition anywhere in the tree and
+        // require every one of its fields in the key.
+        for ty in v.tuple_types.iter().filter(|t| t.ends_with("Config")) {
+            let def = ctx.files.iter().find_map(|f| struct_fields(&f.toks, ty));
+            let Some(fields) = def else {
+                anchor(out, &format!("struct {ty} (payload of variant {})", v.name));
+                continue;
+            };
+            for (field, _) in &fields {
+                if !referenced.contains(field.as_str()) {
+                    out.push(Finding {
+                        file: spec.rel_path.clone(),
+                        line: v.line,
+                        rule,
+                        message: format!(
+                            "hyper-parameter `{field}` of {ty} (variant {}) is not \
+                             referenced in cache_key() — cache collision risk",
+                            v.name
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Variants of `enum <name> { ... }`: name + line, named fields,
+/// tuple-payload type idents. Attributes on variants are skipped;
+/// doc comments are invisible at the token level.
+fn enum_variants(toks: &[Tok], name: &str) -> Option<Vec<Variant>> {
+    let at = find_seq(toks, 0, &["enum", name])?;
+    let open =
+        (at + 2..toks.len()).find(|&i| toks[i].kind == TokKind::Punct && toks[i].text == "{")?;
+    let close = matching_brace(toks, open)?;
+    let body = &toks[open + 1..close];
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < body.len() {
+        let t = &body[i];
+        // Skip `#[...]` variant attributes.
+        if t.kind == TokKind::Punct && t.text == "#" {
+            i += 1;
+            if matches!(body.get(i), Some(n) if n.kind == TokKind::Punct && n.text == "[") {
+                let mut depth = 0usize;
+                while i < body.len() {
+                    if body[i].kind == TokKind::Punct {
+                        match body[i].text.as_str() {
+                            "[" => depth += 1,
+                            "]" => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                    }
+                    i += 1;
+                }
+                i += 1;
+            }
+            continue;
+        }
+        if t.kind != TokKind::Ident {
+            i += 1; // separating comma, or stray punctuation
+            continue;
+        }
+        let mut v = Variant {
+            name: t.text.clone(),
+            line: t.line,
+            named_fields: Vec::new(),
+            tuple_types: Vec::new(),
+        };
+        i += 1;
+        match body.get(i) {
+            Some(n) if n.kind == TokKind::Punct && n.text == "{" => {
+                let vclose = matching_brace(body, i)?;
+                let fields = &body[i + 1..vclose];
+                for (j, ft) in fields.iter().enumerate() {
+                    let colon = matches!(fields.get(j + 1),
+                        Some(c) if c.kind == TokKind::Punct && c.text == ":");
+                    let double = matches!(fields.get(j + 2),
+                        Some(c) if c.kind == TokKind::Punct && c.text == ":");
+                    if ft.kind == TokKind::Ident && colon && !double {
+                        v.named_fields.push(ft.text.clone());
+                    }
+                }
+                i = vclose + 1;
+            }
+            Some(n) if n.kind == TokKind::Punct && n.text == "(" => {
+                let mut depth = 0usize;
+                while i < body.len() {
+                    let p = &body[i];
+                    if p.kind == TokKind::Punct {
+                        match p.text.as_str() {
+                            "(" => depth += 1,
+                            ")" => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                    } else if p.kind == TokKind::Ident {
+                        v.tuple_types.push(p.text.clone());
+                    }
+                    i += 1;
+                }
+                i += 1;
+            }
+            _ => {} // unit variant
+        }
+        out.push(v);
+    }
+    Some(out)
+}
+
+/// Idents "referenced" by a fn body: every ident token, plus every
+/// `{ident}` / `{ident:spec}` interpolation inside its string literals
+/// (`{{` escapes excluded).
+fn referenced_idents(body: &[Tok]) -> BTreeSet<String> {
+    let mut out: BTreeSet<String> = body
+        .iter()
+        .filter(|t| t.kind == TokKind::Ident)
+        .map(|t| t.text.clone())
+        .collect();
+    for t in body.iter().filter(|t| t.kind == TokKind::Str) {
+        let chars: Vec<char> = t.text.chars().collect();
+        let mut i = 0;
+        while i < chars.len() {
+            if chars[i] != '{' {
+                i += 1;
+                continue;
+            }
+            if chars.get(i + 1) == Some(&'{') {
+                i += 2; // escaped brace
+                continue;
+            }
+            let start = i + 1;
+            let mut j = start;
+            while j < chars.len() && (chars[j] == '_' || chars[j].is_ascii_alphanumeric()) {
+                j += 1;
+            }
+            if j > start && matches!(chars.get(j), Some('}') | Some(':')) {
+                out.insert(chars[start..j].iter().collect());
+            }
+            i = j.max(start);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::analysis::rules::testutil::{ctx, run_rule};
+
+    const CONFIG: &str = "pub struct SfConfig {\n    pub unit_size: usize,\n    pub seed: u64,\n}\n";
+
+    #[test]
+    fn fires_on_unkeyed_field_and_config_field() {
+        let spec = r#"
+pub enum IntegratorSpec {
+    Trees { lambda: f64, seed: u64 },
+    Sf(SfConfig),
+}
+impl IntegratorSpec {
+    pub fn cache_key(&self) -> String {
+        match self {
+            IntegratorSpec::Trees { lambda, .. } => format!("trees|lam={lambda}"),
+            IntegratorSpec::Sf(c) => format!("sf|u={}", c.unit_size),
+        }
+    }
+}
+"#;
+        let c = ctx(&[
+            ("rust/src/integrators/spec.rs", spec),
+            ("rust/src/integrators/sf/mod.rs", CONFIG),
+        ]);
+        let got = run_rule("cache-key-completeness", &c);
+        // Trees.seed unbound + SfConfig.seed unreferenced collapse into
+        // one `seed` gap per variant: one finding each.
+        assert_eq!(got.len(), 2, "{got:?}");
+        assert!(got.iter().all(|f| f.message.contains("`seed`")), "{got:?}");
+    }
+
+    #[test]
+    fn clean_when_every_field_is_referenced() {
+        let spec = r#"
+pub enum IntegratorSpec {
+    Trees { lambda: f64, seed: u64 },
+    Sf(SfConfig),
+    Bf,
+}
+impl IntegratorSpec {
+    pub fn cache_key(&self) -> String {
+        match self {
+            IntegratorSpec::Trees { lambda, seed } => format!("trees|lam={lambda}|s={seed}"),
+            IntegratorSpec::Sf(c) => format!("sf|u={}|s={}", c.unit_size, c.seed),
+            IntegratorSpec::Bf => "bf".to_string(),
+        }
+    }
+}
+"#;
+        let c = ctx(&[
+            ("rust/src/integrators/spec.rs", spec),
+            ("rust/src/integrators/sf/mod.rs", CONFIG),
+        ]);
+        let got = run_rule("cache-key-completeness", &c);
+        assert!(got.is_empty(), "{got:?}");
+    }
+
+    #[test]
+    fn interpolations_count_as_references() {
+        let spec = r#"
+pub enum IntegratorSpec {
+    Bader { lambda: f64 },
+}
+impl IntegratorSpec {
+    pub fn cache_key(&self) -> String {
+        match self {
+            IntegratorSpec::Bader { .. } => format!("bader|lam={lambda:?}"),
+        }
+    }
+}
+"#;
+        let c = ctx(&[("rust/src/integrators/spec.rs", spec)]);
+        assert!(run_rule("cache-key-completeness", &c).is_empty(),
+            "a {{lambda:?}} interpolation references lambda");
+    }
+
+    #[test]
+    fn missing_enum_reports_anchor() {
+        let c = ctx(&[("rust/src/integrators/spec.rs", "fn nothing() {}\n")]);
+        let got = run_rule("cache-key-completeness", &c);
+        assert_eq!(got.len(), 1);
+        assert!(got[0].message.contains("anchor not found"));
+    }
+}

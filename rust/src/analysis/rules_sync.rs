@@ -1,0 +1,507 @@
+//! Cross-file synchronization rules: `protocol-sync`,
+//! `fault-site-sync`, `counter-sync`.
+//!
+//! These rules keep three sets of names that drift independently —
+//! wire op strings, fault-site names, and robustness/store counter
+//! fields — equal across their code anchors and `docs/PROTOCOL.md`.
+//! Each rule fails *loudly* when an anchor goes missing (a refactor
+//! that renames `handle_line`'s `match op` or `impl FaultSite` gets an
+//! "anchor not found" finding, never a silent pass), so the checks
+//! can't be defeated by moving code around.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{find_seq, fn_body, matching_brace, struct_fields, SourceFile, TokKind};
+use super::rules::{Finding, RepoContext};
+
+/// Path of the protocol document, for findings that anchor to it.
+const PROTOCOL_PATH: &str = "docs/PROTOCOL.md";
+
+fn anchor_missing(out: &mut Vec<Finding>, rule: &'static str, file: &str, what: &str) {
+    out.push(Finding {
+        file: file.to_string(),
+        line: 1,
+        rule,
+        message: format!("anchor not found: {what} — the rule cannot run; restore the \
+                          anchor or update rust/src/analysis/rules_sync.rs alongside \
+                          the refactor"),
+    });
+}
+
+// ---------------------------------------------------------------------------
+// protocol-sync
+// ---------------------------------------------------------------------------
+
+/// Server op dispatch ↔ documented op table, both directions: every
+/// string arm of `handle_line`'s top-level `match op` must have a
+/// ``### `op` `` heading in PROTOCOL.md's `## Ops` section, and every
+/// documented op must be handled.
+pub(crate) fn check_protocol_sync(ctx: &RepoContext, out: &mut Vec<Finding>) {
+    let rule = "protocol-sync";
+    let Some(server) = ctx.file_ending("coordinator/server.rs") else {
+        anchor_missing(out, rule, "rust/src/coordinator/server.rs", "file not scanned");
+        return;
+    };
+    let Some(server_ops) = server_op_arms(server) else {
+        anchor_missing(out, rule, &server.rel_path, "`match op {` in handle_line");
+        return;
+    };
+    let Some(doc_ops) = protocol_op_headings(&ctx.protocol_md) else {
+        anchor_missing(out, rule, PROTOCOL_PATH, "`## Ops` section with ### `op` headings");
+        return;
+    };
+    let doc_set: BTreeSet<&str> = doc_ops.iter().map(|(s, _)| s.as_str()).collect();
+    let srv_set: BTreeSet<&str> = server_ops.iter().map(|(s, _)| s.as_str()).collect();
+    for (op, line) in &server_ops {
+        if !doc_set.contains(op.as_str()) {
+            out.push(Finding {
+                file: server.rel_path.clone(),
+                line: *line,
+                rule,
+                message: format!(
+                    "server handles op \"{op}\" but docs/PROTOCOL.md has no ### `{op}` \
+                     heading under ## Ops"
+                ),
+            });
+        }
+    }
+    for (op, line) in &doc_ops {
+        if !srv_set.contains(op.as_str()) {
+            out.push(Finding {
+                file: PROTOCOL_PATH.to_string(),
+                line: *line,
+                rule,
+                message: format!(
+                    "docs/PROTOCOL.md documents op \"{op}\" but handle_line's \
+                     `match op` has no such arm"
+                ),
+            });
+        }
+    }
+}
+
+/// String-literal arms of the first top-level `match op {`: literals at
+/// relative depth 0 (brace/paren/bracket) directly followed by `=>` or
+/// `|`. Depth tracking keeps both nested matches (the mesh-kind match)
+/// and literals inside arm bodies (`Ok(Json::obj(..))`) out.
+fn server_op_arms(f: &SourceFile) -> Option<Vec<(String, u32)>> {
+    let at = find_seq(&f.toks, 0, &["match", "op", "{"])?;
+    let open = at + 2;
+    let close = matching_brace(&f.toks, open)?;
+    let body = &f.toks[open + 1..close];
+    let (mut brace, mut paren, mut bracket) = (0i32, 0i32, 0i32);
+    let mut ops = Vec::new();
+    for (i, t) in body.iter().enumerate() {
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" => brace += 1,
+                "}" => brace -= 1,
+                "(" => paren += 1,
+                ")" => paren -= 1,
+                "[" => bracket += 1,
+                "]" => bracket -= 1,
+                _ => {}
+            }
+            continue;
+        }
+        if t.kind == TokKind::Str && brace == 0 && paren == 0 && bracket == 0 {
+            let arm = matches!(body.get(i + 1),
+                Some(n) if n.kind == TokKind::Punct && (n.text == "=" || n.text == "|"));
+            if arm {
+                ops.push((t.text.clone(), t.line));
+            }
+        }
+    }
+    Some(ops)
+}
+
+/// Op names (with 1-based lines) from PROTOCOL.md: ``### `op` ``
+/// headings between `## Ops` and the next `## ` heading.
+fn protocol_op_headings(md: &str) -> Option<Vec<(String, u32)>> {
+    let mut in_ops = false;
+    let mut found_section = false;
+    let mut ops = Vec::new();
+    for (i, line) in md.lines().enumerate() {
+        if line.trim_end() == "## Ops" {
+            in_ops = true;
+            found_section = true;
+            continue;
+        }
+        if in_ops && line.starts_with("## ") {
+            break;
+        }
+        if !in_ops {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("### `") {
+            if let Some(end) = rest.find('`') {
+                ops.push((rest[..end].to_string(), i as u32 + 1));
+            }
+        }
+    }
+    if found_section {
+        Some(ops)
+    } else {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fault-site-sync
+// ---------------------------------------------------------------------------
+
+/// Fault-site names, four ways: `FaultSite::name()`'s wire names ==
+/// `FaultSite::parse()`'s accepted names == the machine-checked
+/// `gfi-analyze: fault-sites = ...` marker in PROTOCOL.md, and every
+/// variant is actually consumed at an injection point outside
+/// `faults.rs` (a site that nothing fires is dead chaos coverage).
+pub(crate) fn check_fault_site_sync(ctx: &RepoContext, out: &mut Vec<Finding>) {
+    let rule = "fault-site-sync";
+    let Some(faults) = ctx.file_ending("coordinator/faults.rs") else {
+        anchor_missing(out, rule, "rust/src/coordinator/faults.rs", "file not scanned");
+        return;
+    };
+    // Slice the `impl FaultSite { .. }` block, then its two fns.
+    let Some(impl_at) = find_seq(&faults.toks, 0, &["impl", "FaultSite", "{"]) else {
+        anchor_missing(out, rule, &faults.rel_path, "`impl FaultSite {`");
+        return;
+    };
+    let Some(impl_close) = matching_brace(&faults.toks, impl_at + 2) else {
+        anchor_missing(out, rule, &faults.rel_path, "impl FaultSite closing brace");
+        return;
+    };
+    let impl_body = &faults.toks[impl_at + 3..impl_close];
+    let Some(name_body) = fn_body(impl_body, "name") else {
+        anchor_missing(out, rule, &faults.rel_path, "fn name in impl FaultSite");
+        return;
+    };
+    let Some(parse_body) = fn_body(impl_body, "parse") else {
+        anchor_missing(out, rule, &faults.rel_path, "fn parse in impl FaultSite");
+        return;
+    };
+
+    // variant → wire name, from `FaultSite::Variant => "wire"` arms.
+    let mut sites: Vec<(String, String, u32)> = Vec::new();
+    let mut i = 0;
+    while let Some(at) = find_seq(name_body, i, &["FaultSite", ":", ":"]) {
+        i = at + 3;
+        let Some(var) = name_body.get(at + 3).filter(|t| t.kind == TokKind::Ident) else {
+            continue;
+        };
+        let wire = name_body[at + 3..]
+            .iter()
+            .find(|t| t.kind == TokKind::Str)
+            .map(|t| t.text.clone());
+        if let Some(w) = wire {
+            sites.push((var.text.clone(), w, var.line));
+        }
+    }
+    if sites.is_empty() {
+        anchor_missing(out, rule, &faults.rel_path, "FaultSite::Variant => \"name\" arms");
+        return;
+    }
+    let name_set: BTreeSet<&str> = sites.iter().map(|(_, w, _)| w.as_str()).collect();
+    let parse_set: BTreeSet<&str> = parse_body
+        .iter()
+        .filter(|t| t.kind == TokKind::Str)
+        .map(|t| t.text.as_str())
+        .collect();
+
+    for (_, wire, line) in &sites {
+        if !parse_set.contains(wire.as_str()) {
+            out.push(Finding {
+                file: faults.rel_path.clone(),
+                line: *line,
+                rule,
+                message: format!(
+                    "fault site \"{wire}\" has a name() arm but parse() does not \
+                     accept it — plans can't arm it"
+                ),
+            });
+        }
+    }
+    for wire in &parse_set {
+        if !name_set.contains(wire) {
+            out.push(Finding {
+                file: faults.rel_path.clone(),
+                line: 1,
+                rule,
+                message: format!("parse() accepts \"{wire}\" but no name() arm produces it"),
+            });
+        }
+    }
+
+    // PROTOCOL.md marker.
+    match protocol_fault_marker(&ctx.protocol_md) {
+        None => anchor_missing(
+            out,
+            rule,
+            PROTOCOL_PATH,
+            "`gfi-analyze: fault-sites = ...` marker",
+        ),
+        Some((doc_sites, line)) => {
+            for (_, wire, _) in &sites {
+                if !doc_sites.contains(wire) {
+                    out.push(Finding {
+                        file: PROTOCOL_PATH.to_string(),
+                        line,
+                        rule,
+                        message: format!(
+                            "fault site \"{wire}\" missing from the fault-sites marker"
+                        ),
+                    });
+                }
+            }
+            for wire in &doc_sites {
+                if !name_set.contains(wire.as_str()) {
+                    out.push(Finding {
+                        file: PROTOCOL_PATH.to_string(),
+                        line,
+                        rule,
+                        message: format!(
+                            "fault-sites marker lists \"{wire}\" which faults.rs \
+                             does not define"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // Every variant fires somewhere outside faults.rs.
+    for (var, wire, line) in &sites {
+        let consumed = ctx.files.iter().any(|f| {
+            !f.rel_path.ends_with("coordinator/faults.rs")
+                && find_seq(&f.toks, 0, &["FaultSite", ":", ":", var]).is_some()
+        });
+        if !consumed {
+            out.push(Finding {
+                file: faults.rel_path.clone(),
+                line: *line,
+                rule,
+                message: format!(
+                    "fault site \"{wire}\" (FaultSite::{var}) is never consumed at an \
+                     injection point outside faults.rs — dead chaos coverage"
+                ),
+            });
+        }
+    }
+}
+
+/// The `fault-sites = a b c` marker in PROTOCOL.md, with its line.
+fn protocol_fault_marker(md: &str) -> Option<(BTreeSet<String>, u32)> {
+    for (i, line) in md.lines().enumerate() {
+        if let Some(pos) = line.find("gfi-analyze: fault-sites") {
+            let rest = &line[pos..];
+            let eq = rest.find('=')?;
+            let list = rest[eq + 1..].trim_end_matches("-->").trim();
+            return Some((
+                list.split_whitespace().map(str::to_string).collect(),
+                i as u32 + 1,
+            ));
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// counter-sync
+// ---------------------------------------------------------------------------
+
+/// Every public counter field of `StoreStats` and `RobustnessStats`
+/// must appear (a) as a string literal in its server JSON emitter
+/// (`store_json` / `robustness_json`) and (b) somewhere in PROTOCOL.md
+/// — so a counter added to the struct can't silently stay invisible to
+/// operators or undocumented.
+pub(crate) fn check_counter_sync(ctx: &RepoContext, out: &mut Vec<Finding>) {
+    let rule = "counter-sync";
+    let specs: [(&str, &str, &str); 2] = [
+        ("StoreStats", "coordinator/store.rs", "store_json"),
+        ("RobustnessStats", "coordinator/mod.rs", "robustness_json"),
+    ];
+    let Some(server) = ctx.file_ending("coordinator/server.rs") else {
+        anchor_missing(out, rule, "rust/src/coordinator/server.rs", "file not scanned");
+        return;
+    };
+    for (strukt, def_suffix, emitter) in specs {
+        let Some(def_file) = ctx.file_ending(def_suffix) else {
+            anchor_missing(out, rule, def_suffix, "file not scanned");
+            continue;
+        };
+        let Some(fields) = struct_fields(&def_file.toks, strukt) else {
+            anchor_missing(out, rule, &def_file.rel_path, strukt);
+            continue;
+        };
+        let Some(emit_body) = fn_body(&server.toks, emitter) else {
+            anchor_missing(out, rule, &server.rel_path, emitter);
+            continue;
+        };
+        let emitted: BTreeSet<&str> = emit_body
+            .iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .map(|t| t.text.as_str())
+            .collect();
+        for (field, line) in &fields {
+            if !emitted.contains(field.as_str()) {
+                out.push(Finding {
+                    file: def_file.rel_path.clone(),
+                    line: *line,
+                    rule,
+                    message: format!(
+                        "{strukt}.{field} is not emitted by server.rs::{emitter} — \
+                         counters that operators can't see don't exist"
+                    ),
+                });
+            }
+            if !ctx.protocol_md.contains(field.as_str()) {
+                out.push(Finding {
+                    file: def_file.rel_path.clone(),
+                    line: *line,
+                    rule,
+                    message: format!("{strukt}.{field} is undocumented in docs/PROTOCOL.md"),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::analysis::rules::testutil::{ctx_with_protocol, run_rule};
+
+    const SERVER_OK: &str = r#"
+fn handle_line(op: &str) {
+    match op {
+        "health" => {
+            let _ = ("nested_string", 1);
+            match kind { "icosphere" => m(), _ => n() }
+        }
+        "stats" => Ok(obj(vec![("not_an_op", 1)])),
+        other => err(other),
+    }
+}
+fn store_json(s: &StoreStats) { emit("spills", s.spills); }
+fn robustness_json(r: &RobustnessStats) { emit("sheds", r.sheds); }
+"#;
+
+    const STORE_OK: &str = "pub struct StoreStats {\n    pub spills: u64,\n}\n";
+    const MOD_OK: &str = "pub struct RobustnessStats {\n    pub sheds: u64,\n}\n";
+
+    // -- protocol-sync ------------------------------------------------------
+
+    #[test]
+    fn protocol_sync_clean_when_sets_match() {
+        let proto = "## Ops\n\n### `health`\n\n### `stats`\n\n## Worked session\n\n### `ghost`\n";
+        let c = ctx_with_protocol(&[("rust/src/coordinator/server.rs", SERVER_OK)], proto);
+        let got = run_rule("protocol-sync", &c);
+        assert!(got.is_empty(), "headings after the next ## are ignored: {got:?}");
+    }
+
+    #[test]
+    fn protocol_sync_fires_both_directions() {
+        let proto = "## Ops\n\n### `health`\n\n### `evict`\n";
+        let c = ctx_with_protocol(&[("rust/src/coordinator/server.rs", SERVER_OK)], proto);
+        let got = run_rule("protocol-sync", &c);
+        assert_eq!(got.len(), 2, "{got:?}");
+        assert!(got.iter().any(|f| f.message.contains("\"stats\"")), "undocumented op");
+        assert!(got.iter().any(|f| f.message.contains("\"evict\"")), "unhandled op");
+    }
+
+    #[test]
+    fn protocol_sync_reports_missing_anchor() {
+        let c = ctx_with_protocol(
+            &[("rust/src/coordinator/server.rs", "fn other() {}\n")],
+            "## Ops\n### `health`\n",
+        );
+        let got = run_rule("protocol-sync", &c);
+        assert_eq!(got.len(), 1);
+        assert!(got[0].message.contains("anchor not found"));
+    }
+
+    // -- fault-site-sync ----------------------------------------------------
+
+    const FAULTS_DRIFTED: &str = r#"
+pub enum FaultSite { Prepare, Spill }
+impl FaultSite {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::Prepare => "prepare",
+            FaultSite::Spill => "spill",
+        }
+    }
+    fn parse(s: &str) -> Option<FaultSite> {
+        Some(match s {
+            "prepare" => FaultSite::Prepare,
+            _ => return None,
+        })
+    }
+}
+"#;
+
+    #[test]
+    fn fault_site_sync_fires_on_drift() {
+        let c = ctx_with_protocol(
+            &[
+                ("rust/src/coordinator/faults.rs", FAULTS_DRIFTED),
+                ("rust/src/coordinator/store.rs", "fn f() { fire(FaultSite::Prepare); }\n"),
+            ],
+            "<!-- gfi-analyze: fault-sites = prepare -->\n",
+        );
+        let got = run_rule("fault-site-sync", &c);
+        // "spill": not parseable, not in the marker, and never consumed.
+        assert_eq!(got.len(), 3, "{got:?}");
+        assert!(got.iter().all(|f| f.message.contains("spill")), "{got:?}");
+    }
+
+    #[test]
+    fn fault_site_sync_clean_when_synced() {
+        let faults = FAULTS_DRIFTED.replace(
+            "            _ => return None,",
+            "            \"spill\" => FaultSite::Spill,\n            _ => return None,",
+        );
+        let consumer =
+            "fn f() { fire(FaultSite::Prepare); g(FaultSite::Spill); }\n".to_string();
+        let c = ctx_with_protocol(
+            &[
+                ("rust/src/coordinator/faults.rs", faults.as_str()),
+                ("rust/src/coordinator/store.rs", consumer.as_str()),
+            ],
+            "<!-- gfi-analyze: fault-sites = prepare spill -->\n",
+        );
+        let got = run_rule("fault-site-sync", &c);
+        assert!(got.is_empty(), "{got:?}");
+    }
+
+    // -- counter-sync -------------------------------------------------------
+
+    #[test]
+    fn counter_sync_clean_when_emitted_and_documented() {
+        let proto = "stats returns `spills` and `sheds` counters.\n";
+        let c = ctx_with_protocol(
+            &[
+                ("rust/src/coordinator/server.rs", SERVER_OK),
+                ("rust/src/coordinator/store.rs", STORE_OK),
+                ("rust/src/coordinator/mod.rs", MOD_OK),
+            ],
+            proto,
+        );
+        assert!(run_rule("counter-sync", &c).is_empty());
+    }
+
+    #[test]
+    fn counter_sync_fires_on_unemitted_and_undocumented_fields() {
+        let store = "pub struct StoreStats {\n    pub spills: u64,\n    pub ghosts: u64,\n}\n";
+        let proto = "stats returns `spills` and `sheds`.\n";
+        let c = ctx_with_protocol(
+            &[
+                ("rust/src/coordinator/server.rs", SERVER_OK),
+                ("rust/src/coordinator/store.rs", store),
+                ("rust/src/coordinator/mod.rs", MOD_OK),
+            ],
+            proto,
+        );
+        let got = run_rule("counter-sync", &c);
+        assert_eq!(got.len(), 2, "unemitted + undocumented: {got:?}");
+        assert!(got.iter().all(|f| f.message.contains("ghosts")));
+    }
+}

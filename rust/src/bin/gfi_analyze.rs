@@ -1,0 +1,14 @@
+//! `gfi-analyze` — standalone bin for the in-tree invariant analyzer
+//! (`gfi::analysis`). Same engine as `repro analyze`; this entry point
+//! exists so CI can gate on it without going through the main CLI:
+//!
+//! ```text
+//! cargo run --release --bin gfi-analyze [-- --root DIR | --list-rules]
+//! ```
+//!
+//! Exit codes: 0 clean, 1 findings, 2 scan/suppression error.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(gfi::analysis::cli_main(&args));
+}

@@ -48,9 +48,13 @@ impl Metrics {
         Metrics { inner: Mutex::new(HashMap::new()) }
     }
 
-    /// Records one request.
+    /// Records one request. Recovers from mutex poisoning rather than
+    /// propagating it: every mutation under this lock is a plain
+    /// counter/reservoir update with no panicking code between the
+    /// field writes, so the map stays consistent across a caught panic
+    /// — and metrics must never be the thing that bricks serving.
     pub fn record(&self, backend: &str, latency_secs: f64, nodes: usize) {
-        let mut map = self.inner.lock().unwrap();
+        let mut map = self.inner.lock().unwrap_or_else(|p| p.into_inner());
         let e = map.entry(backend.to_string()).or_insert_with(|| Entry {
             reservoir: Reservoir::new(1024),
             count: 0,
@@ -61,9 +65,11 @@ impl Metrics {
         e.nodes += nodes;
     }
 
-    /// Snapshot of all backends.
+    /// Snapshot of all backends. Poison-recovering like [`Metrics::record`]:
+    /// a `stats` op observing a poisoned metrics mutex should report
+    /// the (consistent) counters, not fail the request forever after.
     pub fn snapshot(&self) -> HashMap<String, BackendStats> {
-        let map = self.inner.lock().unwrap();
+        let map = self.inner.lock().unwrap_or_else(|p| p.into_inner());
         map.iter()
             .map(|(k, e)| {
                 (
@@ -167,6 +173,26 @@ mod tests {
         assert_eq!(j.get("evictions").unwrap().as_usize(), Some(1));
         let parsed = crate::util::json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("weight_bytes").unwrap().as_usize(), Some(120));
+    }
+
+    // Mirrors the cache-layer poison test: a panic while holding the
+    // registry mutex must not take metrics down for every later request.
+    #[test]
+    fn poisoned_registry_recovers_mid_hold() {
+        let m = Metrics::new();
+        m.record("sf", 0.001, 32);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = m.inner.lock().unwrap_or_else(|p| p.into_inner());
+            panic!("boom while holding the metrics mutex");
+        }));
+        assert!(caught.is_err());
+        assert!(m.inner.lock().is_err(), "mutex should be poisoned for the test");
+        // Both paths still work, on the consistent pre-panic data.
+        m.record("sf", 0.003, 32);
+        let snap = m.snapshot();
+        let s = &snap["sf"];
+        assert_eq!(s.count, 2);
+        assert_eq!(s.nodes_processed, 64);
     }
 
     #[test]

@@ -385,6 +385,10 @@ pub(crate) fn eval_kernel_inplace(kern: Kern, f: &KernelFn, row: &mut [f64]) {
 /// `1.0 / (1.0 + l * x)` bit-for-bit; non-finite inputs (`+∞`
 /// unreachable markers, NaN) compare false under `_CMP_LT_OQ` and are
 /// masked to `+0.0`, exactly like the scalar `is_finite` branch.
+///
+/// # Safety
+/// Caller must have runtime-detected AVX2; all loads/stores stay inside
+/// `row` (vector head guarded by `i + 4 <= n`, scalar tail after).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn rational_row_avx2(l: f64, row: &mut [f64]) {

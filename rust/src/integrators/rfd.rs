@@ -603,6 +603,8 @@ fn fill_features(
             let arow = unsafe {
                 std::slice::from_raw_parts_mut(acells.get(i * 2 * m) as *mut f64, 2 * m)
             };
+            // SAFETY: same row-disjointness argument as `arow`, on the
+            // B factor's cells.
             let brow = unsafe {
                 std::slice::from_raw_parts_mut(bcells.get(i * 2 * m) as *mut f64, 2 * m)
             };
@@ -631,6 +633,9 @@ fn fill_row(
     if kern == Kern::Avx2 {
         let mut phases = [0.0f64; 4];
         while j + 4 <= m {
+            // SAFETY: `Kern::Avx2` implies AVX2 was runtime-detected,
+            // and the loop guard keeps `j + 4 <= m`, so all four ω
+            // loads are in bounds.
             unsafe { phases_avx2(p, omegas, j, &mut phases) };
             for (lane, &phase) in phases.iter().enumerate() {
                 write_feature(phase, q[j + lane], m, j + lane, arow, brow);

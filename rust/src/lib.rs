@@ -19,6 +19,7 @@
 // `RUSTDOCFLAGS="-D warnings" cargo doc` step in the CI lint job.
 #![warn(missing_docs)]
 
+pub mod analysis;
 pub mod classify;
 pub mod coordinator;
 pub mod datasets;

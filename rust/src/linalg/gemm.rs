@@ -361,6 +361,11 @@ fn microkernel_dispatch(kern: Kern, kc: usize, pa: &[f64], pb: &[f64]) -> [[f64;
 /// NR = 8 columns. Multiplies and adds stay separate (`_mm256_mul_pd` +
 /// `_mm256_add_pd`, deliberately not `_mm256_fmadd_pd`) so each lane's
 /// rounding matches the scalar oracle exactly.
+///
+/// # Safety
+/// Caller must have runtime-detected AVX2 and pass packed panels with
+/// `pa.len() >= kc * MR` and `pb.len() >= kc * NR` (the unchecked
+/// pointer loads walk exactly that far).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn microkernel_avx2(kc: usize, pa: &[f64], pb: &[f64]) -> [[f64; NR]; MR] {
@@ -389,6 +394,11 @@ unsafe fn microkernel_avx2(kc: usize, pa: &[f64], pb: &[f64]) -> [[f64; NR]; MR]
 /// NEON register tile: per row `r`, four `float64x2_t` accumulators cover
 /// the NR = 8 columns; `vmulq_f64` + `vaddq_f64` (not `vfmaq_f64`) keeps
 /// per-lane rounding identical to the scalar oracle.
+///
+/// # Safety
+/// Caller must be on a NEON-capable target and pass packed panels with
+/// `pa.len() >= kc * MR` and `pb.len() >= kc * NR` (the unchecked
+/// pointer loads walk exactly that far).
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn microkernel_neon(kc: usize, pa: &[f64], pb: &[f64]) -> [[f64; NR]; MR] {

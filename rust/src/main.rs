@@ -11,6 +11,7 @@
 //! repro reproduce <experiment-id|all> [--quick]
 //! repro list
 //! repro selfcheck [--artifacts artifacts]
+//! repro analyze [--root DIR] [--list-rules]
 //! ```
 //!
 //! `--max-resident-mb` bounds the prepared-integrator cache (LRU
@@ -69,7 +70,14 @@ fn dispatch(args: &[String]) -> Result<()> {
             Ok(())
         }
         Some("selfcheck") => selfcheck(args),
-        Some(other) => bail!("unknown command '{other}' (serve | reproduce | list | selfcheck)"),
+        // The in-tree invariant analyzer (docs/ARCHITECTURE.md, "Static
+        // analysis"). Exits directly: its exit code (0 clean, 1 findings,
+        // 2 errors) is the CI contract and must not be flattened into
+        // the generic error path.
+        Some("analyze") => std::process::exit(gfi::analysis::cli_main(&args[1..])),
+        Some(other) => {
+            bail!("unknown command '{other}' (serve | reproduce | list | selfcheck | analyze)")
+        }
         None => {
             println!(
                 "gfi {} — Efficient Graph Field Integrators Meet Point Clouds",

@@ -77,7 +77,12 @@ pub struct SendCells<'a, T> {
     _marker: std::marker::PhantomData<&'a mut [T]>,
 }
 
+// SAFETY: the only `&self` accessor is `get`, whose own contract makes
+// concurrent callers touch disjoint indices; with `T: Send` each cell
+// may then be mutated from whichever thread claimed it.
 unsafe impl<T: Send> Sync for SendCells<'_, T> {}
+// SAFETY: the wrapper holds only a raw pointer derived from a `T: Send`
+// slice (no thread-affine state), so the handle itself may move.
 unsafe impl<T: Send> Send for SendCells<'_, T> {}
 
 impl<T> SendCells<'_, T> {

@@ -1,0 +1,54 @@
+//! Tier-1 self-scan: run the in-tree invariant analyzer
+//! (`rust/src/analysis/`, surfaced as `gfi-analyze`) over this repo's
+//! own tree and require a spotless report — zero findings AND zero
+//! suppressions. The zero-suppression bar is deliberate: the moment a
+//! rule needs a permanent carve-out, it belongs in the rule itself
+//! (like the `util/simd.rs` global-state allowlist), not in an
+//! ever-growing pile of inline waivers.
+
+use gfi::analysis;
+use std::path::Path;
+
+fn scan() -> analysis::Report {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let ctx = analysis::scan_repo(root).expect("scan repo tree");
+    analysis::run(&ctx).expect("suppression directives must be well-formed")
+}
+
+#[test]
+fn repo_tree_has_zero_findings() {
+    let report = scan();
+    let dump: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
+    assert!(
+        report.findings.is_empty(),
+        "gfi-analyze found {} violation(s):\n{}",
+        report.findings.len(),
+        dump.join("\n")
+    );
+}
+
+#[test]
+fn repo_tree_has_zero_suppressions() {
+    let report = scan();
+    let waived: Vec<String> = report.suppressed.iter().map(|f| f.to_string()).collect();
+    assert!(
+        report.suppressed.is_empty(),
+        "inline `gfi-analyze: allow(..)` waivers are banned in-tree \
+         (encode permanent exceptions in the rule itself):\n{}",
+        waived.join("\n")
+    );
+}
+
+#[test]
+fn scan_covers_the_whole_tree() {
+    let report = scan();
+    assert_eq!(report.rules_run, analysis::registry().len());
+    assert_eq!(report.rules_run, 8, "rule registry drifted from the documented set");
+    // Sanity floor: the tree has far more than 40 .rs files; a tiny
+    // count means the walker silently lost a scan root.
+    assert!(
+        report.files_scanned >= 40,
+        "only {} files scanned — scan roots broken?",
+        report.files_scanned
+    );
+}
