@@ -9,7 +9,12 @@
 //! refresh vs dropping the artifacts and paying a full re-prepare), and
 //! the persistent-store warm restart (`engine/cold_start_cold_dir` —
 //! fresh engine, empty disk — vs `engine/cold_start_warm_dir` — fresh
-//! engine, disk tier pre-populated by a previous engine's spills).
+//! engine, disk tier pre-populated by a previous engine's spills), and
+//! the serving tier over real sockets (`serve/throughput-threaded` —
+//! thread-per-connection JSON roundtrips — vs `serve/throughput-evented`
+//! — pipelined binary frames into the event loop — plus
+//! `serve/p99-evented`, the per-request tail latency under the same
+//! 64-client pipelined load).
 //!
 //! Writes `BENCH_coordinator.json` so CI's perf trajectory tracks the
 //! serving path alongside `BENCH_integrators.json`.
@@ -313,5 +318,368 @@ fn main() {
         let _ = std::fs::remove_dir_all(&warm_dir);
     }
 
+    serve_benches(&bench, &mut results);
+
     write_json("BENCH_coordinator.json", &results).expect("write BENCH_coordinator.json");
 }
+
+/// Serving-tier benches (ISSUE 10): 64 concurrent clients, each issuing
+/// 32 same-shaped `integrate` requests against a tiny (n=12) cloud, so
+/// the measurement is transport-bound rather than compute-bound.
+///
+/// * `serve/throughput-threaded` — classic request-response over the
+///   blocking thread-per-connection JSON server: every request pays a
+///   write syscall, a cross-thread wakeup ping-pong, and a read syscall
+///   before the client may send the next one.
+/// * `serve/throughput-evented` — the same 2048 requests as pipelined
+///   binary frames: each client writes its whole burst in one `write`
+///   and drains responses in bulk. Measured with the micro-batching
+///   window off (`batch_window_us: 0`) so the case isolates the
+///   transport; coalescing correctness and counters are proven by
+///   `tests/serving.rs`. The in-bench assert holds the evented burst to
+///   >=4x the threaded throughput at equal `max_connections`.
+/// * `serve/throughput-evented-batched` — same burst through a 200us
+///   batching window (reported, not gated: the window trades a little
+///   burst throughput for cross-connection coalescing).
+/// * `serve/p99-evented` — per-request latency (burst write start ->
+///   response frame arrival) across three instrumented bursts; the
+///   `median` slot of this hand-built result carries the p99 so it lands
+///   in `BENCH_coordinator.json` alongside the medians.
+#[cfg(unix)]
+fn serve_benches(bench: &Bench, results: &mut Vec<BenchResult>) {
+    use gfi::coordinator::evented::serve_evented_with;
+    use gfi::coordinator::frame::{self, opcode};
+    use gfi::coordinator::server::{serve_with, ServerConfig};
+    use gfi::util::json::{parse, Json};
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    const CLIENTS: usize = 64;
+    const REQS: usize = 32;
+    const TOTAL: usize = CLIENTS * REQS;
+
+    let make_engine = || {
+        let e = Arc::new(Engine::new(None));
+        let mut m = gfi::mesh::icosphere(0); // 12 vertices
+        m.normalize_unit_box();
+        let id = e.register_mesh(m, "serve");
+        (e, id)
+    };
+    let (engine_t, cid_t) = make_engine();
+    let (engine_e, cid_e) = make_engine();
+    assert_eq!(cid_t, cid_e, "fresh engines assign the same first cloud id");
+    let cid = cid_t;
+
+    let spawn_threaded = |engine: Arc<Engine>, cfg: ServerConfig| {
+        let (tx, rx) = mpsc::channel();
+        let h = std::thread::spawn(move || {
+            serve_with(engine, "127.0.0.1:0", cfg, move |a| tx.send(a).unwrap()).unwrap();
+        });
+        (rx.recv().unwrap(), h)
+    };
+    let spawn_evented = |engine: Arc<Engine>, cfg: ServerConfig| {
+        let (tx, rx) = mpsc::channel();
+        let h = std::thread::spawn(move || {
+            serve_evented_with(engine, "127.0.0.1:0", cfg, move |a| tx.send(a).unwrap())
+                .unwrap();
+        });
+        (rx.recv().unwrap(), h)
+    };
+    let (addr_t, join_t) = spawn_threaded(
+        engine_t.clone(),
+        ServerConfig { max_connections: CLIENTS, ..Default::default() },
+    );
+    let (addr_e, join_e) = spawn_evented(
+        engine_e.clone(),
+        ServerConfig {
+            max_connections: CLIENTS,
+            batch_window_us: 0,
+            ..Default::default()
+        },
+    );
+    let (addr_b, join_b) = spawn_evented(
+        engine_e.clone(),
+        ServerConfig {
+            max_connections: CLIENTS,
+            batch_window_us: 200,
+            ..Default::default()
+        },
+    );
+
+    // One integrate payload per client: same (cloud, spec), distinct
+    // field values — exactly the shape the batcher coalesces.
+    let payloads: Vec<String> = (0..CLIENTS)
+        .map(|i| {
+            let mut rng = Rng::new(500 + i as u64);
+            let field: Vec<String> =
+                (0..12).map(|_| format!("{}", rng.gaussian())).collect();
+            format!(
+                r#"{{"cloud":{cid},"backend":"rfd","field":[{}],"d":1,"m":8,"seed":3}}"#,
+                field.join(",")
+            )
+        })
+        .collect();
+    // Line-JSON form for the threaded server ...
+    let lines: Vec<Vec<u8>> = payloads
+        .iter()
+        .map(|p| format!("{{\"op\":\"integrate\",{}\n", &p[1..]).into_bytes())
+        .collect();
+    // ... and the whole pipelined burst as one precomputed byte blob for
+    // the evented server.
+    let blobs: Vec<Vec<u8>> = payloads
+        .iter()
+        .map(|p| {
+            let mut b = Vec::new();
+            for j in 0..REQS {
+                b.extend_from_slice(&frame::encode(
+                    opcode::INTEGRATE,
+                    j as u64 + 1,
+                    p.as_bytes(),
+                ));
+            }
+            b
+        })
+        .collect();
+
+    let has = |hay: &[u8], needle: &[u8]| hay.windows(needle.len()).any(|w| w == needle);
+    let json_roundtrip = |c: &mut TcpStream, line: &[u8]| -> Json {
+        c.write_all(line).unwrap();
+        let mut buf = Vec::new();
+        let mut chunk = [0u8; 4096];
+        loop {
+            let n = c.read(&mut chunk).unwrap();
+            assert!(n > 0, "server closed before replying");
+            buf.extend_from_slice(&chunk[..n]);
+            if buf.last() == Some(&b'\n') {
+                break;
+            }
+        }
+        parse(std::str::from_utf8(&buf).unwrap().trim()).unwrap()
+    };
+    let bin_roundtrip = |c: &mut TcpStream, op: u8, id: u64, payload: &str| -> Json {
+        c.write_all(&frame::encode(op, id, payload.as_bytes())).unwrap();
+        let mut buf = Vec::new();
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            if let Some((f, _)) = frame::decode(&buf).expect("well-formed response") {
+                assert_eq!((f.op, f.id), (op, id));
+                return parse(&String::from_utf8(f.payload).unwrap()).unwrap();
+            }
+            let n = c.read(&mut chunk).unwrap();
+            assert!(n > 0, "server closed before replying");
+            buf.extend_from_slice(&chunk[..n]);
+        }
+    };
+
+    // Bitwise probe across transports, on short-lived connections BEFORE
+    // the persistent fleet saturates max_connections: the same request
+    // through blocking-JSON and through evented-binary must parse to
+    // bit-identical result arrays (distinct engines, so nothing is
+    // shared but the computation).
+    {
+        let mut rng = Rng::new(999);
+        let field: Vec<String> = (0..12).map(|_| format!("{}", rng.gaussian())).collect();
+        let probe = format!(
+            r#"{{"cloud":{cid},"backend":"rfd","field":[{}],"d":1,"m":8,"seed":3}}"#,
+            field.join(",")
+        );
+        let mut ct = TcpStream::connect(addr_t).unwrap();
+        let rt = json_roundtrip(
+            &mut ct,
+            format!("{{\"op\":\"integrate\",{}\n", &probe[1..]).as_bytes(),
+        );
+        let mut ce = TcpStream::connect(addr_e).unwrap();
+        let re = bin_roundtrip(&mut ce, opcode::INTEGRATE, 7, &probe);
+        let a = rt.get("result").and_then(Json::as_f64_vec).unwrap();
+        let b = re.get("result").and_then(Json::as_f64_vec).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "evented binary result diverged from the blocking JSON server"
+            );
+        }
+        println!("serve acceptance: cross-transport bitwise-identical probe passed");
+    }
+    // Let the probe handlers retire before filling the connection cap.
+    std::thread::sleep(std::time::Duration::from_millis(50));
+
+    let connect_fleet = |addr: std::net::SocketAddr| -> Vec<TcpStream> {
+        (0..CLIENTS)
+            .map(|_| {
+                let c = TcpStream::connect(addr).unwrap();
+                c.set_nodelay(true).unwrap();
+                c
+            })
+            .collect()
+    };
+
+    // One burst over the blocking server: every client runs its 32
+    // requests strictly request-response.
+    let threaded_burst = |conns: &mut [TcpStream], lines: &[Vec<u8>]| {
+        std::thread::scope(|s| {
+            for (i, c) in conns.iter_mut().enumerate() {
+                let line = &lines[i];
+                let has = &has;
+                s.spawn(move || {
+                    let mut buf = Vec::with_capacity(4096);
+                    let mut chunk = [0u8; 4096];
+                    for _ in 0..REQS {
+                        c.write_all(line).unwrap();
+                        buf.clear();
+                        loop {
+                            let n = c.read(&mut chunk).unwrap();
+                            assert!(n > 0, "threaded server closed mid-burst");
+                            buf.extend_from_slice(&chunk[..n]);
+                            if buf.last() == Some(&b'\n') {
+                                break;
+                            }
+                        }
+                        assert!(has(&buf, b"\"ok\":true"), "request failed mid-burst");
+                    }
+                });
+            }
+        });
+    };
+    // One burst over the evented server: every client writes its whole
+    // pipelined blob at once, then drains 32 in-order response frames.
+    // Returns per-response latencies when `record` is set (the p99 pass).
+    let evented_burst = |conns: &mut [TcpStream], blobs: &[Vec<u8>], record: bool| {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = conns
+                .iter_mut()
+                .enumerate()
+                .map(|(i, c)| {
+                    let blob = &blobs[i];
+                    let has = &has;
+                    s.spawn(move || {
+                        let start = Instant::now();
+                        c.write_all(blob).unwrap();
+                        let mut lat = Vec::new();
+                        let mut buf = Vec::with_capacity(16 * 1024);
+                        let mut chunk = [0u8; 16 * 1024];
+                        let mut got = 0usize;
+                        while got < REQS {
+                            let n = c.read(&mut chunk).unwrap();
+                            assert!(n > 0, "evented server closed mid-burst");
+                            buf.extend_from_slice(&chunk[..n]);
+                            while let Some((f, used)) =
+                                frame::decode(&buf).expect("well-formed response")
+                            {
+                                buf.drain(..used);
+                                got += 1;
+                                assert_eq!(f.id as usize, got, "responses out of order");
+                                assert!(
+                                    has(&f.payload, b"\"ok\":true"),
+                                    "request failed mid-burst"
+                                );
+                                if record {
+                                    lat.push(start.elapsed().as_secs_f64());
+                                }
+                            }
+                        }
+                        lat
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect::<Vec<f64>>()
+        })
+    };
+
+    // Threaded baseline.
+    let mut conns_t = connect_fleet(addr_t);
+    threaded_burst(&mut conns_t, &lines); // warm prepare + caches
+    let threaded = bench.run(&format!("serve/throughput-threaded/reqs={TOTAL}"), || {
+        threaded_burst(&mut conns_t, &lines)
+    });
+    drop(conns_t);
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let mut ct = TcpStream::connect(addr_t).unwrap();
+    json_roundtrip(&mut ct, b"{\"op\":\"shutdown\"}\n");
+    drop(ct);
+    join_t.join().unwrap();
+
+    // Evented, batching window off: pure event-loop pipelining.
+    let mut conns_e = connect_fleet(addr_e);
+    evented_burst(&mut conns_e, &blobs, false); // warm
+    let evented = bench.run(&format!("serve/throughput-evented/reqs={TOTAL}"), || {
+        evented_burst(&mut conns_e, &blobs, false)
+    });
+    // Tail latency under the same load, instrumented per response.
+    let mut lat: Vec<f64> = Vec::with_capacity(3 * TOTAL);
+    for _ in 0..3 {
+        lat.extend(evented_burst(&mut conns_e, &blobs, true));
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p99_idx = ((lat.len() * 99) / 100).min(lat.len() - 1);
+    let p99 = BenchResult {
+        name: format!("serve/p99-evented/reqs={TOTAL}"),
+        iters: lat.len(),
+        min: lat[0],
+        median: lat[p99_idx], // the p99 — this result reports tail, not center
+        max: *lat.last().unwrap(),
+        mean: lat.iter().sum::<f64>() / lat.len() as f64,
+    };
+    drop(conns_e);
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let mut ce = TcpStream::connect(addr_e).unwrap();
+    bin_roundtrip(&mut ce, opcode::SHUTDOWN, 1, "{}");
+    drop(ce);
+    join_e.join().unwrap();
+
+    // Evented with the 200us coalescing window, reported alongside.
+    let mut conns_b = connect_fleet(addr_b);
+    evented_burst(&mut conns_b, &blobs, false); // warm
+    let batched = bench.run(&format!("serve/throughput-evented-batched/reqs={TOTAL}"), || {
+        evented_burst(&mut conns_b, &blobs, false)
+    });
+    // The burst is same-(cloud, spec) across all 64 connections, so with
+    // >=2 batcher submitters the window must have coalesced something.
+    let stats = bin_roundtrip(&mut conns_b[0], opcode::STATS, 9001, "{}");
+    let b = stats.get("batcher").unwrap();
+    assert_eq!(b.get("enabled"), Some(&Json::Bool(true)));
+    let coalesced = b.get("coalesced_requests").unwrap().as_usize().unwrap();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    if cores >= 2 {
+        assert!(
+            coalesced >= 2,
+            "64 same-(cloud, spec) pipelined clients never coalesced \
+             (coalesced_requests = {coalesced})"
+        );
+    }
+    drop(conns_b);
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let mut cb = TcpStream::connect(addr_b).unwrap();
+    bin_roundtrip(&mut cb, opcode::SHUTDOWN, 2, "{}");
+    drop(cb);
+    join_b.join().unwrap();
+
+    let throughput = |r: &BenchResult| TOTAL as f64 / r.median;
+    println!(
+        "serve acceptance: threaded {:.0} req/s vs evented {:.0} req/s ({:.1}x), \
+         batched-window {:.0} req/s, p99 {:.2}ms, coalesced_requests {}",
+        throughput(&threaded),
+        throughput(&evented),
+        threaded.median / evented.median,
+        throughput(&batched),
+        p99.median * 1e3,
+        coalesced
+    );
+    assert!(
+        threaded.median >= 4.0 * evented.median,
+        "pipelined evented serving must sustain >=4x the thread-per-connection \
+         JSON throughput: threaded {:.2}ms vs evented {:.2}ms per {TOTAL}-request burst",
+        threaded.median * 1e3,
+        evented.median * 1e3
+    );
+    results.push(threaded);
+    results.push(evented);
+    results.push(batched);
+    results.push(p99);
+}
+
+#[cfg(not(unix))]
+fn serve_benches(_bench: &Bench, _results: &mut Vec<BenchResult>) {}

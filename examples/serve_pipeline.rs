@@ -27,6 +27,14 @@
 //! with every structure loaded from disk — zero structure rebuilds,
 //! bitwise-identical results.
 //!
+//! Phase 5 is an **evented-serving load generator** (unix only): 64
+//! concurrent clients sustained against ONE event-loop listener — half
+//! speaking pipelined binary frames eight deep, half the line-JSON
+//! compat protocol on the same port — all integrating the same
+//! `(cloud, spec)` so the cross-connection micro-batching window has
+//! real material. Reports sustained throughput, p50/p99 per-request
+//! latency, and the batcher's coalescing counters.
+//!
 //! ```sh
 //! make artifacts && cargo run --release --example serve_pipeline
 //! ```
@@ -177,6 +185,168 @@ fn main() -> gfi::util::error::Result<()> {
 
     restart_phase()?;
     println!("E2E pipeline + churn + chaos + warm restart OK");
+
+    loadgen_phase()?;
+    println!("E2E pipeline + churn + chaos + warm restart + evented loadgen OK");
+    Ok(())
+}
+
+/// Phase 5: the event-driven serving tier under sustained mixed load.
+/// 64 clients share one evented listener: even-numbered clients write
+/// pipelined binary bursts (8 frames per write, responses drained in
+/// request order), odd-numbered clients speak classic request-response
+/// line-JSON — the same port serves both, auto-detected from the first
+/// byte. Every request targets the same `(cloud, spec)`, so requests
+/// from different connections landing inside the 200us window coalesce
+/// into shared `integrate_batch` calls.
+#[cfg(unix)]
+fn loadgen_phase() -> gfi::util::error::Result<()> {
+    use gfi::coordinator::evented::serve_evented_with;
+    use gfi::coordinator::frame::{self, opcode};
+    use std::io::Read;
+
+    const LG_CLIENTS: usize = 64;
+    const LG_ROUNDS: usize = 8; // bursts per client
+    const LG_PIPELINE: usize = 8; // pipelined requests per binary burst
+
+    let engine =
+        Arc::new(EngineConfig::default().fault_plan(FaultPlan::default()).build());
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let eng_server = engine.clone();
+    let server_thread = std::thread::spawn(move || {
+        serve_evented_with(
+            eng_server,
+            "127.0.0.1:0",
+            server::ServerConfig {
+                max_connections: LG_CLIENTS + 2,
+                batch_window_us: 200,
+                ..Default::default()
+            },
+            move |a| addr_tx.send(a).unwrap(),
+        )
+    });
+    let addr = addr_rx.recv()?;
+    println!("\n[loadgen] evented coordinator listening on {addr}");
+
+    // Register over the compat protocol — same listener, JSON mode.
+    let mut ctl = Client::connect(addr)?;
+    let reg =
+        ctl.send(r#"{"op":"register_mesh","kind":"icosphere","param":2,"name":"load"}"#)?;
+    let cloud = reg.get("id").unwrap().as_usize().unwrap();
+    let n = reg.get("n").unwrap().as_usize().unwrap();
+
+    let t0 = Instant::now();
+    let latencies: Vec<Vec<f64>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..LG_CLIENTS)
+            .map(|cid| {
+                s.spawn(move || {
+                    let mut rng = Rng::new(cid as u64 + 3000);
+                    let mut lat = Vec::new();
+                    let payload_for = |rng: &mut Rng| {
+                        let field: Vec<String> =
+                            (0..n).map(|_| format!("{}", rng.gaussian())).collect();
+                        format!(
+                            r#"{{"cloud":{cloud},"backend":"rfd","field":[{}],"d":1,"m":16}}"#,
+                            field.join(",")
+                        )
+                    };
+                    if cid % 2 == 0 {
+                        // Pipelined binary frames, LG_PIPELINE deep.
+                        let mut stream = TcpStream::connect(addr).expect("connect");
+                        let mut buf: Vec<u8> = Vec::new();
+                        let mut chunk = [0u8; 16 * 1024];
+                        for round in 0..LG_ROUNDS {
+                            let mut burst = Vec::new();
+                            for k in 0..LG_PIPELINE {
+                                burst.extend_from_slice(&frame::encode(
+                                    opcode::INTEGRATE,
+                                    (round * LG_PIPELINE + k) as u64 + 1,
+                                    payload_for(&mut rng).as_bytes(),
+                                ));
+                            }
+                            let t = Instant::now();
+                            stream.write_all(&burst).expect("write burst");
+                            let mut got = 0usize;
+                            while got < LG_PIPELINE {
+                                let r = stream.read(&mut chunk).expect("read");
+                                assert!(r > 0, "server closed mid-burst");
+                                buf.extend_from_slice(&chunk[..r]);
+                                while let Some((f, used)) =
+                                    frame::decode(&buf).expect("well-formed frame")
+                                {
+                                    buf.drain(..used);
+                                    assert_eq!(
+                                        f.id as usize,
+                                        round * LG_PIPELINE + got + 1,
+                                        "responses out of request order"
+                                    );
+                                    let ok = b"\"ok\":true";
+                                    assert!(
+                                        f.payload.windows(ok.len()).any(|w| w == ok),
+                                        "request failed under load"
+                                    );
+                                    lat.push(t.elapsed().as_secs_f64());
+                                    got += 1;
+                                }
+                            }
+                        }
+                    } else {
+                        // Line-JSON compat: classic request-response.
+                        let mut client = Client::connect(addr).expect("connect");
+                        for _ in 0..LG_ROUNDS * LG_PIPELINE {
+                            let req = format!(
+                                "{{\"op\":\"integrate\",{}",
+                                &payload_for(&mut rng)[1..]
+                            );
+                            let t = Instant::now();
+                            let resp = client.send(&req).expect("integrate");
+                            lat.push(t.elapsed().as_secs_f64());
+                            assert_eq!(
+                                resp.get("ok").and_then(|j| j.as_bool()),
+                                Some(true),
+                                "{resp}"
+                            );
+                            assert_eq!(
+                                resp.get("result").unwrap().as_arr().unwrap().len(),
+                                n
+                            );
+                        }
+                    }
+                    lat
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    let all: Vec<f64> = latencies.into_iter().flatten().collect();
+    println!(
+        "[loadgen] {} requests ({} binary-pipelined + {} compat-JSON clients) in \
+         {elapsed:.2}s → {:.0} req/s; p50={:.2}ms p99={:.2}ms",
+        all.len(),
+        LG_CLIENTS / 2,
+        LG_CLIENTS - LG_CLIENTS / 2,
+        all.len() as f64 / elapsed,
+        stats::percentile(&all, 50.0) * 1e3,
+        stats::percentile(&all, 99.0) * 1e3,
+    );
+
+    let sresp = ctl.send(r#"{"op":"stats"}"#)?;
+    let b = sresp.get("batcher").unwrap();
+    let formed = b.get("batches_formed").unwrap().as_usize().unwrap();
+    let coalesced = b.get("coalesced_requests").unwrap().as_usize().unwrap();
+    println!(
+        "[loadgen] batcher: {formed} merged batches, {coalesced} requests coalesced \
+         across connections"
+    );
+    ctl.send(r#"{"op":"shutdown"}"#)?;
+    server_thread.join().unwrap()?;
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn loadgen_phase() -> gfi::util::error::Result<()> {
+    println!("\n[loadgen] skipped: the evented server is unix-only");
     Ok(())
 }
 

@@ -104,8 +104,13 @@ pub fn registry() -> Vec<Rule> {
         },
         Rule {
             id: "counter-sync",
-            summary: "StoreStats/RobustnessStats fields appear in JSON emitters and docs",
+            summary: "StoreStats/RobustnessStats/BatcherStats fields appear in JSON emitters and docs",
             check: rules_sync::check_counter_sync,
+        },
+        Rule {
+            id: "binary-op-sync",
+            summary: "binary op codes == frame.rs dispatch == docs marker == JSON ops",
+            check: rules_sync::check_binary_op_sync,
         },
     ]
 }

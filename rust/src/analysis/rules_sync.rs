@@ -1,5 +1,5 @@
 //! Cross-file synchronization rules: `protocol-sync`,
-//! `fault-site-sync`, `counter-sync`.
+//! `fault-site-sync`, `counter-sync`, `binary-op-sync`.
 //!
 //! These rules keep three sets of names that drift independently —
 //! wire op strings, fault-site names, and robustness/store counter
@@ -305,19 +305,235 @@ fn protocol_fault_marker(md: &str) -> Option<(BTreeSet<String>, u32)> {
 }
 
 // ---------------------------------------------------------------------------
+// binary-op-sync
+// ---------------------------------------------------------------------------
+
+/// Binary op-code table, three ways: the `mod opcode` constants and the
+/// `op_name` dispatch in `coordinator/frame.rs` must equal the
+/// machine-checked `gfi-analyze: binary-ops = name=code ...` marker in
+/// PROTOCOL.md (both directions), and every binary op name must be an
+/// op that `handle_line`'s JSON `match op` actually handles — and vice
+/// versa, so neither transport silently gains ops the other lacks.
+pub(crate) fn check_binary_op_sync(ctx: &RepoContext, out: &mut Vec<Finding>) {
+    let rule = "binary-op-sync";
+    let Some(frame) = ctx.file_ending("coordinator/frame.rs") else {
+        anchor_missing(out, rule, "rust/src/coordinator/frame.rs", "file not scanned");
+        return;
+    };
+    let Some(consts) = opcode_consts(frame) else {
+        anchor_missing(out, rule, &frame.rel_path, "`mod opcode {` const table");
+        return;
+    };
+    let Some(names) = op_name_arms(frame) else {
+        anchor_missing(out, rule, &frame.rel_path, "`opcode::X => Some(\"op\")` arms in op_name");
+        return;
+    };
+
+    // variant → (wire name, code) joined over the two anchors.
+    let mut code_pairs: Vec<(String, String, u32)> = Vec::new(); // (name, code, line)
+    for (variant, wire, line) in &names {
+        match consts.iter().find(|(v, _, _)| v == variant) {
+            Some((_, code, _)) => code_pairs.push((wire.clone(), code.clone(), *line)),
+            None => out.push(Finding {
+                file: frame.rel_path.clone(),
+                line: *line,
+                rule,
+                message: format!(
+                    "op_name maps opcode::{variant} to \"{wire}\" but mod opcode \
+                     defines no such constant"
+                ),
+            }),
+        }
+    }
+    for (variant, _, line) in &consts {
+        if !names.iter().any(|(v, _, _)| v == variant) {
+            out.push(Finding {
+                file: frame.rel_path.clone(),
+                line: *line,
+                rule,
+                message: format!(
+                    "opcode::{variant} is defined but op_name has no dispatch arm \
+                     for it — the op code is dead on the wire"
+                ),
+            });
+        }
+    }
+
+    // PROTOCOL.md marker, both directions, including code values.
+    match protocol_binary_marker(&ctx.protocol_md) {
+        None => anchor_missing(
+            out,
+            rule,
+            PROTOCOL_PATH,
+            "`gfi-analyze: binary-ops = name=code ...` marker",
+        ),
+        Some((doc_pairs, marker_line)) => {
+            let doc_set: BTreeSet<String> =
+                doc_pairs.iter().map(|(n, c)| format!("{n}={c}")).collect();
+            let code_set: BTreeSet<String> =
+                code_pairs.iter().map(|(n, c, _)| format!("{n}={c}")).collect();
+            for (name, code, line) in &code_pairs {
+                if !doc_set.contains(&format!("{name}={code}")) {
+                    out.push(Finding {
+                        file: frame.rel_path.clone(),
+                        line: *line,
+                        rule,
+                        message: format!(
+                            "binary op {name}={code} is not in docs/PROTOCOL.md's \
+                             binary-ops marker"
+                        ),
+                    });
+                }
+            }
+            for (name, code) in &doc_pairs {
+                if !code_set.contains(&format!("{name}={code}")) {
+                    out.push(Finding {
+                        file: PROTOCOL_PATH.to_string(),
+                        line: marker_line,
+                        rule,
+                        message: format!(
+                            "binary-ops marker lists {name}={code} which \
+                             frame.rs does not define"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // Transport parity with the JSON dispatch.
+    let Some(server) = ctx.file_ending("coordinator/server.rs") else {
+        anchor_missing(out, rule, "rust/src/coordinator/server.rs", "file not scanned");
+        return;
+    };
+    let Some(server_ops) = server_op_arms(server) else {
+        anchor_missing(out, rule, &server.rel_path, "`match op {` in handle_line");
+        return;
+    };
+    let srv_set: BTreeSet<&str> = server_ops.iter().map(|(s, _)| s.as_str()).collect();
+    let bin_set: BTreeSet<&str> = code_pairs.iter().map(|(n, _, _)| n.as_str()).collect();
+    for (name, _, line) in &code_pairs {
+        if !srv_set.contains(name.as_str()) {
+            out.push(Finding {
+                file: frame.rel_path.clone(),
+                line: *line,
+                rule,
+                message: format!(
+                    "binary op \"{name}\" has no matching arm in handle_line's \
+                     JSON `match op` — the transports drifted"
+                ),
+            });
+        }
+    }
+    for (op, line) in &server_ops {
+        if !bin_set.contains(op.as_str()) {
+            out.push(Finding {
+                file: server.rel_path.clone(),
+                line: *line,
+                rule,
+                message: format!(
+                    "JSON op \"{op}\" has no binary op code in frame.rs — \
+                     the transports drifted"
+                ),
+            });
+        }
+    }
+}
+
+/// `(VARIANT, code, line)` triples from `pub const VARIANT: u8 = code;`
+/// inside `mod opcode { .. }`.
+fn opcode_consts(f: &SourceFile) -> Option<Vec<(String, String, u32)>> {
+    let at = find_seq(&f.toks, 0, &["mod", "opcode", "{"])?;
+    let open = at + 2;
+    let close = matching_brace(&f.toks, open)?;
+    let body = &f.toks[open + 1..close];
+    let mut consts = Vec::new();
+    let mut i = 0;
+    while let Some(at) = find_seq(body, i, &["const"]) {
+        i = at + 1;
+        let Some(name) = body.get(at + 1).filter(|t| t.kind == TokKind::Ident) else {
+            continue;
+        };
+        // The value is the first numeric token before the terminating
+        // `;` — `pub const X: u8 = 7;`.
+        let val = body[at + 2..]
+            .iter()
+            .take_while(|t| !(t.kind == TokKind::Punct && t.text == ";"))
+            .find(|t| t.kind == TokKind::Num);
+        if let Some(v) = val {
+            consts.push((name.text.clone(), v.text.clone(), name.line));
+        }
+    }
+    if consts.is_empty() {
+        None
+    } else {
+        Some(consts)
+    }
+}
+
+/// `(VARIANT, wire_name, line)` triples from `opcode::VARIANT =>
+/// Some("wire_name")` arms in `fn op_name`.
+fn op_name_arms(f: &SourceFile) -> Option<Vec<(String, String, u32)>> {
+    let body = fn_body(&f.toks, "op_name")?;
+    let mut arms = Vec::new();
+    let mut i = 0;
+    while let Some(at) = find_seq(body, i, &["opcode", ":", ":"]) {
+        i = at + 3;
+        let Some(var) = body.get(at + 3).filter(|t| t.kind == TokKind::Ident) else {
+            continue;
+        };
+        let wire = body[at + 3..]
+            .iter()
+            .find(|t| t.kind == TokKind::Str)
+            .map(|t| t.text.clone());
+        if let Some(w) = wire {
+            arms.push((var.text.clone(), w, var.line));
+        }
+    }
+    if arms.is_empty() {
+        None
+    } else {
+        Some(arms)
+    }
+}
+
+/// The `binary-ops = name=code ...` marker in PROTOCOL.md, with its
+/// line. Entries without a `=code` part are ignored (malformed entries
+/// then surface as a both-direction mismatch).
+fn protocol_binary_marker(md: &str) -> Option<(Vec<(String, String)>, u32)> {
+    for (i, line) in md.lines().enumerate() {
+        if let Some(pos) = line.find("gfi-analyze: binary-ops") {
+            let rest = &line[pos..];
+            let eq = rest.find('=')?;
+            let list = rest[eq + 1..].trim_end_matches("-->").trim();
+            let pairs = list
+                .split_whitespace()
+                .filter_map(|entry| {
+                    let (n, c) = entry.split_once('=')?;
+                    Some((n.to_string(), c.to_string()))
+                })
+                .collect();
+            return Some((pairs, i as u32 + 1));
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
 // counter-sync
 // ---------------------------------------------------------------------------
 
-/// Every public counter field of `StoreStats` and `RobustnessStats`
-/// must appear (a) as a string literal in its server JSON emitter
-/// (`store_json` / `robustness_json`) and (b) somewhere in PROTOCOL.md
-/// — so a counter added to the struct can't silently stay invisible to
-/// operators or undocumented.
+/// Every public counter field of `StoreStats`, `RobustnessStats`, and
+/// `BatcherStats` must appear (a) as a string literal in its server
+/// JSON emitter (`store_json` / `robustness_json` / `batcher_json`) and
+/// (b) somewhere in PROTOCOL.md — so a counter added to the struct
+/// can't silently stay invisible to operators or undocumented.
 pub(crate) fn check_counter_sync(ctx: &RepoContext, out: &mut Vec<Finding>) {
     let rule = "counter-sync";
-    let specs: [(&str, &str, &str); 2] = [
+    let specs: [(&str, &str, &str); 3] = [
         ("StoreStats", "coordinator/store.rs", "store_json"),
         ("RobustnessStats", "coordinator/mod.rs", "robustness_json"),
+        ("BatcherStats", "coordinator/batcher.rs", "batcher_json"),
     ];
     let Some(server) = ctx.file_ending("coordinator/server.rs") else {
         anchor_missing(out, rule, "rust/src/coordinator/server.rs", "file not scanned");
@@ -382,10 +598,13 @@ fn handle_line(op: &str) {
 }
 fn store_json(s: &StoreStats) { emit("spills", s.spills); }
 fn robustness_json(r: &RobustnessStats) { emit("sheds", r.sheds); }
+fn batcher_json(b: &BatcherStats) { emit("batches_formed", b.batches_formed); }
 "#;
 
     const STORE_OK: &str = "pub struct StoreStats {\n    pub spills: u64,\n}\n";
     const MOD_OK: &str = "pub struct RobustnessStats {\n    pub sheds: u64,\n}\n";
+    const BATCHER_OK: &str =
+        "pub struct BatcherStats {\n    pub batches_formed: u64,\n}\n";
 
     // -- protocol-sync ------------------------------------------------------
 
@@ -472,16 +691,134 @@ impl FaultSite {
         assert!(got.is_empty(), "{got:?}");
     }
 
+    // -- binary-op-sync -----------------------------------------------------
+
+    const FRAME_OK: &str = r#"
+pub mod opcode {
+    pub const HEALTH: u8 = 1;
+    pub const STATS: u8 = 2;
+}
+pub fn op_name(code: u8) -> Option<&'static str> {
+    match code {
+        opcode::HEALTH => Some("health"),
+        opcode::STATS => Some("stats"),
+        _ => None,
+    }
+}
+"#;
+
+    #[test]
+    fn binary_op_sync_clean_when_all_anchors_match() {
+        let proto = "## Ops\n\n### `health`\n\n### `stats`\n\n\
+                     <!-- gfi-analyze: binary-ops = health=1 stats=2 -->\n";
+        let c = ctx_with_protocol(
+            &[
+                ("rust/src/coordinator/frame.rs", FRAME_OK),
+                ("rust/src/coordinator/server.rs", SERVER_OK),
+            ],
+            proto,
+        );
+        let got = run_rule("binary-op-sync", &c);
+        assert!(got.is_empty(), "{got:?}");
+    }
+
+    #[test]
+    fn binary_op_sync_fires_on_marker_drift_both_directions() {
+        // Marker has a wrong code for stats and a ghost op.
+        let proto = "## Ops\n\n### `health`\n\n### `stats`\n\n\
+                     <!-- gfi-analyze: binary-ops = health=1 stats=9 ghost=3 -->\n";
+        let c = ctx_with_protocol(
+            &[
+                ("rust/src/coordinator/frame.rs", FRAME_OK),
+                ("rust/src/coordinator/server.rs", SERVER_OK),
+            ],
+            proto,
+        );
+        let got = run_rule("binary-op-sync", &c);
+        assert_eq!(got.len(), 3, "{got:?}");
+        assert!(got.iter().any(|f| f.message.contains("stats=2")), "code drift: {got:?}");
+        assert!(got.iter().any(|f| f.message.contains("stats=9")), "marker side: {got:?}");
+        assert!(got.iter().any(|f| f.message.contains("ghost=3")), "ghost op: {got:?}");
+    }
+
+    #[test]
+    fn binary_op_sync_fires_on_transport_drift() {
+        // frame.rs dispatches an op the JSON server does not handle, and
+        // the server handles "stats" with no binary code.
+        let frame = r#"
+pub mod opcode {
+    pub const HEALTH: u8 = 1;
+    pub const GHOST: u8 = 2;
+}
+pub fn op_name(code: u8) -> Option<&'static str> {
+    match code {
+        opcode::HEALTH => Some("health"),
+        opcode::GHOST => Some("ghost"),
+        _ => None,
+    }
+}
+"#;
+        let proto = "<!-- gfi-analyze: binary-ops = health=1 ghost=2 -->\n";
+        let c = ctx_with_protocol(
+            &[
+                ("rust/src/coordinator/frame.rs", frame),
+                ("rust/src/coordinator/server.rs", SERVER_OK),
+            ],
+            proto,
+        );
+        let got = run_rule("binary-op-sync", &c);
+        assert_eq!(got.len(), 2, "{got:?}");
+        assert!(got.iter().any(|f| f.message.contains("\"ghost\"")), "{got:?}");
+        assert!(got.iter().any(|f| f.message.contains("\"stats\"")), "{got:?}");
+    }
+
+    #[test]
+    fn binary_op_sync_fires_on_dead_const_and_missing_anchor() {
+        // A const with no op_name arm is dead on the wire.
+        let frame = r#"
+pub mod opcode {
+    pub const HEALTH: u8 = 1;
+    pub const STATS: u8 = 2;
+    pub const DEAD: u8 = 3;
+}
+pub fn op_name(code: u8) -> Option<&'static str> {
+    match code {
+        opcode::HEALTH => Some("health"),
+        opcode::STATS => Some("stats"),
+        _ => None,
+    }
+}
+"#;
+        let proto = "<!-- gfi-analyze: binary-ops = health=1 stats=2 -->\n";
+        let c = ctx_with_protocol(
+            &[
+                ("rust/src/coordinator/frame.rs", frame),
+                ("rust/src/coordinator/server.rs", SERVER_OK),
+            ],
+            proto,
+        );
+        let got = run_rule("binary-op-sync", &c);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("DEAD"), "{got:?}");
+
+        // No frame.rs at all → loud anchor failure, not a silent pass.
+        let c = ctx_with_protocol(&[("rust/src/coordinator/server.rs", SERVER_OK)], proto);
+        let got = run_rule("binary-op-sync", &c);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("anchor not found"), "{got:?}");
+    }
+
     // -- counter-sync -------------------------------------------------------
 
     #[test]
     fn counter_sync_clean_when_emitted_and_documented() {
-        let proto = "stats returns `spills` and `sheds` counters.\n";
+        let proto = "stats returns `spills`, `sheds`, and `batches_formed` counters.\n";
         let c = ctx_with_protocol(
             &[
                 ("rust/src/coordinator/server.rs", SERVER_OK),
                 ("rust/src/coordinator/store.rs", STORE_OK),
                 ("rust/src/coordinator/mod.rs", MOD_OK),
+                ("rust/src/coordinator/batcher.rs", BATCHER_OK),
             ],
             proto,
         );
@@ -491,12 +828,13 @@ impl FaultSite {
     #[test]
     fn counter_sync_fires_on_unemitted_and_undocumented_fields() {
         let store = "pub struct StoreStats {\n    pub spills: u64,\n    pub ghosts: u64,\n}\n";
-        let proto = "stats returns `spills` and `sheds`.\n";
+        let proto = "stats returns `spills`, `sheds`, and `batches_formed`.\n";
         let c = ctx_with_protocol(
             &[
                 ("rust/src/coordinator/server.rs", SERVER_OK),
                 ("rust/src/coordinator/store.rs", store),
                 ("rust/src/coordinator/mod.rs", MOD_OK),
+                ("rust/src/coordinator/batcher.rs", BATCHER_OK),
             ],
             proto,
         );

@@ -9,15 +9,25 @@
 //! * **Pure-Rust groups** go through [`Engine::integrate_batch`]: one
 //!   cache lookup and one warm workspace for the whole group, no
 //!   merge/split copies.
+//!
+//! Since PR 10 the batcher is also the evented server's cross-connection
+//! micro-batching window (docs/ARCHITECTURE.md, "Event-driven serving"):
+//! same-`(cloud, spec)` requests arriving from *different* connections
+//! within the window coalesce into one `integrate_batch` call. Requests
+//! carry their [`RequestOpts`] deadline through the window — the worker
+//! never sleeps past the earliest member deadline, and a batch that
+//! fails is retried per-member with each member's own opts so PR 6's
+//! typed deadline/shed/quarantine errors reach every client unchanged.
 
-use crate::coordinator::Engine;
+use crate::coordinator::{Engine, IntegrateInfo, RequestOpts};
 use crate::integrators::IntegratorSpec;
 use crate::linalg::Mat;
 use crate::util::error::Result;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// One queued request.
 struct Pending {
@@ -25,12 +35,40 @@ struct Pending {
     key: String,
     spec: IntegratorSpec,
     field: Mat,
-    reply: mpsc::Sender<Result<Mat>>,
+    opts: RequestOpts,
+    reply: mpsc::Sender<Result<(Mat, IntegrateInfo)>>,
+}
+
+/// Monotonic batching counters, surfaced by the server's `stats` and
+/// `health` ops (docs/PROTOCOL.md). A "batch" here means an executed
+/// same-key group with ≥ 2 members — singleton groups are ordinary
+/// requests and are not counted as coalescing wins.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BatcherStats {
+    /// Executed groups that merged ≥ 2 requests into one engine call.
+    pub batches_formed: u64,
+    /// Total requests that rode in those merged groups.
+    pub coalesced_requests: u64,
+    /// Collection rounds flushed because the batching window elapsed or
+    /// the round filled to [`BatcherConfig::max_batch`].
+    pub window_flushes: u64,
+    /// Collection rounds flushed early because a member's request
+    /// deadline would otherwise have been slept past.
+    pub deadline_flushes: u64,
+}
+
+#[derive(Default)]
+struct StatsCells {
+    batches_formed: AtomicU64,
+    coalesced_requests: AtomicU64,
+    window_flushes: AtomicU64,
+    deadline_flushes: AtomicU64,
 }
 
 /// Handle for submitting batched integrations.
 pub struct Batcher {
     tx: mpsc::Sender<Pending>,
+    stats: Arc<StatsCells>,
     _worker: std::thread::JoinHandle<()>,
 }
 
@@ -42,11 +80,18 @@ pub struct BatcherConfig {
     pub window: Duration,
     /// Maximum merged field columns per PJRT artifact dispatch.
     pub max_columns: usize,
+    /// Flush a collection round as soon as it holds this many requests.
+    /// Submitters block for their replies, so a round can never usefully
+    /// grow past the number of submitting threads — the evented server
+    /// sets this to its worker count, which keeps dense pipelined
+    /// traffic from sleeping out the window on every round while still
+    /// letting sparse traffic coalesce for the full window.
+    pub max_batch: usize,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { window: Duration::from_millis(2), max_columns: 4 }
+        BatcherConfig { window: Duration::from_millis(2), max_columns: 4, max_batch: 64 }
     }
 }
 
@@ -54,16 +99,33 @@ impl Batcher {
     /// Spawns the batching worker thread over `engine`.
     pub fn new(engine: Arc<Engine>, cfg: BatcherConfig) -> Self {
         let (tx, rx) = mpsc::channel::<Pending>();
+        let stats = Arc::new(StatsCells::default());
+        let worker_stats = stats.clone();
         let worker = std::thread::Builder::new()
             .name("gfi-batcher".into())
-            .spawn(move || worker_loop(engine, rx, cfg))
+            .spawn(move || worker_loop(engine, rx, cfg, worker_stats))
             .expect("spawn batcher");
-        Batcher { tx, _worker: worker }
+        Batcher { tx, stats, _worker: worker }
     }
 
     /// Submits a request; blocks until the batch containing it executes.
     /// Unkeyable specs are rejected up front (they cannot be grouped).
     pub fn integrate(&self, cloud: u64, spec: IntegratorSpec, field: Mat) -> Result<Mat> {
+        self.integrate_opts(cloud, spec, field, RequestOpts::default())
+            .map(|(m, _)| m)
+    }
+
+    /// [`Batcher::integrate`] with per-request options and full result
+    /// metadata — the serving-tier entry point. The deadline rides the
+    /// queue: the window never sleeps past it, and a failed batch is
+    /// re-run per-member under each member's own opts.
+    pub fn integrate_opts(
+        &self,
+        cloud: u64,
+        spec: IntegratorSpec,
+        field: Mat,
+        opts: RequestOpts,
+    ) -> Result<(Mat, IntegrateInfo)> {
         let (reply_tx, reply_rx) = mpsc::channel();
         // Rfd and RfdPjrt share an engine cache key on purpose, but they
         // must not share a *batch*: the group is routed as a whole, so a
@@ -71,15 +133,35 @@ impl Batcher {
         // artifact (or vice versa). spec.name() splits the routes.
         let key = format!("{cloud}:{}:{}", spec.name(), spec.cache_key()?);
         self.tx
-            .send(Pending { cloud, key, spec, field, reply: reply_tx })
+            .send(Pending { cloud, key, spec, field, opts, reply: reply_tx })
             .map_err(|_| crate::anyhow!("batcher worker gone"))?;
         reply_rx
             .recv()
             .map_err(|_| crate::anyhow!("batcher dropped reply"))?
     }
+
+    /// Snapshot of the monotonic batching counters.
+    pub fn stats(&self) -> BatcherStats {
+        BatcherStats {
+            batches_formed: self.stats.batches_formed.load(Ordering::Relaxed),
+            coalesced_requests: self.stats.coalesced_requests.load(Ordering::Relaxed),
+            window_flushes: self.stats.window_flushes.load(Ordering::Relaxed),
+            deadline_flushes: self.stats.deadline_flushes.load(Ordering::Relaxed),
+        }
+    }
 }
 
-fn worker_loop(engine: Arc<Engine>, rx: mpsc::Receiver<Pending>, cfg: BatcherConfig) {
+/// Earliest member deadline, if any member carries one.
+fn earliest_deadline(batch: &[Pending]) -> Option<Instant> {
+    batch.iter().filter_map(|p| p.opts.deadline).min()
+}
+
+fn worker_loop(
+    engine: Arc<Engine>,
+    rx: mpsc::Receiver<Pending>,
+    cfg: BatcherConfig,
+    stats: Arc<StatsCells>,
+) {
     loop {
         // Block for the first request, then drain the window.
         let first = match rx.recv() {
@@ -87,14 +169,34 @@ fn worker_loop(engine: Arc<Engine>, rx: mpsc::Receiver<Pending>, cfg: BatcherCon
             Err(_) => return,
         };
         let mut batch = vec![first];
-        let deadline = std::time::Instant::now() + cfg.window;
-        while let Some(left) = deadline.checked_duration_since(std::time::Instant::now())
-        {
-            match rx.recv_timeout(left) {
+        let cap = cfg.max_batch.max(1);
+        let window_end = Instant::now() + cfg.window;
+        let mut deadline_flush = false;
+        while batch.len() < cap {
+            // Never sleep past the earliest member deadline: a request
+            // with 1ms of budget left must not sit out a 2ms window.
+            let wake = match earliest_deadline(&batch) {
+                Some(d) if d < window_end => d,
+                _ => window_end,
+            };
+            let now = Instant::now();
+            if wake <= now {
+                deadline_flush = wake < window_end;
+                break;
+            }
+            match rx.recv_timeout(wake - now) {
                 Ok(p) => batch.push(p),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    deadline_flush = wake < window_end;
+                    break;
+                }
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
+        }
+        if deadline_flush {
+            stats.deadline_flushes.fetch_add(1, Ordering::Relaxed);
+        } else {
+            stats.window_flushes.fetch_add(1, Ordering::Relaxed);
         }
         // Group by (cloud, config) key.
         let mut groups: HashMap<String, Vec<Pending>> = HashMap::new();
@@ -102,9 +204,23 @@ fn worker_loop(engine: Arc<Engine>, rx: mpsc::Receiver<Pending>, cfg: BatcherCon
             groups.entry(p.key.clone()).or_default().push(p);
         }
         for (_, group) in groups {
+            if group.len() >= 2 {
+                stats.batches_formed.fetch_add(1, Ordering::Relaxed);
+                stats
+                    .coalesced_requests
+                    .fetch_add(group.len() as u64, Ordering::Relaxed);
+            }
             execute_group(&engine, group, cfg.max_columns);
         }
     }
+}
+
+/// Serves one member directly under its own opts — the singleton path
+/// and the per-member fallback after a failed merged call. Keeps PR 6's
+/// typed errors (deadline/shed/quarantine) intact per client.
+fn reply_individual(engine: &Engine, p: Pending) {
+    let out = engine.integrate_opts(p.cloud, &p.spec, &p.field, &p.opts);
+    let _ = p.reply.send(out);
 }
 
 /// Executes one same-key group. PJRT groups merge up to `max_cols`
@@ -126,9 +242,7 @@ fn execute_group(engine: &Engine, group: Vec<Pending>, max_cols: usize) {
             return;
         }
         if chunk.len() == 1 {
-            let p = chunk.pop().unwrap();
-            let out = engine.integrate(p.cloud, &p.spec, &p.field).map(|(m, _)| m);
-            let _ = p.reply.send(out);
+            reply_individual(engine, chunk.pop().unwrap());
             return;
         }
         // Merge columns.
@@ -144,11 +258,10 @@ fn execute_group(engine: &Engine, group: Vec<Pending>, max_cols: usize) {
             }
             off += p.field.cols;
         }
-        let result = engine
-            .integrate(chunk[0].cloud, &chunk[0].spec, &merged)
-            .map(|(m, _)| m);
+        let opts = RequestOpts { deadline: earliest_deadline(chunk) };
+        let result = engine.integrate_opts(chunk[0].cloud, &chunk[0].spec, &merged, &opts);
         match result {
-            Ok(out) => {
+            Ok((out, info)) => {
                 let mut off = 0;
                 for p in chunk.drain(..) {
                     let mut part = Mat::zeros(n, p.field.cols);
@@ -158,13 +271,14 @@ fn execute_group(engine: &Engine, group: Vec<Pending>, max_cols: usize) {
                         }
                     }
                     off += p.field.cols;
-                    let _ = p.reply.send(Ok(part));
+                    let _ = p.reply.send(Ok((part, info.clone())));
                 }
             }
-            Err(e) => {
-                let msg = format!("{e:#}");
+            Err(_) => {
+                // Retry each member alone under its own opts so typed
+                // per-request errors (and partial successes) survive.
                 for p in chunk.drain(..) {
-                    let _ = p.reply.send(Err(crate::anyhow!("{msg}")));
+                    reply_individual(engine, p);
                 }
             }
         }
@@ -187,25 +301,28 @@ fn execute_batch(engine: &Engine, mut group: Vec<Pending>) {
         return;
     }
     if group.len() == 1 {
-        let p = group.pop().unwrap();
-        let out = engine.integrate(p.cloud, &p.spec, &p.field).map(|(m, _)| m);
-        let _ = p.reply.send(out);
+        reply_individual(engine, group.pop().unwrap());
         return;
     }
     let fields: Vec<Mat> = group
         .iter_mut()
         .map(|p| std::mem::replace(&mut p.field, Mat::zeros(0, 0)))
         .collect();
-    match engine.integrate_batch(group[0].cloud, &group[0].spec, &fields) {
-        Ok((outs, _)) => {
+    let opts = RequestOpts { deadline: earliest_deadline(&group) };
+    match engine.integrate_batch_opts(group[0].cloud, &group[0].spec, &fields, &opts) {
+        Ok((outs, info)) => {
             for (p, out) in group.into_iter().zip(outs) {
-                let _ = p.reply.send(Ok(out));
+                let _ = p.reply.send(Ok((out, info.clone())));
             }
         }
-        Err(e) => {
-            let msg = format!("{e:#}");
-            for p in group {
-                let _ = p.reply.send(Err(crate::anyhow!("{msg}")));
+        Err(_) => {
+            // The merged call failed (commonly: the earliest member's
+            // deadline). Re-run per-member with each member's own field
+            // and opts — members with budget left still succeed, and
+            // every member's error stays typed for its own client.
+            for (p, field) in group.into_iter().zip(fields) {
+                let out = engine.integrate_opts(p.cloud, &p.spec, &field, &p.opts);
+                let _ = p.reply.send(out);
             }
         }
     }
@@ -250,6 +367,11 @@ mod tests {
                 assert!(e < 1e-12, "batched result differs: {e}");
             }
         });
+        // Every collection round is accounted to exactly one flush cause,
+        // and any merged group shows up in the coalescing counters.
+        let stats = batcher.stats();
+        assert!(stats.window_flushes + stats.deadline_flushes >= 1);
+        assert!(stats.coalesced_requests >= 2 * stats.batches_formed);
     }
 
     #[test]
@@ -267,5 +389,29 @@ mod tests {
             Mat::zeros(30, 1),
         );
         assert!(out.is_err());
+    }
+
+    #[test]
+    fn expired_deadline_yields_typed_error_per_member() {
+        let eng = Arc::new(Engine::new(None));
+        let id = eng.register_mesh(icosphere(1), "s");
+        let n = eng.cloud(id).unwrap().scene.len();
+        let batcher = Batcher::new(eng.clone(), BatcherConfig::default());
+        let spec = IntegratorSpec::Rfd(RfdConfig {
+            num_features: 8,
+            seed: 2,
+            ..Default::default()
+        });
+        // A deadline already in the past must come back as the typed
+        // retryable DeadlineExceeded, not a stringified batch error.
+        let opts = RequestOpts { deadline: Some(Instant::now() - Duration::from_millis(5)) };
+        let err = batcher
+            .integrate_opts(id, spec, Mat::zeros(n, 1), opts)
+            .unwrap_err();
+        let gfi = err
+            .downcast_ref::<crate::integrators::GfiError>()
+            .expect("typed GfiError across the batcher");
+        assert!(gfi.retryable(), "deadline errors stay retryable: {gfi:?}");
+        assert!(batcher.stats().deadline_flushes >= 1);
     }
 }

@@ -1,0 +1,767 @@
+//! Event-driven TCP front-end: one readiness loop, many pipelined
+//! connections, a shared worker pool, and cross-connection
+//! micro-batching (docs/ARCHITECTURE.md, "Event-driven serving").
+//!
+//! The blocking server (`coordinator::server`) spends a thread per
+//! connection; this front-end drives every connection from a single
+//! [`net::Poller`] loop and hands parsed requests to `workers` threads
+//! (default: CPU cores). Both transports execute the *same*
+//! [`server::handle_line`], so every op, every error code, and every
+//! response byte matches the blocking server.
+//!
+//! **Wire modes** — auto-detected from the first byte a connection
+//! sends (docs/PROTOCOL.md, "Binary framing"):
+//! * `0xB1` → length-prefixed binary frames with client request ids and
+//!   full pipelining: many requests in flight per connection, responses
+//!   returned in request order (HTTP/1.1-pipelining semantics), each
+//!   echoing its request's id and op code.
+//! * anything else → line-JSON compat mode, identical to the blocking
+//!   server's protocol.
+//!
+//! **Micro-batching**: `integrate` requests route through the promoted
+//! [`batcher`], so same-`(cloud, spec)` requests from *different*
+//! connections landing within `batch_window_us` coalesce into one
+//! `integrate_batch` engine call. PR 6 semantics (deadlines, shedding,
+//! quarantine, typed errors) pass through unchanged — a failed merged
+//! call is retried per-member under each member's own opts.
+
+#![cfg(unix)]
+
+use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::faults::{FaultAction, FaultSite};
+use crate::coordinator::frame::{self, FrameError};
+use crate::coordinator::net::{Poller, READABLE, WRITABLE};
+use crate::coordinator::server::{error_json, handle_line, ServerConfig, ServerShared};
+use crate::coordinator::{panic_message, Engine};
+use crate::integrators::GfiError;
+use crate::util::error::{anyhow, Result};
+use crate::util::json::{parse, Json};
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+const LISTENER_TOKEN: u64 = 0;
+const WAKE_TOKEN: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+const READ_CHUNK: usize = 16 * 1024;
+
+/// Wire mode of one connection, decided by its first byte.
+enum Mode {
+    Detect,
+    Json,
+    Binary,
+}
+
+/// One parsed request traveling to the worker pool. `seq` is the
+/// server-internal arrival number used for response ordering — distinct
+/// from the client-chosen binary request id, which may legally repeat.
+struct Job {
+    token: u64,
+    seq: u64,
+    kind: JobKind,
+}
+
+enum JobKind {
+    Binary { op: u8, id: u64, payload: Vec<u8> },
+    Json { line: String },
+}
+
+/// A finished request: the fully encoded response bytes for `seq`.
+struct Done {
+    token: u64,
+    seq: u64,
+    bytes: Vec<u8>,
+}
+
+/// Per-connection state machine.
+struct Conn {
+    stream: TcpStream,
+    mode: Mode,
+    /// Unparsed inbound bytes (a partial frame or partial line).
+    rbuf: Vec<u8>,
+    /// Encoded outbound bytes not yet accepted by the socket.
+    wbuf: Vec<u8>,
+    /// Arrival order of in-flight requests (internal seq numbers).
+    inflight: VecDeque<u64>,
+    /// Finished responses waiting for earlier requests to retire —
+    /// pipelined responses always flush in request order.
+    done: HashMap<u64, Vec<u8>>,
+    last_activity: Instant,
+    /// Set on peer EOF, protocol error, or shutdown: flush `wbuf` and
+    /// outstanding in-flight responses, then close.
+    close_after_flush: bool,
+    /// Encoded framing-error frame held until every already-submitted
+    /// request has answered — the typed error is always the *final*
+    /// frame on the wire (docs/PROTOCOL.md, "Binary framing").
+    pending_error: Option<Vec<u8>>,
+    /// Peer closed its write side — stop parsing, but still answer what
+    /// it already sent.
+    read_closed: bool,
+    registered_interest: u8,
+}
+
+impl Conn {
+    fn wants_write(&self) -> bool {
+        !self.wbuf.is_empty()
+    }
+
+    fn drained(&self) -> bool {
+        self.wbuf.is_empty() && self.inflight.is_empty() && self.done.is_empty()
+    }
+}
+
+/// Runs the evented server with default limits until a `shutdown` op
+/// arrives. Returns the bound address through `on_ready` (port 0 picks
+/// a free port).
+pub fn serve_evented(
+    engine: Arc<Engine>,
+    addr: &str,
+    on_ready: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    serve_evented_with(engine, addr, ServerConfig::default(), on_ready)
+}
+
+/// [`serve_evented`] with explicit [`ServerConfig`] limits.
+pub fn serve_evented_with(
+    engine: Arc<Engine>,
+    addr: &str,
+    cfg: ServerConfig,
+    on_ready: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    on_ready(listener.local_addr()?);
+
+    let worker_count = if cfg.workers > 0 {
+        cfg.workers
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    };
+
+    // Only `worker_count` requests can ever be inside the batcher at
+    // once (submitters block for their replies), so cap collection
+    // rounds there: a full round flushes immediately instead of
+    // sleeping out the window under dense pipelined load.
+    let batcher = if cfg.batch_window_us > 0 {
+        Some(Arc::new(Batcher::new(
+            engine.clone(),
+            BatcherConfig {
+                window: Duration::from_micros(cfg.batch_window_us),
+                max_batch: worker_count,
+                ..Default::default()
+            },
+        )))
+    } else {
+        None
+    };
+    let shared = Arc::new(ServerShared::new(&cfg, batcher));
+
+    // Self-pipe: workers nudge the poller out of `wait` when a response
+    // is ready. Both ends nonblocking — a full pipe just means the loop
+    // is already scheduled to wake.
+    let (wake_rx, wake_tx) = UnixStream::pair()?;
+    wake_rx.set_nonblocking(true)?;
+    wake_tx.set_nonblocking(true)?;
+    let wake_tx = Arc::new(wake_tx);
+
+    let (job_tx, job_rx) = mpsc::channel::<Job>();
+    let job_rx = Arc::new(Mutex::new(job_rx));
+    let completions: Arc<Mutex<Vec<Done>>> = Arc::new(Mutex::new(Vec::new()));
+
+    let mut workers = Vec::with_capacity(worker_count);
+    for i in 0..worker_count {
+        let engine = engine.clone();
+        let shared = shared.clone();
+        let job_rx = job_rx.clone();
+        let completions = completions.clone();
+        let wake = wake_tx.clone();
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("gfi-serve-{i}"))
+                .spawn(move || worker_loop(engine, shared, job_rx, completions, wake))
+                .map_err(|e| anyhow!("spawn worker: {e}"))?,
+        );
+    }
+
+    let result = event_loop(
+        &engine,
+        &listener,
+        &cfg,
+        &shared,
+        &wake_rx,
+        job_tx,
+        &completions,
+    );
+    // Dropping `job_tx` (consumed by event_loop) disconnects the worker
+    // queue; each worker exits once it drains.
+    for w in workers {
+        let _ = w.join();
+    }
+    result
+}
+
+fn worker_loop(
+    engine: Arc<Engine>,
+    shared: Arc<ServerShared>,
+    job_rx: Arc<Mutex<mpsc::Receiver<Job>>>,
+    completions: Arc<Mutex<Vec<Done>>>,
+    wake: Arc<UnixStream>,
+) {
+    loop {
+        let job = {
+            let rx = job_rx.lock().unwrap_or_else(|p| p.into_inner());
+            rx.recv()
+        };
+        let job = match job {
+            Ok(j) => j,
+            Err(_) => return,
+        };
+        let bytes = run_job(&engine, &shared, &job);
+        completions
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push(Done { token: job.token, seq: job.seq, bytes });
+        let _ = (&*wake).write(&[1u8]);
+    }
+}
+
+/// Executes one request behind the same unwind guard as the blocking
+/// server and returns the fully encoded wire response.
+fn run_job(engine: &Engine, shared: &ServerShared, job: &Job) -> Vec<u8> {
+    let (line, respond_binary) = match &job.kind {
+        JobKind::Json { line } => (line.clone(), None),
+        JobKind::Binary { op, id, payload } => {
+            let name = match frame::op_name(*op) {
+                Some(n) => n,
+                None => {
+                    let resp = error_json(&anyhow!("unknown binary op code {op}"));
+                    return frame::encode(*op, *id, resp.to_string().as_bytes());
+                }
+            };
+            // The payload is the JSON args object *without* "op"; fold
+            // the op code back in and run the shared JSON handler, so
+            // binary requests take the identical execution path.
+            let text = String::from_utf8_lossy(payload).into_owned();
+            let line = match parse(&text) {
+                Ok(Json::Obj(mut m)) => {
+                    m.insert("op".into(), Json::Str(name.into()));
+                    Json::Obj(m).to_string()
+                }
+                // Malformed payloads flow to handle_line for the same
+                // "bad json" error the JSON transport reports.
+                _ => text,
+            };
+            (line, Some((*op, *id)))
+        }
+    };
+    // Last-resort isolation, verbatim from the blocking server: no
+    // single request can kill a worker thread.
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        handle_line(engine, &line, shared)
+    }));
+    let response = match outcome {
+        Ok(Ok(j)) => j,
+        Ok(Err(e)) => error_json(&e),
+        Err(payload) => {
+            let e: crate::util::error::Error = GfiError::Internal {
+                detail: format!(
+                    "panic isolated at server/request: {}",
+                    panic_message(&*payload)
+                ),
+            }
+            .into();
+            error_json(&e)
+        }
+    };
+    match respond_binary {
+        Some((op, id)) => frame::encode(op, id, response.to_string().as_bytes()),
+        None => format!("{response}\n").into_bytes(),
+    }
+}
+
+fn event_loop(
+    engine: &Engine,
+    listener: &TcpListener,
+    cfg: &ServerConfig,
+    shared: &Arc<ServerShared>,
+    wake_rx: &UnixStream,
+    job_tx: mpsc::Sender<Job>,
+    completions: &Mutex<Vec<Done>>,
+) -> Result<()> {
+    let mut poller = Poller::new()?;
+    poller.register(listener.as_raw_fd(), LISTENER_TOKEN, READABLE)?;
+    poller.register(wake_rx.as_raw_fd(), WAKE_TOKEN, READABLE)?;
+    let mut listener_armed = true;
+
+    let max_conns = cfg.max_connections.max(1);
+    let read_timeout = Duration::from_millis(cfg.read_timeout_ms.max(1));
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_token = FIRST_CONN_TOKEN;
+    let mut next_seq: u64 = 0;
+    let mut events = Vec::new();
+    let mut closed: Vec<u64> = Vec::new();
+
+    loop {
+        events.clear();
+        poller.wait(&mut events, 100)?;
+        let stopping = shared.stop.load(Ordering::Relaxed);
+
+        for ev in events.iter() {
+            match ev.token {
+                LISTENER_TOKEN => {
+                    accept_ready(
+                        engine, listener, cfg, shared, &mut poller, &mut conns,
+                        &mut next_token, max_conns, &mut listener_armed, stopping,
+                    )?;
+                }
+                WAKE_TOKEN => {
+                    // Drain the self-pipe; completions are collected below.
+                    let mut sink = [0u8; 64];
+                    loop {
+                        match (&*wake_rx).read(&mut sink) {
+                            Ok(0) => break,
+                            Ok(_) => continue,
+                            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                            Err(_) => break,
+                        }
+                    }
+                }
+                token => {
+                    if ev.readable {
+                        if let Some(c) = conns.get_mut(&token) {
+                            read_ready(engine, shared, c, token, &mut next_seq, &job_tx);
+                        }
+                    }
+                }
+            }
+        }
+
+        // Retire finished requests into their connections' write buffers,
+        // strictly in request order per connection.
+        {
+            let mut finished = completions.lock().unwrap_or_else(|p| p.into_inner());
+            for d in finished.drain(..) {
+                shared.worker_backlog.fetch_sub(1, Ordering::Relaxed);
+                if let Some(c) = conns.get_mut(&d.token) {
+                    c.done.insert(d.seq, d.bytes);
+                }
+            }
+        }
+
+        let stopping = shared.stop.load(Ordering::Relaxed);
+        let now = Instant::now();
+        closed.clear();
+        for (&token, c) in conns.iter_mut() {
+            while let Some(&head) = c.inflight.front() {
+                match c.done.remove(&head) {
+                    Some(bytes) => {
+                        c.wbuf.extend_from_slice(&bytes);
+                        c.inflight.pop_front();
+                    }
+                    None => break,
+                }
+            }
+            // Every request that preceded a framing error has now
+            // answered: append the deferred error as the final frame and
+            // retire the connection once it flushes.
+            if c.inflight.is_empty() {
+                if let Some(err) = c.pending_error.take() {
+                    c.wbuf.extend_from_slice(&err);
+                    c.close_after_flush = true;
+                }
+            }
+            if stopping {
+                c.close_after_flush = true;
+            }
+            if !flush_write(c) {
+                closed.push(token);
+                continue;
+            }
+            if c.close_after_flush && c.drained() {
+                closed.push(token);
+                continue;
+            }
+            // A silent idle client is disconnected just like the blocking
+            // server's socket read timeout would; a connection with work
+            // in flight is waiting on *us* and stays.
+            if c.inflight.is_empty()
+                && !c.wants_write()
+                && cfg.read_timeout_ms > 0
+                && now.duration_since(c.last_activity) > read_timeout
+            {
+                closed.push(token);
+                continue;
+            }
+            let want = READABLE | if c.wants_write() { WRITABLE } else { 0 };
+            if want != c.registered_interest {
+                let _ = poller.modify(c.stream.as_raw_fd(), token, want);
+                c.registered_interest = want;
+            }
+        }
+        for token in closed.drain(..) {
+            if let Some(c) = conns.remove(&token) {
+                let _ = poller.deregister(c.stream.as_raw_fd());
+                shared.connections_finished.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        if !listener_armed && !stopping && conns.len() < max_conns {
+            poller.register(listener.as_raw_fd(), LISTENER_TOKEN, READABLE)?;
+            listener_armed = true;
+        }
+        if stopping {
+            if listener_armed {
+                let _ = poller.deregister(listener.as_raw_fd());
+                listener_armed = false;
+            }
+            if conns.is_empty() {
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// Accepts every queued client, stopping at the connection cap — the
+/// listener is then *deregistered* so a level-triggered poller doesn't
+/// spin on the unaccepted backlog; it re-arms when a slot frees.
+fn accept_ready(
+    engine: &Engine,
+    listener: &TcpListener,
+    cfg: &ServerConfig,
+    shared: &ServerShared,
+    poller: &mut Poller,
+    conns: &mut HashMap<u64, Conn>,
+    next_token: &mut u64,
+    max_conns: usize,
+    listener_armed: &mut bool,
+    stopping: bool,
+) -> Result<()> {
+    loop {
+        if stopping || conns.len() >= max_conns {
+            if *listener_armed {
+                let _ = poller.deregister(listener.as_raw_fd());
+                *listener_armed = false;
+            }
+            return Ok(());
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // Accept-site chaos, as on the blocking server: `drop`
+                // abandons the connection (clean EOF, client reconnects);
+                // `delay` stalls the accept path.
+                if let Some(act) = engine.faults().fire(FaultSite::Accept, "server") {
+                    match act {
+                        FaultAction::Delay(d) => std::thread::sleep(d),
+                        _ => continue,
+                    }
+                }
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                shared.connections_total.fetch_add(1, Ordering::Relaxed);
+                let token = *next_token;
+                *next_token += 1;
+                poller.register(stream.as_raw_fd(), token, READABLE)?;
+                conns.insert(
+                    token,
+                    Conn {
+                        stream,
+                        mode: Mode::Detect,
+                        rbuf: Vec::new(),
+                        wbuf: Vec::new(),
+                        inflight: VecDeque::new(),
+                        done: HashMap::new(),
+                        last_activity: Instant::now(),
+                        close_after_flush: false,
+                        pending_error: None,
+                        read_closed: false,
+                        registered_interest: READABLE,
+                    },
+                );
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Reads everything the socket has, then parses complete requests out of
+/// the connection buffer and queues them on the worker pool.
+fn read_ready(
+    engine: &Engine,
+    shared: &ServerShared,
+    c: &mut Conn,
+    token: u64,
+    next_seq: &mut u64,
+    job_tx: &mpsc::Sender<Job>,
+) {
+    if c.read_closed || c.close_after_flush {
+        return;
+    }
+    let mut chunk = [0u8; READ_CHUNK];
+    loop {
+        match c.stream.read(&mut chunk) {
+            Ok(0) => {
+                // Peer EOF. Anything already parsed still gets answered;
+                // then the connection retires.
+                c.read_closed = true;
+                c.close_after_flush = true;
+                break;
+            }
+            Ok(n) => {
+                c.rbuf.extend_from_slice(&chunk[..n]);
+                c.last_activity = Instant::now();
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.read_closed = true;
+                c.close_after_flush = true;
+                break;
+            }
+        }
+    }
+    if let Mode::Detect = c.mode {
+        if let Some(&first) = c.rbuf.first() {
+            c.mode = if first == frame::MAGIC { Mode::Binary } else { Mode::Json };
+        }
+    }
+    match c.mode {
+        Mode::Detect => {}
+        Mode::Binary => parse_binary(engine, shared, c, token, next_seq, job_tx),
+        Mode::Json => parse_json_lines(engine, shared, c, token, next_seq, job_tx),
+    }
+}
+
+/// Read-site chaos shared by both parsers: `delay` stalls request
+/// intake; anything else severs the connection mid-stream, exactly as
+/// the blocking server's read loop does. Returns `false` when the
+/// connection must drop.
+fn fire_read_fault(engine: &Engine, c: &mut Conn) -> bool {
+    if let Some(act) = engine.faults().fire(FaultSite::Read, "server") {
+        match act {
+            FaultAction::Delay(d) => std::thread::sleep(d),
+            _ => {
+                c.rbuf.clear();
+                c.read_closed = true;
+                c.close_after_flush = true;
+                return false;
+            }
+        }
+    }
+    true
+}
+
+fn submit(
+    c: &mut Conn,
+    shared: &ServerShared,
+    token: u64,
+    next_seq: &mut u64,
+    job_tx: &mpsc::Sender<Job>,
+    kind: JobKind,
+) {
+    let seq = *next_seq;
+    *next_seq += 1;
+    c.inflight.push_back(seq);
+    shared.worker_backlog.fetch_add(1, Ordering::Relaxed);
+    let _ = job_tx.send(Job { token, seq, kind });
+}
+
+fn parse_binary(
+    engine: &Engine,
+    shared: &ServerShared,
+    c: &mut Conn,
+    token: u64,
+    next_seq: &mut u64,
+    job_tx: &mpsc::Sender<Job>,
+) {
+    let mut off = 0usize;
+    loop {
+        match frame::decode(&c.rbuf[off..]) {
+            Ok(Some((f, used))) => {
+                off += used;
+                if !fire_read_fault(engine, c) {
+                    return;
+                }
+                submit(
+                    c,
+                    shared,
+                    token,
+                    next_seq,
+                    job_tx,
+                    JobKind::Binary { op: f.op, id: f.id, payload: f.payload },
+                );
+            }
+            Ok(None) => break,
+            Err(fe) => {
+                // Malformed framing: the rest of the buffer is
+                // undecodable — drop it and stop reading. The typed
+                // error frame is deferred until every request submitted
+                // before it has answered, so pipelined responses are
+                // never reordered behind the error.
+                c.rbuf.clear();
+                c.pending_error = Some(encode_frame_error(&fe));
+                c.read_closed = true;
+                return;
+            }
+        }
+    }
+    c.rbuf.drain(..off);
+}
+
+/// Encodes the typed framing-error response (op 0, id 0 — the header
+/// that carried the real values is untrusted at this point).
+fn encode_frame_error(fe: &FrameError) -> Vec<u8> {
+    let resp = Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(fe.to_string())),
+        ("code", Json::Str(fe.code().into())),
+        ("retryable", Json::Bool(false)),
+    ]);
+    frame::encode(0, 0, resp.to_string().as_bytes())
+}
+
+fn parse_json_lines(
+    engine: &Engine,
+    shared: &ServerShared,
+    c: &mut Conn,
+    token: u64,
+    next_seq: &mut u64,
+    job_tx: &mpsc::Sender<Job>,
+) {
+    while let Some(pos) = c.rbuf.iter().position(|&b| b == b'\n') {
+        let line_bytes: Vec<u8> = c.rbuf.drain(..=pos).collect();
+        let line = String::from_utf8_lossy(&line_bytes[..pos]).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if !fire_read_fault(engine, c) {
+            return;
+        }
+        submit(c, shared, token, next_seq, job_tx, JobKind::Json { line });
+    }
+}
+
+/// Pushes as much of `wbuf` as the socket accepts. Returns `false` when
+/// the connection died mid-write.
+fn flush_write(c: &mut Conn) -> bool {
+    let mut written = 0usize;
+    let alive = loop {
+        if written >= c.wbuf.len() {
+            break true;
+        }
+        match c.stream.write(&c.wbuf[written..]) {
+            Ok(0) => break false,
+            Ok(n) => {
+                written += n;
+                c.last_activity = Instant::now();
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break true,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => break false,
+        }
+    };
+    if written > 0 {
+        c.wbuf.drain(..written);
+    }
+    alive
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+    use std::io::{BufRead, BufReader};
+
+    fn spawn_evented(
+        engine: Arc<Engine>,
+        cfg: ServerConfig,
+    ) -> (Arc<Engine>, std::net::SocketAddr, std::thread::JoinHandle<()>) {
+        let (addr_tx, addr_rx) = mpsc::channel();
+        let eng2 = engine.clone();
+        let server = std::thread::spawn(move || {
+            serve_evented_with(eng2, "127.0.0.1:0", cfg, move |a| {
+                addr_tx.send(a).unwrap();
+            })
+            .unwrap();
+        });
+        (engine, addr_rx.recv().unwrap(), server)
+    }
+
+    fn frame_roundtrip(stream: &mut TcpStream, op: u8, id: u64, payload: &str) -> Json {
+        stream
+            .write_all(&frame::encode(op, id, payload.as_bytes()))
+            .unwrap();
+        read_response(stream, id)
+    }
+
+    fn read_response(stream: &mut TcpStream, want_id: u64) -> Json {
+        let mut buf = Vec::new();
+        let mut chunk = [0u8; 4096];
+        loop {
+            if let Some((f, used)) = frame::decode(&buf).unwrap() {
+                assert_eq!(f.id, want_id, "response id mismatch");
+                buf.drain(..used);
+                assert!(buf.is_empty(), "unexpected trailing bytes");
+                return parse(&String::from_utf8(f.payload).unwrap()).unwrap();
+            }
+            let n = stream.read(&mut chunk).unwrap();
+            assert!(n > 0, "server closed early");
+            buf.extend_from_slice(&chunk[..n]);
+        }
+    }
+
+    #[test]
+    fn binary_and_json_clients_share_one_server() {
+        let (_, addr, server) =
+            spawn_evented(Arc::new(Engine::new(None)), ServerConfig::default());
+        // Binary client registers a mesh.
+        let mut bin = TcpStream::connect(addr).unwrap();
+        let r = frame_roundtrip(
+            &mut bin,
+            frame::opcode::REGISTER_MESH,
+            9,
+            r#"{"kind":"icosphere","param":1}"#,
+        );
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        assert_eq!(r.get("n").unwrap().as_usize(), Some(42));
+
+        // A JSON compat client on the same server sees the same cloud.
+        let mut js = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(js.try_clone().unwrap());
+        writeln!(js, r#"{{"op":"stats"}}"#).unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        let stats = parse(&resp).unwrap();
+        assert_eq!(stats.get("clouds").unwrap().as_usize(), Some(1), "{stats}");
+        // The evented server's stats include the batcher block.
+        assert_eq!(
+            stats.get("batcher").unwrap().get("enabled"),
+            Some(&Json::Bool(true)),
+            "{stats}"
+        );
+
+        frame_roundtrip(&mut bin, frame::opcode::SHUTDOWN, 10, "{}");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn unknown_op_code_gets_typed_error_not_disconnect() {
+        let (_, addr, server) =
+            spawn_evented(Arc::new(Engine::new(None)), ServerConfig::default());
+        let mut s = TcpStream::connect(addr).unwrap();
+        let r = frame_roundtrip(&mut s, 200, 1, "{}");
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(r.get("code").and_then(Json::as_str), Some("error"));
+        // Connection still serves.
+        let r = frame_roundtrip(&mut s, frame::opcode::HEALTH, 2, "{}");
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        frame_roundtrip(&mut s, frame::opcode::SHUTDOWN, 3, "{}");
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,243 @@
+//! Length-prefixed binary frames for the evented server
+//! (docs/PROTOCOL.md, "Binary framing").
+//!
+//! Layout (all integers little-endian, total `23 + payload_len` bytes):
+//!
+//! ```text
+//! offset  size  field
+//! 0       1     magic (0xB1)
+//! 1       1     version (1)
+//! 2       1     op code (see [`opcode`])
+//! 3       8     request id (u64, client-chosen, echoed in the response)
+//! 11      4     payload length (u32, <= MAX_PAYLOAD)
+//! 15      n     payload (UTF-8 JSON args object, no "op" key)
+//! 15+n    8     FNV-1a checksum of bytes [0, 15+n)
+//! ```
+//!
+//! The decoder is incremental (feed any prefix, get `None` until a full
+//! frame is buffered) and never panics on adversarial input: bad magic,
+//! unknown version, oversized length, and checksum mismatch all surface
+//! as typed [`FrameError`]s so the connection can close with a reason.
+
+use crate::util::codec::{fnv1a, Reader, Writer};
+use std::fmt;
+
+/// First byte of every binary frame; anything else on a fresh
+/// connection means line-JSON compat mode.
+pub const MAGIC: u8 = 0xB1;
+/// Protocol version this build speaks.
+pub const VERSION: u8 = 1;
+/// Fixed bytes before the payload.
+pub const HEADER_LEN: usize = 15;
+/// Trailing checksum bytes.
+pub const TRAILER_LEN: usize = 8;
+/// Upper bound on payload length (64 MiB) — rejects hostile length
+/// prefixes before any allocation is sized from them.
+pub const MAX_PAYLOAD: usize = 1 << 26;
+
+/// Binary op codes. One-to-one with the JSON `op` strings handled by
+/// `server::handle_line`; the analyzer's binary-op-sync rule holds this
+/// table, [`op_name`], and PROTOCOL.md's marker in lockstep.
+pub mod opcode {
+    pub const REGISTER_MESH: u8 = 1;
+    pub const REGISTER_CLOUD: u8 = 2;
+    pub const INTEGRATE: u8 = 3;
+    pub const UPDATE_CLOUD: u8 = 4;
+    pub const EVICT: u8 = 5;
+    pub const UNREGISTER_CLOUD: u8 = 6;
+    pub const HEALTH: u8 = 7;
+    pub const STATS: u8 = 8;
+    pub const SHUTDOWN: u8 = 9;
+}
+
+/// Maps a binary op code to the JSON `op` string it stands for.
+pub fn op_name(code: u8) -> Option<&'static str> {
+    match code {
+        opcode::REGISTER_MESH => Some("register_mesh"),
+        opcode::REGISTER_CLOUD => Some("register_cloud"),
+        opcode::INTEGRATE => Some("integrate"),
+        opcode::UPDATE_CLOUD => Some("update_cloud"),
+        opcode::EVICT => Some("evict"),
+        opcode::UNREGISTER_CLOUD => Some("unregister_cloud"),
+        opcode::HEALTH => Some("health"),
+        opcode::STATS => Some("stats"),
+        opcode::SHUTDOWN => Some("shutdown"),
+        _ => None,
+    }
+}
+
+/// A fully decoded frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    pub op: u8,
+    pub id: u64,
+    pub payload: Vec<u8>,
+}
+
+/// Typed decode failures; each closes the connection with its
+/// [`FrameError::code`] reported to the peer where possible.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    BadMagic(u8),
+    BadVersion(u8),
+    Oversized(usize),
+    BadChecksum { expected: u64, got: u64 },
+}
+
+impl FrameError {
+    /// Stable machine-readable code, mirrored in PROTOCOL.md's error
+    /// table.
+    pub fn code(&self) -> &'static str {
+        match self {
+            FrameError::BadMagic(_) => "bad_frame_magic",
+            FrameError::BadVersion(_) => "bad_frame_version",
+            FrameError::Oversized(_) => "frame_too_large",
+            FrameError::BadChecksum { .. } => "bad_frame_checksum",
+        }
+    }
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::BadMagic(b) => write!(f, "bad frame magic byte 0x{b:02x}"),
+            FrameError::BadVersion(v) => write!(f, "unsupported frame version {v}"),
+            FrameError::Oversized(n) => {
+                write!(f, "frame payload of {n} bytes exceeds the {MAX_PAYLOAD}-byte cap")
+            }
+            FrameError::BadChecksum { expected, got } => {
+                write!(f, "frame checksum mismatch: expected {expected:#018x}, got {got:#018x}")
+            }
+        }
+    }
+}
+
+/// Encodes one frame, checksum included.
+pub fn encode(op: u8, id: u64, payload: &[u8]) -> Vec<u8> {
+    let mut w = Writer::with_capacity(HEADER_LEN + payload.len() + TRAILER_LEN);
+    w.put_u8(MAGIC);
+    w.put_u8(VERSION);
+    w.put_u8(op);
+    w.put_u64(id);
+    w.put_u32(payload.len() as u32);
+    w.put_bytes(payload);
+    let body = w.into_bytes();
+    let sum = fnv1a(&body);
+    let mut out = body;
+    let mut tail = Writer::with_capacity(TRAILER_LEN);
+    tail.put_u64(sum);
+    out.extend_from_slice(&tail.into_bytes());
+    out
+}
+
+/// Attempts to decode one frame from the front of `buf`.
+///
+/// Returns `Ok(None)` when `buf` holds only a prefix (read more bytes),
+/// `Ok(Some((frame, consumed)))` on success, and `Err` on malformed
+/// input. Never panics, never allocates from an unvalidated length.
+pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, FrameError> {
+    if buf.is_empty() {
+        return Ok(None);
+    }
+    if buf[0] != MAGIC {
+        return Err(FrameError::BadMagic(buf[0]));
+    }
+    if buf.len() >= 2 && buf[1] != VERSION {
+        return Err(FrameError::BadVersion(buf[1]));
+    }
+    if buf.len() < HEADER_LEN {
+        return Ok(None);
+    }
+    let mut r = Reader::new(&buf[..HEADER_LEN]);
+    // The three header reads below cannot fail: HEADER_LEN bytes are
+    // present. Map errors defensively anyway — decode must never panic.
+    let bad = |_| FrameError::BadMagic(buf[0]);
+    let _magic = r.u8().map_err(bad)?;
+    let _version = r.u8().map_err(bad)?;
+    let op = r.u8().map_err(bad)?;
+    let id = r.u64().map_err(bad)?;
+    let len = r.u32().map_err(bad)? as usize;
+    if len > MAX_PAYLOAD {
+        return Err(FrameError::Oversized(len));
+    }
+    let total = HEADER_LEN + len + TRAILER_LEN;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let body_end = HEADER_LEN + len;
+    let expected = fnv1a(&buf[..body_end]);
+    let mut tr = Reader::new(&buf[body_end..total]);
+    let got = tr.u64().map_err(|_| FrameError::BadChecksum { expected, got: 0 })?;
+    if got != expected {
+        return Err(FrameError::BadChecksum { expected, got });
+    }
+    Ok(Some((
+        Frame { op, id, payload: buf[HEADER_LEN..body_end].to_vec() },
+        total,
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_ops() {
+        for op in 1u8..=9 {
+            assert!(op_name(op).is_some(), "op {op} unnamed");
+            let payload = format!("{{\"probe\":{op}}}");
+            let bytes = encode(op, 1000 + op as u64, payload.as_bytes());
+            let (frame, used) = decode(&bytes).unwrap().unwrap();
+            assert_eq!(used, bytes.len());
+            assert_eq!(frame.op, op);
+            assert_eq!(frame.id, 1000 + op as u64);
+            assert_eq!(frame.payload, payload.as_bytes());
+        }
+        assert_eq!(op_name(0), None);
+        assert_eq!(op_name(10), None);
+    }
+
+    #[test]
+    fn partial_prefixes_ask_for_more() {
+        let bytes = encode(opcode::INTEGRATE, 7, b"{\"cloud\":1}");
+        for cut in 0..bytes.len() {
+            match decode(&bytes[..cut]) {
+                Ok(None) => {}
+                other => panic!("prefix of {cut} bytes gave {other:?}"),
+            }
+        }
+        // Two frames back-to-back: first decode consumes exactly one.
+        let mut two = bytes.clone();
+        two.extend_from_slice(&encode(opcode::HEALTH, 8, b"{}"));
+        let (f1, used) = decode(&two).unwrap().unwrap();
+        assert_eq!(f1.id, 7);
+        let (f2, used2) = decode(&two[used..]).unwrap().unwrap();
+        assert_eq!(f2.id, 8);
+        assert_eq!(used + used2, two.len());
+    }
+
+    #[test]
+    fn typed_errors_never_panic() {
+        assert_eq!(decode(b"x").unwrap_err().code(), "bad_frame_magic");
+        assert_eq!(decode(&[MAGIC, 99]).unwrap_err().code(), "bad_frame_version");
+
+        let mut oversized = encode(opcode::STATS, 1, b"{}");
+        oversized[11..15].copy_from_slice(&(MAX_PAYLOAD as u32 + 1).to_le_bytes());
+        assert_eq!(decode(&oversized).unwrap_err().code(), "frame_too_large");
+
+        // Flip every single byte position in a valid frame: decode must
+        // return a typed error or a (different) valid frame — never panic.
+        let bytes = encode(opcode::INTEGRATE, 42, b"{\"cloud\":3,\"field\":[1.0]}");
+        for pos in 0..bytes.len() {
+            let mut corrupt = bytes.clone();
+            corrupt[pos] ^= 0xFF;
+            match decode(&corrupt) {
+                Ok(Some(_)) | Ok(None) | Err(_) => {}
+            }
+        }
+        // Payload corruption specifically must be caught by the checksum.
+        let mut corrupt = bytes.clone();
+        corrupt[HEADER_LEN] ^= 0x01;
+        assert_eq!(decode(&corrupt).unwrap_err().code(), "bad_frame_checksum");
+    }
+}

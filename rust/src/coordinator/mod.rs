@@ -77,8 +77,13 @@
 
 pub mod batcher;
 pub mod cache;
+#[cfg(unix)]
+pub mod evented;
 pub mod faults;
+pub mod frame;
 pub mod metrics;
+#[cfg(unix)]
+pub mod net;
 pub mod quarantine;
 pub mod server;
 pub mod store;

@@ -53,6 +53,16 @@ pub struct ServerConfig {
     /// `integrate` requests that don't carry their own `deadline_ms`
     /// field (`0` = no default; see [`RequestOpts`]).
     pub request_deadline_ms: u64,
+    /// Cross-connection micro-batching window in microseconds for the
+    /// *evented* server (`serve_evented`): same-`(cloud, spec)`
+    /// `integrate` requests arriving within the window coalesce into one
+    /// `integrate_batch` call. `0` disables batching. The blocking
+    /// thread-per-connection server ignores this field.
+    pub batch_window_us: u64,
+    /// Worker threads executing requests for the *evented* server
+    /// (`0` = number of CPU cores). The blocking server ignores this
+    /// field (it is thread-per-connection by construction).
+    pub workers: usize,
 }
 
 impl Default for ServerConfig {
@@ -62,26 +72,52 @@ impl Default for ServerConfig {
             read_timeout_ms: 30_000,
             write_timeout_ms: 10_000,
             request_deadline_ms: 0,
+            batch_window_us: 1_000,
+            workers: 0,
         }
     }
 }
 
 /// Counters shared between the accept loop and connection handlers,
-/// reported by the `stats` op under `"server"`.
-struct ServerShared {
-    stop: AtomicBool,
+/// reported by the `stats` op under `"server"`. Shared verbatim with the
+/// evented front-end (`coordinator::evented`), which reuses
+/// [`handle_line`] so both transports answer every op identically.
+pub(crate) struct ServerShared {
+    pub(crate) stop: AtomicBool,
     /// Connections accepted over the server's lifetime.
-    connections_total: AtomicU64,
+    pub(crate) connections_total: AtomicU64,
     /// Connection handlers that have finished executing (their threads
     /// may still await the join that the next accept iteration performs).
-    connections_finished: AtomicU64,
+    pub(crate) connections_finished: AtomicU64,
     /// Live (spawned, not yet joined) worker threads, as seen by the
     /// accept loop after its most recent reap. Staying small across many
     /// short-lived connections is the observable proof that reaping
-    /// works.
-    worker_backlog: AtomicUsize,
+    /// works. The evented server reports its in-flight request count
+    /// here instead — same meaning: queued work not yet retired.
+    pub(crate) worker_backlog: AtomicUsize,
     /// [`ServerConfig::request_deadline_ms`], shared with the handlers.
-    default_deadline_ms: u64,
+    pub(crate) default_deadline_ms: u64,
+    /// Cross-connection micro-batching window (evented server only):
+    /// `integrate` requests route through the batcher when present and
+    /// straight to the engine when `None`. The blocking server always
+    /// passes `None`, keeping its behavior byte-for-byte unchanged.
+    pub(crate) batcher: Option<Arc<crate::coordinator::batcher::Batcher>>,
+}
+
+impl ServerShared {
+    pub(crate) fn new(
+        cfg: &ServerConfig,
+        batcher: Option<Arc<crate::coordinator::batcher::Batcher>>,
+    ) -> Self {
+        ServerShared {
+            stop: AtomicBool::new(false),
+            connections_total: AtomicU64::new(0),
+            connections_finished: AtomicU64::new(0),
+            worker_backlog: AtomicUsize::new(0),
+            default_deadline_ms: cfg.request_deadline_ms,
+            batcher,
+        }
+    }
 }
 
 /// Runs the server with default limits until a `shutdown` op arrives.
@@ -105,13 +141,7 @@ pub fn serve_with(
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
     on_ready(listener.local_addr()?);
-    let shared = Arc::new(ServerShared {
-        stop: AtomicBool::new(false),
-        connections_total: AtomicU64::new(0),
-        connections_finished: AtomicU64::new(0),
-        worker_backlog: AtomicUsize::new(0),
-        default_deadline_ms: cfg.request_deadline_ms,
-    });
+    let shared = Arc::new(ServerShared::new(&cfg, None));
     let max_conns = cfg.max_connections.max(1);
     let mut workers: Vec<(Arc<AtomicBool>, std::thread::JoinHandle<()>)> = Vec::new();
     while !shared.stop.load(Ordering::Relaxed) {
@@ -239,7 +269,7 @@ fn handle_client(engine: Arc<Engine>, stream: TcpStream, shared: &ServerShared) 
 /// stable `code` and a `retryable` flag; degradation errors add a
 /// `retry_after_ms` client backoff hint. Untyped errors (bad JSON,
 /// unknown ops/ids) report `code: "error"`, not retryable.
-fn error_json(e: &crate::util::error::Error) -> Json {
+pub(crate) fn error_json(e: &crate::util::error::Error) -> Json {
     let mut fields = vec![
         ("ok", Json::Bool(false)),
         ("error", Json::Str(format!("{e:#}"))),
@@ -312,7 +342,24 @@ fn robustness_json(engine: &Engine) -> Json {
     ])
 }
 
-fn handle_line(engine: &Engine, line: &str, shared: &ServerShared) -> Result<Json> {
+/// The `stats`/`health` micro-batching block (docs/PROTOCOL.md).
+/// `enabled: false` (counters zero) on the blocking server and on an
+/// evented server started with `batch_window_us = 0`.
+fn batcher_json(batcher: Option<&crate::coordinator::batcher::Batcher>) -> Json {
+    let (enabled, s) = match batcher {
+        Some(b) => (true, b.stats()),
+        None => (false, Default::default()),
+    };
+    Json::obj(vec![
+        ("enabled", Json::Bool(enabled)),
+        ("batches_formed", Json::Num(s.batches_formed as f64)),
+        ("coalesced_requests", Json::Num(s.coalesced_requests as f64)),
+        ("window_flushes", Json::Num(s.window_flushes as f64)),
+        ("deadline_flushes", Json::Num(s.deadline_flushes as f64)),
+    ])
+}
+
+pub(crate) fn handle_line(engine: &Engine, line: &str, shared: &ServerShared) -> Result<Json> {
     let req = parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
     let op = req.get("op").and_then(Json::as_str).ok_or_else(|| anyhow!("missing op"))?;
     match op {
@@ -385,7 +432,14 @@ fn handle_line(engine: &Engine, line: &str, shared: &ServerShared) -> Result<Jso
             } else {
                 RequestOpts::default()
             };
-            let (out, info) = engine.integrate_opts(cloud, &spec, &field, &opts)?;
+            // The evented server routes through the micro-batching
+            // window so same-(cloud, spec) requests from different
+            // connections coalesce; the blocking server (batcher: None)
+            // calls the engine directly, exactly as before.
+            let (out, info) = match &shared.batcher {
+                Some(b) => b.integrate_opts(cloud, spec, field, opts)?,
+                None => engine.integrate_opts(cloud, &spec, &field, &opts)?,
+            };
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("result", Json::num_arr(&out.data)),
@@ -491,6 +545,7 @@ fn handle_line(engine: &Engine, line: &str, shared: &ServerShared) -> Result<Jso
                 ("shedding", Json::Bool(shedding)),
                 ("robustness", robustness_json(engine)),
                 ("store", store_json(engine)),
+                ("batcher", batcher_json(shared.batcher.as_deref())),
                 ("resident_bytes", Json::Num(engine.resident_bytes() as f64)),
                 (
                     "worker_backlog",
@@ -507,6 +562,7 @@ fn handle_line(engine: &Engine, line: &str, shared: &ServerShared) -> Result<Jso
             ("cache", metrics::caches_to_json(&engine.cache_stats())),
             ("robustness", robustness_json(engine)),
             ("store", store_json(engine)),
+            ("batcher", batcher_json(shared.batcher.as_deref())),
             ("config_warnings", config_warnings_json(engine)),
             (
                 "server",

@@ -7,7 +7,8 @@
 //!             [--shards 8] [--max-resident-mb MB] [--max-clouds N]
 //!             [--max-conns 64] [--read-timeout-ms MS]
 //!             [--write-timeout-ms MS] [--deadline-ms MS]
-//!             [--faults PLAN]
+//!             [--faults PLAN] [--threaded]
+//!             [--batch-window-us US] [--workers N]
 //! repro reproduce <experiment-id|all> [--quick]
 //! repro list
 //! repro selfcheck [--artifacts artifacts]
@@ -27,6 +28,13 @@
 //! cache under `<artifacts>/structures/` — warm restarts serve at
 //! kernel-stage-only cost); `--store-disk-mb` bounds its disk usage
 //! and `--store-fsync` makes every spill fsync before rename.
+//!
+//! The default front-end (on Unix) is the event-driven server: binary
+//! frames with pipelining, line-JSON compat auto-detected, and
+//! cross-connection micro-batching over `--batch-window-us`
+//! microseconds (0 disables) on `--workers` threads (0 = CPU cores).
+//! `--threaded` selects the legacy blocking thread-per-connection
+//! JSON-lines server instead.
 //! See docs/ARCHITECTURE.md and docs/PROTOCOL.md.
 //!
 //! (Hand-rolled arg parsing: the offline build has no clap.)
@@ -149,15 +157,23 @@ fn serve(args: &[String]) -> Result<()> {
     if let Some(ms) = parse_num("--deadline-ms")? {
         server_cfg.request_deadline_ms = ms;
     }
+    if let Some(us) = parse_num("--batch-window-us")? {
+        server_cfg.batch_window_us = us;
+    }
+    if let Some(n) = parse_num("--workers")? {
+        server_cfg.workers = n as usize;
+    }
+    let threaded = flag(args, "--threaded") || cfg!(not(unix));
     let engine = Arc::new(cfg.build());
     for w in engine.config_warnings() {
         eprintln!("warning [{}]: {}", w.component, w.detail);
     }
     let ecfg = engine.config();
     println!(
-        "gfi coordinator: pjrt={}, store={} (artifacts: {artifacts}), shards={}, \
+        "gfi coordinator: mode={}, pjrt={}, store={} (artifacts: {artifacts}), shards={}, \
          max_resident_bytes={}, max_clouds={}, max_conns={}, \
-         read_timeout_ms={}, deadline_ms={}, faults_armed={}",
+         read_timeout_ms={}, deadline_ms={}, batch_window_us={}, faults_armed={}",
+        if threaded { "threaded" } else { "evented" },
         engine.has_pjrt(),
         engine.store_stats().is_some(),
         ecfg.shards,
@@ -174,8 +190,38 @@ fn serve(args: &[String]) -> Result<()> {
         server_cfg.max_connections,
         server_cfg.read_timeout_ms,
         server_cfg.request_deadline_ms,
+        server_cfg.batch_window_us,
         engine.faults().armed(),
     );
+    if threaded {
+        return gfi::coordinator::server::serve_with(engine, addr, server_cfg, |a| {
+            println!("listening on {a} (JSON lines; send {{\"op\":\"shutdown\"}} to stop)");
+        });
+    }
+    serve_evented(engine, addr, server_cfg)
+}
+
+#[cfg(unix)]
+fn serve_evented(
+    engine: Arc<gfi::coordinator::Engine>,
+    addr: &str,
+    server_cfg: gfi::coordinator::server::ServerConfig,
+) -> Result<()> {
+    gfi::coordinator::evented::serve_evented_with(engine, addr, server_cfg, |a| {
+        println!(
+            "listening on {a} (binary frames + JSON-lines compat; \
+             send {{\"op\":\"shutdown\"}} to stop)"
+        );
+    })
+}
+
+#[cfg(not(unix))]
+fn serve_evented(
+    engine: Arc<gfi::coordinator::Engine>,
+    addr: &str,
+    server_cfg: gfi::coordinator::server::ServerConfig,
+) -> Result<()> {
+    // Unreachable: `threaded` is forced on non-Unix above.
     gfi::coordinator::server::serve_with(engine, addr, server_cfg, |a| {
         println!("listening on {a} (JSON lines; send {{\"op\":\"shutdown\"}} to stop)");
     })

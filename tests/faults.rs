@@ -221,6 +221,211 @@ fn chaos_plan_recovers_to_bitwise_identical_results() {
     server_thread.join().unwrap();
 }
 
+/// ISSUE 10 chaos coverage for the evented binary transport: the same
+/// accept/read drop+delay chaos the blocking server absorbs, plus
+/// backend panics, fired at `serve_evented` while reconnecting *binary*
+/// clients retry through it. The acceptance bar is unchanged: every
+/// request eventually succeeds bitwise-identical to an unfaulted oracle
+/// engine, failures cross the wire as typed retryable error frames, and
+/// the server ends healthy with zero live quarantines — with the
+/// micro-batching window live the whole time.
+#[cfg(unix)]
+#[test]
+fn binary_transport_chaos_recovers_to_bitwise_identical_results() {
+    use gfi::coordinator::evented;
+    use gfi::coordinator::frame::{self, opcode};
+    use std::io::Read;
+
+    /// One-request-at-a-time binary client; any transport failure
+    /// surfaces as `Err` so the retry loop can reconnect.
+    struct BinClient {
+        stream: TcpStream,
+        buf: Vec<u8>,
+    }
+
+    impl BinClient {
+        fn connect(addr: std::net::SocketAddr) -> std::io::Result<BinClient> {
+            Ok(BinClient { stream: TcpStream::connect(addr)?, buf: Vec::new() })
+        }
+
+        fn request(&mut self, op: u8, id: u64, payload: &str) -> std::io::Result<Json> {
+            let bad = |e: String| std::io::Error::new(std::io::ErrorKind::InvalidData, e);
+            self.stream.write_all(&frame::encode(op, id, payload.as_bytes()))?;
+            let mut chunk = [0u8; 16 * 1024];
+            loop {
+                match frame::decode(&self.buf) {
+                    Ok(Some((f, used))) => {
+                        self.buf.drain(..used);
+                        assert_eq!(
+                            (f.op, f.id),
+                            (op, id),
+                            "binary response must echo the request header"
+                        );
+                        let text =
+                            String::from_utf8(f.payload).map_err(|e| bad(e.to_string()))?;
+                        return parse(&text).map_err(|e| bad(e.to_string()));
+                    }
+                    Ok(None) => {}
+                    Err(e) => return Err(bad(e.to_string())),
+                }
+                let n = self.stream.read(&mut chunk)?;
+                if n == 0 {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "eof",
+                    ));
+                }
+                self.buf.extend_from_slice(&chunk[..n]);
+            }
+        }
+    }
+
+    /// [`send_with_retry`] over binary frames: reconnect on injected
+    /// connection drops, back off and retry on typed retryable errors.
+    fn retry_bin(
+        addr: std::net::SocketAddr,
+        client: &mut BinClient,
+        op: u8,
+        next_id: &mut u64,
+        payload: &str,
+    ) -> Json {
+        for _ in 0..80 {
+            *next_id += 1;
+            let resp = match client.request(op, *next_id, payload) {
+                Ok(r) => r,
+                Err(_) => {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                    match BinClient::connect(addr) {
+                        Ok(c) => *client = c,
+                        Err(_) => {}
+                    }
+                    continue;
+                }
+            };
+            if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+                return resp;
+            }
+            let code = resp.get("code").and_then(Json::as_str);
+            let retryable = resp.get("retryable").and_then(Json::as_bool);
+            assert!(
+                code.is_some() && retryable.is_some(),
+                "malformed error response: {resp}"
+            );
+            assert_eq!(retryable, Some(true), "non-retryable failure for {payload}: {resp}");
+            let backoff = resp
+                .get("retry_after_ms")
+                .and_then(Json::as_usize)
+                .unwrap_or(2) as u64;
+            std::thread::sleep(std::time::Duration::from_millis(backoff.clamp(1, 100)));
+        }
+        panic!("binary request never recovered: {payload}");
+    }
+
+    /// [`request_for`]'s wire body minus the `"op"` key — binary frames
+    /// carry the op in the header (every variant starts identically).
+    fn payload_for(v: usize, cloud: usize, field: &[f64]) -> String {
+        request_for(v, cloud, field).replacen("{\"op\":\"integrate\",", "{", 1)
+    }
+
+    const PLAN: &str = "seed=23;\
+        site=accept,kind=drop,times=2;\
+        site=accept,kind=delay,ms=2,times=2;\
+        site=read,kind=drop,times=2,every=3;\
+        site=read,kind=delay,ms=2,times=2;\
+        site=prepare,backend=rfd,kind=panic,times=2;\
+        site=apply,backend=sf,kind=panic,times=2";
+    let plan = FaultPlan::parse(PLAN).unwrap();
+
+    let clean = Arc::new(EngineConfig::default().fault_plan(FaultPlan::default()).build());
+    let clean_id = clean.register_mesh(gfi::mesh::icosphere(1), "chaos-bin");
+    let n = clean.cloud(clean_id).unwrap().scene.len();
+
+    let engine = Arc::new(
+        EngineConfig::default()
+            .fault_plan(plan)
+            .quarantine_attempts(10)
+            .quarantine_backoff_ms(1)
+            .build(),
+    );
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let eng2 = engine.clone();
+    let server_thread = std::thread::spawn(move || {
+        evented::serve_evented_with(
+            eng2,
+            "127.0.0.1:0",
+            server::ServerConfig::default(),
+            move |a| {
+                addr_tx.send(a).unwrap();
+            },
+        )
+        .unwrap();
+    });
+    let addr = addr_rx.recv().unwrap();
+
+    let mut ctl = BinClient::connect(addr).unwrap();
+    let mut ctl_id = 0u64;
+    let reg = retry_bin(
+        addr,
+        &mut ctl,
+        opcode::REGISTER_MESH,
+        &mut ctl_id,
+        r#"{"kind":"icosphere","param":1,"name":"chaos-bin"}"#,
+    );
+    let cloud = reg.get("id").unwrap().as_usize().unwrap();
+
+    std::thread::scope(|s| {
+        let clean = &clean;
+        for cid in 0..2usize {
+            s.spawn(move || {
+                let mut client = BinClient::connect(addr).expect("connect");
+                let mut req_id = (cid as u64 + 1) * 1000;
+                let mut rng = Rng::new(cid as u64 + 900);
+                for r in 0..12usize {
+                    let field: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+                    let payload = payload_for(r, cloud, &field);
+                    let resp = retry_bin(
+                        addr,
+                        &mut client,
+                        opcode::INTEGRATE,
+                        &mut req_id,
+                        &payload,
+                    );
+                    let got = resp.get("result").unwrap().as_f64_vec().unwrap();
+                    let spec =
+                        IntegratorSpec::from_request(&parse(&payload).unwrap()).unwrap();
+                    let f = Mat::from_vec(n, 1, field);
+                    let (want, _) = clean.integrate(clean_id, &spec, &f).unwrap();
+                    assert_eq!(
+                        got, want.data,
+                        "variant {r} diverged over the binary transport"
+                    );
+                }
+            });
+        }
+    });
+
+    // Still healthy: no worker died, every quarantined key recovered,
+    // the plan actually fired, and the batching window — live the whole
+    // run (default 1ms) — reports its counters over the wire.
+    let health = retry_bin(addr, &mut ctl, opcode::HEALTH, &mut ctl_id, "{}");
+    assert_eq!(health.get("status").and_then(Json::as_str), Some("ok"), "{health}");
+    let rb = health.get("robustness").unwrap();
+    assert_eq!(rb.get("quarantined_live").unwrap().as_usize(), Some(0));
+    let injected = engine.faults().injected();
+    assert!(injected >= 8, "plan injected only {injected} faults");
+
+    let stats = retry_bin(addr, &mut ctl, opcode::STATS, &mut ctl_id, "{}");
+    assert_eq!(
+        stats.get("batcher").unwrap().get("enabled"),
+        Some(&Json::Bool(true)),
+        "{stats}"
+    );
+
+    retry_bin(addr, &mut ctl, opcode::SHUTDOWN, &mut ctl_id, "{}");
+    drop(ctl);
+    server_thread.join().unwrap();
+}
+
 /// A key that keeps failing past `max_attempts` is *hard* quarantined —
 /// typed error with no retry hint, waiting doesn't help — until the next
 /// epoch (a good `update_cloud` frame) sweeps it and serving recovers.

@@ -1,0 +1,538 @@
+//! Event-driven front-end acceptance suite (docs/ARCHITECTURE.md,
+//! "Event-driven serving"; docs/PROTOCOL.md, "Binary framing").
+//!
+//! Covers the properties the evented server must hold over real
+//! sockets: pipelined bursts answered strictly in request order,
+//! framing robustness under adversarial bytes (partial frames, mid-frame
+//! disconnects, oversized lengths, checksum flips — typed errors, never
+//! panics or hangs), line-JSON compat on the same port, bitwise result
+//! parity with the blocking thread-per-connection server, and the
+//! cross-connection micro-batching acceptance test: same-`(cloud, spec)`
+//! requests from distinct connections provably coalesce into ONE
+//! `integrate_batch` engine call.
+
+#![cfg(unix)]
+
+use gfi::coordinator::evented::serve_evented_with;
+use gfi::coordinator::frame::{self, opcode};
+use gfi::coordinator::server::{serve_with, ServerConfig};
+use gfi::coordinator::Engine;
+use gfi::util::json::{parse, Json};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+fn spawn_evented(
+    engine: Arc<Engine>,
+    cfg: ServerConfig,
+) -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel();
+    let h = std::thread::spawn(move || {
+        serve_evented_with(engine, "127.0.0.1:0", cfg, move |a| tx.send(a).unwrap())
+            .unwrap();
+    });
+    (rx.recv().unwrap(), h)
+}
+
+fn spawn_threaded(
+    engine: Arc<Engine>,
+    cfg: ServerConfig,
+) -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel();
+    let h = std::thread::spawn(move || {
+        serve_with(engine, "127.0.0.1:0", cfg, move |a| tx.send(a).unwrap()).unwrap();
+    });
+    (rx.recv().unwrap(), h)
+}
+
+/// Minimal binary-transport client: buffers socket reads and yields
+/// response frames strictly in arrival order (the ordering assert rides
+/// on that).
+struct BinClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl BinClient {
+    fn connect(addr: SocketAddr) -> Self {
+        BinClient { stream: TcpStream::connect(addr).unwrap(), buf: Vec::new() }
+    }
+
+    fn send(&mut self, op: u8, id: u64, payload: &str) {
+        self.stream
+            .write_all(&frame::encode(op, id, payload.as_bytes()))
+            .unwrap();
+    }
+
+    /// Next response frame, in wire order.
+    fn recv(&mut self) -> (u8, u64, Json) {
+        let mut chunk = [0u8; 64 * 1024];
+        loop {
+            if let Some((f, used)) =
+                frame::decode(&self.buf).expect("response frames are well-formed")
+            {
+                self.buf.drain(..used);
+                let body = String::from_utf8(f.payload).unwrap();
+                return (f.op, f.id, parse(&body).unwrap());
+            }
+            let n = self.stream.read(&mut chunk).unwrap();
+            assert!(n > 0, "server closed with a response still pending");
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+    }
+
+    fn roundtrip(&mut self, op: u8, id: u64, payload: &str) -> Json {
+        self.send(op, id, payload);
+        let (rop, rid, resp) = self.recv();
+        assert_eq!((rop, rid), (op, id), "response echoes the request frame header");
+        resp
+    }
+}
+
+/// Reads to EOF and asserts the stream held exactly one framing-error
+/// frame (op 0, id 0 — the offending header is untrusted) and nothing
+/// after it. Returns the decoded error payload.
+fn read_frame_error_then_eof(stream: &mut TcpStream) -> Json {
+    let mut all = Vec::new();
+    stream.read_to_end(&mut all).unwrap();
+    let (f, used) = frame::decode(&all)
+        .expect("error frame is well-formed")
+        .expect("one error frame precedes the close");
+    assert_eq!(used, all.len(), "nothing may follow the framing-error frame");
+    assert_eq!((f.op, f.id), (0, 0));
+    parse(&String::from_utf8(f.payload).unwrap()).unwrap()
+}
+
+fn integrate_payload(cloud: u64, field: &[f64]) -> String {
+    let flat: Vec<String> = field.iter().map(|x| format!("{x}")).collect();
+    format!(
+        r#"{{"cloud":{cloud},"backend":"rfd","field":[{}],"d":1,"m":8,"seed":3}}"#,
+        flat.join(",")
+    )
+}
+
+fn result_f64s(resp: &Json) -> Vec<f64> {
+    resp.get("result")
+        .and_then(Json::as_f64_vec)
+        .unwrap_or_else(|| panic!("no result array in {resp}"))
+}
+
+/// Bitwise equality — the serving stack's parity bar. The in-tree JSON
+/// serializer prints f64s in shortest-roundtrip form, so wire results
+/// preserve exact bit patterns.
+fn assert_bitwise(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: element {i} differs: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn pipelined_burst_is_answered_in_request_order() {
+    let engine = Arc::new(Engine::new(None));
+    let (addr, server) = spawn_evented(engine.clone(), ServerConfig::default());
+    let mut c = BinClient::connect(addr);
+    let r = c.roundtrip(
+        opcode::REGISTER_MESH,
+        1,
+        r#"{"kind":"icosphere","param":1}"#,
+    );
+    assert_eq!(r.get("n").unwrap().as_usize(), Some(42));
+    let n = 42;
+
+    // One write carrying 12 heavy integrates followed by 4 instant
+    // healths. Workers finish the healths first; the connection must
+    // still see responses strictly in request order, each echoing its id.
+    let mut burst = Vec::new();
+    let mut expected_ids = Vec::new();
+    let mut fields: Vec<Vec<f64>> = Vec::new();
+    for i in 0..12u64 {
+        let field: Vec<f64> = (0..n).map(|j| (i as f64 + 1.0) * 0.1 + j as f64).collect();
+        burst.extend_from_slice(&frame::encode(
+            opcode::INTEGRATE,
+            100 + i,
+            integrate_payload(1, &field).as_bytes(),
+        ));
+        expected_ids.push(100 + i);
+        fields.push(field);
+    }
+    for i in 0..4u64 {
+        burst.extend_from_slice(&frame::encode(opcode::HEALTH, 200 + i, b"{}"));
+        expected_ids.push(200 + i);
+    }
+    c.stream.write_all(&burst).unwrap();
+
+    let spec = gfi::integrators::IntegratorSpec::Rfd(gfi::integrators::rfd::RfdConfig {
+        num_features: 8,
+        seed: 3,
+        ..Default::default()
+    });
+    for (k, want_id) in expected_ids.iter().enumerate() {
+        let (_, id, resp) = c.recv();
+        assert_eq!(id, *want_id, "response {k} out of order");
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        if k < fields.len() {
+            // Pipelined (and possibly coalesced) results are bitwise what
+            // a direct engine call produces.
+            let f = gfi::linalg::Mat::from_vec(n, 1, fields[k].clone());
+            let want = engine.integrate(1, &spec, &f).unwrap().0;
+            assert_bitwise(&result_f64s(&resp), &want.data, "pipelined integrate");
+        }
+    }
+    c.roundtrip(opcode::SHUTDOWN, 999, "{}");
+    server.join().unwrap();
+}
+
+#[test]
+fn partial_frames_and_split_writes_reassemble() {
+    let engine = Arc::new(Engine::new(None));
+    let (addr, server) = spawn_evented(engine, ServerConfig::default());
+    let mut c = BinClient::connect(addr);
+
+    // Dribble one frame across several writes with pauses: the server
+    // must wait for the remainder, not error or time out.
+    let bytes = frame::encode(opcode::REGISTER_MESH, 7, br#"{"kind":"grid","param":4}"#);
+    for piece in bytes.chunks(5) {
+        c.stream.write_all(piece).unwrap();
+        c.stream.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let (op, id, resp) = c.recv();
+    assert_eq!((op, id), (opcode::REGISTER_MESH, 7));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+
+    // A second request on the now-established binary connection works.
+    let r = c.roundtrip(opcode::HEALTH, 8, "{}");
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    c.roundtrip(opcode::SHUTDOWN, 9, "{}");
+    server.join().unwrap();
+}
+
+#[test]
+fn mid_frame_disconnect_does_not_wedge_the_server() {
+    let engine = Arc::new(Engine::new(None));
+    let (addr, server) = spawn_evented(engine, ServerConfig::default());
+
+    // A client starts a frame, sends half the header, and vanishes.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let bytes = frame::encode(opcode::STATS, 1, b"{}");
+        s.write_all(&bytes[..8]).unwrap();
+        s.flush().unwrap();
+    } // dropped: RST/FIN mid-frame
+
+    // And another half-writes a *pipelined* second frame after a valid
+    // first one, then vanishes — the first request may or may not have
+    // been answered by then; the server must simply carry on.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut bytes = frame::encode(opcode::HEALTH, 2, b"{}");
+        let second = frame::encode(opcode::STATS, 3, b"{}");
+        bytes.extend_from_slice(&second[..second.len() / 2]);
+        s.write_all(&bytes).unwrap();
+        s.flush().unwrap();
+    }
+
+    // The server still serves fresh connections on both transports.
+    let mut c = BinClient::connect(addr);
+    let r = c.roundtrip(opcode::HEALTH, 4, "{}");
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    c.roundtrip(opcode::SHUTDOWN, 5, "{}");
+    server.join().unwrap();
+}
+
+#[test]
+fn oversized_length_prefix_gets_typed_error_and_close() {
+    let engine = Arc::new(Engine::new(None));
+    let (addr, server) = spawn_evented(engine, ServerConfig::default());
+    let mut s = TcpStream::connect(addr).unwrap();
+
+    // A syntactically valid header whose length prefix exceeds the 64 MiB
+    // cap: the server must refuse before allocating anything near it.
+    let mut bytes = frame::encode(opcode::INTEGRATE, 11, b"{}");
+    let huge = (frame::MAX_PAYLOAD as u32) + 1;
+    bytes[11..15].copy_from_slice(&huge.to_le_bytes());
+    s.write_all(&bytes).unwrap();
+
+    let err = read_frame_error_then_eof(&mut s);
+    assert_eq!(err.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(err.get("code").and_then(Json::as_str), Some("frame_too_large"), "{err}");
+    assert_eq!(err.get("retryable"), Some(&Json::Bool(false)));
+
+    // The server itself is unharmed.
+    let mut c = BinClient::connect(addr);
+    c.roundtrip(opcode::SHUTDOWN, 1, "{}");
+    server.join().unwrap();
+}
+
+#[test]
+fn corrupted_frames_get_typed_errors_and_close() {
+    let engine = Arc::new(Engine::new(None));
+    let (addr, server) = spawn_evented(engine, ServerConfig::default());
+
+    // Checksum flip: valid frame, last trailer byte xored.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut bytes = frame::encode(opcode::HEALTH, 21, b"{}");
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        s.write_all(&bytes).unwrap();
+        let err = read_frame_error_then_eof(&mut s);
+        assert_eq!(
+            err.get("code").and_then(Json::as_str),
+            Some("bad_frame_checksum"),
+            "{err}"
+        );
+    }
+
+    // Bad version byte on a fresh binary connection.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut bytes = frame::encode(opcode::HEALTH, 22, b"{}");
+        bytes[1] = 99;
+        s.write_all(&bytes).unwrap();
+        let err = read_frame_error_then_eof(&mut s);
+        assert_eq!(
+            err.get("code").and_then(Json::as_str),
+            Some("bad_frame_version"),
+            "{err}"
+        );
+    }
+
+    // Garbage after a valid frame: binary mode is locked in, so the
+    // stray byte is a framing error (bad magic), answered after the
+    // valid request and followed by a close.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut bytes = frame::encode(opcode::HEALTH, 23, b"{}");
+        bytes.push(b'x');
+        s.write_all(&bytes).unwrap();
+        let mut all = Vec::new();
+        s.read_to_end(&mut all).unwrap();
+        let (first, used) = frame::decode(&all).unwrap().expect("health response first");
+        assert_eq!(first.id, 23);
+        let health = parse(&String::from_utf8(first.payload).unwrap()).unwrap();
+        assert_eq!(health.get("ok"), Some(&Json::Bool(true)), "{health}");
+        let (errf, used2) = frame::decode(&all[used..])
+            .unwrap()
+            .expect("then the framing error");
+        assert_eq!(used + used2, all.len());
+        let err = parse(&String::from_utf8(errf.payload).unwrap()).unwrap();
+        assert_eq!(
+            err.get("code").and_then(Json::as_str),
+            Some("bad_frame_magic"),
+            "{err}"
+        );
+    }
+
+    let mut c = BinClient::connect(addr);
+    c.roundtrip(opcode::SHUTDOWN, 1, "{}");
+    server.join().unwrap();
+}
+
+#[test]
+fn json_compat_serves_the_full_protocol_on_the_evented_server() {
+    let engine = Arc::new(Engine::new(None));
+    let (addr, server) = spawn_evented(engine, ServerConfig::default());
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut send = |stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, l: &str| {
+        writeln!(stream, "{l}").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        parse(&resp).unwrap()
+    };
+    let field: String = (0..42).map(|i| i.to_string()).collect::<Vec<_>>().join(",");
+
+    let reg = send(&mut stream, &mut reader, r#"{"op":"register_mesh","kind":"icosphere","param":1}"#);
+    assert_eq!(reg.get("n").unwrap().as_usize(), Some(42));
+    let one = format!(
+        r#"{{"op":"integrate","cloud":1,"backend":"rfd","field":[{field}],"d":1,"m":8}}"#
+    );
+    let r1 = send(&mut stream, &mut reader, &one);
+    assert_eq!(r1.get("ok"), Some(&Json::Bool(true)), "{r1}");
+    assert_eq!(r1.get("cache_hit"), Some(&Json::Bool(false)));
+    let r2 = send(&mut stream, &mut reader, &one);
+    assert_eq!(r2.get("cache_hit"), Some(&Json::Bool(true)));
+    assert_bitwise(
+        &result_f64s(&r1),
+        &result_f64s(&r2),
+        "cold vs warm over JSON compat",
+    );
+
+    // Errors stay errors, not disconnects.
+    let bad = send(&mut stream, &mut reader, "not json");
+    assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+    let evicted = send(&mut stream, &mut reader, r#"{"op":"evict","cloud":1,"backend":"rfd","m":8}"#);
+    assert_eq!(evicted.get("evicted").unwrap().as_usize(), Some(1));
+    let stats = send(&mut stream, &mut reader, r#"{"op":"stats"}"#);
+    assert_eq!(stats.get("clouds").unwrap().as_usize(), Some(1));
+    assert_eq!(
+        stats.get("batcher").unwrap().get("enabled"),
+        Some(&Json::Bool(true)),
+        "evented stats carry the batcher block: {stats}"
+    );
+    let un = send(&mut stream, &mut reader, r#"{"op":"unregister_cloud","cloud":1}"#);
+    assert_eq!(un.get("removed"), Some(&Json::Bool(true)));
+    send(&mut stream, &mut reader, r#"{"op":"shutdown"}"#);
+    server.join().unwrap();
+}
+
+#[test]
+fn evented_results_are_bitwise_identical_to_the_blocking_server() {
+    // Two engines from identical (deterministic, seeded) configs, one
+    // behind each front-end: the same request must produce byte-for-byte
+    // the same result array over blocking JSON, evented JSON compat, and
+    // evented binary frames.
+    let (t_addr, t_server) =
+        spawn_threaded(Arc::new(Engine::new(None)), ServerConfig::default());
+    let (e_addr, e_server) =
+        spawn_evented(Arc::new(Engine::new(None)), ServerConfig::default());
+
+    let reg = r#"{"op":"register_mesh","kind":"icosphere","param":1}"#;
+    let field: String = (0..42).map(|i| format!("{}.25", i)).collect::<Vec<_>>().join(",");
+    let line = format!(
+        r#"{{"op":"integrate","cloud":1,"backend":"rfd","field":[{field}],"d":1,"m":8,"seed":3}}"#
+    );
+
+    let json_roundtrips = |addr: SocketAddr| -> Vec<f64> {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut send = |stream: &mut TcpStream, l: &str, reader: &mut BufReader<TcpStream>| {
+            writeln!(stream, "{l}").unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            parse(&resp).unwrap()
+        };
+        send(&mut stream, reg, &mut reader);
+        let r = send(&mut stream, &line, &mut reader);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        result_f64s(&r)
+    };
+    let threaded = json_roundtrips(t_addr);
+    let evented_json = json_roundtrips(e_addr);
+
+    let mut c = BinClient::connect(e_addr);
+    let payload = format!(
+        r#"{{"cloud":1,"backend":"rfd","field":[{field}],"d":1,"m":8,"seed":3}}"#
+    );
+    let r = c.roundtrip(opcode::INTEGRATE, 77, &payload);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    let evented_binary = result_f64s(&r);
+
+    assert_bitwise(&threaded, &evented_json, "blocking vs evented JSON");
+    assert_bitwise(&threaded, &evented_binary, "blocking JSON vs evented binary");
+
+    let mut stream = TcpStream::connect(t_addr).unwrap();
+    writeln!(stream, r#"{{"op":"shutdown"}}"#).unwrap();
+    let mut resp = String::new();
+    BufReader::new(stream).read_line(&mut resp).unwrap();
+    t_server.join().unwrap();
+    c.roundtrip(opcode::SHUTDOWN, 78, "{}");
+    e_server.join().unwrap();
+}
+
+#[test]
+fn distinct_connections_coalesce_into_one_engine_batch_call() {
+    // The tentpole acceptance test: two *separate connections* fire the
+    // same (cloud, spec) integrate inside one batching window; the
+    // batcher must execute them as ONE engine call, proven three ways —
+    // the batcher counters, the per-backend metrics count (bumped once
+    // per engine call), and results bitwise-identical to direct
+    // unbatched engine calls.
+    let engine = Arc::new(Engine::new(None));
+    let (addr, server) = spawn_evented(
+        engine.clone(),
+        ServerConfig {
+            // A wide window so both requests land in the same collection
+            // round regardless of scheduling noise.
+            batch_window_us: 300_000,
+            workers: 4,
+            ..Default::default()
+        },
+    );
+    let mut admin = BinClient::connect(addr);
+    admin.roundtrip(opcode::REGISTER_MESH, 1, r#"{"kind":"icosphere","param":1}"#);
+    let n = 42usize;
+
+    // Warm the prepared integrator outside the measured window so the
+    // coalesced batch is pure apply work.
+    let warm: Vec<f64> = (0..n).map(|j| j as f64).collect();
+    let r = admin.roundtrip(opcode::INTEGRATE, 2, &integrate_payload(1, &warm));
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+
+    let stats0 = admin.roundtrip(opcode::STATS, 3, "{}");
+    let count0 = stats0
+        .get("backends")
+        .and_then(|b| b.get("rfd"))
+        .and_then(|r| r.get("count"))
+        .and_then(Json::as_usize)
+        .unwrap();
+    let b0 = stats0.get("batcher").unwrap().clone();
+    let formed0 = b0.get("batches_formed").unwrap().as_usize().unwrap();
+    let coalesced0 = b0.get("coalesced_requests").unwrap().as_usize().unwrap();
+
+    // Two clients, two sockets, same (cloud, spec), different fields.
+    let fields: Vec<Vec<f64>> = (0..2)
+        .map(|i| (0..n).map(|j| (i * n + j) as f64 * 0.5 + 1.0).collect())
+        .collect();
+    let results: Vec<Vec<f64>> = std::thread::scope(|s| {
+        let handles: Vec<_> = fields
+            .iter()
+            .enumerate()
+            .map(|(i, f)| {
+                s.spawn(move || {
+                    let mut c = BinClient::connect(addr);
+                    let r = c.roundtrip(
+                        opcode::INTEGRATE,
+                        10 + i as u64,
+                        &integrate_payload(1, f),
+                    );
+                    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+                    result_f64s(&r)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let stats1 = admin.roundtrip(opcode::STATS, 4, "{}");
+    let count1 = stats1
+        .get("backends")
+        .and_then(|b| b.get("rfd"))
+        .and_then(|r| r.get("count"))
+        .and_then(Json::as_usize)
+        .unwrap();
+    let b1 = stats1.get("batcher").unwrap().clone();
+    let formed1 = b1.get("batches_formed").unwrap().as_usize().unwrap();
+    let coalesced1 = b1.get("coalesced_requests").unwrap().as_usize().unwrap();
+
+    assert_eq!(
+        count1 - count0,
+        1,
+        "two cross-connection requests must reach the engine as ONE \
+         integrate_batch call (metrics count went {count0} -> {count1})"
+    );
+    assert_eq!(formed1 - formed0, 1, "exactly one merged group formed");
+    assert_eq!(coalesced1 - coalesced0, 2, "both requests rode the merged group");
+
+    // Bitwise parity against direct, unbatched engine calls.
+    let spec = gfi::integrators::IntegratorSpec::Rfd(gfi::integrators::rfd::RfdConfig {
+        num_features: 8,
+        seed: 3,
+        ..Default::default()
+    });
+    for (f, got) in fields.iter().zip(&results) {
+        let m = gfi::linalg::Mat::from_vec(n, 1, f.clone());
+        let want = engine.integrate(1, &spec, &m).unwrap().0;
+        assert_bitwise(got, &want.data, "coalesced vs direct");
+    }
+
+    admin.roundtrip(opcode::SHUTDOWN, 5, "{}");
+    server.join().unwrap();
+}
